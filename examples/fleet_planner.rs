@@ -1,0 +1,120 @@
+//! Fleet planner: size a production fleet for a workload + SLO across
+//! every topology × GPU generation, find the FleetOpt optimum (B_short,
+//! γ*), and verify the analytical prediction against the discrete-event
+//! simulator — the full inference-fleet-sim workflow of paper §4.
+//!
+//! ```bash
+//! cargo run --release --example fleet_planner [azure|lmsys|agent]
+//! ```
+
+use std::sync::Arc;
+
+use wattlaw::fleet::analysis::fleet_tpw_analysis;
+use wattlaw::fleet::optimizer::optimize_fleetopt;
+use wattlaw::fleet::pool::LBarPolicy;
+use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use wattlaw::fleet::topology::{Topology, LONG_CTX};
+use wattlaw::power::Gpu;
+use wattlaw::router::context::ContextRouter;
+use wattlaw::router::HomogeneousRouter;
+use wattlaw::sim::{simulate_topology, GroupSimConfig};
+use wattlaw::workload::cdf::{agent_heavy, azure_conversations, lmsys_chat};
+use wattlaw::workload::synth::{generate, GenConfig};
+
+fn main() -> anyhow::Result<()> {
+    let trace = match std::env::args().nth(1).as_deref() {
+        Some("lmsys") => lmsys_chat(),
+        Some("agent") => agent_heavy(),
+        _ => azure_conversations(),
+    };
+    let (lambda, rho, slo) = (1000.0, 0.85, 0.5);
+    println!(
+        "== planning for {} at λ={lambda} req/s, ρ={rho}, P99 TTFT ≤ {slo}s ==",
+        trace.name
+    );
+
+    // 1. Topology × generation grid.
+    let b = trace.paper_b_short;
+    let topos = [
+        Topology::Homogeneous { ctx: LONG_CTX },
+        Topology::PoolRouting { b_short: b, short_ctx: b.max(2048) },
+        Topology::FleetOpt { b_short: b, short_ctx: b.max(2048), gamma: 2.0 },
+    ];
+    println!(
+        "\n{:<28} {:<11} {:>7} {:>9} {:>8}",
+        "topology", "gpu", "groups", "kW", "tok/W"
+    );
+    let mut baseline = None;
+    for gpu in [Gpu::H100, Gpu::B200] {
+        let profile: Arc<dyn GpuProfile> = Arc::new(ManualProfile::for_gpu(gpu));
+        for topo in &topos {
+            let pools = topo.pools(
+                &trace, lambda, profile.clone(), None,
+                LBarPolicy::Window, rho, slo);
+            let r = fleet_tpw_analysis(&pools, PowerAccounting::PerGpu);
+            let vs = match baseline {
+                None => {
+                    baseline = Some(r.tok_per_watt.0);
+                    String::from("(baseline)")
+                }
+                Some(b0) => format!("({:+.0}%)", (r.tok_per_watt.0 / b0 - 1.0) * 100.0),
+            };
+            println!(
+                "{:<28} {:<11} {:>7} {:>9.1} {:>8.2} {vs}",
+                topo.label(),
+                gpu.spec().name,
+                r.total_groups,
+                r.total_power.kw(),
+                r.tok_per_watt.0
+            );
+        }
+    }
+
+    // 2. FleetOpt optimum.
+    let h100: Arc<dyn GpuProfile> = Arc::new(ManualProfile::h100_70b());
+    let best = optimize_fleetopt(
+        &trace, lambda, h100.clone(), LBarPolicy::Window, rho, slo,
+        PowerAccounting::PerGpu);
+    println!(
+        "\nFleetOpt optimum on H100: B_short = {}, γ* = {} → {:.2} tok/W",
+        best.b_short, best.gamma, best.report.tok_per_watt.0
+    );
+
+    // 3. Validate the topology ordering dynamically (scaled-down DES).
+    let sim_reqs = generate(
+        &trace,
+        &GenConfig {
+            lambda_rps: 40.0,
+            duration_s: 5.0,
+            max_prompt_tokens: 60_000,
+            max_output_tokens: 1024,
+            seed: 11,
+        },
+    );
+    let p = ManualProfile::h100_70b();
+    let mk = |window: u32| GroupSimConfig {
+        window_tokens: window,
+        n_max: p.n_max(window),
+        roofline: p.roofline(),
+        power: p.gpu.power,
+        gpus_charged: 1.0,
+        ingest_chunk: 1024,
+    };
+    let homo = simulate_topology(&sim_reqs, &HomogeneousRouter, &[4], &[mk(LONG_CTX)]);
+    let routed = simulate_topology(
+        &sim_reqs,
+        &ContextRouter::two_pool(b),
+        &[2, 2],
+        &[mk(b.max(2048) + 1024), mk(LONG_CTX)],
+    );
+    println!(
+        "\nDES check (4 groups, λ=40): homo {:.2} tok/W vs routed {:.2} tok/W \
+         → simulated gain {:.2}x",
+        homo.tok_per_watt,
+        routed.tok_per_watt,
+        routed.tok_per_watt / homo.tok_per_watt
+    );
+    anyhow::ensure!(routed.tok_per_watt > homo.tok_per_watt);
+    println!("fleet_planner OK");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! The MoE architecture lever (paper §3.2): dense vs mixture-of-experts
+//! token economy across context windows, with the dispatch-overhead
+//! sensitivity sweep that bounds the paper's "upper bound" caveat, plus
+//! the §5.2 quantization sweep.
+//!
+//! ```bash
+//! cargo run --release --example moe_comparison
+//! ```
+
+use wattlaw::fleet::profile::{ComputedProfile, PowerAccounting};
+use wattlaw::model::spec::{
+    DEEPSEEK_V3, LLAMA31_70B, QWEN3_235B_A22B,
+};
+use wattlaw::model::KvPlacement;
+use wattlaw::power::profiles::{B200, H100};
+use wattlaw::roofline::moe::{breakeven_dispatch_ms, dispatch_erosion};
+use wattlaw::roofline::quant::quant_sweep;
+use wattlaw::tokeconomy::operating_point;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Dense vs MoE across context windows on H100.
+    println!("single-GPU tok/W at n_max (ComputedProfile, H100 vs B200):");
+    println!(
+        "{:<18} {:>7} {:>11} {:>11} {:>11}",
+        "model", "ctx", "H100 tok/W", "B200 tok/W", "gen gain"
+    );
+    for model in [&LLAMA31_70B, &QWEN3_235B_A22B, &DEEPSEEK_V3] {
+        for ctx in [4096u32, 8192, 32_768] {
+            let h = ComputedProfile::new(&H100, model, 8, KvPlacement::Replicated);
+            let b = ComputedProfile::new(&B200, model, 8, KvPlacement::Replicated);
+            let oh = operating_point(&h, ctx, 1.0, PowerAccounting::PerGpu);
+            let ob = operating_point(&b, ctx, 1.0, PowerAccounting::PerGpu);
+            println!(
+                "{:<18} {:>7} {:>11.2} {:>11.2} {:>10.2}x",
+                model.name,
+                ctx,
+                oh.tok_per_watt.0,
+                ob.tok_per_watt.0,
+                ob.tok_per_watt.0 / oh.tok_per_watt.0
+            );
+        }
+    }
+
+    // 2. Dispatch-overhead erosion (the Table 2 "upper bound" caveat).
+    println!("\nMoE dispatch-overhead sensitivity (Qwen3 vs dense 70B, H100, n=2):");
+    let grid = [0.0, 1.0, 2.0, 5.0, 10.0, 20.0];
+    for row in dispatch_erosion(
+        &H100, &QWEN3_235B_A22B, &LLAMA31_70B, 8, 2.0, 8192.0, &grid)
+    {
+        println!(
+            "  dispatch {:>5.1} ms: MoE {:>7.0} tok/s vs dense {:>6.0} tok/s \
+             → advantage {:.2}x",
+            row.dispatch_ms, row.moe_tok_s, row.dense_tok_s, row.ratio
+        );
+    }
+    let be = breakeven_dispatch_ms(&H100, &QWEN3_235B_A22B, &LLAMA31_70B, 8, 2.0, 8192.0);
+    println!("  break-even dispatch: {be:.1} ms (advantage gone beyond this)");
+
+    // 3. §5.2 quantization sweep for the dense baseline.
+    println!("\nquantization sweep (dense 70B on H100, n=16, L̄=8K):");
+    for row in quant_sweep(&H100, &LLAMA31_70B, 8, KvPlacement::Sharded, 16.0, 8192.0) {
+        println!(
+            "  {:<5} W = {:>5.2} ms → {:>6.0} tok/s ({:.2}x vs fp16)",
+            row.precision.label(),
+            row.w_ms,
+            row.throughput_tok_s,
+            row.speedup_vs_fp16
+        );
+    }
+
+    println!("\nmoe_comparison OK");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT artifact, validate numerics against the JAX
+//! golden trace, prefill a prompt batch, decode a few tokens, and compute
+//! single-GPU tok/W from the paper-calibrated models.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use wattlaw::fleet::profile::{ManualProfile, PowerAccounting};
+use wattlaw::runtime::TinyModel;
+use wattlaw::tokeconomy::operating_point;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. The analytical core: the 1/W law in four lines. -----------
+    let h100 = ManualProfile::h100_70b();
+    println!("The 1/W law on the calibrated H100/70B profile:");
+    for ctx in [4096u32, 8192, 16384, 65536] {
+        let op = operating_point(&h100, ctx, 1.0, PowerAccounting::PerGpu);
+        println!(
+            "  context {:>6}: n_max {:>4}, {:>6.0} tok/s at {:>3.0} W -> {:.2} tok/W",
+            ctx, op.n_max, op.throughput_tok_s, op.power.0, op.tok_per_watt.0
+        );
+    }
+
+    // ---- 2. The real model: load, validate, prefill, decode. -----------
+    let artifacts = wattlaw::runtime::default_artifacts_dir();
+    println!("\nloading AOT artifacts from {} ...", artifacts.display());
+    let model = TinyModel::load(&artifacts)?;
+    let err = model.validate_golden()?;
+    println!("golden check vs JAX: max |err| = {err:.2e}");
+    anyhow::ensure!(err < 1e-3, "numerics drift");
+
+    let b = model.cfg.batch as usize;
+    let t = model.cfg.prefill_len as usize;
+    // A batch of toy prompts (token ids are synthetic; the energy study is
+    // length-shaped).
+    let tokens: Vec<i32> = (0..b * t).map(|i| (i % 37) as i32).collect();
+    let lens: Vec<i32> = (0..b).map(|i| 4 + (i as i32 * 3) % 28).collect();
+    let (last_logits, mut kv_k, mut kv_v) = model.prefill(&tokens, &lens)?;
+    let mut next = model.argmax(&last_logits);
+    println!("prefilled {b} prompts (lens {lens:?}); first sampled tokens: {next:?}");
+
+    let mut pos: Vec<i32> = lens.clone();
+    let t0 = std::time::Instant::now();
+    let steps = 16;
+    for _ in 0..steps {
+        let (logits, k, v) = model.decode_step(&next, &kv_k, &kv_v, &pos)?;
+        kv_k = k;
+        kv_v = v;
+        next = model.argmax(&logits);
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{steps} decode steps x batch {b}: {:.1} ms/step, {:.0} tok/s on CPU PJRT",
+        dt / steps as f64 * 1e3,
+        (steps * b) as f64 / dt
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

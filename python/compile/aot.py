@@ -1,0 +1,188 @@
+"""AOT compile path: lower the L2 model (with its L1 Pallas kernel) to HLO
+text artifacts the Rust runtime loads via PJRT.
+
+Run once at build time (``make artifacts``); Python never runs at serve
+time.  Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Outputs (in --out-dir, default ../artifacts):
+  decode_step.hlo.txt   one continuous-batching decode iteration
+  prefill.hlo.txt       prompt ingestion filling the KV cache
+  weights.bin           deterministic tiny-Llama weights (WLW1 container)
+  golden.bin            input/output pairs for Rust-side numeric validation
+  manifest.json         shapes, parameter order, artifact signatures
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import struct
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as m
+
+MAGIC = b"WLW1"
+DTYPE_CODES = {"float32": 0, "int32": 1}
+
+
+def write_container(path: Path, tensors: "dict[str, np.ndarray]") -> None:
+    """WLW1 container: magic, u32 count, then per tensor
+    (u32 name_len, name, u8 dtype, u8 ndim, u64*dims, raw LE data)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = DTYPE_CODES[str(arr.dtype)]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_golden(params, cfg: m.ModelConfig):
+    """Deterministic end-to-end trace: prefill a prompt batch, then two
+    decode steps.  The Rust runtime must reproduce every output tensor."""
+    key = jax.random.PRNGKey(7)
+    B, T = cfg.batch, cfg.prefill_len
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab, dtype=jnp.int32)
+    # Varied prompt lengths exercise the masking path.
+    lens = jnp.array(
+        [1 + (3 * i + 5) % T for i in range(B)], dtype=jnp.int32
+    )
+
+    last_logits, kv_k, kv_v = m.prefill(params, tokens, lens, cfg)
+    next_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+
+    pos0 = lens  # first decode position is the slot after the prompt
+    logits1, kv_k1, kv_v1 = m.decode_step(
+        params, next_tok, kv_k, kv_v, pos0, cfg
+    )
+    tok1 = jnp.argmax(logits1, axis=-1).astype(jnp.int32)
+    logits2, kv_k2, kv_v2 = m.decode_step(
+        params, tok1, kv_k1, kv_v1, pos0 + 1, cfg
+    )
+
+    g = {
+        "prefill.in.tokens": tokens,
+        "prefill.in.lens": lens,
+        "prefill.out.last_logits": last_logits,
+        "decode1.in.tokens": next_tok,
+        "decode1.in.pos": pos0,
+        "decode1.out.logits": logits1,
+        "decode2.in.tokens": tok1,
+        "decode2.in.pos": pos0 + 1,
+        "decode2.out.logits": logits2,
+    }
+    return {k: np.asarray(v) for k, v in g.items()}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument(
+        "--kernel", choices=["single", "paged"], default="single",
+        help="L1 decode-attention kernel variant to lower into the "
+             "artifact (single is fastest under the CPU Pallas "
+             "interpreter; paged is the TPU-shaped schedule)",
+    )
+    args = ap.parse_args()
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    cfg = m.ModelConfig(attention_kernel=args.kernel)
+    params = m.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    # --- weights -----------------------------------------------------------
+    write_container(
+        out / "weights.bin",
+        {name: np.asarray(params[name]) for name in m.PARAM_ORDER},
+    )
+
+    # --- lower both entry points ------------------------------------------
+    B, T, V = cfg.batch, cfg.prefill_len, cfg.vocab
+    kv_spec = jax.ShapeDtypeStruct(cfg.kv_shape(), jnp.float32)
+    i32 = jnp.int32
+    param_specs = [
+        jax.ShapeDtypeStruct(np.asarray(params[n]).shape, jnp.float32)
+        for n in m.PARAM_ORDER
+    ]
+
+    decode_fn = jax.jit(
+        lambda *a: m.decode_step_flat(*a, cfg=cfg, interpret=True)
+    )
+    decode_lowered = decode_fn.lower(
+        *param_specs,
+        jax.ShapeDtypeStruct((B,), i32),        # tokens
+        kv_spec, kv_spec,                        # kv_k, kv_v
+        jax.ShapeDtypeStruct((B,), i32),        # pos
+    )
+    (out / "decode_step.hlo.txt").write_text(to_hlo_text(decode_lowered))
+
+    prefill_fn = jax.jit(lambda *a: m.prefill_flat(*a, cfg=cfg))
+    prefill_lowered = prefill_fn.lower(
+        *param_specs,
+        jax.ShapeDtypeStruct((B, T), i32),      # tokens
+        jax.ShapeDtypeStruct((B,), i32),        # lens
+    )
+    (out / "prefill.hlo.txt").write_text(to_hlo_text(prefill_lowered))
+
+    # --- golden trace -------------------------------------------------------
+    write_container(out / "golden.bin", build_golden(params, cfg))
+
+    # --- manifest ------------------------------------------------------------
+    manifest = {
+        "config": dataclasses.asdict(cfg),
+        "param_order": list(m.PARAM_ORDER),
+        "param_shapes": {
+            n: list(np.asarray(params[n]).shape) for n in m.PARAM_ORDER
+        },
+        "artifacts": {
+            "decode_step": {
+                "file": "decode_step.hlo.txt",
+                "inputs": list(m.PARAM_ORDER)
+                + ["tokens[B]i32", "kv_k[L,B,S,Hkv,D]f32",
+                   "kv_v[L,B,S,Hkv,D]f32", "pos[B]i32"],
+                "outputs": ["logits[B,V]f32", "kv_k'", "kv_v'"],
+            },
+            "prefill": {
+                "file": "prefill.hlo.txt",
+                "inputs": list(m.PARAM_ORDER) + ["tokens[B,T]i32", "lens[B]i32"],
+                "outputs": ["last_logits[B,V]f32", "kv_k", "kv_v"],
+            },
+        },
+        "kv_bytes_per_token": cfg.kv_bytes_per_token(),
+        "attention_kernel": cfg.attention_kernel,
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+
+    print(f"wrote artifacts to {out.resolve()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

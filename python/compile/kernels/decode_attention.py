@@ -1,0 +1,219 @@
+"""L1 Pallas kernels: batched GQA decode attention over a (paged) KV cache.
+
+This is the compute hot-spot behind the paper's roofline term
+``H(L_bar) * n``: every decode iteration streams the whole KV cache of every
+in-flight sequence past the compute units once.  The kernels are written the
+way a TPU implementation would be structured (BlockSpec tiling of the
+HBM->VMEM stream over KV pages, online-softmax accumulation so a page never
+needs to be revisited), but are lowered with ``interpret=True`` because the
+CPU PJRT plugin cannot execute Mosaic custom-calls.  See DESIGN.md
+"Hardware adaptation" and section 9 for the VMEM/MXU estimates.
+
+Two variants:
+
+* :func:`decode_attention` - single-block kernel, one grid step per batch
+  element; the whole KV cache of that sequence is one block.  Simplest
+  correct form; used as a cross-check.
+* :func:`decode_attention_paged` - the TPU-shaped kernel.  Grid is
+  ``(batch, num_pages)``; the KV cache is streamed page by page with a
+  running (max, sum, acc) online softmax, which is exactly the
+  flash-decoding schedule the paper's ``H`` term models.  This is the
+  variant the L2 model lowers into the AOT artifact.
+
+Both are validated against the pure-jnp oracle in :mod:`ref` by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes, dtypes, and
+sequence lengths).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Page size of the paged variant.  64 tokens * (Hkv*D) * 2 bytes is a few
+# KiB per page per head -- far below VMEM limits; the grid streams pages
+# sequentially so only two pages (double-buffered) are resident at a time.
+PAGE_TOKENS = 64
+
+_NEG_INF = -1e30
+
+
+def _gqa_scores(q, k, scale):
+    """Grouped-query attention scores.
+
+    q: [Hkv, G, D] (query heads folded into Hkv groups of G)
+    k: [S, Hkv, D]
+    returns [Hkv, G, S]
+    """
+    return jnp.einsum("hgd,shd->hgs", q, k) * scale
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, n_kv_heads):
+    """One batch element, whole KV cache in one block."""
+    q = q_ref[0]  # [Hq, D]
+    k = k_ref[0]  # [S, Hkv, D]
+    v = v_ref[0]  # [S, Hkv, D]
+    seq_len = len_ref[0]  # scalar int32: number of valid KV positions
+
+    n_q_heads, head_dim = q.shape
+    s = k.shape[0]
+    group = n_q_heads // n_kv_heads
+    scale = 1.0 / math.sqrt(head_dim)
+
+    qg = q.reshape(n_kv_heads, group, head_dim)
+    scores = _gqa_scores(qg.astype(jnp.float32), k.astype(jnp.float32), scale)
+
+    # Mask KV slots at or beyond the sequence's current length.
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, s), 2)
+    scores = jnp.where(pos < seq_len, scores, _NEG_INF)
+
+    attn = jax.nn.softmax(scores, axis=-1)  # [Hkv, G, S]
+    out = jnp.einsum("hgs,shd->hgd", attn, v.astype(jnp.float32))
+    o_ref[0] = out.reshape(n_q_heads, head_dim).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, seq_lens, *, interpret=True):
+    """Single-block GQA decode attention.
+
+    Args:
+      q:        [B, Hq, D] current-step queries.
+      k_cache:  [B, S, Hkv, D] keys for all past positions (padded to S).
+      v_cache:  [B, S, Hkv, D] values.
+      seq_lens: [B] int32, valid KV length per sequence (including the
+                current token, whose K/V must already be written).
+      interpret: run under the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      [B, Hq, D] attention outputs, dtype of ``q``.
+    """
+    batch, n_q_heads, head_dim = q.shape
+    _, s, n_kv_heads, _ = k_cache.shape
+    if n_q_heads % n_kv_heads:
+        raise ValueError(f"Hq={n_q_heads} not divisible by Hkv={n_kv_heads}")
+
+    kernel = functools.partial(_decode_attn_kernel, n_kv_heads=n_kv_heads)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, n_q_heads, head_dim), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, s, n_kv_heads, head_dim), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, s, n_kv_heads, head_dim), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, n_q_heads, head_dim), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_q_heads, head_dim), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, seq_lens)
+
+
+def _paged_kernel(q_ref, k_ref, v_ref, len_ref, acc_ref, m_ref, l_ref, *,
+                  n_kv_heads, num_pages):
+    """Online-softmax page-streaming kernel body.
+
+    Grid: (batch, page).  The page axis is sequential ("arbitrary"
+    dimension semantics on TPU), so (acc, m, l) accumulate across pages in
+    the output refs; the caller finalizes with ``acc / l``.
+
+    Block shapes (per grid step):
+      q: [1, Hq, D]          -- revisited every page (stays in VMEM on TPU)
+      k/v: [1, PAGE, Hkv, D] -- the HBM->VMEM stream the 1/W law meters
+      acc: [1, Hq, D], m/l: [1, Hq] -- running accumulator state
+    """
+    page = pl.program_id(1)
+    q = q_ref[0]  # [Hq, D]
+    k = k_ref[0]  # [P, Hkv, D]
+    v = v_ref[0]
+    seq_len = len_ref[0]
+
+    n_q_heads, head_dim = q.shape
+    p = k.shape[0]
+    group = n_q_heads // n_kv_heads
+    scale = 1.0 / math.sqrt(head_dim)
+
+    @pl.when(page == 0)
+    def _init():
+        acc_ref[0] = jnp.zeros_like(acc_ref[0])
+        m_ref[0] = jnp.full_like(m_ref[0], _NEG_INF)
+        l_ref[0] = jnp.zeros_like(l_ref[0])
+
+    qg = q.reshape(n_kv_heads, group, head_dim).astype(jnp.float32)
+    scores = _gqa_scores(qg, k.astype(jnp.float32), scale)  # [Hkv, G, P]
+
+    # Global KV position of each slot in this page.
+    pos = page * p + jax.lax.broadcasted_iota(jnp.int32, (1, 1, p), 2)
+    scores = jnp.where(pos < seq_len, scores, _NEG_INF)
+
+    m_prev = m_ref[0].reshape(n_kv_heads, group)  # [Hkv, G]
+    l_prev = l_ref[0].reshape(n_kv_heads, group)
+    acc_prev = acc_ref[0].reshape(n_kv_heads, group, head_dim)
+
+    m_page = jnp.max(scores, axis=-1)  # [Hkv, G]
+    m_new = jnp.maximum(m_prev, m_page)
+    # Rescale factor for previously accumulated state.
+    alpha = jnp.exp(m_prev - m_new)  # [Hkv, G]
+    probs = jnp.exp(scores - m_new[..., None])  # [Hkv, G, P]
+
+    l_new = l_prev * alpha + jnp.sum(probs, axis=-1)
+    acc_new = acc_prev * alpha[..., None] + jnp.einsum(
+        "hgp,phd->hgd", probs, v.astype(jnp.float32)
+    )
+
+    m_ref[0] = m_new.reshape(n_q_heads)
+    l_ref[0] = l_new.reshape(n_q_heads)
+    acc_ref[0] = acc_new.reshape(n_q_heads, head_dim)
+
+
+def decode_attention_paged(q, k_cache, v_cache, seq_lens, *,
+                           page_tokens=PAGE_TOKENS, interpret=True):
+    """Page-streamed GQA decode attention with online softmax.
+
+    Same contract as :func:`decode_attention`; ``S`` must be a multiple of
+    ``page_tokens``.  This is the kernel variant lowered into the AOT
+    artifact (see python/compile/model.py).
+    """
+    batch, n_q_heads, head_dim = q.shape
+    _, s, n_kv_heads, _ = k_cache.shape
+    if n_q_heads % n_kv_heads:
+        raise ValueError(f"Hq={n_q_heads} not divisible by Hkv={n_kv_heads}")
+    if s % page_tokens:
+        raise ValueError(f"S={s} not a multiple of page_tokens={page_tokens}")
+    num_pages = s // page_tokens
+
+    kernel = functools.partial(
+        _paged_kernel, n_kv_heads=n_kv_heads, num_pages=num_pages
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(batch, num_pages),
+        in_specs=[
+            pl.BlockSpec((1, n_q_heads, head_dim), lambda b, s_: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, page_tokens, n_kv_heads, head_dim),
+                lambda b, s_: (b, s_, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_tokens, n_kv_heads, head_dim),
+                lambda b, s_: (b, s_, 0, 0),
+            ),
+            pl.BlockSpec((1,), lambda b, s_: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_q_heads, head_dim), lambda b, s_: (b, 0, 0)),
+            pl.BlockSpec((1, n_q_heads), lambda b, s_: (b, 0)),
+            pl.BlockSpec((1, n_q_heads), lambda b, s_: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n_q_heads, head_dim), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n_q_heads), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n_q_heads), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, seq_lens)
+
+    out = acc / l[..., None]
+    return out.astype(q.dtype)

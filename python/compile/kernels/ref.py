@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel variant must match these
+to tight tolerances across the hypothesis shape/dtype sweep in
+``python/tests/test_kernel.py``.  No pallas, no tricks -- just the textbook
+definition of masked grouped-query attention.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, seq_lens):
+    """Reference GQA decode attention.
+
+    Args:
+      q:        [B, Hq, D]
+      k_cache:  [B, S, Hkv, D]
+      v_cache:  [B, S, Hkv, D]
+      seq_lens: [B] int32 valid KV lengths
+
+    Returns:
+      [B, Hq, D] in ``q``'s dtype (accumulation in f32).
+    """
+    batch, n_q_heads, head_dim = q.shape
+    _, s, n_kv_heads, _ = k_cache.shape
+    group = n_q_heads // n_kv_heads
+    scale = 1.0 / math.sqrt(head_dim)
+
+    qg = q.reshape(batch, n_kv_heads, group, head_dim).astype(jnp.float32)
+    k = k_cache.astype(jnp.float32)
+    v = v_cache.astype(jnp.float32)
+
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k) * scale  # [B,Hkv,G,S]
+    pos = jnp.arange(s)[None, None, None, :]
+    mask = pos < seq_lens[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+
+    # Stable softmax; fully-masked rows cannot occur (seq_lens >= 1).
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v)
+    return out.reshape(batch, n_q_heads, head_dim).astype(q.dtype)
+
+
+def mha_prefill_ref(q, k, v, seq_lens):
+    """Reference causal GQA prefill attention.
+
+    Args:
+      q: [B, T, Hq, D]; k/v: [B, T, Hkv, D]; seq_lens: [B] valid prompt lens.
+
+    Returns: [B, T, Hq, D].  Positions >= seq_len attend only inside the
+    causal window and are ignored by callers.
+    """
+    batch, t, n_q_heads, head_dim = q.shape
+    n_kv_heads = k.shape[2]
+    group = n_q_heads // n_kv_heads
+    scale = 1.0 / math.sqrt(head_dim)
+
+    qg = q.reshape(batch, t, n_kv_heads, group, head_dim).astype(jnp.float32)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k.astype(jnp.float32)) * scale
+
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    causal = j <= i  # [T, S]
+    valid = jnp.arange(t)[None, :] < seq_lens[:, None]  # [B, S]
+    mask = causal[None, None, None] & valid[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v.astype(jnp.float32))
+    return out.reshape(batch, t, n_q_heads, head_dim).astype(q.dtype)

@@ -1,0 +1,271 @@
+"""L2: the serving-demo model -- a tiny Llama-style decoder in JAX.
+
+This is the compute graph the Rust coordinator serves.  It is deliberately
+small (CPU PJRT executes it on the request path) but architecturally real:
+token embedding, RoPE, grouped-query attention (decode attention is the L1
+Pallas kernel), RMSNorm, SwiGLU MLP, tied output head, and an explicit
+externally-owned KV cache -- the same memory object whose capacity limit
+gives rise to the paper's 1/W law.
+
+Entry points (both lowered AOT to HLO text by ``aot.py``):
+
+* :func:`prefill`      -- fill the KV cache from a (padded) prompt batch.
+* :func:`decode_step`  -- one continuous-batching decode iteration.
+
+Weights are *runtime inputs*, not baked constants: the artifact stays small
+and the weight tensors stream HBM->compute each step exactly like the
+``W_ms`` term in the paper's roofline.  Python never runs at serve time;
+Rust feeds weights (from ``artifacts/weights.bin``), tokens, KV literals and
+positions into the compiled executable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.decode_attention import (
+    decode_attention,
+    decode_attention_paged,
+)
+from compile.kernels.ref import mha_prefill_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration for one AOT artifact."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_q_heads: int = 8
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    d_ff: int = 688
+    max_seq: int = 512       # S: KV-cache slots per sequence
+    batch: int = 8           # B: decode batch (the paper's n_act knob)
+    prefill_len: int = 64    # T: padded prompt length per prefill call
+    rope_theta: float = 10000.0
+    # Which L1 Pallas kernel the decode step lowers: "single" (one grid
+    # step per batch element; fastest under the CPU interpreter) or
+    # "paged" (page-streamed online-softmax; the TPU-shaped schedule).
+    # Both are validated against the same oracle.
+    attention_kernel: str = "single"
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_q_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def kv_shape(self) -> Tuple[int, int, int, int, int]:
+        """KV cache shape: [L, B, S, Hkv, D]."""
+        return (self.n_layers, self.batch, self.max_seq,
+                self.n_kv_heads, self.head_dim)
+
+    def kv_bytes_per_token(self) -> int:
+        """kappa for this model in f32 -- mirrored by the Rust model catalog."""
+        return 2 * 4 * self.n_layers * self.n_kv_heads * self.head_dim
+
+
+# Deterministic parameter order for weights.bin / the HLO signature.
+PARAM_ORDER = (
+    "embed",        # [V, d]
+    "attn_norm",    # [L, d]
+    "wq",           # [L, d, Hq*D]
+    "wk",           # [L, d, Hkv*D]
+    "wv",           # [L, d, Hkv*D]
+    "wo",           # [L, Hq*D, d]
+    "mlp_norm",     # [L, d]
+    "w_gate",       # [L, d, f]
+    "w_up",         # [L, d, f]
+    "w_down",       # [L, f, d]
+    "final_norm",   # [d]
+)
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Normal(0, scale) init; output head is tied to the embedding."""
+    keys = jax.random.split(key, len(PARAM_ORDER))
+    kmap = dict(zip(PARAM_ORDER, keys))
+    s = 0.05
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+
+    def norm(shape):
+        return jnp.ones(shape, jnp.float32)
+
+    def rand(k, shape, scale=s):
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    return {
+        "embed": rand(kmap["embed"], (cfg.vocab, d), 0.6),
+        "attn_norm": norm((L, d)),
+        "wq": rand(kmap["wq"], (L, d, cfg.q_dim)),
+        "wk": rand(kmap["wk"], (L, d, cfg.kv_dim)),
+        "wv": rand(kmap["wv"], (L, d, cfg.kv_dim)),
+        "wo": rand(kmap["wo"], (L, cfg.q_dim, d)),
+        "mlp_norm": norm((L, d)),
+        "w_gate": rand(kmap["w_gate"], (L, d, f)),
+        "w_up": rand(kmap["w_up"], (L, d, f)),
+        "w_down": rand(kmap["w_down"], (L, f, d)),
+        "final_norm": norm((d,)),
+    }
+
+
+def rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding.  x: [..., H, D]; positions broadcastable to x[...,0,0]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def _stacked(params):
+    """Per-layer parameter pytree for lax.scan (leading L axis)."""
+    return {
+        k: params[k]
+        for k in ("attn_norm", "wq", "wk", "wv", "wo",
+                  "mlp_norm", "w_gate", "w_up", "w_down")
+    }
+
+
+def decode_step(params, tokens, kv_k, kv_v, pos, cfg: ModelConfig,
+                *, interpret=True):
+    """One decode iteration for a continuous batch.
+
+    Args:
+      params: dict per PARAM_ORDER.
+      tokens: [B] int32 current token per slot.
+      kv_k, kv_v: [L, B, S, Hkv, D] caches (slots >= pos are stale).
+      pos: [B] int32 position the current token occupies (0-based).
+      cfg: static shapes.
+
+    Returns:
+      (logits [B, V], kv_k', kv_v') -- caches with the current token's K/V
+      written at ``pos``; attention sees lengths ``pos + 1``.
+    """
+    B = cfg.batch
+    x = params["embed"][tokens]  # [B, d]
+    seq_lens = pos + 1
+
+    def layer(x, xs):
+        lp, kvk_l, kvv_l = xs
+        h = rms_norm(x, lp["attn_norm"])
+        q = (h @ lp["wq"]).reshape(B, cfg.n_q_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+        # Write this step's K/V into each sequence's slot `pos[b]`.
+        def put(cache, kv, p):
+            return jax.lax.dynamic_update_slice(cache, kv[None], (p, 0, 0))
+
+        kvk_l = jax.vmap(put)(kvk_l, k, pos)
+        kvv_l = jax.vmap(put)(kvv_l, v, pos)
+
+        # L1 Pallas kernel (variant per cfg.attention_kernel).
+        if cfg.attention_kernel == "paged":
+            attn = decode_attention_paged(
+                q, kvk_l, kvv_l, seq_lens, interpret=interpret
+            )
+        else:
+            attn = decode_attention(
+                q, kvk_l, kvv_l, seq_lens, interpret=interpret
+            )
+        x = x + attn.reshape(B, cfg.q_dim) @ lp["wo"]
+
+        h2 = rms_norm(x, lp["mlp_norm"])
+        x = x + swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+        return x, (kvk_l, kvv_l)
+
+    x, (kv_k_new, kv_v_new) = jax.lax.scan(
+        layer, x, (_stacked(params), kv_k, kv_v)
+    )
+
+    logits = rms_norm(x, params["final_norm"]) @ params["embed"].T
+    return logits, kv_k_new, kv_v_new
+
+
+def prefill(params, tokens, lens, cfg: ModelConfig):
+    """Fill the KV cache from a padded prompt batch.
+
+    Args:
+      tokens: [B, T] int32, padded with anything past ``lens``.
+      lens:   [B] int32 true prompt lengths (>= 1).
+
+    Returns:
+      (last_logits [B, V], kv_k, kv_v) where last_logits is the logits at
+      each sequence's final valid position (the token that seeds decode) and
+      the caches hold K/V for positions [0, T) (entries past ``lens`` are
+      garbage and masked by construction downstream).
+    """
+    B, T = tokens.shape
+    x = params["embed"][tokens]  # [B, T, d]
+    positions = jnp.arange(T, dtype=jnp.int32)[None, :]  # [1, T]
+
+    def layer(x, lp):
+        h = rms_norm(x, lp["attn_norm"])
+        q = (h @ lp["wq"]).reshape(B, T, cfg.n_q_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+        attn = mha_prefill_ref(q, k, v, lens)  # [B, T, Hq, D]
+        x = x + attn.reshape(B, T, cfg.q_dim) @ lp["wo"]
+        h2 = rms_norm(x, lp["mlp_norm"])
+        x = x + swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+        # Pad the T prefix out to the S-slot cache.
+        pad = [(0, 0), (0, cfg.max_seq - T), (0, 0), (0, 0)]
+        return x, (jnp.pad(k, pad), jnp.pad(v, pad))
+
+    x, (kv_k, kv_v) = jax.lax.scan(layer, x, _stacked(params))
+
+    logits = rms_norm(x, params["final_norm"]) @ params["embed"].T  # [B,T,V]
+    last = jnp.take_along_axis(
+        logits, (lens - 1)[:, None, None], axis=1
+    )[:, 0, :]
+    return last, kv_k, kv_v
+
+
+def decode_step_flat(*args, cfg: ModelConfig, interpret=True):
+    """Flat-signature wrapper for AOT lowering.
+
+    Signature: (*params_in_PARAM_ORDER, tokens, kv_k, kv_v, pos).
+    """
+    n = len(PARAM_ORDER)
+    params = dict(zip(PARAM_ORDER, args[:n]))
+    tokens, kv_k, kv_v, pos = args[n:]
+    return decode_step(params, tokens, kv_k, kv_v, pos, cfg,
+                       interpret=interpret)
+
+
+def prefill_flat(*args, cfg: ModelConfig):
+    """Flat-signature wrapper: (*params, tokens[B,T], lens[B])."""
+    n = len(PARAM_ORDER)
+    params = dict(zip(PARAM_ORDER, args[:n]))
+    tokens, lens = args[n:]
+    return prefill(params, tokens, lens, cfg)

@@ -1,0 +1,120 @@
+"""L1 correctness: Pallas decode-attention kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, GQA group factors, dtypes and sequence lengths;
+both the single-block and the paged (online-softmax) variants must agree
+with ``ref.decode_attention_ref`` to tight tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import (
+    decode_attention,
+    decode_attention_paged,
+)
+from compile.kernels.ref import decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(seed, batch, s, hq, hkv, d, dtype):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((batch, hq, d)).astype(dtype)
+    k = rng.standard_normal((batch, s, hkv, d)).astype(dtype)
+    v = rng.standard_normal((batch, s, hkv, d)).astype(dtype)
+    lens = rng.integers(1, s + 1, size=(batch,)).astype(np.int32)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(lens)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    batch=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([16, 64, 128]),
+    heads=st.sampled_from([(4, 1), (4, 2), (8, 2), (8, 8)]),
+    d=st.sampled_from([16, 32, 64]),
+)
+def test_single_block_matches_ref(seed, batch, s, heads, d):
+    hq, hkv = heads
+    q, k, v, lens = make_inputs(seed, batch, s, hq, hkv, d, np.float32)
+    got = decode_attention(q, k, v, lens)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    batch=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([64, 128, 256]),
+    heads=st.sampled_from([(4, 1), (4, 2), (8, 2), (8, 8)]),
+    d=st.sampled_from([16, 32]),
+    page=st.sampled_from([16, 32, 64]),
+)
+def test_paged_matches_ref(seed, batch, s, heads, d, page):
+    hq, hkv = heads
+    q, k, v, lens = make_inputs(seed, batch, s, hq, hkv, d, np.float32)
+    got = decode_attention_paged(q, k, v, lens, page_tokens=page)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_paged_bf16_close_to_f32_ref(seed):
+    """bf16 inputs: accumulate in f32, stay within bf16-grade tolerance."""
+    q, k, v, lens = make_inputs(seed, 2, 128, 8, 2, 32, np.float32)
+    qb = q.astype(jnp.bfloat16)
+    kb = k.astype(jnp.bfloat16)
+    vb = v.astype(jnp.bfloat16)
+    got = decode_attention_paged(qb, kb, vb, lens).astype(jnp.float32)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(got, want, rtol=0.05, atol=0.05)
+
+
+def test_paged_equals_single_block_exact_shapes():
+    """The two kernel variants agree with each other on the AOT shapes."""
+    q, k, v, lens = make_inputs(0, 8, 512, 8, 2, 32, np.float32)
+    a = decode_attention(q, k, v, lens)
+    b = decode_attention_paged(q, k, v, lens)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_mask_is_respected():
+    """Changing K/V beyond seq_len must not change the output."""
+    q, k, v, lens = make_inputs(3, 2, 64, 8, 2, 32, np.float32)
+    lens = jnp.array([5, 17], dtype=jnp.int32)
+    out1 = decode_attention_paged(q, k, v, lens)
+    k2 = k.at[0, 5:].set(99.0).at[1, 17:].set(-99.0)
+    v2 = v.at[0, 5:].set(42.0).at[1, 17:].set(-42.0)
+    out2 = decode_attention_paged(q, k2, v2, lens)
+    np.testing.assert_allclose(out1, out2, rtol=0, atol=0)
+
+
+def test_len_one_attends_only_first_slot():
+    """seq_len == 1 reduces attention to v[:, 0] exactly."""
+    q, k, v, _ = make_inputs(4, 2, 64, 8, 2, 32, np.float32)
+    lens = jnp.ones((2,), jnp.int32)
+    out = decode_attention_paged(q, k, v, lens)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+    # group g of kv-head h reads v[0, h]
+    v0 = np.asarray(v)[:, 0]  # [B, Hkv, D]
+    want_direct = np.repeat(v0, 4, axis=1)  # G = Hq // Hkv = 4
+    np.testing.assert_allclose(out, want_direct, rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_rows_convex_combination():
+    """Outputs lie within [min, max] of the valid V slots (convexity)."""
+    q, k, v, lens = make_inputs(5, 4, 128, 8, 2, 32, np.float32)
+    out = np.asarray(decode_attention_paged(q, k, v, lens))
+    v_np, lens_np = np.asarray(v), np.asarray(lens)
+    for b in range(4):
+        valid = v_np[b, : lens_np[b]]  # [len, Hkv, D]
+        lo = valid.min(axis=0).repeat(4, axis=0)  # [Hq, D]
+        hi = valid.max(axis=0).repeat(4, axis=0)
+        assert (out[b] >= lo - 1e-4).all()
+        assert (out[b] <= hi + 1e-4).all()

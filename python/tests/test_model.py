@@ -1,0 +1,142 @@
+"""L2 correctness: the tiny-Llama decode/prefill graph invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = m.ModelConfig(
+    vocab=64, d_model=32, n_layers=2, n_q_heads=4, n_kv_heads=2,
+    head_dim=8, d_ff=48, max_seq=128, batch=2, prefill_len=16,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return m.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _prompt(key, b, t, vocab):
+    return jax.random.randint(key, (b, t), 0, vocab, dtype=jnp.int32)
+
+
+def test_shapes(params):
+    tokens = _prompt(jax.random.PRNGKey(1), CFG.batch, CFG.prefill_len, CFG.vocab)
+    lens = jnp.array([5, 16], jnp.int32)
+    last, kv_k, kv_v = m.prefill(params, tokens, lens, CFG)
+    assert last.shape == (CFG.batch, CFG.vocab)
+    assert kv_k.shape == CFG.kv_shape()
+    assert kv_v.shape == CFG.kv_shape()
+
+    logits, kv_k2, kv_v2 = m.decode_step(
+        params, jnp.argmax(last, -1).astype(jnp.int32), kv_k, kv_v, lens, CFG
+    )
+    assert logits.shape == (CFG.batch, CFG.vocab)
+    assert kv_k2.shape == CFG.kv_shape()
+
+
+def test_decode_consistent_with_prefill(params):
+    """prefill(t+1).last_logits == decode_step after prefill(t).
+
+    This is the strongest end-to-end invariant: the incremental KV path
+    (Pallas kernel, RoPE at a single position, dynamic cache update) must
+    reproduce the full-prompt attention bit-for-bit up to float tolerance.
+    """
+    t = 7
+    tokens = _prompt(jax.random.PRNGKey(2), CFG.batch, CFG.prefill_len, CFG.vocab)
+    lens = jnp.full((CFG.batch,), t, jnp.int32)
+
+    # Path A: prefill over t tokens, then decode token t.
+    _, kv_k, kv_v = m.prefill(params, tokens, lens, CFG)
+    next_tok = tokens[:, t]
+    logits_inc, _, _ = m.decode_step(
+        params, next_tok, kv_k, kv_v, lens, CFG
+    )
+
+    # Path B: prefill over t+1 tokens directly.
+    lens_b = jnp.full((CFG.batch,), t + 1, jnp.int32)
+    logits_full, _, _ = m.prefill(params, tokens, lens_b, CFG)
+
+    np.testing.assert_allclose(
+        np.asarray(logits_inc), np.asarray(logits_full), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_multi_step_decode_consistency(params):
+    """Three chained decode steps match the equivalent longer prefill."""
+    t = 4
+    steps = 3
+    tokens = _prompt(jax.random.PRNGKey(3), CFG.batch, CFG.prefill_len, CFG.vocab)
+    lens = jnp.full((CFG.batch,), t, jnp.int32)
+
+    _, kv_k, kv_v = m.prefill(params, tokens, lens, CFG)
+    pos = lens
+    logits = None
+    for i in range(steps):
+        tok = tokens[:, t + i]
+        logits, kv_k, kv_v = m.decode_step(params, tok, kv_k, kv_v, pos, CFG)
+        pos = pos + 1
+
+    lens_b = jnp.full((CFG.batch,), t + steps, jnp.int32)
+    logits_full, _, _ = m.prefill(params, tokens, lens_b, CFG)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(logits_full), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_batch_slots_independent(params):
+    """Slot 0's logits must not depend on slot 1's content (batch isolation)."""
+    tokens = _prompt(jax.random.PRNGKey(4), CFG.batch, CFG.prefill_len, CFG.vocab)
+    lens = jnp.array([6, 9], jnp.int32)
+    last_a, kv_k, kv_v = m.prefill(params, tokens, lens, CFG)
+
+    tokens_b = tokens.at[1].set((tokens[1] + 13) % CFG.vocab)
+    last_b, _, _ = m.prefill(params, tokens_b, lens, CFG)
+    np.testing.assert_allclose(
+        np.asarray(last_a[0]), np.asarray(last_b[0]), rtol=1e-6, atol=1e-6
+    )
+    assert not np.allclose(np.asarray(last_a[1]), np.asarray(last_b[1]))
+
+
+def test_padding_tokens_do_not_leak(params):
+    """Tokens past `lens` must not influence the last valid logits."""
+    tokens = _prompt(jax.random.PRNGKey(5), CFG.batch, CFG.prefill_len, CFG.vocab)
+    lens = jnp.array([5, 8], jnp.int32)
+    a, _, _ = m.prefill(params, tokens, lens, CFG)
+    noisy = tokens.at[:, 10:].set(0)
+    b, _, _ = m.prefill(params, noisy, lens, CFG)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_logits_finite(params):
+    tokens = _prompt(jax.random.PRNGKey(6), CFG.batch, CFG.prefill_len, CFG.vocab)
+    lens = jnp.array([1, CFG.prefill_len], jnp.int32)
+    last, kv_k, kv_v = m.prefill(params, tokens, lens, CFG)
+    assert np.isfinite(np.asarray(last)).all()
+    logits, _, _ = m.decode_step(
+        params, jnp.zeros((CFG.batch,), jnp.int32), kv_k, kv_v, lens, CFG
+    )
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_kv_bytes_per_token_matches_formula():
+    assert CFG.kv_bytes_per_token() == 2 * 4 * 2 * 2 * 8
+
+
+def test_rope_rotation_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(7), (3, 4, 16))
+    pos = jnp.array([0.0, 5.0, 11.0])
+    y = m.rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # position 0 is the identity
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(x[0]), rtol=1e-6)

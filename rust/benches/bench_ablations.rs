@@ -1,0 +1,115 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! L̄ policy (window vs traffic-mean), power accounting (per-GPU vs
+//! per-group), FleetOpt γ sweep, K-tier topologies, and the §10.3
+//! extensions (disaggregation, carbon mapping, speculative decoding).
+use std::sync::Arc;
+use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::fleet::analysis::fleet_tpw_analysis;
+use wattlaw::fleet::carbon::{carbon_report, GridContext};
+use wattlaw::fleet::disagg::disaggregate;
+use wattlaw::fleet::optimizer::multi_pool;
+use wattlaw::fleet::pool::LBarPolicy;
+use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use wattlaw::fleet::topology::{Topology, LONG_CTX};
+use wattlaw::power::LogisticPower;
+use wattlaw::roofline::speculative::{spec_point, SpecConfig};
+use wattlaw::roofline::Roofline;
+use wattlaw::tables::render::{f2, Table};
+use wattlaw::workload::cdf::azure_conversations;
+
+fn main() {
+    let trace = azure_conversations();
+    let h100: Arc<dyn GpuProfile> = Arc::new(ManualProfile::h100_70b());
+    let fleet = |topo: &Topology, lbar, acct| {
+        let pools = topo.pools(&trace, 1000.0, h100.clone(), None, lbar, 0.85, 0.5);
+        fleet_tpw_analysis(&pools, acct)
+    };
+    let opt = Topology::FleetOpt { b_short: 4096, short_ctx: 4096, gamma: 2.0 };
+    let homo = Topology::Homogeneous { ctx: LONG_CTX };
+
+    // --- Ablation A: L̄ policy × accounting ---------------------------------
+    let mut t = Table::new(
+        "Ablation — L̄ policy × power accounting (Azure, FleetOpt vs Homo)",
+        &["L̄", "accounting", "Homo tok/W", "FleetOpt tok/W", "Δ_topo"],
+    );
+    for lbar in [LBarPolicy::Window, LBarPolicy::TrafficMean] {
+        for acct in [PowerAccounting::PerGpu, PowerAccounting::PerGroup] {
+            let h = fleet(&homo, lbar, acct).tok_per_watt.0;
+            let o = fleet(&opt, lbar, acct).tok_per_watt.0;
+            t.row(vec![
+                format!("{lbar:?}"),
+                format!("{acct:?}"),
+                f2(h),
+                f2(o),
+                format!("{:.2}x", o / h),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // --- Ablation B: γ sweep -------------------------------------------------
+    let mut t = Table::new("Ablation — FleetOpt γ", &["γ", "tok/W", "groups"]);
+    for gamma in [1.0, 1.5, 2.0, 3.0, 4.0] {
+        let r = fleet(
+            &Topology::FleetOpt { b_short: 4096, short_ctx: 4096, gamma },
+            LBarPolicy::Window,
+            PowerAccounting::PerGpu,
+        );
+        t.row(vec![format!("{gamma}"), f2(r.tok_per_watt.0),
+                   r.total_groups.to_string()]);
+    }
+    println!("{}", t.render());
+
+    // --- Ablation C: K-tier topologies --------------------------------------
+    let mut t = Table::new("Ablation — K context tiers (§10.3)", &["tiers", "tok/W"]);
+    for tiers in [
+        vec![LONG_CTX],
+        vec![4096, LONG_CTX],
+        vec![4096, 16_384, LONG_CTX],
+        vec![2048, 8192, 32_768, LONG_CTX],
+    ] {
+        let r = multi_pool(&trace, 1000.0, h100.clone(), &tiers,
+                           LBarPolicy::Window, 0.85, 0.5, PowerAccounting::PerGpu);
+        t.row(vec![format!("{}", tiers.len()), f2(r.tok_per_watt.0)]);
+    }
+    println!("{}", t.render());
+
+    // --- Ablation D: §10.3 extensions ----------------------------------------
+    let d = disaggregate(&trace, 1000.0, h100.clone(), &opt,
+                         LBarPolicy::Window, 0.85, 0.5, PowerAccounting::PerGpu);
+    println!(
+        "disaggregation: decode-only {:.2} tok/W vs total {:.2} tok/W \
+         ({} prefill groups)\n",
+        d.tok_per_watt_decode_only, d.tok_per_watt_total, d.prefill_groups
+    );
+    let c = carbon_report(&fleet(&opt, LBarPolicy::Window, PowerAccounting::PerGpu),
+                          &GridContext::typical());
+    println!(
+        "carbon (typical grid): {:.2e} gCO2/token, ${:.3}/Mtok\n",
+        c.g_co2_per_token, c.usd_per_mtok
+    );
+    let r = Roofline::manual(6.72, 0.1387);
+    let p = LogisticPower::h100();
+    for alpha in [0.5, 0.7, 0.9] {
+        let s = spec_point(&r, &p, &SpecConfig {
+            k: 4, alpha, draft_w_ms: 6.72 / 70.0, draft_power_scale: 0.8,
+        }, 16.0, 8192.0);
+        println!("speculative α={alpha}: {:.2} tok/W @64-seq-equivalent batch",
+                 s.tok_per_watt);
+    }
+
+    // Timings.
+    let mut g = BenchGroup::new("ablation timings");
+    g.bench("fleet_analysis_4tier", || {
+        black_box(multi_pool(&trace, 1000.0, h100.clone(),
+                             &[2048, 8192, 32_768, LONG_CTX],
+                             LBarPolicy::Window, 0.85, 0.5,
+                             PowerAccounting::PerGpu))
+    });
+    g.bench("disaggregate", || {
+        black_box(disaggregate(&trace, 1000.0, h100.clone(), &opt,
+                               LBarPolicy::Window, 0.85, 0.5,
+                               PowerAccounting::PerGpu))
+    });
+    g.finish();
+}

@@ -1,0 +1,41 @@
+//! Runtime hot path: the compiled decode step / prefill on CPU PJRT
+//! (needs `make artifacts`; prints a notice and exits cleanly otherwise).
+use wattlaw::benchkit::{black_box, BenchConfig, BenchGroup};
+use wattlaw::runtime::TinyModel;
+
+fn main() {
+    let dir = wattlaw::runtime::default_artifacts_dir();
+    if !dir.join("decode_step.hlo.txt").exists() {
+        println!("artifacts missing — run `make artifacts`; skipping runtime bench");
+        return;
+    }
+    let model = TinyModel::load(&dir).expect("load artifacts");
+    let b = model.cfg.batch as usize;
+    let t = model.cfg.prefill_len as usize;
+
+    let mut g = BenchGroup::new("runtime decode/prefill (CPU PJRT)")
+        .with_config(BenchConfig { warmup_iters: 3, samples: 15, batch: 1 });
+
+    let (kv_k, kv_v) = model.fresh_kv().unwrap();
+    let tok = vec![1i32; b];
+    let pos = vec![64i32; b];
+    g.bench("decode_step_b8_s512", || {
+        black_box(model.decode_step(&tok, &kv_k, &kv_v, &pos).unwrap().0[0])
+    });
+
+    let tokens: Vec<i32> = (0..b * t).map(|i| (i % 31) as i32).collect();
+    let lens = vec![t as i32; b];
+    g.bench("prefill_b8_t64", || {
+        black_box(model.prefill(&tokens, &lens).unwrap().0[0])
+    });
+
+    let logits = vec![0.5f32; b * model.cfg.vocab as usize];
+    g.bench("argmax_b8_v512", || black_box(model.argmax(&logits)));
+
+    let r = g.finish();
+    let step_ms = r[0].mean_ns / 1e6;
+    println!(
+        "\ndecode tokens/s at batch {b}: {:.0}",
+        b as f64 / (step_ms / 1e3)
+    );
+}

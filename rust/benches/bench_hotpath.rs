@@ -1,0 +1,100 @@
+//! L3 hot-path microbenchmarks: batcher step assembly, KV block
+//! allocation, energy integration, Erlang-C sizing, workload sampling,
+//! and the discrete-event simulator's event rate.
+use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::power::LogisticPower;
+use wattlaw::queueing::erlang;
+use wattlaw::router::HomogeneousRouter;
+use wattlaw::serve::batcher::{Batcher, SlotWork};
+use wattlaw::serve::energy::EnergyMeter;
+use wattlaw::serve::kvblocks::BlockAllocator;
+use wattlaw::serve::request::ServeRequest;
+use wattlaw::sim::{simulate_topology, GroupSimConfig};
+use wattlaw::workload::cdf::azure_conversations;
+use wattlaw::workload::synth::{generate, GenConfig};
+use wattlaw::xrand::Rng;
+
+fn main() {
+    let mut g = BenchGroup::new("L3 hot paths");
+
+    // Batcher at n = 256 slots, fully loaded.
+    let mut b = Batcher::new(256, BlockAllocator::new(64, 1 << 16), 1024, 65_536);
+    for i in 0..512u64 {
+        b.submit(ServeRequest {
+            id: i, prompt_tokens: 2048, output_tokens: 256, arrival_s: 0.0,
+        });
+    }
+    b.admit(0.0);
+    g.bench("batcher_plan_256_slots", || black_box(b.plan()));
+    g.bench("batcher_full_step_256_slots", || {
+        let plan = b.plan();
+        let mut done = 0;
+        for (i, w) in plan.into_iter().enumerate() {
+            if !matches!(w, SlotWork::Idle) && b.on_step(i, w, 1.0).is_some() {
+                done += 1;
+            }
+        }
+        b.admit(1.0);
+        black_box(done)
+    });
+
+    // KV block allocator churn.
+    let mut alloc = BlockAllocator::new(64, 1 << 16);
+    let mut id = 0u64;
+    g.bench("kvblocks_admit_grow_release", || {
+        id += 1;
+        alloc.admit(id, 4096);
+        alloc.grow(id, 8192);
+        alloc.release(id);
+        black_box(alloc.used())
+    });
+
+    // Energy integration.
+    let mut meter = EnergyMeter::new(LogisticPower::h100(), 1.0, 0.0);
+    let mut t = 0.0;
+    g.bench("energy_observe", || {
+        t += 0.01;
+        meter.observe(t, 100.0);
+        black_box(meter.joules())
+    });
+
+    // Queueing: sizing a 1000-slot pool.
+    g.bench("erlang_min_servers", || {
+        black_box(erlang::min_servers_for_p99(1000.0, 0.5, 0.4))
+    });
+
+    // Workload sampling.
+    let trace = azure_conversations();
+    let mut rng = Rng::new(1);
+    g.bench("cdf_sample", || black_box(trace.prompt_cdf.sample(&mut rng)));
+    g.bench("trace_gen_1s_at_1krps", || {
+        black_box(
+            generate(&trace, &GenConfig {
+                lambda_rps: 1000.0, duration_s: 1.0, seed: 2,
+                ..Default::default()
+            })
+            .len(),
+        )
+    });
+
+    // DES simulator throughput (events ≈ steps × slots).
+    let reqs = generate(&trace, &GenConfig {
+        lambda_rps: 50.0, duration_s: 2.0, max_prompt_tokens: 30_000,
+        max_output_tokens: 256, seed: 3,
+    });
+    let p = wattlaw::fleet::profile::ManualProfile::h100_70b();
+    use wattlaw::fleet::profile::GpuProfile;
+    let cfg = GroupSimConfig {
+        window_tokens: 65_536,
+        n_max: p.n_max(65_536),
+        roofline: p.roofline(),
+        power: p.gpu.power,
+        gpus_charged: 1.0,
+        ingest_chunk: 1024,
+    };
+    g.bench("simulate_100req_trace_2groups", || {
+        black_box(simulate_topology(&reqs, &HomogeneousRouter, &[2], &[cfg.clone()]))
+    });
+
+    g.finish();
+}

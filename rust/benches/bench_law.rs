@@ -1,0 +1,14 @@
+//! Bench the 1/W-law figure: sweep + slope fit across all generations.
+use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::fleet::profile::ManualProfile;
+use wattlaw::tables::law_fig;
+use wattlaw::tokeconomy::law::{fit_law, LAW_CONTEXTS};
+
+fn main() {
+    println!("{}", law_fig::generate());
+    let mut g = BenchGroup::new("1/W law figure");
+    let p = ManualProfile::h100_70b();
+    g.bench("fit_law_h100", || black_box(fit_law(&p, &LAW_CONTEXTS)));
+    g.bench("all_generations", || black_box(law_fig::fits()));
+    g.finish();
+}

@@ -1,0 +1,19 @@
+//! Bench T1: regenerate Table 1 (context sweep) and time the sweep.
+use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::fleet::profile::{ManualProfile, PowerAccounting};
+use wattlaw::tables::t1;
+use wattlaw::tokeconomy::context_sweep;
+
+fn main() {
+    // Regenerate the artifact first (the bench IS the reproduction).
+    println!("{}", t1::generate());
+
+    let mut g = BenchGroup::new("T1 — context sweep");
+    let h100 = ManualProfile::h100_70b();
+    g.bench("t1_full_table", || black_box(t1::rows()));
+    g.bench("context_sweep_7pts_h100", || {
+        black_box(context_sweep(&h100, &t1::CONTEXTS, PowerAccounting::PerGpu))
+    });
+    g.bench("t1_render", || black_box(t1::generate().len()));
+    g.finish();
+}

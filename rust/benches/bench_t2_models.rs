@@ -1,0 +1,11 @@
+//! Bench T2: regenerate Table 2 (model comparison) and time it.
+use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::tables::t2;
+
+fn main() {
+    println!("{}", t2::generate());
+    let mut g = BenchGroup::new("T2 — model comparison");
+    g.bench("t2_rows_all_models", || black_box(t2::rows()));
+    g.bench("t2_render", || black_box(t2::generate().len()));
+    g.finish();
+}

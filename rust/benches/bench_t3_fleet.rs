@@ -1,0 +1,31 @@
+//! Bench T3: regenerate Table 3 (fleet topology × generation) and time
+//! the full fleet analysis (sizing + Eq. 4) per configuration.
+use std::sync::Arc;
+use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::fleet::analysis::fleet_tpw_analysis;
+use wattlaw::fleet::pool::LBarPolicy;
+use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use wattlaw::fleet::topology::{Topology, LONG_CTX};
+use wattlaw::tables::t3;
+use wattlaw::workload::cdf::azure_conversations;
+
+fn main() {
+    println!("{}", t3::generate(LBarPolicy::Window));
+    let mut g = BenchGroup::new("T3 — fleet analysis");
+    let trace = azure_conversations();
+    let profile: Arc<dyn GpuProfile> = Arc::new(ManualProfile::h100_70b());
+    let topo = Topology::FleetOpt { b_short: 4096, short_ctx: 4096, gamma: 2.0 };
+    g.bench("fleet_tpw_analysis_fleetopt", || {
+        let pools = topo.pools(&trace, 1000.0, profile.clone(), None,
+                               LBarPolicy::Window, 0.85, 0.5);
+        black_box(fleet_tpw_analysis(&pools, PowerAccounting::PerGpu))
+    });
+    g.bench("t3_full_table_12_rows", || black_box(t3::rows(LBarPolicy::Window)));
+    let homo = Topology::Homogeneous { ctx: LONG_CTX };
+    g.bench("fleet_tpw_analysis_homo", || {
+        let pools = homo.pools(&trace, 1000.0, profile.clone(), None,
+                               LBarPolicy::Window, 0.85, 0.5);
+        black_box(fleet_tpw_analysis(&pools, PowerAccounting::PerGpu))
+    });
+    g.finish();
+}

@@ -1,0 +1,41 @@
+//! Bench T4: regenerate Table 4 (context vs semantic routing) and time
+//! the router hot path (the per-request O(1) decision).
+use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::router::context::ContextRouter;
+use wattlaw::router::fleetopt::FleetOptRouter;
+use wattlaw::router::semantic::SemanticRouter;
+use wattlaw::router::Router;
+use wattlaw::tables::t4;
+use wattlaw::workload::Request;
+
+fn main() {
+    println!("{}", t4::generate());
+    let mut g = BenchGroup::new("T4 — routing");
+    g.bench("t4_rows", || black_box(t4::rows()));
+
+    let reqs: Vec<Request> = (0..1024)
+        .map(|i| Request {
+            id: i,
+            arrival_s: 0.0,
+            prompt_tokens: 1 + ((i as u32 * 2654435761) % 131072),
+            output_tokens: 128,
+        })
+        .collect();
+    let ctx = ContextRouter::two_pool(4096);
+    let ctx8 = ContextRouter::tiered(vec![1024, 2048, 4096, 8192, 16384, 32768, 65536]);
+    let fo = FleetOptRouter::new(4096, 2.0);
+    let sem = SemanticRouter::new(0.35);
+    g.bench("route_1k_reqs_two_pool", || {
+        black_box(reqs.iter().map(|r| ctx.route(r).pool).sum::<usize>())
+    });
+    g.bench("route_1k_reqs_8tier", || {
+        black_box(reqs.iter().map(|r| ctx8.route(r).pool).sum::<usize>())
+    });
+    g.bench("route_1k_reqs_fleetopt", || {
+        black_box(reqs.iter().map(|r| fo.route(r).pool).sum::<usize>())
+    });
+    g.bench("route_1k_reqs_semantic", || {
+        black_box(reqs.iter().map(|r| sem.route(r).pool).sum::<usize>())
+    });
+    g.finish();
+}

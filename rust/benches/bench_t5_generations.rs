@@ -1,0 +1,10 @@
+//! Bench T5: regenerate Table 5 (GPU generation comparison).
+use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::tables::t5;
+
+fn main() {
+    println!("{}", t5::generate());
+    let mut g = BenchGroup::new("T5 — GPU generations");
+    g.bench("t5_rows", || black_box(t5::rows()));
+    g.finish();
+}

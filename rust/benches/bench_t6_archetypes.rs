@@ -1,0 +1,11 @@
+//! Bench T6: regenerate Table 6 (archetype recommendations — a full
+//! topology × GPU argmax sweep per trace).
+use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::tables::t6;
+
+fn main() {
+    println!("{}", t6::generate());
+    let mut g = BenchGroup::new("T6 — archetype recommendation sweep");
+    g.bench("t6_rows_full_argmax", || black_box(t6::rows()));
+    g.finish();
+}

@@ -1,0 +1,14 @@
+//! Bench T7: regenerate Table 7 and time the logistic calibration fit.
+use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::power::fit::fit_logistic;
+use wattlaw::power::mlenergy;
+use wattlaw::tables::t7;
+
+fn main() {
+    println!("{}", t7::generate());
+    let mut g = BenchGroup::new("T7 — power model calibration");
+    let samples = mlenergy::h100_measurements(0, 0.03);
+    g.bench("fit_logistic_9pts", || black_box(fit_logistic(&samples)));
+    g.bench("regen_measurements", || black_box(mlenergy::h100_measurements(1, 0.03)));
+    g.finish();
+}

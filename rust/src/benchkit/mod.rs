@@ -1,0 +1,180 @@
+//! `benchkit` — a small benchmark harness (criterion is not fetchable in
+//! this offline image). Used by every `[[bench]]` target (`harness =
+//! false`), producing warmed-up, repeatable timing statistics and
+//! markdown-friendly output.
+//!
+//! Method: warm up for `warmup_iters`, then run `samples` batches of
+//! `batch` iterations each, recording per-iteration time per batch;
+//! report mean / p50 / p99 / min plus throughput. A `black_box` is
+//! provided to defeat constant folding.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Re-exported black box.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark's collected statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    fn from_samples(name: String, mut ns: Vec<f64>) -> Self {
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let q = |p: f64| ns[((n as f64 - 1.0) * p).round() as usize];
+        BenchStats {
+            name,
+            mean_ns: mean,
+            p50_ns: q(0.50),
+            p99_ns: q(0.99),
+            min_ns: ns[0],
+            samples: ns,
+        }
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    /// One human-readable row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>14}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            format!("{:.0}/s", self.per_sec()),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: u64,
+    pub samples: usize,
+    pub batch: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Honor `--quick` on the bench command line and WATTLAW_BENCH_QUICK.
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("WATTLAW_BENCH_QUICK").is_ok();
+        if quick {
+            BenchConfig { warmup_iters: 3, samples: 10, batch: 1 }
+        } else {
+            BenchConfig { warmup_iters: 20, samples: 40, batch: 5 }
+        }
+    }
+}
+
+/// A group of related benchmarks printed as one table.
+pub struct BenchGroup {
+    title: String,
+    cfg: BenchConfig,
+    results: Vec<BenchStats>,
+}
+
+impl BenchGroup {
+    pub fn new(title: impl Into<String>) -> Self {
+        BenchGroup {
+            title: title.into(),
+            cfg: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Benchmark `f`, which must return a value (fed to `black_box`).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: impl Into<String>, mut f: F) {
+        let name = name.into();
+        for _ in 0..self.cfg.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.cfg.batch {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / self.cfg.batch as f64;
+            samples.push(dt);
+        }
+        self.results.push(BenchStats::from_samples(name, samples));
+    }
+
+    /// Print the group's table and return the stats for programmatic use.
+    pub fn finish(self) -> Vec<BenchStats> {
+        println!("\n== {} ==", self.title);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>14}",
+            "benchmark", "mean", "p50", "p99", "throughput"
+        );
+        for r in &self.results {
+            println!("{}", r.row());
+        }
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let mut g = BenchGroup::new("test").with_config(BenchConfig {
+            warmup_iters: 2,
+            samples: 8,
+            batch: 4,
+        });
+        g.bench("sum", || (0..1000u64).sum::<u64>());
+        let r = g.finish();
+        assert_eq!(r.len(), 1);
+        let s = &r[0];
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p99_ns);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn format_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

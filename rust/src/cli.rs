@@ -1,0 +1,471 @@
+//! Command-line interface (hand-rolled: `clap` is not fetchable offline).
+//!
+//! ```text
+//! wattlaw tables [--all|--t1..--t7|--law|--power-fig|--independence] [--lbar window|traffic]
+//! wattlaw fleet --trace azure|lmsys|agent --gpu h100|h200|b200|gb200
+//!               --topo homo|pool|fleetopt [--b-short N] [--gamma G]
+//!               [--lambda R] [--lbar window|traffic] [--acct pergpu|pergroup]
+//! wattlaw sweep --trace azure --gpu h100           FleetOpt (B_short, γ*) sweep
+//! wattlaw power [--gpu b200]                        P(b) curve
+//! wattlaw simulate [--trace azure] [--lambda R] [--duration S] [--groups N]
+//! wattlaw serve [--requests N] [--b-short N] [--artifacts DIR]
+//! wattlaw validate [--artifacts DIR]                golden numerics check
+//! wattlaw report                                    paper-vs-measured summary
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::fleet::analysis::fleet_tpw_analysis;
+use crate::fleet::optimizer;
+use crate::fleet::pool::LBarPolicy;
+use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use crate::fleet::topology::{Topology, LONG_CTX};
+use crate::power::Gpu;
+use crate::workload::cdf::{
+    agent_heavy, azure_conversations, lmsys_chat, WorkloadTrace,
+};
+
+/// Parsed command line: positional command plus `--key value` / `--flag`
+/// options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: Vec<String>,
+    pub options: HashMap<String, String>,
+}
+
+/// Keys that are value-taking options; everything else with `--` is a flag.
+const VALUE_KEYS: [&str; 12] = [
+    "lbar", "trace", "gpu", "topo", "b-short", "gamma", "lambda", "acct",
+    "requests", "artifacts", "duration", "groups",
+];
+
+pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Args {
+    let mut a = Args::default();
+    a.command = argv.next().unwrap_or_default();
+    let mut argv = argv.peekable();
+    while let Some(arg) = argv.next() {
+        if let Some(key) = arg.strip_prefix("--") {
+            if VALUE_KEYS.contains(&key) {
+                if let Some(v) = argv.next() {
+                    a.options.insert(key.to_string(), v);
+                }
+            } else {
+                a.flags.push(key.to_string());
+            }
+        }
+    }
+    a
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u32(&self, name: &str, default: u32) -> u32 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn lbar(&self) -> LBarPolicy {
+        match self.opt("lbar") {
+            Some("traffic") => LBarPolicy::TrafficMean,
+            _ => LBarPolicy::Window,
+        }
+    }
+
+    pub fn acct(&self) -> PowerAccounting {
+        match self.opt("acct") {
+            Some("pergroup") => PowerAccounting::PerGroup,
+            _ => PowerAccounting::PerGpu,
+        }
+    }
+
+    pub fn trace(&self) -> WorkloadTrace {
+        match self.opt("trace") {
+            Some("lmsys") => lmsys_chat(),
+            Some("agent") => agent_heavy(),
+            _ => azure_conversations(),
+        }
+    }
+
+    pub fn gpu(&self) -> Gpu {
+        self.opt("gpu").and_then(Gpu::parse).unwrap_or(Gpu::H100)
+    }
+
+    pub fn artifacts(&self) -> PathBuf {
+        self.opt("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(crate::runtime::default_artifacts_dir)
+    }
+}
+
+/// Entry point for `main` — returns the process exit code.
+pub fn run<I: Iterator<Item = String>>(argv: I) -> crate::Result<i32> {
+    let args = parse_args(argv);
+    match args.command.as_str() {
+        "tables" => cmd_tables(&args),
+        "fleet" => cmd_fleet(&args),
+        "sweep" => cmd_sweep(&args),
+        "power" => cmd_power(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "validate" => cmd_validate(&args),
+        "report" => {
+            println!("{}", crate::report::paper_vs_measured());
+            Ok(0)
+        }
+        "" | "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            Ok(2)
+        }
+    }
+}
+
+const HELP: &str = "\
+wattlaw — The 1/W Law, reproduced (context-length routing & GPU generation \
+gains for LLM inference energy efficiency)
+
+commands:
+  tables     regenerate paper tables/figures (--all, --t1..--t7, --law,
+             --power-fig, --independence; --lbar window|traffic)
+  fleet      analyze one fleet configuration (--trace --gpu --topo ...)
+  sweep      FleetOpt (B_short, γ*) optimization sweep
+  power      print a GPU's P(b) curve (--gpu)
+  simulate   discrete-event fleet simulation vs analytics
+  serve      serve a trace through the real AOT model (2-pool demo)
+  validate   check runtime numerics against the JAX golden trace
+  report     paper-vs-measured summary (EXPERIMENTS.md §input)
+";
+
+fn cmd_tables(args: &Args) -> crate::Result<i32> {
+    use crate::tables;
+    let lbar = args.lbar();
+    let all = args.flag("all") || args.flags.is_empty();
+    let mut out = String::new();
+    if all || args.flag("t1") {
+        out.push_str(&tables::t1::generate());
+    }
+    if all || args.flag("t2") {
+        out.push_str(&tables::t2::generate());
+    }
+    if all || args.flag("t3") {
+        out.push_str(&tables::t3::generate(lbar));
+    }
+    if all || args.flag("t4") {
+        out.push_str(&tables::t4::generate());
+    }
+    if all || args.flag("t5") {
+        out.push_str(&tables::t5::generate());
+    }
+    if all || args.flag("t6") {
+        out.push_str(&tables::t6::generate());
+    }
+    if all || args.flag("t7") {
+        out.push_str(&tables::t7::generate());
+    }
+    if all || args.flag("law") {
+        out.push_str(&tables::law_fig::generate());
+    }
+    if all || args.flag("power-fig") {
+        out.push_str(&tables::power_fig::generate());
+    }
+    if all || args.flag("independence") {
+        out.push_str(&tables::independence::generate(lbar));
+    }
+    println!("{out}");
+    Ok(0)
+}
+
+fn cmd_fleet(args: &Args) -> crate::Result<i32> {
+    let trace = args.trace();
+    let gpu = args.gpu();
+    let lambda = args.opt_f64("lambda", 1000.0);
+    let b_short = args.opt_u32("b-short", trace.paper_b_short);
+    let gamma = args.opt_f64("gamma", 2.0);
+    let topo = match args.opt("topo") {
+        Some("homo") | None => Topology::Homogeneous { ctx: LONG_CTX },
+        Some("pool") => Topology::PoolRouting { b_short, short_ctx: b_short.max(2048) },
+        Some("fleetopt") => Topology::FleetOpt {
+            b_short,
+            short_ctx: b_short.max(2048),
+            gamma,
+        },
+        Some(other) => anyhow::bail!("unknown topology '{other}'"),
+    };
+    let profile: Arc<dyn GpuProfile> = Arc::new(ManualProfile::for_gpu(gpu));
+    let pools = topo.pools(&trace, lambda, profile, None, args.lbar(), 0.85, 0.5);
+    let report = fleet_tpw_analysis(&pools, args.acct());
+
+    println!(
+        "\n== fleet: {} | {} | {} | λ={lambda} req/s ==",
+        trace.name,
+        topo.label(),
+        gpu.spec().name
+    );
+    println!(
+        "{:<16} {:>8} {:>8} {:>9} {:>10} {:>10} {:>9} {:>10}",
+        "pool", "ctx", "groups", "n_act", "tok/s", "kW", "tok/W", "p99 TTFT"
+    );
+    for p in &report.pools {
+        println!(
+            "{:<16} {:>8} {:>8} {:>9.1} {:>10.0} {:>10.2} {:>9.2} {:>9.3}s",
+            p.name,
+            p.context_tokens,
+            p.sizing.groups,
+            p.sizing.n_active,
+            p.sizing.pool_tok_s,
+            p.power.kw(),
+            p.tok_per_watt.0,
+            p.sizing.p99_ttft_s,
+        );
+    }
+    println!(
+        "total: {} groups / {} GPUs, {:.1} kW, fleet tok/W = {:.2} ({:?})",
+        report.total_groups,
+        report.total_gpus,
+        report.total_power.kw(),
+        report.tok_per_watt.0,
+        report.accounting,
+    );
+    Ok(0)
+}
+
+fn cmd_sweep(args: &Args) -> crate::Result<i32> {
+    let trace = args.trace();
+    let profile: Arc<dyn GpuProfile> =
+        Arc::new(ManualProfile::for_gpu(args.gpu()));
+    let results = optimizer::sweep_fleetopt(
+        &trace,
+        args.opt_f64("lambda", 1000.0),
+        profile,
+        args.lbar(),
+        0.85,
+        0.5,
+        args.acct(),
+    );
+    println!("\n== FleetOpt sweep: {} on {} ==", trace.name, args.gpu().spec().name);
+    println!("{:>8} {:>6} {:>9} {:>9}", "B_short", "γ", "tok/W", "groups");
+    for r in results.iter().take(12) {
+        println!(
+            "{:>8} {:>6} {:>9.2} {:>9}",
+            r.b_short, r.gamma, r.report.tok_per_watt.0, r.report.total_groups
+        );
+    }
+    let best = &results[0];
+    println!("γ* = {} at B_short = {}", best.gamma, best.b_short);
+    Ok(0)
+}
+
+fn cmd_power(args: &Args) -> crate::Result<i32> {
+    let spec = args.gpu().spec();
+    println!("\n== {} P(b) | {} quality ==", spec.name, spec.quality.label());
+    for e in 0..=10 {
+        let b = (1u64 << e) as f64;
+        println!("b={b:>6}  P={:>6.1} W", spec.power.power_w(b));
+    }
+    Ok(0)
+}
+
+fn cmd_simulate(args: &Args) -> crate::Result<i32> {
+    use crate::router::context::ContextRouter;
+    use crate::router::HomogeneousRouter;
+    use crate::sim::{simulate_topology, GroupSimConfig};
+    use crate::workload::synth::{generate, GenConfig};
+
+    let trace = args.trace();
+    let lambda = args.opt_f64("lambda", 60.0);
+    let duration = args.opt_f64("duration", 5.0);
+    let groups = args.opt_u32("groups", 4);
+    let b_short = args.opt_u32("b-short", trace.paper_b_short);
+
+    let reqs = generate(
+        &trace,
+        &GenConfig {
+            lambda_rps: lambda,
+            duration_s: duration,
+            max_prompt_tokens: 60_000,
+            max_output_tokens: 1024,
+            seed: 42,
+        },
+    );
+
+    let p = ManualProfile::for_gpu(args.gpu());
+    let mk = |window: u32| GroupSimConfig {
+        window_tokens: window,
+        n_max: p.n_max(window),
+        roofline: p.roofline(),
+        power: p.gpu().power,
+        gpus_charged: 1.0,
+        ingest_chunk: 1024,
+    };
+
+    let homo = simulate_topology(&reqs, &HomogeneousRouter, &[groups], &[mk(LONG_CTX)]);
+    let split = groups.div_ceil(2);
+    // Short pool gets output headroom above the split boundary so routed
+    // requests always fit prompt+output.
+    let routed = simulate_topology(
+        &reqs,
+        &ContextRouter::two_pool(b_short),
+        &[split, groups - split],
+        &[mk(b_short.max(2048) + 1024), mk(LONG_CTX)],
+    );
+
+    println!(
+        "\n== simulate: {} | λ={lambda} req/s × {duration}s | {} groups of {} ==",
+        trace.name,
+        groups,
+        p.gpu.name
+    );
+    for (name, r) in [("homogeneous 64K", &homo), ("two-pool routed", &routed)] {
+        println!(
+            "{name:<18} tok/W={:<7.3} tokens={:<8} J={:<10.0} pools={}",
+            r.tok_per_watt,
+            r.output_tokens,
+            r.joules,
+            r.pools.len()
+        );
+        for pl in &r.pools {
+            let mut m = pl.metrics.clone();
+            println!(
+                "    {:<8} groups={} window={:<6} done={:<6} mean_b={:<6.2} \
+                 tok/W={:<7.3} p99TTFT={:.3}s",
+                pl.name,
+                pl.groups,
+                pl.window_tokens,
+                pl.metrics.completed,
+                pl.mean_batch,
+                pl.tok_per_watt,
+                m.ttft_s.p99()
+            );
+        }
+    }
+    println!(
+        "topology gain (simulated): {:.2}x",
+        routed.tok_per_watt / homo.tok_per_watt
+    );
+    Ok(0)
+}
+
+fn cmd_serve(args: &Args) -> crate::Result<i32> {
+    use crate::router::context::ContextRouter;
+    use crate::serve::{render_report, serve_trace, EngineConfig, PoolSpec};
+
+    let n_requests = args.opt_u32("requests", 24) as usize;
+    let b_short = args.opt_u32("b-short", 128);
+    let artifacts = args.artifacts();
+
+    // Deterministic demo mix: 75 % short prompts (16-96 tokens), 25 %
+    // long (224-376) — the short-dominant archetype at tiny-model scale.
+    let mut reqs: Vec<crate::workload::Request> = Vec::new();
+    let mut rng = crate::xrand::Rng::new(7);
+    for id in 0..n_requests as u64 {
+        let prompt_tokens = if id % 4 == 3 {
+            rng.range_u64(224, 376) as u32
+        } else {
+            rng.range_u64(16, 96) as u32
+        };
+        reqs.push(crate::workload::Request {
+            id,
+            arrival_s: 0.0,
+            prompt_tokens,
+            output_tokens: rng.range_u64(8, 32) as u32,
+        });
+    }
+
+    let router = ContextRouter::two_pool(b_short);
+    // Each pool's energy clock emulates the paper's calibrated H100/70B
+    // group at the pool's emulated window (short = 4K, long = 64K); the
+    // CPU executes the real compiled model. Shared virtual KV budget of
+    // 16 blocks (1024 tokens): the short pool fits 8 concurrent
+    // sequences, the long pool ~2 — Eq. 3 live.
+    let pools = vec![
+        PoolSpec {
+            name: "short".into(),
+            config: EngineConfig::for_window(b_short, 16)
+                .with_ingest_slots(8)
+                .emulating_h100(4096),
+        },
+        PoolSpec {
+            name: "long".into(),
+            config: EngineConfig::for_window(480, 16)
+                .with_ingest_slots(8)
+                .emulating_h100(65_536),
+        },
+    ];
+    let report = serve_trace(&artifacts, &router, &pools, &reqs)?;
+    println!("{}", render_report(&report));
+    Ok(0)
+}
+
+fn cmd_validate(args: &Args) -> crate::Result<i32> {
+    use crate::runtime::TinyModel;
+    let model = TinyModel::load(&args.artifacts())?;
+    let err = model.validate_golden()?;
+    println!(
+        "golden validation: max |err| = {err:.3e} over prefill + 2 decode steps"
+    );
+    if err < 1e-3 {
+        println!("runtime numerics OK");
+        Ok(0)
+    } else {
+        eprintln!("numerics drift beyond 1e-3!");
+        Ok(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        parse_args(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_flags_and_options() {
+        let a = args("tables --t1 --lbar traffic --independence");
+        assert_eq!(a.command, "tables");
+        assert!(a.flag("t1") && a.flag("independence"));
+        assert_eq!(a.opt("lbar"), Some("traffic"));
+        assert_eq!(a.lbar(), LBarPolicy::TrafficMean);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("fleet");
+        assert_eq!(a.gpu(), Gpu::H100);
+        assert_eq!(a.trace().name, "Azure");
+        assert_eq!(a.opt_f64("lambda", 1000.0), 1000.0);
+        assert_eq!(a.acct(), PowerAccounting::PerGpu);
+    }
+
+    #[test]
+    fn gpu_and_trace_selection() {
+        let a = args("fleet --gpu b200 --trace lmsys --lambda 250");
+        assert_eq!(a.gpu(), Gpu::B200);
+        assert_eq!(a.trace().name, "LMSYS");
+        assert_eq!(a.opt_f64("lambda", 0.0), 250.0);
+    }
+
+    #[test]
+    fn run_dispatches_analytic_commands() {
+        assert_eq!(run(["power", "--gpu", "h100"].iter().map(|s| s.to_string())).unwrap(), 0);
+        assert_eq!(run(["help"].iter().map(|s| s.to_string())).unwrap(), 0);
+        assert_eq!(run(["bogus"].iter().map(|s| s.to_string())).unwrap(), 2);
+    }
+}

@@ -1,0 +1,164 @@
+//! Adaptive topology control (paper §10.3 "Adaptive topology control"):
+//! the split boundary B_short is normally fixed offline from a historical
+//! CDF; this controller monitors the live request-length distribution in
+//! a sliding window and re-estimates the boundary online, with hysteresis
+//! so pools aren't reconfigured on noise.
+//!
+//! Policy: track the empirical q-quantile of prompt lengths (default
+//! q = 0.85 — "most traffic short"), snap it to the power-of-two grid the
+//! fleet planner uses, and switch only when the target is stable for
+//! `hysteresis` consecutive re-evaluations.
+
+use std::collections::VecDeque;
+
+/// Online B_short controller.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSplit {
+    /// Sliding window of recent prompt lengths.
+    window: VecDeque<u32>,
+    capacity: usize,
+    /// Quantile of traffic the short pool should capture.
+    pub quantile: f64,
+    /// Consecutive agreeing re-evaluations required to switch.
+    pub hysteresis: u32,
+    current: u32,
+    pending: Option<(u32, u32)>, // (candidate, votes)
+    /// Re-evaluate every `period` observations.
+    pub period: u32,
+    since_eval: u32,
+    /// Total boundary switches performed (for reports).
+    pub switches: u32,
+}
+
+/// Power-of-two boundary grid (matches the planner's sweep grid).
+pub const BOUNDS: [u32; 8] = [512, 1024, 2048, 4096, 8192, 16_384, 32_768, 65_536];
+
+fn snap(len: f64) -> u32 {
+    for &b in &BOUNDS {
+        if len <= b as f64 {
+            return b;
+        }
+    }
+    *BOUNDS.last().unwrap()
+}
+
+impl AdaptiveSplit {
+    pub fn new(initial_b_short: u32, window: usize) -> Self {
+        AdaptiveSplit {
+            window: VecDeque::with_capacity(window),
+            capacity: window.max(16),
+            quantile: 0.85,
+            hysteresis: 3,
+            current: initial_b_short,
+            pending: None,
+            period: 256,
+            since_eval: 0,
+            switches: 0,
+        }
+    }
+
+    /// Current split boundary.
+    pub fn b_short(&self) -> u32 {
+        self.current
+    }
+
+    /// Observe one request's prompt length; returns the (possibly
+    /// updated) boundary.
+    pub fn observe(&mut self, prompt_tokens: u32) -> u32 {
+        if self.window.len() == self.capacity {
+            self.window.pop_front();
+        }
+        self.window.push_back(prompt_tokens);
+        self.since_eval += 1;
+        if self.since_eval >= self.period && self.window.len() >= 64 {
+            self.since_eval = 0;
+            self.reevaluate();
+        }
+        self.current
+    }
+
+    fn empirical_quantile(&self) -> f64 {
+        let mut v: Vec<u32> = self.window.iter().copied().collect();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * self.quantile).round() as usize;
+        v[idx] as f64
+    }
+
+    fn reevaluate(&mut self) {
+        let candidate = snap(self.empirical_quantile());
+        if candidate == self.current {
+            self.pending = None;
+            return;
+        }
+        let votes = match self.pending {
+            Some((c, v)) if c == candidate => v + 1,
+            _ => 1,
+        };
+        if votes >= self.hysteresis {
+            self.current = candidate;
+            self.pending = None;
+            self.switches += 1;
+        } else {
+            self.pending = Some((candidate, votes));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::cdf::{agent_heavy, azure_conversations};
+    use crate::xrand::Rng;
+
+    fn feed(ctl: &mut AdaptiveSplit, trace: &crate::workload::WorkloadTrace,
+            n: usize, rng: &mut Rng) {
+        for _ in 0..n {
+            let p = trace.prompt_cdf.sample(rng).round().max(1.0) as u32;
+            ctl.observe(p);
+        }
+    }
+
+    #[test]
+    fn converges_to_the_trace_quantile() {
+        let mut ctl = AdaptiveSplit::new(65_536, 4096);
+        let mut rng = Rng::new(1);
+        feed(&mut ctl, &azure_conversations(), 20_000, &mut rng);
+        // Azure's 85th percentile sits near 3.3K → snapped to 4096,
+        // matching the paper's chosen B_short.
+        assert_eq!(ctl.b_short(), 4096, "converged to {}", ctl.b_short());
+    }
+
+    #[test]
+    fn adapts_under_distribution_shift() {
+        let mut ctl = AdaptiveSplit::new(4096, 2048);
+        let mut rng = Rng::new(2);
+        feed(&mut ctl, &azure_conversations(), 8_000, &mut rng);
+        let before = ctl.b_short();
+        // Workload shifts to agent-heavy: boundary must move up.
+        feed(&mut ctl, &agent_heavy(), 8_000, &mut rng);
+        let after = ctl.b_short();
+        assert!(after > before, "shift: {before} -> {after}");
+        assert!(ctl.switches >= 1);
+    }
+
+    #[test]
+    fn hysteresis_suppresses_noise() {
+        let mut ctl = AdaptiveSplit::new(4096, 1024);
+        ctl.hysteresis = 1000; // effectively frozen
+        let mut rng = Rng::new(3);
+        feed(&mut ctl, &agent_heavy(), 10_000, &mut rng);
+        assert_eq!(ctl.b_short(), 4096, "frozen controller must not move");
+        assert_eq!(ctl.switches, 0);
+    }
+
+    #[test]
+    fn snap_is_monotone_and_bounded() {
+        let mut prev = 0;
+        for len in [10.0, 600.0, 3000.0, 9000.0, 40_000.0, 1e9] {
+            let b = snap(len);
+            assert!(b >= prev);
+            assert!(BOUNDS.contains(&b));
+            prev = b;
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! The fleet planner — this crate's port of the paper's
+//! `inference-fleet-sim` ([Chen et al., 2026b], Appendix B): pools,
+//! routing topologies, SLO-constrained sizing, and the fleet-level tok/W
+//! aggregation of Eq. (4).
+
+pub mod adaptive;
+pub mod analysis;
+pub mod carbon;
+pub mod disagg;
+pub mod optimizer;
+pub mod pool;
+pub mod profile;
+pub mod topology;
+
+pub use analysis::{fleet_tpw_analysis, FleetReport, PoolReport};
+pub use pool::{LBarPolicy, PoolPlan};
+pub use profile::{ComputedProfile, GpuProfile, ManualProfile, PowerAccounting};
+pub use topology::Topology;

@@ -1,0 +1,152 @@
+//! Pool plans: one serving pool = a GPU/model binding (profile) plus a
+//! context-window configuration and the slice of traffic routed to it.
+
+use std::sync::Arc;
+
+use super::profile::GpuProfile;
+use crate::queueing::sizing::SizingInputs;
+use crate::workload::WorkloadTrace;
+
+/// How the mean KV length L̄ fed into the roofline is chosen.
+///
+/// * `Window` — L̄ equals the pool's serving context window. Conservative
+///   full-occupancy bound; verifiably what the paper's Tables 1 and 4 use,
+///   and the default for all headline tables.
+/// * `TrafficMean` — L̄ is the conditional mean total length of the
+///   traffic routed to the pool (prompt + half the output, the mean KV
+///   footprint over a request's decode lifetime). More optimistic;
+///   exposed as an ablation (`--lbar traffic`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LBarPolicy {
+    #[default]
+    Window,
+    TrafficMean,
+}
+
+/// One pool, fully specified for sizing and Eq. (4) accounting.
+#[derive(Clone)]
+pub struct PoolPlan {
+    pub name: String,
+    pub profile: Arc<dyn GpuProfile>,
+    pub inputs: SizingInputs,
+}
+
+impl std::fmt::Debug for PoolPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolPlan")
+            .field("name", &self.name)
+            .field("profile", &self.profile.label())
+            .field("inputs", &self.inputs)
+            .finish()
+    }
+}
+
+impl PoolPlan {
+    /// Build a pool serving the trace's requests with prompt length in
+    /// `(lo, hi]` at total fleet arrival rate `lambda_rps`.
+    ///
+    /// `effective_ctx` is the window the pool is *configured* for (after
+    /// any FleetOpt compression), `compression` the FleetOpt γ applied to
+    /// this pool's KV (1.0 = none).
+    #[allow(clippy::too_many_arguments)]
+    pub fn for_slice(
+        name: impl Into<String>,
+        profile: Arc<dyn GpuProfile>,
+        trace: &WorkloadTrace,
+        lambda_rps: f64,
+        lo: f64,
+        hi: f64,
+        effective_ctx: u32,
+        compression: f64,
+        lbar: LBarPolicy,
+        rho: f64,
+        ttft_slo_s: f64,
+    ) -> Self {
+        let frac = trace.prompt_cdf.frac_leq(hi) - trace.prompt_cdf.frac_leq(lo);
+        let mean_prompt = if frac > 1e-9 {
+            trace.prompt_cdf.conditional_mean(lo, hi)
+        } else {
+            0.0
+        };
+        let l_bar = match lbar {
+            LBarPolicy::Window => effective_ctx as f64,
+            LBarPolicy::TrafficMean => {
+                // Mean KV footprint over decode: prompt + output/2, then
+                // FleetOpt compression, clamped into the window.
+                ((mean_prompt + trace.mean_output_tokens / 2.0) / compression)
+                    .min(effective_ctx as f64)
+                    .max(1.0)
+            }
+        };
+        PoolPlan {
+            name: name.into(),
+            profile,
+            inputs: SizingInputs {
+                lambda_rps: lambda_rps * frac,
+                mean_output_tokens: trace.mean_output_tokens,
+                mean_prompt_tokens: (mean_prompt / compression).max(1.0),
+                context_tokens: effective_ctx,
+                l_bar,
+                rho,
+                ttft_slo_s,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::profile::ManualProfile;
+    use crate::workload::cdf::azure_conversations;
+
+    fn h100() -> Arc<dyn GpuProfile> {
+        Arc::new(ManualProfile::h100_70b())
+    }
+
+    #[test]
+    fn slice_traffic_fractions_sum_to_total() {
+        let t = azure_conversations();
+        let short = PoolPlan::for_slice(
+            "short", h100(), &t, 1000.0, 0.0, 4096.0, 4096, 1.0,
+            LBarPolicy::Window, 0.85, 0.5);
+        let long = PoolPlan::for_slice(
+            "long", h100(), &t, 1000.0, 4096.0, f64::INFINITY, 65_536, 1.0,
+            LBarPolicy::Window, 0.85, 0.5);
+        let sum = short.inputs.lambda_rps + long.inputs.lambda_rps;
+        assert!((sum - 1000.0).abs() < 1e-6, "λ split sums to λ: {sum}");
+        assert!((short.inputs.lambda_rps - 890.0).abs() < 5.0, "89% short");
+    }
+
+    #[test]
+    fn window_policy_uses_window() {
+        let t = azure_conversations();
+        let p = PoolPlan::for_slice(
+            "x", h100(), &t, 100.0, 0.0, 4096.0, 4096, 1.0,
+            LBarPolicy::Window, 0.85, 0.5);
+        assert_eq!(p.inputs.l_bar, 4096.0);
+    }
+
+    #[test]
+    fn traffic_mean_policy_is_below_window_for_short_slices() {
+        let t = azure_conversations();
+        let p = PoolPlan::for_slice(
+            "x", h100(), &t, 100.0, 0.0, 4096.0, 4096, 1.0,
+            LBarPolicy::TrafficMean, 0.85, 0.5);
+        assert!(p.inputs.l_bar < 4096.0);
+        assert!(p.inputs.l_bar > 100.0);
+    }
+
+    #[test]
+    fn compression_shrinks_lbar_and_prompt() {
+        let t = azure_conversations();
+        let raw = PoolPlan::for_slice(
+            "x", h100(), &t, 100.0, 4096.0, f64::INFINITY, 65_536, 1.0,
+            LBarPolicy::TrafficMean, 0.85, 0.5);
+        let comp = PoolPlan::for_slice(
+            "x", h100(), &t, 100.0, 4096.0, f64::INFINITY, 32_768, 2.0,
+            LBarPolicy::TrafficMean, 0.85, 0.5);
+        assert!(comp.inputs.l_bar < raw.inputs.l_bar);
+        assert!(comp.inputs.mean_prompt_tokens < raw.inputs.mean_prompt_tokens);
+    }
+}

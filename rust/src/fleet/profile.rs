@@ -1,0 +1,322 @@
+//! `GpuProfile` — the paper's Appendix-B protocol: "the API accepts any
+//! object satisfying the GpuProfile protocol (ManualProfile or
+//! ComputedProfile), which is what makes it straightforward to compare the
+//! measured H100 profile against B200 or GB200 projections on equal
+//! footing."
+//!
+//! * [`ManualProfile`] — empirically calibrated numbers (the paper's HIGH
+//!   quality H100 fleet profile: κ=55 KB/tok TP-sharded incl. overhead,
+//!   n_max=128 @8K, W=6.72 ms, H0=0.1387 ms), plus proportional scalings
+//!   of it (the B200 fleet profile = H100 × 2.62 KV budget).
+//! * [`ComputedProfile`] — first-principles from the GPU + model catalogs
+//!   (the paper's Tables 2 and 5 convention: replicated KV).
+
+use crate::model::spec::{ModelSpec, Precision};
+use crate::model::{kappa_bytes_per_token, kv_budget_bytes, KvPlacement};
+use crate::power::profiles::{B200, H100};
+use crate::power::{GpuSpec, Quality};
+use crate::roofline::Roofline;
+
+/// Power-accounting convention for tok/W denominators.
+///
+/// The paper consistently divides TP-group throughput by a *single GPU's*
+/// power (verified against Tables 1/3/4: e.g. 64K → 653 tok/s ÷ 435 W =
+/// 1.50 tok/W; Table 3's 58.3 kW ÷ 141 "GPUs" = 413 W = P(14)). `PerGpu`
+/// reproduces that convention; `PerGroup` charges all TP ranks and is the
+/// physically complete bill (documented deviation — DESIGN.md §4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PowerAccounting {
+    #[default]
+    PerGpu,
+    PerGroup,
+}
+
+/// The protocol every profile satisfies (paper Appendix B).
+pub trait GpuProfile: Send + Sync {
+    /// Human-readable binding, e.g. `"Llama-3.1-70B @ H100-SXM5 TP8"`.
+    fn label(&self) -> String;
+
+    /// The GPU SKU (power curve, quality tag, cost).
+    fn gpu(&self) -> &'static GpuSpec;
+
+    /// Tensor-parallel group size.
+    fn tp(&self) -> u32;
+
+    /// Eq. (3) concurrency limit at a serving context window.
+    fn n_max(&self, context_tokens: u32) -> u32;
+
+    /// The decode roofline (W, H0).
+    fn roofline(&self) -> Roofline;
+
+    /// Logistic power at mean in-flight batch `n_active`, per GPU, watts.
+    fn power_w(&self, n_active: f64) -> f64 {
+        self.gpu().power.power_w(n_active)
+    }
+
+    /// Power denominator per TP group under `acct`, watts.
+    fn group_power_w(&self, n_active: f64, acct: PowerAccounting) -> f64 {
+        match acct {
+            PowerAccounting::PerGpu => self.power_w(n_active),
+            PowerAccounting::PerGroup => self.power_w(n_active) * self.tp() as f64,
+        }
+    }
+
+    fn quality(&self) -> Quality {
+        self.gpu().quality
+    }
+}
+
+/// Empirically calibrated profile: explicit (W, H0, n_max@calib).
+#[derive(Debug, Clone)]
+pub struct ManualProfile {
+    pub name: String,
+    pub gpu: &'static GpuSpec,
+    pub tp: u32,
+    pub roofline: Roofline,
+    /// Calibrated concurrency limit at `ctx_calib`.
+    pub n_max_calib: f64,
+    pub ctx_calib: u32,
+}
+
+impl ManualProfile {
+    /// The paper's HIGH-quality H100 fleet profile for Llama-3.1-70B TP=8:
+    /// κ≈55 KB/tok (TP-sharded, incl. allocator overhead), 60 GB KV budget
+    /// → n_max = 128 @8K; W = 6.72 ms; H0 = 0.1387 ms. Closes Table 1.
+    pub fn h100_70b() -> Self {
+        ManualProfile {
+            name: "Llama-3.1-70B @ H100-SXM5 TP8 (calibrated)".into(),
+            gpu: &H100,
+            tp: 8,
+            roofline: Roofline::manual(6.72, 0.1387),
+            n_max_calib: 128.0,
+            ctx_calib: 8192,
+        }
+    }
+
+    /// The paper's FAIR B200 fleet profile: H100 scaled by the 2.62× KV
+    /// budget ratio; W = 2.95 ms; H0 from the Table 1 B200 column.
+    pub fn b200_70b() -> Self {
+        ManualProfile {
+            name: "Llama-3.1-70B @ B200-SXM TP8 (projected)".into(),
+            gpu: &B200,
+            tp: 8,
+            roofline: Roofline::manual(2.95, 0.0670),
+            n_max_calib: 128.0 * 2.62,
+            ctx_calib: 8192,
+        }
+    }
+
+    /// H200 fleet profile, scaled like B200: KV budget ratio
+    /// (141·0.969 − 17.5)/60.1 ≈ 1.98; W = 6.72·(3.35/4.8) ≈ 4.69 ms;
+    /// H0 scales with the same bandwidth ratio.
+    pub fn h200_70b() -> Self {
+        use crate::power::profiles::H200;
+        let bw_ratio = 3.35 / 4.8;
+        ManualProfile {
+            name: "Llama-3.1-70B @ H200-SXM TP8 (projected)".into(),
+            gpu: &H200,
+            tp: 8,
+            roofline: Roofline::manual(6.72 * bw_ratio, 0.1387 * bw_ratio),
+            n_max_calib: 128.0 * 1.98,
+            ctx_calib: 8192,
+        }
+    }
+
+    /// GB200 fleet profile: B200 silicon (same W/H0) with the larger
+    /// 200 GB memory → KV ratio ≈ 2.94, but a 1200 W TDP power curve.
+    pub fn gb200_70b() -> Self {
+        use crate::power::profiles::GB200;
+        ManualProfile {
+            name: "Llama-3.1-70B @ GB200-NVL TP8 (projected)".into(),
+            gpu: &GB200,
+            tp: 8,
+            roofline: Roofline::manual(2.95, 0.0670),
+            n_max_calib: 128.0 * 2.94,
+            ctx_calib: 8192,
+        }
+    }
+
+    /// Fleet profile catalog by GPU generation.
+    pub fn for_gpu(gpu: crate::power::Gpu) -> Self {
+        use crate::power::Gpu;
+        match gpu {
+            Gpu::H100 => Self::h100_70b(),
+            Gpu::H200 => Self::h200_70b(),
+            Gpu::B200 => Self::b200_70b(),
+            Gpu::GB200 => Self::gb200_70b(),
+        }
+    }
+}
+
+impl GpuProfile for ManualProfile {
+    fn label(&self) -> String {
+        self.name.clone()
+    }
+    fn gpu(&self) -> &'static GpuSpec {
+        self.gpu
+    }
+    fn tp(&self) -> u32 {
+        self.tp
+    }
+    fn n_max(&self, context_tokens: u32) -> u32 {
+        // n_max ∝ 1/W with the calibrated anchor (Eq. 3 in ratio form).
+        let n = self.n_max_calib * self.ctx_calib as f64 / context_tokens as f64;
+        (n.floor() as u32).max(1)
+    }
+    fn roofline(&self) -> Roofline {
+        self.roofline
+    }
+}
+
+/// First-principles profile from the catalogs (paper's ComputedProfile).
+#[derive(Debug, Clone)]
+pub struct ComputedProfile {
+    pub gpu: &'static GpuSpec,
+    pub model: &'static ModelSpec,
+    pub precision: Precision,
+    pub tp: u32,
+    pub placement: KvPlacement,
+    /// Optional MoE dispatch overhead, ms (0 = the paper's upper bound).
+    pub dispatch_ms: f64,
+}
+
+impl ComputedProfile {
+    pub fn new(
+        gpu: &'static GpuSpec,
+        model: &'static ModelSpec,
+        tp: u32,
+        placement: KvPlacement,
+    ) -> Self {
+        ComputedProfile {
+            gpu,
+            model,
+            precision: model.default_precision,
+            tp,
+            placement,
+            dispatch_ms: 0.0,
+        }
+    }
+
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    pub fn with_dispatch_ms(mut self, d: f64) -> Self {
+        self.dispatch_ms = d;
+        self
+    }
+
+    pub fn kappa(&self) -> f64 {
+        kappa_bytes_per_token(self.model, self.placement, self.tp)
+    }
+
+    pub fn kv_budget(&self) -> f64 {
+        kv_budget_bytes(self.gpu, self.model, self.precision, self.tp)
+    }
+
+    /// Whether the model's weights fit at all (405B/H100 fails).
+    pub fn weights_fit(&self) -> bool {
+        self.model.weight_bytes_per_gpu(self.precision, self.tp)
+            <= self.gpu.vram_usable().0 as f64
+    }
+}
+
+impl GpuProfile for ComputedProfile {
+    fn label(&self) -> String {
+        format!(
+            "{} @ {} TP{} {}",
+            self.model.name,
+            self.gpu.name,
+            self.tp,
+            self.precision.label()
+        )
+    }
+    fn gpu(&self) -> &'static GpuSpec {
+        self.gpu
+    }
+    fn tp(&self) -> u32 {
+        self.tp
+    }
+    fn n_max(&self, context_tokens: u32) -> u32 {
+        crate::model::n_max(self.kv_budget(), self.kappa(), context_tokens)
+    }
+    fn roofline(&self) -> Roofline {
+        Roofline::from_specs(
+            self.gpu,
+            self.model,
+            self.precision,
+            self.tp,
+            self.placement,
+        )
+        .with_dispatch_ms(self.dispatch_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::{LLAMA31_405B, LLAMA31_70B, LLAMA31_8B};
+
+    #[test]
+    fn manual_h100_reproduces_table1_nmax_column() {
+        let p = ManualProfile::h100_70b();
+        for (ctx, want) in [
+            (2048u32, 512u32),
+            (4096, 256),
+            (8192, 128),
+            (16384, 64),
+            (32768, 32),
+            (65536, 16),
+            (131072, 8),
+        ] {
+            assert_eq!(p.n_max(ctx), want, "ctx = {ctx}");
+        }
+    }
+
+    #[test]
+    fn manual_b200_reproduces_table1_nmax_column() {
+        let p = ManualProfile::b200_70b();
+        for (ctx, want_lo, want_hi) in [
+            (2048u32, 1337u32, 1343u32),
+            (4096, 668, 671),
+            (8192, 334, 336),
+            (16384, 166, 168),
+            (32768, 83, 84),
+            (65536, 41, 42),
+            (131072, 20, 21),
+        ] {
+            let n = p.n_max(ctx);
+            assert!(
+                (want_lo..=want_hi).contains(&n),
+                "ctx {ctx}: n_max = {n}, want [{want_lo}, {want_hi}]"
+            );
+        }
+    }
+
+    #[test]
+    fn computed_profile_labels_and_fit() {
+        let p = ComputedProfile::new(&H100, &LLAMA31_70B, 8, KvPlacement::Replicated);
+        assert!(p.label().contains("70B") && p.label().contains("H100"));
+        assert!(p.weights_fit());
+        let p405 =
+            ComputedProfile::new(&H100, &LLAMA31_405B, 8, KvPlacement::Replicated);
+        assert!(!p405.weights_fit(), "405B fp16 TP8 does not fit on H100");
+        assert_eq!(p405.n_max(8192), 1);
+    }
+
+    #[test]
+    fn per_group_power_is_tp_times_per_gpu() {
+        let p = ManualProfile::h100_70b();
+        let g = p.group_power_w(14.0, PowerAccounting::PerGroup);
+        let s = p.group_power_w(14.0, PowerAccounting::PerGpu);
+        assert!((g / s - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn computed_8b_tp1_matches_table2_nmax() {
+        let p = ComputedProfile::new(&H100, &LLAMA31_8B, 1, KvPlacement::Replicated);
+        let n = p.n_max(8192);
+        assert!((57..=58).contains(&n), "n_max = {n}");
+    }
+}

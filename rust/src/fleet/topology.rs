@@ -1,0 +1,240 @@
+//! Routing topologies (paper §4/§5): homogeneous, two-pool context
+//! routing, FleetOpt (two-pool + compress-and-route overflow factor γ),
+//! and semantic routing (small model for short traffic).
+//!
+//! A topology turns (workload trace, total λ, GPU profile) into the pool
+//! plans that [`fleet_tpw_analysis`](super::analysis::fleet_tpw_analysis)
+//! sizes and accounts.
+
+use std::sync::Arc;
+
+use super::pool::{LBarPolicy, PoolPlan};
+use super::profile::GpuProfile;
+use crate::workload::WorkloadTrace;
+
+/// Default long-pool serving window (the paper's homogeneous baseline).
+pub const LONG_CTX: u32 = 65_536;
+
+/// A fleet routing topology.
+#[derive(Debug, Clone)]
+pub enum Topology {
+    /// Every GPU serves the full context window (paper's "Homo 64K").
+    Homogeneous { ctx: u32 },
+    /// Two pools split at `b_short`: short pool at a small window, long
+    /// pool at `LONG_CTX` (paper's "Pool routing").
+    PoolRouting { b_short: u32, short_ctx: u32 },
+    /// FleetOpt [Chen et al. 2026a]: two-pool routing plus
+    /// compress-and-route on the long pool — long-pool KV is compressed by
+    /// γ, so the pool behaves as if its window were `LONG_CTX / γ`.
+    FleetOpt { b_short: u32, short_ctx: u32, gamma: f64 },
+    /// Semantic routing (§5.1): short/simple traffic to a *small model*
+    /// pool at `short_ctx`; the rest to the large model at `LONG_CTX`.
+    Semantic { b_short: u32, short_ctx: u32 },
+}
+
+impl Topology {
+    pub fn label(&self) -> String {
+        match self {
+            Topology::Homogeneous { ctx } => format!("Homo {}K", ctx / 1024),
+            Topology::PoolRouting { b_short, .. } => {
+                format!("Pool routing ({}K split)", b_short / 1024)
+            }
+            Topology::FleetOpt { b_short, gamma, .. } => {
+                format!("FleetOpt ({}K/γ={gamma})", b_short / 1024)
+            }
+            Topology::Semantic { b_short, .. } => {
+                format!("Semantic ({}K split)", b_short / 1024)
+            }
+        }
+    }
+
+    /// Build pool plans. `profile` serves every pool except the semantic
+    /// short pool, which uses `small_profile` (ignored otherwise).
+    pub fn pools(
+        &self,
+        trace: &WorkloadTrace,
+        lambda_rps: f64,
+        profile: Arc<dyn GpuProfile>,
+        small_profile: Option<Arc<dyn GpuProfile>>,
+        lbar: LBarPolicy,
+        rho: f64,
+        ttft_slo_s: f64,
+    ) -> Vec<PoolPlan> {
+        let max_len = trace.prompt_cdf.max_tokens();
+        match *self {
+            Topology::Homogeneous { ctx } => vec![PoolPlan::for_slice(
+                format!("homo-{}k", ctx / 1024),
+                profile,
+                trace,
+                lambda_rps,
+                0.0,
+                max_len,
+                ctx,
+                1.0,
+                lbar,
+                rho,
+                ttft_slo_s,
+            )],
+            Topology::PoolRouting { b_short, short_ctx } => vec![
+                PoolPlan::for_slice(
+                    format!("short-{}k", short_ctx / 1024),
+                    profile.clone(),
+                    trace,
+                    lambda_rps,
+                    0.0,
+                    b_short as f64,
+                    short_ctx,
+                    1.0,
+                    lbar,
+                    rho,
+                    ttft_slo_s,
+                ),
+                PoolPlan::for_slice(
+                    "long-64k",
+                    profile,
+                    trace,
+                    lambda_rps,
+                    b_short as f64,
+                    max_len,
+                    LONG_CTX,
+                    1.0,
+                    lbar,
+                    rho,
+                    ttft_slo_s,
+                ),
+            ],
+            Topology::FleetOpt { b_short, short_ctx, gamma } => {
+                assert!(gamma >= 1.0, "γ must be >= 1");
+                let eff_ctx = ((LONG_CTX as f64 / gamma).round() as u32).max(short_ctx);
+                vec![
+                    PoolPlan::for_slice(
+                        format!("short-{}k", short_ctx / 1024),
+                        profile.clone(),
+                        trace,
+                        lambda_rps,
+                        0.0,
+                        b_short as f64,
+                        short_ctx,
+                        1.0,
+                        lbar,
+                        rho,
+                        ttft_slo_s,
+                    ),
+                    PoolPlan::for_slice(
+                        format!("long-64k/γ{gamma}"),
+                        profile,
+                        trace,
+                        lambda_rps,
+                        b_short as f64,
+                        max_len,
+                        eff_ctx,
+                        gamma,
+                        lbar,
+                        rho,
+                        ttft_slo_s,
+                    ),
+                ]
+            }
+            Topology::Semantic { b_short, short_ctx } => {
+                let small = small_profile
+                    .expect("Semantic topology needs a small-model profile");
+                vec![
+                    PoolPlan::for_slice(
+                        format!("semantic-small-{}k", short_ctx / 1024),
+                        small,
+                        trace,
+                        lambda_rps,
+                        0.0,
+                        b_short as f64,
+                        short_ctx,
+                        1.0,
+                        lbar,
+                        rho,
+                        ttft_slo_s,
+                    ),
+                    PoolPlan::for_slice(
+                        "semantic-large-64k",
+                        profile,
+                        trace,
+                        lambda_rps,
+                        b_short as f64,
+                        max_len,
+                        LONG_CTX,
+                        1.0,
+                        lbar,
+                        rho,
+                        ttft_slo_s,
+                    ),
+                ]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::profile::ManualProfile;
+    use crate::workload::cdf::azure_conversations;
+
+    fn h100() -> Arc<dyn GpuProfile> {
+        Arc::new(ManualProfile::h100_70b())
+    }
+
+    #[test]
+    fn homo_is_one_pool_with_all_traffic() {
+        let pools = Topology::Homogeneous { ctx: LONG_CTX }.pools(
+            &azure_conversations(), 1000.0, h100(), None,
+            LBarPolicy::Window, 0.85, 0.5);
+        assert_eq!(pools.len(), 1);
+        assert!((pools[0].inputs.lambda_rps - 1000.0).abs() < 1e-6);
+        assert_eq!(pools[0].inputs.context_tokens, LONG_CTX);
+    }
+
+    #[test]
+    fn two_pool_split_conserves_traffic() {
+        let pools = Topology::PoolRouting { b_short: 4096, short_ctx: 4096 }
+            .pools(&azure_conversations(), 1000.0, h100(), None,
+                   LBarPolicy::Window, 0.85, 0.5);
+        assert_eq!(pools.len(), 2);
+        let total: f64 = pools.iter().map(|p| p.inputs.lambda_rps).sum();
+        assert!((total - 1000.0).abs() < 1e-6);
+        assert!(pools[0].inputs.lambda_rps > pools[1].inputs.lambda_rps);
+    }
+
+    #[test]
+    fn fleetopt_gamma_halves_effective_window() {
+        let pools = Topology::FleetOpt { b_short: 4096, short_ctx: 4096, gamma: 2.0 }
+            .pools(&azure_conversations(), 1000.0, h100(), None,
+                   LBarPolicy::Window, 0.85, 0.5);
+        assert_eq!(pools[1].inputs.context_tokens, LONG_CTX / 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "γ must be >= 1")]
+    fn fleetopt_rejects_gamma_below_one() {
+        Topology::FleetOpt { b_short: 4096, short_ctx: 4096, gamma: 0.5 }
+            .pools(&azure_conversations(), 1000.0, h100(), None,
+                   LBarPolicy::Window, 0.85, 0.5);
+    }
+
+    #[test]
+    fn semantic_uses_small_profile_for_short_pool() {
+        let small: Arc<dyn GpuProfile> = Arc::new(ManualProfile {
+            name: "small".into(),
+            ..ManualProfile::h100_70b()
+        });
+        let pools = Topology::Semantic { b_short: 8192, short_ctx: 8192 }
+            .pools(&azure_conversations(), 1000.0, h100(), Some(small),
+                   LBarPolicy::Window, 0.85, 0.5);
+        assert_eq!(pools[0].profile.label(), "small");
+    }
+
+    #[test]
+    fn labels_are_informative() {
+        assert!(Topology::Homogeneous { ctx: LONG_CTX }.label().contains("64K"));
+        assert!(Topology::FleetOpt { b_short: 4096, short_ctx: 4096, gamma: 2.0 }
+            .label()
+            .contains("γ=2"));
+    }
+}

@@ -1,0 +1,49 @@
+//! # wattlaw — The 1/W Law, as a deployable serving stack
+//!
+//! Reproduction of *"The 1/W Law: An Analytical Study of Context-Length
+//! Routing Topology and GPU Generation Gains for LLM Inference Energy
+//! Efficiency"* (CS.DC 2026) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordination contribution: context-length
+//!   request routing ([`router`]), continuous batching and paged KV
+//!   management ([`serve`]), the analytical fleet planner ([`fleet`],
+//!   mirroring the paper's `inference-fleet-sim` API), a discrete-event
+//!   fleet simulator ([`sim`]), and per-GPU energy metering driven by the
+//!   calibrated logistic power model ([`power`]).
+//! * **L2/L1 (build-time Python)** — a tiny Llama-style decoder whose
+//!   decode attention is a Pallas kernel, AOT-lowered to HLO text and
+//!   executed from Rust through PJRT ([`runtime`]). Python never runs on
+//!   the request path.
+//!
+//! The paper's headline claims, all regenerable via [`tables`] /
+//! `wattlaw tables --all`:
+//!
+//! 1. **1/W law** — tokens-per-watt halves per context-window doubling
+//!    ([`tokeconomy::law`]).
+//! 2. **Topology × generation independence** — FleetOpt two-pool routing
+//!    and an H100→B200 upgrade are orthogonal, multiplicative levers
+//!    ([`tables::independence`]).
+//! 3. **MoE architecture lever** — active-parameter weight streaming
+//!    ([`roofline::moe`]).
+
+pub mod benchkit;
+pub mod cli;
+pub mod fleet;
+pub mod model;
+pub mod power;
+pub mod queueing;
+pub mod report;
+pub mod roofline;
+pub mod router;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod tables;
+pub mod tokeconomy;
+pub mod units;
+pub mod workload;
+pub mod xcheck;
+pub mod xrand;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

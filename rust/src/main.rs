@@ -1,0 +1,16 @@
+//! `wattlaw` — leader entrypoint.
+//!
+//! See `wattlaw help` (or [`wattlaw::cli`]) for commands. The analytic
+//! commands run standalone; `serve`/`validate` need `make artifacts`
+//! (build-time Python; never on the request path).
+
+fn main() {
+    let code = match wattlaw::cli::run(std::env::args().skip(1)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}

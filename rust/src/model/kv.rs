@@ -1,0 +1,191 @@
+//! KV-cache geometry: κ (bytes per token per GPU) and the concurrency
+//! limit `n_max` — paper Eq. (3):
+//!
+//! ```text
+//! n_max(W) = floor( V_KV / (κ · W) )
+//! ```
+//!
+//! This is the mechanism behind the 1/W law: doubling the serving context
+//! window `W` halves `n_max` while the power draw at saturation barely
+//! moves.
+//!
+//! The paper uses two κ conventions and we implement both:
+//!
+//! * [`KvPlacement::Sharded`] — tensor-parallel sharding of GQA KV heads:
+//!   each GPU stores `max(n_kv / TP, 1)` heads. With Llama-3.1-70B's 8 KV
+//!   heads at TP=8 that is one head per GPU. The paper's empirically
+//!   calibrated H100 profile corresponds to κ ≈ 55 KB/token *including
+//!   allocator overheads* — the pure-geometry value is 40 KB/token, so the
+//!   calibrated fleet profile carries an explicit overhead factor.
+//! * [`KvPlacement::Replicated`] — every GPU stores all KV heads (the
+//!   paper's ComputedProfile used in Tables 2 and 5): κ counts the full
+//!   `2 · bytes · layers · n_kv · head_dim`.
+
+use super::spec::{ModelSpec, Precision};
+use crate::power::GpuSpec;
+
+/// How the KV cache is distributed across a TP group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KvPlacement {
+    /// TP-sharded GQA KV heads: `ceil(n_kv / tp)` heads per GPU (vLLM
+    /// default for GQA models; the paper's fleet assumption).
+    Sharded,
+    /// Full KV replica per GPU (the paper's ComputedProfile convention).
+    Replicated,
+}
+
+/// κ — KV-cache bytes per token *per GPU* for `model` under `placement`
+/// at tensor parallelism `tp`.
+pub fn kappa_bytes_per_token(
+    model: &ModelSpec,
+    placement: KvPlacement,
+    tp: u32,
+) -> f64 {
+    if let Some(k) = model.kv_kappa_override {
+        // MLA-style caches: the override is the full-replica value; TP
+        // sharding divides it like any other per-token state.
+        return match placement {
+            KvPlacement::Replicated => k,
+            KvPlacement::Sharded => k / tp as f64,
+        };
+    }
+    let heads_per_gpu = match placement {
+        KvPlacement::Replicated => model.n_kv_heads as f64,
+        KvPlacement::Sharded => {
+            // ceil(n_kv / tp), min 1: models with fewer KV heads than TP
+            // ranks replicate the last head (paper §10.1).
+            ((model.n_kv_heads as f64) / tp as f64).max(1.0).ceil()
+        }
+    };
+    // K and V, each bytes × layers × heads × head_dim.
+    2.0 * model.kv_precision.bytes()
+        * model.n_layers as f64
+        * heads_per_gpu
+        * model.head_dim as f64
+}
+
+/// V_KV — per-GPU VRAM left for KV cache after model weights, in bytes.
+/// Clamped at zero when weights alone exceed usable VRAM (the paper's
+/// 405B-on-H100 "effectively unusable" regime).
+pub fn kv_budget_bytes(
+    gpu: &GpuSpec,
+    model: &ModelSpec,
+    prec: Precision,
+    tp: u32,
+) -> f64 {
+    let usable = gpu.vram_usable().0 as f64;
+    let weights = model.weight_bytes_per_gpu(prec, tp);
+    (usable - weights).max(0.0)
+}
+
+/// Eq. (3): the KV-set concurrency limit for a serving context window of
+/// `context_tokens`. Clamped below at 1 (a GPU can always hold one
+/// sequence by evicting/recomputing — the paper's 405B row reports
+/// n_max = 1 even where weights leave no KV headroom).
+pub fn n_max(v_kv_bytes: f64, kappa: f64, context_tokens: u32) -> u32 {
+    let n = v_kv_bytes / (kappa * context_tokens as f64);
+    (n.floor() as u32).max(1)
+}
+
+/// Convenience: n_max straight from catalog entries.
+pub fn n_max_for(
+    gpu: &GpuSpec,
+    model: &ModelSpec,
+    prec: Precision,
+    tp: u32,
+    placement: KvPlacement,
+    context_tokens: u32,
+) -> u32 {
+    let v = kv_budget_bytes(gpu, model, prec, tp);
+    let k = kappa_bytes_per_token(model, placement, tp);
+    n_max(v, k, context_tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::*;
+    use crate::power::profiles::{B200, H100};
+
+    #[test]
+    fn kappa_70b_sharded_tp8_is_40kb_geometry() {
+        // 2 × 2 B × 80 layers × 1 head × 128 = 40 960 B. The paper's 55 KB
+        // includes allocator overhead (handled by ManualProfile).
+        let k = kappa_bytes_per_token(&LLAMA31_70B, KvPlacement::Sharded, 8);
+        assert_eq!(k, 40_960.0);
+    }
+
+    #[test]
+    fn kappa_70b_replicated_is_320kb() {
+        // Table 2 convention: 2 × 2 × 80 × 8 × 128 = 327 680 B = 320 KiB.
+        let k = kappa_bytes_per_token(&LLAMA31_70B, KvPlacement::Replicated, 8);
+        assert_eq!(k, 327_680.0);
+    }
+
+    #[test]
+    fn kappa_8b_replicated_is_128kib() {
+        let k = kappa_bytes_per_token(&LLAMA31_8B, KvPlacement::Replicated, 1);
+        assert_eq!(k, 131_072.0);
+    }
+
+    #[test]
+    fn sharded_clamps_at_one_head() {
+        // Qwen3 has 4 KV heads; at TP=8 each GPU still stores >= 1 head.
+        let k8 = kappa_bytes_per_token(&QWEN3_235B_A22B, KvPlacement::Sharded, 8);
+        let k4 = kappa_bytes_per_token(&QWEN3_235B_A22B, KvPlacement::Sharded, 4);
+        assert_eq!(k8, k4, "below one head per GPU the shard stops shrinking");
+    }
+
+    #[test]
+    fn table2_n_max_dense_rows() {
+        // Table 2 (ComputedProfile, replicated KV, 8K context):
+        // 8B/H100 TP1 -> 58; 70B/H100 TP8 -> 22; 405B/B200 TP8 -> 17.
+        let n_8b = n_max_for(&H100, &LLAMA31_8B, Precision::Fp16, 1,
+                             KvPlacement::Replicated, 8192);
+        assert!((57..=58).contains(&n_8b), "8B H100: {n_8b}");
+
+        let n_70b = n_max_for(&H100, &LLAMA31_70B, Precision::Fp16, 8,
+                              KvPlacement::Replicated, 8192);
+        assert!((22..=23).contains(&n_70b), "70B H100: {n_70b}");
+
+        let n_405b_h100 = n_max_for(&H100, &LLAMA31_405B, Precision::Fp16, 8,
+                                    KvPlacement::Replicated, 8192);
+        assert_eq!(n_405b_h100, 1, "405B does not fit on H100 at fp16");
+
+        let n_405b_b200 = n_max_for(&B200, &LLAMA31_405B, Precision::Fp16, 8,
+                                    KvPlacement::Replicated, 8192);
+        assert!((16..=18).contains(&n_405b_b200), "405B B200: {n_405b_b200}");
+
+        let n_70b_b200 = n_max_for(&B200, &LLAMA31_70B, Precision::Fp16, 8,
+                                   KvPlacement::Replicated, 8192);
+        assert!((58..=60).contains(&n_70b_b200), "70B B200: {n_70b_b200}");
+    }
+
+    #[test]
+    fn n_max_halves_per_context_doubling() {
+        // The 1/W mechanism at the Eq. (3) level. Sharded κ keeps n_max
+        // large enough that the floor() rounding stays below 5 %.
+        let v = kv_budget_bytes(&H100, &LLAMA31_70B, Precision::Fp16, 8);
+        let k = kappa_bytes_per_token(&LLAMA31_70B, KvPlacement::Sharded, 8);
+        let mut prev = n_max(v, k, 2048);
+        for ctx in [4096u32, 8192, 16384, 32768] {
+            let n = n_max(v, k, ctx);
+            let ratio = prev as f64 / n as f64;
+            assert!((ratio - 2.0).abs() < 0.1, "ctx {ctx}: ratio {ratio}");
+            prev = n;
+        }
+    }
+
+    #[test]
+    fn n_max_never_zero() {
+        assert_eq!(n_max(0.0, 40_960.0, 65_536), 1);
+    }
+
+    #[test]
+    fn fp8_doubles_kv_budget_headroom() {
+        let v16 = kv_budget_bytes(&H100, &LLAMA31_70B, Precision::Fp16, 8);
+        let v8 = kv_budget_bytes(&H100, &LLAMA31_70B, Precision::Fp8, 8);
+        assert!(v8 > v16, "fp8 weights leave more KV room");
+        assert!((v8 - v16 - 8.75e9).abs() < 1e7); // half the 17.5 GB back
+    }
+}

@@ -1,0 +1,10 @@
+//! Model catalog and KV-cache geometry: the `κ` (KV bytes/token) and
+//! `n_max` math of paper Eq. (3), with both KV placements the paper uses
+//! (TP-sharded GQA heads for the calibrated fleet profile; replicated
+//! heads for the ComputedProfile of Tables 2/5).
+
+pub mod kv;
+pub mod spec;
+
+pub use kv::{KvPlacement, n_max, kappa_bytes_per_token, kv_budget_bytes};
+pub use spec::{ModelSpec, Precision};

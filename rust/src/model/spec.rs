@@ -1,0 +1,224 @@
+//! The model catalog — every model the paper evaluates (Table 2), plus the
+//! serving-demo tiny model whose geometry mirrors `python/compile/model.py`.
+
+/// Weight/KV numeric precision (paper §5.2 quantization lever).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp16,
+    Fp8,
+    Int4,
+}
+
+impl Precision {
+    /// Bytes per parameter/element.
+    pub fn bytes(self) -> f64 {
+        match self {
+            Precision::Fp16 => 2.0,
+            Precision::Fp8 => 1.0,
+            Precision::Int4 => 0.5,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Fp16 => "fp16",
+            Precision::Fp8 => "fp8",
+            Precision::Int4 => "int4",
+        }
+    }
+}
+
+/// Architectural description of one model, sufficient for the roofline
+/// (weight bytes), the KV geometry (κ), and the MoE override (§3.2).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Total parameters, billions.
+    pub total_params_b: f64,
+    /// Parameters activated per token, billions (== total for dense).
+    pub active_params_b: f64,
+    pub n_layers: u32,
+    pub n_q_heads: u32,
+    pub n_kv_heads: u32,
+    pub head_dim: u32,
+    /// True for mixture-of-experts models (Table 2 † rows).
+    pub is_moe: bool,
+    /// Default weight precision in the paper's tables.
+    pub default_precision: Precision,
+    /// KV-cache element precision (DeepSeek-V3's MLA stores a compressed
+    /// latent; modeled via `kv_kappa_override`).
+    pub kv_precision: Precision,
+    /// Explicit κ override in bytes/token *per full replica* (all layers,
+    /// all KV heads). Used for MLA-style caches that the GQA formula
+    /// cannot express. `None` → computed from the GQA geometry.
+    pub kv_kappa_override: Option<f64>,
+}
+
+impl ModelSpec {
+    /// Weight bytes for the whole model at `prec`.
+    pub fn weight_bytes(&self, prec: Precision) -> f64 {
+        self.total_params_b * 1e9 * prec.bytes()
+    }
+
+    /// Weight bytes streamed per decode iteration (MoE: active only).
+    pub fn active_weight_bytes(&self, prec: Precision) -> f64 {
+        self.active_params_b * 1e9 * prec.bytes()
+    }
+
+    /// Per-GPU weight bytes under TP sharding.
+    pub fn weight_bytes_per_gpu(&self, prec: Precision, tp: u32) -> f64 {
+        self.weight_bytes(prec) / tp as f64
+    }
+
+    /// Activation ratio (22/235 ≈ 9 % for Qwen3-235B-A22B).
+    pub fn activation_ratio(&self) -> f64 {
+        self.active_params_b / self.total_params_b
+    }
+
+    pub fn parse(name: &str) -> Option<&'static ModelSpec> {
+        let n = name.to_ascii_lowercase();
+        CATALOG
+            .iter()
+            .find(|m| m.name.to_ascii_lowercase().contains(&n))
+            .copied()
+    }
+}
+
+/// Llama-3.1-8B (dense).
+pub static LLAMA31_8B: ModelSpec = ModelSpec {
+    name: "Llama-3.1-8B",
+    total_params_b: 8.0,
+    active_params_b: 8.0,
+    n_layers: 32,
+    n_q_heads: 32,
+    n_kv_heads: 8,
+    head_dim: 128,
+    is_moe: false,
+    default_precision: Precision::Fp16,
+    kv_precision: Precision::Fp16,
+    kv_kappa_override: None,
+};
+
+/// Llama-3.1-70B (dense) — the paper's workhorse.
+pub static LLAMA31_70B: ModelSpec = ModelSpec {
+    name: "Llama-3.1-70B",
+    total_params_b: 70.0,
+    active_params_b: 70.0,
+    n_layers: 80,
+    n_q_heads: 64,
+    n_kv_heads: 8,
+    head_dim: 128,
+    is_moe: false,
+    default_precision: Precision::Fp16,
+    kv_precision: Precision::Fp16,
+    kv_kappa_override: None,
+};
+
+/// Llama-3.1-405B (dense).
+pub static LLAMA31_405B: ModelSpec = ModelSpec {
+    name: "Llama-3.1-405B",
+    total_params_b: 405.0,
+    active_params_b: 405.0,
+    n_layers: 126,
+    n_q_heads: 128,
+    n_kv_heads: 8,
+    head_dim: 128,
+    is_moe: false,
+    default_precision: Precision::Fp16,
+    kv_precision: Precision::Fp16,
+    kv_kappa_override: None,
+};
+
+/// Qwen3-235B-A22B (MoE; 22B active of 235B total).
+pub static QWEN3_235B_A22B: ModelSpec = ModelSpec {
+    name: "Qwen3-235B-A22B",
+    total_params_b: 235.0,
+    active_params_b: 22.0,
+    n_layers: 94,
+    n_q_heads: 64,
+    n_kv_heads: 4,
+    head_dim: 128,
+    is_moe: true,
+    default_precision: Precision::Fp16,
+    kv_precision: Precision::Fp16,
+    kv_kappa_override: None,
+};
+
+/// DeepSeek-V3 (MoE, fp8; ≈37B active of 671B; MLA compressed KV —
+/// κ override: (512 latent + 64 rope) dims × 61 layers × 1 B ≈ 35 KB/tok).
+pub static DEEPSEEK_V3: ModelSpec = ModelSpec {
+    name: "DeepSeek-V3",
+    total_params_b: 671.0,
+    active_params_b: 37.0,
+    n_layers: 61,
+    n_q_heads: 128,
+    n_kv_heads: 128, // MLA: not GQA — κ comes from the override
+    head_dim: 128,
+    is_moe: true,
+    default_precision: Precision::Fp8,
+    kv_precision: Precision::Fp8,
+    kv_kappa_override: Some(35_136.0), // (512+64) * 61 * 1 B
+};
+
+/// The serving-demo tiny model (mirrors python/compile/model.py ModelConfig;
+/// f32 on CPU PJRT).
+pub static TINY_LLAMA: ModelSpec = ModelSpec {
+    name: "TinyLlama-2.9M",
+    total_params_b: 0.0029,
+    active_params_b: 0.0029,
+    n_layers: 4,
+    n_q_heads: 8,
+    n_kv_heads: 2,
+    head_dim: 32,
+    is_moe: false,
+    default_precision: Precision::Fp16, // analytical default; runtime is f32
+    kv_precision: Precision::Fp16,
+    kv_kappa_override: None,
+};
+
+/// Every model the paper's Table 2 covers.
+pub static CATALOG: [&ModelSpec; 5] = [
+    &LLAMA31_8B,
+    &LLAMA31_70B,
+    &LLAMA31_405B,
+    &QWEN3_235B_A22B,
+    &DEEPSEEK_V3,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_models_activate_everything() {
+        for m in [&LLAMA31_8B, &LLAMA31_70B, &LLAMA31_405B] {
+            assert!(!m.is_moe);
+            assert_eq!(m.activation_ratio(), 1.0);
+        }
+    }
+
+    #[test]
+    fn qwen_activation_ratio_is_nine_percent() {
+        let r = QWEN3_235B_A22B.activation_ratio();
+        assert!((r - 22.0 / 235.0).abs() < 1e-12);
+        assert!((r - 0.094).abs() < 0.002, "paper: ≈9 %");
+    }
+
+    #[test]
+    fn weight_bytes_per_gpu_70b_tp8_fp16_is_17_5_gb() {
+        let b = LLAMA31_70B.weight_bytes_per_gpu(Precision::Fp16, 8);
+        assert!((b / 1e9 - 17.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp8_halves_int4_quarters_weight_bytes() {
+        let w16 = LLAMA31_70B.weight_bytes(Precision::Fp16);
+        assert!((LLAMA31_70B.weight_bytes(Precision::Fp8) / w16 - 0.5).abs() < 1e-12);
+        assert!((LLAMA31_70B.weight_bytes(Precision::Int4) / w16 - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deepseek_kappa_override_present() {
+        assert!(DEEPSEEK_V3.kv_kappa_override.unwrap() > 30_000.0);
+    }
+}

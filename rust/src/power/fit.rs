@@ -1,0 +1,172 @@
+//! Least-squares logistic fit — the calibration step that turns
+//! ML.ENERGY-style `(batch, watts)` samples into a [`LogisticPower`] model
+//! (paper §2.1 / Appendix A).
+//!
+//! Strategy: coarse grid search over `(k, x0)` with closed-form linear
+//! least squares for `(P_idle, P_range)` at each grid point (the model is
+//! linear in those two once the logistic shape is fixed), followed by
+//! Nelder–Mead-style local refinement. No external optimizer crates are
+//! available offline, and the 2-D problem is tiny, so this is both robust
+//! and fast (<1 ms per fit).
+
+use super::logistic::LogisticPower;
+use super::mlenergy::PowerSample;
+
+/// Result of a calibration fit.
+#[derive(Debug, Clone, Copy)]
+pub struct FitResult {
+    pub model: LogisticPower,
+    /// Root-mean-square error, watts.
+    pub rmse_w: f64,
+    /// Maximum relative error across samples.
+    pub max_rel_err: f64,
+}
+
+/// Logistic shape value s(b) = 1 / (1 + e^{-k (log2 b - x0)}).
+#[inline]
+fn shape(b: f64, k: f64, x0: f64) -> f64 {
+    1.0 / (1.0 + (-(k * (b.log2() - x0))).exp())
+}
+
+/// Closed-form least squares for (p_idle, p_range) given fixed (k, x0):
+/// watts ≈ p_idle + p_range * s(b) is linear in the two unknowns.
+fn linear_solve(samples: &[PowerSample], k: f64, x0: f64) -> (f64, f64, f64) {
+    let n = samples.len() as f64;
+    let (mut ss, mut s1, mut sy, mut ssy) = (0.0, 0.0, 0.0, 0.0);
+    for p in samples {
+        let s = shape(p.batch, k, x0);
+        ss += s * s;
+        s1 += s;
+        sy += p.watts;
+        ssy += s * p.watts;
+    }
+    let det = n * ss - s1 * s1;
+    if det.abs() < 1e-12 {
+        return (f64::NAN, f64::NAN, f64::INFINITY);
+    }
+    let p_range = (n * ssy - s1 * sy) / det;
+    let p_idle = (sy - p_range * s1) / n;
+    let mut sse = 0.0;
+    for p in samples {
+        let e = p_idle + p_range * shape(p.batch, k, x0) - p.watts;
+        sse += e * e;
+    }
+    (p_idle, p_range, sse)
+}
+
+/// Fit the logistic power model to measurement samples.
+pub fn fit_logistic(samples: &[PowerSample]) -> FitResult {
+    assert!(samples.len() >= 4, "need >= 4 samples to fit 4 parameters");
+
+    // Coarse grid.
+    let mut best = (f64::INFINITY, 1.0, 4.0, 0.0, 0.0); // (sse, k, x0, idle, range)
+    let mut k = 0.2;
+    while k <= 4.0 {
+        let mut x0 = 0.0;
+        while x0 <= 10.0 {
+            let (pi, pr, sse) = linear_solve(samples, k, x0);
+            if sse < best.0 && pr > 0.0 && pi > 0.0 {
+                best = (sse, k, x0, pi, pr);
+            }
+            x0 += 0.1;
+        }
+        k += 0.05;
+    }
+
+    // Local refinement: coordinate descent with shrinking steps.
+    let (mut sse, mut k, mut x0, mut pi, mut pr) = best;
+    let mut step = 0.05;
+    for _ in 0..60 {
+        let mut improved = false;
+        for (dk, dx) in [(step, 0.0), (-step, 0.0), (0.0, step), (0.0, -step)] {
+            let (npi, npr, nsse) = linear_solve(samples, k + dk, x0 + dx);
+            if nsse < sse && npr > 0.0 && npi > 0.0 {
+                sse = nsse;
+                k += dk;
+                x0 += dx;
+                pi = npi;
+                pr = npr;
+                improved = true;
+            }
+        }
+        if !improved {
+            step *= 0.5;
+            if step < 1e-5 {
+                break;
+            }
+        }
+    }
+
+    let model = LogisticPower::new(pi, pi + pr, k, x0);
+    let rmse = (sse / samples.len() as f64).sqrt();
+    let max_rel = super::mlenergy::max_rel_error(&model, samples);
+    FitResult {
+        model,
+        rmse_w: rmse,
+        max_rel_err: max_rel,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::mlenergy;
+
+    #[test]
+    fn recovers_published_h100_parameters_from_clean_anchors() {
+        let fit = fit_logistic(&mlenergy::h100_anchors());
+        let m = fit.model;
+        assert!((m.k - 1.0).abs() < 0.05, "k = {}", m.k);
+        assert!((m.x0 - 4.2).abs() < 0.1, "x0 = {}", m.x0);
+        assert!((m.p_idle_w - 300.0).abs() < 5.0, "p_idle = {}", m.p_idle_w);
+        assert!((m.p_nom_w - 600.0).abs() < 8.0, "p_nom = {}", m.p_nom_w);
+        assert!(fit.rmse_w < 0.5);
+    }
+
+    #[test]
+    fn fit_error_stays_under_paper_band_with_noise() {
+        // The paper reports <3 % fit error; with 3 % measurement noise the
+        // refit must stay inside ~2x that band.
+        for seed in 0..10 {
+            let samples = mlenergy::h100_measurements(seed, 0.03);
+            let fit = fit_logistic(&samples);
+            assert!(
+                fit.max_rel_err < 0.06,
+                "seed {seed}: max rel err {}",
+                fit.max_rel_err
+            );
+        }
+    }
+
+    #[test]
+    fn fit_is_deterministic() {
+        let s = mlenergy::h100_measurements(1, 0.02);
+        let a = fit_logistic(&s);
+        let b = fit_logistic(&s);
+        assert_eq!(a.model, b.model);
+    }
+
+    #[test]
+    fn recovers_b200_projection_from_its_own_curve() {
+        let truth = LogisticPower::new(430.0, 860.0, 1.0, 6.8);
+        let samples: Vec<_> = [1.0, 4.0, 16.0, 64.0, 128.0, 256.0, 512.0, 1024.0]
+            .iter()
+            .map(|&b| PowerSample {
+                batch: b,
+                watts: truth.power_w(b),
+            })
+            .collect();
+        let fit = fit_logistic(&samples);
+        assert!((fit.model.x0 - 6.8).abs() < 0.15, "x0 = {}", fit.model.x0);
+        assert!((fit.model.p_idle_w - 430.0).abs() < 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "need >= 4 samples")]
+    fn too_few_samples_panics() {
+        fit_logistic(&[
+            PowerSample { batch: 1.0, watts: 300.0 },
+            PowerSample { batch: 2.0, watts: 320.0 },
+        ]);
+    }
+}

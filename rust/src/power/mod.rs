@@ -1,0 +1,12 @@
+//! GPU power modeling: the logistic `P(b)` curve (paper Eq. 1), the GPU
+//! catalog with measurement-quality tags (paper Table 7), the logistic
+//! fitter used to calibrate against ML.ENERGY-style measurements, and the
+//! synthetic measurement set regenerated from the published H100 anchors.
+
+pub mod fit;
+pub mod logistic;
+pub mod mlenergy;
+pub mod profiles;
+
+pub use logistic::LogisticPower;
+pub use profiles::{Gpu, GpuSpec, Quality};

@@ -1,0 +1,251 @@
+//! The GPU catalog — paper Table 7 (Appendix A) plus the hardware
+//! parameters consumed by the roofline (bandwidths, VRAM) and the cost
+//! model (Table 5's $/hr column).
+//!
+//! H100-SXM5 is directly measured (HIGH quality). H200/B200/GB200 power is
+//! projected from TDP fractions validated on H100 (`P_idle = 0.43·TDP`,
+//! `P_nom = 0.86·TDP`) and carries the paper's stated ±15–20 % uncertainty;
+//! every consumer of a FAIR profile inherits the tag so tables can label
+//! projections honestly.
+
+use super::logistic::LogisticPower;
+use crate::units::Bytes;
+
+/// Measurement quality of a power profile (paper's HIGH/FAIR labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Quality {
+    /// Directly measured (ML.ENERGY v3.0 anchors; <3 % fit error).
+    High,
+    /// First-principles projection from TDP fractions; ±15–20 %.
+    Fair,
+}
+
+impl Quality {
+    pub fn label(self) -> &'static str {
+        match self {
+            Quality::High => "HIGH",
+            Quality::Fair => "FAIR",
+        }
+    }
+}
+
+/// GPU generations covered by the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Gpu {
+    H100,
+    H200,
+    B200,
+    GB200,
+}
+
+impl Gpu {
+    pub const ALL: [Gpu; 4] = [Gpu::H100, Gpu::H200, Gpu::B200, Gpu::GB200];
+
+    pub fn spec(self) -> &'static GpuSpec {
+        match self {
+            Gpu::H100 => &H100,
+            Gpu::H200 => &H200,
+            Gpu::B200 => &B200,
+            Gpu::GB200 => &GB200,
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Gpu> {
+        match name.to_ascii_lowercase().as_str() {
+            "h100" | "h100-sxm5" => Some(Gpu::H100),
+            "h200" | "h200-sxm" => Some(Gpu::H200),
+            "b200" | "b200-sxm" => Some(Gpu::B200),
+            "gb200" | "gb200-nvl" => Some(Gpu::GB200),
+            _ => None,
+        }
+    }
+}
+
+/// Full hardware + power description of one GPU SKU.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Thermal design power, watts.
+    pub tdp_w: f64,
+    /// Calibrated/projected logistic power curve.
+    pub power: LogisticPower,
+    /// Peak HBM bandwidth, bytes/second.
+    pub mem_bw_bytes_s: f64,
+    /// Achievable fraction of peak bandwidth for contiguous weight
+    /// streaming (calibrated so H100/70B gives the paper's W = 6.72 ms).
+    pub bw_eff_weights: f64,
+    /// Achievable fraction of peak bandwidth for the KV-cache scan
+    /// (calibrated so H100/70B gives the paper's H0 = 0.1387 ms @8K).
+    pub bw_eff_kv: f64,
+    /// Total HBM capacity.
+    pub vram: Bytes,
+    /// Fraction of VRAM usable for weights+KV after framework overheads
+    /// (calibrated so H100 leaves the paper's 60 GB KV budget under 70B).
+    pub vram_usable_frac: f64,
+    /// Rental cost, $/hr for a TP=8 group (paper Table 5 convention).
+    pub rental_per_hr_tp8: f64,
+    /// Power-measurement quality tag.
+    pub quality: Quality,
+    /// Stated uncertainty on absolute tok/W for this profile, percent.
+    pub uncertainty_pct: f64,
+}
+
+impl GpuSpec {
+    /// Usable VRAM in bytes after framework overheads.
+    pub fn vram_usable(&self) -> Bytes {
+        Bytes((self.vram.0 as f64 * self.vram_usable_frac) as u64)
+    }
+
+    /// Effective weight-streaming bandwidth, bytes/s.
+    pub fn bw_weights(&self) -> f64 {
+        self.mem_bw_bytes_s * self.bw_eff_weights
+    }
+
+    /// Effective KV-scan bandwidth, bytes/s.
+    pub fn bw_kv(&self) -> f64 {
+        self.mem_bw_bytes_s * self.bw_eff_kv
+    }
+}
+
+const TB: f64 = 1e12;
+
+/// H100-SXM5 — HIGH quality (ML.ENERGY v3.0 anchors, G2G logistic fit).
+pub static H100: GpuSpec = GpuSpec {
+    name: "H100-SXM5",
+    tdp_w: 700.0,
+    power: LogisticPower::new(300.0, 600.0, 1.0, 4.2),
+    mem_bw_bytes_s: 3.35 * TB,
+    // 17.5 GB of 70B TP=8 weights in 6.72 ms -> 2.604 TB/s effective.
+    bw_eff_weights: 0.7773,
+    // 55 KB/tok * 8192 in 0.1387 ms -> 3.249 TB/s effective.
+    bw_eff_kv: 0.9698,
+    vram: Bytes(80 * Bytes::GB),
+    vram_usable_frac: 0.969, // leaves 60.0 GB KV budget under 70B TP=8
+    rental_per_hr_tp8: 32.2,
+    quality: Quality::High,
+    uncertainty_pct: 3.0,
+};
+
+/// H200-SXM — FAIR (same TDP class as H100; HBM3e).
+///
+/// `x0` note: no published H200 power-vs-concurrency measurements exist;
+/// we inherit H100's *measured* saturation point (x0 = 4.2) rather than
+/// the paper's Appendix-A 5.5, for the same reason as B200 below — the
+/// published x0 values do not reproduce the paper's own power columns.
+pub static H200: GpuSpec = GpuSpec {
+    name: "H200-SXM",
+    tdp_w: 700.0,
+    power: LogisticPower::new(300.0, 600.0, 1.0, 4.2),
+    mem_bw_bytes_s: 4.8 * TB,
+    bw_eff_weights: 0.7773,
+    bw_eff_kv: 0.9698,
+    vram: Bytes(141 * Bytes::GB),
+    vram_usable_frac: 0.969,
+    rental_per_hr_tp8: 48.0,
+    quality: Quality::Fair,
+    uncertainty_pct: 15.0,
+};
+
+/// B200-SXM — FAIR (TDP-fraction projection: 0.43/0.86 of 1000 W).
+///
+/// `x0` note: the paper's Appendix-A table lists x0 = 6.8 for B200, but
+/// its own Table 1 B200 power column is only reproduced by x0 ≈ 4.45
+/// (every row then lands within 1.5 W). We adopt the value that closes
+/// the calibration table and record the discrepancy in EXPERIMENTS.md.
+pub static B200: GpuSpec = GpuSpec {
+    name: "B200-SXM",
+    tdp_w: 1000.0,
+    power: LogisticPower::new(430.0, 860.0, 1.0, 4.45),
+    mem_bw_bytes_s: 8.0 * TB,
+    // 17.5 GB in 2.95 ms -> 5.93 TB/s effective.
+    bw_eff_weights: 0.7415,
+    // Table 1 implies H0 = 0.0670 ms -> 6.72 TB/s effective.
+    bw_eff_kv: 0.8403,
+    vram: Bytes(180 * Bytes::GB),
+    vram_usable_frac: 0.964, // leaves ~156 GB KV budget under 70B TP=8
+    rental_per_hr_tp8: 64.0,
+    quality: Quality::Fair,
+    uncertainty_pct: 20.0,
+};
+
+/// GB200-NVL — FAIR. Same silicon as B200 but higher per-GPU-equivalent
+/// TDP (shared NVL infrastructure) and slightly more memory.
+pub static GB200: GpuSpec = GpuSpec {
+    name: "GB200-NVL",
+    tdp_w: 1200.0,
+    power: LogisticPower::new(516.0, 1032.0, 1.0, 4.45),
+    mem_bw_bytes_s: 8.0 * TB,
+    bw_eff_weights: 0.7415,
+    bw_eff_kv: 0.8403,
+    vram: Bytes(200 * Bytes::GB),
+    vram_usable_frac: 0.964,
+    rental_per_hr_tp8: 80.0,
+    quality: Quality::Fair,
+    uncertainty_pct: 15.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_is_high_quality_rest_fair() {
+        assert_eq!(Gpu::H100.spec().quality, Quality::High);
+        for g in [Gpu::H200, Gpu::B200, Gpu::GB200] {
+            assert_eq!(g.spec().quality, Quality::Fair);
+        }
+    }
+
+    #[test]
+    fn tdp_fractions_match_paper_appendix() {
+        // P_idle = 0.43 TDP, P_nom = 0.86 TDP for all projected SKUs.
+        for g in [Gpu::B200, Gpu::GB200] {
+            let s = g.spec();
+            assert!((s.power.p_idle_w / s.tdp_w - 0.43).abs() < 1e-9);
+            assert!((s.power.p_nom_w / s.tdp_w - 0.86).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn h100_weight_stream_time_is_paper_w() {
+        // 70B fp16 TP=8 -> 17.5 GB per GPU -> 6.72 ms.
+        let s = Gpu::H100.spec();
+        let w_ms = 17.5e9 / s.bw_weights() * 1e3;
+        assert!((w_ms - 6.72).abs() < 0.01, "W = {w_ms}");
+    }
+
+    #[test]
+    fn b200_weight_stream_time_is_paper_w() {
+        let s = Gpu::B200.spec();
+        let w_ms = 17.5e9 / s.bw_weights() * 1e3;
+        assert!((w_ms - 2.95).abs() < 0.01, "W = {w_ms}");
+    }
+
+    #[test]
+    fn h100_kv_scan_matches_calibration() {
+        // H0 = kappa * L_calib / bw_kv = 55 KB * 8192 / bw -> 0.1387 ms.
+        let s = Gpu::H100.spec();
+        let h0_ms = 55e3 * 8192.0 / s.bw_kv() * 1e3;
+        assert!((h0_ms - 0.1387).abs() < 0.001, "H0 = {h0_ms}");
+    }
+
+    #[test]
+    fn kv_budget_ratio_b200_over_h100_is_2_62() {
+        // 70B TP=8 fp16: 17.5 GB weights per GPU.
+        let w = 17.5e9;
+        let h = Gpu::H100.spec().vram_usable().0 as f64 - w;
+        let b = Gpu::B200.spec().vram_usable().0 as f64 - w;
+        let ratio = b / h;
+        assert!((ratio - 2.62).abs() < 0.03, "ratio = {ratio}");
+        assert!((h / 1e9 - 60.0).abs() < 0.6, "H100 KV budget = {h}");
+        assert!((b / 1e9 - 156.0).abs() < 2.0, "B200 KV budget = {b}");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for g in Gpu::ALL {
+            assert_eq!(Gpu::parse(g.spec().name), Some(g));
+        }
+        assert_eq!(Gpu::parse("nope"), None);
+    }
+}

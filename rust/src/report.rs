@@ -1,0 +1,185 @@
+//! Paper-vs-measured reporting: the machine-generated half of
+//! EXPERIMENTS.md. For every quantitative claim we reproduce, print the
+//! paper's number, ours, and the relative delta.
+
+use crate::fleet::pool::LBarPolicy;
+use crate::tables::render::{f2, Table};
+use crate::tables::{independence, t1, t2};
+use crate::tokeconomy::law;
+
+/// One claim check.
+#[derive(Debug, Clone)]
+pub struct Claim {
+    pub id: &'static str,
+    pub description: &'static str,
+    pub paper: f64,
+    pub ours: f64,
+}
+
+impl Claim {
+    pub fn rel_err(&self) -> f64 {
+        (self.ours - self.paper).abs() / self.paper.abs().max(1e-12)
+    }
+}
+
+/// Evaluate the headline claims.
+pub fn claims() -> Vec<Claim> {
+    let mut out = Vec::new();
+
+    // T1: tok/W anchors.
+    let rows = t1::rows();
+    out.push(Claim {
+        id: "T1/H100@4K",
+        description: "H100 tok/W at 4K context",
+        paper: 17.6,
+        ours: rows[1].h100.tok_per_watt.0,
+    });
+    out.push(Claim {
+        id: "T1/H100@64K",
+        description: "H100 tok/W at 64K context",
+        paper: 1.50,
+        ours: rows[5].h100.tok_per_watt.0,
+    });
+    out.push(Claim {
+        id: "T1/B200@8K",
+        description: "B200 tok/W at 8K context",
+        paper: 15.5,
+        ours: rows[2].b200.tok_per_watt.0,
+    });
+
+    // 1/W law statistics.
+    let fit = law::fit_law(
+        &crate::fleet::profile::ManualProfile::h100_70b(),
+        &law::LAW_CONTEXTS,
+    );
+    out.push(Claim {
+        id: "Law/spread",
+        description: "2K→128K tok/W spread (paper: ≈40×)",
+        paper: 39.8, // 35.0 / 0.88 from the paper's own Table 1
+        ours: fit.spread,
+    });
+    out.push(Claim {
+        id: "Law/slope",
+        description: "log–log slope (paper's data: −0.886)",
+        paper: -0.886,
+        ours: fit.slope,
+    });
+
+    // §3.1 generation-ratio narrowing.
+    let h = crate::fleet::profile::ManualProfile::h100_70b();
+    let b = crate::fleet::profile::ManualProfile::b200_70b();
+    let at = |ctx: u32| {
+        use crate::fleet::profile::PowerAccounting;
+        crate::tokeconomy::operating_point(&b, ctx, 1.0, PowerAccounting::PerGpu)
+            .tok_per_watt
+            .0
+            / crate::tokeconomy::operating_point(&h, ctx, 1.0, PowerAccounting::PerGpu)
+                .tok_per_watt
+                .0
+    };
+    out.push(Claim {
+        id: "Gen/4K",
+        description: "B200/H100 ratio at 4K",
+        paper: 1.75,
+        ours: at(4096),
+    });
+    out.push(Claim {
+        id: "Gen/64K",
+        description: "B200/H100 ratio at 64K (narrows)",
+        paper: 1.49,
+        ours: at(65_536),
+    });
+
+    // §4.2 independence/multiplicativity.
+    let ind = independence::analyze(
+        &crate::workload::cdf::azure_conversations(),
+        LBarPolicy::Window,
+    );
+    out.push(Claim {
+        id: "Ind/topo-stability",
+        description: "Δ_topo(B200)/Δ_topo(H100) (paper: 2.44/2.52 = 0.97)",
+        paper: 0.97,
+        ours: ind.d_topo_b200 / ind.d_topo_h100,
+    });
+    out.push(Claim {
+        id: "Ind/gen-stability",
+        description: "Δ_gen(FleetOpt)/Δ_gen(Homo) (paper: 1.68/1.75 = 0.96)",
+        paper: 0.96,
+        ours: ind.d_gen_opt / ind.d_gen_homo,
+    });
+    out.push(Claim {
+        id: "Ind/multiplicative",
+        description: "combined / (Δ_topo × Δ_gen) (paper: 4.25/4.4 ≈ 0.97)",
+        paper: 0.97,
+        ours: ind.combined / ind.product,
+    });
+
+    // T2 shape: 405B rescue ratio on B200.
+    let t2r = t2::rows();
+    out.push(Claim {
+        id: "T2/405B-rescue",
+        description: "405B B200/H100 tok/W ratio (paper: 24×; regime escape)",
+        paper: 24.0,
+        ours: t2r[2].b200.tok_per_watt.0 / t2r[2].h100.tok_per_watt.0,
+    });
+
+    out
+}
+
+/// Render the claim table (the `wattlaw report` command).
+pub fn paper_vs_measured() -> String {
+    let mut t = Table::new(
+        "Paper vs measured — headline claims",
+        &["claim", "description", "paper", "ours", "rel err"],
+    );
+    for c in claims() {
+        t.row(vec![
+            c.id.to_string(),
+            c.description.to_string(),
+            f2(c.paper),
+            f2(c.ours),
+            format!("{:.1}%", c.rel_err() * 100.0),
+        ]);
+    }
+    t.note("calibrated claims (T1, Gen, Law) must sit within a few percent; \
+            structural claims (Ind/*) within ~15%; T2/405B is a regime-change \
+            ratio where 'large' is the reproduction target");
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_claims_close() {
+        for c in claims() {
+            match c.id {
+                "T1/H100@4K" | "T1/H100@64K" | "T1/B200@8K" => {
+                    assert!(c.rel_err() < 0.03, "{}: {:?}", c.id, c);
+                }
+                "Gen/4K" | "Gen/64K" => {
+                    assert!(c.rel_err() < 0.05, "{}: {:?}", c.id, c);
+                }
+                "Law/spread" | "Law/slope" => {
+                    assert!(c.rel_err() < 0.05, "{}: {:?}", c.id, c);
+                }
+                "Ind/topo-stability" | "Ind/gen-stability"
+                | "Ind/multiplicative" => {
+                    assert!(c.rel_err() < 0.2, "{}: {:?}", c.id, c);
+                }
+                "T2/405B-rescue" => {
+                    assert!(c.ours > 5.0, "{}: {:?}", c.id, c);
+                }
+                other => panic!("untested claim {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn report_renders() {
+        let s = paper_vs_measured();
+        assert!(s.contains("T1/H100@4K"));
+        assert!(s.contains("rel err"));
+    }
+}

@@ -1,0 +1,205 @@
+//! The decode roofline — paper §2.2:
+//!
+//! ```text
+//! τ(n, L̄) = W + H(L̄) · n          (per-iteration decode latency)
+//! W       = active_weight_bytes_per_gpu / bw_weights
+//! H(L̄)   = H0 · L̄ / L_calib  =  κ · L̄ / bw_kv
+//! ```
+//!
+//! `W` is the weight-streaming time (every decode iteration reads every
+//! activated weight once) and `H(L̄)·n` the KV-scan time (every iteration
+//! reads every in-flight sequence's KV cache once). Decode is
+//! memory-bandwidth-bound (Maliakel et al.: 77–91 % of inference time), so
+//! byte counts over effective bandwidth is the whole model.
+//!
+//! Because `n_max ∝ 1/W` (Eq. 3) and `H ∝ W̄`, the product `H·n_max` is
+//! invariant in the context window — throughput at full concurrency scales
+//! exactly as `1/W` while power stays flat. That invariant *is* the 1/W
+//! law, and is asserted in the tests below.
+
+pub mod moe;
+pub mod quant;
+pub mod speculative;
+
+use crate::model::spec::{ModelSpec, Precision};
+use crate::model::{kappa_bytes_per_token, KvPlacement};
+use crate::power::GpuSpec;
+
+/// Calibration context for `H0` (the paper quotes H at L̄ = 8192).
+pub const L_CALIB: f64 = 8192.0;
+
+/// Decode-latency roofline for one (GPU, model, TP, precision) binding.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    /// Weight-streaming time per iteration, ms.
+    pub w_ms: f64,
+    /// KV-scan time per sequence at `L_CALIB` context, ms.
+    pub h0_ms: f64,
+    /// MoE dispatch overhead added to every iteration, ms (0 for dense;
+    /// the paper treats the MoE W as a lower bound *excluding* dispatch —
+    /// this field makes the bound explicit and sweepable).
+    pub dispatch_ms: f64,
+}
+
+impl Roofline {
+    /// Build from catalog entries. `placement` controls κ for the KV-scan
+    /// term (and must match the κ used for `n_max`).
+    pub fn from_specs(
+        gpu: &GpuSpec,
+        model: &ModelSpec,
+        prec: Precision,
+        tp: u32,
+        placement: KvPlacement,
+    ) -> Self {
+        // MoE: stream only activated weights (paper §3.2 override).
+        let bytes_per_gpu = model.active_weight_bytes(prec) / tp as f64;
+        let w_ms = bytes_per_gpu / gpu.bw_weights() * 1e3;
+        let kappa = kappa_bytes_per_token(model, placement, tp);
+        let h0_ms = kappa * L_CALIB / gpu.bw_kv() * 1e3;
+        Roofline {
+            w_ms,
+            h0_ms,
+            dispatch_ms: 0.0,
+        }
+    }
+
+    /// Explicit calibrated constructor (ManualProfile path).
+    pub const fn manual(w_ms: f64, h0_ms: f64) -> Self {
+        Roofline {
+            w_ms,
+            h0_ms,
+            dispatch_ms: 0.0,
+        }
+    }
+
+    /// Add MoE all-to-all dispatch overhead (paper: "a few to tens of ms").
+    pub fn with_dispatch_ms(mut self, d: f64) -> Self {
+        self.dispatch_ms = d;
+        self
+    }
+
+    /// Per-sequence KV-scan time at mean context `l_bar`, ms.
+    #[inline]
+    pub fn h_ms(&self, l_bar: f64) -> f64 {
+        self.h0_ms * l_bar / L_CALIB
+    }
+
+    /// τ(n, L̄) — per-iteration decode latency, ms.
+    #[inline]
+    pub fn tau_ms(&self, n: f64, l_bar: f64) -> f64 {
+        self.w_ms + self.dispatch_ms + self.h_ms(l_bar) * n
+    }
+
+    /// Decode throughput at concurrency `n` and mean context `l_bar`,
+    /// output tokens/second (each iteration emits one token per sequence).
+    #[inline]
+    pub fn throughput_tok_s(&self, n: f64, l_bar: f64) -> f64 {
+        if n <= 0.0 {
+            return 0.0;
+        }
+        n / self.tau_ms(n, l_bar) * 1e3
+    }
+
+    /// Time to prefill a prompt of `prompt_tokens` at full bandwidth —
+    /// first-order model for the TTFT queueing analysis: one full weight
+    /// stream plus writing the prompt KV (compute overlaps the stream on a
+    /// memory-bound part).
+    pub fn prefill_ms(&self, prompt_tokens: f64) -> f64 {
+        // Prefill is compute-bound but short; model as chunked decode over
+        // the prompt with perfect batching: weights streamed once per
+        // prefill chunk of 1024 tokens, KV grows linearly.
+        let chunks = (prompt_tokens / 1024.0).ceil().max(1.0);
+        chunks * (self.w_ms + self.dispatch_ms)
+            + self.h_ms(prompt_tokens / 2.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::{LLAMA31_70B, QWEN3_235B_A22B};
+    use crate::power::profiles::{B200, H100};
+
+    #[test]
+    fn h100_70b_matches_paper_calibration() {
+        let r = Roofline::from_specs(
+            &H100, &LLAMA31_70B, Precision::Fp16, 8, KvPlacement::Sharded);
+        assert!((r.w_ms - 6.72).abs() < 0.01, "W = {}", r.w_ms);
+        // Geometry κ = 40 KB gives H0 = 0.1033 ms; the calibrated fleet
+        // profile (κ = 55 KB incl. overhead) uses Roofline::manual.
+        assert!((r.h0_ms - 0.1033).abs() < 0.002, "H0 = {}", r.h0_ms);
+    }
+
+    #[test]
+    fn manual_calibration_closes_table1_throughput() {
+        // Table 1 H100 @4K: n_max = 256, tok/W = 17.6 at P = 593 W
+        // -> throughput = 10 436 tok/s.
+        let r = Roofline::manual(6.72, 0.1387);
+        let thpt = r.throughput_tok_s(256.0, 4096.0);
+        assert!((thpt - 10_436.0).abs() / 10_436.0 < 0.01, "thpt = {thpt}");
+    }
+
+    #[test]
+    fn h_times_nmax_invariant_across_context() {
+        // The 1/W mechanism: H(L̄)·n_max is context-invariant.
+        let r = Roofline::manual(6.72, 0.1387);
+        let base = r.h_ms(2048.0) * 512.0;
+        for (ctx, n) in [(4096.0, 256.0), (8192.0, 128.0), (65536.0, 16.0)] {
+            let v = r.h_ms(ctx) * n;
+            assert!((v - base).abs() < 1e-9, "ctx {ctx}: {v} vs {base}");
+        }
+    }
+
+    #[test]
+    fn b200_70b_w_is_2_95ms() {
+        let r = Roofline::from_specs(
+            &B200, &LLAMA31_70B, Precision::Fp16, 8, KvPlacement::Sharded);
+        assert!((r.w_ms - 2.95).abs() < 0.01, "W = {}", r.w_ms);
+    }
+
+    #[test]
+    fn moe_streams_active_params_only() {
+        let dense_equiv_ms = QWEN3_235B_A22B.weight_bytes(Precision::Fp16)
+            / 8.0 / H100.bw_weights() * 1e3;
+        let r = Roofline::from_specs(
+            &H100, &QWEN3_235B_A22B, Precision::Fp16, 8, KvPlacement::Sharded);
+        let ratio = r.w_ms / dense_equiv_ms;
+        assert!((ratio - 22.0 / 235.0).abs() < 1e-9);
+        // Paper: "W ≈ 1.6 ms on H100" using full peak bw; with the
+        // calibrated effective bw we land slightly above.
+        assert!(r.w_ms > 1.5 && r.w_ms < 2.2, "W = {}", r.w_ms);
+    }
+
+    #[test]
+    fn dispatch_overhead_erodes_moe_advantage() {
+        let moe = Roofline::from_specs(
+            &H100, &QWEN3_235B_A22B, Precision::Fp16, 8, KvPlacement::Sharded);
+        let with_dispatch = moe.with_dispatch_ms(10.0);
+        let t0 = moe.throughput_tok_s(24.0, 8192.0);
+        let t1 = with_dispatch.throughput_tok_s(24.0, 8192.0);
+        assert!(t1 < t0 * 0.5, "10 ms dispatch must cost >2x here");
+    }
+
+    #[test]
+    fn quantization_scales_w_linearly() {
+        let f16 = Roofline::from_specs(
+            &H100, &LLAMA31_70B, Precision::Fp16, 8, KvPlacement::Sharded);
+        let f8 = Roofline::from_specs(
+            &H100, &LLAMA31_70B, Precision::Fp8, 8, KvPlacement::Sharded);
+        assert!((f8.w_ms / f16.w_ms - 0.5).abs() < 1e-9);
+        // Paper §5.2: fp8 gives W ≈ 3.36 ms for H100+70B.
+        assert!((f8.w_ms - 3.36).abs() < 0.01);
+    }
+
+    #[test]
+    fn throughput_zero_at_zero_concurrency() {
+        let r = Roofline::manual(6.72, 0.1387);
+        assert_eq!(r.throughput_tok_s(0.0, 8192.0), 0.0);
+    }
+
+    #[test]
+    fn prefill_grows_with_prompt() {
+        let r = Roofline::manual(6.72, 0.1387);
+        assert!(r.prefill_ms(8192.0) > r.prefill_ms(512.0));
+    }
+}

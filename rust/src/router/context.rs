@@ -1,0 +1,85 @@
+//! Context-length routing: partition traffic by prompt length across K
+//! context-tiered pools (two-pool is the paper's §4/§5 configuration;
+//! K ≥ 3 is the §10.3 extension).
+
+use super::{Route, Router};
+use crate::workload::Request;
+
+/// K-pool context router: `boundaries[i]` is the inclusive upper prompt
+/// length of pool `i`; requests beyond the last boundary go to the final
+/// pool (the long pool).
+#[derive(Debug, Clone)]
+pub struct ContextRouter {
+    boundaries: Vec<u32>,
+}
+
+impl ContextRouter {
+    /// The paper's two-pool split at `b_short`.
+    pub fn two_pool(b_short: u32) -> Self {
+        ContextRouter { boundaries: vec![b_short] }
+    }
+
+    /// K-tier router from sorted boundaries.
+    pub fn tiered(mut boundaries: Vec<u32>) -> Self {
+        assert!(!boundaries.is_empty());
+        boundaries.sort_unstable();
+        boundaries.dedup();
+        ContextRouter { boundaries }
+    }
+}
+
+impl Router for ContextRouter {
+    #[inline]
+    fn route(&self, req: &Request) -> Route {
+        // Binary search keeps K-tier routing O(log K); for the common
+        // two-pool case this compiles to one compare.
+        let pool = self
+            .boundaries
+            .partition_point(|&b| req.prompt_tokens > b);
+        Route { pool, effective_prompt_tokens: req.prompt_tokens }
+    }
+
+    fn num_pools(&self) -> usize {
+        self.boundaries.len() + 1
+    }
+
+    fn name(&self) -> String {
+        format!("context({:?})", self.boundaries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt: u32) -> Request {
+        Request { id: 0, arrival_s: 0.0, prompt_tokens: prompt, output_tokens: 1 }
+    }
+
+    #[test]
+    fn two_pool_split() {
+        let r = ContextRouter::two_pool(4096);
+        assert_eq!(r.route(&req(100)).pool, 0);
+        assert_eq!(r.route(&req(4096)).pool, 0, "boundary is inclusive-short");
+        assert_eq!(r.route(&req(4097)).pool, 1);
+        assert_eq!(r.num_pools(), 2);
+    }
+
+    #[test]
+    fn tiered_routing() {
+        let r = ContextRouter::tiered(vec![16384, 4096]); // unsorted ok
+        assert_eq!(r.num_pools(), 3);
+        assert_eq!(r.route(&req(1000)).pool, 0);
+        assert_eq!(r.route(&req(8000)).pool, 1);
+        assert_eq!(r.route(&req(50_000)).pool, 2);
+    }
+
+    #[test]
+    fn boundary_edges_exact() {
+        let r = ContextRouter::tiered(vec![10, 20]);
+        assert_eq!(r.route(&req(10)).pool, 0);
+        assert_eq!(r.route(&req(11)).pool, 1);
+        assert_eq!(r.route(&req(20)).pool, 1);
+        assert_eq!(r.route(&req(21)).pool, 2);
+    }
+}

@@ -1,0 +1,61 @@
+//! L3 request routing — the serving-time realization of the paper's
+//! topology lever. A router maps each request to a pool index in O(1);
+//! which pool a request lands in determines the context window (and hence
+//! the `P(b)`-curve segment) the GPU serving it operates on.
+
+pub mod context;
+pub mod fleetopt;
+pub mod semantic;
+
+use crate::workload::Request;
+
+/// A routing decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    /// Destination pool index.
+    pub pool: usize,
+    /// Prompt length after any compress-and-route transformation.
+    pub effective_prompt_tokens: u32,
+}
+
+/// The router protocol. Implementations must be `Send + Sync` (the server
+/// shares one router across pool threads) and O(1) per decision — routing
+/// is on the hot path of every request.
+pub trait Router: Send + Sync {
+    fn route(&self, req: &Request) -> Route;
+    /// Number of pools this router targets.
+    fn num_pools(&self) -> usize;
+    fn name(&self) -> String;
+}
+
+/// Single-pool pass-through (the homogeneous baseline).
+#[derive(Debug, Clone)]
+pub struct HomogeneousRouter;
+
+impl Router for HomogeneousRouter {
+    fn route(&self, req: &Request) -> Route {
+        Route { pool: 0, effective_prompt_tokens: req.prompt_tokens }
+    }
+    fn num_pools(&self) -> usize {
+        1
+    }
+    fn name(&self) -> String {
+        "homogeneous".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_routes_everything_to_pool_zero() {
+        let r = HomogeneousRouter;
+        for p in [1u32, 1000, 100_000] {
+            let req = Request { id: 0, arrival_s: 0.0, prompt_tokens: p, output_tokens: 1 };
+            assert_eq!(r.route(&req).pool, 0);
+            assert_eq!(r.route(&req).effective_prompt_tokens, p);
+        }
+        assert_eq!(r.num_pools(), 1);
+    }
+}

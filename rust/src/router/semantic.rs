@@ -1,0 +1,89 @@
+//! Semantic routing (paper §5.1): send "simple" requests to a small-model
+//! pool and the rest to the large model. Real semantic routers classify
+//! prompt content; this offline build uses the paper's own observable
+//! proxy — request shape (prompt length plus expected output effort) —
+//! with a pluggable difficulty function so a learned classifier can drop
+//! in (the GreenServ comparison point in §8).
+
+use super::{Route, Router};
+use crate::workload::Request;
+
+/// Difficulty estimate in [0, 1]: ≥ threshold → large-model pool.
+pub type DifficultyFn = fn(&Request) -> f64;
+
+/// Default proxy: long prompts or long expected outputs are "hard".
+pub fn shape_difficulty(req: &Request) -> f64 {
+    let p = (req.prompt_tokens as f64 / 8192.0).min(1.0);
+    let o = (req.output_tokens as f64 / 1024.0).min(1.0);
+    (0.7 * p + 0.3 * o).min(1.0)
+}
+
+#[derive(Clone)]
+pub struct SemanticRouter {
+    pub difficulty: DifficultyFn,
+    pub threshold: f64,
+}
+
+impl SemanticRouter {
+    pub fn new(threshold: f64) -> Self {
+        SemanticRouter { difficulty: shape_difficulty, threshold }
+    }
+
+    pub fn with_difficulty(difficulty: DifficultyFn, threshold: f64) -> Self {
+        SemanticRouter { difficulty, threshold }
+    }
+}
+
+impl Router for SemanticRouter {
+    #[inline]
+    fn route(&self, req: &Request) -> Route {
+        let pool = usize::from((self.difficulty)(req) >= self.threshold);
+        Route { pool, effective_prompt_tokens: req.prompt_tokens }
+    }
+
+    /// Pool 0 = small model, pool 1 = large model.
+    fn num_pools(&self) -> usize {
+        2
+    }
+
+    fn name(&self) -> String {
+        format!("semantic(threshold={})", self.threshold)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt: u32, out: u32) -> Request {
+        Request { id: 0, arrival_s: 0.0, prompt_tokens: prompt, output_tokens: out }
+    }
+
+    #[test]
+    fn easy_requests_go_small() {
+        let r = SemanticRouter::new(0.3);
+        assert_eq!(r.route(&req(500, 100)).pool, 0);
+    }
+
+    #[test]
+    fn hard_requests_go_large() {
+        let r = SemanticRouter::new(0.3);
+        assert_eq!(r.route(&req(50_000, 100)).pool, 1);
+        assert_eq!(r.route(&req(100, 2000)).pool, 1, "output effort counts");
+    }
+
+    #[test]
+    fn custom_difficulty_pluggable() {
+        fn always_hard(_: &Request) -> f64 {
+            1.0
+        }
+        let r = SemanticRouter::with_difficulty(always_hard, 0.5);
+        assert_eq!(r.route(&req(1, 1)).pool, 1);
+    }
+
+    #[test]
+    fn difficulty_bounded() {
+        let d = shape_difficulty(&req(u32::MAX / 2, u32::MAX / 2));
+        assert!(d <= 1.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! WLW1 tensor-container reader — the interchange format `aot.py` writes
+//! for `weights.bin` and `golden.bin`:
+//!
+//! ```text
+//! magic "WLW1", u32 count, then per tensor:
+//!   u32 name_len, name utf8, u8 dtype (0=f32, 1=i32), u8 ndim,
+//!   u64 dims[ndim], raw little-endian data
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One host tensor.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    /// Raw little-endian bytes (len = product(dims) × 4).
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(self.dtype == DType::F32, "{} is not f32", self.name);
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> crate::Result<Vec<i32>> {
+        anyhow::ensure!(self.dtype == DType::I32, "{} is not i32", self.name);
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Dims as i64 for `Literal::reshape`.
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.dims.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// An ordered container (order matters for the HLO parameter list).
+#[derive(Debug, Clone, Default)]
+pub struct Container {
+    pub tensors: Vec<HostTensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl Container {
+    pub fn get(&self, name: &str) -> crate::Result<&HostTensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' not in container"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+/// Parse a WLW1 container from bytes.
+pub fn parse(bytes: &[u8]) -> crate::Result<Container> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let magic = r.take(4)?;
+    anyhow::ensure!(magic == b"WLW1", "bad magic {magic:?}");
+    let count = r.u32()? as usize;
+    let mut c = Container::default();
+    for _ in 0..count {
+        let name_len = r.u32()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+        let dtype = match r.u8()? {
+            0 => DType::F32,
+            1 => DType::I32,
+            d => anyhow::bail!("unknown dtype code {d}"),
+        };
+        let ndim = r.u8()? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(r.u64()? as usize);
+        }
+        let n_bytes = dims.iter().product::<usize>() * 4;
+        let data = r.take(n_bytes)?.to_vec();
+        c.index.insert(name.clone(), c.tensors.len());
+        c.tensors.push(HostTensor { name, dtype, dims, data });
+    }
+    anyhow::ensure!(r.i == bytes.len(), "trailing bytes in container");
+    Ok(c)
+}
+
+/// Load a container from disk.
+pub fn load(path: &Path) -> crate::Result<Container> {
+    parse(&std::fs::read(path)?)
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(self.i + n <= self.b.len(), "container truncated");
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> crate::Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> crate::Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build(tensors: &[(&str, DType, &[usize], Vec<u8>)]) -> Vec<u8> {
+        let mut b = b"WLW1".to_vec();
+        b.extend((tensors.len() as u32).to_le_bytes());
+        for (name, dt, dims, data) in tensors {
+            b.extend((name.len() as u32).to_le_bytes());
+            b.extend(name.as_bytes());
+            b.push(match dt {
+                DType::F32 => 0,
+                DType::I32 => 1,
+            });
+            b.push(dims.len() as u8);
+            for d in *dims {
+                b.extend((*d as u64).to_le_bytes());
+            }
+            b.extend(data);
+        }
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let f: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        let bytes = build(&[("w", DType::F32, &[2, 2], f)]);
+        let c = parse(&bytes).unwrap();
+        assert_eq!(c.len(), 1);
+        let t = c.get("w").unwrap();
+        assert_eq!(t.dims, vec![2, 2]);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse(b"NOPE").is_err());
+        let f: Vec<u8> = vec![0; 16];
+        let mut bytes = build(&[("w", DType::F32, &[2, 2], f)]);
+        bytes.truncate(bytes.len() - 3);
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let bytes = build(&[]);
+        let c = parse(&bytes).unwrap();
+        assert!(c.get("nope").is_err());
+        assert!(c.is_empty());
+    }
+}

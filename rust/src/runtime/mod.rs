@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT execution of the AOT artifacts ([`pjrt`]), the
+//! WLW1 tensor container ([`container`]), and a minimal JSON parser for
+//! the manifest ([`json`]). Python never runs on the request path — the
+//! Rust binary is self-contained once `make artifacts` has produced
+//! `artifacts/*.hlo.txt` + `weights.bin`.
+
+pub mod container;
+pub mod json;
+pub mod pjrt;
+
+pub use pjrt::{default_artifacts_dir, ModelCfg, TinyModel};

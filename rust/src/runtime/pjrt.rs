@@ -1,0 +1,321 @@
+//! PJRT runtime: load the AOT HLO-text artifacts, compile them on the CPU
+//! PJRT client, and execute prefill/decode on the request path.
+//!
+//! This is the only place Rust touches XLA. Interchange is HLO **text**
+//! (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos; the
+//! text parser reassigns ids — see /opt/xla-example/README.md). Python is
+//! involved only at `make artifacts` time; the binary is self-contained
+//! afterwards.
+
+use std::path::{Path, PathBuf};
+
+use xla::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
+
+use super::container::{self, Container};
+use super::json;
+
+/// Static model geometry parsed from `manifest.json` (mirrors the Python
+/// `ModelConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelCfg {
+    pub vocab: u32,
+    pub d_model: u32,
+    pub n_layers: u32,
+    pub n_q_heads: u32,
+    pub n_kv_heads: u32,
+    pub head_dim: u32,
+    pub d_ff: u32,
+    pub max_seq: u32,
+    pub batch: u32,
+    pub prefill_len: u32,
+}
+
+impl ModelCfg {
+    pub fn kv_dims(&self) -> [i64; 5] {
+        [
+            self.n_layers as i64,
+            self.batch as i64,
+            self.max_seq as i64,
+            self.n_kv_heads as i64,
+            self.head_dim as i64,
+        ]
+    }
+
+    /// κ in f32 bytes/token — matches `ModelConfig.kv_bytes_per_token`.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * 4 * self.n_layers as u64 * self.n_kv_heads as u64 * self.head_dim as u64
+    }
+}
+
+fn parse_cfg(manifest: &json::Json) -> crate::Result<ModelCfg> {
+    let c = manifest
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("manifest missing config"))?;
+    let f = |k: &str| -> crate::Result<u32> {
+        c.get(k)
+            .and_then(|v| v.as_u32())
+            .ok_or_else(|| anyhow::anyhow!("manifest config missing {k}"))
+    };
+    Ok(ModelCfg {
+        vocab: f("vocab")?,
+        d_model: f("d_model")?,
+        n_layers: f("n_layers")?,
+        n_q_heads: f("n_q_heads")?,
+        n_kv_heads: f("n_kv_heads")?,
+        head_dim: f("head_dim")?,
+        d_ff: f("d_ff")?,
+        max_seq: f("max_seq")?,
+        batch: f("batch")?,
+        prefill_len: f("prefill_len")?,
+    })
+}
+
+/// The serving-demo model, compiled and resident on the CPU PJRT client.
+///
+/// Weights are uploaded to device buffers **once** at load; per-step
+/// inputs (tokens, positions, KV) are uploaded as Rust-owned buffers and
+/// executed via `execute_b`. (The C wrapper's literal-taking `execute`
+/// leaks its internally created input buffers — ~45 MB per decode step on
+/// this model — so the runtime owns every buffer explicitly; see
+/// EXPERIMENTS.md §Perf.)
+pub struct TinyModel {
+    client: PjRtClient,
+    decode_exe: PjRtLoadedExecutable,
+    prefill_exe: PjRtLoadedExecutable,
+    /// Device-resident weights in PARAM_ORDER.
+    weight_bufs: Vec<PjRtBuffer>,
+    /// Host-side weight literals. MUST outlive `weight_bufs`:
+    /// `buffer_from_host_literal` copies asynchronously, so dropping the
+    /// source literal early is a use-after-free (observed as an XLA size
+    /// check abort).
+    _weight_lits: Vec<Literal>,
+    pub cfg: ModelCfg,
+    artifacts_dir: PathBuf,
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> crate::Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+    )?;
+    let comp = XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl TinyModel {
+    /// Load artifacts (HLO text + weights + manifest) and compile.
+    pub fn load(artifacts_dir: &Path) -> crate::Result<Self> {
+        let manifest_text =
+            std::fs::read_to_string(artifacts_dir.join("manifest.json"))?;
+        let manifest = json::parse(&manifest_text)?;
+        let cfg = parse_cfg(&manifest)?;
+
+        let client = PjRtClient::cpu()?;
+        let decode_exe = compile(&client, &artifacts_dir.join("decode_step.hlo.txt"))?;
+        let prefill_exe = compile(&client, &artifacts_dir.join("prefill.hlo.txt"))?;
+
+        // Weights in the exact order the HLO parameter list expects.
+        let weights_c = container::load(&artifacts_dir.join("weights.bin"))?;
+        let order: Vec<String> = manifest
+            .get("param_order")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing param_order"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+        let mut weight_bufs = Vec::with_capacity(order.len());
+        let mut weight_lits = Vec::with_capacity(order.len());
+        for name in &order {
+            let t = weights_c.get(name)?;
+            let lit = Literal::vec1(&t.as_f32()?).reshape(&t.dims_i64())?;
+            weight_bufs.push(client.buffer_from_host_literal(None, &lit)?);
+            weight_lits.push(lit); // keep alive: async host->device copy
+        }
+
+        Ok(TinyModel {
+            client,
+            decode_exe,
+            prefill_exe,
+            weight_bufs,
+            _weight_lits: weight_lits,
+            cfg,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    /// Zero-initialized KV caches.
+    pub fn fresh_kv(&self) -> crate::Result<(Literal, Literal)> {
+        let n: usize = self.cfg.kv_dims().iter().product::<i64>() as usize;
+        let zeros = vec![0f32; n];
+        let k = Literal::vec1(&zeros).reshape(&self.cfg.kv_dims())?;
+        let v = Literal::vec1(&zeros).reshape(&self.cfg.kv_dims())?;
+        Ok((k, v))
+    }
+
+    fn run(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        extra: &[&Literal],
+    ) -> crate::Result<Vec<Literal>> {
+        // Upload per-step inputs as Rust-owned buffers (dropped after the
+        // call); weights are already device-resident.
+        let extra_bufs: Vec<PjRtBuffer> = extra
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<Result<_, _>>()?;
+        let mut inputs: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        inputs.extend(extra_bufs.iter());
+        let result = exe.execute_b::<&PjRtBuffer>(&inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Prefill a full batch of prompts.
+    ///
+    /// `tokens` is row-major `[B, prefill_len]`; `lens[b] >= 1` is each
+    /// prompt's true length. Returns (last-position logits `[B, vocab]`,
+    /// kv_k, kv_v).
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> crate::Result<(Vec<f32>, Literal, Literal)> {
+        let b = self.cfg.batch as usize;
+        let t = self.cfg.prefill_len as usize;
+        anyhow::ensure!(tokens.len() == b * t, "tokens must be [B, T]");
+        anyhow::ensure!(lens.len() == b, "lens must be [B]");
+        let tok = Literal::vec1(tokens).reshape(&[b as i64, t as i64])?;
+        let len_lit = Literal::vec1(lens);
+        let mut out = self.run(&self.prefill_exe, &[&tok, &len_lit])?;
+        anyhow::ensure!(out.len() == 3, "prefill returns a 3-tuple");
+        let kv_v = out.pop().unwrap();
+        let kv_k = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>()?;
+        Ok((logits, kv_k, kv_v))
+    }
+
+    /// One continuous-batching decode iteration.
+    ///
+    /// `tokens[b]` is the token slot `b` consumes this step, written at
+    /// position `pos[b]`; attention sees lengths `pos + 1`. Returns
+    /// (logits `[B, vocab]`, kv_k', kv_v').
+    pub fn decode_step(
+        &self,
+        tokens: &[i32],
+        kv_k: &Literal,
+        kv_v: &Literal,
+        pos: &[i32],
+    ) -> crate::Result<(Vec<f32>, Literal, Literal)> {
+        let b = self.cfg.batch as usize;
+        anyhow::ensure!(tokens.len() == b && pos.len() == b);
+        let tok = Literal::vec1(tokens);
+        let pos_lit = Literal::vec1(pos);
+        let mut out =
+            self.run(&self.decode_exe, &[&tok, kv_k, kv_v, &pos_lit])?;
+        anyhow::ensure!(out.len() == 3, "decode returns a 3-tuple");
+        let kv_v_n = out.pop().unwrap();
+        let kv_k_n = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>()?;
+        Ok((logits, kv_k_n, kv_v_n))
+    }
+
+    /// Greedy sampling over `[B, vocab]` logits.
+    pub fn argmax(&self, logits: &[f32]) -> Vec<i32> {
+        let v = self.cfg.vocab as usize;
+        logits
+            .chunks_exact(v)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Validate the runtime against the JAX golden trace
+    /// (`artifacts/golden.bin`): prefill + two decode steps must reproduce
+    /// every logits tensor. Returns the max absolute error seen.
+    pub fn validate_golden(&self) -> crate::Result<f64> {
+        let g = container::load(&self.artifacts_dir.join("golden.bin"))?;
+        let max_err = run_golden(self, &g)?;
+        Ok(max_err)
+    }
+}
+
+fn max_abs_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() as f64)
+        .fold(0.0, f64::max)
+}
+
+fn run_golden(m: &TinyModel, g: &Container) -> crate::Result<f64> {
+    let mut worst = 0.0f64;
+
+    let tokens = g.get("prefill.in.tokens")?.as_i32()?;
+    let lens = g.get("prefill.in.lens")?.as_i32()?;
+    let (last_logits, kv_k, kv_v) = m.prefill(&tokens, &lens)?;
+    worst = worst.max(max_abs_err(
+        &last_logits,
+        &g.get("prefill.out.last_logits")?.as_f32()?,
+    ));
+
+    let t1 = g.get("decode1.in.tokens")?.as_i32()?;
+    let p1 = g.get("decode1.in.pos")?.as_i32()?;
+    let (logits1, kv_k1, kv_v1) = m.decode_step(&t1, &kv_k, &kv_v, &p1)?;
+    worst = worst.max(max_abs_err(
+        &logits1,
+        &g.get("decode1.out.logits")?.as_f32()?,
+    ));
+
+    let t2 = g.get("decode2.in.tokens")?.as_i32()?;
+    let p2 = g.get("decode2.in.pos")?.as_i32()?;
+    let (logits2, _, _) = m.decode_step(&t2, &kv_k1, &kv_v1, &p2)?;
+    worst = worst.max(max_abs_err(
+        &logits2,
+        &g.get("decode2.out.logits")?.as_f32()?,
+    ));
+
+    Ok(worst)
+}
+
+/// Default artifacts location (repo-root relative, overridable by env).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("WATTLAW_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_kv_bytes() {
+        let cfg = ModelCfg {
+            vocab: 512, d_model: 256, n_layers: 4, n_q_heads: 8,
+            n_kv_heads: 2, head_dim: 32, d_ff: 688, max_seq: 512,
+            batch: 8, prefill_len: 64,
+        };
+        assert_eq!(cfg.kv_bytes_per_token(), 2 * 4 * 4 * 2 * 32);
+        assert_eq!(cfg.kv_dims(), [4, 8, 512, 2, 32]);
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let doc = r#"{"config": {"vocab": 512, "d_model": 256, "n_layers": 4,
+            "n_q_heads": 8, "n_kv_heads": 2, "head_dim": 32, "d_ff": 688,
+            "max_seq": 512, "batch": 8, "prefill_len": 64,
+            "rope_theta": 10000.0}}"#;
+        let j = json::parse(doc).unwrap();
+        let cfg = parse_cfg(&j).unwrap();
+        assert_eq!(cfg.batch, 8);
+        assert_eq!(cfg.max_seq, 512);
+    }
+}

@@ -1,0 +1,150 @@
+//! Live energy metering: integrate the calibrated logistic `P(b)` over the
+//! engine's actual in-flight batch trajectory.
+//!
+//! This is the serving-side realization of the paper's accounting — the
+//! same `P(b)` the analytical tables use, driven by the *measured* batch
+//! occupancy instead of a steady-state assumption. tok/W falls out as
+//! `output_tokens / joules` (numerically identical to (tok/s)/W).
+
+use crate::power::LogisticPower;
+use crate::units::{Joules, TokensPerWatt, Watts};
+
+/// Piecewise-constant power integrator for one emulated GPU (group).
+#[derive(Debug, Clone)]
+pub struct EnergyMeter {
+    power: LogisticPower,
+    /// GPUs charged per observation (1 = paper's per-GPU convention;
+    /// TP for the physically complete bill).
+    gpus: f64,
+    last_t_s: f64,
+    last_b: f64,
+    joules: f64,
+    output_tokens: u64,
+    /// Time-weighted mean batch (for reports).
+    batch_time_integral: f64,
+    start_t_s: f64,
+}
+
+impl EnergyMeter {
+    pub fn new(power: LogisticPower, gpus: f64, start_t_s: f64) -> Self {
+        EnergyMeter {
+            power,
+            gpus,
+            last_t_s: start_t_s,
+            last_b: 0.0,
+            joules: 0.0,
+            output_tokens: 0,
+            batch_time_integral: 0.0,
+            start_t_s,
+        }
+    }
+
+    /// Record that the in-flight batch has been `b` since the last
+    /// observation, up to time `t_s`.
+    pub fn observe(&mut self, t_s: f64, b: f64) {
+        let dt = (t_s - self.last_t_s).max(0.0);
+        self.joules += self.power.power_w(self.last_b) * self.gpus * dt;
+        self.batch_time_integral += self.last_b * dt;
+        self.last_t_s = t_s;
+        self.last_b = b;
+    }
+
+    pub fn add_output_tokens(&mut self, n: u64) {
+        self.output_tokens += n;
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.last_t_s - self.start_t_s
+    }
+
+    pub fn joules(&self) -> Joules {
+        Joules(self.joules)
+    }
+
+    pub fn output_tokens(&self) -> u64 {
+        self.output_tokens
+    }
+
+    /// Time-weighted mean in-flight batch.
+    pub fn mean_batch(&self) -> f64 {
+        let t = self.elapsed_s();
+        if t > 0.0 {
+            self.batch_time_integral / t
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean power over the metered window.
+    pub fn mean_power(&self) -> Watts {
+        let t = self.elapsed_s();
+        Watts(if t > 0.0 { self.joules / t } else { 0.0 })
+    }
+
+    /// The headline figure: output tokens per watt — numerically
+    /// `(tok/s) / W = tokens / joules`.
+    pub fn tok_per_watt(&self) -> TokensPerWatt {
+        TokensPerWatt(if self.joules > 0.0 {
+            self.output_tokens as f64 / self.joules
+        } else {
+            0.0
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_batch_energy() {
+        let mut m = EnergyMeter::new(LogisticPower::h100(), 1.0, 0.0);
+        m.observe(0.0, 16.0); // from t=0, batch 16
+        m.observe(10.0, 16.0); // 10 s at P(16) ≈ 435 W
+        assert!((m.joules().0 - 4350.0).abs() < 20.0, "J = {}", m.joules().0);
+        assert!((m.mean_batch() - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tok_per_watt_matches_analytical_at_steady_state() {
+        // Hold n=16 at the 64K operating point: τ = 24.47 ms/step, each
+        // step emits 16 tokens → 653.8 tok/s at 435 W → 1.50 tok/W.
+        let mut m = EnergyMeter::new(LogisticPower::h100(), 1.0, 0.0);
+        m.observe(0.0, 16.0);
+        let tau_s = 0.02447;
+        for step in 1..=1000u64 {
+            m.observe(step as f64 * tau_s, 16.0);
+            m.add_output_tokens(16);
+        }
+        let tw = m.tok_per_watt().0;
+        assert!((tw - 1.50).abs() < 0.02, "tok/W = {tw}");
+    }
+
+    #[test]
+    fn idle_time_burns_energy_without_tokens() {
+        let mut m = EnergyMeter::new(LogisticPower::h100(), 1.0, 0.0);
+        m.observe(0.0, 0.0);
+        m.observe(5.0, 0.0); // 5 s idle at 300 W
+        assert!((m.joules().0 - 1500.0).abs() < 1e-6);
+        assert_eq!(m.tok_per_watt().0, 0.0);
+    }
+
+    #[test]
+    fn per_group_charging() {
+        let mut g = EnergyMeter::new(LogisticPower::h100(), 8.0, 0.0);
+        g.observe(0.0, 16.0);
+        g.observe(1.0, 16.0);
+        let mut s = EnergyMeter::new(LogisticPower::h100(), 1.0, 0.0);
+        s.observe(0.0, 16.0);
+        s.observe(1.0, 16.0);
+        assert!((g.joules().0 / s.joules().0 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_order_observation_is_clamped() {
+        let mut m = EnergyMeter::new(LogisticPower::h100(), 1.0, 0.0);
+        m.observe(1.0, 8.0);
+        m.observe(0.5, 8.0); // earlier timestamp: no negative energy
+        assert!(m.joules().0 >= 0.0);
+    }
+}

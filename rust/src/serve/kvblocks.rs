@@ -1,0 +1,165 @@
+//! Paged KV-cache block allocator (vLLM-style).
+//!
+//! This is the mechanism that *physically enforces* Eq. (3): the pool has
+//! `V_KV / (κ · block)` blocks; a sequence at length L holds
+//! `ceil(L / block)` of them; when the free list runs dry, admission
+//! stalls — which is exactly the `n_max(W)` concurrency ceiling the 1/W
+//! law derives.
+
+use std::collections::HashMap;
+
+/// Fixed-size block allocator over a token-addressed KV space.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    /// Tokens per block (the Pallas kernel's page size — 64 by default).
+    pub block_tokens: u32,
+    /// Total blocks in the pool.
+    pub num_blocks: u32,
+    free: Vec<u32>,
+    held: HashMap<u64, Vec<u32>>,
+    /// High-water mark of blocks in use (for reports).
+    pub peak_used: u32,
+}
+
+impl BlockAllocator {
+    pub fn new(block_tokens: u32, num_blocks: u32) -> Self {
+        assert!(block_tokens > 0 && num_blocks > 0);
+        BlockAllocator {
+            block_tokens,
+            num_blocks,
+            free: (0..num_blocks).rev().collect(),
+            held: HashMap::new(),
+            peak_used: 0,
+        }
+    }
+
+    /// Allocator sized from a KV byte budget and κ (Eq. 3 in block form).
+    pub fn from_budget(kv_bytes: u64, kappa_bytes_per_token: u64, block_tokens: u32) -> Self {
+        let tokens = kv_bytes / kappa_bytes_per_token.max(1);
+        let blocks = (tokens / block_tokens as u64).max(1) as u32;
+        Self::new(block_tokens, blocks)
+    }
+
+    fn blocks_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.block_tokens).max(1)
+    }
+
+    pub fn used(&self) -> u32 {
+        self.num_blocks - self.free.len() as u32
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used() as f64 / self.num_blocks as f64
+    }
+
+    /// Can a sequence of `tokens` total length be admitted right now?
+    pub fn can_admit(&self, tokens: u32) -> bool {
+        self.blocks_for(tokens) as usize <= self.free.len()
+    }
+
+    /// Reserve blocks for a sequence's full expected length. Serving
+    /// admits against the *window*, mirroring the analytical n_max.
+    pub fn admit(&mut self, seq: u64, tokens: u32) -> bool {
+        let need = self.blocks_for(tokens);
+        if (need as usize) > self.free.len() || self.held.contains_key(&seq) {
+            return false;
+        }
+        let blocks: Vec<u32> =
+            (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.held.insert(seq, blocks);
+        self.peak_used = self.peak_used.max(self.used());
+        true
+    }
+
+    /// Grow a sequence to `new_tokens` total (decode appends). Returns
+    /// false on memory pressure (caller must evict or stall).
+    pub fn grow(&mut self, seq: u64, new_tokens: u32) -> bool {
+        let need = self.blocks_for(new_tokens);
+        let cur = match self.held.get_mut(&seq) {
+            Some(v) => v,
+            None => return false,
+        };
+        while (cur.len() as u32) < need {
+            match self.free.pop() {
+                Some(b) => cur.push(b),
+                None => return false,
+            }
+        }
+        self.peak_used = self.peak_used.max(self.num_blocks - self.free.len() as u32);
+        true
+    }
+
+    /// Release all blocks of a finished sequence.
+    pub fn release(&mut self, seq: u64) {
+        if let Some(blocks) = self.held.remove(&seq) {
+            self.free.extend(blocks);
+        }
+    }
+
+    /// Number of sequences currently holding blocks.
+    pub fn active_seqs(&self) -> usize {
+        self.held.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_grow_release_cycle() {
+        let mut a = BlockAllocator::new(64, 10);
+        assert!(a.admit(1, 100)); // 2 blocks
+        assert_eq!(a.used(), 2);
+        assert!(a.grow(1, 200)); // 4 blocks
+        assert_eq!(a.used(), 4);
+        a.release(1);
+        assert_eq!(a.used(), 0);
+        assert_eq!(a.active_seqs(), 0);
+    }
+
+    #[test]
+    fn admission_stalls_at_capacity() {
+        let mut a = BlockAllocator::new(64, 4);
+        assert!(a.admit(1, 128)); // 2 blocks
+        assert!(a.admit(2, 128)); // 2 blocks
+        assert!(!a.can_admit(64));
+        assert!(!a.admit(3, 64));
+        a.release(1);
+        assert!(a.admit(3, 64));
+    }
+
+    #[test]
+    fn grow_fails_gracefully_under_pressure() {
+        let mut a = BlockAllocator::new(64, 2);
+        assert!(a.admit(1, 64));
+        assert!(a.admit(2, 64));
+        assert!(!a.grow(1, 128), "no free blocks left");
+        assert!(a.grow(1, 64), "no-op grow succeeds");
+    }
+
+    #[test]
+    fn double_admit_rejected() {
+        let mut a = BlockAllocator::new(64, 8);
+        assert!(a.admit(1, 64));
+        assert!(!a.admit(1, 64));
+    }
+
+    #[test]
+    fn eq3_in_block_form() {
+        // 60 GB KV at κ=55 KB and 64-token blocks → n_max(64K) ≈ 16 seqs.
+        let a = BlockAllocator::from_budget(60_000_000_000, 55_000, 64);
+        let blocks_per_seq = 65_536u32.div_ceil(64);
+        let n_max = a.num_blocks / blocks_per_seq;
+        assert!((15..=17).contains(&n_max), "n_max = {n_max}");
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut a = BlockAllocator::new(64, 10);
+        a.admit(1, 64 * 6);
+        a.release(1);
+        a.admit(2, 64);
+        assert_eq!(a.peak_used, 6);
+    }
+}

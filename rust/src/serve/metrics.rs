@@ -1,0 +1,191 @@
+//! Serving metrics: percentile digests for TTFT/TPOT/E2E plus counters.
+
+/// A simple exact-percentile digest (sorted-on-demand). Capped by
+//  reservoir sampling so fleet-scale simulations stay O(1) memory.
+#[derive(Debug, Clone)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    sorted: bool,
+    cap: usize,
+    seen: u64,
+    rng_state: u64,
+}
+
+impl Default for Percentiles {
+    fn default() -> Self {
+        Self::with_cap(200_000)
+    }
+}
+
+impl Percentiles {
+    pub fn with_cap(cap: usize) -> Self {
+        Percentiles {
+            samples: Vec::new(),
+            sorted: true,
+            cap,
+            seen: 0,
+            rng_state: 0x9E3779B97F4A7C15,
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // xorshift64* — enough for reservoir indices.
+        let mut x = self.rng_state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng_state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            // Vitter's algorithm R.
+            let j = (self.next_u64() % self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = v;
+            }
+        }
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let idx = ((self.samples.len() - 1) as f64 * q).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&mut self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        *self.samples.last().unwrap()
+    }
+}
+
+/// The standard serving metric set.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub ttft_s: Percentiles,
+    pub tpot_s: Percentiles,
+    pub e2e_s: Percentiles,
+    pub completed: u64,
+    pub rejected: u64,
+    pub output_tokens: u64,
+}
+
+impl ServeMetrics {
+    pub fn record(&mut self, c: &super::request::Completion) {
+        self.ttft_s.add(c.ttft_s);
+        if c.output_tokens > 1 {
+            self.tpot_s.add(c.tpot_s());
+        }
+        self.e2e_s.add(c.e2e_s);
+        self.completed += 1;
+        self.output_tokens += c.output_tokens as u64;
+    }
+
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        // Percentile merge via re-adding the other's samples.
+        for &v in &other.ttft_s.samples {
+            self.ttft_s.add(v);
+        }
+        for &v in &other.tpot_s.samples {
+            self.tpot_s.add(v);
+        }
+        for &v in &other.e2e_s.samples {
+            self.e2e_s.add(v);
+        }
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.output_tokens += other.output_tokens;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::Completion;
+
+    #[test]
+    fn exact_quantiles_small() {
+        let mut p = Percentiles::default();
+        for i in 1..=100 {
+            p.add(i as f64);
+        }
+        assert!((p.p50() - 50.5).abs() <= 0.5, "p50 = {}", p.p50());
+        assert_eq!(p.p99(), 99.0);
+        assert_eq!(p.quantile(1.0), 100.0);
+        assert!((p.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory() {
+        let mut p = Percentiles::with_cap(1000);
+        for i in 0..50_000 {
+            p.add(i as f64);
+        }
+        assert_eq!(p.samples.len(), 1000);
+        assert_eq!(p.count(), 50_000);
+        // Quantiles remain approximately right.
+        let p50 = p.p50();
+        assert!((p50 - 25_000.0).abs() < 3_000.0, "p50 = {p50}");
+    }
+
+    #[test]
+    fn metrics_record_and_merge() {
+        let mut a = ServeMetrics::default();
+        let mut b = ServeMetrics::default();
+        a.record(&Completion { id: 1, pool: 0, output_tokens: 10, ttft_s: 0.1, e2e_s: 1.0 });
+        b.record(&Completion { id: 2, pool: 1, output_tokens: 20, ttft_s: 0.2, e2e_s: 2.0 });
+        a.merge(&b);
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.output_tokens, 30);
+        assert_eq!(a.ttft_s.count(), 2);
+    }
+
+    #[test]
+    fn empty_digest_is_nan() {
+        let mut p = Percentiles::default();
+        assert!(p.p50().is_nan());
+        assert!(p.mean().is_nan());
+    }
+}

@@ -1,0 +1,23 @@
+//! The L3 serving stack: request records ([`request`]), the paged KV
+//! allocator that physically enforces Eq. 3 ([`kvblocks`]), the
+//! continuous batcher ([`batcher`]), the prefill/decode interleave policy
+//! ([`scheduler`]), live energy metering on the calibrated `P(b)`
+//! ([`energy`]), metrics ([`metrics`]), the real-model engine
+//! ([`engine`]) and the serving leader ([`server`]).
+
+pub mod batcher;
+pub mod energy;
+pub mod engine;
+pub mod kvblocks;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batcher, Phase, SlotWork};
+pub use energy::EnergyMeter;
+pub use engine::{EngineConfig, EngineReport, PoolEngine};
+pub use kvblocks::BlockAllocator;
+pub use metrics::{Percentiles, ServeMetrics};
+pub use request::{Completion, ServeRequest};
+pub use server::{render_report, serve_trace, PoolSpec, ServeReport};

@@ -1,0 +1,79 @@
+//! Serving-side request/response records and SLO clocks.
+//!
+//! Time is a plain `f64` in seconds: the discrete-event simulator uses a
+//! virtual clock and the real-model engine uses accumulated measured step
+//! latencies, so both produce directly comparable metrics.
+
+use crate::workload::Request;
+
+/// A request as admitted into a serving pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeRequest {
+    pub id: u64,
+    /// Prompt tokens to ingest before the first output token.
+    pub prompt_tokens: u32,
+    /// Output tokens to produce (synthetic traces know this up front;
+    /// real traffic would stop on EOS — the serving demo stops on either).
+    pub output_tokens: u32,
+    /// Arrival time, seconds.
+    pub arrival_s: f64,
+}
+
+impl From<&Request> for ServeRequest {
+    fn from(r: &Request) -> Self {
+        ServeRequest {
+            id: r.id,
+            prompt_tokens: r.prompt_tokens,
+            output_tokens: r.output_tokens,
+            arrival_s: r.arrival_s,
+        }
+    }
+}
+
+impl ServeRequest {
+    pub fn total_tokens(&self) -> u32 {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// Completion record with SLO clocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub id: u64,
+    pub pool: usize,
+    pub output_tokens: u32,
+    /// Time to first output token, seconds.
+    pub ttft_s: f64,
+    /// End-to-end latency, seconds.
+    pub e2e_s: f64,
+}
+
+impl Completion {
+    /// Mean time per output token after the first, seconds.
+    pub fn tpot_s(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            return 0.0;
+        }
+        (self.e2e_s - self.ttft_s) / (self.output_tokens - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversion_and_clocks() {
+        let r = Request { id: 3, arrival_s: 1.0, prompt_tokens: 10, output_tokens: 5 };
+        let s = ServeRequest::from(&r);
+        assert_eq!(s.total_tokens(), 15);
+        let c = Completion { id: 3, pool: 0, output_tokens: 5, ttft_s: 0.1, e2e_s: 0.5 };
+        assert!((c.tpot_s() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_tpot_is_zero() {
+        let c = Completion { id: 0, pool: 0, output_tokens: 1, ttft_s: 0.1, e2e_s: 0.1 };
+        assert_eq!(c.tpot_s(), 0.0);
+    }
+}

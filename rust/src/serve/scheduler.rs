@@ -1,0 +1,114 @@
+//! Prefill/decode interleave policy.
+//!
+//! The paper's roofline models pure decode; real engines interleave
+//! chunked prefill with decode, which steals iteration time from decoding
+//! sequences (§10.1 lists this as a reason the analytical tok/W is an
+//! upper bound). The scheduler bounds that interference: at most
+//! `max_ingest_slots` slots may run prompt-ingestion work in one step,
+//! the rest decode.
+
+use super::batcher::{Batcher, SlotWork};
+
+/// Interleave policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerPolicy {
+    /// Max slots doing prompt ingestion per step (chunked-prefill cap).
+    pub max_ingest_slots: usize,
+    /// Prefer finishing ingests before starting new ones (FIFO fairness
+    /// vs TTFT-greedy).
+    pub ingest_fifo: bool,
+}
+
+impl Default for SchedulerPolicy {
+    fn default() -> Self {
+        SchedulerPolicy { max_ingest_slots: 2, ingest_fifo: true }
+    }
+}
+
+/// Apply the policy to the batcher's raw plan: ingests beyond the cap are
+/// demoted to `Idle` for this step (their slot waits; decode slots are
+/// never demoted).
+pub fn schedule(batcher: &Batcher, policy: &SchedulerPolicy) -> Vec<SlotWork> {
+    let mut plan = batcher.plan();
+    let mut ingest_seen = 0usize;
+
+    // Optionally order ingest priority by admission time (FIFO).
+    let mut order: Vec<usize> = (0..plan.len()).collect();
+    if policy.ingest_fifo {
+        order.sort_by(|&a, &b| {
+            let ta = batcher.slots[a]
+                .as_ref()
+                .map(|s| s.admitted_s)
+                .unwrap_or(f64::INFINITY);
+            let tb = batcher.slots[b]
+                .as_ref()
+                .map(|s| s.admitted_s)
+                .unwrap_or(f64::INFINITY);
+            ta.partial_cmp(&tb).unwrap()
+        });
+    }
+
+    for &i in &order {
+        if let SlotWork::Ingest { .. } = plan[i] {
+            ingest_seen += 1;
+            if ingest_seen > policy.max_ingest_slots {
+                plan[i] = SlotWork::Idle;
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::kvblocks::BlockAllocator;
+    use crate::serve::request::ServeRequest;
+
+    fn loaded_batcher(n: usize) -> Batcher {
+        let mut b = Batcher::new(n, BlockAllocator::new(64, 10_000), 128, 8192);
+        for i in 0..n as u64 {
+            b.submit(ServeRequest {
+                id: i,
+                prompt_tokens: 512,
+                output_tokens: 4,
+                arrival_s: i as f64 * 0.1, // staggered admission order
+            });
+        }
+        b.admit(10.0);
+        b
+    }
+
+    #[test]
+    fn ingest_cap_enforced() {
+        let b = loaded_batcher(6);
+        let plan = schedule(&b, &SchedulerPolicy { max_ingest_slots: 2, ingest_fifo: true });
+        let ingests = plan
+            .iter()
+            .filter(|w| matches!(w, SlotWork::Ingest { .. }))
+            .count();
+        assert_eq!(ingests, 2);
+        let idles = plan.iter().filter(|w| matches!(w, SlotWork::Idle)).count();
+        assert_eq!(idles, 4);
+    }
+
+    #[test]
+    fn decode_slots_never_demoted() {
+        let mut b = loaded_batcher(3);
+        // Push slot 0 into decode phase.
+        for _ in 0..4 {
+            let plan = b.plan();
+            b.on_step(0, plan[0], 1.0);
+        }
+        let plan = schedule(&b, &SchedulerPolicy { max_ingest_slots: 0, ingest_fifo: false });
+        assert!(matches!(plan[0], SlotWork::Decode));
+        assert!(plan[1..].iter().all(|w| matches!(w, SlotWork::Idle)));
+    }
+
+    #[test]
+    fn unlimited_policy_is_identity() {
+        let b = loaded_batcher(4);
+        let plan = schedule(&b, &SchedulerPolicy { max_ingest_slots: usize::MAX, ingest_fifo: false });
+        assert_eq!(plan, b.plan());
+    }
+}

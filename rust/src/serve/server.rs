@@ -1,0 +1,138 @@
+//! The serving leader: route a request trace across pools and drive each
+//! pool's engine over the real compiled model.
+//!
+//! Pools run sequentially on the CPU PJRT client (one emulated TP group
+//! each, with its own virtual clock), so per-pool metrics are directly
+//! comparable; the fleet-scale concurrent picture is the discrete-event
+//! simulator's job ([`crate::sim`]).
+
+use std::path::Path;
+
+use super::engine::{EngineConfig, EngineReport, PoolEngine};
+use super::request::ServeRequest;
+use crate::router::Router;
+use crate::runtime::TinyModel;
+use crate::workload::Request;
+
+/// A pool description for the real-model server.
+#[derive(Debug, Clone)]
+pub struct PoolSpec {
+    pub name: String,
+    pub config: EngineConfig,
+}
+
+/// Aggregated serving report.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub router: String,
+    pub pools: Vec<EngineReport>,
+    pub total_output_tokens: u64,
+    pub total_joules: f64,
+    /// Fleet tok/W across pools (Σ tokens / Σ joules).
+    pub tok_per_watt: f64,
+    pub golden_max_err: f64,
+}
+
+/// Serve `trace` through `router` across `pools`, loading one model
+/// instance per pool from `artifacts_dir`.
+pub fn serve_trace(
+    artifacts_dir: &Path,
+    router: &dyn Router,
+    pools: &[PoolSpec],
+    trace: &[Request],
+) -> crate::Result<ServeReport> {
+    anyhow::ensure!(
+        router.num_pools() == pools.len(),
+        "router targets {} pools, {} configured",
+        router.num_pools(),
+        pools.len()
+    );
+
+    // Route the trace.
+    let mut per_pool: Vec<Vec<ServeRequest>> = vec![Vec::new(); pools.len()];
+    for req in trace {
+        let route = router.route(req);
+        let mut sreq = ServeRequest::from(req);
+        sreq.prompt_tokens = route.effective_prompt_tokens;
+        per_pool[route.pool].push(sreq);
+    }
+
+    // One worker thread per pool (leader/worker): each loads its own
+    // model instance (PJRT handles are not Send) and drives its engine to
+    // completion. Golden validation runs once on the leader.
+    let golden_max_err = {
+        let model = TinyModel::load(artifacts_dir)?;
+        model.validate_golden()?
+    };
+    let mut handles = Vec::with_capacity(pools.len());
+    for (i, spec) in pools.iter().enumerate() {
+        let dir = artifacts_dir.to_path_buf();
+        let config = spec.config.clone();
+        let reqs: Vec<ServeRequest> = per_pool[i].drain(..).collect();
+        handles.push(std::thread::spawn(move || -> crate::Result<EngineReport> {
+            let model = TinyModel::load(&dir)?;
+            let mut engine = PoolEngine::new(i, model, config)?;
+            for r in reqs {
+                engine.submit(r);
+            }
+            engine.run_to_completion()
+        }));
+    }
+    let mut reports = Vec::with_capacity(pools.len());
+    for h in handles {
+        reports.push(
+            h.join()
+                .map_err(|_| anyhow::anyhow!("pool worker panicked"))??,
+        );
+    }
+
+    let total_output_tokens: u64 = reports.iter().map(|r| r.output_tokens).sum();
+    let total_joules: f64 = reports.iter().map(|r| r.joules).sum();
+    Ok(ServeReport {
+        router: router.name(),
+        pools: reports,
+        total_output_tokens,
+        total_joules,
+        tok_per_watt: if total_joules > 0.0 {
+            total_output_tokens as f64 / total_joules
+        } else {
+            0.0
+        },
+        golden_max_err,
+    })
+}
+
+/// Render a serve report for the CLI / examples.
+pub fn render_report(r: &ServeReport) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(s, "\n== serving report (router: {}) ==", r.router);
+    let _ = writeln!(
+        s,
+        "{:<8} {:>8} {:>7} {:>9} {:>10} {:>9} {:>9} {:>9} {:>9}",
+        "pool", "window", "done", "steps", "decode t/s", "mean b", "J", "tok/W",
+        "p99 TTFT"
+    );
+    for p in &r.pools {
+        let mut m = p.metrics.clone();
+        let _ = writeln!(
+            s,
+            "{:<8} {:>8} {:>7} {:>9} {:>10.1} {:>9.2} {:>9.1} {:>9.3} {:>8.3}s",
+            p.pool,
+            p.window_tokens,
+            p.metrics.completed,
+            p.steps,
+            p.decode_tok_s,
+            p.mean_batch,
+            p.joules,
+            p.tok_per_watt,
+            m.ttft_s.p99(),
+        );
+    }
+    let _ = writeln!(
+        s,
+        "total: {} output tokens, {:.1} J → {:.3} tok/W (golden max err {:.2e})",
+        r.total_output_tokens, r.total_joules, r.tok_per_watt, r.golden_max_err
+    );
+    s
+}

@@ -1,0 +1,10 @@
+//! Discrete-event fleet simulation — the dynamic counterpart of the
+//! analytical planner. Where [`crate::fleet`] solves the steady state in
+//! closed form, [`fleetsim`] *plays the trace through* virtual GPU groups
+//! (continuous batching, paged KV admission, roofline step times,
+//! logistic power integration) and must land near the analytical tok/W —
+//! the crate's internal consistency check.
+
+pub mod fleetsim;
+
+pub use fleetsim::{simulate_pool, simulate_topology, GroupSimConfig, PoolSimReport, TopoSimReport};

@@ -1,0 +1,49 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §6 maps each to its module and bench target).
+
+pub mod independence;
+pub mod law_fig;
+pub mod power_fig;
+pub mod render;
+pub mod t1;
+pub mod t2;
+pub mod t3;
+pub mod t4;
+pub mod t5;
+pub mod t6;
+pub mod t7;
+
+use crate::fleet::pool::LBarPolicy;
+
+/// Generate every table + figure as one report (the `tables --all` output).
+pub fn generate_all(lbar: LBarPolicy) -> String {
+    let mut s = String::new();
+    s.push_str(&t1::generate());
+    s.push_str(&t2::generate());
+    s.push_str(&t3::generate(lbar));
+    s.push_str(&t4::generate());
+    s.push_str(&t5::generate());
+    s.push_str(&t6::generate());
+    s.push_str(&t7::generate());
+    s.push_str(&law_fig::generate());
+    s.push_str(&power_fig::generate());
+    s.push_str(&independence::generate(lbar));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_all_contains_every_artifact() {
+        let s = generate_all(LBarPolicy::Window);
+        for needle in [
+            "Table 1", "Table 2", "Table 3", "Table 4", "Table 5",
+            "Table 6", "Table 7", "1/W law", "Figure (power)",
+            "independence",
+        ] {
+            assert!(s.contains(needle), "missing {needle}");
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Figure-equivalent: the logistic P(b) curves (paper Eq. 1 / the G2G
+//! Figure-2 shape) for every GPU generation, b ∈ {1..1024}.
+
+use super::render::{f0, Table};
+use crate::power::Gpu;
+
+pub const BATCHES: [f64; 11] =
+    [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0];
+
+pub fn generate() -> String {
+    let mut t = Table::new(
+        "Figure (power) — logistic P(b), watts vs in-flight batch",
+        &["b", "H100", "H200", "B200", "GB200"],
+    );
+    for &b in &BATCHES {
+        t.row(vec![
+            f0(b),
+            f0(Gpu::H100.spec().power.power_w(b)),
+            f0(Gpu::H200.spec().power.power_w(b)),
+            f0(Gpu::B200.spec().power.power_w(b)),
+            f0(Gpu::GB200.spec().power.power_w(b)),
+        ]);
+    }
+    t.note("H100 anchors: 300 W @b≈1, ≈600 W @b=128 (ML.ENERGY v3.0, <3% fit)");
+
+    // ASCII curve for H100.
+    let p = &Gpu::H100.spec().power;
+    let mut plot = String::from("\nP(b), H100 (# = 10 W above idle):\n");
+    for &b in &BATCHES {
+        let w = p.power_w(b);
+        let bars = ((w - p.p_idle_w) / 10.0).round() as usize;
+        plot.push_str(&format!("b={b:>5} | {} {w:.0} W\n", "#".repeat(bars)));
+    }
+    format!("{}{}", t.render(), plot)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_saturating_curves() {
+        let s = super::generate();
+        assert!(s.contains("b=    1"));
+        assert!(s.contains("1024"));
+    }
+}

@@ -1,0 +1,147 @@
+//! ASCII/markdown table rendering for the paper-regeneration commands.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple aligned text table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) -> &mut Self {
+        self.notes.push(n.into());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let fmt_cell = |s: &str, w: usize, a: Align| match a {
+            Align::Left => format!("{s:<w$}"),
+            Align::Right => format!("{s:>w$}"),
+        };
+        let mut out = String::new();
+        out.push_str(&format!("\n# {}\n\n", self.title));
+        let hdr: Vec<String> = (0..ncols)
+            .map(|i| fmt_cell(&self.headers[i], widths[i], self.aligns[i]))
+            .collect();
+        out.push_str(&format!("| {} |\n", hdr.join(" | ")));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for r in &self.rows {
+            let cells: Vec<String> = (0..ncols)
+                .map(|i| fmt_cell(&r[i], widths[i], self.aligns[i]))
+                .collect();
+            out.push_str(&format!("| {} |\n", cells.join(" | ")));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+}
+
+/// Format helpers shared by the table generators.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f0(x: f64) -> String {
+    format!("{x:.0}")
+}
+/// tok/W with the paper's precision convention (2 dp < 10, else 1 dp).
+pub fn tokw(x: f64) -> String {
+    if x >= 10.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.2}")
+    }
+}
+/// Context in K.
+pub fn ctx_k(ctx: u32) -> String {
+    format!("{}K", ctx / 1024)
+}
+/// Ratio vs a baseline as the paper's "+NN%" column.
+pub fn vs_pct(x: f64, base: f64) -> String {
+    if (x - base).abs() < 1e-9 {
+        "—".into()
+    } else {
+        format!("{:+.0}%", (x / base - 1.0) * 100.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(vec!["alpha".into(), "1.0".into()]);
+        t.row(vec!["b".into(), "12345.6".into()]);
+        t.note("hello");
+        let s = t.render();
+        assert!(s.contains("# Demo"));
+        assert!(s.contains("| alpha |"));
+        assert!(s.contains("note: hello"));
+        // alignment: value column right-aligned to the widest cell
+        assert!(s.contains("|     1.0 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn percent_formatting() {
+        assert_eq!(vs_pct(15.0, 10.0), "+50%");
+        assert_eq!(vs_pct(10.0, 10.0), "—");
+        assert_eq!(vs_pct(5.0, 10.0), "-50%");
+    }
+}

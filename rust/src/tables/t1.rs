@@ -1,0 +1,91 @@
+//! Table 1 — n_max and tok/W vs context window for Llama-3.1-70B (TP=8,
+//! fp16) on H100-SXM5 (calibrated, HIGH) and B200-SXM (projected, FAIR).
+
+use super::render::{ctx_k, f0, tokw, Table};
+use crate::fleet::profile::{ManualProfile, PowerAccounting};
+use crate::tokeconomy::{context_sweep, OperatingPoint};
+
+pub const CONTEXTS: [u32; 7] = [2048, 4096, 8192, 16384, 32768, 65536, 131072];
+
+/// Paper's published values for the comparison columns:
+/// (context, h100 n_max, h100 P, h100 tok/W, b200 n_max, b200 P, b200 tok/W).
+pub const PAPER: [(u32, u32, f64, f64, u32, f64, f64); 7] = [
+    (2048, 512, 598.0, 35.0, 1343, 859.0, 61.4),
+    (4096, 256, 593.0, 17.6, 671, 857.0, 30.8),
+    (8192, 128, 583.0, 8.97, 335, 852.0, 15.5),
+    (16384, 64, 557.0, 4.69, 167, 838.0, 7.87),
+    (32768, 32, 507.0, 2.58, 83, 805.0, 4.09),
+    (65536, 16, 435.0, 1.50, 41, 735.0, 2.24),
+    (131072, 8, 369.0, 0.88, 20, 630.0, 1.30),
+];
+
+/// Our regenerated rows.
+#[derive(Debug, Clone)]
+pub struct T1Row {
+    pub context: u32,
+    pub h100: OperatingPoint,
+    pub b200: OperatingPoint,
+}
+
+pub fn rows() -> Vec<T1Row> {
+    let h = ManualProfile::h100_70b();
+    let b = ManualProfile::b200_70b();
+    let hs = context_sweep(&h, &CONTEXTS, PowerAccounting::PerGpu);
+    let bs = context_sweep(&b, &CONTEXTS, PowerAccounting::PerGpu);
+    CONTEXTS
+        .iter()
+        .zip(hs.into_iter().zip(bs))
+        .map(|(&context, (h100, b200))| T1Row { context, h100, b200 })
+        .collect()
+}
+
+pub fn generate() -> String {
+    let mut t = Table::new(
+        "Table 1 — n_max and tok/W vs context window, Llama-3.1-70B TP8 fp16 \
+         (ours vs paper)",
+        &[
+            "Context", "n_max", "P_sat", "tok/W", "paper", "n_max", "P_sat",
+            "tok/W", "paper",
+        ],
+    );
+    for (r, p) in rows().iter().zip(PAPER.iter()) {
+        t.row(vec![
+            ctx_k(r.context),
+            r.h100.n_max.to_string(),
+            format!("{} W", f0(r.h100.power.0)),
+            tokw(r.h100.tok_per_watt.0),
+            tokw(p.3),
+            r.b200.n_max.to_string(),
+            format!("{} W", f0(r.b200.power.0)),
+            tokw(r.b200.tok_per_watt.0),
+            tokw(p.6),
+        ]);
+    }
+    t.note("cols 2-5: H100-SXM5 (HIGH quality, calibrated); cols 6-9: B200-SXM (FAIR, ±20%)");
+    t.note("'paper' columns are the published values for side-by-side comparison");
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_row_within_3pct_of_paper() {
+        for (r, p) in rows().iter().zip(PAPER.iter()) {
+            let h_err = (r.h100.tok_per_watt.0 - p.3).abs() / p.3;
+            let b_err = (r.b200.tok_per_watt.0 - p.6).abs() / p.6;
+            assert!(h_err < 0.015, "H100 ctx {}: err {h_err}", r.context);
+            assert!(b_err < 0.03, "B200 ctx {}: err {b_err}", r.context);
+            assert_eq!(r.h100.n_max, p.1, "H100 n_max at {}", r.context);
+        }
+    }
+
+    #[test]
+    fn renders_all_contexts() {
+        let s = generate();
+        for ctx in ["2K", "4K", "8K", "16K", "32K", "64K", "128K"] {
+            assert!(s.contains(ctx), "missing {ctx} row");
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Table 2 — single-GPU tok/W at n_max (8K context) across model families
+//! (ComputedProfile: replicated KV; MoE rows stream active params only).
+
+use super::render::{f0, tokw, Table};
+use crate::fleet::profile::{ComputedProfile, PowerAccounting};
+use crate::model::spec::{ModelSpec, CATALOG, LLAMA31_8B};
+use crate::model::KvPlacement;
+use crate::power::profiles::{B200, H100};
+use crate::power::GpuSpec;
+use crate::tokeconomy::{operating_point, OperatingPoint};
+
+pub const CTX: u32 = 8192;
+
+#[derive(Debug, Clone)]
+pub struct T2Row {
+    pub model: &'static ModelSpec,
+    pub tp: u32,
+    pub h100: OperatingPoint,
+    pub b200: OperatingPoint,
+}
+
+fn tp_for(model: &'static ModelSpec) -> u32 {
+    if std::ptr::eq(model, &LLAMA31_8B) {
+        1
+    } else {
+        8
+    }
+}
+
+fn point(gpu: &'static GpuSpec, model: &'static ModelSpec, tp: u32) -> OperatingPoint {
+    let p = ComputedProfile::new(gpu, model, tp, KvPlacement::Replicated);
+    operating_point(&p, CTX, 1.0, PowerAccounting::PerGpu)
+}
+
+pub fn rows() -> Vec<T2Row> {
+    CATALOG
+        .iter()
+        .map(|&m| {
+            let tp = tp_for(m);
+            T2Row {
+                model: m,
+                tp,
+                h100: point(&H100, m, tp),
+                b200: point(&B200, m, tp),
+            }
+        })
+        .collect()
+}
+
+/// Paper's tok/W values for the comparison column:
+/// (model name, h100 tok/W, b200 tok/W).
+pub const PAPER: [(&str, f64, f64); 5] = [
+    ("Llama-3.1-8B", 6.46, 12.18),
+    ("Llama-3.1-70B", 7.41, 20.93),
+    ("Llama-3.1-405B", 0.09, 2.16),
+    ("Qwen3-235B-A22B", 37.82, 177.73),
+    ("DeepSeek-V3", 2.14, 18.37),
+];
+
+pub fn generate() -> String {
+    let mut t = Table::new(
+        "Table 2 — single-GPU tok/W at n_max (8K context), ComputedProfile \
+         (ours vs paper)",
+        &[
+            "Model", "TP", "n_max", "tok/s", "tok/W", "paper", "n_max",
+            "tok/s", "tok/W", "paper",
+        ],
+    );
+    for (r, p) in rows().iter().zip(PAPER.iter()) {
+        let moe = if r.model.is_moe { "†" } else { "" };
+        t.row(vec![
+            format!("{}{moe}", r.model.name),
+            r.tp.to_string(),
+            r.h100.n_max.to_string(),
+            f0(r.h100.throughput_tok_s),
+            tokw(r.h100.tok_per_watt.0),
+            tokw(p.1),
+            r.b200.n_max.to_string(),
+            f0(r.b200.throughput_tok_s),
+            tokw(r.b200.tok_per_watt.0),
+            tokw(p.2),
+        ]);
+    }
+    t.note("† MoE: W streams active parameters only (upper bound — excludes dispatch)");
+    t.note("paper's MoE rows and P_sat parameterization do not close under its own \
+            roofline; our values use the consistent model (EXPERIMENTS.md §T2)");
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_moe_beats_dense_of_similar_size() {
+        let rs = rows();
+        let dense70 = &rs[1];
+        let qwen = &rs[3];
+        assert!(qwen.model.is_moe);
+        // Paper claims 5.1×; under the *self-consistent* roofline (the
+        // paper's Table 2 MoE rows do not close — DESIGN.md §4) the edge
+        // at replicated-KV n_max is ≈2×, still decisively MoE-favoring.
+        assert!(
+            qwen.h100.tok_per_watt.0 > 1.8 * dense70.h100.tok_per_watt.0,
+            "MoE edge: {} vs {}",
+            qwen.h100.tok_per_watt.0,
+            dense70.h100.tok_per_watt.0
+        );
+    }
+
+    #[test]
+    fn shape_405b_unusable_on_h100_rescued_by_b200() {
+        let rs = rows();
+        let m405 = &rs[2];
+        assert_eq!(m405.h100.n_max, 1);
+        assert!(m405.h100.tok_per_watt.0 < 0.6, "{}", m405.h100.tok_per_watt.0);
+        assert!(m405.b200.n_max >= 16);
+        // "a 24× improvement" — escaping the near-idle regime is dramatic.
+        assert!(
+            m405.b200.tok_per_watt.0 / m405.h100.tok_per_watt.0 > 5.0,
+            "B200 rescue: {} -> {}",
+            m405.h100.tok_per_watt.0,
+            m405.b200.tok_per_watt.0
+        );
+    }
+
+    #[test]
+    fn shape_b200_beats_h100_for_every_model() {
+        for r in rows() {
+            assert!(
+                r.b200.tok_per_watt.0 > r.h100.tok_per_watt.0,
+                "{}: {} vs {}",
+                r.model.name,
+                r.b200.tok_per_watt.0,
+                r.h100.tok_per_watt.0
+            );
+        }
+    }
+
+    #[test]
+    fn dense_n_max_matches_paper() {
+        let rs = rows();
+        assert!((57..=58).contains(&rs[0].h100.n_max)); // 8B
+        assert!((22..=23).contains(&rs[1].h100.n_max)); // 70B
+        assert_eq!(rs[2].h100.n_max, 1); // 405B
+        assert!((16..=18).contains(&rs[2].b200.n_max)); // 405B on B200
+    }
+
+    #[test]
+    fn renders_every_model() {
+        let s = generate();
+        for p in PAPER {
+            assert!(s.contains(p.0), "missing {}", p.0);
+        }
+        assert!(s.contains("†"));
+    }
+}

@@ -1,0 +1,138 @@
+//! Table 4 — context-window routing vs semantic routing per-pool
+//! efficiency (H100, ρ = 0.85). The long pool is the binding constraint
+//! in both schemes; semantic routing's case rests on per-physical-GPU
+//! economics (8B runs TP=1), not per-group tok/W.
+
+use super::render::{f0, tokw, Table};
+use crate::fleet::profile::{
+    ComputedProfile, ManualProfile, PowerAccounting,
+};
+use crate::model::spec::LLAMA31_8B;
+use crate::model::KvPlacement;
+use crate::power::profiles::H100;
+use crate::tokeconomy::{operating_point, OperatingPoint};
+
+pub const RHO: f64 = 0.85;
+
+#[derive(Debug, Clone)]
+pub struct T4Row {
+    pub pool: &'static str,
+    pub model: &'static str,
+    pub context: u32,
+    pub op: OperatingPoint,
+    /// Physical GPUs in the pool's serving unit (TP).
+    pub tp: u32,
+}
+
+pub fn rows() -> Vec<T4Row> {
+    let m70 = ManualProfile::h100_70b();
+    let m8 = ComputedProfile::new(&H100, &LLAMA31_8B, 1, KvPlacement::Replicated);
+    let acct = PowerAccounting::PerGpu;
+    vec![
+        T4Row {
+            pool: "Context short (70B@8K)",
+            model: "Llama-3.1-70B",
+            context: 8192,
+            op: operating_point(&m70, 8192, RHO, acct),
+            tp: 8,
+        },
+        T4Row {
+            pool: "Context long (70B@64K)",
+            model: "Llama-3.1-70B",
+            context: 65_536,
+            op: operating_point(&m70, 65_536, RHO, acct),
+            tp: 8,
+        },
+        T4Row {
+            pool: "Semantic small (8B@8K)",
+            model: "Llama-3.1-8B",
+            context: 8192,
+            op: operating_point(&m8, 8192, RHO, acct),
+            tp: 1,
+        },
+        T4Row {
+            pool: "Semantic large (70B@64K)",
+            model: "Llama-3.1-70B",
+            context: 65_536,
+            op: operating_point(&m70, 65_536, RHO, acct),
+            tp: 8,
+        },
+    ]
+}
+
+pub fn generate() -> String {
+    let mut t = Table::new(
+        "Table 4 — context-window routing vs semantic routing (H100, ρ=0.85)",
+        &["Pool type", "Model", "Context", "n_active", "P (W)", "tok/W",
+          "tok/W per phys. GPU"],
+    );
+    for r in rows() {
+        t.row(vec![
+            r.pool.to_string(),
+            r.model.to_string(),
+            super::render::ctx_k(r.context),
+            f0(r.op.n_active),
+            f0(r.op.power.0),
+            tokw(r.op.tok_per_watt.0),
+            tokw(r.op.tok_per_watt.0 / r.tp as f64),
+        ]);
+    }
+    t.note("last column divides by TP — the paper's point that the 8B \
+            semantic pool wins on a per-physical-GPU basis");
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn long_pools_tie_at_about_1_5_tok_w() {
+        let rs = rows();
+        let ctx_long = &rs[1];
+        let sem_long = &rs[3];
+        assert_eq!(ctx_long.op.tok_per_watt.0, sem_long.op.tok_per_watt.0);
+        assert!(
+            (ctx_long.op.tok_per_watt.0 - 1.52).abs() < 0.06,
+            "long pool = {}",
+            ctx_long.op.tok_per_watt.0
+        );
+    }
+
+    #[test]
+    fn short_pool_vs_paper() {
+        let rs = rows();
+        assert!(
+            (rs[0].op.tok_per_watt.0 - 8.77).abs() < 0.2,
+            "context-short = {}",
+            rs[0].op.tok_per_watt.0
+        );
+    }
+
+    #[test]
+    fn long_pool_is_binding_constraint() {
+        let rs = rows();
+        // Short pool ≥ 5× the long pool's efficiency.
+        assert!(rs[0].op.tok_per_watt.0 > 5.0 * rs[1].op.tok_per_watt.0);
+    }
+
+    #[test]
+    fn semantic_small_wins_per_physical_gpu() {
+        let rs = rows();
+        let ctx_short_per_gpu = rs[0].op.tok_per_watt.0 / rs[0].tp as f64;
+        let sem_small_per_gpu = rs[2].op.tok_per_watt.0 / rs[2].tp as f64;
+        assert!(
+            sem_small_per_gpu > ctx_short_per_gpu,
+            "8B per-GPU {} vs 70B per-GPU {}",
+            sem_small_per_gpu,
+            ctx_short_per_gpu
+        );
+    }
+
+    #[test]
+    fn renders_four_pools() {
+        let s = generate();
+        assert!(s.contains("Context short"));
+        assert!(s.contains("Semantic small"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Table 5 — GPU generation comparison for Llama-3.1-70B (TP=8, fp16) at
+//! 8K context: hardware parameters, tok/W, and cost efficiency.
+
+use super::render::{f0, f2, tokw, Table};
+use crate::fleet::profile::{ComputedProfile, GpuProfile, PowerAccounting};
+use crate::model::spec::LLAMA31_70B;
+use crate::model::KvPlacement;
+use crate::power::Gpu;
+use crate::tokeconomy::{mtok_per_dollar, operating_point, OperatingPoint};
+
+pub const CTX: u32 = 8192;
+
+#[derive(Debug, Clone)]
+pub struct T5Row {
+    pub gpu: Gpu,
+    pub w_ms: f64,
+    pub op: OperatingPoint,
+    pub rental_per_hr: f64,
+    pub mtok_per_dollar: f64,
+}
+
+pub fn rows() -> Vec<T5Row> {
+    Gpu::ALL
+        .iter()
+        .map(|&gpu| {
+            let p = ComputedProfile::new(
+                gpu.spec(), &LLAMA31_70B, 8, KvPlacement::Replicated);
+            let op = operating_point(&p, CTX, 1.0, PowerAccounting::PerGpu);
+            let w_ms = p.roofline().w_ms;
+            let rental = gpu.spec().rental_per_hr_tp8;
+            T5Row {
+                gpu,
+                w_ms,
+                mtok_per_dollar: mtok_per_dollar(&op, rental),
+                op,
+                rental_per_hr: rental,
+            }
+        })
+        .collect()
+}
+
+pub fn generate() -> String {
+    let mut t = Table::new(
+        "Table 5 — GPU generation comparison, Llama-3.1-70B TP8 fp16 @8K",
+        &["GPU", "TDP (W)", "P_idle", "W (ms)", "n_max@8K", "P_sat (W)",
+          "tok/W", "$/hr", "Mtok/$", "quality"],
+    );
+    for r in rows() {
+        let s = r.gpu.spec();
+        t.row(vec![
+            s.name.to_string(),
+            f0(s.tdp_w),
+            f0(s.power.p_idle_w),
+            f2(r.w_ms),
+            r.op.n_max.to_string(),
+            f0(r.op.power.0),
+            tokw(r.op.tok_per_watt.0),
+            format!("{:.1}", r.rental_per_hr),
+            f2(r.mtok_per_dollar),
+            s.quality.label().to_string(),
+        ]);
+    }
+    t.note("paper's P_sat column is inconsistent with its own logistic \
+            parameters (e.g. 367 W at n=22 where P(22)=469 W); ours is the \
+            self-consistent evaluation — see EXPERIMENTS.md §T5");
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_h200_substantially_beats_h100() {
+        let rs = rows();
+        let h100 = &rs[0];
+        let h200 = &rs[1];
+        let gain = h200.op.tok_per_watt.0 / h100.op.tok_per_watt.0;
+        // Paper claims 2.1×; the replicated-KV scan term compresses the
+        // self-consistent gain to ≈1.4–1.6× (EXPERIMENTS.md §T5).
+        assert!((1.3..=2.6).contains(&gain), "H200/H100 = {gain:.2}");
+        // n_max doubles: 44 vs 22.
+        assert!((h200.op.n_max as f64 / h100.op.n_max as f64 - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn shape_b200_beats_h200_absolute() {
+        let rs = rows();
+        assert!(rs[2].op.tok_per_watt.0 > rs[1].op.tok_per_watt.0);
+        assert!((56..=60).contains(&rs[2].op.n_max), "B200 n_max = {}", rs[2].op.n_max);
+    }
+
+    #[test]
+    fn shape_gb200_below_b200_per_gpu() {
+        // "GB200-NVL is a bit of a surprise": higher TDP outweighs the
+        // slightly larger memory at this operating point.
+        let rs = rows();
+        assert!(
+            rs[3].op.tok_per_watt.0 < rs[2].op.tok_per_watt.0,
+            "GB200 {} must be below B200 {}",
+            rs[3].op.tok_per_watt.0,
+            rs[2].op.tok_per_watt.0
+        );
+        assert!(rs[3].op.n_max > rs[2].op.n_max, "but more sequences fit");
+    }
+
+    #[test]
+    fn b200_wins_cost_efficiency_over_h200() {
+        let rs = rows();
+        assert!(
+            rs[2].mtok_per_dollar > rs[1].mtok_per_dollar,
+            "B200 {} vs H200 {} Mtok/$",
+            rs[2].mtok_per_dollar,
+            rs[1].mtok_per_dollar
+        );
+    }
+
+    #[test]
+    fn w_ms_matches_paper_per_gpu() {
+        let rs = rows();
+        assert!((rs[0].w_ms - 6.72).abs() < 0.05);
+        assert!((rs[1].w_ms - 4.76).abs() < 0.1, "H200 W = {}", rs[1].w_ms);
+        assert!((rs[2].w_ms - 2.95).abs() < 0.05);
+    }
+
+    #[test]
+    fn quality_tags_present() {
+        let s = generate();
+        assert!(s.contains("HIGH"));
+        assert!(s.contains("FAIR"));
+    }
+}

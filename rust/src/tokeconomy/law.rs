@@ -1,0 +1,132 @@
+//! The 1/W law itself (paper §3.1): tok/W halves every time the serving
+//! context window doubles. This module turns the claim into measurable
+//! statistics:
+//!
+//! * the log–log slope of tok/W vs context (the law predicts −1),
+//! * per-doubling halving ratios,
+//! * the end-to-end spread across the 2K–128K range (paper: "nearly 40×").
+
+use crate::fleet::profile::{GpuProfile, PowerAccounting};
+use crate::tokeconomy::{context_sweep, OperatingPoint};
+
+/// The standard 2K–128K sweep grid.
+pub const LAW_CONTEXTS: [u32; 7] =
+    [2048, 4096, 8192, 16384, 32768, 65536, 131072];
+
+/// Fitted law statistics for one profile.
+#[derive(Debug, Clone)]
+pub struct LawFit {
+    pub points: Vec<OperatingPoint>,
+    /// Least-squares slope of log2(tok/W) against log2(context).
+    pub slope: f64,
+    /// tok/W ratio between successive context doublings (ideal: 2.0 each).
+    pub halving_ratios: Vec<f64>,
+    /// max(tok/W) / min(tok/W) across the sweep.
+    pub spread: f64,
+}
+
+/// Fit the law on a profile over `contexts` at full occupancy.
+pub fn fit_law(profile: &dyn GpuProfile, contexts: &[u32]) -> LawFit {
+    let points = context_sweep(profile, contexts, PowerAccounting::PerGpu);
+    let xs: Vec<f64> = points.iter().map(|p| (p.context as f64).log2()).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.tok_per_watt.0.log2()).collect();
+    let slope = least_squares_slope(&xs, &ys);
+
+    let halving_ratios = points
+        .windows(2)
+        .map(|w| w[0].tok_per_watt.0 / w[1].tok_per_watt.0)
+        .collect();
+
+    let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
+    for p in &points {
+        lo = lo.min(p.tok_per_watt.0);
+        hi = hi.max(p.tok_per_watt.0);
+    }
+
+    LawFit {
+        points,
+        slope,
+        halving_ratios,
+        spread: hi / lo,
+    }
+}
+
+/// Ordinary least squares slope.
+pub fn least_squares_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::profile::ManualProfile;
+
+    /// The law's slope on the paper's own Table 1 data is −0.886 (35.0 →
+    /// 0.88 over six doublings), not the idealized −1: at long context the
+    /// *power* term also falls (P(8) = 369 W vs P(512) = 598 W), which
+    /// softens the halving. Our model reproduces exactly that slope.
+    #[test]
+    fn slope_matches_paper_table1_data_on_h100() {
+        let fit = fit_law(&ManualProfile::h100_70b(), &LAW_CONTEXTS);
+        let paper_slope = ((0.88f64 / 35.0).log2()) / 6.0; // −0.8865
+        assert!(
+            (fit.slope - paper_slope).abs() < 0.03,
+            "log-log slope = {} (paper's own data: {paper_slope:.3})",
+            fit.slope
+        );
+        assert!(fit.slope < -0.8 && fit.slope > -1.05);
+    }
+
+    #[test]
+    fn slope_is_the_same_on_b200() {
+        // "B200 shifts the curve up but does not change the slope."
+        let h = fit_law(&ManualProfile::h100_70b(), &LAW_CONTEXTS);
+        let b = fit_law(&ManualProfile::b200_70b(), &LAW_CONTEXTS);
+        assert!((h.slope - b.slope).abs() < 0.06,
+                "H100 {} vs B200 {}", h.slope, b.slope);
+        assert!(b.slope < -0.8 && b.slope > -1.05, "slope = {}", b.slope);
+    }
+
+    #[test]
+    fn every_doubling_roughly_halves_tok_per_watt() {
+        // Paper Table 1's own per-doubling ratios run 1.70–1.99 (power
+        // decay at small n_max softens the tail doublings).
+        let fit = fit_law(&ManualProfile::h100_70b(), &LAW_CONTEXTS);
+        for (i, r) in fit.halving_ratios.iter().enumerate() {
+            assert!(
+                (1.65..=2.1).contains(r),
+                "doubling {i}: ratio = {r} (law predicts ≈2)"
+            );
+        }
+        // The short-context end, where power is flat, halves tightly.
+        assert!((fit.halving_ratios[0] - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn spread_is_about_forty_x() {
+        // Paper: "extends to a nearly 40× spread across 2K to 128K".
+        let fit = fit_law(&ManualProfile::h100_70b(), &LAW_CONTEXTS);
+        assert!(
+            (35.0..=45.0).contains(&fit.spread),
+            "2K..128K spread = {:.1}x",
+            fit.spread
+        );
+    }
+
+    #[test]
+    fn law_holds_even_at_moderate_subsets() {
+        // In the saturated-power regime (2K–16K) the slope is ≈ −1 proper.
+        let fit = fit_law(&ManualProfile::h100_70b(), &[2048, 4096, 8192, 16384]);
+        assert!((fit.slope + 1.0).abs() < 0.06, "slope = {}", fit.slope);
+    }
+}

@@ -1,0 +1,217 @@
+//! Single-GPU token economy — paper Eq. (2):
+//!
+//! ```text
+//! tok/W = (n_active / τ(n_active, L̄)) / P(n_active)
+//! ```
+//!
+//! An [`OperatingPoint`] bundles everything Table 1/2/4/5 report about one
+//! (profile, context, utilization) triple.
+
+pub mod law;
+
+use crate::fleet::profile::{GpuProfile, PowerAccounting};
+use crate::units::{TokensPerWatt, Watts};
+
+/// One fully-evaluated serving operating point.
+#[derive(Debug, Clone)]
+pub struct OperatingPoint {
+    /// Serving context window, tokens.
+    pub context: u32,
+    /// Eq. (3) concurrency limit at this window.
+    pub n_max: u32,
+    /// Mean in-flight batch (ρ · n_max).
+    pub n_active: f64,
+    /// Mean KV length assumed for the scan term.
+    pub l_bar: f64,
+    /// Per-iteration decode latency, ms.
+    pub tau_ms: f64,
+    /// Decode throughput, output tokens/s (per TP group).
+    pub throughput_tok_s: f64,
+    /// Power denominator, watts (per GPU or per group — see accounting).
+    pub power: Watts,
+    /// The headline figure of merit.
+    pub tok_per_watt: TokensPerWatt,
+}
+
+/// Evaluate Eq. (2) at utilization `rho` of the window's `n_max`, with the
+/// paper's convention `L̄ = context window` (full-occupancy conservative
+/// bound; Tables 1 and 4 verifiably use this).
+pub fn operating_point(
+    profile: &dyn GpuProfile,
+    context: u32,
+    rho: f64,
+    acct: PowerAccounting,
+) -> OperatingPoint {
+    operating_point_with_lbar(profile, context, rho, context as f64, acct)
+}
+
+/// Evaluate Eq. (2) with an explicit mean KV length (used by the fleet
+/// model's `TrafficMean` ablation, where L̄ comes from the workload CDF).
+pub fn operating_point_with_lbar(
+    profile: &dyn GpuProfile,
+    context: u32,
+    rho: f64,
+    l_bar: f64,
+    acct: PowerAccounting,
+) -> OperatingPoint {
+    assert!((0.0..=1.0).contains(&rho), "utilization must be in [0,1]");
+    let n_max = profile.n_max(context);
+    let n_active = (rho * n_max as f64).max(0.0);
+    let r = profile.roofline();
+    let tau_ms = r.tau_ms(n_active, l_bar);
+    let throughput = r.throughput_tok_s(n_active, l_bar);
+    let power_w = profile.group_power_w(n_active, acct);
+    OperatingPoint {
+        context,
+        n_max,
+        n_active,
+        l_bar,
+        tau_ms,
+        throughput_tok_s: throughput,
+        power: Watts(power_w),
+        tok_per_watt: TokensPerWatt(if power_w > 0.0 {
+            throughput / power_w
+        } else {
+            0.0
+        }),
+    }
+}
+
+/// Table-1-style context sweep at full occupancy (ρ = 1).
+pub fn context_sweep(
+    profile: &dyn GpuProfile,
+    contexts: &[u32],
+    acct: PowerAccounting,
+) -> Vec<OperatingPoint> {
+    contexts
+        .iter()
+        .map(|&c| operating_point(profile, c, 1.0, acct))
+        .collect()
+}
+
+/// Cost efficiency (Table 5): output tokens per dollar, in millions of
+/// tokens per $M… the paper reports "tok/$M/hr" = Mtok per group-hour per
+/// rental dollar; we report Mtok/$ directly.
+pub fn mtok_per_dollar(op: &OperatingPoint, rental_per_hr_group: f64) -> f64 {
+    let tok_per_hr = op.throughput_tok_s * 3600.0;
+    tok_per_hr / rental_per_hr_group / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::profile::ManualProfile;
+
+    const T1_CONTEXTS: [u32; 7] =
+        [2048, 4096, 8192, 16384, 32768, 65536, 131072];
+
+    /// Table 1 H100 column, every row, to ≤1.5 % — the calibration anchor
+    /// for the whole crate.
+    #[test]
+    fn table1_h100_tok_per_watt_closes() {
+        let p = ManualProfile::h100_70b();
+        let want = [35.0, 17.6, 8.97, 4.69, 2.58, 1.50, 0.88];
+        for (i, ops) in
+            context_sweep(&p, &T1_CONTEXTS, PowerAccounting::PerGpu)
+                .iter()
+                .enumerate()
+        {
+            let got = ops.tok_per_watt.0;
+            let w = want[i];
+            assert!(
+                ((got - w) / w).abs() < 0.015,
+                "ctx {}: tok/W = {got:.3}, paper {w}",
+                T1_CONTEXTS[i]
+            );
+        }
+    }
+
+    /// Table 1 B200 column to ≤3 % (FAIR projection; floor rounding of
+    /// n_max differs from the paper's unfloored scaling in places).
+    #[test]
+    fn table1_b200_tok_per_watt_closes() {
+        let p = ManualProfile::b200_70b();
+        let want = [61.4, 30.8, 15.5, 7.87, 4.09, 2.24, 1.30];
+        for (i, ops) in
+            context_sweep(&p, &T1_CONTEXTS, PowerAccounting::PerGpu)
+                .iter()
+                .enumerate()
+        {
+            let got = ops.tok_per_watt.0;
+            let w = want[i];
+            assert!(
+                ((got - w) / w).abs() < 0.03,
+                "ctx {}: tok/W = {got:.3}, paper {w}",
+                T1_CONTEXTS[i]
+            );
+        }
+    }
+
+    /// §3.1: "B200 is only 1.49× better than H100 at 64K, down from 1.75×
+    /// at 4K" — idle power eats the advantage at low concurrency.
+    #[test]
+    fn b200_advantage_narrows_at_long_context() {
+        let h = ManualProfile::h100_70b();
+        let b = ManualProfile::b200_70b();
+        let at = |ctx| {
+            operating_point(&b, ctx, 1.0, PowerAccounting::PerGpu)
+                .tok_per_watt
+                .0
+                / operating_point(&h, ctx, 1.0, PowerAccounting::PerGpu)
+                    .tok_per_watt
+                    .0
+        };
+        let r4k = at(4096);
+        let r64k = at(65536);
+        assert!((r4k - 1.75).abs() < 0.08, "4K ratio = {r4k}");
+        assert!((r64k - 1.49).abs() < 0.05, "64K ratio = {r64k}");
+        assert!(r64k < r4k);
+    }
+
+    /// Table 4's context-short pool row: ρ=0.85 at 8K.
+    #[test]
+    fn table4_context_short_pool() {
+        let p = ManualProfile::h100_70b();
+        let op = operating_point(&p, 8192, 0.85, PowerAccounting::PerGpu);
+        assert!((op.n_active - 108.8).abs() < 0.01);
+        assert!((op.power.0 - 578.0).abs() < 2.0, "P = {}", op.power.0);
+        assert!(
+            (op.tok_per_watt.0 - 8.77).abs() < 0.15,
+            "tok/W = {}",
+            op.tok_per_watt.0
+        );
+    }
+
+    /// Table 4's long pool rows: ρ=0.85 at 64K → 1.52 tok/W.
+    #[test]
+    fn table4_long_pool() {
+        let p = ManualProfile::h100_70b();
+        let op = operating_point(&p, 65536, 0.85, PowerAccounting::PerGpu);
+        assert!((op.n_active - 13.6).abs() < 0.01);
+        // Paper rounds n_active down to 13 (413 W); at 13.6 the logistic
+        // gives 418 W. Allow the rounding gap.
+        assert!((op.power.0 - 413.0).abs() < 6.0, "P = {}", op.power.0);
+        assert!(
+            (op.tok_per_watt.0 - 1.52).abs() < 0.05,
+            "tok/W = {}",
+            op.tok_per_watt.0
+        );
+    }
+
+    #[test]
+    fn per_group_accounting_divides_by_tp() {
+        let p = ManualProfile::h100_70b();
+        let gpu = operating_point(&p, 8192, 1.0, PowerAccounting::PerGpu);
+        let grp = operating_point(&p, 8192, 1.0, PowerAccounting::PerGroup);
+        assert!((gpu.tok_per_watt.0 / grp.tok_per_watt.0 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_utilization_burns_idle_power_for_nothing() {
+        let p = ManualProfile::h100_70b();
+        let op = operating_point(&p, 8192, 0.0, PowerAccounting::PerGpu);
+        assert_eq!(op.throughput_tok_s, 0.0);
+        assert_eq!(op.power.0, 300.0);
+        assert_eq!(op.tok_per_watt.0, 0.0);
+    }
+}

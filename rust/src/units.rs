@@ -1,0 +1,116 @@
+//! Thin typed units used across the analytical models.
+//!
+//! These are deliberately lightweight wrappers over `f64`/`u64`: the goal is
+//! self-documenting signatures (`Watts`, `Joules`, `TokensPerWatt`) and a
+//! couple of dimension-correct conversions, not a full dimensional-analysis
+//! system.
+
+use std::fmt;
+
+/// Electrical power in watts.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Watts(pub f64);
+
+/// Energy in joules.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Joules(pub f64);
+
+/// Wall-clock duration in milliseconds.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Millis(pub f64);
+
+/// The paper's headline figure of merit: output tokens per watt
+/// (equivalently tokens per joule·s⁻¹·W⁻¹; numerically tok/s ÷ W).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct TokensPerWatt(pub f64);
+
+/// Memory size in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Bytes(pub u64);
+
+impl Watts {
+    pub fn kw(self) -> f64 {
+        self.0 / 1e3
+    }
+    /// Energy spent holding this power for `secs` seconds.
+    pub fn for_secs(self, secs: f64) -> Joules {
+        Joules(self.0 * secs)
+    }
+}
+
+impl Joules {
+    pub fn kwh(self) -> f64 {
+        self.0 / 3.6e6
+    }
+}
+
+impl Millis {
+    pub fn secs(self) -> f64 {
+        self.0 / 1e3
+    }
+}
+
+impl Bytes {
+    pub const KB: u64 = 1_000;
+    pub const MB: u64 = 1_000_000;
+    pub const GB: u64 = 1_000_000_000;
+
+    pub fn gb(self) -> f64 {
+        self.0 as f64 / Self::GB as f64
+    }
+    pub fn from_gb(gb: f64) -> Self {
+        Bytes((gb * Self::GB as f64) as u64)
+    }
+}
+
+impl fmt::Display for Watts {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.0} W", self.0)
+    }
+}
+
+impl fmt::Display for TokensPerWatt {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 10.0 {
+            write!(f, "{:.1}", self.0)
+        } else {
+            write!(f, "{:.2}", self.0)
+        }
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0 as f64;
+        if b >= 1e9 {
+            write!(f, "{:.1} GB", b / 1e9)
+        } else if b >= 1e6 {
+            write!(f, "{:.1} MB", b / 1e6)
+        } else if b >= 1e3 {
+            write!(f, "{:.1} KB", b / 1e3)
+        } else {
+            write!(f, "{} B", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watt_seconds_are_joules() {
+        assert_eq!(Watts(500.0).for_secs(2.0).0, 1000.0);
+    }
+
+    #[test]
+    fn kwh_conversion() {
+        assert!((Joules(3.6e6).kwh() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_display() {
+        assert_eq!(Bytes(55_000).to_string(), "55.0 KB");
+        assert_eq!(Bytes::from_gb(60.0).to_string(), "60.0 GB");
+    }
+}

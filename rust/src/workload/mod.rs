@@ -1,0 +1,10 @@
+//! Workload modeling: context-length CDFs for the paper's traces
+//! ([`cdf`]), synthetic request generation with Poisson arrivals
+//! ([`synth`]), and trace records with CSV I/O ([`trace`]).
+
+pub mod cdf;
+pub mod synth;
+pub mod trace;
+
+pub use cdf::{LengthCdf, WorkloadTrace, Archetype};
+pub use trace::Request;

@@ -1,0 +1,158 @@
+//! Synthetic request generation: Poisson arrivals at rate λ with prompt
+//! lengths drawn from a trace CDF and output lengths from a lognormal
+//! matched to the trace's mean — the steady-state traffic model the
+//! paper's fleet sizing assumes (§10.1 "Steady-state traffic").
+
+use super::cdf::WorkloadTrace;
+use super::trace::Request;
+use crate::xrand::Rng;
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    /// Arrival rate, requests/second (the paper's fleets use λ = 1000).
+    pub lambda_rps: f64,
+    /// Trace duration, seconds.
+    pub duration_s: f64,
+    /// Cap on prompt length (the serving context window minus headroom
+    /// for output); longer samples are clamped.
+    pub max_prompt_tokens: u32,
+    /// Cap on output length.
+    pub max_output_tokens: u32,
+    pub seed: u64,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            lambda_rps: 1000.0,
+            duration_s: 60.0,
+            max_prompt_tokens: 131_072,
+            max_output_tokens: 4096,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a deterministic request trace.
+pub fn generate(trace: &WorkloadTrace, cfg: &GenConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0u64;
+
+    // Lognormal(mu, sigma) with mean = mean_output_tokens:
+    // mean = exp(mu + sigma^2/2)  =>  mu = ln(mean) - sigma^2/2.
+    let sigma = trace.output_sigma;
+    let mu = trace.mean_output_tokens.ln() - sigma * sigma / 2.0;
+
+    loop {
+        t += rng.exp(cfg.lambda_rps);
+        if t > cfg.duration_s {
+            break;
+        }
+        let prompt = trace
+            .prompt_cdf
+            .sample(&mut rng)
+            .round()
+            .max(1.0)
+            .min(cfg.max_prompt_tokens as f64) as u32;
+        let output = rng
+            .lognormal(mu, sigma)
+            .round()
+            .max(1.0)
+            .min(cfg.max_output_tokens as f64) as u32;
+        out.push(Request {
+            id,
+            arrival_s: t,
+            prompt_tokens: prompt,
+            output_tokens: output,
+        });
+        id += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::cdf::{azure_conversations, lmsys_chat};
+
+    #[test]
+    fn arrival_rate_matches_lambda() {
+        let cfg = GenConfig {
+            lambda_rps: 500.0,
+            duration_s: 20.0,
+            seed: 1,
+            ..Default::default()
+        };
+        let reqs = generate(&azure_conversations(), &cfg);
+        let rate = reqs.len() as f64 / cfg.duration_s;
+        assert!(
+            (rate - 500.0).abs() / 500.0 < 0.05,
+            "empirical rate = {rate}"
+        );
+    }
+
+    #[test]
+    fn arrivals_sorted_and_in_range() {
+        let cfg = GenConfig {
+            lambda_rps: 100.0,
+            duration_s: 5.0,
+            seed: 2,
+            ..Default::default()
+        };
+        let reqs = generate(&lmsys_chat(), &cfg);
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        assert!(reqs.iter().all(|r| r.arrival_s <= 5.0 && r.arrival_s > 0.0));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = GenConfig { seed: 7, duration_s: 2.0, ..Default::default() };
+        let a = generate(&azure_conversations(), &cfg);
+        let b = generate(&azure_conversations(), &cfg);
+        assert_eq!(a, b);
+        let c = generate(
+            &azure_conversations(),
+            &GenConfig { seed: 8, duration_s: 2.0, ..Default::default() },
+        );
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn output_mean_close_to_trace_mean() {
+        let cfg = GenConfig {
+            lambda_rps: 2000.0,
+            duration_s: 30.0,
+            seed: 3,
+            ..Default::default()
+        };
+        let trace = azure_conversations();
+        let reqs = generate(&trace, &cfg);
+        let mean: f64 = reqs.iter().map(|r| r.output_tokens as f64).sum::<f64>()
+            / reqs.len() as f64;
+        assert!(
+            (mean - trace.mean_output_tokens).abs() / trace.mean_output_tokens
+                < 0.08,
+            "mean output = {mean}"
+        );
+    }
+
+    #[test]
+    fn clamps_respected() {
+        let cfg = GenConfig {
+            lambda_rps: 1000.0,
+            duration_s: 5.0,
+            max_prompt_tokens: 2048,
+            max_output_tokens: 64,
+            seed: 4,
+        };
+        let reqs = generate(&azure_conversations(), &cfg);
+        assert!(reqs.iter().all(|r| r.prompt_tokens <= 2048));
+        assert!(reqs.iter().all(|r| r.output_tokens <= 64));
+        assert!(reqs.iter().all(|r| r.prompt_tokens >= 1 && r.output_tokens >= 1));
+    }
+}

@@ -1,0 +1,109 @@
+//! Request records and CSV trace I/O.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One inference request as the router/simulator/serving engine see it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time, seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt length, tokens.
+    pub prompt_tokens: u32,
+    /// Output (decode) length, tokens.
+    pub output_tokens: u32,
+}
+
+impl Request {
+    /// Total KV footprint the request reaches at completion.
+    pub fn total_tokens(&self) -> u32 {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// Serialize a trace to CSV (header + one row per request).
+pub fn to_csv(reqs: &[Request]) -> String {
+    let mut s = String::with_capacity(reqs.len() * 32 + 64);
+    s.push_str("id,arrival_s,prompt_tokens,output_tokens\n");
+    for r in reqs {
+        let _ = writeln!(
+            s,
+            "{},{:.6},{},{}",
+            r.id, r.arrival_s, r.prompt_tokens, r.output_tokens
+        );
+    }
+    s
+}
+
+/// Parse a CSV trace produced by [`to_csv`].
+pub fn from_csv(text: &str) -> crate::Result<Vec<Request>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 || line.trim().is_empty() {
+            continue; // header / blank
+        }
+        let mut f = line.split(',');
+        let mut next = |what: &str| {
+            f.next()
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing {what}", i + 1))
+        };
+        let id = next("id")?.trim().parse()?;
+        let arrival_s = next("arrival_s")?.trim().parse()?;
+        let prompt_tokens = next("prompt_tokens")?.trim().parse()?;
+        let output_tokens = next("output_tokens")?.trim().parse()?;
+        out.push(Request {
+            id,
+            arrival_s,
+            prompt_tokens,
+            output_tokens,
+        });
+    }
+    Ok(out)
+}
+
+/// Write a trace to disk.
+pub fn save_csv(path: &Path, reqs: &[Request]) -> crate::Result<()> {
+    std::fs::write(path, to_csv(reqs))?;
+    Ok(())
+}
+
+/// Load a trace from disk.
+pub fn load_csv(path: &Path) -> crate::Result<Vec<Request>> {
+    from_csv(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Request> {
+        vec![
+            Request { id: 0, arrival_s: 0.0, prompt_tokens: 100, output_tokens: 50 },
+            Request { id: 1, arrival_s: 0.5, prompt_tokens: 9000, output_tokens: 300 },
+        ]
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let reqs = sample();
+        let parsed = from_csv(&to_csv(&reqs)).unwrap();
+        assert_eq!(parsed, reqs);
+    }
+
+    #[test]
+    fn total_tokens() {
+        assert_eq!(sample()[1].total_tokens(), 9300);
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        assert!(from_csv("id,arrival_s,prompt_tokens,output_tokens\n1,2.0\n").is_err());
+    }
+
+    #[test]
+    fn blank_lines_skipped() {
+        let txt = "id,arrival_s,prompt_tokens,output_tokens\n\n0,0.0,1,1\n\n";
+        assert_eq!(from_csv(txt).unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,185 @@
+//! `xcheck` — a minimal property-based testing framework.
+//!
+//! `proptest`/`quickcheck` are not fetchable in this offline image, so this
+//! module provides the subset the test suites need: seeded generators,
+//! a `forall` runner that reports the failing seed and case number, and
+//! shrink-lite (on failure, retry with scaled-down numeric inputs to report
+//! a smaller counterexample when one exists).
+//!
+//! ```no_run
+//! use wattlaw::xcheck::forall;
+//! use wattlaw::xcheck_assert;
+//! forall("addition commutes", 200, |g| {
+//!     let a = g.f64_in(0.0, 1e6);
+//!     let b = g.f64_in(0.0, 1e6);
+//!     xcheck_assert!(a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::xrand::Rng;
+
+/// Property-case outcome.
+pub type CaseResult = Result<(), String>;
+
+/// Generator handle passed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Shrink factor in (0, 1]; 1 = full-range generation. During
+    /// shrinking retries the ranges contract toward their lower bound.
+    shrink: f64,
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, shrink: f64) -> Self {
+        Gen { rng: Rng::new(seed), shrink, log: Vec::new() }
+    }
+
+    fn note(&mut self, what: &str, v: impl std::fmt::Display) {
+        if self.log.len() < 64 {
+            self.log.push(format!("{what}={v}"));
+        }
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let hi_eff = lo + (hi - lo) * self.shrink;
+        let v = lo + self.rng.f64() * (hi_eff - lo);
+        self.note("f64", v);
+        v
+    }
+
+    /// Uniform u64 in [lo, hi] inclusive.
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        let hi_eff = lo + (((hi - lo) as f64) * self.shrink) as u64;
+        let v = self.rng.range_u64(lo, hi_eff.max(lo));
+        self.note("u64", v);
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64_in(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform u32 power of two in [2^lo_exp, 2^hi_exp].
+    pub fn pow2(&mut self, lo_exp: u32, hi_exp: u32) -> u32 {
+        let e = self.u64_in(lo_exp as u64, hi_exp as u64) as u32;
+        let v = 1u32 << e;
+        self.note("pow2", v);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.f64() < 0.5;
+        self.note("bool", v);
+        v
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T: std::fmt::Debug>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.range_usize(0, xs.len() - 1);
+        let v = &xs[i];
+        self.note("choose", format!("{v:?}"));
+        v
+    }
+
+    /// Access the raw RNG (for domain-specific sampling).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with seed + generated-value
+/// log on the first failure (after attempting shrink retries).
+pub fn forall<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    // Honor XCHECK_SEED for reproducing failures.
+    let base_seed = std::env::var("XCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0000u64);
+
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case);
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink-lite: retry the same seed with contracted ranges and
+            // report the smallest still-failing configuration.
+            let mut best: Option<(f64, String, Vec<String>)> = None;
+            for &s in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                let mut gs = Gen::new(seed, s);
+                if let Err(m2) = prop(&mut gs) {
+                    best = Some((s, m2, gs.log.clone()));
+                }
+            }
+            let (shrink, fmsg, flog) = best
+                .map(|(s, m, l)| (s, m, l))
+                .unwrap_or((1.0, msg, g.log.clone()));
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}, \
+                 shrink {shrink}):\n  {fmsg}\n  inputs: [{}]\n  \
+                 reproduce with XCHECK_SEED={seed}",
+                flog.join(", ")
+            );
+        }
+    }
+}
+
+/// Assertion macro for property bodies: returns `Err(String)` instead of
+/// panicking so the runner can shrink and report.
+#[macro_export]
+macro_rules! xcheck_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", 50, |g| {
+            let _ = g.f64_in(0.0, 1.0);
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_context() {
+        forall("always fails", 10, |g| {
+            let x = g.f64_in(0.0, 100.0);
+            xcheck_assert!(x < 0.0, "x = {x} is not negative");
+            #[allow(unreachable_code)]
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("bounds", 200, |g| {
+            let f = g.f64_in(5.0, 6.0);
+            xcheck_assert!((5.0..6.0).contains(&f), "f={f}");
+            let u = g.u64_in(10, 20);
+            xcheck_assert!((10..=20).contains(&u), "u={u}");
+            let p = g.pow2(3, 10);
+            xcheck_assert!(p.is_power_of_two() && (8..=1024).contains(&p), "p={p}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,220 @@
+//! Serving-stack integration without PJRT: router → batcher + scheduler +
+//! paged KV + energy metering, driven by a synthetic executor. (The real
+//! PJRT path is covered by tests/runtime_roundtrip.rs.)
+
+use wattlaw::power::LogisticPower;
+use wattlaw::router::context::ContextRouter;
+use wattlaw::router::fleetopt::FleetOptRouter;
+use wattlaw::router::semantic::SemanticRouter;
+use wattlaw::router::Router;
+use wattlaw::serve::batcher::{Batcher, SlotWork};
+use wattlaw::serve::energy::EnergyMeter;
+use wattlaw::serve::kvblocks::BlockAllocator;
+use wattlaw::serve::metrics::ServeMetrics;
+use wattlaw::serve::request::ServeRequest;
+use wattlaw::serve::scheduler::{schedule, SchedulerPolicy};
+use wattlaw::workload::synth::{generate, GenConfig};
+use wattlaw::workload::Request;
+
+/// Drive a batcher with a fixed virtual step time, a scheduler policy and
+/// an energy meter — a synthetic engine.
+fn drive(
+    batcher: &mut Batcher,
+    policy: &SchedulerPolicy,
+    step_s: f64,
+) -> (ServeMetrics, EnergyMeter) {
+    let mut metrics = ServeMetrics::default();
+    let mut meter = EnergyMeter::new(LogisticPower::h100(), 1.0, 0.0);
+    let mut t = 0.0;
+    let mut guard = 0u64;
+    while batcher.has_work() {
+        batcher.admit(t);
+        let plan = schedule(batcher, policy);
+        let n = plan.iter().filter(|w| !matches!(w, SlotWork::Idle)).count();
+        assert!(n > 0, "wedged");
+        t += step_s;
+        meter.observe(t, n as f64);
+        for (i, w) in plan.into_iter().enumerate() {
+            match w {
+                SlotWork::Idle => {}
+                SlotWork::Decode => {
+                    meter.add_output_tokens(1);
+                    if let Some(c) = batcher.on_step(i, SlotWork::Decode, t) {
+                        metrics.record(&c);
+                    }
+                }
+                ingest => {
+                    batcher.on_step(i, ingest, t);
+                }
+            }
+        }
+        guard += 1;
+        assert!(guard < 2_000_000, "runaway");
+    }
+    (metrics, meter)
+}
+
+fn requests(n: usize, seed: u64, max_prompt: u32) -> Vec<ServeRequest> {
+    let reqs = generate(
+        &wattlaw::workload::cdf::lmsys_chat(),
+        &GenConfig {
+            lambda_rps: 100.0,
+            duration_s: 60.0,
+            max_prompt_tokens: max_prompt,
+            max_output_tokens: 128,
+            seed,
+        },
+    );
+    reqs.iter().take(n).map(ServeRequest::from).collect()
+}
+
+#[test]
+fn synthetic_engine_completes_everything_and_accounts_energy() {
+    let mut b = Batcher::new(16, BlockAllocator::new(64, 4096), 256, 8192);
+    let reqs = requests(200, 1, 4000);
+    let total_out: u64 = reqs.iter().map(|r| r.output_tokens as u64).sum();
+    for mut r in reqs {
+        r.arrival_s = 0.0;
+        assert!(b.submit(r));
+    }
+    let (metrics, meter) = drive(&mut b, &SchedulerPolicy::default(), 0.02);
+    assert_eq!(metrics.completed, 200);
+    assert_eq!(meter.output_tokens(), total_out);
+    assert!(meter.joules().0 > 0.0);
+    assert_eq!(b.blocks.used(), 0, "all KV released");
+}
+
+#[test]
+fn ingest_cap_slows_ttft_but_never_deadlocks() {
+    let strict = SchedulerPolicy { max_ingest_slots: 1, ingest_fifo: true };
+    let loose = SchedulerPolicy { max_ingest_slots: 16, ingest_fifo: true };
+    let run = |policy: &SchedulerPolicy| {
+        let mut b = Batcher::new(8, BlockAllocator::new(64, 2048), 128, 8192);
+        for mut r in requests(40, 2, 3000) {
+            r.arrival_s = 0.0;
+            b.submit(r);
+        }
+        let (mut m, _) = drive(&mut b, policy, 0.02);
+        (m.completed, m.ttft_s.p99())
+    };
+    let (done_strict, ttft_strict) = run(&strict);
+    let (done_loose, ttft_loose) = run(&loose);
+    assert_eq!(done_strict, 40);
+    assert_eq!(done_loose, 40);
+    assert!(
+        ttft_strict >= ttft_loose,
+        "capping ingest cannot improve TTFT tails: {ttft_strict} vs {ttft_loose}"
+    );
+}
+
+#[test]
+fn routers_partition_and_preserve_traffic() {
+    let trace: Vec<Request> = generate(
+        &wattlaw::workload::cdf::azure_conversations(),
+        &GenConfig {
+            lambda_rps: 500.0,
+            duration_s: 4.0,
+            max_prompt_tokens: 100_000,
+            max_output_tokens: 512,
+            seed: 9,
+        },
+    );
+
+    for router in [
+        Box::new(ContextRouter::two_pool(4096)) as Box<dyn Router>,
+        Box::new(FleetOptRouter::new(4096, 2.0)),
+        Box::new(SemanticRouter::new(0.35)),
+    ] {
+        let mut counts = vec![0usize; router.num_pools()];
+        for r in &trace {
+            let route = router.route(r);
+            assert!(route.pool < router.num_pools(), "{}", router.name());
+            assert!(route.effective_prompt_tokens >= 1);
+            assert!(
+                route.effective_prompt_tokens <= r.prompt_tokens,
+                "routing may only shrink prompts ({})",
+                router.name()
+            );
+            counts[route.pool] += 1;
+        }
+        let total: usize = counts.iter().sum();
+        assert_eq!(total, trace.len(), "{}", router.name());
+        assert!(
+            counts.iter().all(|&c| c > 0),
+            "{}: every pool sees traffic on Azure: {counts:?}",
+            router.name()
+        );
+    }
+}
+
+#[test]
+fn fleetopt_compression_lets_more_sequences_fit() {
+    // 32 long requests through the FleetOpt router at γ=2: the compressed
+    // prompts halve the KV footprint, so a fixed block budget admits ~2×
+    // the concurrency vs. the uncompressed context router.
+    let long_reqs: Vec<Request> = (0..32)
+        .map(|i| Request {
+            id: i,
+            arrival_s: 0.0,
+            prompt_tokens: 3_000,
+            output_tokens: 50,
+        })
+        .collect();
+
+    let concurrency = |router: &dyn Router| {
+        let mut b = Batcher::new(32, BlockAllocator::new(64, 192), 512, 65_536);
+        for r in &long_reqs {
+            let route = router.route(r);
+            let mut s = ServeRequest::from(r);
+            s.prompt_tokens = route.effective_prompt_tokens;
+            b.submit(s);
+        }
+        b.admit(0.0);
+        b.active()
+    };
+    let plain = concurrency(&ContextRouter::two_pool(1024));
+    let compressed = concurrency(&FleetOptRouter::new(1024, 2.0));
+    assert!(
+        compressed >= plain * 2 - 1,
+        "γ=2 admits ~2×: {compressed} vs {plain}"
+    );
+}
+
+#[test]
+fn memory_pressure_stalls_then_recovers() {
+    // Pool with room for exactly two full-window sequences.
+    let mut b = Batcher::new(8, BlockAllocator::new(64, 16), 64, 512);
+    for i in 0..6u64 {
+        b.submit(ServeRequest {
+            id: i,
+            prompt_tokens: 400,
+            output_tokens: 30,
+            arrival_s: 0.0,
+        });
+    }
+    let (metrics, _) = drive(&mut b, &SchedulerPolicy::default(), 0.01);
+    assert_eq!(metrics.completed, 6, "stalled admissions eventually run");
+}
+
+#[test]
+fn energy_meter_matches_closed_form_over_constant_load() {
+    // n=8 held for exactly 1000 steps of 10 ms -> 10 s at P(8) = 369.4 W.
+    let mut b = Batcher::new(8, BlockAllocator::new(64, 4096), 64, 4096);
+    for i in 0..8u64 {
+        b.submit(ServeRequest {
+            id: i,
+            prompt_tokens: 1, // join immediately
+            output_tokens: 1000,
+            arrival_s: 0.0,
+        });
+    }
+    let (_, meter) = drive(&mut b, &SchedulerPolicy { max_ingest_slots: 8, ingest_fifo: false }, 0.01);
+    // 1 ingest step + 1000 decode steps each. Mean batch ≈ 8 throughout.
+    let expect_j = LogisticPower::h100().power_w(8.0) * meter.elapsed_s();
+    assert!(
+        (meter.joules().0 - expect_j).abs() / expect_j < 0.02,
+        "J = {} vs closed-form {}",
+        meter.joules().0,
+        expect_j
+    );
+}

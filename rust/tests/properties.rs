@@ -1,0 +1,431 @@
+//! Property-based suites (via the in-crate `xcheck` mini-framework):
+//! invariants of the power model, KV geometry, roofline, queueing,
+//! workload CDFs, routing, paged allocation and continuous batching under
+//! randomized inputs.
+
+use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use wattlaw::model::spec::{CATALOG, LLAMA31_70B};
+use wattlaw::model::{kappa_bytes_per_token, n_max, KvPlacement};
+use wattlaw::power::{Gpu, LogisticPower};
+use wattlaw::queueing::erlang;
+use wattlaw::roofline::Roofline;
+use wattlaw::router::context::ContextRouter;
+use wattlaw::router::fleetopt::FleetOptRouter;
+use wattlaw::router::Router;
+use wattlaw::serve::batcher::{Batcher, SlotWork};
+use wattlaw::serve::kvblocks::BlockAllocator;
+use wattlaw::serve::request::ServeRequest;
+use wattlaw::tokeconomy::operating_point;
+use wattlaw::workload::cdf::{agent_heavy, azure_conversations, lmsys_chat};
+use wattlaw::workload::Request;
+use wattlaw::xcheck::forall;
+use wattlaw::xcheck_assert;
+
+#[test]
+fn prop_power_monotone_and_bounded() {
+    forall("P(b) monotone, in [idle, nom]", 300, |g| {
+        let gpu = *g.choose(&Gpu::ALL);
+        let p = gpu.spec().power;
+        let b1 = g.f64_in(0.0, 2000.0);
+        let b2 = g.f64_in(0.0, 2000.0);
+        let (lo, hi) = if b1 <= b2 { (b1, b2) } else { (b2, b1) };
+        let w_lo = p.power_w(lo);
+        let w_hi = p.power_w(hi);
+        xcheck_assert!(w_lo <= w_hi + 1e-9, "P({lo})={w_lo} > P({hi})={w_hi}");
+        xcheck_assert!(w_lo >= p.p_idle_w - 1e-9 && w_hi <= p.p_nom_w + 1e-9);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nmax_scaling_eq3() {
+    forall("n_max inversely proportional to context (within floor)", 300, |g| {
+        let v_kv = g.f64_in(1e9, 2e11);
+        let model = CATALOG[g.usize_in(0, CATALOG.len() - 1)];
+        let kappa = kappa_bytes_per_token(model, KvPlacement::Sharded, 8);
+        let ctx = g.pow2(10, 16);
+        let n1 = n_max(v_kv, kappa, ctx);
+        let n2 = n_max(v_kv, kappa, ctx * 2);
+        // Doubling context at least halves (floor can only shrink n2).
+        xcheck_assert!(
+            n2 <= n1 / 2 + 1,
+            "n_max({ctx})={n1}, n_max({})={n2}",
+            ctx * 2
+        );
+        // And never to zero.
+        xcheck_assert!(n2 >= 1);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_roofline_monotonicity() {
+    forall("τ increasing in n and L̄; throughput increasing in n", 300, |g| {
+        let r = Roofline::manual(g.f64_in(1.0, 10.0), g.f64_in(0.01, 0.5));
+        let n = g.f64_in(1.0, 512.0);
+        let l = g.f64_in(128.0, 131_072.0);
+        xcheck_assert!(r.tau_ms(n + 1.0, l) > r.tau_ms(n, l));
+        xcheck_assert!(r.tau_ms(n, l * 1.5) > r.tau_ms(n, l));
+        // More concurrency still yields more total throughput (τ is
+        // affine in n with positive intercept).
+        xcheck_assert!(
+            r.throughput_tok_s(n + 1.0, l) > r.throughput_tok_s(n, l)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tok_per_watt_decreasing_in_context() {
+    forall("Eq. 2 tok/W strictly decreasing in window", 100, |g| {
+        let p = ManualProfile::h100_70b();
+        let c1 = g.pow2(11, 16);
+        let c2 = c1 * 2;
+        let t1 = operating_point(&p, c1, 1.0, PowerAccounting::PerGpu)
+            .tok_per_watt
+            .0;
+        let t2 = operating_point(&p, c2, 1.0, PowerAccounting::PerGpu)
+            .tok_per_watt
+            .0;
+        xcheck_assert!(t2 < t1, "tok/W({c2})={t2} !< tok/W({c1})={t1}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_erlang_c_bounds_and_monotonicity() {
+    forall("Erlang-C in [0,1], decreasing in c, increasing in a", 300, |g| {
+        let c = g.u64_in(1, 500);
+        let a = g.f64_in(0.1, c as f64 * 0.99);
+        let pc = erlang::erlang_c(c, a);
+        xcheck_assert!((0.0..=1.0).contains(&pc), "C({c},{a})={pc}");
+        let pc_more_servers = erlang::erlang_c(c + 1, a);
+        xcheck_assert!(pc_more_servers <= pc + 1e-12);
+        let pc_more_load = erlang::erlang_c(c, (a * 1.01).min(c as f64 * 0.999));
+        xcheck_assert!(pc_more_load >= pc - 1e-12);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cdf_quantile_inverse() {
+    forall("CDF/quantile inverse pair; monotone", 200, |g| {
+        let trace = match g.usize_in(0, 2) {
+            0 => azure_conversations(),
+            1 => lmsys_chat(),
+            _ => agent_heavy(),
+        };
+        let p = g.f64_in(0.01, 0.99);
+        let x = trace.prompt_cdf.quantile(p);
+        let back = trace.prompt_cdf.frac_leq(x);
+        xcheck_assert!((back - p).abs() < 1e-6, "p={p} x={x} back={back}");
+        let p2 = g.f64_in(0.01, 0.99);
+        let (lo, hi) = if p <= p2 { (p, p2) } else { (p2, p) };
+        xcheck_assert!(
+            trace.prompt_cdf.quantile(lo) <= trace.prompt_cdf.quantile(hi) + 1e-9
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routing_total_and_deterministic() {
+    forall("routers are total, stable, pool-bounded", 300, |g| {
+        let b_short = g.pow2(9, 14);
+        let gamma = g.f64_in(1.0, 4.0);
+        let req = Request {
+            id: g.u64_in(0, u64::MAX / 2),
+            arrival_s: 0.0,
+            prompt_tokens: g.u64_in(1, 131_072) as u32,
+            output_tokens: g.u64_in(1, 4096) as u32,
+        };
+        for router in [
+            Box::new(ContextRouter::two_pool(b_short)) as Box<dyn Router>,
+            Box::new(FleetOptRouter::new(b_short, gamma)),
+        ] {
+            let r1 = router.route(&req);
+            let r2 = router.route(&req);
+            xcheck_assert!(r1 == r2, "non-deterministic {}", router.name());
+            xcheck_assert!(r1.pool < router.num_pools());
+            xcheck_assert!(r1.effective_prompt_tokens >= 1);
+            xcheck_assert!(r1.effective_prompt_tokens <= req.prompt_tokens);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_allocator_conservation() {
+    forall("blocks conserved across admit/grow/release", 150, |g| {
+        let blocks = g.u64_in(8, 512) as u32;
+        let mut a = BlockAllocator::new(64, blocks);
+        let n_ops = g.usize_in(1, 60);
+        let mut live: Vec<u64> = Vec::new();
+        for op in 0..n_ops {
+            match g.usize_in(0, 2) {
+                0 => {
+                    let id = op as u64;
+                    if a.admit(id, g.u64_in(1, 2048) as u32) {
+                        live.push(id);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        a.grow(live[idx], g.u64_in(1, 4096) as u32);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        a.release(live.swap_remove(idx));
+                    }
+                }
+            }
+            xcheck_assert!(a.used() <= blocks, "overcommit");
+        }
+        for id in live {
+            a.release(id);
+        }
+        xcheck_assert!(a.used() == 0, "leak: {} blocks", a.used());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_serves_everything_exactly_once() {
+    forall("batcher completes each request once, frees all memory", 60, |g| {
+        let slots = g.usize_in(1, 12);
+        let blocks = g.u64_in(64, 1024) as u32;
+        let window = 4096u32;
+        let mut b = Batcher::new(slots, BlockAllocator::new(64, blocks), 128, window);
+        let n_reqs = g.usize_in(1, 40);
+        let mut submitted = 0u64;
+        for i in 0..n_reqs {
+            let prompt = g.u64_in(1, 2048) as u32;
+            let output = g.u64_in(1, 256) as u32;
+            let ok = b.submit(ServeRequest {
+                id: i as u64,
+                prompt_tokens: prompt,
+                output_tokens: output,
+                arrival_s: 0.0,
+            });
+            // Requests that fit the window must be accepted.
+            xcheck_assert!(ok == (prompt + output <= window));
+            if ok {
+                submitted += 1;
+            }
+        }
+        let mut completed = std::collections::HashSet::new();
+        let mut t = 0.0;
+        let mut guard = 0;
+        while b.has_work() {
+            b.admit(t);
+            t += 1.0;
+            let plan = b.plan();
+            let active = plan.iter().any(|w| !matches!(w, SlotWork::Idle));
+            xcheck_assert!(active, "wedged with queued work");
+            for (i, w) in plan.into_iter().enumerate() {
+                if !matches!(w, SlotWork::Idle) {
+                    if let Some(c) = b.on_step(i, w, t) {
+                        xcheck_assert!(
+                            completed.insert(c.id),
+                            "duplicate completion {}",
+                            c.id
+                        );
+                    }
+                }
+            }
+            guard += 1;
+            xcheck_assert!(guard < 500_000, "runaway");
+        }
+        xcheck_assert!(
+            completed.len() as u64 == submitted,
+            "{} of {} completed",
+            completed.len(),
+            submitted
+        );
+        xcheck_assert!(b.blocks.used() == 0, "KV leak");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_logistic_fit_recovers_random_truths() {
+    forall("fit recovers randomly parameterized logistics", 40, |g| {
+        let truth = LogisticPower::new(
+            g.f64_in(100.0, 600.0),
+            g.f64_in(700.0, 1300.0),
+            g.f64_in(0.6, 2.0),
+            g.f64_in(2.0, 8.0),
+        );
+        let samples: Vec<_> = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0,
+                               256.0, 512.0, 1024.0]
+            .iter()
+            .map(|&b| wattlaw::power::mlenergy::PowerSample {
+                batch: b,
+                watts: truth.power_w(b),
+            })
+            .collect();
+        let fit = wattlaw::power::fit::fit_logistic(&samples);
+        xcheck_assert!(
+            fit.max_rel_err < 0.02,
+            "fit err {} for truth {truth:?}",
+            fit.max_rel_err
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fleet_profiles_consistent() {
+    forall("profile n_max halves per doubling; power per-group = tp × per-gpu",
+           120, |g| {
+        let gpu = *g.choose(&Gpu::ALL);
+        let p = ManualProfile::for_gpu(gpu);
+        let ctx = g.pow2(11, 16);
+        let n1 = p.n_max(ctx);
+        let n2 = p.n_max(ctx * 2);
+        xcheck_assert!(n2 <= n1 / 2 + 1 && n2 >= 1);
+        let b = g.f64_in(0.0, 512.0);
+        let per_gpu = p.group_power_w(b, PowerAccounting::PerGpu);
+        let per_group = p.group_power_w(b, PowerAccounting::PerGroup);
+        xcheck_assert!((per_group / per_gpu - p.tp() as f64).abs() < 1e-9);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_never_hurts_dense_throughput() {
+    use wattlaw::model::spec::Precision;
+    forall("fp8 ≥ fp16 throughput for dense models at any point", 100, |g| {
+        let gpu = *g.choose(&Gpu::ALL);
+        let n = g.f64_in(1.0, 256.0);
+        let l = g.f64_in(512.0, 65_536.0);
+        let f16 = Roofline::from_specs(
+            gpu.spec(), &LLAMA31_70B, Precision::Fp16, 8, KvPlacement::Sharded);
+        let f8 = Roofline::from_specs(
+            gpu.spec(), &LLAMA31_70B, Precision::Fp8, 8, KvPlacement::Sharded);
+        xcheck_assert!(
+            f8.throughput_tok_s(n, l) >= f16.throughput_tok_s(n, l)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_carbon_metrics_linear_in_intensity() {
+    use wattlaw::fleet::carbon::{carbon_report, GridContext};
+    use wattlaw::fleet::analysis::fleet_tpw_analysis;
+    use wattlaw::fleet::pool::LBarPolicy;
+    use wattlaw::fleet::topology::{Topology, LONG_CTX};
+    use std::sync::Arc;
+    let pools = Topology::Homogeneous { ctx: LONG_CTX }.pools(
+        &azure_conversations(), 1000.0,
+        Arc::new(ManualProfile::h100_70b()), None,
+        LBarPolicy::Window, 0.85, 0.5);
+    let fleet = fleet_tpw_analysis(&pools, PowerAccounting::PerGpu);
+    forall("gCO2/token linear in grid intensity; $/Mtok in price", 100, |g| {
+        let base = GridContext {
+            pue: g.f64_in(1.0, 2.0),
+            carbon_g_per_kwh: g.f64_in(10.0, 1000.0),
+            price_per_kwh: g.f64_in(0.01, 0.5),
+        };
+        let k = g.f64_in(1.1, 5.0);
+        let scaled = GridContext {
+            carbon_g_per_kwh: base.carbon_g_per_kwh * k,
+            price_per_kwh: base.price_per_kwh * k,
+            ..base
+        };
+        let a = carbon_report(&fleet, &base);
+        let b = carbon_report(&fleet, &scaled);
+        xcheck_assert!(
+            (b.g_co2_per_token / a.g_co2_per_token - k).abs() < 1e-9,
+            "carbon not linear"
+        );
+        xcheck_assert!(
+            (b.usd_per_mtok / a.usd_per_mtok - k).abs() < 1e-9,
+            "cost not linear"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_speculative_bounds() {
+    use wattlaw::roofline::speculative::{spec_point, SpecConfig};
+    let r = Roofline::manual(6.72, 0.1387);
+    let p = LogisticPower::h100();
+    forall("speculative point is physically bounded", 200, |g| {
+        let cfg = SpecConfig {
+            k: g.u64_in(1, 8) as u32,
+            alpha: g.f64_in(0.0, 0.99),
+            draft_w_ms: g.f64_in(0.01, 1.0),
+            draft_power_scale: g.f64_in(0.5, 1.0),
+        };
+        let n = g.f64_in(1.0, 128.0);
+        let s = spec_point(&r, &p, &cfg, n, 8192.0);
+        // Expected tokens per iter in [1, k+1].
+        xcheck_assert!(
+            s.expected_tokens_per_iter >= 1.0
+                && s.expected_tokens_per_iter <= (cfg.k + 1) as f64 + 1e-12,
+            "E[tok] = {}",
+            s.expected_tokens_per_iter
+        );
+        // Power within the logistic envelope.
+        xcheck_assert!(
+            s.power_w >= p.p_idle_w * cfg.draft_power_scale.min(1.0) - 1e-9
+                && s.power_w <= p.p_nom_w + 1e-9,
+            "P = {}",
+            s.power_w
+        );
+        xcheck_assert!(s.tok_per_watt.is_finite() && s.tok_per_watt > 0.0);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_controller_stays_on_grid() {
+    use wattlaw::fleet::adaptive::{AdaptiveSplit, BOUNDS};
+    forall("adaptive boundary always on the planner grid", 50, |g| {
+        let mut ctl = AdaptiveSplit::new(4096, 512);
+        let n = g.usize_in(100, 3000);
+        for _ in 0..n {
+            let p = g.u64_in(1, 131_072) as u32;
+            let b = ctl.observe(p);
+            xcheck_assert!(
+                BOUNDS.contains(&b) || b == 4096,
+                "boundary {b} off grid"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_disagg_total_never_exceeds_decode_only() {
+    use wattlaw::fleet::disagg::disaggregate;
+    use wattlaw::fleet::pool::LBarPolicy;
+    use wattlaw::fleet::topology::Topology;
+    use std::sync::Arc;
+    forall("prefill power only ever lowers tok/W", 20, |g| {
+        let b_short = g.pow2(11, 14);
+        let r = disaggregate(
+            &azure_conversations(),
+            g.f64_in(100.0, 2000.0),
+            Arc::new(ManualProfile::h100_70b()),
+            &Topology::FleetOpt {
+                b_short,
+                short_ctx: b_short,
+                gamma: g.f64_in(1.0, 4.0),
+            },
+            LBarPolicy::Window,
+            0.85,
+            0.5,
+            PowerAccounting::PerGpu,
+        );
+        xcheck_assert!(r.tok_per_watt_total <= r.tok_per_watt_decode_only);
+        xcheck_assert!(r.prefill_groups >= 1);
+        Ok(())
+    });
+}

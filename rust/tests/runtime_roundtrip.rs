@@ -1,0 +1,175 @@
+//! Real-runtime integration: the AOT artifacts through PJRT — golden
+//! numerics, incremental-vs-prefill consistency, engine E2E, and a leak
+//! regression guard.
+//!
+//! These tests need `make artifacts`; they skip (pass trivially with a
+//! notice) when the artifacts directory is absent so `cargo test` works
+//! on a fresh checkout.
+
+use std::path::PathBuf;
+
+use wattlaw::router::context::ContextRouter;
+use wattlaw::runtime::TinyModel;
+use wattlaw::serve::{serve_trace, EngineConfig, PoolSpec};
+use wattlaw::workload::Request;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = wattlaw::runtime::default_artifacts_dir();
+    if dir.join("decode_step.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts missing — run `make artifacts`; skipping");
+        None
+    }
+}
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for l in s.lines() {
+        if let Some(rest) = l.strip_prefix("VmRSS:") {
+            return rest
+                .split_whitespace()
+                .next()
+                .and_then(|v| v.parse::<f64>().ok())
+                .unwrap_or(0.0)
+                / 1024.0;
+        }
+    }
+    0.0
+}
+
+#[test]
+fn golden_numerics_match_jax() {
+    let Some(dir) = artifacts() else { return };
+    let model = TinyModel::load(&dir).unwrap();
+    let err = model.validate_golden().unwrap();
+    assert!(err < 1e-3, "max |err| = {err}");
+}
+
+#[test]
+fn decode_continues_prefill_consistently() {
+    // Feed the same tokens two ways: (a) prefill of length t, then decode
+    // the token at position t; (b) prefill of length t+1. The last-step
+    // logits must agree — the Rust-side version of the python
+    // `test_decode_consistent_with_prefill` invariant, across the whole
+    // AOT + PJRT + container stack.
+    let Some(dir) = artifacts() else { return };
+    let model = TinyModel::load(&dir).unwrap();
+    let b = model.cfg.batch as usize;
+    let t_pref = model.cfg.prefill_len as usize;
+    let t = 6usize;
+
+    let tokens: Vec<i32> = (0..b * t_pref).map(|i| (i % 29) as i32).collect();
+
+    // (a): prefill t, decode token at position t.
+    let lens_a = vec![t as i32; b];
+    let (_, kv_k, kv_v) = model.prefill(&tokens, &lens_a).unwrap();
+    let next: Vec<i32> =
+        (0..b).map(|r| tokens[r * t_pref + t]).collect();
+    let pos = vec![t as i32; b];
+    let (logits_a, _, _) = model.decode_step(&next, &kv_k, &kv_v, &pos).unwrap();
+
+    // (b): prefill t+1 directly.
+    let lens_b = vec![(t + 1) as i32; b];
+    let (logits_b, _, _) = model.prefill(&tokens, &lens_b).unwrap();
+
+    let max_err = logits_a
+        .iter()
+        .zip(&logits_b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 2e-3, "incremental vs full prefill: {max_err}");
+}
+
+#[test]
+fn greedy_decode_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let model = TinyModel::load(&dir).unwrap();
+    let b = model.cfg.batch as usize;
+    let run = || {
+        let (mut kv_k, mut kv_v) = model.fresh_kv().unwrap();
+        let mut tok = vec![5i32; b];
+        let mut pos = vec![0i32; b];
+        let mut out = Vec::new();
+        for _ in 0..6 {
+            let (logits, k, v) =
+                model.decode_step(&tok, &kv_k, &kv_v, &pos).unwrap();
+            kv_k = k;
+            kv_v = v;
+            tok = model.argmax(&logits);
+            out.extend(tok.clone());
+            for p in &mut pos {
+                *p += 1;
+            }
+        }
+        out
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn engine_serves_real_requests_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let reqs: Vec<Request> = (0..8)
+        .map(|id| Request {
+            id,
+            arrival_s: 0.0,
+            prompt_tokens: 16 + 8 * id as u32,
+            output_tokens: 6,
+        })
+        .collect();
+    let pools = vec![
+        PoolSpec {
+            name: "short".into(),
+            config: EngineConfig::for_window(128, 16)
+                .with_ingest_slots(8)
+                .emulating_h100(4096),
+        },
+        PoolSpec {
+            name: "long".into(),
+            config: EngineConfig::for_window(480, 16)
+                .with_ingest_slots(8)
+                .emulating_h100(65_536),
+        },
+    ];
+    let report =
+        serve_trace(&dir, &ContextRouter::two_pool(128), &pools, &reqs).unwrap();
+    let done: u64 = report.pools.iter().map(|p| p.metrics.completed).sum();
+    assert_eq!(done, 8);
+    assert_eq!(report.total_output_tokens, 8 * 6);
+    assert!(report.tok_per_watt > 0.0);
+    assert!(report.golden_max_err < 1e-3);
+}
+
+#[test]
+fn decode_loop_does_not_leak() {
+    // Regression guard for the execute()-input leak (~45 MB/step before
+    // the owned-buffer fix): 40 steps must not grow RSS by >400 MB.
+    let Some(dir) = artifacts() else { return };
+    let model = TinyModel::load(&dir).unwrap();
+    let b = model.cfg.batch as usize;
+    let (mut kv_k, mut kv_v) = model.fresh_kv().unwrap();
+    let tok = vec![1i32; b];
+    let mut pos = vec![0i32; b];
+
+    // Warm up allocator pools.
+    for _ in 0..5 {
+        let (_, k, v) = model.decode_step(&tok, &kv_k, &kv_v, &pos).unwrap();
+        kv_k = k;
+        kv_v = v;
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    let before = rss_mb();
+    for _ in 0..40 {
+        let (_, k, v) = model.decode_step(&tok, &kv_k, &kv_v, &pos).unwrap();
+        kv_k = k;
+        kv_v = v;
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    let grown = rss_mb() - before;
+    assert!(grown < 400.0, "RSS grew {grown:.0} MB over 40 steps");
+}

@@ -1,0 +1,103 @@
+//! Bench: events/sec of the event-driven simulation core on a 16-group,
+//! 10k-request Azure trace — sequential shared-heap vs the parallel
+//! per-group fast path, plus the stateful-dispatch overhead (JSQ snapshots
+//! the fleet at every arrival).
+//!
+//! An "event" here is one engine iteration (step-complete) of one group;
+//! arrivals and wakes add a few percent on top. Record the headline
+//! events/sec numbers in CHANGES.md when they move.
+use wattlaw::benchkit::{black_box, BenchConfig, BenchGroup};
+use wattlaw::fleet::profile::{GpuProfile, ManualProfile};
+use wattlaw::router::context::ContextRouter;
+use wattlaw::sim::dispatch::{JoinShortestQueue, RoundRobin};
+use wattlaw::sim::{simulate_topology_with, GroupSimConfig};
+use wattlaw::workload::synth::{generate, GenConfig};
+
+fn main() {
+    // ~10k requests: λ=2000 × 5 s.
+    let trace = generate(
+        &wattlaw::workload::cdf::azure_conversations(),
+        &GenConfig {
+            lambda_rps: 2000.0,
+            duration_s: 5.0,
+            max_prompt_tokens: 30_000,
+            max_output_tokens: 256,
+            seed: 3,
+        },
+    );
+    println!("trace: {} requests", trace.len());
+
+    let p = ManualProfile::h100_70b();
+    let mk = |window: u32| GroupSimConfig {
+        window_tokens: window,
+        n_max: p.n_max(window),
+        roofline: p.roofline(),
+        power: p.gpu().power,
+        gpus_charged: 1.0,
+        ingest_chunk: 1024,
+    };
+    let router = ContextRouter::two_pool(4096);
+    let pool_groups = [8u32, 8u32];
+    let cfgs = [mk(4096 + 1024), mk(65_536)];
+
+    // The simulation itself is the workload: a handful of samples is
+    // plenty (each run is hundreds of ms), and --quick still shrinks it.
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("WATTLAW_BENCH_QUICK").is_ok();
+    let cfg = if quick {
+        BenchConfig { warmup_iters: 1, samples: 3, batch: 1 }
+    } else {
+        BenchConfig { warmup_iters: 1, samples: 5, batch: 1 }
+    };
+    let mut g = BenchGroup::new(
+        "sim engine — 16 groups, 10k-request trace (two-pool 4K/64K)",
+    )
+    .with_config(cfg);
+
+    let mut steps_seq = 0u64;
+    g.bench("event_core_sequential_rr", || {
+        let mut rr = RoundRobin::new();
+        let r = simulate_topology_with(
+            &trace, &router, &pool_groups, &cfgs, &mut rr, false,
+        );
+        steps_seq = r.steps;
+        black_box(r.output_tokens)
+    });
+    let mut steps_par = 0u64;
+    g.bench("event_core_parallel_rr", || {
+        let mut rr = RoundRobin::new();
+        let r = simulate_topology_with(
+            &trace, &router, &pool_groups, &cfgs, &mut rr, true,
+        );
+        steps_par = r.steps;
+        black_box(r.output_tokens)
+    });
+    let mut steps_jsq = 0u64;
+    g.bench("event_core_sequential_jsq", || {
+        let mut jsq = JoinShortestQueue;
+        let r = simulate_topology_with(
+            &trace, &router, &pool_groups, &cfgs, &mut jsq, true,
+        );
+        steps_jsq = r.steps;
+        black_box(r.output_tokens)
+    });
+
+    let stats = g.finish();
+    assert_eq!(steps_seq, steps_par, "parallel fast path must replay exactly");
+    println!();
+    for (name, steps, s) in [
+        ("sequential rr", steps_seq, &stats[0]),
+        ("parallel rr", steps_par, &stats[1]),
+        ("sequential jsq", steps_jsq, &stats[2]),
+    ] {
+        let ev_per_s = steps as f64 / (s.mean_ns / 1e9);
+        println!(
+            "{name:<16} {steps} step events, {:.0} events/sec (mean)",
+            ev_per_s
+        );
+    }
+    println!(
+        "parallel speedup over sequential (rr): {:.2}x",
+        stats[0].mean_ns / stats[1].mean_ns
+    );
+}

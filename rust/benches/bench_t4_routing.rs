@@ -1,10 +1,13 @@
 //! Bench T4: regenerate Table 4 (context vs semantic routing) and time
-//! the router hot path (the per-request O(1) decision).
+//! the router hot path (the per-request O(1) decision), including the
+//! load-aware live path (adaptive router reading a fleet snapshot).
 use wattlaw::benchkit::{black_box, BenchGroup};
+use wattlaw::router::adaptive::AdaptiveRouter;
 use wattlaw::router::context::ContextRouter;
 use wattlaw::router::fleetopt::FleetOptRouter;
 use wattlaw::router::semantic::SemanticRouter;
 use wattlaw::router::Router;
+use wattlaw::sim::{FleetState, GroupLoad, PoolLoad};
 use wattlaw::tables::t4;
 use wattlaw::workload::Request;
 
@@ -36,6 +39,33 @@ fn main() {
     });
     g.bench("route_1k_reqs_semantic", || {
         black_box(reqs.iter().map(|r| sem.route(r).pool).sum::<usize>())
+    });
+
+    // Load-aware live routing: the adaptive router reads a fleet
+    // snapshot per decision (the event engine's arrival path).
+    let adaptive = AdaptiveRouter::new(4096);
+    let pool = |backlog: usize, window: u32, n_max: u32, groups: usize| PoolLoad {
+        window_tokens: window,
+        n_max,
+        groups: vec![
+            GroupLoad {
+                queued: backlog,
+                active: n_max as usize / 2,
+                free_blocks: 1024,
+                used_blocks: 1024,
+            };
+            groups
+        ],
+    };
+    let state = FleetState {
+        pools: vec![pool(12, 5120, 128, 8), pool(1, 65_536, 16, 8)],
+    };
+    g.bench("route_live_1k_reqs_adaptive", || {
+        black_box(
+            reqs.iter()
+                .map(|r| adaptive.route_live(r, &state).pool)
+                .sum::<usize>(),
+        )
     });
     g.finish();
 }

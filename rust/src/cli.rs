@@ -1,13 +1,16 @@
 //! Command-line interface (hand-rolled: `clap` is not fetchable offline).
 //!
 //! ```text
-//! wattlaw tables [--all|--t1..--t7|--law|--power-fig|--independence] [--lbar window|traffic]
+//! wattlaw tables [--all|--t1..--t7|--law|--power-fig|--dispatch-fig|--independence]
+//!                [--lbar window|traffic]
 //! wattlaw fleet --trace azure|lmsys|agent --gpu h100|h200|b200|gb200
 //!               --topo homo|pool|fleetopt [--b-short N] [--gamma G]
 //!               [--lambda R] [--lbar window|traffic] [--acct pergpu|pergroup]
 //! wattlaw sweep --trace azure --gpu h100           FleetOpt (B_short, γ*) sweep
 //! wattlaw power [--gpu b200]                        P(b) curve
 //! wattlaw simulate [--trace azure] [--lambda R] [--duration S] [--groups N]
+//!                  [--dispatch rr|jsq|least-kv|power]
+//!                  [--router context|adaptive|fleetopt]
 //! wattlaw serve [--requests N] [--b-short N] [--artifacts DIR]
 //! wattlaw validate [--artifacts DIR]                golden numerics check
 //! wattlaw report                                    paper-vs-measured summary
@@ -37,9 +40,9 @@ pub struct Args {
 }
 
 /// Keys that are value-taking options; everything else with `--` is a flag.
-const VALUE_KEYS: [&str; 12] = [
+const VALUE_KEYS: [&str; 14] = [
     "lbar", "trace", "gpu", "topo", "b-short", "gamma", "lambda", "acct",
-    "requests", "artifacts", "duration", "groups",
+    "requests", "artifacts", "duration", "groups", "dispatch", "router",
 ];
 
 pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Args {
@@ -142,11 +145,12 @@ gains for LLM inference energy efficiency)
 
 commands:
   tables     regenerate paper tables/figures (--all, --t1..--t7, --law,
-             --power-fig, --independence; --lbar window|traffic)
+             --power-fig, --dispatch-fig, --independence; --lbar window|traffic)
   fleet      analyze one fleet configuration (--trace --gpu --topo ...)
   sweep      FleetOpt (B_short, γ*) optimization sweep
   power      print a GPU's P(b) curve (--gpu)
-  simulate   discrete-event fleet simulation vs analytics
+  simulate   event-driven fleet simulation vs analytics
+             (--dispatch rr|jsq|least-kv|power, --router context|adaptive|fleetopt)
   serve      serve a trace through the real AOT model (2-pool demo)
   validate   check runtime numerics against the JAX golden trace
   report     paper-vs-measured summary (EXPERIMENTS.md §input)
@@ -183,6 +187,9 @@ fn cmd_tables(args: &Args) -> crate::Result<i32> {
     }
     if all || args.flag("power-fig") {
         out.push_str(&tables::power_fig::generate());
+    }
+    if all || args.flag("dispatch-fig") {
+        out.push_str(&tables::dispatch_fig::generate());
     }
     if all || args.flag("independence") {
         out.push_str(&tables::independence::generate(lbar));
@@ -282,16 +289,35 @@ fn cmd_power(args: &Args) -> crate::Result<i32> {
 }
 
 fn cmd_simulate(args: &Args) -> crate::Result<i32> {
+    use crate::router::adaptive::AdaptiveRouter;
     use crate::router::context::ContextRouter;
-    use crate::router::HomogeneousRouter;
-    use crate::sim::{simulate_topology, GroupSimConfig};
+    use crate::router::fleetopt::FleetOptRouter;
+    use crate::router::{HomogeneousRouter, Router};
+    use crate::sim::{dispatch, simulate_topology_with, RoundRobin};
     use crate::workload::synth::{generate, GenConfig};
 
     let trace = args.trace();
     let lambda = args.opt_f64("lambda", 60.0);
     let duration = args.opt_f64("duration", 5.0);
-    let groups = args.opt_u32("groups", 4);
+    // The routed side of the comparison needs one group per pool.
+    let groups = args.opt_u32("groups", 4).max(2);
     let b_short = args.opt_u32("b-short", trace.paper_b_short);
+    let gamma = args.opt_f64("gamma", 2.0);
+
+    let dispatch_name = args.opt("dispatch").unwrap_or("rr");
+    let mut policy = dispatch::parse(dispatch_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown dispatch policy '{dispatch_name}' (rr|jsq|least-kv|power)"
+        )
+    })?;
+    let router: Box<dyn Router> = match args.opt("router") {
+        None | Some("context") => Box::new(ContextRouter::two_pool(b_short)),
+        Some("adaptive") => Box::new(AdaptiveRouter::new(b_short)),
+        Some("fleetopt") => Box::new(FleetOptRouter::new(b_short, gamma)),
+        Some(other) => {
+            anyhow::bail!("unknown router '{other}' (context|adaptive|fleetopt)")
+        }
+    };
 
     let reqs = generate(
         &trace,
@@ -305,31 +331,38 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
     );
 
     let p = ManualProfile::for_gpu(args.gpu());
-    let mk = |window: u32| GroupSimConfig {
-        window_tokens: window,
-        n_max: p.n_max(window),
-        roofline: p.roofline(),
-        power: p.gpu().power,
-        gpus_charged: 1.0,
-        ingest_chunk: 1024,
-    };
-
-    let homo = simulate_topology(&reqs, &HomogeneousRouter, &[groups], &[mk(LONG_CTX)]);
-    let split = groups.div_ceil(2);
-    // Short pool gets output headroom above the split boundary so routed
-    // requests always fit prompt+output.
-    let routed = simulate_topology(
+    let (homo_groups, homo_cfgs) =
+        Topology::Homogeneous { ctx: LONG_CTX }.sim_pools(&p, groups, 1024);
+    let mut rr = RoundRobin::new();
+    let homo = simulate_topology_with(
         &reqs,
-        &ContextRouter::two_pool(b_short),
-        &[split, groups - split],
-        &[mk(b_short.max(2048) + 1024), mk(LONG_CTX)],
+        &HomogeneousRouter,
+        &homo_groups,
+        &homo_cfgs,
+        &mut rr,
+        true,
+    );
+
+    let (routed_groups, routed_cfgs) =
+        Topology::PoolRouting { b_short, short_ctx: b_short.max(2048) }
+            .sim_pools(&p, groups, 1024);
+    let routed = simulate_topology_with(
+        &reqs,
+        router.as_ref(),
+        &routed_groups,
+        &routed_cfgs,
+        policy.as_mut(),
+        true,
     );
 
     println!(
-        "\n== simulate: {} | λ={lambda} req/s × {duration}s | {} groups of {} ==",
+        "\n== simulate: {} | λ={lambda} req/s × {duration}s | {} groups of {} \
+         | router {} | dispatch {} ==",
         trace.name,
         groups,
-        p.gpu.name
+        p.gpu.name,
+        router.name(),
+        policy.name(),
     );
     for (name, r) in [("homogeneous 64K", &homo), ("two-pool routed", &routed)] {
         println!(
@@ -467,5 +500,21 @@ mod tests {
         assert_eq!(run(["power", "--gpu", "h100"].iter().map(|s| s.to_string())).unwrap(), 0);
         assert_eq!(run(["help"].iter().map(|s| s.to_string())).unwrap(), 0);
         assert_eq!(run(["bogus"].iter().map(|s| s.to_string())).unwrap(), 2);
+    }
+
+    #[test]
+    fn simulate_accepts_dispatch_and_router_flags() {
+        let a = args("simulate --dispatch jsq --router adaptive --lambda 30");
+        assert_eq!(a.opt("dispatch"), Some("jsq"));
+        assert_eq!(a.opt("router"), Some("adaptive"));
+        let quick = |extra: &str| {
+            run(format!("simulate --lambda 10 --duration 1 --groups 2 {extra}")
+                .split_whitespace()
+                .map(String::from))
+        };
+        assert_eq!(quick("--dispatch jsq --router adaptive").unwrap(), 0);
+        assert_eq!(quick("--dispatch power --router fleetopt").unwrap(), 0);
+        assert!(quick("--dispatch bogus").is_err());
+        assert!(quick("--router bogus").is_err());
     }
 }

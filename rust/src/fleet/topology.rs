@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use super::pool::{LBarPolicy, PoolPlan};
 use super::profile::GpuProfile;
+use crate::sim::GroupSimConfig;
 use crate::workload::WorkloadTrace;
 
 /// Default long-pool serving window (the paper's homogeneous baseline).
@@ -171,6 +172,83 @@ impl Topology {
     }
 }
 
+impl Topology {
+    /// Per-pool group counts and [`GroupSimConfig`]s for playing this
+    /// topology through the event-driven simulator
+    /// ([`crate::sim::simulate_topology_with`]): `total_groups` is split
+    /// half/half between short and long pools (all of it for the
+    /// homogeneous baseline), and the short pool's simulated window gets
+    /// 1024 tokens of output headroom above the routing boundary so a
+    /// prompt routed short always fits prompt + output.
+    pub fn sim_pools(
+        &self,
+        profile: &dyn GpuProfile,
+        total_groups: u32,
+        ingest_chunk: u32,
+    ) -> (Vec<u32>, Vec<GroupSimConfig>) {
+        assert!(total_groups > 0);
+        let mk = |window: u32| GroupSimConfig {
+            window_tokens: window,
+            n_max: profile.n_max(window),
+            roofline: profile.roofline(),
+            power: profile.gpu().power,
+            gpus_charged: 1.0,
+            ingest_chunk,
+        };
+        let split = |short_ctx: u32, long_window: u32| {
+            assert!(
+                total_groups >= 2,
+                "a two-pool topology needs at least 2 groups to split \
+                 (got {total_groups})"
+            );
+            let short = total_groups.div_ceil(2);
+            (
+                vec![short, total_groups - short],
+                vec![mk(short_ctx.max(2048) + 1024), mk(long_window)],
+            )
+        };
+        match *self {
+            Topology::Homogeneous { ctx } => (vec![total_groups], vec![mk(ctx)]),
+            Topology::PoolRouting { short_ctx, .. }
+            | Topology::Semantic { short_ctx, .. } => split(short_ctx, LONG_CTX),
+            // FleetOpt's long pool keeps the full window in simulation:
+            // compression happens in the router (γ-shrunk effective
+            // prompts), which the live-L̄ roofline then rewards — the
+            // dynamic counterpart of the analytical `W/γ` pool.
+            Topology::FleetOpt { short_ctx, .. } => split(short_ctx, LONG_CTX),
+        }
+    }
+
+    /// The request router realizing this topology at serving time.
+    pub fn router(&self) -> Box<dyn crate::router::Router> {
+        use crate::router::context::ContextRouter;
+        use crate::router::fleetopt::FleetOptRouter;
+        use crate::router::semantic::SemanticRouter;
+        match *self {
+            Topology::Homogeneous { .. } => {
+                Box::new(crate::router::HomogeneousRouter)
+            }
+            Topology::PoolRouting { b_short, .. } => {
+                Box::new(ContextRouter::two_pool(b_short))
+            }
+            Topology::FleetOpt { b_short, gamma, .. } => {
+                Box::new(FleetOptRouter::new(b_short, gamma))
+            }
+            // Threshold = difficulty of a prompt exactly at b_short with
+            // zero output (0.7·b/8192, the paper's 0.35 at b=4096). The
+            // prompt term is the cheapest difficulty per token, so for
+            // outputs up to 1024 (the difficulty proxy's saturation knee
+            // and the simulate CLI's output cap) every short-routed
+            // request has prompt + output < b_short and fits the short
+            // pool's sim_pools window (b_short + 1024 headroom) — no
+            // silent rejections.
+            Topology::Semantic { b_short, .. } => Box::new(
+                SemanticRouter::new(0.7 * b_short as f64 / 8192.0),
+            ),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +306,33 @@ mod tests {
             .pools(&azure_conversations(), 1000.0, h100(), Some(small),
                    LBarPolicy::Window, 0.85, 0.5);
         assert_eq!(pools[0].profile.label(), "small");
+    }
+
+    #[test]
+    fn sim_pools_split_groups_and_add_short_headroom() {
+        let p = ManualProfile::h100_70b();
+        let topo = Topology::PoolRouting { b_short: 4096, short_ctx: 4096 };
+        let (groups, cfgs) = topo.sim_pools(&p, 4, 1024);
+        assert_eq!(groups, vec![2, 2]);
+        assert_eq!(cfgs[0].window_tokens, 4096 + 1024);
+        assert_eq!(cfgs[1].window_tokens, LONG_CTX);
+        assert!(cfgs[0].n_max > cfgs[1].n_max, "1/W: shorter window, more slots");
+
+        let (hg, hc) = Topology::Homogeneous { ctx: LONG_CTX }.sim_pools(&p, 4, 1024);
+        assert_eq!(hg, vec![4]);
+        assert_eq!(hc[0].window_tokens, LONG_CTX);
+    }
+
+    #[test]
+    fn router_matches_topology() {
+        assert_eq!(
+            Topology::Homogeneous { ctx: LONG_CTX }.router().num_pools(),
+            1
+        );
+        let fo = Topology::FleetOpt { b_short: 4096, short_ctx: 4096, gamma: 2.0 };
+        let r = fo.router();
+        assert_eq!(r.num_pools(), 2);
+        assert!(r.name().contains("fleetopt"));
     }
 
     #[test]

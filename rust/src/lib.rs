@@ -5,11 +5,16 @@
 //! Efficiency"* (CS.DC 2026) as a three-layer Rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — the coordination contribution: context-length
-//!   request routing ([`router`]), continuous batching and paged KV
-//!   management ([`serve`]), the analytical fleet planner ([`fleet`],
-//!   mirroring the paper's `inference-fleet-sim` API), a discrete-event
-//!   fleet simulator ([`sim`]), and per-GPU energy metering driven by the
-//!   calibrated logistic power model ([`power`]).
+//!   request routing, both static and load-aware over live fleet state
+//!   ([`router`]), continuous batching and paged KV management
+//!   ([`serve`]), the analytical fleet planner ([`fleet`], mirroring the
+//!   paper's `inference-fleet-sim` API), an event-driven fleet simulator
+//!   — one binary-heap event queue and one virtual clock driving all
+//!   groups of all pools concurrently, with pluggable group-dispatch
+//!   policies (round-robin / join-shortest-queue / least-KV-load /
+//!   power-aware) and a parallel per-group fast path ([`sim`]) — and
+//!   per-GPU energy metering driven by the calibrated logistic power
+//!   model ([`power`]).
 //! * **L2/L1 (build-time Python)** — a tiny Llama-style decoder whose
 //!   decode attention is a Pallas kernel, AOT-lowered to HLO text and
 //!   executed from Rust through PJRT ([`runtime`]). Python never runs on

@@ -1,0 +1,153 @@
+//! Load-aware two-pool context routing: spill short-pool overflow to the
+//! long pool under congestion.
+//!
+//! Plain context routing fixes the split at `B_short` no matter what the
+//! pools are doing; under a short-heavy burst the short pool queues while
+//! the long pool idles (yet still draws idle watts — §5.1). The long
+//! pool's window is a superset of the short pool's, so any short request
+//! *can* run there; this router sends short requests to the long pool
+//! whenever the short pool's per-group *queue depth* exceeds the long
+//! pool's by `spill_factor`. Queue depth — not in-flight batch — is the
+//! congestion signal: a short pool running a large batch with free slots
+//! is busy-but-healthy and must not shed efficient traffic onto an idle
+//! long pool (that would pay the idle→active power jump for nothing).
+//! Long-context requests always go to the long pool — the short window
+//! physically cannot hold them (Eq. 3).
+//!
+//! This is the routing counterpart of what WattGPU/FleetOpt model as
+//! dynamic dispatch over live pool state, and is only expressible on the
+//! event-driven simulator core (the closed per-group loops of the legacy
+//! simulator had no shared clock for a snapshot to be consistent under).
+
+use super::{Route, Router};
+use crate::sim::FleetState;
+use crate::workload::Request;
+
+/// Two-pool context router with congestion spill (pool 0 = short,
+/// pool 1 = long).
+#[derive(Debug, Clone)]
+pub struct AdaptiveRouter {
+    /// Inclusive upper prompt length of the short pool.
+    pub b_short: u32,
+    /// Spill a short request when
+    /// `short queued/group > spill_factor × (long queued/group + 1)`.
+    /// The `+ 1` keeps an idle long pool from attracting all traffic.
+    pub spill_factor: f64,
+}
+
+impl AdaptiveRouter {
+    pub fn new(b_short: u32) -> Self {
+        AdaptiveRouter { b_short, spill_factor: 2.0 }
+    }
+
+    pub fn with_spill_factor(mut self, f: f64) -> Self {
+        assert!(f > 0.0, "spill factor must be positive");
+        self.spill_factor = f;
+        self
+    }
+}
+
+impl Router for AdaptiveRouter {
+    /// Static fallback (no snapshot): plain two-pool context routing.
+    #[inline]
+    fn route(&self, req: &Request) -> Route {
+        Route {
+            pool: usize::from(req.prompt_tokens > self.b_short),
+            effective_prompt_tokens: req.prompt_tokens,
+        }
+    }
+
+    fn num_pools(&self) -> usize {
+        2
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "adaptive(b_short={}, spill={})",
+            self.b_short, self.spill_factor
+        )
+    }
+
+    fn is_load_aware(&self) -> bool {
+        true
+    }
+
+    fn route_live(&self, req: &Request, state: &FleetState) -> Route {
+        if req.prompt_tokens > self.b_short {
+            // Long context never fits the short window.
+            return Route { pool: 1, effective_prompt_tokens: req.prompt_tokens };
+        }
+        debug_assert!(state.pools.len() >= 2, "adaptive router needs 2 pools");
+        let short = state.pools[0].queued_per_group();
+        let long = state.pools[1].queued_per_group();
+        let pool = usize::from(short > self.spill_factor * (long + 1.0));
+        Route { pool, effective_prompt_tokens: req.prompt_tokens }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{GroupLoad, PoolLoad};
+
+    fn req(prompt: u32) -> Request {
+        Request { id: 0, arrival_s: 0.0, prompt_tokens: prompt, output_tokens: 8 }
+    }
+
+    fn state(short_backlog: usize, long_backlog: usize) -> FleetState {
+        let pool = |backlog: usize, window: u32, n_max: u32| PoolLoad {
+            window_tokens: window,
+            n_max,
+            groups: vec![GroupLoad {
+                queued: backlog,
+                active: 0,
+                free_blocks: 100,
+                used_blocks: 0,
+            }],
+        };
+        FleetState {
+            pools: vec![pool(short_backlog, 5120, 128), pool(long_backlog, 65_536, 16)],
+        }
+    }
+
+    #[test]
+    fn long_prompts_always_go_long() {
+        let r = AdaptiveRouter::new(4096);
+        assert_eq!(r.route_live(&req(50_000), &state(0, 100)).pool, 1);
+        assert_eq!(r.route(&req(50_000)).pool, 1);
+    }
+
+    #[test]
+    fn short_prompts_stay_short_when_uncongested() {
+        let r = AdaptiveRouter::new(4096);
+        assert_eq!(r.route_live(&req(100), &state(1, 0)).pool, 0);
+    }
+
+    #[test]
+    fn congested_short_pool_spills_to_long() {
+        let r = AdaptiveRouter::new(4096);
+        // short queue 30 > 2.0 * (1 + 1) -> spill.
+        assert_eq!(r.route_live(&req(100), &state(30, 1)).pool, 1);
+        // Busy long pool raises the spill bar back up.
+        assert_eq!(r.route_live(&req(100), &state(30, 20)).pool, 0);
+    }
+
+    #[test]
+    fn well_batched_short_pool_without_queue_never_spills() {
+        // A large in-flight batch with an empty queue is busy, not
+        // congested: spilling would wake an idle long pool for nothing.
+        let r = AdaptiveRouter::new(4096);
+        let mut s = state(0, 0);
+        s.pools[0].groups[0].active = 100; // hot but queue-free
+        assert_eq!(r.route_live(&req(100), &s).pool, 0);
+    }
+
+    #[test]
+    fn static_route_matches_context_router_semantics() {
+        let r = AdaptiveRouter::new(4096);
+        assert_eq!(r.route(&req(4096)).pool, 0, "boundary inclusive-short");
+        assert_eq!(r.route(&req(4097)).pool, 1);
+        assert!(r.is_load_aware());
+        assert_eq!(r.num_pools(), 2);
+    }
+}

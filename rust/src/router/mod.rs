@@ -2,11 +2,26 @@
 //! topology lever. A router maps each request to a pool index in O(1);
 //! which pool a request lands in determines the context window (and hence
 //! the `P(b)`-curve segment) the GPU serving it operates on.
+//!
+//! Routers come in two flavors:
+//!
+//! * **Static** ([`route`](Router::route)) — the decision is a pure
+//!   function of the request (prompt length, shape). All of the paper's
+//!   topologies are static.
+//! * **Load-aware** ([`route_live`](Router::route_live)) — the decision
+//!   may additionally read a live [`FleetState`] snapshot of per-pool
+//!   queue depth, in-flight batch and free KV blocks, as produced by the
+//!   event-driven simulator (and, in a real deployment, by the serving
+//!   leader). [`adaptive::AdaptiveRouter`] is the reference
+//!   implementation: context routing that spills short-pool overflow to
+//!   the long pool under congestion.
 
+pub mod adaptive;
 pub mod context;
 pub mod fleetopt;
 pub mod semantic;
 
+use crate::sim::FleetState;
 use crate::workload::Request;
 
 /// A routing decision.
@@ -23,9 +38,25 @@ pub struct Route {
 /// is on the hot path of every request.
 pub trait Router: Send + Sync {
     fn route(&self, req: &Request) -> Route;
+
     /// Number of pools this router targets.
     fn num_pools(&self) -> usize;
+
     fn name(&self) -> String;
+
+    /// True when [`route_live`](Router::route_live) actually reads the
+    /// fleet snapshot. Load-aware routers cannot be pre-routed, so the
+    /// simulator keeps them on the sequential shared-clock engine.
+    fn is_load_aware(&self) -> bool {
+        false
+    }
+
+    /// Route with a live fleet snapshot. Default: ignore the state and
+    /// fall back to the static decision, so every existing router is
+    /// usable in the event-driven simulator unchanged.
+    fn route_live(&self, req: &Request, _state: &FleetState) -> Route {
+        self.route(req)
+    }
 }
 
 /// Single-pool pass-through (the homogeneous baseline).
@@ -57,5 +88,14 @@ mod tests {
             assert_eq!(r.route(&req).effective_prompt_tokens, p);
         }
         assert_eq!(r.num_pools(), 1);
+    }
+
+    #[test]
+    fn route_live_defaults_to_static_route() {
+        let r = HomogeneousRouter;
+        assert!(!r.is_load_aware());
+        let req = Request { id: 0, arrival_s: 0.0, prompt_tokens: 7, output_tokens: 1 };
+        let state = FleetState { pools: vec![] };
+        assert_eq!(r.route_live(&req, &state), r.route(&req));
     }
 }

@@ -1,11 +1,46 @@
-//! Runtime layer: PJRT execution of the AOT artifacts ([`pjrt`]), the
-//! WLW1 tensor container ([`container`]), and a minimal JSON parser for
-//! the manifest ([`json`]). Python never runs on the request path — the
-//! Rust binary is self-contained once `make artifacts` has produced
+//! Runtime layer: execution of the AOT artifacts, the WLW1 tensor
+//! container ([`container`]), and a minimal JSON parser for the manifest
+//! ([`json`]). Python never runs on the request path — the Rust binary is
+//! self-contained once `make artifacts` has produced
 //! `artifacts/*.hlo.txt` + `weights.bin`.
+//!
+//! Two backends share the [`ModelCfg`]/`TinyModel` surface:
+//!
+//! * **`pjrt` feature on** — [`pjrt`] compiles the HLO text on the CPU
+//!   PJRT client and executes prefill/decode for real (requires the
+//!   vendored `xla` bindings).
+//! * **`pjrt` feature off** (the offline default) — [`stub`] keeps every
+//!   call site compiling and reports the missing feature at runtime; the
+//!   analytical planner and the event-driven simulator are unaffected.
 
 pub mod container;
 pub mod json;
-pub mod pjrt;
+pub mod modelcfg;
 
-pub use pjrt::{default_artifacts_dir, ModelCfg, TinyModel};
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+pub use modelcfg::ModelCfg;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::TinyModel;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::TinyModel;
+
+/// The backend's KV-cache tensor handle, threaded through the engine.
+#[cfg(feature = "pjrt")]
+pub type Kv = xla::Literal;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Kv;
+
+use std::path::PathBuf;
+
+/// Default artifacts location (repo-root relative, overridable by env).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("WATTLAW_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from("artifacts")
+}

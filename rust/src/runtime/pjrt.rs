@@ -16,62 +16,7 @@ use xla::{
 
 use super::container::{self, Container};
 use super::json;
-
-/// Static model geometry parsed from `manifest.json` (mirrors the Python
-/// `ModelConfig`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ModelCfg {
-    pub vocab: u32,
-    pub d_model: u32,
-    pub n_layers: u32,
-    pub n_q_heads: u32,
-    pub n_kv_heads: u32,
-    pub head_dim: u32,
-    pub d_ff: u32,
-    pub max_seq: u32,
-    pub batch: u32,
-    pub prefill_len: u32,
-}
-
-impl ModelCfg {
-    pub fn kv_dims(&self) -> [i64; 5] {
-        [
-            self.n_layers as i64,
-            self.batch as i64,
-            self.max_seq as i64,
-            self.n_kv_heads as i64,
-            self.head_dim as i64,
-        ]
-    }
-
-    /// κ in f32 bytes/token — matches `ModelConfig.kv_bytes_per_token`.
-    pub fn kv_bytes_per_token(&self) -> u64 {
-        2 * 4 * self.n_layers as u64 * self.n_kv_heads as u64 * self.head_dim as u64
-    }
-}
-
-fn parse_cfg(manifest: &json::Json) -> crate::Result<ModelCfg> {
-    let c = manifest
-        .get("config")
-        .ok_or_else(|| anyhow::anyhow!("manifest missing config"))?;
-    let f = |k: &str| -> crate::Result<u32> {
-        c.get(k)
-            .and_then(|v| v.as_u32())
-            .ok_or_else(|| anyhow::anyhow!("manifest config missing {k}"))
-    };
-    Ok(ModelCfg {
-        vocab: f("vocab")?,
-        d_model: f("d_model")?,
-        n_layers: f("n_layers")?,
-        n_q_heads: f("n_q_heads")?,
-        n_kv_heads: f("n_kv_heads")?,
-        head_dim: f("head_dim")?,
-        d_ff: f("d_ff")?,
-        max_seq: f("max_seq")?,
-        batch: f("batch")?,
-        prefill_len: f("prefill_len")?,
-    })
-}
+use super::modelcfg::{parse_cfg, ModelCfg};
 
 /// The serving-demo model, compiled and resident on the CPU PJRT client.
 ///
@@ -284,38 +229,6 @@ fn run_golden(m: &TinyModel, g: &Container) -> crate::Result<f64> {
     Ok(worst)
 }
 
-/// Default artifacts location (repo-root relative, overridable by env).
-pub fn default_artifacts_dir() -> PathBuf {
-    if let Ok(d) = std::env::var("WATTLAW_ARTIFACTS") {
-        return PathBuf::from(d);
-    }
-    PathBuf::from("artifacts")
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn cfg_kv_bytes() {
-        let cfg = ModelCfg {
-            vocab: 512, d_model: 256, n_layers: 4, n_q_heads: 8,
-            n_kv_heads: 2, head_dim: 32, d_ff: 688, max_seq: 512,
-            batch: 8, prefill_len: 64,
-        };
-        assert_eq!(cfg.kv_bytes_per_token(), 2 * 4 * 4 * 2 * 32);
-        assert_eq!(cfg.kv_dims(), [4, 8, 512, 2, 32]);
-    }
-
-    #[test]
-    fn manifest_parsing() {
-        let doc = r#"{"config": {"vocab": 512, "d_model": 256, "n_layers": 4,
-            "n_q_heads": 8, "n_kv_heads": 2, "head_dim": 32, "d_ff": 688,
-            "max_seq": 512, "batch": 8, "prefill_len": 64,
-            "rope_theta": 10000.0}}"#;
-        let j = json::parse(doc).unwrap();
-        let cfg = parse_cfg(&j).unwrap();
-        assert_eq!(cfg.batch, 8);
-        assert_eq!(cfg.max_seq, 512);
-    }
-}
+/// Default artifacts location — re-exported for backward compatibility;
+/// see [`super::default_artifacts_dir`].
+pub use super::default_artifacts_dir;

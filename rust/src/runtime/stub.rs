@@ -1,0 +1,93 @@
+//! No-`xla` runtime backend: the same `TinyModel` surface as
+//! [`super::pjrt`], but every entry point that would execute compiled HLO
+//! reports that the binary was built without the `pjrt` feature.
+//!
+//! This keeps the real-model serving stack ([`crate::serve::engine`],
+//! [`crate::serve::server`], `wattlaw serve` / `wattlaw validate`)
+//! compiling in the offline image, where the `xla` bindings are not
+//! fetchable. The analytical planner, the event-driven fleet simulator
+//! and every table/bench are fully functional without it.
+
+use std::path::{Path, PathBuf};
+
+use super::modelcfg::ModelCfg;
+
+/// Opaque stand-in for the backend's KV-cache tensor handle
+/// (`xla::Literal` under the `pjrt` feature).
+#[derive(Debug, Clone)]
+pub struct Kv;
+
+const DISABLED: &str =
+    "wattlaw was built without the `pjrt` feature: the real-model runtime \
+     is unavailable (vendor the `xla` crate and rebuild with \
+     `--features pjrt`); the analytical planner and the event-driven \
+     simulator do not need it";
+
+/// Stub model handle. [`TinyModel::load`] always fails, so the execution
+/// methods below are unreachable in practice; they exist to keep the
+/// engine layer's call sites compiling unchanged.
+pub struct TinyModel {
+    pub cfg: ModelCfg,
+    #[allow(dead_code)]
+    artifacts_dir: PathBuf,
+}
+
+impl TinyModel {
+    pub fn load(_artifacts_dir: &Path) -> crate::Result<Self> {
+        anyhow::bail!(DISABLED)
+    }
+
+    pub fn fresh_kv(&self) -> crate::Result<(Kv, Kv)> {
+        anyhow::bail!(DISABLED)
+    }
+
+    pub fn prefill(
+        &self,
+        _tokens: &[i32],
+        _lens: &[i32],
+    ) -> crate::Result<(Vec<f32>, Kv, Kv)> {
+        anyhow::bail!(DISABLED)
+    }
+
+    pub fn decode_step(
+        &self,
+        _tokens: &[i32],
+        _kv_k: &Kv,
+        _kv_v: &Kv,
+        _pos: &[i32],
+    ) -> crate::Result<(Vec<f32>, Kv, Kv)> {
+        anyhow::bail!(DISABLED)
+    }
+
+    /// Greedy sampling over `[B, vocab]` logits (pure; identical to the
+    /// PJRT backend's implementation).
+    pub fn argmax(&self, logits: &[f32]) -> Vec<i32> {
+        let v = self.cfg.vocab as usize;
+        logits
+            .chunks_exact(v)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    pub fn validate_golden(&self) -> crate::Result<f64> {
+        anyhow::bail!(DISABLED)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = TinyModel::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -147,6 +147,12 @@ impl Batcher {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    /// Requests waiting in the FIFO queue (not yet admitted) — the queue
+    /// depth load-aware routers and dispatch policies observe.
+    pub fn queued_len(&self) -> usize {
+        self.queue.len()
+    }
+
     /// Mean KV length across active sequences (the live L̄).
     pub fn mean_kv_len(&self) -> f64 {
         let (mut n, mut sum) = (0u32, 0u64);

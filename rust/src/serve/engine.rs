@@ -12,8 +12,6 @@
 //! which is what continuous batching means. The `prefill` artifact is used
 //! by the quickstart for whole-batch priming and by the golden validator.
 
-use xla::Literal;
-
 use super::batcher::{Batcher, SlotWork};
 use super::energy::EnergyMeter;
 use super::kvblocks::BlockAllocator;
@@ -21,7 +19,7 @@ use super::metrics::ServeMetrics;
 use super::request::{Completion, ServeRequest};
 use super::scheduler::{schedule, SchedulerPolicy};
 use crate::power::LogisticPower;
-use crate::runtime::TinyModel;
+use crate::runtime::{Kv, TinyModel};
 
 /// Maps the tiny demo model's operating point onto a datacenter GPU: the
 /// energy clock advances by the *emulated* GPU's roofline iteration time
@@ -111,8 +109,8 @@ pub struct PoolEngine {
     model: TinyModel,
     cfg: EngineConfig,
     batcher: Batcher,
-    kv_k: Literal,
-    kv_v: Literal,
+    kv_k: Kv,
+    kv_v: Kv,
     /// Next input token per slot.
     slot_tokens: Vec<i32>,
     clock_s: f64,

@@ -48,6 +48,12 @@ impl BlockAllocator {
         self.num_blocks - self.free.len() as u32
     }
 
+    /// Blocks currently on the free list — the headroom signal
+    /// least-KV-load dispatch observes.
+    pub fn free_blocks(&self) -> u32 {
+        self.free.len() as u32
+    }
+
     pub fn utilization(&self) -> f64 {
         self.used() as f64 / self.num_blocks as f64
     }

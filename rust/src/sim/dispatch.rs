@@ -1,0 +1,292 @@
+//! Stateful dispatch policies: which *group inside a pool* an arriving
+//! request joins.
+//!
+//! The router (L3) decides the pool — that fixes the context window and
+//! hence the `P(b)`-curve segment. Dispatch decides the group, and that
+//! fixes how the pool's live batch is packed. The legacy simulator
+//! hard-coded round-robin-at-arrival; the event-driven core
+//! ([`super::events`]) calls a [`DispatchPolicy`] at every arrival event,
+//! handing load-aware policies a [`FleetState`](super::events::FleetState)
+//! snapshot (per-group queue depth, in-flight batch, free KV blocks).
+//!
+//! Dispatch is decide-once: a request joins its group's FIFO queue at
+//! arrival and is never jockeyed to another group afterwards (matching
+//! how production routers pin a request to an engine replica).
+
+use super::events::FleetState;
+use crate::serve::request::ServeRequest;
+
+/// The dispatch protocol. Implementations are stateful (`&mut self`):
+/// round-robin keeps per-pool counters, and learned policies could keep
+/// arbitrary history. Determinism contract: the decision may depend only
+/// on construction parameters, prior `pick_group` calls, and the provided
+/// snapshot — never on wall-clock or ambient randomness — so simulations
+/// replay bit-for-bit.
+pub trait DispatchPolicy {
+    fn name(&self) -> &'static str;
+
+    /// True when the decision depends only on the arrival *sequence*
+    /// (never on `state`). Static policies let the engine pre-assign
+    /// requests and step independent groups in parallel; they must ignore
+    /// `state`, which the fast path passes as `None`.
+    fn is_arrival_static(&self) -> bool {
+        false
+    }
+
+    /// Pick the destination group in `[0, groups)` for `req`, which the
+    /// router already sent to `pool`. `state` is `Some` for every
+    /// non-static policy.
+    fn pick_group(
+        &mut self,
+        pool: usize,
+        groups: u32,
+        req: &ServeRequest,
+        state: Option<&FleetState>,
+    ) -> usize;
+}
+
+/// Round-robin at arrival — the legacy simulator's hard-coded policy and
+/// the production default for uniform pools. Arrival-static: group =
+/// (per-pool arrival index) mod groups.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRobin {
+    counters: Vec<u64>,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn counter(&mut self, pool: usize) -> &mut u64 {
+        if self.counters.len() <= pool {
+            self.counters.resize(pool + 1, 0);
+        }
+        &mut self.counters[pool]
+    }
+}
+
+impl DispatchPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn is_arrival_static(&self) -> bool {
+        true
+    }
+
+    fn pick_group(
+        &mut self,
+        pool: usize,
+        groups: u32,
+        _req: &ServeRequest,
+        _state: Option<&FleetState>,
+    ) -> usize {
+        let c = self.counter(pool);
+        let g = (*c % groups as u64) as usize;
+        *c += 1;
+        g
+    }
+}
+
+/// Join-shortest-queue: the group with the fewest requests in flight
+/// (queued + admitted), lowest index on ties. The classic load-balancing
+/// improvement over round-robin under bursty or size-skewed traffic.
+#[derive(Debug, Clone, Default)]
+pub struct JoinShortestQueue;
+
+impl DispatchPolicy for JoinShortestQueue {
+    fn name(&self) -> &'static str {
+        "join-shortest-queue"
+    }
+
+    fn pick_group(
+        &mut self,
+        pool: usize,
+        groups: u32,
+        _req: &ServeRequest,
+        state: Option<&FleetState>,
+    ) -> usize {
+        let state = state.expect("JSQ needs a fleet snapshot");
+        argmin_by_key(groups, |g| state.pools[pool].groups[g].in_flight())
+    }
+}
+
+/// Least-KV-load: the group with the most free KV blocks (lowest index on
+/// ties). Differs from JSQ under length-skewed traffic: ten 1K-token
+/// sequences queue higher than two 60K ones, but the latter hold the KV
+/// that actually gates admission (Eq. 3).
+#[derive(Debug, Clone, Default)]
+pub struct LeastKvLoad;
+
+impl DispatchPolicy for LeastKvLoad {
+    fn name(&self) -> &'static str {
+        "least-kv-load"
+    }
+
+    fn pick_group(
+        &mut self,
+        pool: usize,
+        groups: u32,
+        _req: &ServeRequest,
+        state: Option<&FleetState>,
+    ) -> usize {
+        let state = state.expect("least-KV dispatch needs a fleet snapshot");
+        // min over used blocks == max over free blocks.
+        argmin_by_key(groups, |g| {
+            let gl = &state.pools[pool].groups[g];
+            u32::MAX - gl.free_blocks
+        })
+    }
+}
+
+/// Power-aware consolidation: pack arrivals onto the hottest group that
+/// still has batch headroom, and only then balance. Rationale: the
+/// logistic `P(b)` is steep at the bottom and flat near saturation, so
+/// the marginal energy of one more sequence on an already-hot group is
+/// small, while landing work on a cold group pays the idle→active power
+/// jump for little throughput (the paper's §5.1 long-pool observation).
+#[derive(Debug, Clone, Default)]
+pub struct PowerAware;
+
+impl DispatchPolicy for PowerAware {
+    fn name(&self) -> &'static str {
+        "power-aware"
+    }
+
+    fn pick_group(
+        &mut self,
+        pool: usize,
+        groups: u32,
+        _req: &ServeRequest,
+        state: Option<&FleetState>,
+    ) -> usize {
+        let state = state.expect("power-aware dispatch needs a fleet snapshot");
+        let p = &state.pools[pool];
+        // Hottest group whose batch still has headroom and whose queue is
+        // empty (joining it batches immediately instead of waiting).
+        let mut best: Option<(usize, usize)> = None; // (active, group)
+        for g in 0..groups as usize {
+            let gl = &p.groups[g];
+            if gl.queued == 0 && (gl.active as u32) < p.n_max && gl.active > 0 {
+                // First-seen wins ties, i.e. lowest index.
+                let better = match best {
+                    None => true,
+                    Some((a, _)) => gl.active > a,
+                };
+                if better {
+                    best = Some((gl.active, g));
+                }
+            }
+        }
+        if let Some((_, g)) = best {
+            return g;
+        }
+        // Everyone is cold or saturated: fall back to shortest queue so
+        // saturation never turns into unbounded skew.
+        argmin_by_key(groups, |g| p.groups[g].in_flight())
+    }
+}
+
+fn argmin_by_key<K: Ord>(groups: u32, key: impl Fn(usize) -> K) -> usize {
+    let mut best = 0usize;
+    let mut best_k = key(0);
+    for g in 1..groups as usize {
+        let k = key(g);
+        if k < best_k {
+            best = g;
+            best_k = k;
+        }
+    }
+    best
+}
+
+/// Parse a `--dispatch` CLI name.
+pub fn parse(name: &str) -> Option<Box<dyn DispatchPolicy>> {
+    match name {
+        "rr" | "round-robin" => Some(Box::new(RoundRobin::new())),
+        "jsq" | "join-shortest-queue" => Some(Box::new(JoinShortestQueue)),
+        "least-kv" | "least-kv-load" => Some(Box::new(LeastKvLoad)),
+        "power" | "power-aware" => Some(Box::new(PowerAware)),
+        _ => None,
+    }
+}
+
+/// All policy names, for sweeps and tables.
+pub const ALL: [&str; 4] = ["rr", "jsq", "least-kv", "power"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::events::{FleetState, GroupLoad, PoolLoad};
+
+    fn req() -> ServeRequest {
+        ServeRequest { id: 0, prompt_tokens: 64, output_tokens: 8, arrival_s: 0.0 }
+    }
+
+    fn state(loads: &[(usize, usize, u32)]) -> FleetState {
+        FleetState {
+            pools: vec![PoolLoad {
+                window_tokens: 8192,
+                n_max: 16,
+                groups: loads
+                    .iter()
+                    .map(|&(queued, active, free_blocks)| GroupLoad {
+                        queued,
+                        active,
+                        free_blocks,
+                        used_blocks: 2048 - free_blocks,
+                    })
+                    .collect(),
+            }],
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_per_pool() {
+        let mut rr = RoundRobin::new();
+        let picks: Vec<usize> =
+            (0..6).map(|_| rr.pick_group(0, 3, &req(), None)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        // A second pool has its own counter.
+        assert_eq!(rr.pick_group(1, 3, &req(), None), 0);
+        assert_eq!(rr.pick_group(0, 3, &req(), None), 0);
+    }
+
+    #[test]
+    fn jsq_picks_fewest_in_flight_lowest_index_ties() {
+        let s = state(&[(2, 3, 100), (0, 4, 100), (1, 3, 100)]);
+        let mut jsq = JoinShortestQueue;
+        assert_eq!(jsq.pick_group(0, 3, &req(), Some(&s)), 1);
+        let tie = state(&[(1, 1, 100), (0, 2, 100)]);
+        assert_eq!(jsq.pick_group(0, 2, &req(), Some(&tie)), 0);
+    }
+
+    #[test]
+    fn least_kv_picks_most_free_blocks() {
+        let s = state(&[(0, 2, 10), (0, 2, 200), (0, 2, 50)]);
+        let mut lk = LeastKvLoad;
+        assert_eq!(lk.pick_group(0, 3, &req(), Some(&s)), 1);
+    }
+
+    #[test]
+    fn power_aware_consolidates_then_balances() {
+        // Group 1 is hot with headroom -> consolidate onto it.
+        let s = state(&[(0, 1, 100), (0, 9, 100), (0, 0, 100)]);
+        let mut pa = PowerAware;
+        assert_eq!(pa.pick_group(0, 3, &req(), Some(&s)), 1);
+        // All saturated (n_max = 16) or queued -> shortest queue wins.
+        let s2 = state(&[(5, 16, 0), (2, 16, 0), (9, 16, 0)]);
+        assert_eq!(pa.pick_group(0, 3, &req(), Some(&s2)), 1);
+    }
+
+    #[test]
+    fn parse_covers_all_names() {
+        for n in ALL {
+            assert!(parse(n).is_some(), "{n}");
+        }
+        assert!(parse("bogus").is_none());
+        assert!(parse("rr").unwrap().is_arrival_static());
+        assert!(!parse("jsq").unwrap().is_arrival_static());
+    }
+}

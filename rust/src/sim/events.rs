@@ -1,0 +1,698 @@
+//! The event-driven simulation core: one binary-heap event queue, one
+//! virtual clock, all groups of all pools advancing concurrently.
+//!
+//! Three event kinds drive the engine:
+//!
+//! * **Arrival** — a request reaches the fleet: the router picks the pool
+//!   (optionally reading a live [`FleetState`] snapshot), the
+//!   [`DispatchPolicy`] picks the group, and the request joins that
+//!   group's FIFO queue. An arrival to a quiescent group schedules a
+//!   *wake*.
+//! * **StepComplete** — a group's in-flight engine iteration finishes:
+//!   outcomes (chunked prompt ingestion, decoded tokens, completions) are
+//!   applied at the step-end timestamp, then the group immediately plans
+//!   its next step from live `(n_active, L̄)` via the roofline.
+//! * **Wake** — a previously idle group re-enters the stepping loop. The
+//!   idle gap is integrated into the energy meter at the meter's standing
+//!   batch: idle watts for a group that has never run (the paper's §5.1
+//!   "nearly idle yet still draws watts" effect), and — matching the
+//!   legacy loop's piecewise-constant-from-the-left convention exactly —
+//!   the last step's `P(n_active)` for a gap that follows a drain.
+//!
+//! Ties are broken deterministically by `(time, kind, push-sequence)`
+//! with arrivals first, so a request arriving exactly at a step boundary
+//! is admitted on that boundary — matching the legacy closed loop
+//! bit-for-bit under round-robin dispatch (asserted by
+//! `tests/sim_replay.rs`).
+//!
+//! **Parallel fast path**: when the router is not load-aware and the
+//! dispatch policy is arrival-static, group assignment is a pure function
+//! of the arrival sequence, so independent groups can be stepped on
+//! worker threads (`std::thread::scope`; the offline image has no rayon)
+//! and merged in group-index order. Per-group event streams are identical
+//! either way, so sequential and parallel runs produce bit-identical
+//! results (property-tested).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::dispatch::{DispatchPolicy, RoundRobin};
+use super::fleetsim::GroupSimConfig;
+use crate::router::{HomogeneousRouter, Router};
+use crate::serve::batcher::{Batcher, SlotWork};
+use crate::serve::energy::EnergyMeter;
+use crate::serve::kvblocks::BlockAllocator;
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::request::ServeRequest;
+use crate::workload::Request;
+
+/// Live load of one group, as routers and dispatch policies see it.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupLoad {
+    /// Requests waiting in the group's FIFO queue.
+    pub queued: usize,
+    /// Sequences admitted into slots (the in-flight batch).
+    pub active: usize,
+    /// Free KV blocks in the group's paged allocator.
+    pub free_blocks: u32,
+    /// KV blocks currently held by admitted sequences.
+    pub used_blocks: u32,
+}
+
+impl GroupLoad {
+    /// Queued + admitted — the JSQ load signal.
+    pub fn in_flight(&self) -> usize {
+        self.queued + self.active
+    }
+}
+
+/// Live load of one pool.
+#[derive(Debug, Clone)]
+pub struct PoolLoad {
+    pub window_tokens: u32,
+    /// Per-group concurrency limit (Eq. 3's n_max for this window).
+    pub n_max: u32,
+    pub groups: Vec<GroupLoad>,
+}
+
+impl PoolLoad {
+    /// Total queued + admitted across the pool's groups.
+    pub fn in_flight_total(&self) -> usize {
+        self.groups.iter().map(GroupLoad::in_flight).sum()
+    }
+
+    /// Mean queued + admitted per group.
+    pub fn backlog_per_group(&self) -> f64 {
+        if self.groups.is_empty() {
+            0.0
+        } else {
+            self.in_flight_total() as f64 / self.groups.len() as f64
+        }
+    }
+
+    /// Mean *waiting* requests per group — the cross-pool congestion
+    /// signal load-aware routers compare. Queue depth, not in-flight
+    /// batch: a well-batched pool with free slots is busy, not
+    /// congested, and comparing raw in-flight counts across pools is
+    /// biased because n_max differs per window (Eq. 3).
+    pub fn queued_per_group(&self) -> f64 {
+        if self.groups.is_empty() {
+            0.0
+        } else {
+            self.groups.iter().map(|g| g.queued).sum::<usize>() as f64
+                / self.groups.len() as f64
+        }
+    }
+}
+
+/// A point-in-time snapshot of the whole fleet, handed to
+/// [`Router::route_live`](crate::router::Router::route_live) and
+/// [`DispatchPolicy::pick_group`]. Snapshots are plain data — cheap to
+/// build, safe to hold across the routing decision.
+#[derive(Debug, Clone)]
+pub struct FleetState {
+    pub pools: Vec<PoolLoad>,
+}
+
+/// Per-group simulation result, aggregated by the pool/topology wrappers
+/// in [`super::fleetsim`] in group-index order (so aggregation is
+/// independent of event interleaving and thread scheduling).
+#[derive(Debug)]
+pub(crate) struct GroupOutcome {
+    pub(crate) metrics: ServeMetrics,
+    pub(crate) joules: f64,
+    pub(crate) output_tokens: u64,
+    pub(crate) horizon_s: f64,
+    pub(crate) mean_batch: f64,
+    pub(crate) steps: u64,
+}
+
+const CLASS_ARRIVAL: u8 = 0;
+const CLASS_STEP: u8 = 1;
+const CLASS_WAKE: u8 = 2;
+
+#[derive(Debug, Clone, Copy)]
+enum EvKind {
+    Arrival { idx: usize },
+    StepComplete { pool: usize, group: usize },
+    Wake { pool: usize, group: usize },
+}
+
+#[derive(Debug)]
+struct Ev {
+    t: f64,
+    class: u8,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed so the max-heap pops the smallest (t, class, seq):
+        // earliest time first, arrivals before step-completions before
+        // wakes at equal times, FIFO within a kind.
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.class.cmp(&self.class))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// One virtual GPU group: the same `Batcher` state machine the real
+/// engine runs, plus its energy meter and local boundary clock.
+struct GroupSim {
+    batcher: Batcher,
+    meter: EnergyMeter,
+    metrics: ServeMetrics,
+    /// Work plan of the in-flight step, applied at its StepComplete.
+    pending_plan: Option<Vec<SlotWork>>,
+    /// A step or wake event is scheduled for this group.
+    busy: bool,
+    /// Local clock: last boundary or fast-forward time.
+    t: f64,
+    steps: u64,
+}
+
+impl GroupSim {
+    fn new(cfg: &GroupSimConfig) -> Self {
+        // Block budget = n_max × window (Eq. 3 inverted): admission
+        // saturates at exactly n_max full-window sequences.
+        let blocks_total =
+            (cfg.n_max as u64 * cfg.window_tokens as u64 / 64).max(1) as u32;
+        GroupSim {
+            batcher: Batcher::new(
+                cfg.n_max as usize,
+                BlockAllocator::new(64, blocks_total),
+                cfg.ingest_chunk,
+                cfg.window_tokens,
+            ),
+            meter: EnergyMeter::new(cfg.power, cfg.gpus_charged, 0.0),
+            metrics: ServeMetrics::default(),
+            pending_plan: None,
+            busy: false,
+            t: 0.0,
+            steps: 0,
+        }
+    }
+
+    fn finish(self) -> GroupOutcome {
+        GroupOutcome {
+            joules: self.meter.joules().0,
+            output_tokens: self.meter.output_tokens(),
+            horizon_s: self.t,
+            mean_batch: self.meter.mean_batch(),
+            metrics: self.metrics,
+            steps: self.steps,
+        }
+    }
+}
+
+fn snapshot(pools: &[Vec<GroupSim>], cfgs: &[GroupSimConfig]) -> FleetState {
+    FleetState {
+        pools: pools
+            .iter()
+            .zip(cfgs)
+            .map(|(groups, cfg)| PoolLoad {
+                window_tokens: cfg.window_tokens,
+                n_max: cfg.n_max,
+                groups: groups
+                    .iter()
+                    .map(|g| GroupLoad {
+                        queued: g.batcher.queued_len(),
+                        active: g.batcher.active(),
+                        free_blocks: g.batcher.blocks.free_blocks(),
+                        used_blocks: g.batcher.blocks.used(),
+                    })
+                    .collect(),
+            })
+            .collect(),
+    }
+}
+
+/// Route + dispatch one arrival: pool from the router (live when a
+/// snapshot is provided), group from the policy, effective prompt baked
+/// into the returned request. The single definition keeps the sequential
+/// engine and the parallel pre-assignment bit-for-bit in agreement.
+fn assign(
+    router: &dyn Router,
+    dispatch: &mut dyn DispatchPolicy,
+    pool_groups: &[u32],
+    req: &Request,
+    snap: Option<&FleetState>,
+) -> (usize, usize, ServeRequest) {
+    let route = match snap {
+        Some(s) => router.route_live(req, s),
+        None => router.route(req),
+    };
+    let mut sreq = ServeRequest::from(req);
+    sreq.prompt_tokens = route.effective_prompt_tokens;
+    let group =
+        dispatch.pick_group(route.pool, pool_groups[route.pool], &sreq, snap);
+    (route.pool, group, sreq)
+}
+
+/// Plan the group's next step from its live `(n_active, L̄)` operating
+/// point, or quiesce if nothing is admitted.
+fn start_step(
+    gs: &mut GroupSim,
+    cfg: &GroupSimConfig,
+    now: f64,
+    heap: &mut BinaryHeap<Ev>,
+    seq: &mut u64,
+    pool: usize,
+    group: usize,
+) {
+    gs.batcher.admit(now);
+    if gs.batcher.active() == 0 {
+        // Nothing in flight: quiesce; the next arrival wakes the group
+        // (and accounts the idle-power gap).
+        gs.busy = false;
+        gs.t = now;
+        return;
+    }
+    let plan = gs.batcher.plan();
+    let n_active = plan
+        .iter()
+        .filter(|w| !matches!(w, SlotWork::Idle))
+        .count() as f64;
+    let l_bar = gs.batcher.mean_kv_len().max(1.0);
+    let dt = cfg.roofline.tau_ms(n_active, l_bar) / 1e3;
+    let t_end = now + dt;
+    gs.meter.observe(t_end, n_active);
+    gs.pending_plan = Some(plan);
+    gs.steps += 1;
+    *seq += 1;
+    heap.push(Ev {
+        t: t_end,
+        class: CLASS_STEP,
+        seq: *seq,
+        kind: EvKind::StepComplete { pool, group },
+    });
+}
+
+/// Run the fleet over a trace that is **already sorted by arrival time**.
+/// Returns per-pool, per-group outcomes in index order.
+fn validate_fleet_inputs(
+    trace: &[Request],
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+) {
+    assert_eq!(
+        router.num_pools(),
+        pool_cfgs.len(),
+        "router targets {} pools, {} configured",
+        router.num_pools(),
+        pool_cfgs.len()
+    );
+    assert_eq!(pool_groups.len(), pool_cfgs.len());
+    assert!(pool_groups.iter().all(|&g| g > 0), "empty pool");
+    for r in trace {
+        assert!(
+            r.arrival_s.is_finite(),
+            "non-finite arrival time for request {}",
+            r.id
+        );
+    }
+}
+
+pub(crate) fn run_fleet(
+    trace: &[Request],
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+    dispatch: &mut dyn DispatchPolicy,
+) -> Vec<Vec<GroupOutcome>> {
+    validate_fleet_inputs(trace, router, pool_groups, pool_cfgs);
+    debug_assert!(
+        trace.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
+        "run_fleet requires an arrival-sorted trace"
+    );
+
+    let mut pools: Vec<Vec<GroupSim>> = pool_groups
+        .iter()
+        .zip(pool_cfgs)
+        .map(|(&g, cfg)| (0..g).map(|_| GroupSim::new(cfg)).collect())
+        .collect();
+
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::with_capacity(trace.len() + 16);
+    for (i, r) in trace.iter().enumerate() {
+        heap.push(Ev {
+            t: r.arrival_s,
+            class: CLASS_ARRIVAL,
+            seq: i as u64,
+            kind: EvKind::Arrival { idx: i },
+        });
+    }
+    let mut seq = trace.len() as u64;
+    let need_state = router.is_load_aware() || !dispatch.is_arrival_static();
+
+    while let Some(ev) = heap.pop() {
+        match ev.kind {
+            EvKind::Arrival { idx } => {
+                let req = &trace[idx];
+                let snap = if need_state {
+                    Some(snapshot(&pools, pool_cfgs))
+                } else {
+                    None
+                };
+                let (pool, group, sreq) =
+                    assign(router, dispatch, pool_groups, req, snap.as_ref());
+                assert!(
+                    pool < pools.len() && group < pools[pool].len(),
+                    "dispatch out of range: pool {pool} group {group}"
+                );
+                let gs = &mut pools[pool][group];
+                if !gs.batcher.submit(sreq) {
+                    gs.metrics.rejected += 1;
+                }
+                if !gs.busy {
+                    // Fast-forward the quiescent group to now: the gap
+                    // integrates at the meter's standing batch — idle
+                    // power for a never-run group, the final step's
+                    // P(n_active) after a drain (the legacy loop's
+                    // left-constant convention, kept for replay).
+                    gs.busy = true;
+                    gs.meter.observe(ev.t, 0.0);
+                    gs.t = ev.t;
+                    seq += 1;
+                    heap.push(Ev {
+                        t: ev.t,
+                        class: CLASS_WAKE,
+                        seq,
+                        kind: EvKind::Wake { pool, group },
+                    });
+                }
+            }
+            EvKind::StepComplete { pool, group } => {
+                let gs = &mut pools[pool][group];
+                gs.t = ev.t;
+                let plan = gs
+                    .pending_plan
+                    .take()
+                    .expect("StepComplete without an in-flight plan");
+                for (i, w) in plan.into_iter().enumerate() {
+                    match w {
+                        SlotWork::Idle => {}
+                        SlotWork::Ingest { .. } => {
+                            gs.batcher.on_step(i, w, ev.t);
+                        }
+                        SlotWork::Decode => {
+                            gs.meter.add_output_tokens(1);
+                            if let Some(c) =
+                                gs.batcher.on_step(i, SlotWork::Decode, ev.t)
+                            {
+                                gs.metrics.record(&c);
+                            }
+                        }
+                    }
+                }
+                start_step(
+                    gs,
+                    &pool_cfgs[pool],
+                    ev.t,
+                    &mut heap,
+                    &mut seq,
+                    pool,
+                    group,
+                );
+            }
+            EvKind::Wake { pool, group } => {
+                let gs = &mut pools[pool][group];
+                start_step(
+                    gs,
+                    &pool_cfgs[pool],
+                    ev.t,
+                    &mut heap,
+                    &mut seq,
+                    pool,
+                    group,
+                );
+            }
+        }
+    }
+
+    pools
+        .into_iter()
+        .map(|groups| groups.into_iter().map(GroupSim::finish).collect())
+        .collect()
+}
+
+/// Simulate one group in isolation — the unit of work of the parallel
+/// fast path. Runs the exact same event engine (one pool, one group), so
+/// per-group results are bit-identical to the shared-heap run.
+fn run_one_group(reqs: &[Request], cfg: &GroupSimConfig) -> GroupOutcome {
+    let mut rr = RoundRobin::new();
+    let mut out = run_fleet(
+        reqs,
+        &HomogeneousRouter,
+        &[1],
+        std::slice::from_ref(cfg),
+        &mut rr,
+    );
+    out.pop().expect("one pool").pop().expect("one group")
+}
+
+/// Whether `run_fleet_auto` may take the parallel per-group path.
+pub(crate) fn parallel_eligible(
+    router: &dyn Router,
+    dispatch: &dyn DispatchPolicy,
+    pool_groups: &[u32],
+) -> bool {
+    !router.is_load_aware()
+        && dispatch.is_arrival_static()
+        && pool_groups.iter().map(|&g| g as u64).sum::<u64>() > 1
+}
+
+/// Run the fleet, stepping independent groups on worker threads when the
+/// routing/dispatch combination is arrival-static (group assignment
+/// precomputed on this thread, results merged in group-index order).
+/// Falls back to the sequential shared-heap engine otherwise.
+pub(crate) fn run_fleet_auto(
+    trace: &[Request],
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+    dispatch: &mut dyn DispatchPolicy,
+    allow_parallel: bool,
+) -> Vec<Vec<GroupOutcome>> {
+    if !(allow_parallel && parallel_eligible(router, &*dispatch, pool_groups)) {
+        return run_fleet(trace, router, pool_groups, pool_cfgs, dispatch);
+    }
+    // Same input contract as the sequential engine — a malformed
+    // topology must fail identically on both paths.
+    validate_fleet_inputs(trace, router, pool_groups, pool_cfgs);
+
+    // Pre-assign: for arrival-static dispatch the (pool, group) of every
+    // request is a pure function of the arrival sequence. Bake the
+    // router's effective-prompt transform into the stored request so the
+    // per-group engine can run it through an identity router.
+    let mut per_group: Vec<Vec<Vec<Request>>> = pool_groups
+        .iter()
+        .map(|&g| vec![Vec::new(); g as usize])
+        .collect();
+    for r in trace {
+        let (pool, group, s) = assign(router, dispatch, pool_groups, r, None);
+        per_group[pool][group].push(Request {
+            id: r.id,
+            arrival_s: r.arrival_s,
+            prompt_tokens: s.prompt_tokens,
+            output_tokens: r.output_tokens,
+        });
+    }
+
+    // Flatten to (pool, group, arrivals) jobs; fan out over a scoped
+    // thread pool; place results by index.
+    let jobs: Vec<(usize, usize, Vec<Request>)> = per_group
+        .into_iter()
+        .enumerate()
+        .flat_map(|(p, groups)| {
+            groups.into_iter().enumerate().map(move |(g, reqs)| (p, g, reqs))
+        })
+        .collect();
+    let mut results: Vec<Option<GroupOutcome>> =
+        (0..jobs.len()).map(|_| None).collect();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(jobs.len())
+        .max(1);
+    let chunk = jobs.len().div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (job_chunk, out_chunk) in
+            jobs.chunks(chunk).zip(results.chunks_mut(chunk))
+        {
+            scope.spawn(move || {
+                for ((pool, _g, reqs), slot) in
+                    job_chunk.iter().zip(out_chunk.iter_mut())
+                {
+                    *slot = Some(run_one_group(reqs, &pool_cfgs[*pool]));
+                }
+            });
+        }
+    });
+
+    let mut out: Vec<Vec<GroupOutcome>> =
+        pool_groups.iter().map(|_| Vec::new()).collect();
+    for ((pool, _group, _), res) in jobs.iter().zip(results) {
+        out[*pool].push(res.expect("worker filled every slot"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::profile::{GpuProfile, ManualProfile};
+    use crate::workload::synth::{generate, GenConfig};
+
+    fn cfg(window: u32) -> GroupSimConfig {
+        let p = ManualProfile::h100_70b();
+        GroupSimConfig {
+            window_tokens: window,
+            n_max: p.n_max(window),
+            roofline: p.roofline(),
+            power: p.gpu().power,
+            gpus_charged: 1.0,
+            ingest_chunk: 1024,
+        }
+    }
+
+    fn small_trace(seed: u64) -> Vec<Request> {
+        generate(
+            &crate::workload::cdf::azure_conversations(),
+            &GenConfig {
+                lambda_rps: 40.0,
+                duration_s: 2.0,
+                max_prompt_tokens: 6000,
+                max_output_tokens: 128,
+                seed,
+            },
+        )
+    }
+
+    #[test]
+    fn event_ordering_is_time_then_class_then_seq() {
+        let mk = |t, class, seq| Ev {
+            t,
+            class,
+            seq,
+            kind: EvKind::Arrival { idx: 0 },
+        };
+        let mut h = BinaryHeap::new();
+        h.push(mk(1.0, CLASS_STEP, 5));
+        h.push(mk(1.0, CLASS_ARRIVAL, 9));
+        h.push(mk(0.5, CLASS_WAKE, 1));
+        h.push(mk(1.0, CLASS_ARRIVAL, 2));
+        let order: Vec<(f64, u8, u64)> = std::iter::from_fn(|| h.pop())
+            .map(|e| (e.t, e.class, e.seq))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                (0.5, CLASS_WAKE, 1),
+                (1.0, CLASS_ARRIVAL, 2),
+                (1.0, CLASS_ARRIVAL, 9),
+                (1.0, CLASS_STEP, 5),
+            ]
+        );
+    }
+
+    #[test]
+    fn all_requests_complete_and_energy_accrues() {
+        let trace = small_trace(1);
+        let n = trace.len() as u64;
+        let mut rr = RoundRobin::new();
+        let out = run_fleet(
+            &trace,
+            &HomogeneousRouter,
+            &[2],
+            &[cfg(8192)],
+            &mut rr,
+        );
+        let completed: u64 = out[0].iter().map(|g| g.metrics.completed).sum();
+        let tokens: u64 = out[0].iter().map(|g| g.output_tokens).sum();
+        let want: u64 = trace.iter().map(|r| r.output_tokens as u64).sum();
+        assert_eq!(completed, n);
+        assert_eq!(tokens, want, "token conservation");
+        assert!(out[0].iter().all(|g| g.joules > 0.0));
+    }
+
+    #[test]
+    fn parallel_path_is_bit_identical_to_sequential() {
+        let trace = small_trace(7);
+        let seq_out = run_fleet(
+            &trace,
+            &HomogeneousRouter,
+            &[3],
+            &[cfg(8192)],
+            &mut RoundRobin::new(),
+        );
+        let par_out = run_fleet_auto(
+            &trace,
+            &HomogeneousRouter,
+            &[3],
+            &[cfg(8192)],
+            &mut RoundRobin::new(),
+            true,
+        );
+        for (s, p) in seq_out[0].iter().zip(&par_out[0]) {
+            assert_eq!(s.joules.to_bits(), p.joules.to_bits());
+            assert_eq!(s.output_tokens, p.output_tokens);
+            assert_eq!(s.horizon_s.to_bits(), p.horizon_s.to_bits());
+            assert_eq!(s.steps, p.steps);
+            assert_eq!(s.metrics.completed, p.metrics.completed);
+        }
+    }
+
+    #[test]
+    fn wake_integrates_idle_power() {
+        // One request arriving after 5 idle seconds: the wake must charge
+        // the gap at idle watts.
+        let trace = vec![Request {
+            id: 0,
+            arrival_s: 5.0,
+            prompt_tokens: 100,
+            output_tokens: 10,
+        }];
+        let out = run_fleet(
+            &trace,
+            &HomogeneousRouter,
+            &[1],
+            &[cfg(8192)],
+            &mut RoundRobin::new(),
+        );
+        assert!(out[0][0].joules > 5.0 * 299.0, "idle joules missing");
+        assert_eq!(out[0][0].metrics.completed, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite arrival")]
+    fn nan_arrival_rejected() {
+        let trace = vec![Request {
+            id: 0,
+            arrival_s: f64::NAN,
+            prompt_tokens: 10,
+            output_tokens: 1,
+        }];
+        run_fleet(
+            &trace,
+            &HomogeneousRouter,
+            &[1],
+            &[cfg(8192)],
+            &mut RoundRobin::new(),
+        );
+    }
+}

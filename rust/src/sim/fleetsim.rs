@@ -1,24 +1,27 @@
-//! Virtual-time simulation of serving pools.
+//! Pool/topology simulation reports and the public simulation entry
+//! points, built on the event-driven core in [`super::events`].
 //!
-//! Each TP group runs the same [`Batcher`] state machine as the real
-//! engine, but its per-step latency comes from the roofline
-//! `τ(n_active, L̄_live)` (with L̄ measured live from the slots' actual
-//! KV lengths) and its energy from the logistic `P(n_active)` — i.e. a
-//! faithful dynamic model of the paper's analytics, including the effects
-//! the closed form ignores: ramp-up, queue waits, chunked prefill
-//! interference and fragmentation.
+//! Each TP group runs the same [`Batcher`](crate::serve::batcher::Batcher)
+//! state machine as the real engine, but its per-step latency comes from
+//! the roofline `τ(n_active, L̄_live)` (with L̄ measured live from the
+//! slots' actual KV lengths) and its energy from the logistic
+//! `P(n_active)` — i.e. a faithful dynamic model of the paper's
+//! analytics, including the effects the closed form ignores: ramp-up,
+//! queue waits, chunked prefill interference and fragmentation.
 //!
-//! Requests are assigned to a pool's groups round-robin at arrival (the
-//! dispatch policy production routers use for uniform pools), so groups
-//! evolve independently and the simulation is embarrassingly sequential
-//! and deterministic.
+//! [`simulate_pool`] and [`simulate_topology`] are thin compatibility
+//! wrappers over the event engine with round-robin dispatch — they
+//! reproduce the pre-refactor sequential per-group loop bit-for-bit
+//! (`tests/sim_replay.rs` keeps that loop as an inline oracle).
+//! [`simulate_topology_with`] exposes the full engine: any
+//! [`DispatchPolicy`], load-aware routers, and the parallel per-group
+//! fast path.
 
+use super::dispatch::{DispatchPolicy, RoundRobin};
+use super::events::{run_fleet_auto, GroupOutcome};
 use crate::power::LogisticPower;
 use crate::roofline::Roofline;
 use crate::router::Router;
-use crate::serve::batcher::{Batcher, SlotWork};
-use crate::serve::energy::EnergyMeter;
-use crate::serve::kvblocks::BlockAllocator;
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::request::ServeRequest;
 use crate::workload::Request;
@@ -56,40 +59,47 @@ pub struct PoolSimReport {
     pub decode_tok_s: f64,
     /// Horizon: last completion time, s.
     pub horizon_s: f64,
+    /// Engine iterations executed across the pool's groups.
+    pub steps: u64,
 }
 
-/// Simulate one pool of `groups` identical groups over its request slice.
-pub fn simulate_pool(
+/// Simulate a routed topology: requests go through `router` to pools,
+/// each with its own group count and config.
+#[derive(Debug, Clone)]
+pub struct TopoSimReport {
+    pub pools: Vec<PoolSimReport>,
+    pub output_tokens: u64,
+    pub joules: f64,
+    pub tok_per_watt: f64,
+    /// Engine iterations executed fleet-wide.
+    pub steps: u64,
+}
+
+/// Aggregate a pool's group outcomes in group-index order (the order is
+/// part of the deterministic-replay contract: float sums match the legacy
+/// sequential loop bit-for-bit).
+fn aggregate_pool(
     name: &str,
-    mut requests: Vec<ServeRequest>,
     groups: u32,
     cfg: &GroupSimConfig,
+    outcomes: Vec<GroupOutcome>,
 ) -> PoolSimReport {
-    assert!(groups > 0);
-    requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-
-    // Round-robin dispatch at arrival.
-    let mut per_group: Vec<Vec<ServeRequest>> =
-        vec![Vec::new(); groups as usize];
-    for (i, r) in requests.into_iter().enumerate() {
-        per_group[i % groups as usize].push(r);
-    }
-
     let mut metrics = ServeMetrics::default();
     let mut joules = 0.0;
     let mut output_tokens = 0u64;
     let mut horizon_s: f64 = 0.0;
     let mut batch_integral = 0.0;
     let mut time_integral = 0.0;
+    let mut steps = 0u64;
 
-    for arrivals in per_group {
-        let g = simulate_group(arrivals, cfg);
+    for g in outcomes {
         metrics.merge(&g.metrics);
         joules += g.joules;
         output_tokens += g.output_tokens;
         horizon_s = horizon_s.max(g.horizon_s);
         batch_integral += g.mean_batch * g.horizon_s;
         time_integral += g.horizon_s;
+        steps += g.steps;
     }
 
     PoolSimReport {
@@ -115,137 +125,26 @@ pub fn simulate_pool(
             0.0
         },
         horizon_s,
+        steps,
     }
 }
 
-struct GroupResult {
-    metrics: ServeMetrics,
-    joules: f64,
-    output_tokens: u64,
-    horizon_s: f64,
-    mean_batch: f64,
-}
-
-fn simulate_group(arrivals: Vec<ServeRequest>, cfg: &GroupSimConfig) -> GroupResult {
-    // Block budget = n_max × window (Eq. 3 inverted): admission saturates
-    // at exactly n_max full-window sequences.
-    let blocks_total =
-        (cfg.n_max as u64 * cfg.window_tokens as u64 / 64).max(1) as u32;
-    let mut b = Batcher::new(
-        cfg.n_max as usize,
-        BlockAllocator::new(64, blocks_total),
-        cfg.ingest_chunk,
-        cfg.window_tokens,
-    );
-    let mut meter = EnergyMeter::new(cfg.power, cfg.gpus_charged, 0.0);
-    let mut metrics = ServeMetrics::default();
-
-    let mut pending = arrivals.into_iter().peekable();
-    let mut t = 0.0f64;
-
-    loop {
-        // Feed arrivals up to the current time.
-        while pending
-            .peek()
-            .map(|r| r.arrival_s <= t)
-            .unwrap_or(false)
-        {
-            let r = pending.next().unwrap();
-            if !b.submit(r) {
-                metrics.rejected += 1;
-            }
-        }
-        b.admit(t);
-
-        if b.active() == 0 {
-            // Nothing in flight: fast-forward to the next arrival (idle
-            // power still accrues — the long-pool "nearly idle yet still
-            // draws watts" effect of §5.1).
-            match pending.peek() {
-                Some(r) => {
-                    let t_next = r.arrival_s;
-                    meter.observe(t_next, 0.0);
-                    t = t_next;
-                    continue;
-                }
-                None => break,
-            }
-        }
-
-        // One engine step at the live operating point.
-        let plan = b.plan();
-        let n_active = plan
-            .iter()
-            .filter(|w| !matches!(w, SlotWork::Idle))
-            .count() as f64;
-        let l_bar = b.mean_kv_len().max(1.0);
-        let dt = cfg.roofline.tau_ms(n_active, l_bar) / 1e3;
-        t += dt;
-        meter.observe(t, n_active);
-
-        for (i, w) in plan.into_iter().enumerate() {
-            match w {
-                SlotWork::Idle => {}
-                SlotWork::Ingest { .. } => {
-                    b.on_step(i, w, t);
-                }
-                SlotWork::Decode => {
-                    meter.add_output_tokens(1);
-                    if let Some(c) = b.on_step(i, SlotWork::Decode, t) {
-                        metrics.record(&c);
-                    }
-                }
-            }
-        }
-    }
-
-    GroupResult {
-        metrics,
-        joules: meter.joules().0,
-        output_tokens: meter.output_tokens(),
-        horizon_s: t,
-        mean_batch: meter.mean_batch(),
-    }
-}
-
-/// Simulate a routed topology: requests go through `router` to pools,
-/// each with its own group count and config.
-#[derive(Debug, Clone)]
-pub struct TopoSimReport {
-    pub pools: Vec<PoolSimReport>,
-    pub output_tokens: u64,
-    pub joules: f64,
-    pub tok_per_watt: f64,
-}
-
-pub fn simulate_topology(
-    trace: &[Request],
-    router: &dyn Router,
+fn aggregate_topology(
     pool_groups: &[u32],
     pool_cfgs: &[GroupSimConfig],
+    outcomes: Vec<Vec<GroupOutcome>>,
 ) -> TopoSimReport {
-    assert_eq!(router.num_pools(), pool_cfgs.len());
-    assert_eq!(pool_groups.len(), pool_cfgs.len());
-
-    let mut per_pool: Vec<Vec<ServeRequest>> =
-        vec![Vec::new(); pool_cfgs.len()];
-    for req in trace {
-        let route = router.route(req);
-        let mut s = ServeRequest::from(req);
-        s.prompt_tokens = route.effective_prompt_tokens;
-        per_pool[route.pool].push(s);
-    }
-
-    let pools: Vec<PoolSimReport> = per_pool
+    let pools: Vec<PoolSimReport> = outcomes
         .into_iter()
         .enumerate()
-        .map(|(i, reqs)| {
-            simulate_pool(&format!("pool-{i}"), reqs, pool_groups[i], &pool_cfgs[i])
+        .map(|(i, o)| {
+            aggregate_pool(&format!("pool-{i}"), pool_groups[i], &pool_cfgs[i], o)
         })
         .collect();
 
     let output_tokens = pools.iter().map(|p| p.output_tokens).sum();
     let joules: f64 = pools.iter().map(|p| p.joules).sum();
+    let steps = pools.iter().map(|p| p.steps).sum();
     TopoSimReport {
         output_tokens,
         tok_per_watt: if joules > 0.0 {
@@ -254,8 +153,83 @@ pub fn simulate_topology(
             0.0
         },
         joules,
+        steps,
         pools,
     }
+}
+
+/// Stable arrival-time sort (total order; NaN arrivals are rejected by
+/// the engine with a clear message instead of a `partial_cmp` panic).
+fn sorted_by_arrival(trace: &[Request]) -> Vec<Request> {
+    let mut t = trace.to_vec();
+    t.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    t
+}
+
+/// Simulate one pool of `groups` identical groups over its request slice
+/// (round-robin dispatch at arrival — the legacy behavior, bit-for-bit).
+pub fn simulate_pool(
+    name: &str,
+    requests: Vec<ServeRequest>,
+    groups: u32,
+    cfg: &GroupSimConfig,
+) -> PoolSimReport {
+    assert!(groups > 0);
+    let trace: Vec<Request> = requests
+        .iter()
+        .map(|s| Request {
+            id: s.id,
+            arrival_s: s.arrival_s,
+            prompt_tokens: s.prompt_tokens,
+            output_tokens: s.output_tokens,
+        })
+        .collect();
+    let trace = sorted_by_arrival(&trace);
+    let mut rr = RoundRobin::new();
+    let mut outcomes = run_fleet_auto(
+        &trace,
+        &crate::router::HomogeneousRouter,
+        &[groups],
+        std::slice::from_ref(cfg),
+        &mut rr,
+        true,
+    );
+    aggregate_pool(name, groups, cfg, outcomes.pop().expect("one pool"))
+}
+
+/// Simulate a routed topology with round-robin dispatch — the legacy
+/// entry point, bit-for-bit compatible with the pre-refactor loop.
+pub fn simulate_topology(
+    trace: &[Request],
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+) -> TopoSimReport {
+    let mut rr = RoundRobin::new();
+    simulate_topology_with(trace, router, pool_groups, pool_cfgs, &mut rr, true)
+}
+
+/// Full-control entry point: any dispatch policy, load-aware routers,
+/// optional parallel per-group stepping (taken automatically when the
+/// policy is arrival-static and the router is not load-aware).
+pub fn simulate_topology_with(
+    trace: &[Request],
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+    dispatch: &mut dyn DispatchPolicy,
+    allow_parallel: bool,
+) -> TopoSimReport {
+    let trace = sorted_by_arrival(trace);
+    let outcomes = run_fleet_auto(
+        &trace,
+        router,
+        pool_groups,
+        pool_cfgs,
+        dispatch,
+        allow_parallel,
+    );
+    aggregate_topology(pool_groups, pool_cfgs, outcomes)
 }
 
 #[cfg(test)]
@@ -263,6 +237,7 @@ mod tests {
     use super::*;
     use crate::fleet::profile::{GpuProfile, ManualProfile};
     use crate::router::context::ContextRouter;
+    use crate::sim::dispatch::{self, JoinShortestQueue};
     use crate::workload::synth::{generate, GenConfig};
 
     fn h100_cfg(window: u32) -> GroupSimConfig {
@@ -309,6 +284,7 @@ mod tests {
             r.tok_per_watt
         );
         assert!(r.mean_batch > 8.0, "group should saturate: {}", r.mean_batch);
+        assert!(r.steps > 0);
     }
 
     #[test]
@@ -381,5 +357,45 @@ mod tests {
                                   &[2], &[h100_cfg(65_536)]);
         assert_eq!(a.output_tokens, b.output_tokens);
         assert_eq!(a.joules, b.joules);
+    }
+
+    #[test]
+    fn deterministic_under_stateful_dispatch() {
+        let trace = azure_trace(30.0, 2.0, 30_000);
+        let run = || {
+            let mut jsq = JoinShortestQueue;
+            simulate_topology_with(
+                &trace,
+                &crate::router::HomogeneousRouter,
+                &[2],
+                &[h100_cfg(65_536)],
+                &mut jsq,
+                true,
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.output_tokens, b.output_tokens);
+        assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+    }
+
+    #[test]
+    fn every_dispatch_policy_conserves_tokens() {
+        let trace = azure_trace(40.0, 2.0, 4000);
+        let want: u64 = trace.iter().map(|r| r.output_tokens as u64).sum();
+        for name in dispatch::ALL {
+            let mut policy = dispatch::parse(name).unwrap();
+            let r = simulate_topology_with(
+                &trace,
+                &ContextRouter::two_pool(4096),
+                &[2, 2],
+                &[h100_cfg(4096 + 1024), h100_cfg(65_536)],
+                policy.as_mut(),
+                true,
+            );
+            assert_eq!(r.output_tokens, want, "policy {name}");
+            let done: u64 = r.pools.iter().map(|p| p.metrics.completed).sum();
+            assert_eq!(done, trace.len() as u64, "policy {name}");
+        }
     }
 }

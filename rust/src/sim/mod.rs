@@ -1,10 +1,47 @@
 //! Discrete-event fleet simulation — the dynamic counterpart of the
-//! analytical planner. Where [`crate::fleet`] solves the steady state in
-//! closed form, [`fleetsim`] *plays the trace through* virtual GPU groups
-//! (continuous batching, paged KV admission, roofline step times,
-//! logistic power integration) and must land near the analytical tok/W —
-//! the crate's internal consistency check.
+//! analytical planner.
+//!
+//! Where [`crate::fleet`] solves the steady state in closed form, this
+//! module *plays the trace through* virtual GPU groups (continuous
+//! batching, paged KV admission, roofline step times, logistic power
+//! integration) and must land near the analytical tok/W — the crate's
+//! internal consistency check.
+//!
+//! # Architecture
+//!
+//! The core ([`events`]) is a single binary-heap event queue over one
+//! virtual clock: arrival, step-complete and wake events drive **all
+//! groups of all pools concurrently in virtual time**. That shared clock
+//! is what makes *stateful* policies expressible: at every arrival the
+//! router can read a live [`FleetState`] snapshot (per-pool queue depth,
+//! in-flight batch, free KV blocks) and a [`DispatchPolicy`] picks the
+//! destination group from the same snapshot.
+//!
+//! * [`dispatch`] — round-robin, join-shortest-queue, least-KV-load and
+//!   power-aware group selection behind the [`DispatchPolicy`] trait.
+//! * [`events`] — the engine, plus the parallel fast path: when routing
+//!   and dispatch are arrival-static, independent groups are stepped on
+//!   worker threads and merged in group-index order, bit-identically to
+//!   the sequential run.
+//! * [`fleetsim`] — reports and entry points. [`simulate_pool`] /
+//!   [`simulate_topology`] reproduce the pre-refactor round-robin
+//!   simulator bit-for-bit (deterministic-replay guarantee);
+//!   [`simulate_topology_with`] exposes policy and parallelism control.
+//!
+//! Determinism: every event is ordered by `(time, kind, sequence)` under
+//! `f64::total_cmp`, policies are forbidden ambient randomness, and all
+//! aggregation runs in index order — so a (trace, router, policy, seed)
+//! tuple replays to the bit.
 
+pub mod dispatch;
+pub mod events;
 pub mod fleetsim;
 
-pub use fleetsim::{simulate_pool, simulate_topology, GroupSimConfig, PoolSimReport, TopoSimReport};
+pub use dispatch::{
+    DispatchPolicy, JoinShortestQueue, LeastKvLoad, PowerAware, RoundRobin,
+};
+pub use events::{FleetState, GroupLoad, PoolLoad};
+pub use fleetsim::{
+    simulate_pool, simulate_topology, simulate_topology_with, GroupSimConfig,
+    PoolSimReport, TopoSimReport,
+};

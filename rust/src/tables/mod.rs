@@ -1,6 +1,7 @@
 //! Regeneration of every table and figure in the paper's evaluation
 //! (DESIGN.md §6 maps each to its module and bench target).
 
+pub mod dispatch_fig;
 pub mod independence;
 pub mod law_fig;
 pub mod power_fig;
@@ -27,6 +28,7 @@ pub fn generate_all(lbar: LBarPolicy) -> String {
     s.push_str(&t7::generate());
     s.push_str(&law_fig::generate());
     s.push_str(&power_fig::generate());
+    s.push_str(&dispatch_fig::generate());
     s.push_str(&independence::generate(lbar));
     s
 }
@@ -41,7 +43,7 @@ mod tests {
         for needle in [
             "Table 1", "Table 2", "Table 3", "Table 4", "Table 5",
             "Table 6", "Table 7", "1/W law", "Figure (power)",
-            "independence",
+            "Figure (dispatch)", "independence",
         ] {
             assert!(s.contains(needle), "missing {needle}");
         }

@@ -48,6 +48,16 @@ pub fn generate(trace: &WorkloadTrace, cfg: &GenConfig) -> Vec<Request> {
 
     loop {
         t += rng.exp(cfg.lambda_rps);
+        // The exponential sampler can only produce finite positive gaps,
+        // but a corrupt λ or duration would poison every downstream
+        // consumer that orders by arrival (the simulator sorts with
+        // `total_cmp` and rejects non-finite arrivals) — fail here, at
+        // the source, instead.
+        assert!(
+            t.is_finite(),
+            "non-finite arrival time generated (λ = {}, t = {t})",
+            cfg.lambda_rps
+        );
         if t > cfg.duration_s {
             break;
         }

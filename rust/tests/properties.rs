@@ -402,6 +402,202 @@ fn prop_adaptive_controller_stays_on_grid() {
     });
 }
 
+/// Random small sim scenario shared by the event-engine properties:
+/// windows are multiples of 64 with output headroom, so every generated
+/// request fits its pool and must complete exactly once.
+fn random_sim_scenario(
+    g: &mut wattlaw::xcheck::Gen,
+) -> (Vec<wattlaw::workload::Request>, Vec<u32>, Vec<wattlaw::sim::GroupSimConfig>) {
+    use wattlaw::fleet::profile::GpuProfile;
+    use wattlaw::sim::GroupSimConfig;
+    use wattlaw::workload::synth::{generate, GenConfig};
+
+    let p = ManualProfile::h100_70b();
+    let mk = |window: u32, n_max: u32| GroupSimConfig {
+        window_tokens: window,
+        n_max,
+        roofline: p.roofline(),
+        power: p.gpu().power,
+        gpus_charged: 1.0,
+        ingest_chunk: 1024,
+    };
+    let two_pools = g.bool();
+    // Prompts beyond the 4096 split go to the 64K pool, so any length is
+    // window-safe in the two-pool scenario; the single 8K pool needs
+    // prompt + output ≤ window.
+    let trace = generate(
+        &azure_conversations(),
+        &GenConfig {
+            lambda_rps: g.f64_in(10.0, 60.0),
+            duration_s: g.f64_in(0.5, 2.0),
+            max_prompt_tokens: if two_pools { 20_000 } else { 7_000 },
+            max_output_tokens: 256,
+            seed: g.u64_in(0, 1 << 40),
+        },
+    );
+    let (groups, cfgs) = if two_pools {
+        (
+            vec![g.u64_in(1, 3) as u32, g.u64_in(1, 2) as u32],
+            vec![
+                mk(4096 + 1024, g.u64_in(4, 32) as u32),
+                mk(65_536, g.u64_in(4, 16) as u32),
+            ],
+        )
+    } else {
+        (
+            vec![g.u64_in(1, 4) as u32],
+            vec![mk(8192, g.u64_in(4, 64) as u32)],
+        )
+    };
+    (trace, groups, cfgs)
+}
+
+#[test]
+fn prop_event_sim_conserves_tokens_and_replays_across_policies() {
+    use wattlaw::router::context::ContextRouter;
+    use wattlaw::sim::{dispatch, simulate_topology_with};
+
+    forall("event sim: conservation + determinism, any policy", 10, |g| {
+        let (trace, groups, cfgs) = random_sim_scenario(g);
+        let router: Box<dyn Router> = if groups.len() == 2 {
+            Box::new(ContextRouter::two_pool(4096))
+        } else {
+            Box::new(wattlaw::router::HomogeneousRouter)
+        };
+        let policy_name = *g.choose(&dispatch::ALL);
+        let (par_a, par_b) = (g.bool(), g.bool());
+        let run = |parallel: bool| {
+            let mut policy = dispatch::parse(policy_name).unwrap();
+            simulate_topology_with(
+                &trace,
+                router.as_ref(),
+                &groups,
+                &cfgs,
+                policy.as_mut(),
+                parallel,
+            )
+        };
+        let a = run(par_a);
+        let b = run(par_b);
+
+        // Token conservation: every request fits its pool's window, so
+        // everything completes and output tokens are conserved.
+        let want: u64 = trace.iter().map(|r| r.output_tokens as u64).sum();
+        xcheck_assert!(
+            a.output_tokens == want,
+            "{policy_name}: {} of {} output tokens",
+            a.output_tokens,
+            want
+        );
+        let done: u64 = a.pools.iter().map(|p| p.metrics.completed).sum();
+        xcheck_assert!(
+            done == trace.len() as u64,
+            "{policy_name}: {done} of {} completed",
+            trace.len()
+        );
+        let rejected: u64 = a.pools.iter().map(|p| p.metrics.rejected).sum();
+        xcheck_assert!(rejected == 0, "{policy_name}: {rejected} rejected");
+
+        // Determinism: bit-identical replay, including energy.
+        xcheck_assert!(a.output_tokens == b.output_tokens);
+        xcheck_assert!(
+            a.joules.to_bits() == b.joules.to_bits(),
+            "{policy_name}: joules replay {} vs {}",
+            a.joules,
+            b.joules
+        );
+        xcheck_assert!(a.steps == b.steps);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_sim_parallel_matches_sequential_bitwise() {
+    use wattlaw::router::context::ContextRouter;
+    use wattlaw::sim::dispatch::RoundRobin;
+    use wattlaw::sim::simulate_topology_with;
+
+    forall("event sim: parallel == sequential, bit for bit", 8, |g| {
+        let (trace, groups, cfgs) = random_sim_scenario(g);
+        let router: Box<dyn Router> = if groups.len() == 2 {
+            Box::new(ContextRouter::two_pool(4096))
+        } else {
+            Box::new(wattlaw::router::HomogeneousRouter)
+        };
+        let mut rr_a = RoundRobin::new();
+        let seq = simulate_topology_with(
+            &trace, router.as_ref(), &groups, &cfgs, &mut rr_a, false,
+        );
+        let mut rr_b = RoundRobin::new();
+        let par = simulate_topology_with(
+            &trace, router.as_ref(), &groups, &cfgs, &mut rr_b, true,
+        );
+        xcheck_assert!(seq.output_tokens == par.output_tokens);
+        xcheck_assert!(
+            seq.joules.to_bits() == par.joules.to_bits(),
+            "joules {} vs {}",
+            seq.joules,
+            par.joules
+        );
+        xcheck_assert!(seq.steps == par.steps);
+        for (s, p) in seq.pools.iter().zip(&par.pools) {
+            xcheck_assert!(s.horizon_s.to_bits() == p.horizon_s.to_bits());
+            xcheck_assert!(s.mean_batch.to_bits() == p.mean_batch.to_bits());
+            xcheck_assert!(s.metrics.completed == p.metrics.completed);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_router_live_is_total_and_window_safe() {
+    use wattlaw::router::adaptive::AdaptiveRouter;
+    use wattlaw::sim::{FleetState, GroupLoad, PoolLoad};
+
+    forall("adaptive route_live: total, in-range, length-safe", 200, |g| {
+        let b_short = g.pow2(10, 14);
+        let r = AdaptiveRouter::new(b_short)
+            .with_spill_factor(g.f64_in(0.5, 4.0));
+        let mk_pool = |g: &mut wattlaw::xcheck::Gen, window: u32, n_max: u32| {
+            let n = g.usize_in(1, 4);
+            PoolLoad {
+                window_tokens: window,
+                n_max,
+                groups: (0..n)
+                    .map(|_| GroupLoad {
+                        queued: g.usize_in(0, 50),
+                        active: g.usize_in(0, 16),
+                        free_blocks: g.u64_in(0, 4096) as u32,
+                        used_blocks: g.u64_in(0, 4096) as u32,
+                    })
+                    .collect(),
+            }
+        };
+        let state = FleetState {
+            pools: vec![
+                mk_pool(g, b_short + 1024, 64),
+                mk_pool(g, 65_536, 16),
+            ],
+        };
+        let req = Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: g.u64_in(1, 100_000) as u32,
+            output_tokens: g.u64_in(1, 1024) as u32,
+        };
+        let route = r.route_live(&req, &state);
+        xcheck_assert!(route.pool < 2);
+        xcheck_assert!(route.effective_prompt_tokens == req.prompt_tokens);
+        // A long prompt may never land in the short pool.
+        if req.prompt_tokens > b_short {
+            xcheck_assert!(route.pool == 1, "long prompt routed short");
+        }
+        // Decisions are pure in (request, snapshot).
+        xcheck_assert!(r.route_live(&req, &state) == route);
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_disagg_total_never_exceeds_decode_only() {
     use wattlaw::fleet::disagg::disaggregate;

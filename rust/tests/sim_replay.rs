@@ -1,0 +1,323 @@
+//! Deterministic-replay guarantee of the event-driven simulation core.
+//!
+//! The pre-refactor simulator dispatched round-robin at arrival and ran
+//! each group as an isolated sequential loop. That loop is preserved
+//! below (`legacy` module) as the oracle: under round-robin dispatch the
+//! event engine must reproduce its `output_tokens` and `joules`
+//! **bit-for-bit** on the seeded Azure trace — same float operations in
+//! the same order, just re-sequenced through the shared event heap.
+//!
+//! Also here: the parallel fast path must match the sequential engine
+//! exactly, and join-shortest-queue must strictly beat round-robin on a
+//! bursty, size-skewed two-pool trace (the behavioral payoff the
+//! refactor exists to make expressible).
+
+use wattlaw::router::context::ContextRouter;
+use wattlaw::router::HomogeneousRouter;
+use wattlaw::sim::dispatch::{JoinShortestQueue, RoundRobin};
+use wattlaw::sim::{simulate_topology, simulate_topology_with, GroupSimConfig};
+use wattlaw::workload::synth::{generate, GenConfig};
+use wattlaw::workload::Request;
+
+/// The pre-refactor sequential simulator, verbatim (round-robin at
+/// arrival, isolated per-group closed loops).
+mod legacy {
+    use wattlaw::router::Router;
+    use wattlaw::serve::batcher::{Batcher, SlotWork};
+    use wattlaw::serve::energy::EnergyMeter;
+    use wattlaw::serve::kvblocks::BlockAllocator;
+    use wattlaw::serve::metrics::ServeMetrics;
+    use wattlaw::serve::request::ServeRequest;
+    use wattlaw::sim::GroupSimConfig;
+    use wattlaw::workload::Request;
+
+    pub struct PoolResult {
+        pub metrics: ServeMetrics,
+        pub output_tokens: u64,
+        pub joules: f64,
+    }
+
+    pub struct TopoResult {
+        pub pools: Vec<PoolResult>,
+        pub output_tokens: u64,
+        pub joules: f64,
+    }
+
+    struct GroupResult {
+        metrics: ServeMetrics,
+        joules: f64,
+        output_tokens: u64,
+    }
+
+    fn simulate_group(arrivals: Vec<ServeRequest>, cfg: &GroupSimConfig) -> GroupResult {
+        let blocks_total =
+            (cfg.n_max as u64 * cfg.window_tokens as u64 / 64).max(1) as u32;
+        let mut b = Batcher::new(
+            cfg.n_max as usize,
+            BlockAllocator::new(64, blocks_total),
+            cfg.ingest_chunk,
+            cfg.window_tokens,
+        );
+        let mut meter = EnergyMeter::new(cfg.power, cfg.gpus_charged, 0.0);
+        let mut metrics = ServeMetrics::default();
+
+        let mut pending = arrivals.into_iter().peekable();
+        let mut t = 0.0f64;
+
+        loop {
+            while pending.peek().map(|r| r.arrival_s <= t).unwrap_or(false) {
+                let r = pending.next().unwrap();
+                if !b.submit(r) {
+                    metrics.rejected += 1;
+                }
+            }
+            b.admit(t);
+
+            if b.active() == 0 {
+                match pending.peek() {
+                    Some(r) => {
+                        let t_next = r.arrival_s;
+                        meter.observe(t_next, 0.0);
+                        t = t_next;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+
+            let plan = b.plan();
+            let n_active = plan
+                .iter()
+                .filter(|w| !matches!(w, SlotWork::Idle))
+                .count() as f64;
+            let l_bar = b.mean_kv_len().max(1.0);
+            let dt = cfg.roofline.tau_ms(n_active, l_bar) / 1e3;
+            t += dt;
+            meter.observe(t, n_active);
+
+            for (i, w) in plan.into_iter().enumerate() {
+                match w {
+                    SlotWork::Idle => {}
+                    SlotWork::Ingest { .. } => {
+                        b.on_step(i, w, t);
+                    }
+                    SlotWork::Decode => {
+                        meter.add_output_tokens(1);
+                        if let Some(c) = b.on_step(i, SlotWork::Decode, t) {
+                            metrics.record(&c);
+                        }
+                    }
+                }
+            }
+        }
+
+        GroupResult {
+            metrics,
+            joules: meter.joules().0,
+            output_tokens: meter.output_tokens(),
+        }
+    }
+
+    pub fn simulate_pool(
+        mut requests: Vec<ServeRequest>,
+        groups: u32,
+        cfg: &GroupSimConfig,
+    ) -> PoolResult {
+        assert!(groups > 0);
+        requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+
+        let mut per_group: Vec<Vec<ServeRequest>> =
+            vec![Vec::new(); groups as usize];
+        for (i, r) in requests.into_iter().enumerate() {
+            per_group[i % groups as usize].push(r);
+        }
+
+        let mut metrics = ServeMetrics::default();
+        let mut joules = 0.0;
+        let mut output_tokens = 0u64;
+        for arrivals in per_group {
+            let g = simulate_group(arrivals, cfg);
+            metrics.merge(&g.metrics);
+            joules += g.joules;
+            output_tokens += g.output_tokens;
+        }
+        PoolResult { metrics, output_tokens, joules }
+    }
+
+    pub fn simulate_topology(
+        trace: &[Request],
+        router: &dyn Router,
+        pool_groups: &[u32],
+        pool_cfgs: &[GroupSimConfig],
+    ) -> TopoResult {
+        let mut per_pool: Vec<Vec<ServeRequest>> =
+            vec![Vec::new(); pool_cfgs.len()];
+        for req in trace {
+            let route = router.route(req);
+            let mut s = ServeRequest::from(req);
+            s.prompt_tokens = route.effective_prompt_tokens;
+            per_pool[route.pool].push(s);
+        }
+        let pools: Vec<PoolResult> = per_pool
+            .into_iter()
+            .enumerate()
+            .map(|(i, reqs)| simulate_pool(reqs, pool_groups[i], &pool_cfgs[i]))
+            .collect();
+        let output_tokens = pools.iter().map(|p| p.output_tokens).sum();
+        let joules: f64 = pools.iter().map(|p| p.joules).sum();
+        TopoResult { pools, output_tokens, joules }
+    }
+}
+
+fn h100_cfg(window: u32) -> GroupSimConfig {
+    use wattlaw::fleet::profile::{GpuProfile, ManualProfile};
+    let p = ManualProfile::h100_70b();
+    GroupSimConfig {
+        window_tokens: window,
+        n_max: p.n_max(window),
+        roofline: p.roofline(),
+        power: p.gpu().power,
+        gpus_charged: 1.0,
+        ingest_chunk: 1024,
+    }
+}
+
+fn seeded_azure_trace() -> Vec<Request> {
+    generate(
+        &wattlaw::workload::cdf::azure_conversations(),
+        &GenConfig {
+            lambda_rps: 40.0,
+            duration_s: 5.0,
+            max_prompt_tokens: 60_000,
+            max_output_tokens: 1024,
+            seed: 42,
+        },
+    )
+}
+
+#[test]
+fn event_engine_replays_legacy_bit_for_bit_homogeneous() {
+    let trace = seeded_azure_trace();
+    let old = legacy::simulate_topology(
+        &trace,
+        &HomogeneousRouter,
+        &[4],
+        &[h100_cfg(65_536)],
+    );
+    let new = simulate_topology(&trace, &HomogeneousRouter, &[4], &[h100_cfg(65_536)]);
+    assert_eq!(new.output_tokens, old.output_tokens);
+    assert_eq!(
+        new.joules.to_bits(),
+        old.joules.to_bits(),
+        "joules must replay bit-for-bit: {} vs {}",
+        new.joules,
+        old.joules
+    );
+    let done: u64 = new.pools.iter().map(|p| p.metrics.completed).sum();
+    let done_old: u64 = old.pools.iter().map(|p| p.metrics.completed).sum();
+    assert_eq!(done, done_old);
+}
+
+#[test]
+fn event_engine_replays_legacy_bit_for_bit_two_pool() {
+    let trace = seeded_azure_trace();
+    let router = ContextRouter::two_pool(4096);
+    let groups = [2u32, 2];
+    let cfgs = [h100_cfg(4096 + 1024), h100_cfg(65_536)];
+    let old = legacy::simulate_topology(&trace, &router, &groups, &cfgs);
+    let new = simulate_topology(&trace, &router, &groups, &cfgs);
+    assert_eq!(new.output_tokens, old.output_tokens);
+    assert_eq!(new.joules.to_bits(), old.joules.to_bits());
+    for (np, op) in new.pools.iter().zip(&old.pools) {
+        assert_eq!(np.output_tokens, op.output_tokens, "{}", np.name);
+        assert_eq!(np.joules.to_bits(), op.joules.to_bits(), "{}", np.name);
+        assert_eq!(np.metrics.completed, op.metrics.completed, "{}", np.name);
+        assert_eq!(np.metrics.rejected, op.metrics.rejected, "{}", np.name);
+    }
+}
+
+#[test]
+fn parallel_fast_path_matches_sequential_engine_bit_for_bit() {
+    let trace = seeded_azure_trace();
+    let router = ContextRouter::two_pool(4096);
+    let groups = [2u32, 2];
+    let cfgs = [h100_cfg(4096 + 1024), h100_cfg(65_536)];
+    let mut rr_seq = RoundRobin::new();
+    let seq =
+        simulate_topology_with(&trace, &router, &groups, &cfgs, &mut rr_seq, false);
+    let mut rr_par = RoundRobin::new();
+    let par =
+        simulate_topology_with(&trace, &router, &groups, &cfgs, &mut rr_par, true);
+    assert_eq!(seq.output_tokens, par.output_tokens);
+    assert_eq!(seq.joules.to_bits(), par.joules.to_bits());
+    assert_eq!(seq.steps, par.steps);
+    for (s, p) in seq.pools.iter().zip(&par.pools) {
+        assert_eq!(s.joules.to_bits(), p.joules.to_bits());
+        assert_eq!(s.horizon_s.to_bits(), p.horizon_s.to_bits());
+        assert_eq!(s.mean_batch.to_bits(), p.mean_batch.to_bits());
+    }
+}
+
+/// A bursty, size-skewed two-pool trace where round-robin's parity
+/// assignment is pathological: short-pool requests arrive in
+/// (tiny, huge) pairs, so round-robin pins every huge-output request to
+/// the same group — one group saturates with backlog while its sibling
+/// trickles at batch ≈ 1, burning near-idle watts per token. JSQ sees
+/// the skew in the queue depths and rebalances, so both groups run hot.
+fn bursty_two_pool_trace() -> Vec<Request> {
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for i in 0..240u64 {
+        let t = i as f64 * 0.25;
+        reqs.push(Request {
+            id: { id += 1; id },
+            arrival_s: t,
+            prompt_tokens: 64,
+            output_tokens: 30, // tiny
+        });
+        reqs.push(Request {
+            id: { id += 1; id },
+            arrival_s: t + 0.001,
+            prompt_tokens: 64,
+            output_tokens: 500, // huge
+        });
+    }
+    // A thin long-context stream keeps the second pool genuinely active.
+    for i in 0..20u64 {
+        reqs.push(Request {
+            id: { id += 1; id },
+            arrival_s: i as f64 * 3.0,
+            prompt_tokens: 20_000,
+            output_tokens: 100,
+        });
+    }
+    reqs
+}
+
+#[test]
+fn jsq_strictly_beats_round_robin_on_bursty_two_pool_trace() {
+    let trace = bursty_two_pool_trace();
+    let router = ContextRouter::two_pool(4096);
+    let groups = [2u32, 2];
+    // Small n_max on the short pool so saturation and queueing are real.
+    let mut short = h100_cfg(4096 + 1024);
+    short.n_max = 8;
+    let cfgs = [short, h100_cfg(65_536)];
+
+    let mut rr = RoundRobin::new();
+    let rr_report =
+        simulate_topology_with(&trace, &router, &groups, &cfgs, &mut rr, true);
+    let mut jsq = JoinShortestQueue;
+    let jsq_report =
+        simulate_topology_with(&trace, &router, &groups, &cfgs, &mut jsq, true);
+
+    // Same work either way…
+    assert_eq!(rr_report.output_tokens, jsq_report.output_tokens);
+    // …but strictly better energy efficiency under load-aware dispatch.
+    assert!(
+        jsq_report.tok_per_watt > rr_report.tok_per_watt * 1.02,
+        "JSQ must strictly improve tok/W: jsq = {:.4}, rr = {:.4}",
+        jsq_report.tok_per_watt,
+        rr_report.tok_per_watt
+    );
+}

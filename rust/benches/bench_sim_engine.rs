@@ -1,30 +1,39 @@
 //! Bench: events/sec of the event-driven simulation core on a 16-group,
 //! 10k-request Azure trace — sequential shared-heap vs the parallel
-//! per-group fast path, plus the stateful-dispatch overhead (JSQ snapshots
-//! the fleet at every arrival).
+//! per-group fast path, plus the incremental-state refactor's
+//! before/after: JSQ dispatch with the legacy rebuild-a-snapshot-per-
+//! arrival mode (`StateMode::RebuildPerArrival`, O(total groups)
+//! allocations per arrival) against the in-place live state
+//! (`StateMode::Incremental`, zero allocations per decision).
 //!
 //! An "event" here is one engine iteration (step-complete) of one group;
-//! arrivals and wakes add a few percent on top. Record the headline
-//! events/sec numbers in CHANGES.md when they move.
-use wattlaw::benchkit::{black_box, BenchConfig, BenchGroup};
+//! arrivals and wakes add a few percent on top.
+//!
+//! Run `cargo bench --bench bench_sim_engine -- --record` to write the
+//! headline numbers to `BENCH_sim_engine.json` at the repo root
+//! (`--quick` shrinks the sample count for smoke runs).
+use wattlaw::benchkit::{black_box, BenchConfig, BenchGroup, BenchStats};
 use wattlaw::fleet::profile::{GpuProfile, ManualProfile};
 use wattlaw::router::context::ContextRouter;
 use wattlaw::sim::dispatch::{JoinShortestQueue, RoundRobin};
-use wattlaw::sim::{simulate_topology_with, GroupSimConfig};
+use wattlaw::sim::{
+    simulate_topology_opts, EngineOptions, GroupSimConfig, StateMode,
+};
 use wattlaw::workload::synth::{generate, GenConfig};
+
+const JSON_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_engine.json");
 
 fn main() {
     // ~10k requests: λ=2000 × 5 s.
-    let trace = generate(
-        &wattlaw::workload::cdf::azure_conversations(),
-        &GenConfig {
-            lambda_rps: 2000.0,
-            duration_s: 5.0,
-            max_prompt_tokens: 30_000,
-            max_output_tokens: 256,
-            seed: 3,
-        },
-    );
+    let gen = GenConfig {
+        lambda_rps: 2000.0,
+        duration_s: 5.0,
+        max_prompt_tokens: 30_000,
+        max_output_tokens: 256,
+        seed: 3,
+    };
+    let trace = generate(&wattlaw::workload::cdf::azure_conversations(), &gen);
     println!("trace: {} requests", trace.len());
 
     let p = ManualProfile::h100_70b();
@@ -44,6 +53,7 @@ fn main() {
     // plenty (each run is hundreds of ms), and --quick still shrinks it.
     let quick = std::env::args().any(|a| a == "--quick")
         || std::env::var("WATTLAW_BENCH_QUICK").is_ok();
+    let record = std::env::args().any(|a| a == "--record");
     let cfg = if quick {
         BenchConfig { warmup_iters: 1, samples: 3, batch: 1 }
     } else {
@@ -54,11 +64,21 @@ fn main() {
     )
     .with_config(cfg);
 
+    let opts = |allow_parallel: bool, mode: StateMode| EngineOptions {
+        allow_parallel,
+        state_mode: mode,
+        validate_state: false,
+    };
     let mut steps_seq = 0u64;
     g.bench("event_core_sequential_rr", || {
         let mut rr = RoundRobin::new();
-        let r = simulate_topology_with(
-            &trace, &router, &pool_groups, &cfgs, &mut rr, false,
+        let r = simulate_topology_opts(
+            &trace,
+            &router,
+            &pool_groups,
+            &cfgs,
+            &mut rr,
+            opts(false, StateMode::Incremental),
         );
         steps_seq = r.steps;
         black_box(r.output_tokens)
@@ -66,38 +86,127 @@ fn main() {
     let mut steps_par = 0u64;
     g.bench("event_core_parallel_rr", || {
         let mut rr = RoundRobin::new();
-        let r = simulate_topology_with(
-            &trace, &router, &pool_groups, &cfgs, &mut rr, true,
+        let r = simulate_topology_opts(
+            &trace,
+            &router,
+            &pool_groups,
+            &cfgs,
+            &mut rr,
+            opts(true, StateMode::Incremental),
         );
         steps_par = r.steps;
         black_box(r.output_tokens)
     });
-    let mut steps_jsq = 0u64;
-    g.bench("event_core_sequential_jsq", || {
+    // Before: the pre-refactor engine rebuilt a full FleetState per
+    // arrival for stateful dispatch.
+    let mut steps_jsq_rebuild = 0u64;
+    g.bench("event_core_jsq_rebuild_per_arrival(before)", || {
         let mut jsq = JoinShortestQueue;
-        let r = simulate_topology_with(
-            &trace, &router, &pool_groups, &cfgs, &mut jsq, true,
+        let r = simulate_topology_opts(
+            &trace,
+            &router,
+            &pool_groups,
+            &cfgs,
+            &mut jsq,
+            opts(true, StateMode::RebuildPerArrival),
         );
-        steps_jsq = r.steps;
+        steps_jsq_rebuild = r.steps;
+        black_box(r.output_tokens)
+    });
+    // After: one live state, refreshed in place per event.
+    let mut steps_jsq_incr = 0u64;
+    g.bench("event_core_jsq_incremental(after)", || {
+        let mut jsq = JoinShortestQueue;
+        let r = simulate_topology_opts(
+            &trace,
+            &router,
+            &pool_groups,
+            &cfgs,
+            &mut jsq,
+            opts(true, StateMode::Incremental),
+        );
+        steps_jsq_incr = r.steps;
         black_box(r.output_tokens)
     });
 
     let stats = g.finish();
     assert_eq!(steps_seq, steps_par, "parallel fast path must replay exactly");
+    assert_eq!(
+        steps_jsq_rebuild, steps_jsq_incr,
+        "incremental state must replay the rebuild oracle exactly"
+    );
+    let ev_per_s = |steps: u64, s: &BenchStats| steps as f64 / (s.mean_ns / 1e9);
     println!();
-    for (name, steps, s) in [
+    let rows = [
         ("sequential rr", steps_seq, &stats[0]),
         ("parallel rr", steps_par, &stats[1]),
-        ("sequential jsq", steps_jsq, &stats[2]),
-    ] {
-        let ev_per_s = steps as f64 / (s.mean_ns / 1e9);
+        ("jsq rebuild (before)", steps_jsq_rebuild, &stats[2]),
+        ("jsq incremental (after)", steps_jsq_incr, &stats[3]),
+    ];
+    for (name, steps, s) in rows {
         println!(
-            "{name:<16} {steps} step events, {:.0} events/sec (mean)",
-            ev_per_s
+            "{name:<24} {steps} step events, {:.0} events/sec (mean)",
+            ev_per_s(steps, s)
         );
     }
     println!(
         "parallel speedup over sequential (rr): {:.2}x",
         stats[0].mean_ns / stats[1].mean_ns
     );
+    let incr_speedup = stats[2].mean_ns / stats[3].mean_ns;
+    println!(
+        "incremental-state speedup over per-arrival snapshots (jsq): {:.2}x",
+        incr_speedup
+    );
+
+    if record {
+        let mut j = String::new();
+        j.push_str("{\n");
+        j.push_str("  \"bench\": \"bench_sim_engine\",\n");
+        j.push_str(&format!(
+            "  \"unit\": \"step events per second (mean over {} samples)\",\n",
+            cfg.samples
+        ));
+        j.push_str(&format!(
+            "  \"trace\": {{ \"requests\": {}, \"lambda_rps\": {}, \
+             \"duration_s\": {} }},\n",
+            trace.len(),
+            gen.lambda_rps,
+            gen.duration_s
+        ));
+        j.push_str(
+            "  \"fleet\": { \"groups\": 16, \"topology\": \
+             \"two-pool 4K/64K\", \"gpu\": \"H100\" },\n",
+        );
+        j.push_str("  \"results\": [\n");
+        for (i, (name, steps, s)) in rows.iter().enumerate() {
+            j.push_str(&format!(
+                "    {{ \"name\": \"{name}\", \"steps\": {steps}, \
+                 \"events_per_sec\": {:.0}, \"mean_ms\": {:.2} }}{}\n",
+                ev_per_s(*steps, s),
+                s.mean_ns / 1e6,
+                if i + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        j.push_str("  ],\n");
+        j.push_str(&format!(
+            "  \"incremental_state\": {{\n    \
+             \"before_events_per_sec\": {:.0},\n    \
+             \"after_events_per_sec\": {:.0},\n    \"speedup\": {:.3},\n    \
+             \"note\": \"before = StateMode::RebuildPerArrival (full \
+             FleetState snapshot per arrival, the pre-refactor engine); \
+             after = StateMode::Incremental (in-place live state)\"\n  }},\n",
+            ev_per_s(steps_jsq_rebuild, &stats[2]),
+            ev_per_s(steps_jsq_incr, &stats[3]),
+            incr_speedup
+        ));
+        j.push_str(
+            "  \"recorded_by\": \"cargo bench --bench bench_sim_engine -- \
+             --record\"\n}\n",
+        );
+        std::fs::write(JSON_PATH, &j).expect("write BENCH_sim_engine.json");
+        println!("recorded to {JSON_PATH}");
+    } else {
+        println!("(pass --record to update BENCH_sim_engine.json)");
+    }
 }

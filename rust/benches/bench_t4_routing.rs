@@ -1,13 +1,18 @@
 //! Bench T4: regenerate Table 4 (context vs semantic routing) and time
 //! the router hot path (the per-request O(1) decision), including the
-//! load-aware live path (adaptive router reading a fleet snapshot).
+//! load-aware live path (adaptive router reading the engine's live
+//! fleet state) and the dispatch pick_group scan over a wide pool.
 use wattlaw::benchkit::{black_box, BenchGroup};
 use wattlaw::router::adaptive::AdaptiveRouter;
 use wattlaw::router::context::ContextRouter;
 use wattlaw::router::fleetopt::FleetOptRouter;
 use wattlaw::router::semantic::SemanticRouter;
 use wattlaw::router::Router;
-use wattlaw::sim::{FleetState, GroupLoad, PoolLoad};
+use wattlaw::serve::request::ServeRequest;
+use wattlaw::sim::dispatch::DispatchPolicy;
+use wattlaw::sim::{
+    FleetState, GroupLoad, JoinShortestQueue, PoolLoad, PowerAware,
+};
 use wattlaw::tables::t4;
 use wattlaw::workload::Request;
 
@@ -65,6 +70,38 @@ fn main() {
             reqs.iter()
                 .map(|r| adaptive.route_live(r, &state).pool)
                 .sum::<usize>(),
+        )
+    });
+
+    // Dispatch hot path: one pick_group is an O(groups) scan of the live
+    // state (the engine pays it once per arrival; since the
+    // incremental-state refactor it pays *only* this — no snapshot).
+    let wide = FleetState {
+        pools: vec![PoolLoad {
+            window_tokens: 5120,
+            n_max: 128,
+            groups: (0..64)
+                .map(|g| GroupLoad {
+                    queued: (g * 7) % 13,
+                    active: (g * 11) % 97,
+                    free_blocks: 4096 - (g as u32 * 53) % 4096,
+                    used_blocks: (g as u32 * 53) % 4096,
+                })
+                .collect(),
+        }],
+    };
+    let sreq =
+        ServeRequest { id: 0, prompt_tokens: 512, output_tokens: 64, arrival_s: 0.0 };
+    g.bench("dispatch_jsq_pick_1k_over_64_groups", || {
+        let mut jsq = JoinShortestQueue;
+        black_box(
+            (0..1024).map(|_| jsq.pick_group(0, 64, &sreq, &wide)).sum::<usize>(),
+        )
+    });
+    g.bench("dispatch_power_pick_1k_over_64_groups", || {
+        let mut pa = PowerAware;
+        black_box(
+            (0..1024).map(|_| pa.pick_group(0, 64, &sreq, &wide)).sum::<usize>(),
         )
     });
     g.finish();

@@ -10,7 +10,10 @@
 //! wattlaw power [--gpu b200]                        P(b) curve
 //! wattlaw simulate [--trace azure] [--lambda R] [--duration S] [--groups N]
 //!                  [--dispatch rr|jsq|least-kv|power]
-//!                  [--router context|adaptive|fleetopt]
+//!                  [--router context|adaptive|fleetopt] [--spill F]
+//! wattlaw simulate sweep [--lambda 1000] [--duration S] [--groups N]
+//!                  [--dispatch NAME] [--b-short N] [--spill F]
+//!                  [--slo-ttft S] [--workers N]   scenario grid, threaded
 //! wattlaw serve [--requests N] [--b-short N] [--artifacts DIR]
 //! wattlaw validate [--artifacts DIR]                golden numerics check
 //! wattlaw report                                    paper-vs-measured summary
@@ -30,19 +33,23 @@ use crate::workload::cdf::{
     agent_heavy, azure_conversations, lmsys_chat, WorkloadTrace,
 };
 
-/// Parsed command line: positional command plus `--key value` / `--flag`
+/// Parsed command line: positional command (plus optional positional
+/// subcommand, e.g. `simulate sweep`) and `--key value` / `--flag`
 /// options.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
+    /// First bare (non `--`) token after the command.
+    pub subcommand: Option<String>,
     pub flags: Vec<String>,
     pub options: HashMap<String, String>,
 }
 
 /// Keys that are value-taking options; everything else with `--` is a flag.
-const VALUE_KEYS: [&str; 14] = [
+const VALUE_KEYS: [&str; 17] = [
     "lbar", "trace", "gpu", "topo", "b-short", "gamma", "lambda", "acct",
     "requests", "artifacts", "duration", "groups", "dispatch", "router",
+    "spill", "slo-ttft", "workers",
 ];
 
 pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Args {
@@ -58,6 +65,8 @@ pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Args {
             } else {
                 a.flags.push(key.to_string());
             }
+        } else if a.subcommand.is_none() {
+            a.subcommand = Some(arg);
         }
     }
     a
@@ -150,7 +159,12 @@ commands:
   sweep      FleetOpt (B_short, γ*) optimization sweep
   power      print a GPU's P(b) curve (--gpu)
   simulate   event-driven fleet simulation vs analytics
-             (--dispatch rr|jsq|least-kv|power, --router context|adaptive|fleetopt)
+             (--dispatch rr|jsq|least-kv|power,
+              --router context|adaptive|fleetopt, --spill F)
+  simulate sweep
+             dispatch x topology x context-window scenario grid at fleet
+             scale (default λ=1000), cells across worker threads; every
+             cell reports tok/W + p99 TTFT + SLO verdict
   serve      serve a trace through the real AOT model (2-pool demo)
   validate   check runtime numerics against the JAX golden trace
   report     paper-vs-measured summary (EXPERIMENTS.md §input)
@@ -296,6 +310,14 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
     use crate::sim::{dispatch, simulate_topology_with, RoundRobin};
     use crate::workload::synth::{generate, GenConfig};
 
+    match args.subcommand.as_deref() {
+        Some("sweep") => return cmd_simulate_sweep(args),
+        Some(other) => {
+            anyhow::bail!("unknown simulate subcommand '{other}' (sweep)")
+        }
+        None => {}
+    }
+
     let trace = args.trace();
     let lambda = args.opt_f64("lambda", 60.0);
     let duration = args.opt_f64("duration", 5.0);
@@ -310,9 +332,13 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
             "unknown dispatch policy '{dispatch_name}' (rr|jsq|least-kv|power)"
         )
     })?;
+    let spill = args.opt_f64("spill", 2.0);
+    anyhow::ensure!(spill > 0.0, "--spill must be positive (got {spill})");
     let router: Box<dyn Router> = match args.opt("router") {
         None | Some("context") => Box::new(ContextRouter::two_pool(b_short)),
-        Some("adaptive") => Box::new(AdaptiveRouter::new(b_short)),
+        Some("adaptive") => {
+            Box::new(AdaptiveRouter::new(b_short).with_spill_factor(spill))
+        }
         Some("fleetopt") => Box::new(FleetOptRouter::new(b_short, gamma)),
         Some(other) => {
             anyhow::bail!("unknown router '{other}' (context|adaptive|fleetopt)")
@@ -391,6 +417,70 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
         "topology gain (simulated): {:.2}x",
         routed.tok_per_watt / homo.tok_per_watt
     );
+    Ok(0)
+}
+
+/// `simulate sweep` — a dispatch × topology × context-window scenario
+/// grid at fleet scale (λ defaults to the paper's 1000 req/s), every
+/// cell built from one [`ScenarioSpec`](crate::scenario::ScenarioSpec)
+/// and run across worker threads.
+fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
+    use crate::scenario::sweep::{self, SweepConfig};
+    use crate::scenario::SloTargets;
+    use crate::sim::dispatch;
+    use crate::workload::synth::GenConfig;
+
+    let trace = args.trace();
+    let defaults = SweepConfig::default();
+
+    let dispatches = match args.opt("dispatch") {
+        Some(d) => {
+            anyhow::ensure!(
+                dispatch::parse(d).is_some(),
+                "unknown dispatch policy '{d}' (rr|jsq|least-kv|power)"
+            );
+            vec![d.to_string()]
+        }
+        None => defaults.dispatches,
+    };
+    let b_shorts = match args.opt("b-short") {
+        Some(b) => vec![b
+            .parse::<u32>()
+            .map_err(|_| anyhow::anyhow!("bad --b-short '{b}'"))?],
+        None => defaults.b_shorts,
+    };
+    let spill = args.opt_f64("spill", 2.0);
+    anyhow::ensure!(spill > 0.0, "--spill must be positive (got {spill})");
+
+    let cfg = SweepConfig {
+        gpu: args.gpu(),
+        gen: GenConfig {
+            lambda_rps: args.opt_f64("lambda", 1000.0),
+            duration_s: args.opt_f64("duration", 1.0),
+            seed: 42,
+            ..defaults.gen
+        },
+        groups: args.opt_u32("groups", 8).max(2),
+        dispatches,
+        b_shorts,
+        spill: Some(spill),
+        slo: SloTargets { ttft_p99_s: args.opt_f64("slo-ttft", 0.5) },
+    };
+
+    let specs = sweep::grid(&trace, &cfg);
+    let default_workers = std::thread::available_parallelism()
+        .map(|n| n.get() as u32)
+        .unwrap_or(1);
+    let workers = args.opt_u32("workers", default_workers).max(1) as usize;
+    eprintln!(
+        "sweep: {} cells ({} topologies x {} dispatch) on {} worker threads…",
+        specs.len(),
+        specs.len() / cfg.dispatches.len().max(1),
+        cfg.dispatches.len(),
+        workers.min(specs.len().max(1)),
+    );
+    let outcomes = sweep::run(&specs, workers);
+    println!("{}", sweep::render(&outcomes, &cfg));
     Ok(0)
 }
 
@@ -514,7 +604,45 @@ mod tests {
         };
         assert_eq!(quick("--dispatch jsq --router adaptive").unwrap(), 0);
         assert_eq!(quick("--dispatch power --router fleetopt").unwrap(), 0);
+        assert_eq!(quick("--router adaptive --spill 3.5").unwrap(), 0);
         assert!(quick("--dispatch bogus").is_err());
         assert!(quick("--router bogus").is_err());
+        assert!(quick("--router adaptive --spill -1").is_err());
+    }
+
+    #[test]
+    fn subcommand_parsed_separately_from_options() {
+        let a = args("simulate sweep --lambda 1000 --b-short 4096");
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert_eq!(a.opt("lambda"), Some("1000"));
+        // Option values are not mistaken for subcommands.
+        let b = args("simulate --dispatch jsq");
+        assert_eq!(b.subcommand, None);
+    }
+
+    #[test]
+    fn simulate_sweep_runs_a_grid_at_fleet_scale() {
+        // λ=1000 end-to-end, shrunk along every other axis so the grid
+        // (homo + pool + fleetopt + adaptive-pool, one dispatch) stays
+        // test-sized.
+        let code = run(
+            "simulate sweep --lambda 1000 --duration 0.2 --groups 2 \
+             --dispatch jsq --b-short 4096 --workers 2"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
+        assert!(run(
+            "simulate bogus-sub".split_whitespace().map(String::from)
+        )
+        .is_err());
+        assert!(run(
+            "simulate sweep --dispatch bogus"
+                .split_whitespace()
+                .map(String::from)
+        )
+        .is_err());
     }
 }

@@ -34,6 +34,20 @@ pub enum Topology {
 }
 
 impl Topology {
+    /// The routing split boundary, when this topology has one (the
+    /// homogeneous baseline routes nothing). Scenario specs use this to
+    /// swap the canonical static router for the load-aware
+    /// [`AdaptiveRouter`](crate::router::adaptive::AdaptiveRouter) at
+    /// the same split.
+    pub fn b_short(&self) -> Option<u32> {
+        match *self {
+            Topology::Homogeneous { .. } => None,
+            Topology::PoolRouting { b_short, .. }
+            | Topology::FleetOpt { b_short, .. }
+            | Topology::Semantic { b_short, .. } => Some(b_short),
+        }
+    }
+
     pub fn label(&self) -> String {
         match self {
             Topology::Homogeneous { ctx } => format!("Homo {}K", ctx / 1024),
@@ -333,6 +347,20 @@ mod tests {
         let r = fo.router();
         assert_eq!(r.num_pools(), 2);
         assert!(r.name().contains("fleetopt"));
+    }
+
+    #[test]
+    fn b_short_accessor_matches_variant() {
+        assert_eq!(Topology::Homogeneous { ctx: LONG_CTX }.b_short(), None);
+        assert_eq!(
+            Topology::PoolRouting { b_short: 4096, short_ctx: 4096 }.b_short(),
+            Some(4096)
+        );
+        assert_eq!(
+            Topology::FleetOpt { b_short: 2048, short_ctx: 2048, gamma: 2.0 }
+                .b_short(),
+            Some(2048)
+        );
     }
 
     #[test]

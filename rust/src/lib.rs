@@ -12,7 +12,10 @@
 //!   — one binary-heap event queue and one virtual clock driving all
 //!   groups of all pools concurrently, with pluggable group-dispatch
 //!   policies (round-robin / join-shortest-queue / least-KV-load /
-//!   power-aware) and a parallel per-group fast path ([`sim`]) — and
+//!   power-aware) and a parallel per-group fast path ([`sim`]) — a
+//!   unified scenario layer feeding both the analytical planner and the
+//!   simulator from one spec, with multi-threaded
+//!   dispatch × topology × context-window sweeps ([`scenario`]) — and
 //!   per-GPU energy metering driven by the calibrated logistic power
 //!   model ([`power`]).
 //! * **L2/L1 (build-time Python)** — a tiny Llama-style decoder whose
@@ -41,6 +44,7 @@ pub mod report;
 pub mod roofline;
 pub mod router;
 pub mod runtime;
+pub mod scenario;
 pub mod serve;
 pub mod sim;
 pub mod tables;

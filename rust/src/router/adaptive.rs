@@ -32,6 +32,9 @@ pub struct AdaptiveRouter {
     /// Spill a short request when
     /// `short queued/group > spill_factor × (long queued/group + 1)`.
     /// The `+ 1` keeps an idle long pool from attracting all traffic.
+    /// Tunable from the CLI (`--spill`, on both `simulate` and
+    /// `simulate sweep`) and from a scenario spec
+    /// (`RouterSpec::Adaptive { spill }`).
     pub spill_factor: f64,
 }
 

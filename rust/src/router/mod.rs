@@ -9,12 +9,15 @@
 //!   function of the request (prompt length, shape). All of the paper's
 //!   topologies are static.
 //! * **Load-aware** ([`route_live`](Router::route_live)) — the decision
-//!   may additionally read a live [`FleetState`] snapshot of per-pool
-//!   queue depth, in-flight batch and free KV blocks, as produced by the
-//!   event-driven simulator (and, in a real deployment, by the serving
-//!   leader). [`adaptive::AdaptiveRouter`] is the reference
-//!   implementation: context routing that spills short-pool overflow to
-//!   the long pool under congestion.
+//!   may additionally read the live [`FleetState`] of per-pool queue
+//!   depth, in-flight batch and free KV blocks. The event-driven
+//!   simulator maintains that state *incrementally* (one in-place group
+//!   update per event) and hands every arrival a borrow of it — reading
+//!   fleet load costs nothing, regardless of fleet size (and, in a real
+//!   deployment, the serving leader would publish the same view).
+//!   [`adaptive::AdaptiveRouter`] is the reference implementation:
+//!   context routing that spills short-pool overflow to the long pool
+//!   under congestion, with a CLI-tunable spill factor (`--spill`).
 
 pub mod adaptive;
 pub mod context;
@@ -45,15 +48,20 @@ pub trait Router: Send + Sync {
     fn name(&self) -> String;
 
     /// True when [`route_live`](Router::route_live) actually reads the
-    /// fleet snapshot. Load-aware routers cannot be pre-routed, so the
-    /// simulator keeps them on the sequential shared-clock engine.
+    /// fleet state. Load-aware routers cannot be pre-routed, so the
+    /// simulator keeps them on the sequential shared-clock engine and
+    /// maintains the live state for them; a router returning `false`
+    /// here promises `route_live ≡ route` (the default impl), which lets
+    /// the engine skip state maintenance entirely.
     fn is_load_aware(&self) -> bool {
         false
     }
 
-    /// Route with a live fleet snapshot. Default: ignore the state and
-    /// fall back to the static decision, so every existing router is
-    /// usable in the event-driven simulator unchanged.
+    /// Route with the live fleet state. The engine calls this for every
+    /// arrival; `state` is current whenever
+    /// [`is_load_aware`](Router::is_load_aware) returns true. Default:
+    /// ignore the state and fall back to the static decision, so every
+    /// existing router is usable in the event-driven simulator unchanged.
     fn route_live(&self, req: &Request, _state: &FleetState) -> Route {
         self.route(req)
     }

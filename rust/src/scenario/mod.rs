@@ -1,0 +1,365 @@
+//! The scenario layer: one spec, two engines.
+//!
+//! Every headline claim of the paper — the 1/W law, FleetOpt's ~2.5×,
+//! FleetOpt×B200's 4.25× — is a comparison between *scenarios*: (fleet
+//! topology × workload × routing/dispatch policy) tuples. Before this
+//! module the analytical path (`tokeconomy`/`fleet`/`tables`) and the
+//! event-driven simulator were configured through disjoint ad-hoc
+//! structs; a [`ScenarioSpec`] now names the whole tuple once and both
+//! consumers read it:
+//!
+//! * [`ScenarioSpec::analyze`] — the closed-form planner:
+//!   pools sized to λ under the TTFT SLO, Eq. (4) fleet tok/W.
+//! * [`ScenarioSpec::simulate`] — the trace played through the
+//!   event-driven core ([`crate::sim`]): continuous batching, paged-KV
+//!   admission, live-state routing/dispatch, measured per-request TTFT.
+//!
+//! Because both read the same spec, an analytical number and a simulated
+//! number are comparable by construction — the WattGPU/FleetOpt method
+//! of earning trust in an analytical model by sweeping configuration
+//! grids cheaply and spot-checking dynamically. [`sweep`] runs such
+//! grids (dispatch × topology × context window) across worker threads;
+//! `wattlaw simulate sweep` is the CLI entry.
+
+pub mod sweep;
+
+use std::sync::Arc;
+
+use crate::fleet::analysis::{fleet_tpw_analysis, FleetReport};
+use crate::fleet::pool::LBarPolicy;
+use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use crate::fleet::topology::Topology;
+use crate::power::Gpu;
+use crate::router::adaptive::AdaptiveRouter;
+use crate::router::Router;
+use crate::sim::{dispatch, simulate_topology_opts, EngineOptions};
+use crate::workload::cdf::WorkloadTrace;
+use crate::workload::synth::{generate, GenConfig};
+use crate::workload::Request;
+
+/// Which router realizes the topology at serving time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouterSpec {
+    /// The topology's canonical static router
+    /// ([`Topology::router`](crate::fleet::topology::Topology::router)).
+    Static,
+    /// The load-aware [`AdaptiveRouter`] at the topology's split
+    /// boundary: short-pool overflow spills to the long pool when the
+    /// short queue exceeds `spill` × (long queue + 1) per group.
+    /// Requires a two-pool topology.
+    Adaptive { spill: f64 },
+}
+
+/// Service-level objectives a scenario is judged against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTargets {
+    /// p99 time-to-first-token bound, seconds (the paper's sizing SLO).
+    pub ttft_p99_s: f64,
+}
+
+impl Default for SloTargets {
+    fn default() -> Self {
+        SloTargets { ttft_p99_s: 0.5 }
+    }
+}
+
+/// One (fleet topology × GPU generation × workload × routing/dispatch ×
+/// SLO) cell — everything needed to produce a comparable tok/W number
+/// from either engine.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub topology: Topology,
+    pub gpu: Gpu,
+    pub workload: WorkloadTrace,
+    /// Traffic: λ, duration, caps, seed ([`generate`] turns this into
+    /// the simulated trace; the analytical path reads `lambda_rps`).
+    pub gen: GenConfig,
+    /// Total simulated TP groups, split across pools by
+    /// [`Topology::sim_pools`].
+    pub groups: u32,
+    /// Dispatch policy name ([`dispatch::parse`]).
+    pub dispatch: String,
+    pub router: RouterSpec,
+    pub slo: SloTargets,
+    /// Chunked-prefill size, prompt tokens per slot per step.
+    pub ingest_chunk: u32,
+}
+
+impl ScenarioSpec {
+    /// A spec with the crate's serving defaults: 8 groups, round-robin
+    /// dispatch, the topology's canonical router, 0.5 s p99-TTFT SLO,
+    /// 1024-token prefill chunks.
+    pub fn new(
+        topology: Topology,
+        gpu: Gpu,
+        workload: WorkloadTrace,
+        gen: GenConfig,
+    ) -> Self {
+        ScenarioSpec {
+            topology,
+            gpu,
+            workload,
+            gen,
+            groups: 8,
+            dispatch: "rr".into(),
+            router: RouterSpec::Static,
+            slo: SloTargets::default(),
+            ingest_chunk: 1024,
+        }
+    }
+
+    pub fn with_groups(mut self, groups: u32) -> Self {
+        assert!(groups > 0);
+        self.groups = groups;
+        self
+    }
+
+    pub fn with_dispatch(mut self, name: &str) -> Self {
+        assert!(
+            dispatch::parse(name).is_some(),
+            "unknown dispatch policy '{name}'"
+        );
+        self.dispatch = name.into();
+        self
+    }
+
+    pub fn with_router(mut self, router: RouterSpec) -> Self {
+        self.router = router;
+        self
+    }
+
+    pub fn with_slo(mut self, slo: SloTargets) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    /// Human-readable cell identity for reports.
+    pub fn label(&self) -> String {
+        format!(
+            "{} | {} | {} | {} | {} | λ={}",
+            self.workload.name,
+            self.topology.label(),
+            self.gpu.spec().name,
+            self.router_label(),
+            self.dispatch,
+            self.gen.lambda_rps,
+        )
+    }
+
+    fn router_label(&self) -> String {
+        match self.router {
+            RouterSpec::Static => "static".into(),
+            RouterSpec::Adaptive { spill } => format!("adaptive({spill})"),
+        }
+    }
+
+    /// The GPU profile serving every pool of this scenario.
+    pub fn profile(&self) -> ManualProfile {
+        ManualProfile::for_gpu(self.gpu)
+    }
+
+    /// The request router realizing this scenario.
+    ///
+    /// # Panics
+    /// `RouterSpec::Adaptive` on a topology without a split boundary.
+    pub fn router(&self) -> Box<dyn Router> {
+        match self.router {
+            RouterSpec::Static => self.topology.router(),
+            RouterSpec::Adaptive { spill } => {
+                let b = self.topology.b_short().expect(
+                    "adaptive routing needs a two-pool topology \
+                     (no split boundary on this one)",
+                );
+                Box::new(AdaptiveRouter::new(b).with_spill_factor(spill))
+            }
+        }
+    }
+
+    /// The synthetic trace this scenario plays (deterministic in
+    /// `gen.seed`).
+    pub fn trace(&self) -> Vec<Request> {
+        generate(&self.workload, &self.gen)
+    }
+
+    /// The closed-form side: pools sized to `gen.lambda_rps` under the
+    /// TTFT SLO, Eq. (4) fleet tok/W. Same spec, no trace.
+    pub fn analyze(&self, acct: PowerAccounting) -> FleetReport {
+        let profile: Arc<dyn GpuProfile> = Arc::new(self.profile());
+        let pools = self.topology.pools(
+            &self.workload,
+            self.gen.lambda_rps,
+            profile,
+            None,
+            LBarPolicy::Window,
+            0.85,
+            self.slo.ttft_p99_s,
+        );
+        fleet_tpw_analysis(&pools, acct)
+    }
+
+    /// The dynamic side: generate the trace and play it through the
+    /// event-driven engine.
+    pub fn simulate(&self, allow_parallel: bool) -> ScenarioOutcome {
+        self.simulate_trace(&self.trace(), allow_parallel)
+    }
+
+    /// Play an explicit trace through this scenario's fleet (for
+    /// hand-crafted traces — e.g. the bursty dispatch-comparison figure;
+    /// `gen` then only documents the intended traffic).
+    pub fn simulate_trace(
+        &self,
+        trace: &[Request],
+        allow_parallel: bool,
+    ) -> ScenarioOutcome {
+        let profile = self.profile();
+        let (pool_groups, pool_cfgs) =
+            self.topology.sim_pools(&profile, self.groups, self.ingest_chunk);
+        let router = self.router();
+        let mut policy = dispatch::parse(&self.dispatch).unwrap_or_else(|| {
+            panic!("unknown dispatch policy '{}'", self.dispatch)
+        });
+        let report = simulate_topology_opts(
+            trace,
+            router.as_ref(),
+            &pool_groups,
+            &pool_cfgs,
+            policy.as_mut(),
+            EngineOptions { allow_parallel, ..Default::default() },
+        );
+        let mut m = report.fleet_metrics();
+        let p99_ttft_s = m.ttft_s.p99();
+        ScenarioOutcome {
+            label: self.label(),
+            topology: self.topology.label(),
+            router: self.router_label(),
+            dispatch: self.dispatch.clone(),
+            tok_per_watt: report.tok_per_watt,
+            output_tokens: report.output_tokens,
+            joules: report.joules,
+            steps: report.steps,
+            completed: m.completed,
+            rejected: m.rejected,
+            p99_ttft_s,
+            slo_ok: p99_ttft_s <= self.slo.ttft_p99_s,
+        }
+    }
+}
+
+/// What one simulated scenario cell reports: energy efficiency and the
+/// SLO-facing tail latency, comparable across every cell of a sweep.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub label: String,
+    pub topology: String,
+    pub router: String,
+    pub dispatch: String,
+    /// Fleet output tokens per joule (== per watt-second).
+    pub tok_per_watt: f64,
+    pub output_tokens: u64,
+    pub joules: f64,
+    /// Engine iterations executed fleet-wide.
+    pub steps: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Fleet-wide p99 time-to-first-token, seconds (NaN when nothing
+    /// completed).
+    pub p99_ttft_s: f64,
+    /// `p99_ttft_s` within the spec's SLO (false on NaN).
+    pub slo_ok: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::topology::LONG_CTX;
+    use crate::workload::cdf::azure_conversations;
+
+    fn quick_gen(lambda: f64) -> GenConfig {
+        GenConfig {
+            lambda_rps: lambda,
+            duration_s: 1.0,
+            max_prompt_tokens: 20_000,
+            max_output_tokens: 128,
+            seed: 9,
+        }
+    }
+
+    fn pool_spec() -> ScenarioSpec {
+        ScenarioSpec::new(
+            Topology::PoolRouting { b_short: 4096, short_ctx: 4096 },
+            Gpu::H100,
+            azure_conversations(),
+            quick_gen(40.0),
+        )
+        .with_groups(4)
+    }
+
+    #[test]
+    fn one_spec_feeds_both_engines() {
+        let spec = pool_spec();
+        let analytic = spec.analyze(PowerAccounting::PerGpu);
+        assert_eq!(analytic.pools.len(), 2);
+        assert!(analytic.tok_per_watt.0 > 0.0);
+
+        let sim = spec.simulate(true);
+        assert!(sim.tok_per_watt > 0.0);
+        assert!(sim.completed > 0);
+        assert!(sim.p99_ttft_s.is_finite());
+        // Token conservation against the spec's own trace.
+        let want: u64 =
+            spec.trace().iter().map(|r| r.output_tokens as u64).sum();
+        assert_eq!(sim.output_tokens, want);
+    }
+
+    #[test]
+    fn simulate_is_deterministic_in_the_spec() {
+        let spec = pool_spec().with_dispatch("jsq");
+        let a = spec.simulate(true);
+        let b = spec.simulate(true);
+        assert_eq!(a.output_tokens, b.output_tokens);
+        assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+        assert_eq!(a.p99_ttft_s.to_bits(), b.p99_ttft_s.to_bits());
+    }
+
+    #[test]
+    fn adaptive_router_spec_builds_at_the_split() {
+        let spec = pool_spec().with_router(RouterSpec::Adaptive { spill: 3.0 });
+        let r = spec.router();
+        assert!(r.is_load_aware());
+        assert!(r.name().contains("spill=3"));
+        let out = spec.simulate(true);
+        assert!(out.completed > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "two-pool topology")]
+    fn adaptive_on_homogeneous_panics() {
+        ScenarioSpec::new(
+            Topology::Homogeneous { ctx: LONG_CTX },
+            Gpu::H100,
+            azure_conversations(),
+            quick_gen(10.0),
+        )
+        .with_router(RouterSpec::Adaptive { spill: 2.0 })
+        .router();
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown dispatch policy")]
+    fn bogus_dispatch_rejected_at_build() {
+        pool_spec().with_dispatch("bogus");
+    }
+
+    #[test]
+    fn slo_flag_follows_p99() {
+        // An absurdly tight SLO must be violated, a loose one met.
+        let tight = pool_spec()
+            .with_slo(SloTargets { ttft_p99_s: 1e-9 })
+            .simulate(true);
+        assert!(!tight.slo_ok);
+        let loose = pool_spec()
+            .with_slo(SloTargets { ttft_p99_s: 1e9 })
+            .simulate(true);
+        assert!(loose.slo_ok);
+    }
+}

@@ -1,0 +1,261 @@
+//! Fleet-scale scenario sweeps: dispatch × topology × context-window
+//! grids, one [`ScenarioSpec`] per cell, fanned out across worker
+//! threads.
+//!
+//! This is the workload the incremental-state engine exists for: at
+//! λ=1000 a one-second cell is already a thousand arrivals, and a
+//! default grid is dozens of cells. Cells are embarrassingly parallel,
+//! so the sweep parallelizes *across* cells (`std::thread::scope`,
+//! results placed by index) and runs each cell's engine sequentially —
+//! no nested oversubscription. Every cell reports the same two
+//! headline numbers, tok/W and p99 TTFT, plus an SLO verdict, so any
+//! two cells of the grid are directly comparable.
+//!
+//! CLI: `wattlaw simulate sweep [--lambda 1000] [--duration S]
+//! [--groups N] [--gpu ...] [--trace ...] [--dispatch NAME]
+//! [--b-short N] [--spill F] [--slo-ttft S] [--workers N]`.
+
+use super::{RouterSpec, ScenarioOutcome, ScenarioSpec, SloTargets};
+use crate::fleet::topology::{Topology, LONG_CTX};
+use crate::power::Gpu;
+use crate::sim::dispatch;
+use crate::tables::render::Table;
+use crate::workload::cdf::WorkloadTrace;
+use crate::workload::synth::GenConfig;
+
+/// Grid axes and shared per-cell settings.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub gpu: Gpu,
+    /// Traffic per cell (the paper's fleets use λ = 1000).
+    pub gen: GenConfig,
+    /// Total simulated groups per cell.
+    pub groups: u32,
+    /// Dispatch axis (policy names; [`dispatch::ALL`] by default).
+    pub dispatches: Vec<String>,
+    /// Context-window axis: each split boundary yields a pool-routing
+    /// and a FleetOpt (γ=2) topology at that boundary.
+    pub b_shorts: Vec<u32>,
+    /// Also sweep the load-aware adaptive router (at this spill factor)
+    /// over each pool-routing topology.
+    pub spill: Option<f64>,
+    pub slo: SloTargets,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            gpu: Gpu::H100,
+            gen: GenConfig {
+                lambda_rps: 1000.0,
+                duration_s: 1.0,
+                max_prompt_tokens: 60_000,
+                max_output_tokens: 512,
+                seed: 42,
+            },
+            groups: 8,
+            dispatches: dispatch::ALL.iter().map(|s| s.to_string()).collect(),
+            b_shorts: vec![2048, 4096, 8192],
+            spill: Some(2.0),
+            slo: SloTargets::default(),
+        }
+    }
+}
+
+/// Expand the grid: (homogeneous baseline + per-boundary pool-routing,
+/// FleetOpt and optionally adaptive-routed cells) × dispatch policies.
+/// Cell order is deterministic — topology-major, dispatch-minor — and
+/// [`run`] preserves it.
+pub fn grid(workload: &WorkloadTrace, cfg: &SweepConfig) -> Vec<ScenarioSpec> {
+    let mut topos: Vec<(Topology, RouterSpec)> =
+        vec![(Topology::Homogeneous { ctx: LONG_CTX }, RouterSpec::Static)];
+    for &b in &cfg.b_shorts {
+        topos.push((
+            Topology::PoolRouting { b_short: b, short_ctx: b },
+            RouterSpec::Static,
+        ));
+        topos.push((
+            Topology::FleetOpt { b_short: b, short_ctx: b, gamma: 2.0 },
+            RouterSpec::Static,
+        ));
+        if let Some(spill) = cfg.spill {
+            topos.push((
+                Topology::PoolRouting { b_short: b, short_ctx: b },
+                RouterSpec::Adaptive { spill },
+            ));
+        }
+    }
+
+    let mut specs = Vec::with_capacity(topos.len() * cfg.dispatches.len());
+    for (topo, router) in &topos {
+        for d in &cfg.dispatches {
+            specs.push(
+                ScenarioSpec::new(
+                    topo.clone(),
+                    cfg.gpu,
+                    workload.clone(),
+                    cfg.gen.clone(),
+                )
+                .with_groups(cfg.groups)
+                .with_dispatch(d)
+                .with_router(*router)
+                .with_slo(cfg.slo),
+            );
+        }
+    }
+    specs
+}
+
+/// Run every cell, `workers` at a time, preserving input order. With
+/// `workers > 1` the cell is the unit of parallelism and each cell's
+/// engine runs sequentially (no nested oversubscription); `workers == 1`
+/// is honored literally — everything on the calling thread — and a
+/// single cell is instead given the in-cell parallel fast path when more
+/// than one worker was requested. Grid cells all share one
+/// (workload, gen), so the synthetic trace is generated once and played
+/// through every cell.
+pub fn run(specs: &[ScenarioSpec], workers: usize) -> Vec<ScenarioOutcome> {
+    let requested = workers.max(1);
+    let workers = requested.min(specs.len().max(1));
+    // One trace for the whole grid when every cell would generate the
+    // same one (always true for grid()-built sweeps).
+    let shared: Option<Vec<crate::workload::Request>> = (specs.len() > 1
+        && specs.iter().all(|s| {
+            s.workload.name == specs[0].workload.name && s.gen == specs[0].gen
+        }))
+    .then(|| specs[0].trace());
+    let cell = |s: &ScenarioSpec, in_cell_parallel: bool| match &shared {
+        Some(t) => s.simulate_trace(t, in_cell_parallel),
+        None => s.simulate(in_cell_parallel),
+    };
+
+    if specs.len() <= 1 {
+        return specs.iter().map(|s| cell(s, requested > 1)).collect();
+    }
+    if workers == 1 {
+        return specs.iter().map(|s| cell(s, false)).collect();
+    }
+    let mut results: Vec<Option<ScenarioOutcome>> =
+        (0..specs.len()).map(|_| None).collect();
+    let chunk = specs.len().div_ceil(workers);
+    let cell = &cell;
+    std::thread::scope(|scope| {
+        for (spec_chunk, out_chunk) in
+            specs.chunks(chunk).zip(results.chunks_mut(chunk))
+        {
+            scope.spawn(move || {
+                for (s, slot) in spec_chunk.iter().zip(out_chunk.iter_mut()) {
+                    *slot = Some(cell(s, false));
+                }
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("worker filled every slot"))
+        .collect()
+}
+
+/// Render the sweep as one comparable table: a row per cell, tok/W and
+/// p99 TTFT side by side, best-tok/W-within-SLO called out in the notes.
+pub fn render(outcomes: &[ScenarioOutcome], cfg: &SweepConfig) -> String {
+    let mut t = Table::new(
+        format!(
+            "Scenario sweep — dispatch × topology × context window \
+             ({}, λ={} req/s × {}s, {} groups/cell)",
+            cfg.gpu.spec().name,
+            cfg.gen.lambda_rps,
+            cfg.gen.duration_s,
+            cfg.groups,
+        ),
+        &["Topology", "Router", "Dispatch", "tok/W", "p99 TTFT (s)", "SLO"],
+    );
+    for o in outcomes {
+        t.row(vec![
+            o.topology.clone(),
+            o.router.clone(),
+            o.dispatch.clone(),
+            format!("{:.3}", o.tok_per_watt),
+            format!("{:.3}", o.p99_ttft_s),
+            if o.slo_ok { "ok".into() } else { "MISS".into() },
+        ]);
+    }
+    let best = outcomes
+        .iter()
+        .filter(|o| o.slo_ok)
+        .max_by(|a, b| a.tok_per_watt.total_cmp(&b.tok_per_watt));
+    match best {
+        Some(b) => t.note(format!(
+            "best within SLO (p99 TTFT <= {}s): {} at {:.3} tok/W",
+            cfg.slo.ttft_p99_s, b.label, b.tok_per_watt
+        )),
+        None => t.note(format!(
+            "no cell met the p99 TTFT SLO of {}s at this load",
+            cfg.slo.ttft_p99_s
+        )),
+    };
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::cdf::azure_conversations;
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig {
+            gen: GenConfig {
+                lambda_rps: 200.0,
+                duration_s: 0.3,
+                max_prompt_tokens: 20_000,
+                max_output_tokens: 64,
+                seed: 5,
+            },
+            groups: 2,
+            dispatches: vec!["rr".into(), "jsq".into()],
+            b_shorts: vec![4096],
+            spill: Some(2.0),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grid_covers_all_axes() {
+        let specs = grid(&azure_conversations(), &tiny_cfg());
+        // homo + (pool + fleetopt + adaptive-pool) = 4 topologies × 2
+        // dispatch policies.
+        assert_eq!(specs.len(), 8);
+        assert!(specs.iter().any(|s| s.label().contains("Homo")));
+        assert!(specs.iter().any(|s| s.label().contains("FleetOpt")));
+        assert!(specs.iter().any(|s| s.label().contains("adaptive")));
+        assert!(specs.iter().any(|s| s.dispatch == "jsq"));
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential_cell_order_and_bits() {
+        let specs = grid(&azure_conversations(), &tiny_cfg());
+        let seq = run(&specs, 1);
+        let par = run(&specs, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.label, b.label, "cell order must be preserved");
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+        }
+    }
+
+    #[test]
+    fn render_reports_every_cell_with_ttft() {
+        let cfg = tiny_cfg();
+        let specs = grid(&azure_conversations(), &cfg);
+        let out = run(&specs, 4);
+        let s = render(&out, &cfg);
+        assert!(s.contains("tok/W") && s.contains("p99 TTFT"));
+        assert!(s.contains("Homo") && s.contains("FleetOpt"));
+        // One verdict-bearing row per cell.
+        assert!(
+            s.lines().filter(|l| l.contains("ok") || l.contains("MISS")).count()
+                >= out.len()
+        );
+    }
+}

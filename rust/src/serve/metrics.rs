@@ -123,6 +123,29 @@ impl ServeMetrics {
         self.output_tokens += c.output_tokens as u64;
     }
 
+    /// Merge many per-pool (or per-group) metric sets into one
+    /// fleet-wide set — the per-request TTFT/TPOT/E2E digests combine by
+    /// re-adding samples, counters by summation. Scenario cells report
+    /// their fleet p99 TTFT from this.
+    ///
+    /// Caveat: digests are capped reservoirs (200k samples by default).
+    /// Below the cap the merge is exact; once a pool's digest has been
+    /// truncated, re-adding its retained samples under-weights that pool
+    /// relative to untruncated ones (each retained sample represents
+    /// `seen / len` requests, which re-adding ignores). A
+    /// weighted-reservoir merge is an open ROADMAP item for
+    /// million-arrival sweeps.
+    pub fn merged<'a, I>(parts: I) -> ServeMetrics
+    where
+        I: IntoIterator<Item = &'a ServeMetrics>,
+    {
+        let mut all = ServeMetrics::default();
+        for m in parts {
+            all.merge(m);
+        }
+        all
+    }
+
     pub fn merge(&mut self, other: &ServeMetrics) {
         // Percentile merge via re-adding the other's samples.
         for &v in &other.ttft_s.samples {
@@ -180,6 +203,20 @@ mod tests {
         assert_eq!(a.completed, 2);
         assert_eq!(a.output_tokens, 30);
         assert_eq!(a.ttft_s.count(), 2);
+    }
+
+    #[test]
+    fn merged_combines_many_pools() {
+        let mut a = ServeMetrics::default();
+        let mut b = ServeMetrics::default();
+        a.record(&Completion { id: 1, pool: 0, output_tokens: 5, ttft_s: 0.1, e2e_s: 1.0 });
+        b.record(&Completion { id: 2, pool: 1, output_tokens: 7, ttft_s: 0.9, e2e_s: 2.0 });
+        b.rejected = 3;
+        let mut m = ServeMetrics::merged([&a, &b]);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.rejected, 3);
+        assert_eq!(m.output_tokens, 12);
+        assert_eq!(m.ttft_s.p99(), 0.9);
     }
 
     #[test]

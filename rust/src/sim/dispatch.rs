@@ -6,8 +6,10 @@
 //! fixes how the pool's live batch is packed. The legacy simulator
 //! hard-coded round-robin-at-arrival; the event-driven core
 //! ([`super::events`]) calls a [`DispatchPolicy`] at every arrival event,
-//! handing load-aware policies a [`FleetState`](super::events::FleetState)
-//! snapshot (per-group queue depth, in-flight batch, free KV blocks).
+//! handing every policy a borrow of the engine's *incrementally
+//! maintained* [`FleetState`](super::events::FleetState) (per-group queue
+//! depth, in-flight batch, free KV blocks) — reading load costs zero
+//! allocations regardless of fleet size.
 //!
 //! Dispatch is decide-once: a request joins its group's FIFO queue at
 //! arrival and is never jockeyed to another group afterwards (matching
@@ -20,28 +22,32 @@ use crate::serve::request::ServeRequest;
 /// round-robin keeps per-pool counters, and learned policies could keep
 /// arbitrary history. Determinism contract: the decision may depend only
 /// on construction parameters, prior `pick_group` calls, and the provided
-/// snapshot — never on wall-clock or ambient randomness — so simulations
-/// replay bit-for-bit.
+/// live state — never on wall-clock or ambient randomness — so
+/// simulations replay bit-for-bit.
 pub trait DispatchPolicy {
     fn name(&self) -> &'static str;
 
     /// True when the decision depends only on the arrival *sequence*
-    /// (never on `state`). Static policies let the engine pre-assign
-    /// requests and step independent groups in parallel; they must ignore
-    /// `state`, which the fast path passes as `None`.
+    /// (never on `state`). Static policies let the engine skip live-state
+    /// maintenance entirely and step independent groups in parallel; in
+    /// exchange they **must not read `state`**, which the engine then
+    /// leaves *empty* — a policy that claims to be static but indexes
+    /// into the state panics on its first decision instead of silently
+    /// acting on stale load.
     fn is_arrival_static(&self) -> bool {
         false
     }
 
     /// Pick the destination group in `[0, groups)` for `req`, which the
-    /// router already sent to `pool`. `state` is `Some` for every
-    /// non-static policy.
+    /// router already sent to `pool`. `state` is the engine's live fleet
+    /// load, current as of this arrival whenever this policy declares
+    /// itself non-static (or the router is load-aware).
     fn pick_group(
         &mut self,
         pool: usize,
         groups: u32,
         req: &ServeRequest,
-        state: Option<&FleetState>,
+        state: &FleetState,
     ) -> usize;
 }
 
@@ -80,7 +86,7 @@ impl DispatchPolicy for RoundRobin {
         pool: usize,
         groups: u32,
         _req: &ServeRequest,
-        _state: Option<&FleetState>,
+        _state: &FleetState,
     ) -> usize {
         let c = self.counter(pool);
         let g = (*c % groups as u64) as usize;
@@ -105,9 +111,8 @@ impl DispatchPolicy for JoinShortestQueue {
         pool: usize,
         groups: u32,
         _req: &ServeRequest,
-        state: Option<&FleetState>,
+        state: &FleetState,
     ) -> usize {
-        let state = state.expect("JSQ needs a fleet snapshot");
         argmin_by_key(groups, |g| state.pools[pool].groups[g].in_flight())
     }
 }
@@ -129,9 +134,8 @@ impl DispatchPolicy for LeastKvLoad {
         pool: usize,
         groups: u32,
         _req: &ServeRequest,
-        state: Option<&FleetState>,
+        state: &FleetState,
     ) -> usize {
-        let state = state.expect("least-KV dispatch needs a fleet snapshot");
         // min over used blocks == max over free blocks.
         argmin_by_key(groups, |g| {
             let gl = &state.pools[pool].groups[g];
@@ -159,9 +163,8 @@ impl DispatchPolicy for PowerAware {
         pool: usize,
         groups: u32,
         _req: &ServeRequest,
-        state: Option<&FleetState>,
+        state: &FleetState,
     ) -> usize {
-        let state = state.expect("power-aware dispatch needs a fleet snapshot");
         let p = &state.pools[pool];
         // Hottest group whose batch still has headroom and whose queue is
         // empty (joining it batches immediately instead of waiting).
@@ -242,31 +245,38 @@ mod tests {
         }
     }
 
+    /// Static policies must ignore the state entirely; hand them the
+    /// emptiest one possible to prove it.
+    fn no_state() -> FleetState {
+        FleetState { pools: Vec::new() }
+    }
+
     #[test]
     fn round_robin_cycles_per_pool() {
         let mut rr = RoundRobin::new();
-        let picks: Vec<usize> =
-            (0..6).map(|_| rr.pick_group(0, 3, &req(), None)).collect();
+        let picks: Vec<usize> = (0..6)
+            .map(|_| rr.pick_group(0, 3, &req(), &no_state()))
+            .collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
         // A second pool has its own counter.
-        assert_eq!(rr.pick_group(1, 3, &req(), None), 0);
-        assert_eq!(rr.pick_group(0, 3, &req(), None), 0);
+        assert_eq!(rr.pick_group(1, 3, &req(), &no_state()), 0);
+        assert_eq!(rr.pick_group(0, 3, &req(), &no_state()), 0);
     }
 
     #[test]
     fn jsq_picks_fewest_in_flight_lowest_index_ties() {
         let s = state(&[(2, 3, 100), (0, 4, 100), (1, 3, 100)]);
         let mut jsq = JoinShortestQueue;
-        assert_eq!(jsq.pick_group(0, 3, &req(), Some(&s)), 1);
+        assert_eq!(jsq.pick_group(0, 3, &req(), &s), 1);
         let tie = state(&[(1, 1, 100), (0, 2, 100)]);
-        assert_eq!(jsq.pick_group(0, 2, &req(), Some(&tie)), 0);
+        assert_eq!(jsq.pick_group(0, 2, &req(), &tie), 0);
     }
 
     #[test]
     fn least_kv_picks_most_free_blocks() {
         let s = state(&[(0, 2, 10), (0, 2, 200), (0, 2, 50)]);
         let mut lk = LeastKvLoad;
-        assert_eq!(lk.pick_group(0, 3, &req(), Some(&s)), 1);
+        assert_eq!(lk.pick_group(0, 3, &req(), &s), 1);
     }
 
     #[test]
@@ -274,10 +284,10 @@ mod tests {
         // Group 1 is hot with headroom -> consolidate onto it.
         let s = state(&[(0, 1, 100), (0, 9, 100), (0, 0, 100)]);
         let mut pa = PowerAware;
-        assert_eq!(pa.pick_group(0, 3, &req(), Some(&s)), 1);
+        assert_eq!(pa.pick_group(0, 3, &req(), &s), 1);
         // All saturated (n_max = 16) or queued -> shortest queue wins.
         let s2 = state(&[(5, 16, 0), (2, 16, 0), (9, 16, 0)]);
-        assert_eq!(pa.pick_group(0, 3, &req(), Some(&s2)), 1);
+        assert_eq!(pa.pick_group(0, 3, &req(), &s2), 1);
     }
 
     #[test]

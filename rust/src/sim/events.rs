@@ -4,10 +4,9 @@
 //! Three event kinds drive the engine:
 //!
 //! * **Arrival** — a request reaches the fleet: the router picks the pool
-//!   (optionally reading a live [`FleetState`] snapshot), the
-//!   [`DispatchPolicy`] picks the group, and the request joins that
-//!   group's FIFO queue. An arrival to a quiescent group schedules a
-//!   *wake*.
+//!   (reading the engine's live [`FleetState`]), the [`DispatchPolicy`]
+//!   picks the group, and the request joins that group's FIFO queue. An
+//!   arrival to a quiescent group schedules a *wake*.
 //! * **StepComplete** — a group's in-flight engine iteration finishes:
 //!   outcomes (chunked prompt ingestion, decoded tokens, completions) are
 //!   applied at the step-end timestamp, then the group immediately plans
@@ -24,6 +23,20 @@
 //! is admitted on that boundary — matching the legacy closed loop
 //! bit-for-bit under round-robin dispatch (asserted by
 //! `tests/sim_replay.rs`).
+//!
+//! **Live state, maintained incrementally**: the engine owns one
+//! [`FleetState`] for the whole run, initialized to the all-idle fleet
+//! and mutated in place — after every event only the *touched* group's
+//! [`GroupLoad`] is refreshed from its batcher, so a routing/dispatch
+//! decision costs zero allocations regardless of fleet size. (The
+//! pre-refactor engine re-snapshotted every group of every pool on each
+//! arrival — O(total groups) allocations per arrival, the blocker for
+//! million-arrival λ=1000 sweeps.) That legacy behavior is preserved as
+//! [`StateMode::RebuildPerArrival`] — it is the verification oracle
+//! (`tests/properties.rs` asserts both modes replay bit-for-bit on
+//! random traces) and the "before" baseline of `bench_sim_engine` —
+//! and [`EngineOptions::validate_state`] additionally cross-checks the
+//! live state against a fresh snapshot after *every* event.
 //!
 //! **Parallel fast path**: when the router is not load-aware and the
 //! dispatch policy is arrival-static, group assignment is a pure function
@@ -47,7 +60,7 @@ use crate::serve::request::ServeRequest;
 use crate::workload::Request;
 
 /// Live load of one group, as routers and dispatch policies see it.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GroupLoad {
     /// Requests waiting in the group's FIFO queue.
     pub queued: usize,
@@ -67,7 +80,7 @@ impl GroupLoad {
 }
 
 /// Live load of one pool.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PoolLoad {
     pub window_tokens: u32,
     /// Per-group concurrency limit (Eq. 3's n_max for this window).
@@ -105,13 +118,122 @@ impl PoolLoad {
     }
 }
 
-/// A point-in-time snapshot of the whole fleet, handed to
+/// The live load of the whole fleet, handed to
 /// [`Router::route_live`](crate::router::Router::route_live) and
-/// [`DispatchPolicy::pick_group`]. Snapshots are plain data — cheap to
-/// build, safe to hold across the routing decision.
-#[derive(Debug, Clone)]
+/// [`DispatchPolicy::pick_group`] at every arrival.
+///
+/// The engine maintains exactly one of these per run, *incrementally*:
+/// after each event only the touched group's [`GroupLoad`] is refreshed,
+/// so reading it is a borrow, never an allocation. It is plain data —
+/// clone it if a policy needs to hold load across decisions.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FleetState {
     pub pools: Vec<PoolLoad>,
+}
+
+impl FleetState {
+    /// The all-idle state of a freshly configured fleet: empty queues,
+    /// empty batches, every paged-KV block on the free list. This is
+    /// what the engine's live state starts from when a load-aware
+    /// consumer will read it. (Paths where nobody may read the state —
+    /// arrival-static pre-assignment, static-only sequential runs —
+    /// instead get an *empty* canary state, so a policy that falsely
+    /// declares itself static and reads anyway panics on the first
+    /// index instead of silently acting on stale load.)
+    pub fn initial(pool_groups: &[u32], cfgs: &[GroupSimConfig]) -> Self {
+        FleetState {
+            pools: pool_groups
+                .iter()
+                .zip(cfgs)
+                .map(|(&g, cfg)| PoolLoad {
+                    window_tokens: cfg.window_tokens,
+                    n_max: cfg.n_max,
+                    groups: vec![
+                        GroupLoad {
+                            queued: 0,
+                            active: 0,
+                            free_blocks: cfg.blocks_total(),
+                            used_blocks: 0,
+                        };
+                        g as usize
+                    ],
+                })
+                .collect(),
+        }
+    }
+
+    /// Refresh one group's load from its live batcher — the O(1)-in-
+    /// fleet-size update the engine applies after every event that
+    /// touches the group.
+    fn refresh_group(&mut self, pool: usize, group: usize, gs: &GroupSim) {
+        self.pools[pool].groups[group] = GroupLoad {
+            queued: gs.batcher.queued_len(),
+            active: gs.batcher.active(),
+            free_blocks: gs.batcher.blocks.free_blocks(),
+            used_blocks: gs.batcher.blocks.used(),
+        };
+    }
+}
+
+/// How the engine supplies [`FleetState`] to load-aware routing and
+/// dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StateMode {
+    /// Maintain one live state in place (O(changed group) per event).
+    /// The production mode.
+    #[default]
+    Incremental,
+    /// Rebuild a full snapshot at every arrival — the pre-refactor
+    /// behavior, O(total groups) allocations per arrival. Kept as the
+    /// verification oracle for the incremental path and as the "before"
+    /// baseline in `bench_sim_engine`.
+    RebuildPerArrival,
+}
+
+/// Engine knobs beyond the (trace, router, policy) triple.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Step independent groups on worker threads when routing and
+    /// dispatch are arrival-static (bit-identical to sequential).
+    pub allow_parallel: bool,
+    /// Live-state maintenance strategy.
+    pub state_mode: StateMode,
+    /// Cross-check the incrementally maintained state against a freshly
+    /// built snapshot after **every** event (O(fleet) per event — tests
+    /// only). Panics on the first divergence. Requires
+    /// [`StateMode::Incremental`] and a load-aware router or non-static
+    /// dispatch policy — any combination where the live state is never
+    /// maintained is rejected up front (the check would otherwise pass
+    /// vacuously).
+    pub validate_state: bool,
+}
+
+/// Reject `validate_state` requests that could never check anything.
+fn assert_validate_applicable(
+    router: &dyn Router,
+    dispatch: &dyn DispatchPolicy,
+    opts: EngineOptions,
+) {
+    if opts.validate_state {
+        assert!(
+            opts.state_mode == StateMode::Incremental
+                && (router.is_load_aware() || !dispatch.is_arrival_static()),
+            "validate_state requires StateMode::Incremental and a \
+             load-aware router or non-static dispatch policy; with this \
+             combination the live state is never maintained, so the \
+             cross-check would pass without checking anything"
+        );
+    }
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            allow_parallel: true,
+            state_mode: StateMode::Incremental,
+            validate_state: false,
+        }
+    }
 }
 
 /// Per-group simulation result, aggregated by the pool/topology wrappers
@@ -187,14 +309,10 @@ struct GroupSim {
 
 impl GroupSim {
     fn new(cfg: &GroupSimConfig) -> Self {
-        // Block budget = n_max × window (Eq. 3 inverted): admission
-        // saturates at exactly n_max full-window sequences.
-        let blocks_total =
-            (cfg.n_max as u64 * cfg.window_tokens as u64 / 64).max(1) as u32;
         GroupSim {
             batcher: Batcher::new(
                 cfg.n_max as usize,
-                BlockAllocator::new(64, blocks_total),
+                BlockAllocator::new(64, cfg.blocks_total()),
                 cfg.ingest_chunk,
                 cfg.window_tokens,
             ),
@@ -219,6 +337,10 @@ impl GroupSim {
     }
 }
 
+/// Build a point-in-time copy of the whole fleet's load — O(total
+/// groups). The engine no longer does this per arrival; it remains as
+/// the [`StateMode::RebuildPerArrival`] oracle and the
+/// `validate_state` cross-check.
 fn snapshot(pools: &[Vec<GroupSim>], cfgs: &[GroupSimConfig]) -> FleetState {
     FleetState {
         pools: pools
@@ -241,25 +363,27 @@ fn snapshot(pools: &[Vec<GroupSim>], cfgs: &[GroupSimConfig]) -> FleetState {
     }
 }
 
-/// Route + dispatch one arrival: pool from the router (live when a
-/// snapshot is provided), group from the policy, effective prompt baked
-/// into the returned request. The single definition keeps the sequential
-/// engine and the parallel pre-assignment bit-for-bit in agreement.
+/// Route + dispatch one arrival: pool from the router, group from the
+/// policy, effective prompt baked into the returned request — all
+/// borrowing the engine's live `state` (the contract behind
+/// [`Router::is_load_aware`] and
+/// [`DispatchPolicy::is_arrival_static`](super::dispatch::DispatchPolicy::is_arrival_static):
+/// consumers that declare themselves static promise not to read it, so
+/// the engine only keeps it fresh when someone will). The single
+/// definition keeps the sequential engine and the parallel
+/// pre-assignment bit-for-bit in agreement.
 fn assign(
     router: &dyn Router,
     dispatch: &mut dyn DispatchPolicy,
     pool_groups: &[u32],
     req: &Request,
-    snap: Option<&FleetState>,
+    state: &FleetState,
 ) -> (usize, usize, ServeRequest) {
-    let route = match snap {
-        Some(s) => router.route_live(req, s),
-        None => router.route(req),
-    };
+    let route = router.route_live(req, state);
     let mut sreq = ServeRequest::from(req);
     sreq.prompt_tokens = route.effective_prompt_tokens;
     let group =
-        dispatch.pick_group(route.pool, pool_groups[route.pool], &sreq, snap);
+        dispatch.pick_group(route.pool, pool_groups[route.pool], &sreq, state);
     (route.pool, group, sreq)
 }
 
@@ -334,8 +458,10 @@ pub(crate) fn run_fleet(
     pool_groups: &[u32],
     pool_cfgs: &[GroupSimConfig],
     dispatch: &mut dyn DispatchPolicy,
+    opts: EngineOptions,
 ) -> Vec<Vec<GroupOutcome>> {
     validate_fleet_inputs(trace, router, pool_groups, pool_cfgs);
+    assert_validate_applicable(router, &*dispatch, opts);
     debug_assert!(
         trace.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
         "run_fleet requires an arrival-sorted trace"
@@ -358,18 +484,38 @@ pub(crate) fn run_fleet(
     }
     let mut seq = trace.len() as u64;
     let need_state = router.is_load_aware() || !dispatch.is_arrival_static();
+    // Track the live state in place only when someone will read it AND
+    // we are not in the legacy rebuild-per-arrival oracle mode; the
+    // one-off initial build is O(total groups) once per run, not per
+    // arrival.
+    let track = need_state && opts.state_mode == StateMode::Incremental;
+    // When nobody may legitimately read the state (static-only run, or
+    // the rebuild oracle supplying its own snapshots), hand out an
+    // empty canary instead: a policy that lies about being static and
+    // indexes into it panics immediately rather than silently deciding
+    // from stale load.
+    let mut live = if track {
+        FleetState::initial(pool_groups, pool_cfgs)
+    } else {
+        FleetState { pools: Vec::new() }
+    };
 
     while let Some(ev) = heap.pop() {
         match ev.kind {
             EvKind::Arrival { idx } => {
                 let req = &trace[idx];
-                let snap = if need_state {
-                    Some(snapshot(&pools, pool_cfgs))
-                } else {
-                    None
-                };
-                let (pool, group, sreq) =
-                    assign(router, dispatch, pool_groups, req, snap.as_ref());
+                // Legacy oracle mode only: rebuild the full snapshot the
+                // pre-refactor engine allocated on every arrival.
+                let rebuilt = (need_state
+                    && opts.state_mode == StateMode::RebuildPerArrival)
+                    .then(|| snapshot(&pools, pool_cfgs));
+                let (pool, group, sreq) = assign(
+                    router,
+                    dispatch,
+                    pool_groups,
+                    req,
+                    rebuilt.as_ref().unwrap_or(&live),
+                );
                 assert!(
                     pool < pools.len() && group < pools[pool].len(),
                     "dispatch out of range: pool {pool} group {group}"
@@ -394,6 +540,9 @@ pub(crate) fn run_fleet(
                         seq,
                         kind: EvKind::Wake { pool, group },
                     });
+                }
+                if track {
+                    live.refresh_group(pool, group, &pools[pool][group]);
                 }
             }
             EvKind::StepComplete { pool, group } => {
@@ -428,6 +577,9 @@ pub(crate) fn run_fleet(
                     pool,
                     group,
                 );
+                if track {
+                    live.refresh_group(pool, group, &pools[pool][group]);
+                }
             }
             EvKind::Wake { pool, group } => {
                 let gs = &mut pools[pool][group];
@@ -440,7 +592,18 @@ pub(crate) fn run_fleet(
                     pool,
                     group,
                 );
+                if track {
+                    live.refresh_group(pool, group, &pools[pool][group]);
+                }
             }
+        }
+        if opts.validate_state && track {
+            assert!(
+                live == snapshot(&pools, pool_cfgs),
+                "incremental FleetState diverged from a fresh snapshot \
+                 after event at t = {}",
+                ev.t
+            );
         }
     }
 
@@ -461,6 +624,7 @@ fn run_one_group(reqs: &[Request], cfg: &GroupSimConfig) -> GroupOutcome {
         &[1],
         std::slice::from_ref(cfg),
         &mut rr,
+        EngineOptions::default(),
     );
     out.pop().expect("one pool").pop().expect("one group")
 }
@@ -486,25 +650,32 @@ pub(crate) fn run_fleet_auto(
     pool_groups: &[u32],
     pool_cfgs: &[GroupSimConfig],
     dispatch: &mut dyn DispatchPolicy,
-    allow_parallel: bool,
+    opts: EngineOptions,
 ) -> Vec<Vec<GroupOutcome>> {
-    if !(allow_parallel && parallel_eligible(router, &*dispatch, pool_groups)) {
-        return run_fleet(trace, router, pool_groups, pool_cfgs, dispatch);
+    assert_validate_applicable(router, &*dispatch, opts);
+    if !(opts.allow_parallel
+        && parallel_eligible(router, &*dispatch, pool_groups))
+    {
+        return run_fleet(trace, router, pool_groups, pool_cfgs, dispatch, opts);
     }
     // Same input contract as the sequential engine — a malformed
     // topology must fail identically on both paths.
     validate_fleet_inputs(trace, router, pool_groups, pool_cfgs);
 
     // Pre-assign: for arrival-static dispatch the (pool, group) of every
-    // request is a pure function of the arrival sequence. Bake the
-    // router's effective-prompt transform into the stored request so the
-    // per-group engine can run it through an identity router.
+    // request is a pure function of the arrival sequence — an empty
+    // canary state stands in for live load, which static consumers must
+    // not read (reading it panics, loudly exposing a policy that lied
+    // about being arrival-static). Bake the router's effective-prompt
+    // transform into the stored request so the per-group engine can run
+    // it through an identity router.
+    let idle = FleetState { pools: Vec::new() };
     let mut per_group: Vec<Vec<Vec<Request>>> = pool_groups
         .iter()
         .map(|&g| vec![Vec::new(); g as usize])
         .collect();
     for r in trace {
-        let (pool, group, s) = assign(router, dispatch, pool_groups, r, None);
+        let (pool, group, s) = assign(router, dispatch, pool_groups, r, &idle);
         per_group[pool][group].push(Request {
             id: r.id,
             arrival_s: r.arrival_s,
@@ -621,6 +792,7 @@ mod tests {
             &[2],
             &[cfg(8192)],
             &mut rr,
+            EngineOptions::default(),
         );
         let completed: u64 = out[0].iter().map(|g| g.metrics.completed).sum();
         let tokens: u64 = out[0].iter().map(|g| g.output_tokens).sum();
@@ -639,6 +811,7 @@ mod tests {
             &[3],
             &[cfg(8192)],
             &mut RoundRobin::new(),
+            EngineOptions::default(),
         );
         let par_out = run_fleet_auto(
             &trace,
@@ -646,7 +819,7 @@ mod tests {
             &[3],
             &[cfg(8192)],
             &mut RoundRobin::new(),
-            true,
+            EngineOptions::default(),
         );
         for (s, p) in seq_out[0].iter().zip(&par_out[0]) {
             assert_eq!(s.joules.to_bits(), p.joules.to_bits());
@@ -673,6 +846,7 @@ mod tests {
             &[1],
             &[cfg(8192)],
             &mut RoundRobin::new(),
+            EngineOptions::default(),
         );
         assert!(out[0][0].joules > 5.0 * 299.0, "idle joules missing");
         assert_eq!(out[0][0].metrics.completed, 1);
@@ -693,6 +867,80 @@ mod tests {
             &[1],
             &[cfg(8192)],
             &mut RoundRobin::new(),
+            EngineOptions::default(),
         );
+    }
+
+    #[test]
+    #[should_panic(expected = "validate_state requires")]
+    fn vacuous_validate_state_rejected() {
+        // Static router + static policy never read the live state, so a
+        // validate_state run would check nothing — reject it loudly.
+        let trace = small_trace(2);
+        run_fleet(
+            &trace,
+            &HomogeneousRouter,
+            &[1],
+            &[cfg(8192)],
+            &mut RoundRobin::new(),
+            EngineOptions { validate_state: true, ..Default::default() },
+        );
+    }
+
+    #[test]
+    fn initial_state_matches_fresh_snapshot() {
+        let cfgs = [cfg(5120), cfg(65_536)];
+        let pool_groups = [3u32, 2];
+        let pools: Vec<Vec<GroupSim>> = pool_groups
+            .iter()
+            .zip(&cfgs)
+            .map(|(&g, c)| (0..g).map(|_| GroupSim::new(c)).collect())
+            .collect();
+        assert_eq!(
+            FleetState::initial(&pool_groups, &cfgs),
+            snapshot(&pools, &cfgs)
+        );
+    }
+
+    #[test]
+    fn incremental_state_survives_per_event_validation() {
+        // JSQ forces need_state; validate_state cross-checks the live
+        // state against a fresh snapshot after every single event.
+        let trace = small_trace(11);
+        let mut jsq = super::super::dispatch::JoinShortestQueue;
+        let out = run_fleet(
+            &trace,
+            &HomogeneousRouter,
+            &[3],
+            &[cfg(8192)],
+            &mut jsq,
+            EngineOptions { validate_state: true, ..Default::default() },
+        );
+        let completed: u64 = out[0].iter().map(|g| g.metrics.completed).sum();
+        assert_eq!(completed, trace.len() as u64);
+    }
+
+    #[test]
+    fn rebuild_per_arrival_oracle_matches_incremental_bitwise() {
+        let trace = small_trace(5);
+        let run = |mode: StateMode| {
+            let mut jsq = super::super::dispatch::JoinShortestQueue;
+            run_fleet(
+                &trace,
+                &HomogeneousRouter,
+                &[4],
+                &[cfg(8192)],
+                &mut jsq,
+                EngineOptions { state_mode: mode, ..Default::default() },
+            )
+        };
+        let incr = run(StateMode::Incremental);
+        let oracle = run(StateMode::RebuildPerArrival);
+        for (a, b) in incr[0].iter().zip(&oracle[0]) {
+            assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert_eq!(a.steps, b.steps);
+            assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+        }
     }
 }

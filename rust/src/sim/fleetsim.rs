@@ -18,7 +18,7 @@
 //! fast path.
 
 use super::dispatch::{DispatchPolicy, RoundRobin};
-use super::events::{run_fleet_auto, GroupOutcome};
+use super::events::{run_fleet_auto, EngineOptions, GroupOutcome};
 use crate::power::LogisticPower;
 use crate::roofline::Roofline;
 use crate::router::Router;
@@ -41,6 +41,17 @@ pub struct GroupSimConfig {
     pub gpus_charged: f64,
     /// Prompt tokens ingested per slot per step (chunked prefill).
     pub ingest_chunk: u32,
+}
+
+impl GroupSimConfig {
+    /// Paged-KV block budget backing one group: n_max × window tokens in
+    /// 64-token blocks (Eq. 3 inverted) — admission saturates at exactly
+    /// n_max full-window sequences. Shared by the live engine and
+    /// [`FleetState::initial`](super::events::FleetState::initial) so the
+    /// all-idle state matches a fresh snapshot exactly.
+    pub fn blocks_total(&self) -> u32 {
+        (self.n_max as u64 * self.window_tokens as u64 / 64).max(1) as u32
+    }
 }
 
 /// Result of simulating one pool.
@@ -73,6 +84,15 @@ pub struct TopoSimReport {
     pub tok_per_watt: f64,
     /// Engine iterations executed fleet-wide.
     pub steps: u64,
+}
+
+impl TopoSimReport {
+    /// Fleet-wide serving metrics: every pool's per-request
+    /// TTFT/TPOT/E2E digests and counters merged into one — what a
+    /// scenario cell reports its p99 TTFT from.
+    pub fn fleet_metrics(&self) -> ServeMetrics {
+        ServeMetrics::merged(self.pools.iter().map(|p| &p.metrics))
+    }
 }
 
 /// Aggregate a pool's group outcomes in group-index order (the order is
@@ -192,7 +212,7 @@ pub fn simulate_pool(
         &[groups],
         std::slice::from_ref(cfg),
         &mut rr,
-        true,
+        EngineOptions::default(),
     );
     aggregate_pool(name, groups, cfg, outcomes.pop().expect("one pool"))
 }
@@ -220,15 +240,32 @@ pub fn simulate_topology_with(
     dispatch: &mut dyn DispatchPolicy,
     allow_parallel: bool,
 ) -> TopoSimReport {
-    let trace = sorted_by_arrival(trace);
-    let outcomes = run_fleet_auto(
-        &trace,
+    simulate_topology_opts(
+        trace,
         router,
         pool_groups,
         pool_cfgs,
         dispatch,
-        allow_parallel,
-    );
+        EngineOptions { allow_parallel, ..Default::default() },
+    )
+}
+
+/// Everything-exposed entry point: on top of
+/// [`simulate_topology_with`], selects the live-state maintenance mode
+/// ([`StateMode`](super::events::StateMode) — incremental vs the legacy
+/// rebuild-per-arrival oracle) and the per-event state cross-check used
+/// by the property suites.
+pub fn simulate_topology_opts(
+    trace: &[Request],
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+    dispatch: &mut dyn DispatchPolicy,
+    opts: EngineOptions,
+) -> TopoSimReport {
+    let trace = sorted_by_arrival(trace);
+    let outcomes =
+        run_fleet_auto(&trace, router, pool_groups, pool_cfgs, dispatch, opts);
     aggregate_topology(pool_groups, pool_cfgs, outcomes)
 }
 

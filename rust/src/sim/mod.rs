@@ -12,21 +12,34 @@
 //! The core ([`events`]) is a single binary-heap event queue over one
 //! virtual clock: arrival, step-complete and wake events drive **all
 //! groups of all pools concurrently in virtual time**. That shared clock
-//! is what makes *stateful* policies expressible: at every arrival the
-//! router can read a live [`FleetState`] snapshot (per-pool queue depth,
-//! in-flight batch, free KV blocks) and a [`DispatchPolicy`] picks the
-//! destination group from the same snapshot.
+//! is what makes *stateful* policies expressible: the engine owns one
+//! live [`FleetState`] (per-pool queue depth, in-flight batch, free KV
+//! blocks), **maintained incrementally** — only the event's touched
+//! group is refreshed — so at every arrival the router and the
+//! [`DispatchPolicy`] borrow current fleet load at zero allocation cost,
+//! no matter how many groups the fleet has. The pre-refactor
+//! rebuild-a-snapshot-per-arrival behavior survives as
+//! [`StateMode::RebuildPerArrival`], the bit-for-bit verification oracle.
 //!
 //! * [`dispatch`] — round-robin, join-shortest-queue, least-KV-load and
 //!   power-aware group selection behind the [`DispatchPolicy`] trait.
-//! * [`events`] — the engine, plus the parallel fast path: when routing
-//!   and dispatch are arrival-static, independent groups are stepped on
-//!   worker threads and merged in group-index order, bit-identically to
-//!   the sequential run.
+//! * [`events`] — the engine ([`EngineOptions`], [`StateMode`]), plus the
+//!   parallel fast path: when routing and dispatch are arrival-static,
+//!   independent groups are stepped on worker threads and merged in
+//!   group-index order, bit-identically to the sequential run.
 //! * [`fleetsim`] — reports and entry points. [`simulate_pool`] /
 //!   [`simulate_topology`] reproduce the pre-refactor round-robin
 //!   simulator bit-for-bit (deterministic-replay guarantee);
-//!   [`simulate_topology_with`] exposes policy and parallelism control.
+//!   [`simulate_topology_with`] exposes policy and parallelism control;
+//!   [`simulate_topology_opts`] additionally exposes the state mode and
+//!   the per-event live-state cross-check.
+//!
+//! For running *grids* of (topology × workload × routing/dispatch)
+//! configurations through this engine — the paper-style scenario
+//! comparisons — see [`crate::scenario`]: a
+//! [`ScenarioSpec`](crate::scenario::ScenarioSpec) describes one cell,
+//! and [`scenario::sweep`](crate::scenario::sweep) fans cells out across
+//! worker threads (`wattlaw simulate sweep` on the CLI).
 //!
 //! Determinism: every event is ordered by `(time, kind, sequence)` under
 //! `f64::total_cmp`, policies are forbidden ambient randomness, and all
@@ -40,8 +53,8 @@ pub mod fleetsim;
 pub use dispatch::{
     DispatchPolicy, JoinShortestQueue, LeastKvLoad, PowerAware, RoundRobin,
 };
-pub use events::{FleetState, GroupLoad, PoolLoad};
+pub use events::{EngineOptions, FleetState, GroupLoad, PoolLoad, StateMode};
 pub use fleetsim::{
-    simulate_pool, simulate_topology, simulate_topology_with, GroupSimConfig,
-    PoolSimReport, TopoSimReport,
+    simulate_pool, simulate_topology, simulate_topology_opts,
+    simulate_topology_with, GroupSimConfig, PoolSimReport, TopoSimReport,
 };

@@ -11,26 +11,33 @@
 //! [`FleetState`]: crate::sim::FleetState
 
 use super::render::Table;
-use crate::fleet::profile::ManualProfile;
 use crate::fleet::topology::Topology;
-use crate::sim::{dispatch, simulate_topology_with, TopoSimReport};
-use crate::workload::synth::{generate, GenConfig};
+use crate::power::Gpu;
+use crate::scenario::{ScenarioOutcome, ScenarioSpec};
+use crate::sim::dispatch;
+use crate::workload::synth::GenConfig;
 use crate::workload::Request;
 
 /// A deterministic bursty two-pool trace: steady Azure-shaped background
 /// traffic plus periodic short-prompt bursts that pile onto the short
 /// pool — the regime where load-aware dispatch separates from
 /// round-robin.
+/// Background-traffic generator — one definition shared by the trace
+/// builder and the scenario spec's label, so they cannot drift apart.
+fn background_gen() -> GenConfig {
+    GenConfig {
+        lambda_rps: 30.0,
+        duration_s: 3.0,
+        max_prompt_tokens: 30_000,
+        max_output_tokens: 256,
+        seed: 42,
+    }
+}
+
 pub fn bursty_trace() -> Vec<Request> {
-    let mut reqs = generate(
+    let mut reqs = crate::workload::synth::generate(
         &crate::workload::cdf::azure_conversations(),
-        &GenConfig {
-            lambda_rps: 30.0,
-            duration_s: 3.0,
-            max_prompt_tokens: 30_000,
-            max_output_tokens: 256,
-            seed: 42,
-        },
+        &background_gen(),
     );
     let base_id = reqs.len() as u64;
     for burst in 0..3u64 {
@@ -48,22 +55,19 @@ pub fn bursty_trace() -> Vec<Request> {
     reqs
 }
 
-/// Simulate one policy over the bursty trace.
-pub fn simulate_policy(name: &str) -> TopoSimReport {
-    let trace = bursty_trace();
-    let profile = ManualProfile::h100_70b();
-    let topo = Topology::PoolRouting { b_short: 4096, short_ctx: 4096 };
-    let (groups, cfgs) = topo.sim_pools(&profile, 4, 1024);
-    let router = topo.router();
-    let mut policy = dispatch::parse(name).expect("known policy");
-    simulate_topology_with(
-        &trace,
-        router.as_ref(),
-        &groups,
-        &cfgs,
-        policy.as_mut(),
-        true,
+/// Simulate one policy over the bursty trace — a [`ScenarioSpec`] cell
+/// with only the dispatch axis varying (the scenario layer's unified
+/// configuration; the hand-crafted trace overrides the spec's generator).
+pub fn simulate_policy(name: &str) -> ScenarioOutcome {
+    let spec = ScenarioSpec::new(
+        Topology::PoolRouting { b_short: 4096, short_ctx: 4096 },
+        Gpu::H100,
+        crate::workload::cdf::azure_conversations(),
+        background_gen(),
     )
+    .with_groups(4)
+    .with_dispatch(name);
+    spec.simulate_trace(&bursty_trace(), true)
 }
 
 pub fn generate() -> String {
@@ -74,17 +78,13 @@ pub fn generate() -> String {
     );
     for name in dispatch::ALL {
         let r = simulate_policy(name);
-        let mut merged = crate::serve::metrics::ServeMetrics::default();
-        for p in &r.pools {
-            merged.merge(&p.metrics);
-        }
         t.row(vec![
             name.to_string(),
             format!("{:.3}", r.tok_per_watt),
             format!("{}", r.output_tokens),
             format!("{:.1}", r.joules / 1e3),
             format!("{}", r.steps),
-            format!("{:.3}", merged.ttft_s.p99()),
+            format!("{:.3}", r.p99_ttft_s),
         ]);
     }
     t.note(

@@ -7,8 +7,10 @@ use super::cdf::WorkloadTrace;
 use super::trace::Request;
 use crate::xrand::Rng;
 
-/// Generator configuration.
-#[derive(Debug, Clone)]
+/// Generator configuration. `PartialEq` so consumers can detect when two
+/// scenarios would generate byte-identical traces (the sweep runner
+/// generates once for a whole grid).
+#[derive(Debug, Clone, PartialEq)]
 pub struct GenConfig {
     /// Arrival rate, requests/second (the paper's fleets use λ = 1000).
     pub lambda_rps: f64,

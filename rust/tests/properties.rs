@@ -550,6 +550,80 @@ fn prop_event_sim_parallel_matches_sequential_bitwise() {
 }
 
 #[test]
+fn prop_incremental_fleet_state_equals_fresh_snapshot_on_random_traces() {
+    use wattlaw::router::adaptive::AdaptiveRouter;
+    use wattlaw::router::context::ContextRouter;
+    use wattlaw::sim::{
+        dispatch, simulate_topology_opts, EngineOptions, StateMode,
+    };
+
+    // Two assertions per case: (1) `validate_state` makes the engine
+    // compare its incrementally maintained FleetState against a freshly
+    // built snapshot after EVERY event (it panics on the first
+    // divergence); (2) the pre-refactor rebuild-per-arrival oracle mode
+    // must replay the incremental run bit-for-bit — same decisions, same
+    // floats, only the snapshot allocations removed.
+    forall("incremental live state == fresh snapshot, any event", 8, |g| {
+        let (trace, groups, cfgs) = random_sim_scenario(g);
+        let stateful = ["jsq", "least-kv", "power"];
+        // Force a load-aware consumer so the state is actually read:
+        // a stateful dispatch policy, a load-aware router, or both.
+        let (router, policy_name): (Box<dyn Router>, &str) =
+            if groups.len() == 2 {
+                if g.bool() {
+                    (
+                        Box::new(
+                            AdaptiveRouter::new(4096)
+                                .with_spill_factor(g.f64_in(0.5, 4.0)),
+                        ),
+                        *g.choose(&dispatch::ALL),
+                    )
+                } else {
+                    (
+                        Box::new(ContextRouter::two_pool(4096)),
+                        *g.choose(&stateful),
+                    )
+                }
+            } else {
+                (
+                    Box::new(wattlaw::router::HomogeneousRouter),
+                    *g.choose(&stateful),
+                )
+            };
+        let run = |mode: StateMode, validate: bool| {
+            let mut policy = dispatch::parse(policy_name).unwrap();
+            simulate_topology_opts(
+                &trace,
+                router.as_ref(),
+                &groups,
+                &cfgs,
+                policy.as_mut(),
+                EngineOptions {
+                    allow_parallel: false,
+                    state_mode: mode,
+                    validate_state: validate,
+                },
+            )
+        };
+        let live = run(StateMode::Incremental, true);
+        let oracle = run(StateMode::RebuildPerArrival, false);
+        xcheck_assert!(live.output_tokens == oracle.output_tokens);
+        xcheck_assert!(
+            live.joules.to_bits() == oracle.joules.to_bits(),
+            "{policy_name}: joules diverged, {} vs {}",
+            live.joules,
+            oracle.joules
+        );
+        xcheck_assert!(live.steps == oracle.steps);
+        for (a, b) in live.pools.iter().zip(&oracle.pools) {
+            xcheck_assert!(a.horizon_s.to_bits() == b.horizon_s.to_bits());
+            xcheck_assert!(a.metrics.completed == b.metrics.completed);
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_adaptive_router_live_is_total_and_window_safe() {
     use wattlaw::router::adaptive::AdaptiveRouter;
     use wattlaw::sim::{FleetState, GroupLoad, PoolLoad};

@@ -15,7 +15,10 @@
 use wattlaw::router::context::ContextRouter;
 use wattlaw::router::HomogeneousRouter;
 use wattlaw::sim::dispatch::{JoinShortestQueue, RoundRobin};
-use wattlaw::sim::{simulate_topology, simulate_topology_with, GroupSimConfig};
+use wattlaw::sim::{
+    simulate_topology, simulate_topology_opts, simulate_topology_with,
+    EngineOptions, GroupSimConfig, StateMode,
+};
 use wattlaw::workload::synth::{generate, GenConfig};
 use wattlaw::workload::Request;
 
@@ -320,4 +323,54 @@ fn jsq_strictly_beats_round_robin_on_bursty_two_pool_trace() {
         jsq_report.tok_per_watt,
         rr_report.tok_per_watt
     );
+}
+
+/// The incremental-state refactor's replay guarantee: the in-place live
+/// FleetState must drive exactly the same routing/dispatch decisions as
+/// the pre-refactor rebuild-a-snapshot-per-arrival engine — joules
+/// bit-for-bit — and survive the engine's per-event cross-check against
+/// a freshly built snapshot.
+#[test]
+fn incremental_live_state_replays_rebuild_per_arrival_bit_for_bit() {
+    let trace = bursty_two_pool_trace();
+    let router = ContextRouter::two_pool(4096);
+    let groups = [2u32, 2];
+    let mut short = h100_cfg(4096 + 1024);
+    short.n_max = 8;
+    let cfgs = [short, h100_cfg(65_536)];
+
+    let run = |mode: StateMode, validate: bool| {
+        let mut jsq = JoinShortestQueue;
+        simulate_topology_opts(
+            &trace,
+            &router,
+            &groups,
+            &cfgs,
+            &mut jsq,
+            EngineOptions {
+                allow_parallel: false,
+                state_mode: mode,
+                validate_state: validate,
+            },
+        )
+    };
+    let incremental = run(StateMode::Incremental, true);
+    let rebuilt = run(StateMode::RebuildPerArrival, false);
+
+    assert_eq!(incremental.output_tokens, rebuilt.output_tokens);
+    assert_eq!(
+        incremental.joules.to_bits(),
+        rebuilt.joules.to_bits(),
+        "live-state joules must replay the snapshot oracle bit-for-bit: \
+         {} vs {}",
+        incremental.joules,
+        rebuilt.joules
+    );
+    assert_eq!(incremental.steps, rebuilt.steps);
+    for (a, b) in incremental.pools.iter().zip(&rebuilt.pools) {
+        assert_eq!(a.joules.to_bits(), b.joules.to_bits(), "{}", a.name);
+        assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits(), "{}", a.name);
+        assert_eq!(a.metrics.completed, b.metrics.completed, "{}", a.name);
+        assert_eq!(a.metrics.rejected, b.metrics.rejected, "{}", a.name);
+    }
 }

@@ -9,12 +9,22 @@
 //! An "event" here is one engine iteration (step-complete) of one group;
 //! arrivals and wakes add a few percent on top.
 //!
+//! Also measures the two-stage optimizer's stage costs: the analytical
+//! screen of the full legacy (B_short × γ) grid (stage A, closed form)
+//! against one simulate-refine cell (stage B, the event engine on the
+//! same 10k-request trace) — the ratio is why the search screens wide
+//! and refines narrow.
+//!
 //! Run `cargo bench --bench bench_sim_engine -- --record` to write the
 //! headline numbers to `BENCH_sim_engine.json` at the repo root
 //! (`--quick` shrinks the sample count for smoke runs).
 use wattlaw::benchkit::{black_box, BenchConfig, BenchGroup, BenchStats};
 use wattlaw::fleet::profile::{GpuProfile, ManualProfile};
+use wattlaw::fleet::topology::Topology;
+use wattlaw::power::Gpu;
 use wattlaw::router::context::ContextRouter;
+use wattlaw::scenario::optimize::{self, OptimizeConfig};
+use wattlaw::scenario::ScenarioSpec;
 use wattlaw::sim::dispatch::{JoinShortestQueue, RoundRobin};
 use wattlaw::sim::{
     simulate_topology_opts, EngineOptions, GroupSimConfig, StateMode,
@@ -129,6 +139,33 @@ fn main() {
         black_box(r.output_tokens)
     });
 
+    // Optimizer stage costs on the same workload: stage A screens the
+    // full legacy grid analytically; stage B replays one refined cell
+    // through the event engine.
+    let workload = wattlaw::workload::cdf::azure_conversations();
+    let opt_cfg = OptimizeConfig {
+        gpus: vec![Gpu::H100],
+        gen: gen.clone(),
+        groups: 16,
+        ..Default::default()
+    };
+    let mut screened_cells = 0usize;
+    g.bench("optimize_stage_a_screen(legacy grid)", || {
+        let cells = optimize::screen(&workload, &opt_cfg);
+        screened_cells = cells.len();
+        black_box(cells.len())
+    });
+    let refine_spec = ScenarioSpec::new(
+        Topology::FleetOpt { b_short: 4096, short_ctx: 4096, gamma: 2.0 },
+        Gpu::H100,
+        workload.clone(),
+        gen.clone(),
+    )
+    .with_groups(16);
+    g.bench("optimize_stage_b_refine(one cell)", || {
+        black_box(refine_spec.simulate_trace(&trace, true).output_tokens)
+    });
+
     let stats = g.finish();
     assert_eq!(steps_seq, steps_par, "parallel fast path must replay exactly");
     assert_eq!(
@@ -157,6 +194,17 @@ fn main() {
     println!(
         "incremental-state speedup over per-arrival snapshots (jsq): {:.2}x",
         incr_speedup
+    );
+    let screen_us_per_cell =
+        stats[4].mean_ns / 1e3 / screened_cells.max(1) as f64;
+    let refine_vs_screen_cell =
+        stats[5].mean_ns / (stats[4].mean_ns / screened_cells.max(1) as f64);
+    println!(
+        "optimizer: stage A {:.1} µs/analytical cell ({screened_cells} cells), \
+         stage B {:.1} ms/refined cell — refine/screen cell ratio {:.0}x",
+        screen_us_per_cell,
+        stats[5].mean_ns / 1e6,
+        refine_vs_screen_cell,
     );
 
     if record {
@@ -199,6 +247,21 @@ fn main() {
             ev_per_s(steps_jsq_rebuild, &stats[2]),
             ev_per_s(steps_jsq_incr, &stats[3]),
             incr_speedup
+        ));
+        j.push_str(&format!(
+            "  \"optimizer\": {{\n    \
+             \"stage_a_screen_ms\": {:.3},\n    \
+             \"stage_a_cells\": {screened_cells},\n    \
+             \"stage_a_us_per_cell\": {screen_us_per_cell:.2},\n    \
+             \"stage_b_refine_cell_ms\": {:.2},\n    \
+             \"refine_to_screen_cell_ratio\": {refine_vs_screen_cell:.0},\n    \
+             \"note\": \"stage A = closed-form screen of the legacy \
+             B_short x gamma grid (scenario::optimize::screen, H100); \
+             stage B = one ScenarioSpec::simulate cell on the 10k-request \
+             trace, 16 groups — the cost asymmetry that justifies \
+             screen-wide-refine-narrow\"\n  }},\n",
+            stats[4].mean_ns / 1e6,
+            stats[5].mean_ns / 1e6,
         ));
         j.push_str(
             "  \"recorded_by\": \"cargo bench --bench bench_sim_engine -- \

@@ -7,6 +7,10 @@
 //!               --topo homo|pool|fleetopt [--b-short N] [--gamma G]
 //!               [--lambda R] [--lbar window|traffic] [--acct pergpu|pergroup]
 //! wattlaw sweep --trace azure --gpu h100           FleetOpt (B_short, γ*) sweep
+//! wattlaw optimize [--trace azure] [--gpu h100] [--lambda R] [--duration S]
+//!                  [--groups N] [--b-short N] [--gamma G] [--dispatch NAME]
+//!                  [--top-k K] [--slo-ttft S] [--workers N]
+//!                  two-stage search: analytical screen, simulated refine
 //! wattlaw power [--gpu b200]                        P(b) curve
 //! wattlaw simulate [--trace azure] [--lambda R] [--duration S] [--groups N]
 //!                  [--dispatch rr|jsq|least-kv|power]
@@ -18,6 +22,10 @@
 //! wattlaw validate [--artifacts DIR]                golden numerics check
 //! wattlaw report                                    paper-vs-measured summary
 //! ```
+//!
+//! `tables`, `sweep`, `optimize`, `simulate sweep` and `report` accept
+//! `--format table|csv|json` (default `table`): every result surface
+//! emits through the typed results layer ([`crate::results`]).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -29,6 +37,7 @@ use crate::fleet::pool::LBarPolicy;
 use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
 use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
+use crate::results::{self, OutputFormat};
 use crate::workload::cdf::{
     agent_heavy, azure_conversations, lmsys_chat, WorkloadTrace,
 };
@@ -46,10 +55,10 @@ pub struct Args {
 }
 
 /// Keys that are value-taking options; everything else with `--` is a flag.
-const VALUE_KEYS: [&str; 17] = [
+const VALUE_KEYS: [&str; 19] = [
     "lbar", "trace", "gpu", "topo", "b-short", "gamma", "lambda", "acct",
     "requests", "artifacts", "duration", "groups", "dispatch", "router",
-    "spill", "slo-ttft", "workers",
+    "spill", "slo-ttft", "workers", "format", "top-k",
 ];
 
 pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Args {
@@ -120,6 +129,16 @@ impl Args {
             .map(PathBuf::from)
             .unwrap_or_else(crate::runtime::default_artifacts_dir)
     }
+
+    /// The `--format` option (default `table`); errors on unknown names.
+    pub fn format(&self) -> crate::Result<OutputFormat> {
+        match self.opt("format") {
+            None => Ok(OutputFormat::Table),
+            Some(s) => OutputFormat::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("unknown --format '{s}' (table|csv|json)")
+            }),
+        }
+    }
 }
 
 /// Entry point for `main` — returns the process exit code.
@@ -129,12 +148,13 @@ pub fn run<I: Iterator<Item = String>>(argv: I) -> crate::Result<i32> {
         "tables" => cmd_tables(&args),
         "fleet" => cmd_fleet(&args),
         "sweep" => cmd_sweep(&args),
+        "optimize" => cmd_optimize(&args),
         "power" => cmd_power(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "validate" => cmd_validate(&args),
         "report" => {
-            println!("{}", crate::report::paper_vs_measured());
+            println!("{}", crate::report::rowset().emit(args.format()?));
             Ok(0)
         }
         "" | "help" | "--help" | "-h" => {
@@ -156,7 +176,13 @@ commands:
   tables     regenerate paper tables/figures (--all, --t1..--t7, --law,
              --power-fig, --dispatch-fig, --independence; --lbar window|traffic)
   fleet      analyze one fleet configuration (--trace --gpu --topo ...)
-  sweep      FleetOpt (B_short, γ*) optimization sweep
+  sweep      FleetOpt (B_short, γ*) closed-form sweep (legacy, stage A only)
+  optimize   two-stage FleetOpt search over scenario space: stage A screens
+             the B_short x gamma x GPU-generation grid with the closed-form
+             planner, stage B replays the top-k cells (x dispatch policies)
+             through the event-driven simulator and re-ranks by measured
+             tok/W with the SLO verdict as a hard filter
+             (--gpu restricts the generation axis, --top-k, --slo-ttft)
   power      print a GPU's P(b) curve (--gpu)
   simulate   event-driven fleet simulation vs analytics
              (--dispatch rr|jsq|least-kv|power,
@@ -168,47 +194,69 @@ commands:
   serve      serve a trace through the real AOT model (2-pool demo)
   validate   check runtime numerics against the JAX golden trace
   report     paper-vs-measured summary (EXPERIMENTS.md §input)
+
+output:
+  tables / sweep / optimize / simulate sweep / report take
+  --format table|csv|json (typed results layer; CSV is pure data for
+  plotting, JSON carries the full schema with units)
 ";
 
 fn cmd_tables(args: &Args) -> crate::Result<i32> {
     use crate::tables;
+    let format = args.format()?;
     let lbar = args.lbar();
     let all = args.flag("all") || args.flags.is_empty();
-    let mut out = String::new();
-    if all || args.flag("t1") {
-        out.push_str(&tables::t1::generate());
+
+    if format == OutputFormat::Table {
+        // Human path: tables plus the figures' ASCII plots.
+        let mut out = String::new();
+        if all || args.flag("t1") {
+            out.push_str(&tables::t1::generate());
+        }
+        if all || args.flag("t2") {
+            out.push_str(&tables::t2::generate());
+        }
+        if all || args.flag("t3") {
+            out.push_str(&tables::t3::generate(lbar));
+        }
+        if all || args.flag("t4") {
+            out.push_str(&tables::t4::generate());
+        }
+        if all || args.flag("t5") {
+            out.push_str(&tables::t5::generate());
+        }
+        if all || args.flag("t6") {
+            out.push_str(&tables::t6::generate());
+        }
+        if all || args.flag("t7") {
+            out.push_str(&tables::t7::generate());
+        }
+        if all || args.flag("law") {
+            out.push_str(&tables::law_fig::generate());
+        }
+        if all || args.flag("power-fig") {
+            out.push_str(&tables::power_fig::generate());
+        }
+        if all || args.flag("dispatch-fig") {
+            out.push_str(&tables::dispatch_fig::generate());
+        }
+        if all || args.flag("independence") {
+            out.push_str(&tables::independence::generate(lbar));
+        }
+        println!("{out}");
+    } else {
+        // Machine path: the same artifacts through the typed rowsets.
+        let mut sets = Vec::new();
+        for flag in tables::ALL_FLAGS {
+            if all || args.flag(flag) {
+                sets.extend(
+                    tables::rowsets_for(flag, lbar)
+                        .expect("every ALL_FLAGS entry resolves"),
+                );
+            }
+        }
+        println!("{}", results::emit_all(&sets, format));
     }
-    if all || args.flag("t2") {
-        out.push_str(&tables::t2::generate());
-    }
-    if all || args.flag("t3") {
-        out.push_str(&tables::t3::generate(lbar));
-    }
-    if all || args.flag("t4") {
-        out.push_str(&tables::t4::generate());
-    }
-    if all || args.flag("t5") {
-        out.push_str(&tables::t5::generate());
-    }
-    if all || args.flag("t6") {
-        out.push_str(&tables::t6::generate());
-    }
-    if all || args.flag("t7") {
-        out.push_str(&tables::t7::generate());
-    }
-    if all || args.flag("law") {
-        out.push_str(&tables::law_fig::generate());
-    }
-    if all || args.flag("power-fig") {
-        out.push_str(&tables::power_fig::generate());
-    }
-    if all || args.flag("dispatch-fig") {
-        out.push_str(&tables::dispatch_fig::generate());
-    }
-    if all || args.flag("independence") {
-        out.push_str(&tables::independence::generate(lbar));
-    }
-    println!("{out}");
     Ok(0)
 }
 
@@ -267,10 +315,13 @@ fn cmd_fleet(args: &Args) -> crate::Result<i32> {
 }
 
 fn cmd_sweep(args: &Args) -> crate::Result<i32> {
+    use crate::results::{Cell, Column, RowSet};
+    // Validate the output format before doing any work.
+    let format = args.format()?;
     let trace = args.trace();
     let profile: Arc<dyn GpuProfile> =
         Arc::new(ManualProfile::for_gpu(args.gpu()));
-    let results = optimizer::sweep_fleetopt(
+    let ranked = optimizer::sweep_fleetopt(
         &trace,
         args.opt_f64("lambda", 1000.0),
         profile,
@@ -279,16 +330,121 @@ fn cmd_sweep(args: &Args) -> crate::Result<i32> {
         0.5,
         args.acct(),
     );
-    println!("\n== FleetOpt sweep: {} on {} ==", trace.name, args.gpu().spec().name);
-    println!("{:>8} {:>6} {:>9} {:>9}", "B_short", "γ", "tok/W", "groups");
-    for r in results.iter().take(12) {
-        println!(
-            "{:>8} {:>6} {:>9.2} {:>9}",
-            r.b_short, r.gamma, r.report.tok_per_watt.0, r.report.total_groups
-        );
+    let mut rs = RowSet::new(
+        format!(
+            "FleetOpt (B_short, γ*) closed-form sweep — {} on {}",
+            trace.name,
+            args.gpu().spec().name
+        ),
+        vec![
+            Column::int("B_short").with_unit("tok"),
+            Column::float("gamma"),
+            Column::float("tok/W").with_unit("tok/J"),
+            Column::int("groups"),
+        ],
+    );
+    for r in &ranked {
+        rs.push(vec![
+            Cell::int(r.b_short as i64),
+            Cell::float(r.gamma),
+            Cell::float(r.report.tok_per_watt.0)
+                .shown(format!("{:.2}", r.report.tok_per_watt.0)),
+            Cell::int(r.report.total_groups as i64),
+        ]);
     }
-    let best = &results[0];
-    println!("γ* = {} at B_short = {}", best.gamma, best.b_short);
+    let best = &ranked[0];
+    rs.note(format!("γ* = {} at B_short = {}", best.gamma, best.b_short));
+    rs.note(
+        "closed-form only (legacy stage A); `wattlaw optimize` additionally \
+         validates the winner against the event-driven simulator and the SLO",
+    );
+    println!("{}", rs.emit(format));
+    Ok(0)
+}
+
+/// `optimize` — the scenario-native two-stage FleetOpt search: stage A
+/// screens the B_short × γ × GPU-generation grid with the closed-form
+/// planner, stage B replays the analytical top-k (expanded across the
+/// dispatch axis) through the event-driven simulator on worker threads
+/// and re-ranks by measured tok/W under the SLO hard filter.
+fn cmd_optimize(args: &Args) -> crate::Result<i32> {
+    use crate::scenario::optimize::{self, OptimizeConfig};
+    use crate::scenario::SloTargets;
+    use crate::sim::dispatch;
+    use crate::workload::synth::GenConfig;
+
+    // Validate the output format before the (expensive) search runs.
+    let format = args.format()?;
+    let trace = args.trace();
+    let defaults = OptimizeConfig::default();
+
+    let gpus = match args.opt("gpu") {
+        Some(g) => vec![Gpu::parse(g)
+            .ok_or_else(|| anyhow::anyhow!("unknown GPU '{g}'"))?],
+        None => defaults.gpus.clone(),
+    };
+    let b_shorts = match args.opt("b-short") {
+        Some(b) => vec![b
+            .parse::<u32>()
+            .map_err(|_| anyhow::anyhow!("bad --b-short '{b}'"))?],
+        None => defaults.b_shorts.clone(),
+    };
+    let gammas = match args.opt("gamma") {
+        Some(g) => {
+            let gamma: f64 =
+                g.parse().map_err(|_| anyhow::anyhow!("bad --gamma '{g}'"))?;
+            anyhow::ensure!(gamma >= 1.0, "--gamma must be >= 1 (got {gamma})");
+            vec![gamma]
+        }
+        None => defaults.gammas.clone(),
+    };
+    let dispatches = match args.opt("dispatch") {
+        Some(d) => {
+            anyhow::ensure!(
+                dispatch::parse(d).is_some(),
+                "unknown dispatch policy '{d}' (rr|jsq|least-kv|power)"
+            );
+            vec![d.to_string()]
+        }
+        None => defaults.dispatches.clone(),
+    };
+
+    let cfg = OptimizeConfig {
+        gpus,
+        b_shorts,
+        gammas,
+        dispatches,
+        gen: GenConfig {
+            lambda_rps: args.opt_f64("lambda", 1000.0),
+            duration_s: args.opt_f64("duration", 1.0),
+            seed: 42,
+            ..defaults.gen.clone()
+        },
+        groups: args.opt_u32("groups", 8).max(2),
+        slo: SloTargets { ttft_p99_s: args.opt_f64("slo-ttft", 0.5) },
+        lbar: args.lbar(),
+        acct: args.acct(),
+        top_k: args.opt_u32("top-k", 4).max(1) as usize,
+        ..defaults
+    };
+
+    let default_workers = std::thread::available_parallelism()
+        .map(|n| n.get() as u32)
+        .unwrap_or(1);
+    let workers = args.opt_u32("workers", default_workers).max(1) as usize;
+    eprintln!(
+        "optimize: screening {} analytical cells ({} GPUs x {} B_short x {} \
+         gamma), refining top {} x {} dispatch on {} worker threads…",
+        cfg.gpus.len() * cfg.b_shorts.len() * cfg.gammas.len(),
+        cfg.gpus.len(),
+        cfg.b_shorts.len(),
+        cfg.gammas.len(),
+        cfg.top_k,
+        cfg.dispatches.len(),
+        workers,
+    );
+    let report = optimize::optimize(&trace, &cfg, workers);
+    println!("{}", report.rowset().emit(format));
     Ok(0)
 }
 
@@ -430,6 +586,8 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
     use crate::sim::dispatch;
     use crate::workload::synth::GenConfig;
 
+    // Validate the output format before the grid runs.
+    let format = args.format()?;
     let trace = args.trace();
     let defaults = SweepConfig::default();
 
@@ -465,6 +623,7 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
         b_shorts,
         spill: Some(spill),
         slo: SloTargets { ttft_p99_s: args.opt_f64("slo-ttft", 0.5) },
+        acct: args.acct(),
     };
 
     let specs = sweep::grid(&trace, &cfg);
@@ -480,7 +639,8 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
         workers.min(specs.len().max(1)),
     );
     let outcomes = sweep::run(&specs, workers);
-    println!("{}", sweep::render(&outcomes, &cfg));
+    let records = sweep::records(&specs, &outcomes, cfg.acct);
+    println!("{}", sweep::rowset(&records, &cfg).emit(format));
     Ok(0)
 }
 
@@ -619,6 +779,60 @@ mod tests {
         // Option values are not mistaken for subcommands.
         let b = args("simulate --dispatch jsq");
         assert_eq!(b.subcommand, None);
+    }
+
+    #[test]
+    fn format_option_parses_and_rejects_unknown() {
+        assert_eq!(args("report").format().unwrap(), OutputFormat::Table);
+        assert_eq!(
+            args("report --format csv").format().unwrap(),
+            OutputFormat::Csv
+        );
+        assert_eq!(
+            args("report --format json").format().unwrap(),
+            OutputFormat::Json
+        );
+        assert!(args("report --format yaml").format().is_err());
+        assert!(run(
+            "report --format yaml".split_whitespace().map(String::from)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn format_aware_commands_emit_machine_formats() {
+        // Cheap surfaces only (tables t7 is closed-form; report is fast).
+        for cmd in ["tables --t7 --format csv", "tables --t7 --format json",
+                    "report --format json", "sweep --format csv"] {
+            assert_eq!(
+                run(cmd.split_whitespace().map(String::from)).unwrap(),
+                0,
+                "{cmd}"
+            );
+        }
+    }
+
+    #[test]
+    fn optimize_runs_two_stage_search_end_to_end() {
+        let code = run(
+            "optimize --gpu h100 --lambda 60 --duration 0.5 --groups 2 \
+             --b-short 4096 --dispatch rr --top-k 2 --workers 2 \
+             --slo-ttft 1000 --format json"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
+        assert!(run(
+            "optimize --gpu bogus".split_whitespace().map(String::from)
+        )
+        .is_err());
+        assert!(run(
+            "optimize --gamma 0.5 --gpu h100"
+                .split_whitespace()
+                .map(String::from)
+        )
+        .is_err());
     }
 
     #[test]

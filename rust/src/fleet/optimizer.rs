@@ -1,14 +1,24 @@
-//! Topology optimization: sweep the split boundary `B_short` and the
-//! FleetOpt overflow/compression factor γ to maximize fleet tok/W — the
-//! γ* search of [Chen et al. 2026a] and the §10.3 "multi-pool" extension
-//! (K ≥ 3 context-tiered pools).
+//! Topology optimization — the *legacy* closed-form API: sweep the
+//! split boundary `B_short` and the FleetOpt overflow/compression
+//! factor γ to maximize fleet tok/W (the γ* search of
+//! [Chen et al. 2026a]), plus the §10.3 "multi-pool" extension (K ≥ 3
+//! context-tiered pools).
+//!
+//! Since the scenario-native optimizer landed
+//! ([`crate::scenario::optimize`], `wattlaw optimize`), this module is
+//! a thin wrapper kept for source compatibility: [`sweep_fleetopt`]
+//! delegates to the new search's stage-A screen
+//! ([`screen_closed_form`](crate::scenario::optimize::screen_closed_form))
+//! over the same grids, so both paths rank by identical arithmetic —
+//! but it never validates its winner dynamically. Prefer the two-stage
+//! search, which replays the analytical top-k through the event-driven
+//! simulator and refuses SLO-violating winners.
 
 use std::sync::Arc;
 
 use super::analysis::{fleet_tpw_analysis, FleetReport};
 use super::pool::{LBarPolicy, PoolPlan};
 use super::profile::{GpuProfile, PowerAccounting};
-use super::topology::Topology;
 #[cfg(test)]
 use super::topology::LONG_CTX;
 use crate::workload::WorkloadTrace;
@@ -21,11 +31,14 @@ pub struct OptResult {
     pub report: FleetReport,
 }
 
-/// Default sweep grids (powers of two around the paper's operating points).
+/// Default sweep grids (powers of two around the paper's operating
+/// points). Also the default axes of the scenario-native optimizer.
 pub const B_SHORT_GRID: [u32; 6] = [1024, 1536, 2048, 4096, 8192, 16384];
 pub const GAMMA_GRID: [f64; 5] = [1.0, 1.5, 2.0, 3.0, 4.0];
 
-/// Exhaustive sweep; returns every evaluated point sorted best-first.
+/// Exhaustive closed-form sweep; returns every evaluated point sorted
+/// best-first. Thin wrapper over the scenario optimizer's stage-A
+/// screen on the legacy grids.
 pub fn sweep_fleetopt(
     trace: &WorkloadTrace,
     lambda_rps: f64,
@@ -35,28 +48,17 @@ pub fn sweep_fleetopt(
     ttft_slo_s: f64,
     acct: PowerAccounting,
 ) -> Vec<OptResult> {
-    let mut out = Vec::new();
-    for &b_short in &B_SHORT_GRID {
-        for &gamma in &GAMMA_GRID {
-            let topo = Topology::FleetOpt {
-                b_short,
-                short_ctx: b_short.max(1024),
-                gamma,
-            };
-            let pools =
-                topo.pools(trace, lambda_rps, profile.clone(), None, lbar, rho, ttft_slo_s);
-            let report = fleet_tpw_analysis(&pools, acct);
-            out.push(OptResult { b_short, gamma, report });
-        }
-    }
-    out.sort_by(|a, b| {
-        b.report
-            .tok_per_watt
-            .0
-            .partial_cmp(&a.report.tok_per_watt.0)
-            .unwrap()
-    });
-    out
+    crate::scenario::optimize::screen_closed_form(
+        trace,
+        lambda_rps,
+        profile,
+        &B_SHORT_GRID,
+        &GAMMA_GRID,
+        lbar,
+        rho,
+        ttft_slo_s,
+        acct,
+    )
 }
 
 /// The optimal (B_short, γ*) point.

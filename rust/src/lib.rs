@@ -15,9 +15,12 @@
 //!   power-aware) and a parallel per-group fast path ([`sim`]) — a
 //!   unified scenario layer feeding both the analytical planner and the
 //!   simulator from one spec, with multi-threaded
-//!   dispatch × topology × context-window sweeps ([`scenario`]) — and
-//!   per-GPU energy metering driven by the calibrated logistic power
-//!   model ([`power`]).
+//!   dispatch × topology × context-window sweeps and a two-stage
+//!   (analytical screen → simulated refine) FleetOpt optimizer
+//!   ([`scenario`]) — a typed results subsystem every output surface
+//!   emits through, with CSV/JSON alongside the text tables
+//!   ([`results`]) — and per-GPU energy metering driven by the
+//!   calibrated logistic power model ([`power`]).
 //! * **L2/L1 (build-time Python)** — a tiny Llama-style decoder whose
 //!   decode attention is a Pallas kernel, AOT-lowered to HLO text and
 //!   executed from Rust through PJRT ([`runtime`]). Python never runs on
@@ -41,6 +44,7 @@ pub mod model;
 pub mod power;
 pub mod queueing;
 pub mod report;
+pub mod results;
 pub mod roofline;
 pub mod router;
 pub mod runtime;

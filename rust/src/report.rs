@@ -3,7 +3,8 @@
 //! paper's number, ours, and the relative delta.
 
 use crate::fleet::pool::LBarPolicy;
-use crate::tables::render::{f2, Table};
+use crate::results::{Cell, Column, RowSet};
+use crate::tables::render::f2;
 use crate::tables::{independence, t1, t2};
 use crate::tokeconomy::law;
 
@@ -126,25 +127,38 @@ pub fn claims() -> Vec<Claim> {
     out
 }
 
-/// Render the claim table (the `wattlaw report` command).
-pub fn paper_vs_measured() -> String {
-    let mut t = Table::new(
+/// The typed rowset behind the claim table: paper and measured values
+/// as raw floats, the relative error in percent.
+pub fn rowset() -> RowSet {
+    let mut rs = RowSet::new(
         "Paper vs measured — headline claims",
-        &["claim", "description", "paper", "ours", "rel err"],
+        vec![
+            Column::str("claim"),
+            Column::str("description"),
+            Column::float("paper"),
+            Column::float("ours"),
+            Column::float("rel err").with_unit("%"),
+        ],
     );
     for c in claims() {
-        t.row(vec![
-            c.id.to_string(),
-            c.description.to_string(),
-            f2(c.paper),
-            f2(c.ours),
-            format!("{:.1}%", c.rel_err() * 100.0),
+        rs.push(vec![
+            Cell::str(c.id),
+            Cell::str(c.description),
+            Cell::float(c.paper).shown(f2(c.paper)),
+            Cell::float(c.ours).shown(f2(c.ours)),
+            Cell::float(c.rel_err() * 100.0)
+                .shown(format!("{:.1}%", c.rel_err() * 100.0)),
         ]);
     }
-    t.note("calibrated claims (T1, Gen, Law) must sit within a few percent; \
+    rs.note("calibrated claims (T1, Gen, Law) must sit within a few percent; \
             structural claims (Ind/*) within ~15%; T2/405B is a regime-change \
             ratio where 'large' is the reproduction target");
-    t.render()
+    rs
+}
+
+/// Render the claim table (the `wattlaw report` command).
+pub fn paper_vs_measured() -> String {
+    rowset().to_text()
 }
 
 #[cfg(test)]
@@ -181,5 +195,16 @@ mod tests {
         let s = paper_vs_measured();
         assert!(s.contains("T1/H100@4K"));
         assert!(s.contains("rel err"));
+    }
+
+    #[test]
+    fn claim_rowset_is_machine_readable() {
+        let rs = rowset();
+        assert_eq!(rs.rows().len(), claims().len());
+        let doc = crate::runtime::json::parse(&rs.to_json()).unwrap();
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        // Raw values, not the 2-dp display strings.
+        assert_eq!(rows[0].get("paper").unwrap().as_f64(), Some(17.6));
+        assert!(rs.to_csv().starts_with("claim,description,paper,ours,rel err (%)\n"));
     }
 }

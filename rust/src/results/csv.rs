@@ -1,0 +1,172 @@
+//! CSV emission (and a small RFC-4180-style parser for round-trip
+//! verification) for [`RowSet`]s.
+//!
+//! Policy, golden-tested in `tests/results_format.rs`:
+//!
+//! * one header row, columns in schema order, units in parentheses
+//!   (`tok/W (tok/J)`);
+//! * fields are quoted only when they contain a comma, quote, CR or LF;
+//!   embedded quotes double;
+//! * floats emit Rust's shortest round-trippable `Display` form;
+//! * NaN/±inf and [`Value::Missing`] emit an **empty field** — absent
+//!   data stays absent instead of becoming a sentinel number;
+//! * no title and no notes: the CSV is pure data for plotting (titles
+//!   reappear as `# …` comment lines only when several tables share one
+//!   document via [`super::emit_all`]).
+
+use super::{Cell, RowSet, Value};
+
+/// Emit the rowset as CSV (header + data rows, `\n` line endings).
+pub fn to_csv(rs: &RowSet) -> String {
+    let mut out = String::new();
+    let hdr: Vec<String> =
+        rs.columns().iter().map(|c| escape(&c.header())).collect();
+    out.push_str(&hdr.join(","));
+    out.push('\n');
+    for row in rs.rows() {
+        let fields: Vec<String> = row.iter().map(field).collect();
+        out.push_str(&fields.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+fn field(c: &Cell) -> String {
+    match &c.value {
+        Value::Str(s) => escape(s),
+        Value::Int(i) => i.to_string(),
+        Value::Float(x) if x.is_finite() => format!("{x}"),
+        Value::Float(_) => String::new(),
+        Value::Bool(b) => b.to_string(),
+        Value::Missing => String::new(),
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(['"', ',', '\n', '\r']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Parse CSV text back into rows of string fields — the inverse of
+/// [`to_csv`] (quoted fields unescape, empty fields come back as empty
+/// strings). Exists so emitters can be property-tested against a real
+/// parser rather than substring checks.
+pub fn parse_csv(text: &str) -> crate::Result<Vec<Vec<String>>> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    let mut quoted = false; // current field started with a quote
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                field.push(c);
+            }
+            continue;
+        }
+        match c {
+            '"' if field.is_empty() && !quoted => {
+                in_quotes = true;
+                quoted = true;
+            }
+            ',' => {
+                row.push(std::mem::take(&mut field));
+                quoted = false;
+            }
+            '\n' => {
+                row.push(std::mem::take(&mut field));
+                rows.push(std::mem::take(&mut row));
+                quoted = false;
+            }
+            '\r' => {}
+            _ => field.push(c),
+        }
+    }
+    if in_quotes {
+        anyhow::bail!("unterminated quoted CSV field");
+    }
+    if !field.is_empty() || !row.is_empty() || quoted {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Column, RowSet};
+    use super::*;
+
+    #[test]
+    fn golden_small_table() {
+        let mut rs = RowSet::new(
+            "ignored in csv",
+            vec![
+                Column::str("name"),
+                Column::float("tok/W").with_unit("tok/J"),
+                Column::int("groups"),
+            ],
+        );
+        rs.push(vec![Cell::str("a,b"), Cell::float(17.6), Cell::int(42)]);
+        rs.push(vec![
+            Cell::str("say \"hi\""),
+            Cell::float(f64::NAN),
+            Cell::missing(),
+        ]);
+        rs.note("notes are not CSV data");
+        assert_eq!(
+            rs.to_csv(),
+            "name,tok/W (tok/J),groups\n\
+             \"a,b\",17.6,42\n\
+             \"say \"\"hi\"\"\",,\n"
+        );
+    }
+
+    #[test]
+    fn display_override_never_leaks_into_csv() {
+        let mut rs = RowSet::new("t", vec![Column::float("x")]);
+        rs.push(vec![Cell::float(1.23456789).shown("1.2")]);
+        assert_eq!(rs.to_csv(), "x\n1.23456789\n");
+    }
+
+    #[test]
+    fn parser_handles_quotes_commas_newlines() {
+        let rows = parse_csv("a,\"b,c\",\"d\"\"e\"\nf,\"g\nh\",\n").unwrap();
+        assert_eq!(
+            rows,
+            vec![
+                vec!["a".to_string(), "b,c".into(), "d\"e".into()],
+                vec!["f".to_string(), "g\nh".into(), "".into()],
+            ]
+        );
+    }
+
+    #[test]
+    fn parser_rejects_unterminated_quote() {
+        assert!(parse_csv("a,\"bc\n").is_err());
+    }
+
+    #[test]
+    fn crlf_tolerated() {
+        let rows = parse_csv("a,b\r\nc,d\r\n").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], vec!["c".to_string(), "d".into()]);
+    }
+
+    #[test]
+    fn empty_quoted_field_survives() {
+        let rows = parse_csv("\"\",x\n").unwrap();
+        assert_eq!(rows, vec![vec!["".to_string(), "x".into()]]);
+    }
+}

@@ -1,0 +1,164 @@
+//! JSON emission for [`RowSet`]s: the full document — title, column
+//! schema with units, typed rows, notes — as one object.
+//!
+//! ```json
+//! {
+//!   "title": "…",
+//!   "columns": [ { "name": "tok/W", "unit": "tok/J" }, … ],
+//!   "rows": [ { "tok/W": 17.6, … }, … ],
+//!   "notes": [ "…" ]
+//! }
+//! ```
+//!
+//! Rows are keyed by column *name* (without the unit). Non-finite floats
+//! and [`Value::Missing`] emit `null` (JSON has no NaN). All non-ASCII
+//! and control characters are `\uXXXX`-escaped, so the output is plain
+//! ASCII and parses with the crate's own minimal reader
+//! ([`crate::runtime::json::parse`]) — the round-trip the golden tests
+//! lean on.
+
+use super::{Cell, RowSet, Value};
+
+/// Emit the rowset as a pretty-printed JSON object.
+pub fn to_json(rs: &RowSet) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"title\": {},\n", quote(&rs.title)));
+
+    out.push_str("  \"columns\": [\n");
+    let ncols = rs.columns().len();
+    for (i, c) in rs.columns().iter().enumerate() {
+        let unit = match &c.unit {
+            Some(u) => quote(u),
+            None => "null".into(),
+        };
+        out.push_str(&format!(
+            "    {{ \"name\": {}, \"unit\": {} }}{}\n",
+            quote(&c.name),
+            unit,
+            if i + 1 < ncols { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+
+    out.push_str("  \"rows\": [\n");
+    let nrows = rs.rows().len();
+    for (ri, row) in rs.rows().iter().enumerate() {
+        let fields: Vec<String> = row
+            .iter()
+            .zip(rs.columns())
+            .map(|(cell, col)| format!("{}: {}", quote(&col.name), value(cell)))
+            .collect();
+        out.push_str(&format!(
+            "    {{ {} }}{}\n",
+            fields.join(", "),
+            if ri + 1 < nrows { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+
+    let notes: Vec<String> = rs.notes().iter().map(|n| quote(n)).collect();
+    out.push_str(&format!("  \"notes\": [{}]\n", notes.join(", ")));
+    out.push('}');
+    out
+}
+
+fn value(c: &Cell) -> String {
+    match &c.value {
+        Value::Str(s) => quote(s),
+        Value::Int(i) => i.to_string(),
+        Value::Float(x) if x.is_finite() => format!("{x}"),
+        Value::Float(_) | Value::Missing => "null".into(),
+        Value::Bool(b) => b.to_string(),
+    }
+}
+
+/// JSON string literal with ASCII-only output (control and non-ASCII
+/// characters become `\uXXXX`, astral characters surrogate pairs).
+pub fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 || (c as u32) >= 0x7f => {
+                let mut buf = [0u16; 2];
+                for u in c.encode_utf16(&mut buf) {
+                    out.push_str(&format!("\\u{u:04x}"));
+                }
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Column, RowSet};
+    use super::*;
+    use crate::runtime::json::{parse, Json};
+
+    fn demo() -> RowSet {
+        let mut rs = RowSet::new(
+            "Sweep — λ=1000, γ=2",
+            vec![
+                Column::str("topology"),
+                Column::float("tok/W").with_unit("tok/J"),
+                Column::int("groups"),
+                Column::str("slo"),
+            ],
+        );
+        rs.push(vec![
+            Cell::str("FleetOpt (4K/γ=2)"),
+            Cell::float(3.75).shown("3.8"),
+            Cell::int(12),
+            Cell::str("pass"),
+        ]);
+        rs.push(vec![
+            Cell::str("Homo 64K"),
+            Cell::float(f64::NAN),
+            Cell::missing(),
+            Cell::str("MISS"),
+        ]);
+        rs.note("note with \"quotes\" and γ");
+        rs
+    }
+
+    #[test]
+    fn output_is_ascii_and_self_parseable() {
+        let j = demo().to_json();
+        assert!(j.is_ascii(), "non-ASCII must be \\u-escaped");
+        let doc = parse(&j).unwrap();
+        assert_eq!(
+            doc.get("title").unwrap().as_str(),
+            Some("Sweep — λ=1000, γ=2")
+        );
+        let cols = doc.get("columns").unwrap().as_arr().unwrap();
+        assert_eq!(cols.len(), 4);
+        assert_eq!(cols[1].get("unit").unwrap().as_str(), Some("tok/J"));
+        assert_eq!(cols[0].get("unit"), Some(&Json::Null));
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        // Raw value, not the display override.
+        assert_eq!(rows[0].get("tok/W").unwrap().as_f64(), Some(3.75));
+        assert_eq!(rows[0].get("groups").unwrap().as_f64(), Some(12.0));
+        // NaN and missing both land as null.
+        assert_eq!(rows[1].get("tok/W"), Some(&Json::Null));
+        assert_eq!(rows[1].get("groups"), Some(&Json::Null));
+        let notes = doc.get("notes").unwrap().as_arr().unwrap();
+        assert_eq!(notes[0].as_str(), Some("note with \"quotes\" and γ"));
+    }
+
+    #[test]
+    fn quote_escapes_controls_and_astral() {
+        assert_eq!(quote("a\nb"), "\"a\\nb\"");
+        assert_eq!(quote("\r"), "\"\\u000d\"");
+        assert_eq!(quote("γ"), "\"\\u03b3\"");
+        // Astral chars become surrogate pairs.
+        assert_eq!(quote("𝄞"), "\"\\ud834\\udd1e\"");
+    }
+}

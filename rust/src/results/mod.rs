@@ -1,0 +1,375 @@
+//! The typed results layer: one `RowSet` per output surface, three
+//! emitters.
+//!
+//! Every result the crate renders — the paper tables t1–t7, the scenario
+//! sweep's analyze-vs-simulate consistency records, the FleetOpt
+//! optimizer's ranking, the `report` claim checks — is a table: a column
+//! schema (names, units, alignment) over typed cell values. Before this
+//! module each surface built its own strings, so nothing was machine
+//! readable; a [`RowSet`] now carries the values and the presentation
+//! separately:
+//!
+//! * [`RowSet::to_text`] — the aligned markdown table humans read
+//!   (byte-compatible with the old `tables::render::Table` output).
+//! * [`RowSet::to_csv`] ([`csv`]) — pure data, one header row with units,
+//!   full-precision floats, for plotting.
+//! * [`RowSet::to_json`] ([`json`]) — the same schema and rows as a JSON
+//!   document, parseable by [`crate::runtime::json`].
+//!
+//! A cell is a [`Value`] (string / integer / float / bool / missing)
+//! plus an optional display override ([`Cell::shown`]): the text table
+//! keeps the paper's formatting conventions (e.g. `tokw`'s
+//! two-decimals-below-ten) while CSV/JSON always emit the raw value.
+//! Non-finite floats and [`Value::Missing`] render as an em dash in
+//! text, an empty field in CSV, and `null` in JSON.
+//!
+//! `--format table|csv|json` on the CLI selects the emitter
+//! ([`OutputFormat`]); [`emit_all`] concatenates several tables in one
+//! document (CSV tables are separated by `# title` comment lines, JSON
+//! becomes an array).
+
+pub mod csv;
+pub mod json;
+
+/// Column alignment in the text renderer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// One column of a [`RowSet`]: name, optional unit, text alignment.
+#[derive(Debug, Clone)]
+pub struct Column {
+    pub name: String,
+    pub unit: Option<String>,
+    pub align: Align,
+}
+
+impl Column {
+    /// A string-valued column (left-aligned).
+    pub fn str(name: impl Into<String>) -> Self {
+        Column { name: name.into(), unit: None, align: Align::Left }
+    }
+
+    /// An integer-valued column (right-aligned).
+    pub fn int(name: impl Into<String>) -> Self {
+        Column { name: name.into(), unit: None, align: Align::Right }
+    }
+
+    /// A float-valued column (right-aligned).
+    pub fn float(name: impl Into<String>) -> Self {
+        Column { name: name.into(), unit: None, align: Align::Right }
+    }
+
+    pub fn with_unit(mut self, unit: impl Into<String>) -> Self {
+        self.unit = Some(unit.into());
+        self
+    }
+
+    pub fn left(mut self) -> Self {
+        self.align = Align::Left;
+        self
+    }
+
+    pub fn right(mut self) -> Self {
+        self.align = Align::Right;
+        self
+    }
+
+    /// Header text: `name (unit)` when a unit is declared.
+    pub fn header(&self) -> String {
+        match &self.unit {
+            Some(u) => format!("{} ({u})", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// A typed cell value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    /// No value for this cell (distinct from NaN, which is a computed
+    /// float that happened to be undefined — both emit as null/empty).
+    Missing,
+}
+
+/// A cell: the raw value plus an optional display override for the text
+/// table. CSV/JSON always emit the raw value at full precision.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub value: Value,
+    pub display: Option<String>,
+}
+
+impl Cell {
+    pub fn str(s: impl Into<String>) -> Self {
+        Cell { value: Value::Str(s.into()), display: None }
+    }
+
+    pub fn int(i: i64) -> Self {
+        Cell { value: Value::Int(i), display: None }
+    }
+
+    pub fn float(x: f64) -> Self {
+        Cell { value: Value::Float(x), display: None }
+    }
+
+    pub fn bool(b: bool) -> Self {
+        Cell { value: Value::Bool(b), display: None }
+    }
+
+    pub fn missing() -> Self {
+        Cell { value: Value::Missing, display: None }
+    }
+
+    /// Override the text-table rendering (e.g. the paper's `tokw`
+    /// precision convention) without touching the raw value.
+    pub fn shown(mut self, s: impl Into<String>) -> Self {
+        self.display = Some(s.into());
+        self
+    }
+
+    /// The string the text table shows for this cell.
+    pub fn text(&self) -> String {
+        if let Some(d) = &self.display {
+            return d.clone();
+        }
+        match &self.value {
+            Value::Str(s) => s.clone(),
+            Value::Int(i) => i.to_string(),
+            Value::Float(x) if x.is_finite() => format!("{x}"),
+            Value::Float(_) => "—".into(),
+            Value::Bool(b) => b.to_string(),
+            Value::Missing => "—".into(),
+        }
+    }
+}
+
+/// Output format selected by the CLI's `--format` flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OutputFormat {
+    #[default]
+    Table,
+    Csv,
+    Json,
+}
+
+impl OutputFormat {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "table" | "text" | "md" => Some(OutputFormat::Table),
+            "csv" => Some(OutputFormat::Csv),
+            "json" => Some(OutputFormat::Json),
+            _ => None,
+        }
+    }
+}
+
+/// A titled table of typed rows — the one shape every output surface
+/// reduces to.
+#[derive(Debug, Clone)]
+pub struct RowSet {
+    pub title: String,
+    columns: Vec<Column>,
+    rows: Vec<Vec<Cell>>,
+    notes: Vec<String>,
+}
+
+impl RowSet {
+    pub fn new(title: impl Into<String>, columns: Vec<Column>) -> Self {
+        RowSet { title: title.into(), columns, rows: Vec::new(), notes: Vec::new() }
+    }
+
+    /// Append one row; arity must match the schema.
+    pub fn push(&mut self, row: Vec<Cell>) -> &mut Self {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+        self
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) -> &mut Self {
+        self.notes.push(n.into());
+        self
+    }
+
+    pub fn align(&mut self, col: usize, a: Align) -> &mut Self {
+        self.columns[col].align = a;
+        self
+    }
+
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+
+    pub fn rows(&self) -> &[Vec<Cell>] {
+        &self.rows
+    }
+
+    pub fn notes(&self) -> &[String] {
+        &self.notes
+    }
+
+    /// The aligned markdown table (titles as `# …`, notes as trailing
+    /// `note:` lines) — the human-facing default.
+    pub fn to_text(&self) -> String {
+        let ncols = self.columns.len();
+        let headers: Vec<String> =
+            self.columns.iter().map(|c| c.header()).collect();
+        let texts: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|c| c.text()).collect())
+            .collect();
+        let mut widths: Vec<usize> =
+            headers.iter().map(|h| h.chars().count()).collect();
+        for r in &texts {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let fmt_cell = |s: &str, w: usize, a: Align| match a {
+            Align::Left => format!("{s:<w$}"),
+            Align::Right => format!("{s:>w$}"),
+        };
+        let mut out = String::new();
+        out.push_str(&format!("\n# {}\n\n", self.title));
+        let hdr: Vec<String> = (0..ncols)
+            .map(|i| fmt_cell(&headers[i], widths[i], self.columns[i].align))
+            .collect();
+        out.push_str(&format!("| {} |\n", hdr.join(" | ")));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for r in &texts {
+            let cells: Vec<String> = (0..ncols)
+                .map(|i| fmt_cell(&r[i], widths[i], self.columns[i].align))
+                .collect();
+            out.push_str(&format!("| {} |\n", cells.join(" | ")));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    /// Pure-data CSV: one header row (units in parentheses), no title or
+    /// notes, full-precision floats, empty fields for missing/NaN.
+    pub fn to_csv(&self) -> String {
+        csv::to_csv(self)
+    }
+
+    /// The full document (title, schema with units, rows, notes) as JSON.
+    pub fn to_json(&self) -> String {
+        json::to_json(self)
+    }
+
+    pub fn emit(&self, format: OutputFormat) -> String {
+        match format {
+            OutputFormat::Table => self.to_text(),
+            OutputFormat::Csv => self.to_csv(),
+            OutputFormat::Json => self.to_json(),
+        }
+    }
+}
+
+/// Emit several tables as one document: concatenated text, `# title`-
+/// separated CSV blocks, or a JSON array.
+pub fn emit_all(sets: &[RowSet], format: OutputFormat) -> String {
+    match format {
+        OutputFormat::Table => sets.iter().map(|s| s.to_text()).collect(),
+        OutputFormat::Csv => sets
+            .iter()
+            .map(|s| format!("# {}\n{}", s.title, s.to_csv()))
+            .collect::<Vec<_>>()
+            .join("\n"),
+        OutputFormat::Json => format!(
+            "[\n{}\n]",
+            sets.iter()
+                .map(|s| s.to_json())
+                .collect::<Vec<_>>()
+                .join(",\n")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> RowSet {
+        let mut rs = RowSet::new(
+            "Demo",
+            vec![
+                Column::str("name"),
+                Column::float("value").with_unit("W"),
+                Column::int("count"),
+            ],
+        );
+        rs.push(vec![
+            Cell::str("alpha"),
+            Cell::float(1.25).shown("1.2"),
+            Cell::int(3),
+        ]);
+        rs.push(vec![Cell::str("beta"), Cell::float(f64::NAN), Cell::missing()]);
+        rs.note("hello");
+        rs
+    }
+
+    #[test]
+    fn text_renders_title_units_and_notes() {
+        let s = demo().to_text();
+        assert!(s.contains("# Demo"));
+        assert!(s.contains("value (W)"));
+        assert!(s.contains("| alpha |"));
+        assert!(s.contains("1.2")); // display override wins in text
+        assert!(s.contains("—")); // NaN and missing render as em dash
+        assert!(s.contains("note: hello"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut rs = RowSet::new("x", vec![Column::str("a"), Column::str("b")]);
+        rs.push(vec![Cell::str("only-one")]);
+    }
+
+    #[test]
+    fn emit_dispatches_on_format() {
+        let rs = demo();
+        assert_eq!(rs.emit(OutputFormat::Table), rs.to_text());
+        assert_eq!(rs.emit(OutputFormat::Csv), rs.to_csv());
+        assert_eq!(rs.emit(OutputFormat::Json), rs.to_json());
+    }
+
+    #[test]
+    fn format_parses_known_names_only() {
+        assert_eq!(OutputFormat::parse("csv"), Some(OutputFormat::Csv));
+        assert_eq!(OutputFormat::parse("JSON"), Some(OutputFormat::Json));
+        assert_eq!(OutputFormat::parse("table"), Some(OutputFormat::Table));
+        assert_eq!(OutputFormat::parse("yaml"), None);
+    }
+
+    #[test]
+    fn emit_all_separates_tables() {
+        let sets = [demo(), demo()];
+        let csv = emit_all(&sets, OutputFormat::Csv);
+        assert_eq!(csv.matches("# Demo").count(), 2);
+        let json = emit_all(&sets, OutputFormat::Json);
+        assert!(json.starts_with("[\n") && json.ends_with("\n]"));
+        let parsed = crate::runtime::json::parse(&json).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn default_cell_text_formats_by_type() {
+        assert_eq!(Cell::float(2.5).text(), "2.5");
+        assert_eq!(Cell::int(-7).text(), "-7");
+        assert_eq!(Cell::bool(true).text(), "true");
+        assert_eq!(Cell::missing().text(), "—");
+        assert_eq!(Cell::float(f64::INFINITY).text(), "—");
+    }
+}

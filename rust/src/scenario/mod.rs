@@ -18,14 +18,19 @@
 //! number are comparable by construction — the WattGPU/FleetOpt method
 //! of earning trust in an analytical model by sweeping configuration
 //! grids cheaply and spot-checking dynamically. [`sweep`] runs such
-//! grids (dispatch × topology × context window) across worker threads;
-//! `wattlaw simulate sweep` is the CLI entry.
+//! grids (dispatch × topology × context window) across worker threads,
+//! pairing each cell's analytical and measured tok/W (`wattlaw simulate
+//! sweep`); [`optimize`] turns the same machinery into the FleetOpt
+//! provisioning loop — a closed-form screen of the
+//! B_short × γ × GPU-generation space, then a simulated re-rank of the
+//! survivors under the SLO (`wattlaw optimize`).
 
+pub mod optimize;
 pub mod sweep;
 
 use std::sync::Arc;
 
-use crate::fleet::analysis::{fleet_tpw_analysis, FleetReport};
+use crate::fleet::analysis::FleetReport;
 use crate::fleet::pool::LBarPolicy;
 use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
 use crate::fleet::topology::Topology;
@@ -36,6 +41,17 @@ use crate::sim::{dispatch, simulate_topology_opts, EngineOptions};
 use crate::workload::cdf::WorkloadTrace;
 use crate::workload::synth::{generate, GenConfig};
 use crate::workload::Request;
+
+/// Measured-vs-analytical relative delta, percent — the one convention
+/// shared by the sweep's consistency records and the optimizer's
+/// refined cells (NaN when the analytical value is degenerate).
+pub fn rel_delta_pct(measured_tok_w: f64, analytic_tok_w: f64) -> f64 {
+    if analytic_tok_w > 0.0 {
+        (measured_tok_w / analytic_tok_w - 1.0) * 100.0
+    } else {
+        f64::NAN
+    }
+}
 
 /// Which router realizes the topology at serving time.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -83,6 +99,10 @@ pub struct ScenarioSpec {
     pub slo: SloTargets,
     /// Chunked-prefill size, prompt tokens per slot per step.
     pub ingest_chunk: u32,
+    /// L̄ policy for the analytical side ([`Self::analyze`]).
+    pub lbar: LBarPolicy,
+    /// Target utilization for the analytical pool sizing.
+    pub rho: f64,
 }
 
 impl ScenarioSpec {
@@ -105,6 +125,8 @@ impl ScenarioSpec {
             router: RouterSpec::Static,
             slo: SloTargets::default(),
             ingest_chunk: 1024,
+            lbar: LBarPolicy::Window,
+            rho: 0.85,
         }
     }
 
@@ -130,6 +152,17 @@ impl ScenarioSpec {
 
     pub fn with_slo(mut self, slo: SloTargets) -> Self {
         self.slo = slo;
+        self
+    }
+
+    pub fn with_lbar(mut self, lbar: LBarPolicy) -> Self {
+        self.lbar = lbar;
+        self
+    }
+
+    pub fn with_rho(mut self, rho: f64) -> Self {
+        assert!(rho > 0.0 && rho <= 1.0, "ρ must be in (0, 1]");
+        self.rho = rho;
         self
     }
 
@@ -182,19 +215,21 @@ impl ScenarioSpec {
     }
 
     /// The closed-form side: pools sized to `gen.lambda_rps` under the
-    /// TTFT SLO, Eq. (4) fleet tok/W. Same spec, no trace.
+    /// TTFT SLO, Eq. (4) fleet tok/W. Same spec, no trace. One shared
+    /// evaluation path with the optimizer's stage-A screen
+    /// ([`optimize::analyze_cell`]).
     pub fn analyze(&self, acct: PowerAccounting) -> FleetReport {
         let profile: Arc<dyn GpuProfile> = Arc::new(self.profile());
-        let pools = self.topology.pools(
+        optimize::analyze_cell(
+            &self.topology,
             &self.workload,
             self.gen.lambda_rps,
             profile,
-            None,
-            LBarPolicy::Window,
-            0.85,
+            self.lbar,
+            self.rho,
             self.slo.ttft_p99_s,
-        );
-        fleet_tpw_analysis(&pools, acct)
+            acct,
+        )
     }
 
     /// The dynamic side: generate the trace and play it through the
@@ -348,6 +383,22 @@ mod tests {
     #[should_panic(expected = "unknown dispatch policy")]
     fn bogus_dispatch_rejected_at_build() {
         pool_spec().with_dispatch("bogus");
+    }
+
+    #[test]
+    fn analysis_knobs_thread_through() {
+        // The more optimistic TrafficMean L̄ must improve the analytical
+        // tok/W relative to the conservative full-window default.
+        let base = pool_spec().analyze(PowerAccounting::PerGpu);
+        let traffic = pool_spec()
+            .with_lbar(LBarPolicy::TrafficMean)
+            .analyze(PowerAccounting::PerGpu);
+        assert!(
+            traffic.tok_per_watt.0 > base.tok_per_watt.0,
+            "TrafficMean {} vs Window {}",
+            traffic.tok_per_watt.0,
+            base.tok_per_watt.0
+        );
     }
 
     #[test]

@@ -1,0 +1,475 @@
+//! The scenario-native FleetOpt optimizer: a two-stage search over
+//! [`ScenarioSpec`] space — `wattlaw optimize`.
+//!
+//! FleetOpt (Chen et al. 2026) frames provisioning as an
+//! analytical-search-then-validate loop, and SweetSpot (Pizzini Cavagna
+//! et al. 2026) shows why the analytical screen and the measured check
+//! must be cross-tabulated per operating point. This module is that
+//! loop over the crate's own two engines:
+//!
+//! * **Stage A — analytical screen.** The full
+//!   B_short × γ × GPU-generation grid is evaluated with the closed-form
+//!   Eq. (4) planner ([`ScenarioSpec::analyze`]; dispatch does not enter
+//!   the closed form, so each analytical cell is screened once). Cheap:
+//!   hundreds of cells per millisecond, so the grid can be wide.
+//! * **Stage B — simulated refine.** The top-k surviving cells are
+//!   expanded across the dispatch axis and replayed through
+//!   [`ScenarioSpec::simulate`] on scoped worker threads
+//!   ([`sweep::run`]), then re-ranked by *measured* tok/W with the
+//!   p99-TTFT SLO verdict as a hard filter: an SLO-violating cell can
+//!   appear in the report but can never be the winner.
+//!
+//! The legacy closed-form sweep (`fleet::optimizer::sweep_fleetopt`)
+//! is now a thin wrapper over this module's [`screen_closed_form`], so
+//! both paths rank by the same arithmetic — the regression oracle in
+//! `tests/optimize_oracle.rs` holds them together.
+
+use std::sync::Arc;
+
+use super::{sweep, ScenarioOutcome, ScenarioSpec, SloTargets};
+use crate::fleet::analysis::{fleet_tpw_analysis, FleetReport};
+use crate::fleet::optimizer::{OptResult, B_SHORT_GRID, GAMMA_GRID};
+use crate::fleet::pool::LBarPolicy;
+use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use crate::fleet::topology::Topology;
+use crate::power::Gpu;
+use crate::results::{Cell, Column, RowSet};
+use crate::sim::dispatch;
+use crate::workload::cdf::WorkloadTrace;
+use crate::workload::synth::GenConfig;
+
+/// Closed-form evaluation of one (topology, profile) cell — the single
+/// Eq. (4) path behind [`ScenarioSpec::analyze`], the stage-A screen,
+/// and the legacy `fleet::optimizer` wrapper.
+#[allow(clippy::too_many_arguments)]
+pub fn analyze_cell(
+    topology: &Topology,
+    workload: &WorkloadTrace,
+    lambda_rps: f64,
+    profile: Arc<dyn GpuProfile>,
+    lbar: LBarPolicy,
+    rho: f64,
+    ttft_slo_s: f64,
+    acct: PowerAccounting,
+) -> FleetReport {
+    let pools =
+        topology.pools(workload, lambda_rps, profile, None, lbar, rho, ttft_slo_s);
+    fleet_tpw_analysis(&pools, acct)
+}
+
+/// Stage A over an explicit (B_short × γ) grid with an arbitrary
+/// profile, best-first. Kept profile-generic (not `Gpu`-keyed) so the
+/// legacy `sweep_fleetopt` API — which accepts any [`GpuProfile`] —
+/// can delegate here without loss of generality.
+#[allow(clippy::too_many_arguments)]
+pub fn screen_closed_form(
+    trace: &WorkloadTrace,
+    lambda_rps: f64,
+    profile: Arc<dyn GpuProfile>,
+    b_shorts: &[u32],
+    gammas: &[f64],
+    lbar: LBarPolicy,
+    rho: f64,
+    ttft_slo_s: f64,
+    acct: PowerAccounting,
+) -> Vec<OptResult> {
+    let mut out = Vec::with_capacity(b_shorts.len() * gammas.len());
+    for &b_short in b_shorts {
+        for &gamma in gammas {
+            let topo = Topology::FleetOpt {
+                b_short,
+                short_ctx: b_short.max(1024),
+                gamma,
+            };
+            let report = analyze_cell(
+                &topo,
+                trace,
+                lambda_rps,
+                profile.clone(),
+                lbar,
+                rho,
+                ttft_slo_s,
+                acct,
+            );
+            out.push(OptResult { b_short, gamma, report });
+        }
+    }
+    out.sort_by(|a, b| {
+        b.report.tok_per_watt.0.total_cmp(&a.report.tok_per_watt.0)
+    });
+    out
+}
+
+/// Grid axes and per-cell settings for the two-stage search.
+#[derive(Debug, Clone)]
+pub struct OptimizeConfig {
+    /// GPU-generation axis (each served by its calibrated/projected 70B
+    /// fleet profile, [`ManualProfile::for_gpu`]).
+    pub gpus: Vec<Gpu>,
+    /// Split-boundary axis.
+    pub b_shorts: Vec<u32>,
+    /// FleetOpt compression-factor axis.
+    pub gammas: Vec<f64>,
+    /// Dispatch axis — resolved by measurement in stage B only (the
+    /// closed form is dispatch-blind).
+    pub dispatches: Vec<String>,
+    /// Traffic for stage B (`lambda_rps` also feeds stage A's sizing).
+    pub gen: GenConfig,
+    /// Simulated TP groups per stage-B cell.
+    pub groups: u32,
+    pub slo: SloTargets,
+    pub lbar: LBarPolicy,
+    pub rho: f64,
+    pub acct: PowerAccounting,
+    /// Analytical cells surviving into stage B.
+    pub top_k: usize,
+}
+
+impl Default for OptimizeConfig {
+    fn default() -> Self {
+        OptimizeConfig {
+            gpus: Gpu::ALL.to_vec(),
+            b_shorts: B_SHORT_GRID.to_vec(),
+            gammas: GAMMA_GRID.to_vec(),
+            dispatches: dispatch::ALL.iter().map(|s| s.to_string()).collect(),
+            gen: GenConfig {
+                lambda_rps: 1000.0,
+                duration_s: 1.0,
+                max_prompt_tokens: 60_000,
+                max_output_tokens: 512,
+                seed: 42,
+            },
+            groups: 8,
+            slo: SloTargets::default(),
+            lbar: LBarPolicy::Window,
+            rho: 0.85,
+            acct: PowerAccounting::PerGpu,
+            top_k: 4,
+        }
+    }
+}
+
+/// One stage-A cell: analytical Eq. (4) report at (GPU, B_short, γ).
+#[derive(Debug, Clone)]
+pub struct ScreenedCell {
+    pub gpu: Gpu,
+    pub b_short: u32,
+    pub gamma: f64,
+    pub analytic: FleetReport,
+}
+
+/// One stage-B cell: the screened point expanded with a dispatch policy
+/// and replayed through the event-driven simulator.
+#[derive(Debug, Clone)]
+pub struct RefinedCell {
+    pub gpu: Gpu,
+    pub b_short: u32,
+    pub gamma: f64,
+    pub dispatch: String,
+    /// Stage-A analytical tok/W (Eq. 4).
+    pub analytic_tok_w: f64,
+    /// Stage-A analytical group count.
+    pub analytic_groups: u64,
+    /// Stage-B measured outcome.
+    pub outcome: ScenarioOutcome,
+}
+
+impl RefinedCell {
+    /// Measured-vs-analytical relative delta, percent
+    /// ([`super::rel_delta_pct`], shared with the sweep records).
+    pub fn rel_delta_pct(&self) -> f64 {
+        super::rel_delta_pct(self.outcome.tok_per_watt, self.analytic_tok_w)
+    }
+}
+
+/// Stage A: screen the full GPU × B_short × γ grid analytically,
+/// best-first (ties keep grid order).
+pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCell> {
+    let mut cells =
+        Vec::with_capacity(cfg.gpus.len() * cfg.b_shorts.len() * cfg.gammas.len());
+    for &gpu in &cfg.gpus {
+        let profile: Arc<dyn GpuProfile> = Arc::new(ManualProfile::for_gpu(gpu));
+        for r in screen_closed_form(
+            workload,
+            cfg.gen.lambda_rps,
+            profile,
+            &cfg.b_shorts,
+            &cfg.gammas,
+            cfg.lbar,
+            cfg.rho,
+            cfg.slo.ttft_p99_s,
+            cfg.acct,
+        ) {
+            cells.push(ScreenedCell {
+                gpu,
+                b_short: r.b_short,
+                gamma: r.gamma,
+                analytic: r.report,
+            });
+        }
+    }
+    cells.sort_by(|a, b| {
+        b.analytic.tok_per_watt.0.total_cmp(&a.analytic.tok_per_watt.0)
+    });
+    cells
+}
+
+/// The [`ScenarioSpec`] realizing one screened cell at serving time.
+fn spec_for(
+    workload: &WorkloadTrace,
+    cfg: &OptimizeConfig,
+    cell: &ScreenedCell,
+    dispatch: &str,
+) -> ScenarioSpec {
+    ScenarioSpec::new(
+        Topology::FleetOpt {
+            b_short: cell.b_short,
+            short_ctx: cell.b_short.max(1024),
+            gamma: cell.gamma,
+        },
+        cell.gpu,
+        workload.clone(),
+        cfg.gen.clone(),
+    )
+    .with_groups(cfg.groups)
+    .with_dispatch(dispatch)
+    .with_slo(cfg.slo)
+    .with_lbar(cfg.lbar)
+    .with_rho(cfg.rho)
+}
+
+/// Stage B: expand the surviving cells across the dispatch axis, replay
+/// each through the event engine on `workers` scoped threads, and
+/// re-rank by measured tok/W — SLO-passing cells strictly first.
+pub fn refine(
+    workload: &WorkloadTrace,
+    cfg: &OptimizeConfig,
+    survivors: &[ScreenedCell],
+    workers: usize,
+) -> Vec<RefinedCell> {
+    let mut specs = Vec::with_capacity(survivors.len() * cfg.dispatches.len());
+    let mut meta = Vec::with_capacity(specs.capacity());
+    for cell in survivors {
+        for d in &cfg.dispatches {
+            specs.push(spec_for(workload, cfg, cell, d));
+            meta.push((cell, d.clone()));
+        }
+    }
+    let outcomes = sweep::run(&specs, workers);
+    let mut refined: Vec<RefinedCell> = meta
+        .into_iter()
+        .zip(outcomes)
+        .map(|((cell, dispatch), outcome)| RefinedCell {
+            gpu: cell.gpu,
+            b_short: cell.b_short,
+            gamma: cell.gamma,
+            dispatch,
+            analytic_tok_w: cell.analytic.tok_per_watt.0,
+            analytic_groups: cell.analytic.total_groups,
+            outcome,
+        })
+        .collect();
+    refined.sort_by(|a, b| {
+        b.outcome
+            .slo_ok
+            .cmp(&a.outcome.slo_ok)
+            .then(b.outcome.tok_per_watt.total_cmp(&a.outcome.tok_per_watt))
+    });
+    refined
+}
+
+/// The full two-stage search.
+pub fn optimize(
+    workload: &WorkloadTrace,
+    cfg: &OptimizeConfig,
+    workers: usize,
+) -> OptimizeReport {
+    let screened = screen(workload, cfg);
+    let k = cfg.top_k.max(1).min(screened.len());
+    let refined = refine(workload, cfg, &screened[..k], workers);
+    OptimizeReport { screened, refined }
+}
+
+/// Everything the search produced: the full stage-A ranking plus the
+/// stage-B refinements (measured-rank order, SLO-passing cells first).
+#[derive(Debug, Clone)]
+pub struct OptimizeReport {
+    pub screened: Vec<ScreenedCell>,
+    pub refined: Vec<RefinedCell>,
+}
+
+impl OptimizeReport {
+    /// The best *measured* cell that meets the SLO — the hard filter:
+    /// `None` when every refined cell violates it.
+    pub fn winner(&self) -> Option<&RefinedCell> {
+        self.refined.first().filter(|c| c.outcome.slo_ok)
+    }
+
+    /// The refined cells as one typed table: stage-A analytical and
+    /// stage-B simulated tok/W side by side for every cell.
+    pub fn rowset(&self) -> RowSet {
+        let mut rs = RowSet::new(
+            "FleetOpt optimization — stage A analytical screen, \
+             stage B simulated refine",
+            vec![
+                Column::str("GPU"),
+                Column::int("B_short").with_unit("tok"),
+                Column::float("gamma"),
+                Column::str("dispatch"),
+                Column::float("analyze tok/W").with_unit("tok/J"),
+                Column::float("simulate tok/W").with_unit("tok/J"),
+                Column::float("delta").with_unit("%"),
+                Column::float("p99 TTFT").with_unit("s"),
+                Column::str("slo"),
+                Column::int("analyze groups"),
+                Column::str("winner"),
+            ],
+        );
+        let winner_idx = if self.winner().is_some() { Some(0) } else { None };
+        for (i, c) in self.refined.iter().enumerate() {
+            let delta = c.rel_delta_pct();
+            rs.push(vec![
+                Cell::str(c.gpu.spec().name),
+                Cell::int(c.b_short as i64),
+                Cell::float(c.gamma),
+                Cell::str(&c.dispatch),
+                Cell::float(c.analytic_tok_w)
+                    .shown(format!("{:.3}", c.analytic_tok_w)),
+                Cell::float(c.outcome.tok_per_watt)
+                    .shown(format!("{:.3}", c.outcome.tok_per_watt)),
+                Cell::float(delta).shown(format!("{delta:+.1}%")),
+                Cell::float(c.outcome.p99_ttft_s)
+                    .shown(format!("{:.3}", c.outcome.p99_ttft_s)),
+                Cell::str(if c.outcome.slo_ok { "pass" } else { "MISS" }),
+                Cell::int(c.analytic_groups as i64),
+                Cell::str(if winner_idx == Some(i) { "*" } else { "" }),
+            ]);
+        }
+        rs.note(format!(
+            "stage A screened {} analytical cells; top {} refined across {} \
+             dispatch polic{} through the event-driven simulator",
+            self.screened.len(),
+            self.refined.len() / self.dispatch_count().max(1),
+            self.dispatch_count(),
+            if self.dispatch_count() == 1 { "y" } else { "ies" },
+        ));
+        match self.winner() {
+            Some(w) => rs.note(format!(
+                "winner (best measured tok/W within SLO): {} B_short={} γ={} \
+                 dispatch={} at {:.3} tok/W (analytical said {:.3})",
+                w.gpu.spec().name,
+                w.b_short,
+                w.gamma,
+                w.dispatch,
+                w.outcome.tok_per_watt,
+                w.analytic_tok_w,
+            )),
+            None => rs.note(
+                "no refined cell met the p99 TTFT SLO — no winner \
+                 (widen the grid, relax the SLO, or add capacity)",
+            ),
+        };
+        rs
+    }
+
+    fn dispatch_count(&self) -> usize {
+        let mut names: Vec<&str> =
+            self.refined.iter().map(|c| c.dispatch.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        names.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::cdf::azure_conversations;
+
+    fn tiny_cfg() -> OptimizeConfig {
+        OptimizeConfig {
+            gpus: vec![Gpu::H100],
+            b_shorts: vec![2048, 4096],
+            gammas: vec![1.0, 2.0],
+            dispatches: vec!["rr".into()],
+            gen: GenConfig {
+                lambda_rps: 120.0,
+                duration_s: 0.5,
+                max_prompt_tokens: 20_000,
+                max_output_tokens: 64,
+                seed: 7,
+            },
+            groups: 2,
+            // Generous SLO so the mechanics (not the latency magnitudes)
+            // are under test.
+            slo: SloTargets { ttft_p99_s: 1e3 },
+            top_k: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn screen_covers_the_grid_best_first() {
+        let cells = screen(&azure_conversations(), &tiny_cfg());
+        assert_eq!(cells.len(), 4);
+        for w in cells.windows(2) {
+            assert!(
+                w[0].analytic.tok_per_watt.0 >= w[1].analytic.tok_per_watt.0
+            );
+        }
+        // γ=2 compression always beats γ=1 at the same boundary here.
+        assert_eq!(cells[0].gamma, 2.0);
+    }
+
+    #[test]
+    fn optimize_pairs_analytical_and_measured_per_cell() {
+        let cfg = tiny_cfg();
+        let report = optimize(&azure_conversations(), &cfg, 2);
+        assert_eq!(report.refined.len(), cfg.top_k * cfg.dispatches.len());
+        for c in &report.refined {
+            assert!(c.analytic_tok_w > 0.0);
+            assert!(c.outcome.completed > 0);
+            assert!(c.rel_delta_pct().is_finite());
+        }
+        let w = report.winner().expect("generous SLO must yield a winner");
+        assert!(w.outcome.slo_ok);
+        // The winner leads the measured ranking.
+        assert!(std::ptr::eq(w, &report.refined[0]));
+    }
+
+    #[test]
+    fn slo_is_a_hard_filter_for_the_winner() {
+        let cfg = OptimizeConfig {
+            slo: SloTargets { ttft_p99_s: 1e-9 },
+            ..tiny_cfg()
+        };
+        let report = optimize(&azure_conversations(), &cfg, 2);
+        assert!(!report.refined.is_empty());
+        assert!(report.refined.iter().all(|c| !c.outcome.slo_ok));
+        assert!(report.winner().is_none(), "impossible SLO ⇒ no winner");
+        let rs = report.rowset();
+        assert!(rs.to_text().contains("no refined cell met"));
+    }
+
+    #[test]
+    fn rowset_shows_both_engines_side_by_side() {
+        let report = optimize(&azure_conversations(), &tiny_cfg(), 2);
+        let rs = report.rowset();
+        let csv = rs.to_csv();
+        assert!(csv.starts_with(
+            "GPU,B_short (tok),gamma,dispatch,analyze tok/W (tok/J),\
+             simulate tok/W (tok/J),delta (%),p99 TTFT (s),slo,\
+             analyze groups,winner\n"
+        ));
+        let doc = crate::runtime::json::parse(&rs.to_json()).unwrap();
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), report.refined.len());
+        for r in rows {
+            assert!(r.get("analyze tok/W").unwrap().as_f64().is_some());
+            assert!(r.get("simulate tok/W").unwrap().as_f64().is_some());
+        }
+        // Winner marked on the first (SLO-passing) row.
+        assert_eq!(rows[0].get("winner").unwrap().as_str(), Some("*"));
+        assert_eq!(rows[0].get("slo").unwrap().as_str(), Some("pass"));
+    }
+}

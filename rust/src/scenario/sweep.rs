@@ -7,19 +7,24 @@
 //! default grid is dozens of cells. Cells are embarrassingly parallel,
 //! so the sweep parallelizes *across* cells (`std::thread::scope`,
 //! results placed by index) and runs each cell's engine sequentially —
-//! no nested oversubscription. Every cell reports the same two
-//! headline numbers, tok/W and p99 TTFT, plus an SLO verdict, so any
-//! two cells of the grid are directly comparable.
+//! no nested oversubscription. Every cell's record pairs the two
+//! engines' numbers — closed-form `analyze` tok/W next to measured
+//! `simulate` tok/W with their relative delta — plus p99 TTFT and an
+//! SLO verdict: the standing analyze-vs-simulate consistency table, so
+//! any two cells of the grid (and the two engines within a cell) are
+//! directly comparable.
 //!
 //! CLI: `wattlaw simulate sweep [--lambda 1000] [--duration S]
 //! [--groups N] [--gpu ...] [--trace ...] [--dispatch NAME]
-//! [--b-short N] [--spill F] [--slo-ttft S] [--workers N]`.
+//! [--b-short N] [--spill F] [--slo-ttft S] [--workers N]
+//! [--format table|csv|json]`.
 
 use super::{RouterSpec, ScenarioOutcome, ScenarioSpec, SloTargets};
+use crate::fleet::profile::PowerAccounting;
 use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
+use crate::results::{Cell, Column, RowSet};
 use crate::sim::dispatch;
-use crate::tables::render::Table;
 use crate::workload::cdf::WorkloadTrace;
 use crate::workload::synth::GenConfig;
 
@@ -40,6 +45,8 @@ pub struct SweepConfig {
     /// over each pool-routing topology.
     pub spill: Option<f64>,
     pub slo: SloTargets,
+    /// Power accounting for the per-cell analytical cross-check.
+    pub acct: PowerAccounting,
 }
 
 impl Default for SweepConfig {
@@ -58,6 +65,7 @@ impl Default for SweepConfig {
             b_shorts: vec![2048, 4096, 8192],
             spill: Some(2.0),
             slo: SloTargets::default(),
+            acct: PowerAccounting::PerGpu,
         }
     }
 }
@@ -156,10 +164,55 @@ pub fn run(specs: &[ScenarioSpec], workers: usize) -> Vec<ScenarioOutcome> {
         .collect()
 }
 
-/// Render the sweep as one comparable table: a row per cell, tok/W and
-/// p99 TTFT side by side, best-tok/W-within-SLO called out in the notes.
-pub fn render(outcomes: &[ScenarioOutcome], cfg: &SweepConfig) -> String {
-    let mut t = Table::new(
+/// One sweep cell with both engines' numbers — the standing
+/// analyze-vs-simulate consistency record.
+#[derive(Debug, Clone)]
+pub struct CellRecord {
+    pub outcome: ScenarioOutcome,
+    /// Closed-form Eq. (4) tok/W for the same spec.
+    pub analytic_tok_w: f64,
+    /// Closed-form group count (the simulated cell uses the grid's
+    /// fixed `groups` instead — part of why the two numbers differ).
+    pub analytic_groups: u64,
+}
+
+impl CellRecord {
+    /// Measured-vs-analytical relative delta, percent
+    /// ([`super::rel_delta_pct`], shared with the optimizer).
+    pub fn rel_delta_pct(&self) -> f64 {
+        super::rel_delta_pct(self.outcome.tok_per_watt, self.analytic_tok_w)
+    }
+}
+
+/// Pair every cell's simulated outcome with its closed-form analysis
+/// (`spec.analyze()` on the very same spec — the cross-check is
+/// comparable by construction).
+pub fn records(
+    specs: &[ScenarioSpec],
+    outcomes: &[ScenarioOutcome],
+    acct: PowerAccounting,
+) -> Vec<CellRecord> {
+    assert_eq!(specs.len(), outcomes.len(), "one outcome per spec");
+    specs
+        .iter()
+        .zip(outcomes)
+        .map(|(s, o)| {
+            let analytic = s.analyze(acct);
+            CellRecord {
+                outcome: o.clone(),
+                analytic_tok_w: analytic.tok_per_watt.0,
+                analytic_groups: analytic.total_groups,
+            }
+        })
+        .collect()
+}
+
+/// The sweep as one typed table: a row per cell, analytical and
+/// simulated tok/W side by side with their relative delta, p99 TTFT
+/// and the SLO verdict; best-measured-within-SLO called out in the
+/// notes.
+pub fn rowset(records: &[CellRecord], cfg: &SweepConfig) -> RowSet {
+    let mut rs = RowSet::new(
         format!(
             "Scenario sweep — dispatch × topology × context window \
              ({}, λ={} req/s × {}s, {} groups/cell)",
@@ -168,33 +221,66 @@ pub fn render(outcomes: &[ScenarioOutcome], cfg: &SweepConfig) -> String {
             cfg.gen.duration_s,
             cfg.groups,
         ),
-        &["Topology", "Router", "Dispatch", "tok/W", "p99 TTFT (s)", "SLO"],
+        vec![
+            Column::str("Topology"),
+            Column::str("Router"),
+            Column::str("Dispatch"),
+            Column::float("analyze tok/W").with_unit("tok/J"),
+            Column::float("simulate tok/W").with_unit("tok/J"),
+            Column::float("delta").with_unit("%"),
+            Column::float("p99 TTFT").with_unit("s"),
+            Column::str("SLO"),
+            Column::int("completed"),
+            Column::int("rejected"),
+        ],
     );
-    for o in outcomes {
-        t.row(vec![
-            o.topology.clone(),
-            o.router.clone(),
-            o.dispatch.clone(),
-            format!("{:.3}", o.tok_per_watt),
-            format!("{:.3}", o.p99_ttft_s),
-            if o.slo_ok { "ok".into() } else { "MISS".into() },
+    for r in records {
+        let o = &r.outcome;
+        let delta = r.rel_delta_pct();
+        rs.push(vec![
+            Cell::str(o.topology.clone()),
+            Cell::str(o.router.clone()),
+            Cell::str(o.dispatch.clone()),
+            Cell::float(r.analytic_tok_w)
+                .shown(format!("{:.3}", r.analytic_tok_w)),
+            Cell::float(o.tok_per_watt).shown(format!("{:.3}", o.tok_per_watt)),
+            Cell::float(delta).shown(format!("{delta:+.1}%")),
+            Cell::float(o.p99_ttft_s).shown(format!("{:.3}", o.p99_ttft_s)),
+            Cell::str(if o.slo_ok { "ok" } else { "MISS" }),
+            Cell::int(o.completed as i64),
+            Cell::int(o.rejected as i64),
         ]);
     }
-    let best = outcomes
+    let best = records
         .iter()
-        .filter(|o| o.slo_ok)
-        .max_by(|a, b| a.tok_per_watt.total_cmp(&b.tok_per_watt));
+        .filter(|r| r.outcome.slo_ok)
+        .max_by(|a, b| a.outcome.tok_per_watt.total_cmp(&b.outcome.tok_per_watt));
     match best {
-        Some(b) => t.note(format!(
+        Some(b) => rs.note(format!(
             "best within SLO (p99 TTFT <= {}s): {} at {:.3} tok/W",
-            cfg.slo.ttft_p99_s, b.label, b.tok_per_watt
+            cfg.slo.ttft_p99_s, b.outcome.label, b.outcome.tok_per_watt
         )),
-        None => t.note(format!(
+        None => rs.note(format!(
             "no cell met the p99 TTFT SLO of {}s at this load",
             cfg.slo.ttft_p99_s
         )),
     };
-    t.render()
+    rs.note(
+        "delta = simulate/analyze − 1: the analytical planner sizes its own \
+         fleet under the SLO while the simulated cell serves the grid's \
+         fixed groups, so deltas measure model fidelity, not error bars",
+    );
+    rs
+}
+
+/// Render the sweep as the human-facing text table (analytical
+/// cross-check included).
+pub fn render(
+    specs: &[ScenarioSpec],
+    outcomes: &[ScenarioOutcome],
+    cfg: &SweepConfig,
+) -> String {
+    rowset(&records(specs, outcomes, cfg.acct), cfg).to_text()
 }
 
 #[cfg(test)]
@@ -249,13 +335,41 @@ mod tests {
         let cfg = tiny_cfg();
         let specs = grid(&azure_conversations(), &cfg);
         let out = run(&specs, 4);
-        let s = render(&out, &cfg);
+        let s = render(&specs, &out, &cfg);
         assert!(s.contains("tok/W") && s.contains("p99 TTFT"));
         assert!(s.contains("Homo") && s.contains("FleetOpt"));
         // One verdict-bearing row per cell.
         assert!(
             s.lines().filter(|l| l.contains("ok") || l.contains("MISS")).count()
                 >= out.len()
+        );
+    }
+
+    #[test]
+    fn records_pair_both_engines_per_cell() {
+        let cfg = tiny_cfg();
+        let specs = grid(&azure_conversations(), &cfg);
+        let out = run(&specs, 4);
+        let recs = records(&specs, &out, cfg.acct);
+        assert_eq!(recs.len(), specs.len());
+        for r in &recs {
+            assert!(r.analytic_tok_w > 0.0, "{}", r.outcome.label);
+            assert!(r.analytic_groups > 0);
+            assert!(r.rel_delta_pct().is_finite(), "{}", r.outcome.label);
+        }
+        // The machine formats carry both engines' columns.
+        let rs = rowset(&recs, &cfg);
+        let csv = rs.to_csv();
+        assert!(csv.starts_with(
+            "Topology,Router,Dispatch,analyze tok/W (tok/J),\
+             simulate tok/W (tok/J),delta (%),p99 TTFT (s),SLO,\
+             completed,rejected\n"
+        ));
+        assert_eq!(csv.lines().count(), 1 + recs.len());
+        let doc = crate::runtime::json::parse(&rs.to_json()).unwrap();
+        assert_eq!(
+            doc.get("rows").unwrap().as_arr().unwrap().len(),
+            recs.len()
         );
     }
 }

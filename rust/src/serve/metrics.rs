@@ -11,9 +11,12 @@ pub struct Percentiles {
     rng_state: u64,
 }
 
+/// Default reservoir cap (samples retained per digest).
+pub const DEFAULT_CAP: usize = 200_000;
+
 impl Default for Percentiles {
     fn default() -> Self {
-        Self::with_cap(200_000)
+        Self::with_cap(DEFAULT_CAP)
     }
 }
 
@@ -99,6 +102,107 @@ impl Percentiles {
         self.ensure_sorted();
         *self.samples.last().unwrap()
     }
+
+    /// True when every value ever seen is still retained.
+    fn untruncated(&self) -> bool {
+        self.seen as usize == self.samples.len()
+    }
+
+    /// Weighted merge of many capped reservoirs into one digest of at
+    /// most `cap` samples, unbiased w.r.t. the union distribution.
+    ///
+    /// A retained sample of a digest that has seen `n` values but kept
+    /// `k` represents `n/k` originals; naively re-adding retained
+    /// samples (the pre-fix merge) ignored that weight, so a truncated
+    /// pool's tail was under-represented relative to untruncated pools.
+    /// Here each input's share of the output reservoir is allocated
+    /// proportionally to its *true* count (largest-remainder rounding),
+    /// and that many samples are drawn without replacement from its
+    /// retained set — every output sample then represents the same
+    /// `total_seen/cap` originals, regardless of which pool it came
+    /// from. When every input is untruncated and everything fits, the
+    /// merge is the exact concatenation (bit-identical to the old
+    /// behavior below the cap). Deterministic: the sampling PRNG is
+    /// seeded from the input counts only.
+    pub fn merged_weighted<'a, I>(parts: I, cap: usize) -> Percentiles
+    where
+        I: IntoIterator<Item = &'a Percentiles>,
+    {
+        let parts: Vec<&Percentiles> = parts.into_iter().collect();
+        let total_seen: u64 = parts.iter().map(|p| p.seen).sum();
+        let mut out = Percentiles::with_cap(cap);
+        if total_seen == 0 {
+            return out;
+        }
+        let total_retained: usize =
+            parts.iter().map(|p| p.samples.len()).sum();
+        if total_retained <= cap && parts.iter().all(|p| p.untruncated()) {
+            // Exact: every seen value is present exactly once.
+            for p in &parts {
+                out.samples.extend_from_slice(&p.samples);
+            }
+            out.seen = total_seen;
+            out.sorted = false;
+            return out;
+        }
+
+        // Largest-remainder allocation of the output reservoir by true
+        // counts, clamped to what each part actually retains.
+        let cap = cap.min(total_retained);
+        let mut targets: Vec<usize> = Vec::with_capacity(parts.len());
+        let mut remainders: Vec<(usize, f64)> = Vec::with_capacity(parts.len());
+        let mut assigned = 0usize;
+        for (i, p) in parts.iter().enumerate() {
+            let ideal = cap as f64 * p.seen as f64 / total_seen as f64;
+            let floor = (ideal.floor() as usize).min(p.samples.len());
+            targets.push(floor);
+            assigned += floor;
+            remainders.push((i, ideal - ideal.floor()));
+        }
+        remainders.sort_by(|a, b| {
+            b.1.total_cmp(&a.1).then(a.0.cmp(&b.0))
+        });
+        let mut progressed = true;
+        while assigned < cap && progressed {
+            progressed = false;
+            for &(i, _) in &remainders {
+                if assigned >= cap {
+                    break;
+                }
+                if targets[i] < parts[i].samples.len() {
+                    targets[i] += 1;
+                    assigned += 1;
+                    progressed = true;
+                }
+            }
+        }
+
+        // Deterministic seed from the inputs' shape only.
+        let mut seed = 0x9E3779B97F4A7C15u64 ^ total_seen;
+        for p in &parts {
+            seed = seed
+                .rotate_left(13)
+                .wrapping_mul(0x2545F4914F6CDD1D)
+                .wrapping_add(p.seen ^ p.samples.len() as u64);
+        }
+        out.rng_state = seed | 1;
+        for (p, &t) in parts.iter().zip(&targets) {
+            if t == p.samples.len() {
+                out.samples.extend_from_slice(&p.samples);
+                continue;
+            }
+            // Partial Fisher–Yates over indices: t draws w/o replacement.
+            let mut idx: Vec<usize> = (0..p.samples.len()).collect();
+            for k in 0..t {
+                let j = k + (out.next_u64() as usize) % (idx.len() - k);
+                idx.swap(k, j);
+                out.samples.push(p.samples[idx[k]]);
+            }
+        }
+        out.seen = total_seen;
+        out.sorted = false;
+        out
+    }
 }
 
 /// The standard serving metric set.
@@ -125,38 +229,53 @@ impl ServeMetrics {
 
     /// Merge many per-pool (or per-group) metric sets into one
     /// fleet-wide set — the per-request TTFT/TPOT/E2E digests combine by
-    /// re-adding samples, counters by summation. Scenario cells report
-    /// their fleet p99 TTFT from this.
+    /// a weighted-reservoir merge, counters by summation. Scenario cells
+    /// report their fleet p99 TTFT from this.
     ///
-    /// Caveat: digests are capped reservoirs (200k samples by default).
-    /// Below the cap the merge is exact; once a pool's digest has been
-    /// truncated, re-adding its retained samples under-weights that pool
-    /// relative to untruncated ones (each retained sample represents
-    /// `seen / len` requests, which re-adding ignores). A
-    /// weighted-reservoir merge is an open ROADMAP item for
-    /// million-arrival sweeps.
+    /// Digests are capped reservoirs (200k samples by default). Below
+    /// the cap the merge is the exact concatenation; beyond it, each
+    /// pool's retained samples enter the merged reservoir in proportion
+    /// to the pool's *true* request count
+    /// ([`Percentiles::merged_weighted`]), so truncated pools' tails are
+    /// weighted correctly on genuinely million-arrival cells.
     pub fn merged<'a, I>(parts: I) -> ServeMetrics
     where
         I: IntoIterator<Item = &'a ServeMetrics>,
     {
-        let mut all = ServeMetrics::default();
-        for m in parts {
-            all.merge(m);
+        let parts: Vec<&ServeMetrics> = parts.into_iter().collect();
+        let cap = parts
+            .iter()
+            .map(|m| m.ttft_s.cap)
+            .max()
+            .unwrap_or(DEFAULT_CAP);
+        ServeMetrics {
+            ttft_s: Percentiles::merged_weighted(
+                parts.iter().map(|m| &m.ttft_s),
+                cap,
+            ),
+            tpot_s: Percentiles::merged_weighted(
+                parts.iter().map(|m| &m.tpot_s),
+                cap,
+            ),
+            e2e_s: Percentiles::merged_weighted(
+                parts.iter().map(|m| &m.e2e_s),
+                cap,
+            ),
+            completed: parts.iter().map(|m| m.completed).sum(),
+            rejected: parts.iter().map(|m| m.rejected).sum(),
+            output_tokens: parts.iter().map(|m| m.output_tokens).sum(),
         }
-        all
     }
 
+    /// Pairwise merge (`self ∪ other`), weight-aware like [`Self::merged`].
     pub fn merge(&mut self, other: &ServeMetrics) {
-        // Percentile merge via re-adding the other's samples.
-        for &v in &other.ttft_s.samples {
-            self.ttft_s.add(v);
-        }
-        for &v in &other.tpot_s.samples {
-            self.tpot_s.add(v);
-        }
-        for &v in &other.e2e_s.samples {
-            self.e2e_s.add(v);
-        }
+        let cap = self.ttft_s.cap.max(other.ttft_s.cap);
+        self.ttft_s =
+            Percentiles::merged_weighted([&self.ttft_s, &other.ttft_s], cap);
+        self.tpot_s =
+            Percentiles::merged_weighted([&self.tpot_s, &other.tpot_s], cap);
+        self.e2e_s =
+            Percentiles::merged_weighted([&self.e2e_s, &other.e2e_s], cap);
         self.completed += other.completed;
         self.rejected += other.rejected;
         self.output_tokens += other.output_tokens;
@@ -224,5 +343,101 @@ mod tests {
         let mut p = Percentiles::default();
         assert!(p.p50().is_nan());
         assert!(p.mean().is_nan());
+    }
+
+    #[test]
+    fn weighted_merge_is_exact_below_cap() {
+        let mut a = Percentiles::with_cap(100);
+        let mut b = Percentiles::with_cap(100);
+        for i in 0..40 {
+            a.add(i as f64);
+        }
+        for i in 40..80 {
+            b.add(i as f64);
+        }
+        let mut m = Percentiles::merged_weighted([&a, &b], 100);
+        assert_eq!(m.count(), 80);
+        assert_eq!(m.samples.len(), 80);
+        assert_eq!(m.quantile(1.0), 79.0);
+        assert_eq!(m.quantile(0.0), 0.0);
+    }
+
+    #[test]
+    fn weighted_merge_unbiased_on_unbalanced_truncated_pools() {
+        // Pool A: 99k requests at 100.0, truncated to a 1k reservoir.
+        // Pool B: 1k requests at 0.0, untruncated.
+        // True union: 99% of mass at 100 ⇒ p50 must be 100 and only
+        // ~1% of the merged reservoir should be B's zeros. The old
+        // re-add merge kept A and B at ~equal sample counts (~50% zeros),
+        // dragging fleet percentiles toward the small pool.
+        let mut a = Percentiles::with_cap(1000);
+        for _ in 0..99_000 {
+            a.add(100.0);
+        }
+        let mut b = Percentiles::with_cap(1000);
+        for _ in 0..1000 {
+            b.add(0.0);
+        }
+        let mut m = Percentiles::merged_weighted([&a, &b], 1000);
+        assert_eq!(m.count(), 100_000);
+        assert_eq!(m.samples.len(), 1000);
+        assert_eq!(m.p50(), 100.0);
+        let zeros = m.samples.iter().filter(|&&v| v == 0.0).count();
+        assert!(
+            (1..=30).contains(&zeros),
+            "B's share must be ≈ 1% of the reservoir, got {zeros}"
+        );
+    }
+
+    #[test]
+    fn weighted_merge_is_deterministic() {
+        let mk = || {
+            let mut a = Percentiles::with_cap(100);
+            for i in 0..5_000 {
+                a.add((i % 97) as f64);
+            }
+            let mut b = Percentiles::with_cap(100);
+            for i in 0..300 {
+                b.add(1000.0 + i as f64);
+            }
+            Percentiles::merged_weighted([&a, &b], 100)
+        };
+        let x = mk();
+        let y = mk();
+        assert_eq!(x.samples.len(), y.samples.len());
+        for (u, v) in x.samples.iter().zip(&y.samples) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn fleet_merge_weights_truncated_pools_by_true_count() {
+        // ServeMetrics-level: the fleet p99 TTFT of one huge truncated
+        // pool (slow) + one tiny untruncated pool (fast) must reflect
+        // the huge pool.
+        let mut big = ServeMetrics {
+            ttft_s: Percentiles::with_cap(500),
+            ..Default::default()
+        };
+        for _ in 0..50_000 {
+            big.ttft_s.add(2.0);
+            big.completed += 1;
+        }
+        let mut small = ServeMetrics {
+            ttft_s: Percentiles::with_cap(500),
+            ..Default::default()
+        };
+        for _ in 0..500 {
+            small.ttft_s.add(0.001);
+            small.completed += 1;
+        }
+        let mut m = ServeMetrics::merged([&big, &small]);
+        assert_eq!(m.completed, 50_500);
+        assert_eq!(m.ttft_s.count(), 50_500);
+        assert_eq!(m.ttft_s.p50(), 2.0);
+        assert_eq!(m.ttft_s.p99(), 2.0);
+        let fast =
+            m.ttft_s.samples.iter().filter(|&&v| v == 0.001).count();
+        assert!(fast <= 20, "small pool ≈ 1% of the reservoir, got {fast}");
     }
 }

@@ -104,7 +104,6 @@ fn aggregate_pool(
     cfg: &GroupSimConfig,
     outcomes: Vec<GroupOutcome>,
 ) -> PoolSimReport {
-    let mut metrics = ServeMetrics::default();
     let mut joules = 0.0;
     let mut output_tokens = 0u64;
     let mut horizon_s: f64 = 0.0;
@@ -112,8 +111,7 @@ fn aggregate_pool(
     let mut time_integral = 0.0;
     let mut steps = 0u64;
 
-    for g in outcomes {
-        metrics.merge(&g.metrics);
+    for g in &outcomes {
         joules += g.joules;
         output_tokens += g.output_tokens;
         horizon_s = horizon_s.max(g.horizon_s);
@@ -121,6 +119,10 @@ fn aggregate_pool(
         time_integral += g.horizon_s;
         steps += g.steps;
     }
+    // One all-parts weighted merge (not a pairwise fold): linear in the
+    // total samples, and a single proportional subsampling pass when any
+    // group's digest is truncated.
+    let metrics = ServeMetrics::merged(outcomes.iter().map(|g| &g.metrics));
 
     PoolSimReport {
         name: name.into(),

@@ -10,9 +10,9 @@
 //!
 //! [`FleetState`]: crate::sim::FleetState
 
-use super::render::Table;
 use crate::fleet::topology::Topology;
 use crate::power::Gpu;
+use crate::results::{Cell, Column, RowSet};
 use crate::scenario::{ScenarioOutcome, ScenarioSpec};
 use crate::sim::dispatch;
 use crate::workload::synth::GenConfig;
@@ -70,21 +70,29 @@ pub fn simulate_policy(name: &str) -> ScenarioOutcome {
     spec.simulate_trace(&bursty_trace(), true)
 }
 
-pub fn generate() -> String {
-    let mut t = Table::new(
+/// The typed rowset behind the figure.
+pub fn rowset() -> RowSet {
+    let mut t = RowSet::new(
         "Figure (dispatch) — group dispatch policies, simulated \
          (H100, two-pool 4K split, bursty Azure trace)",
-        &["Dispatch", "tok/W", "tokens", "kJ", "steps", "p99 TTFT (s)"],
+        vec![
+            Column::str("Dispatch"),
+            Column::float("tok/W").with_unit("tok/J"),
+            Column::int("tokens"),
+            Column::float("energy").with_unit("kJ"),
+            Column::int("steps"),
+            Column::float("p99 TTFT").with_unit("s"),
+        ],
     );
     for name in dispatch::ALL {
         let r = simulate_policy(name);
-        t.row(vec![
-            name.to_string(),
-            format!("{:.3}", r.tok_per_watt),
-            format!("{}", r.output_tokens),
-            format!("{:.1}", r.joules / 1e3),
-            format!("{}", r.steps),
-            format!("{:.3}", r.p99_ttft_s),
+        t.push(vec![
+            Cell::str(name),
+            Cell::float(r.tok_per_watt).shown(format!("{:.3}", r.tok_per_watt)),
+            Cell::int(r.output_tokens as i64),
+            Cell::float(r.joules / 1e3).shown(format!("{:.1}", r.joules / 1e3)),
+            Cell::int(r.steps as i64),
+            Cell::float(r.p99_ttft_s).shown(format!("{:.3}", r.p99_ttft_s)),
         ]);
     }
     t.note(
@@ -92,7 +100,11 @@ pub fn generate() -> String {
          changes — stateful policies read live queue/batch/KV state from \
          the event engine",
     );
-    t.render()
+    t
+}
+
+pub fn generate() -> String {
+    rowset().to_text()
 }
 
 #[cfg(test)]

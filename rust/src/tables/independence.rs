@@ -9,8 +9,9 @@
 
 use std::sync::Arc;
 
-use super::render::{f2, tokw, Table};
+use super::render::{f2, tokw};
 use crate::fleet::analysis::fleet_tpw_analysis;
+use crate::results::{Cell, Column, RowSet};
 use crate::fleet::pool::LBarPolicy;
 use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
 use crate::fleet::topology::{Topology, LONG_CTX};
@@ -63,42 +64,61 @@ pub fn analyze(trace: &WorkloadTrace, lbar: LBarPolicy) -> Independence {
     }
 }
 
-pub fn generate(lbar: LBarPolicy) -> String {
+/// The typed rowsets behind the analysis: the 3×2 grid and the
+/// multiplicativity check.
+pub fn rowsets(lbar: LBarPolicy) -> Vec<RowSet> {
     let a = analyze(&azure_conversations(), lbar);
-    let mut t = Table::new(
+    let mut t = RowSet::new(
         format!("§4.2 — topology × generation independence (Azure, L̄={lbar:?})"),
-        &["", "H100", "B200", "Δ_gen"],
+        vec![
+            Column::str("topology"),
+            Column::float("H100").with_unit("tok/J"),
+            Column::float("B200").with_unit("tok/J"),
+            Column::float("Δ_gen"),
+        ],
     );
     let names = ["Homo 64K", "Pool routing", "FleetOpt"];
     for (i, n) in names.iter().enumerate() {
-        t.row(vec![
-            n.to_string(),
-            tokw(a.grid[i][0]),
-            tokw(a.grid[i][1]),
-            f2(a.grid[i][1] / a.grid[i][0]),
+        t.push(vec![
+            Cell::str(*n),
+            Cell::float(a.grid[i][0]).shown(tokw(a.grid[i][0])),
+            Cell::float(a.grid[i][1]).shown(tokw(a.grid[i][1])),
+            Cell::float(a.grid[i][1] / a.grid[i][0])
+                .shown(f2(a.grid[i][1] / a.grid[i][0])),
         ]);
     }
-    t.row(vec![
-        "Δ_topo (Opt/Homo)".into(),
-        f2(a.d_topo_h100),
-        f2(a.d_topo_b200),
-        "".into(),
+    t.push(vec![
+        Cell::str("Δ_topo (Opt/Homo)"),
+        Cell::float(a.d_topo_h100).shown(f2(a.d_topo_h100)),
+        Cell::float(a.d_topo_b200).shown(f2(a.d_topo_b200)),
+        Cell::missing().shown(""),
     ]);
-    let mut s = Table::new(
+    let mut s = RowSet::new(
         "Multiplicativity check",
-        &["quantity", "value"],
+        vec![Column::str("quantity"), Column::float("value")],
     );
-    s.row(vec!["Δ_topo(H100) × Δ_gen(Homo)".into(), f2(a.product)]);
-    s.row(vec!["combined (B200 FleetOpt / H100 Homo)".into(), f2(a.combined)]);
-    s.row(vec![
-        "relative error".into(),
-        format!("{:.1}%", ((a.combined - a.product) / a.product * 100.0).abs()),
+    s.push(vec![
+        Cell::str("Δ_topo(H100) × Δ_gen(Homo)"),
+        Cell::float(a.product).shown(f2(a.product)),
+    ]);
+    s.push(vec![
+        Cell::str("combined (B200 FleetOpt / H100 Homo)"),
+        Cell::float(a.combined).shown(f2(a.combined)),
+    ]);
+    let rel = ((a.combined - a.product) / a.product * 100.0).abs();
+    s.push(vec![
+        Cell::str("relative error (%)"),
+        Cell::float(rel).shown(format!("{rel:.1}%")),
     ]);
     s.note("paper: Δ_topo ≈ 2.5, Δ_gen ≈ 1.7, product ≈ combined ≈ 4.25; our \
             honest sizing yields larger Δ_topo (the paper's Homo fleet exceeds \
             its own 64K per-GPU bound — EXPERIMENTS.md §T3) but the \
             independence/multiplicativity structure is exactly reproduced");
-    format!("{}{}", t.render(), s.render())
+    vec![t, s]
+}
+
+pub fn generate(lbar: LBarPolicy) -> String {
+    rowsets(lbar).iter().map(|r| r.to_text()).collect()
 }
 
 #[cfg(test)]

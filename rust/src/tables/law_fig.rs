@@ -2,9 +2,10 @@
 //! log–log grid for every GPU generation, with the fitted slope and the
 //! 2K→128K spread (§3.1's "nearly 40×").
 
-use super::render::{ctx_k, f2, tokw, Table};
+use super::render::{ctx_k, f2, tokw};
 use crate::fleet::profile::ManualProfile;
 use crate::power::Gpu;
+use crate::results::{Cell, Column, RowSet};
 use crate::tokeconomy::law::{fit_law, LawFit, LAW_CONTEXTS};
 
 pub fn fits() -> Vec<(Gpu, LawFit)> {
@@ -14,24 +15,36 @@ pub fn fits() -> Vec<(Gpu, LawFit)> {
         .collect()
 }
 
-pub fn generate() -> String {
+/// The typed rowsets behind the figure: the curve and the fit stats.
+pub fn rowsets() -> Vec<RowSet> {
     let all = fits();
-    let mut t = Table::new(
+    let mut t = RowSet::new(
         "Figure (1/W law) — tok/W vs context window, all GPU generations",
-        &["Context", "H100", "H200", "B200", "GB200"],
+        vec![
+            Column::str("Context"),
+            Column::float("H100").with_unit("tok/J"),
+            Column::float("H200").with_unit("tok/J"),
+            Column::float("B200").with_unit("tok/J"),
+            Column::float("GB200").with_unit("tok/J"),
+        ],
     );
     for (i, &ctx) in LAW_CONTEXTS.iter().enumerate() {
-        t.row(vec![
-            ctx_k(ctx),
-            tokw(all[0].1.points[i].tok_per_watt.0),
-            tokw(all[1].1.points[i].tok_per_watt.0),
-            tokw(all[2].1.points[i].tok_per_watt.0),
-            tokw(all[3].1.points[i].tok_per_watt.0),
-        ]);
+        let mut row = vec![Cell::str(ctx_k(ctx))];
+        for fit in all.iter().map(|(_, f)| f) {
+            let v = fit.points[i].tok_per_watt.0;
+            row.push(Cell::float(v).shown(tokw(v)));
+        }
+        t.push(row);
     }
-    let mut s = Table::new(
+    let mut s = RowSet::new(
         "1/W law statistics (log–log slope; per-doubling halving; spread)",
-        &["GPU", "slope", "min ratio", "max ratio", "2K→128K spread"],
+        vec![
+            Column::str("GPU"),
+            Column::float("slope"),
+            Column::float("min ratio"),
+            Column::float("max ratio"),
+            Column::float("2K→128K spread").with_unit("x"),
+        ],
     );
     for (g, f) in &all {
         let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
@@ -39,17 +52,23 @@ pub fn generate() -> String {
             lo = lo.min(*r);
             hi = hi.max(*r);
         }
-        s.row(vec![
-            g.spec().name.to_string(),
-            f2(f.slope),
-            f2(lo),
-            f2(hi),
-            format!("{:.1}x", f.spread),
+        s.push(vec![
+            Cell::str(g.spec().name),
+            Cell::float(f.slope).shown(f2(f.slope)),
+            Cell::float(lo).shown(f2(lo)),
+            Cell::float(hi).shown(f2(hi)),
+            Cell::float(f.spread).shown(format!("{:.1}x", f.spread)),
         ]);
     }
     s.note("the law predicts slope −1 / ratio 2.0; the tail softens to ≈1.7 \
             because P(b) also falls at tiny n_max — visible in the paper's \
             own Table 1 (1.50/0.88 = 1.70)");
+    vec![t, s]
+}
+
+pub fn generate() -> String {
+    let all = fits();
+    let tables: String = rowsets().iter().map(|r| r.to_text()).collect();
 
     // ASCII log-log sparkline for the H100 curve.
     let mut plot = String::from("\nlog2(tok/W) vs log2(context), H100:\n");
@@ -62,7 +81,7 @@ pub fn generate() -> String {
             p.tok_per_watt.0
         ));
     }
-    format!("{}{}{}", t.render(), s.render(), plot)
+    format!("{tables}{plot}")
 }
 
 #[cfg(test)]

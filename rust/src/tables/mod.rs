@@ -15,6 +15,34 @@ pub mod t6;
 pub mod t7;
 
 use crate::fleet::pool::LBarPolicy;
+use crate::results::RowSet;
+
+/// Every artifact's CLI flag, in `tables --all` emission order.
+pub const ALL_FLAGS: [&str; 11] = [
+    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "law", "power-fig",
+    "dispatch-fig", "independence",
+];
+
+/// The typed rowsets behind one artifact, keyed by its CLI flag — the
+/// machine-readable path `tables --format csv|json` emits through (the
+/// figures' ASCII plots are table-format-only garnish and are not part
+/// of the rowsets).
+pub fn rowsets_for(flag: &str, lbar: LBarPolicy) -> Option<Vec<RowSet>> {
+    Some(match flag {
+        "t1" => vec![t1::rowset()],
+        "t2" => vec![t2::rowset()],
+        "t3" => vec![t3::rowset(lbar)],
+        "t4" => vec![t4::rowset()],
+        "t5" => vec![t5::rowset()],
+        "t6" => vec![t6::rowset()],
+        "t7" => t7::rowsets(),
+        "law" => law_fig::rowsets(),
+        "power-fig" => vec![power_fig::rowset()],
+        "dispatch-fig" => vec![dispatch_fig::rowset()],
+        "independence" => independence::rowsets(lbar),
+        _ => return None,
+    })
+}
 
 /// Generate every table + figure as one report (the `tables --all` output).
 pub fn generate_all(lbar: LBarPolicy) -> String {
@@ -47,5 +75,26 @@ mod tests {
         ] {
             assert!(s.contains(needle), "missing {needle}");
         }
+    }
+
+    #[test]
+    fn every_flag_resolves_to_rowsets() {
+        // The fast artifacts: every flag except the simulation-backed
+        // dispatch figure (covered by its own module tests).
+        for flag in ALL_FLAGS {
+            if flag == "dispatch-fig" {
+                continue;
+            }
+            let sets = rowsets_for(flag, LBarPolicy::Window)
+                .unwrap_or_else(|| panic!("no rowsets for {flag}"));
+            assert!(!sets.is_empty(), "{flag}");
+            for rs in &sets {
+                // Machine formats must at least be structurally valid.
+                assert!(rs.to_csv().lines().count() >= 1, "{flag}");
+                crate::runtime::json::parse(&rs.to_json())
+                    .unwrap_or_else(|e| panic!("{flag}: bad JSON: {e}"));
+            }
+        }
+        assert!(rowsets_for("bogus", LBarPolicy::Window).is_none());
     }
 }

@@ -1,27 +1,39 @@
 //! Figure-equivalent: the logistic P(b) curves (paper Eq. 1 / the G2G
 //! Figure-2 shape) for every GPU generation, b ∈ {1..1024}.
 
-use super::render::{f0, Table};
+use super::render::f0;
 use crate::power::Gpu;
+use crate::results::{Cell, Column, RowSet};
 
 pub const BATCHES: [f64; 11] =
     [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0];
 
-pub fn generate() -> String {
-    let mut t = Table::new(
+/// The typed rowset behind the figure.
+pub fn rowset() -> RowSet {
+    let mut t = RowSet::new(
         "Figure (power) — logistic P(b), watts vs in-flight batch",
-        &["b", "H100", "H200", "B200", "GB200"],
+        vec![
+            Column::int("b"),
+            Column::float("H100").with_unit("W"),
+            Column::float("H200").with_unit("W"),
+            Column::float("B200").with_unit("W"),
+            Column::float("GB200").with_unit("W"),
+        ],
     );
     for &b in &BATCHES {
-        t.row(vec![
-            f0(b),
-            f0(Gpu::H100.spec().power.power_w(b)),
-            f0(Gpu::H200.spec().power.power_w(b)),
-            f0(Gpu::B200.spec().power.power_w(b)),
-            f0(Gpu::GB200.spec().power.power_w(b)),
-        ]);
+        let mut row = vec![Cell::int(b as i64)];
+        for gpu in Gpu::ALL {
+            let w = gpu.spec().power.power_w(b);
+            row.push(Cell::float(w).shown(f0(w)));
+        }
+        t.push(row);
     }
     t.note("H100 anchors: 300 W @b≈1, ≈600 W @b=128 (ML.ENERGY v3.0, <3% fit)");
+    t
+}
+
+pub fn generate() -> String {
+    let t = rowset();
 
     // ASCII curve for H100.
     let p = &Gpu::H100.spec().power;
@@ -31,7 +43,7 @@ pub fn generate() -> String {
         let bars = ((w - p.p_idle_w) / 10.0).round() as usize;
         plot.push_str(&format!("b={b:>5} | {} {w:.0} W\n", "#".repeat(bars)));
     }
-    format!("{}{}", t.render(), plot)
+    format!("{}{}", t.to_text(), plot)
 }
 
 #[cfg(test)]

@@ -1,84 +1,60 @@
-//! ASCII/markdown table rendering for the paper-regeneration commands.
+//! Table rendering for the paper-regeneration commands — since the
+//! results-layer refactor, a thin compatibility wrapper over the typed
+//! [`RowSet`](crate::results::RowSet): `Table` keeps the old
+//! string-row builder API for surfaces that are inherently textual,
+//! while the shared `RowSet` does the actual alignment/markdown work
+//! (and gains CSV/JSON for free via [`Table::into_rowset`]). New code
+//! and the typed tables (t1–t7) build `RowSet`s directly.
 
-/// Column alignment.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Align {
-    Left,
-    Right,
-}
+pub use crate::results::Align;
+use crate::results::{Cell, Column, RowSet};
 
-/// A simple aligned text table.
+/// A simple aligned text table (string cells; first column left-aligned,
+/// the rest right). Backed by a [`RowSet`] with `Str`-typed columns.
 #[derive(Debug, Clone)]
 pub struct Table {
-    title: String,
-    headers: Vec<String>,
-    aligns: Vec<Align>,
-    rows: Vec<Vec<String>>,
-    notes: Vec<String>,
+    rs: RowSet,
 }
 
 impl Table {
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
-        Table {
-            title: title.into(),
-            headers: headers.iter().map(|s| s.to_string()).collect(),
-            aligns: headers
-                .iter()
-                .enumerate()
-                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
-                .collect(),
-            rows: Vec::new(),
-            notes: Vec::new(),
-        }
+        let columns = headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                if i == 0 {
+                    Column::str(*h)
+                } else {
+                    Column::str(*h).right()
+                }
+            })
+            .collect();
+        Table { rs: RowSet::new(title, columns) }
     }
 
     pub fn align(mut self, col: usize, a: Align) -> Self {
-        self.aligns[col] = a;
+        self.rs.align(col, a);
         self
     }
 
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
-        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
-        self.rows.push(cells);
+        self.rs.push(cells.into_iter().map(Cell::str).collect());
         self
     }
 
     pub fn note(&mut self, n: impl Into<String>) -> &mut Self {
-        self.notes.push(n.into());
+        self.rs.note(n);
         self
     }
 
     pub fn render(&self) -> String {
-        let ncols = self.headers.len();
-        let mut widths: Vec<usize> =
-            self.headers.iter().map(|h| h.chars().count()).collect();
-        for r in &self.rows {
-            for (i, c) in r.iter().enumerate() {
-                widths[i] = widths[i].max(c.chars().count());
-            }
-        }
-        let fmt_cell = |s: &str, w: usize, a: Align| match a {
-            Align::Left => format!("{s:<w$}"),
-            Align::Right => format!("{s:>w$}"),
-        };
-        let mut out = String::new();
-        out.push_str(&format!("\n# {}\n\n", self.title));
-        let hdr: Vec<String> = (0..ncols)
-            .map(|i| fmt_cell(&self.headers[i], widths[i], self.aligns[i]))
-            .collect();
-        out.push_str(&format!("| {} |\n", hdr.join(" | ")));
-        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
-        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
-        for r in &self.rows {
-            let cells: Vec<String> = (0..ncols)
-                .map(|i| fmt_cell(&r[i], widths[i], self.aligns[i]))
-                .collect();
-            out.push_str(&format!("| {} |\n", cells.join(" | ")));
-        }
-        for n in &self.notes {
-            out.push_str(&format!("  note: {n}\n"));
-        }
-        out
+        self.rs.to_text()
+    }
+
+    /// The backing typed rowset (string-valued), for CSV/JSON emission
+    /// of tables that are built through this legacy API.
+    pub fn into_rowset(self) -> RowSet {
+        self.rs
     }
 }
 
@@ -143,5 +119,15 @@ mod tests {
         assert_eq!(vs_pct(15.0, 10.0), "+50%");
         assert_eq!(vs_pct(10.0, 10.0), "—");
         assert_eq!(vs_pct(5.0, 10.0), "-50%");
+    }
+
+    #[test]
+    fn wrapper_exposes_its_rowset() {
+        let mut t = Table::new("W", &["a", "b"]);
+        t.row(vec!["x".into(), "1".into()]);
+        let rs = t.clone().into_rowset();
+        assert_eq!(rs.columns().len(), 2);
+        assert_eq!(rs.to_csv(), "a,b\nx,1\n");
+        assert_eq!(rs.to_text(), t.render());
     }
 }

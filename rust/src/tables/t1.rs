@@ -1,8 +1,9 @@
 //! Table 1 — n_max and tok/W vs context window for Llama-3.1-70B (TP=8,
 //! fp16) on H100-SXM5 (calibrated, HIGH) and B200-SXM (projected, FAIR).
 
-use super::render::{ctx_k, f0, tokw, Table};
+use super::render::{ctx_k, f0, tokw};
 use crate::fleet::profile::{ManualProfile, PowerAccounting};
+use crate::results::{Cell, Column, RowSet};
 use crate::tokeconomy::{context_sweep, OperatingPoint};
 
 pub const CONTEXTS: [u32; 7] = [2048, 4096, 8192, 16384, 32768, 65536, 131072];
@@ -39,31 +40,46 @@ pub fn rows() -> Vec<T1Row> {
         .collect()
 }
 
-pub fn generate() -> String {
-    let mut t = Table::new(
+/// The typed rowset behind the table: raw values for CSV/JSON, the
+/// paper's formatting conventions kept as display overrides.
+pub fn rowset() -> RowSet {
+    let mut rs = RowSet::new(
         "Table 1 — n_max and tok/W vs context window, Llama-3.1-70B TP8 fp16 \
          (ours vs paper)",
-        &[
-            "Context", "n_max", "P_sat", "tok/W", "paper", "n_max", "P_sat",
-            "tok/W", "paper",
+        vec![
+            Column::str("Context"),
+            Column::int("h100 n_max"),
+            Column::float("h100 P_sat").with_unit("W"),
+            Column::float("h100 tok/W").with_unit("tok/J"),
+            Column::float("h100 paper tok/W").with_unit("tok/J"),
+            Column::int("b200 n_max"),
+            Column::float("b200 P_sat").with_unit("W"),
+            Column::float("b200 tok/W").with_unit("tok/J"),
+            Column::float("b200 paper tok/W").with_unit("tok/J"),
         ],
     );
     for (r, p) in rows().iter().zip(PAPER.iter()) {
-        t.row(vec![
-            ctx_k(r.context),
-            r.h100.n_max.to_string(),
-            format!("{} W", f0(r.h100.power.0)),
-            tokw(r.h100.tok_per_watt.0),
-            tokw(p.3),
-            r.b200.n_max.to_string(),
-            format!("{} W", f0(r.b200.power.0)),
-            tokw(r.b200.tok_per_watt.0),
-            tokw(p.6),
+        rs.push(vec![
+            Cell::str(ctx_k(r.context)),
+            Cell::int(r.h100.n_max as i64),
+            Cell::float(r.h100.power.0)
+                .shown(format!("{} W", f0(r.h100.power.0))),
+            Cell::float(r.h100.tok_per_watt.0).shown(tokw(r.h100.tok_per_watt.0)),
+            Cell::float(p.3).shown(tokw(p.3)),
+            Cell::int(r.b200.n_max as i64),
+            Cell::float(r.b200.power.0)
+                .shown(format!("{} W", f0(r.b200.power.0))),
+            Cell::float(r.b200.tok_per_watt.0).shown(tokw(r.b200.tok_per_watt.0)),
+            Cell::float(p.6).shown(tokw(p.6)),
         ]);
     }
-    t.note("cols 2-5: H100-SXM5 (HIGH quality, calibrated); cols 6-9: B200-SXM (FAIR, ±20%)");
-    t.note("'paper' columns are the published values for side-by-side comparison");
-    t.render()
+    rs.note("cols 2-5: H100-SXM5 (HIGH quality, calibrated); cols 6-9: B200-SXM (FAIR, ±20%)");
+    rs.note("'paper' columns are the published values for side-by-side comparison");
+    rs
+}
+
+pub fn generate() -> String {
+    rowset().to_text()
 }
 
 #[cfg(test)]
@@ -87,5 +103,21 @@ mod tests {
         for ctx in ["2K", "4K", "8K", "16K", "32K", "64K", "128K"] {
             assert!(s.contains(ctx), "missing {ctx} row");
         }
+    }
+
+    #[test]
+    fn rowset_carries_raw_values_for_machine_formats() {
+        let rs = rowset();
+        assert_eq!(rs.rows().len(), CONTEXTS.len());
+        let csv = rs.to_csv();
+        // Units live in the header; cells are full-precision floats.
+        assert!(csv.starts_with("Context,h100 n_max,h100 P_sat (W),"));
+        let parsed =
+            crate::runtime::json::parse(&rs.to_json()).expect("valid JSON");
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(
+            rows[0].get("h100 n_max").unwrap().as_f64(),
+            Some(super::rows()[0].h100.n_max as f64)
+        );
     }
 }

@@ -1,9 +1,10 @@
 //! Table 2 — single-GPU tok/W at n_max (8K context) across model families
 //! (ComputedProfile: replicated KV; MoE rows stream active params only).
 
-use super::render::{f0, tokw, Table};
+use super::render::{f0, tokw};
 use crate::fleet::profile::{ComputedProfile, PowerAccounting};
 use crate::model::spec::{ModelSpec, CATALOG, LLAMA31_8B};
+use crate::results::{Cell, Column, RowSet};
 use crate::model::KvPlacement;
 use crate::power::profiles::{B200, H100};
 use crate::power::GpuSpec;
@@ -57,34 +58,49 @@ pub const PAPER: [(&str, f64, f64); 5] = [
     ("DeepSeek-V3", 2.14, 18.37),
 ];
 
-pub fn generate() -> String {
-    let mut t = Table::new(
+/// The typed rowset behind the table.
+pub fn rowset() -> RowSet {
+    let mut rs = RowSet::new(
         "Table 2 — single-GPU tok/W at n_max (8K context), ComputedProfile \
          (ours vs paper)",
-        &[
-            "Model", "TP", "n_max", "tok/s", "tok/W", "paper", "n_max",
-            "tok/s", "tok/W", "paper",
+        vec![
+            Column::str("Model"),
+            Column::int("TP"),
+            Column::int("h100 n_max"),
+            Column::float("h100 tok/s").with_unit("tok/s"),
+            Column::float("h100 tok/W").with_unit("tok/J"),
+            Column::float("h100 paper tok/W").with_unit("tok/J"),
+            Column::int("b200 n_max"),
+            Column::float("b200 tok/s").with_unit("tok/s"),
+            Column::float("b200 tok/W").with_unit("tok/J"),
+            Column::float("b200 paper tok/W").with_unit("tok/J"),
         ],
     );
     for (r, p) in rows().iter().zip(PAPER.iter()) {
         let moe = if r.model.is_moe { "†" } else { "" };
-        t.row(vec![
-            format!("{}{moe}", r.model.name),
-            r.tp.to_string(),
-            r.h100.n_max.to_string(),
-            f0(r.h100.throughput_tok_s),
-            tokw(r.h100.tok_per_watt.0),
-            tokw(p.1),
-            r.b200.n_max.to_string(),
-            f0(r.b200.throughput_tok_s),
-            tokw(r.b200.tok_per_watt.0),
-            tokw(p.2),
+        rs.push(vec![
+            Cell::str(format!("{}{moe}", r.model.name)),
+            Cell::int(r.tp as i64),
+            Cell::int(r.h100.n_max as i64),
+            Cell::float(r.h100.throughput_tok_s)
+                .shown(f0(r.h100.throughput_tok_s)),
+            Cell::float(r.h100.tok_per_watt.0).shown(tokw(r.h100.tok_per_watt.0)),
+            Cell::float(p.1).shown(tokw(p.1)),
+            Cell::int(r.b200.n_max as i64),
+            Cell::float(r.b200.throughput_tok_s)
+                .shown(f0(r.b200.throughput_tok_s)),
+            Cell::float(r.b200.tok_per_watt.0).shown(tokw(r.b200.tok_per_watt.0)),
+            Cell::float(p.2).shown(tokw(p.2)),
         ]);
     }
-    t.note("† MoE: W streams active parameters only (upper bound — excludes dispatch)");
-    t.note("paper's MoE rows and P_sat parameterization do not close under its own \
+    rs.note("† MoE: W streams active parameters only (upper bound — excludes dispatch)");
+    rs.note("paper's MoE rows and P_sat parameterization do not close under its own \
             roofline; our values use the consistent model (EXPERIMENTS.md §T2)");
-    t.render()
+    rs
+}
+
+pub fn generate() -> String {
+    rowset().to_text()
 }
 
 #[cfg(test)]

@@ -3,8 +3,9 @@
 
 use std::sync::Arc;
 
-use super::render::{f1, tokw, vs_pct, Table};
+use super::render::{f1, tokw, vs_pct};
 use crate::fleet::analysis::{fleet_tpw_analysis, FleetReport};
+use crate::results::{Cell, Column, RowSet};
 use crate::fleet::pool::LBarPolicy;
 use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
 use crate::fleet::topology::{Topology, LONG_CTX};
@@ -54,14 +55,23 @@ pub fn rows(lbar: LBarPolicy) -> Vec<T3Row> {
     out
 }
 
-pub fn generate(lbar: LBarPolicy) -> String {
+/// The typed rowset behind the table.
+pub fn rowset(lbar: LBarPolicy) -> RowSet {
     let rs = rows(lbar);
-    let mut t = Table::new(
+    let mut out = RowSet::new(
         format!(
             "Table 3 — fleet token efficiency at λ=1000 req/s (L̄ policy: {lbar:?})"
         ),
-        &["Workload", "Topology", "GPU", "Groups", "GPUs", "kW", "tok/W",
-          "vs H100 Homo"],
+        vec![
+            Column::str("Workload"),
+            Column::str("Topology"),
+            Column::str("GPU"),
+            Column::int("Groups"),
+            Column::int("GPUs"),
+            Column::float("power").with_unit("kW"),
+            Column::float("tok/W").with_unit("tok/J"),
+            Column::float("vs H100 Homo").with_unit("%"),
+        ],
     );
     // Baseline per trace: H100 homogeneous.
     let mut base = std::collections::HashMap::new();
@@ -72,22 +82,28 @@ pub fn generate(lbar: LBarPolicy) -> String {
     }
     for r in &rs {
         let b = base[r.trace];
-        t.row(vec![
-            r.trace.to_string(),
-            r.topology.clone(),
-            r.gpu.spec().name.to_string(),
-            r.report.total_groups.to_string(),
-            r.report.total_gpus.to_string(),
-            f1(r.report.total_power.kw()),
-            tokw(r.report.tok_per_watt.0),
-            vs_pct(r.report.tok_per_watt.0, b),
+        let tpw = r.report.tok_per_watt.0;
+        out.push(vec![
+            Cell::str(r.trace),
+            Cell::str(r.topology.clone()),
+            Cell::str(r.gpu.spec().name),
+            Cell::int(r.report.total_groups as i64),
+            Cell::int(r.report.total_gpus as i64),
+            Cell::float(r.report.total_power.kw())
+                .shown(f1(r.report.total_power.kw())),
+            Cell::float(tpw).shown(tokw(tpw)),
+            Cell::float((tpw / b - 1.0) * 100.0).shown(vs_pct(tpw, b)),
         ]);
     }
-    t.note("sized from first principles (decode throughput + Erlang-C TTFT tail); \
+    out.note("sized from first principles (decode throughput + Erlang-C TTFT tail); \
             the paper's absolute GPU counts do not close under its own Eq. 4 — \
             ratios are the reproduction target (EXPERIMENTS.md §T3)");
-    t.note("power accounting: per-GPU (paper convention; see DESIGN.md §4.2)");
-    t.render()
+    out.note("power accounting: per-GPU (paper convention; see DESIGN.md §4.2)");
+    out
+}
+
+pub fn generate(lbar: LBarPolicy) -> String {
+    rowset(lbar).to_text()
 }
 
 #[cfg(test)]

@@ -3,13 +3,14 @@
 //! in both schemes; semantic routing's case rests on per-physical-GPU
 //! economics (8B runs TP=1), not per-group tok/W.
 
-use super::render::{f0, tokw, Table};
+use super::render::{f0, tokw};
 use crate::fleet::profile::{
     ComputedProfile, ManualProfile, PowerAccounting,
 };
 use crate::model::spec::LLAMA31_8B;
 use crate::model::KvPlacement;
 use crate::power::profiles::H100;
+use crate::results::{Cell, Column, RowSet};
 use crate::tokeconomy::{operating_point, OperatingPoint};
 
 pub const RHO: f64 = 0.85;
@@ -60,26 +61,39 @@ pub fn rows() -> Vec<T4Row> {
     ]
 }
 
-pub fn generate() -> String {
-    let mut t = Table::new(
+/// The typed rowset behind the table.
+pub fn rowset() -> RowSet {
+    let mut rs = RowSet::new(
         "Table 4 — context-window routing vs semantic routing (H100, ρ=0.85)",
-        &["Pool type", "Model", "Context", "n_active", "P (W)", "tok/W",
-          "tok/W per phys. GPU"],
+        vec![
+            Column::str("Pool type"),
+            Column::str("Model"),
+            Column::str("Context"),
+            Column::float("n_active"),
+            Column::float("P").with_unit("W"),
+            Column::float("tok/W").with_unit("tok/J"),
+            Column::float("tok/W per phys. GPU").with_unit("tok/J"),
+        ],
     );
     for r in rows() {
-        t.row(vec![
-            r.pool.to_string(),
-            r.model.to_string(),
-            super::render::ctx_k(r.context),
-            f0(r.op.n_active),
-            f0(r.op.power.0),
-            tokw(r.op.tok_per_watt.0),
-            tokw(r.op.tok_per_watt.0 / r.tp as f64),
+        rs.push(vec![
+            Cell::str(r.pool),
+            Cell::str(r.model),
+            Cell::str(super::render::ctx_k(r.context)),
+            Cell::float(r.op.n_active).shown(f0(r.op.n_active)),
+            Cell::float(r.op.power.0).shown(f0(r.op.power.0)),
+            Cell::float(r.op.tok_per_watt.0).shown(tokw(r.op.tok_per_watt.0)),
+            Cell::float(r.op.tok_per_watt.0 / r.tp as f64)
+                .shown(tokw(r.op.tok_per_watt.0 / r.tp as f64)),
         ]);
     }
-    t.note("last column divides by TP — the paper's point that the 8B \
+    rs.note("last column divides by TP — the paper's point that the 8B \
             semantic pool wins on a per-physical-GPU basis");
-    t.render()
+    rs
+}
+
+pub fn generate() -> String {
+    rowset().to_text()
 }
 
 #[cfg(test)]

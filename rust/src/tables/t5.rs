@@ -1,11 +1,12 @@
 //! Table 5 — GPU generation comparison for Llama-3.1-70B (TP=8, fp16) at
 //! 8K context: hardware parameters, tok/W, and cost efficiency.
 
-use super::render::{f0, f2, tokw, Table};
+use super::render::{f0, f2, tokw};
 use crate::fleet::profile::{ComputedProfile, GpuProfile, PowerAccounting};
 use crate::model::spec::LLAMA31_70B;
 use crate::model::KvPlacement;
 use crate::power::Gpu;
+use crate::results::{Cell, Column, RowSet};
 use crate::tokeconomy::{mtok_per_dollar, operating_point, OperatingPoint};
 
 pub const CTX: u32 = 8192;
@@ -39,31 +40,46 @@ pub fn rows() -> Vec<T5Row> {
         .collect()
 }
 
-pub fn generate() -> String {
-    let mut t = Table::new(
+/// The typed rowset behind the table.
+pub fn rowset() -> RowSet {
+    let mut rs = RowSet::new(
         "Table 5 — GPU generation comparison, Llama-3.1-70B TP8 fp16 @8K",
-        &["GPU", "TDP (W)", "P_idle", "W (ms)", "n_max@8K", "P_sat (W)",
-          "tok/W", "$/hr", "Mtok/$", "quality"],
+        vec![
+            Column::str("GPU"),
+            Column::float("TDP").with_unit("W"),
+            Column::float("P_idle").with_unit("W"),
+            Column::float("W").with_unit("ms"),
+            Column::int("n_max@8K"),
+            Column::float("P_sat").with_unit("W"),
+            Column::float("tok/W").with_unit("tok/J"),
+            Column::float("rental").with_unit("$/hr"),
+            Column::float("Mtok/$").with_unit("Mtok/$"),
+            Column::str("quality"),
+        ],
     );
     for r in rows() {
         let s = r.gpu.spec();
-        t.row(vec![
-            s.name.to_string(),
-            f0(s.tdp_w),
-            f0(s.power.p_idle_w),
-            f2(r.w_ms),
-            r.op.n_max.to_string(),
-            f0(r.op.power.0),
-            tokw(r.op.tok_per_watt.0),
-            format!("{:.1}", r.rental_per_hr),
-            f2(r.mtok_per_dollar),
-            s.quality.label().to_string(),
+        rs.push(vec![
+            Cell::str(s.name),
+            Cell::float(s.tdp_w).shown(f0(s.tdp_w)),
+            Cell::float(s.power.p_idle_w).shown(f0(s.power.p_idle_w)),
+            Cell::float(r.w_ms).shown(f2(r.w_ms)),
+            Cell::int(r.op.n_max as i64),
+            Cell::float(r.op.power.0).shown(f0(r.op.power.0)),
+            Cell::float(r.op.tok_per_watt.0).shown(tokw(r.op.tok_per_watt.0)),
+            Cell::float(r.rental_per_hr).shown(format!("{:.1}", r.rental_per_hr)),
+            Cell::float(r.mtok_per_dollar).shown(f2(r.mtok_per_dollar)),
+            Cell::str(s.quality.label()),
         ]);
     }
-    t.note("paper's P_sat column is inconsistent with its own logistic \
+    rs.note("paper's P_sat column is inconsistent with its own logistic \
             parameters (e.g. 367 W at n=22 where P(22)=469 W); ours is the \
             self-consistent evaluation — see EXPERIMENTS.md §T5");
-    t.render()
+    rs
+}
+
+pub fn generate() -> String {
+    rowset().to_text()
 }
 
 #[cfg(test)]

@@ -5,8 +5,9 @@
 
 use std::sync::Arc;
 
-use super::render::{tokw, Table};
+use super::render::tokw;
 use crate::fleet::analysis::fleet_tpw_analysis;
+use crate::results::{Cell, Column, RowSet};
 use crate::fleet::pool::LBarPolicy;
 use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
 use crate::fleet::topology::{Topology, LONG_CTX};
@@ -75,28 +76,42 @@ pub fn rows() -> Vec<T6Row> {
         .collect()
 }
 
-pub fn generate() -> String {
-    let mut t = Table::new(
+/// The typed rowset behind the table.
+pub fn rowset() -> RowSet {
+    let mut rs = RowSet::new(
         "Table 6 — topology and GPU recommendations by workload archetype \
          (computed argmax vs paper)",
-        &["Trace", "Archetype", "≤8K", "Best topology (ours)", "Best GPU (ours)",
-          "tok/W", "Paper topology", "Paper GPU"],
+        vec![
+            Column::str("Trace"),
+            Column::str("Archetype"),
+            Column::float("≤8K").with_unit("%"),
+            Column::str("Best topology (ours)"),
+            Column::str("Best GPU (ours)"),
+            Column::float("tok/W").with_unit("tok/J"),
+            Column::str("Paper topology"),
+            Column::str("Paper GPU"),
+        ],
     );
     for r in rows() {
-        t.row(vec![
-            r.trace.to_string(),
-            format!("{:?}", r.archetype),
-            format!("{:.0}%", r.frac_8k * 100.0),
-            r.best_topology.clone(),
-            r.best_gpu.spec().name.to_string(),
-            tokw(r.best_tok_w),
-            r.paper_topology.to_string(),
-            r.paper_gpu.to_string(),
+        rs.push(vec![
+            Cell::str(r.trace),
+            Cell::str(format!("{:?}", r.archetype)),
+            Cell::float(r.frac_8k * 100.0)
+                .shown(format!("{:.0}%", r.frac_8k * 100.0)),
+            Cell::str(r.best_topology.clone()),
+            Cell::str(r.best_gpu.spec().name),
+            Cell::float(r.best_tok_w).shown(tokw(r.best_tok_w)),
+            Cell::str(r.paper_topology),
+            Cell::str(r.paper_gpu),
         ]);
     }
-    t.note("rankings by tok/W; B200/GB200 recommendations carry FAIR power-model \
+    rs.note("rankings by tok/W; B200/GB200 recommendations carry FAIR power-model \
             uncertainty (validate before procurement — paper Table 6 note)");
-    t.render()
+    rs
+}
+
+pub fn generate() -> String {
+    rowset().to_text()
 }
 
 #[cfg(test)]

@@ -2,51 +2,87 @@
 //! calibration loop: refit the logistic from regenerated ML.ENERGY-style
 //! measurements and report the fit error (paper: <3 %).
 
-use super::render::{f0, f2, Table};
+use super::render::{f0, f2};
 use crate::power::fit::{fit_logistic, FitResult};
 use crate::power::mlenergy;
 use crate::power::Gpu;
+use crate::results::{Cell, Column, RowSet};
 
 pub fn calibration_fit() -> FitResult {
     fit_logistic(&mlenergy::h100_measurements(0, 0.03))
 }
 
-pub fn generate() -> String {
-    let mut t = Table::new(
+/// The typed rowsets behind the two tables: parameter catalog +
+/// calibration refit.
+pub fn rowsets() -> Vec<RowSet> {
+    let mut rs = RowSet::new(
         "Table 7 — GPU power model parameters",
-        &["GPU", "TDP (W)", "P_idle (W)", "P_nom (W)", "k", "x0", "Quality"],
+        vec![
+            Column::str("GPU"),
+            Column::float("TDP").with_unit("W"),
+            Column::float("P_idle").with_unit("W"),
+            Column::float("P_nom").with_unit("W"),
+            Column::float("k"),
+            Column::float("x0"),
+            Column::str("Quality"),
+        ],
     );
     for gpu in Gpu::ALL {
         let s = gpu.spec();
-        t.row(vec![
-            s.name.to_string(),
-            f0(s.tdp_w),
-            f0(s.power.p_idle_w),
-            f0(s.power.p_nom_w),
-            f2(s.power.k),
-            f2(s.power.x0),
-            s.quality.label().to_string(),
+        rs.push(vec![
+            Cell::str(s.name),
+            Cell::float(s.tdp_w).shown(f0(s.tdp_w)),
+            Cell::float(s.power.p_idle_w).shown(f0(s.power.p_idle_w)),
+            Cell::float(s.power.p_nom_w).shown(f0(s.power.p_nom_w)),
+            Cell::float(s.power.k).shown(f2(s.power.k)),
+            Cell::float(s.power.x0).shown(f2(s.power.x0)),
+            Cell::str(s.quality.label()),
         ]);
     }
-    t.note("B200/GB200 x0 = 4.45 (closes the paper's own Table 1 power \
+    rs.note("B200/GB200 x0 = 4.45 (closes the paper's own Table 1 power \
             column; the published 6.8 does not — EXPERIMENTS.md §T7)");
 
     // Live calibration loop on regenerated measurements.
     let fit = calibration_fit();
-    let mut c = Table::new(
+    let mut c = RowSet::new(
         "Calibration — logistic refit from ML.ENERGY-style H100 samples",
-        &["parameter", "published", "refit"],
+        vec![
+            Column::str("parameter"),
+            Column::str("published"),
+            Column::float("refit"),
+        ],
     );
-    c.row(vec!["P_idle (W)".into(), "300".into(), f0(fit.model.p_idle_w)]);
-    c.row(vec!["P_nom (W)".into(), "600".into(), f0(fit.model.p_nom_w)]);
-    c.row(vec!["k".into(), "1.0".into(), f2(fit.model.k)]);
-    c.row(vec!["x0".into(), "4.2".into(), f2(fit.model.x0)]);
-    c.row(vec![
-        "max rel fit error".into(),
-        "<3%".into(),
-        format!("{:.1}%", fit.max_rel_err * 100.0),
+    c.push(vec![
+        Cell::str("P_idle (W)"),
+        Cell::str("300"),
+        Cell::float(fit.model.p_idle_w).shown(f0(fit.model.p_idle_w)),
     ]);
-    format!("{}{}", t.render(), c.render())
+    c.push(vec![
+        Cell::str("P_nom (W)"),
+        Cell::str("600"),
+        Cell::float(fit.model.p_nom_w).shown(f0(fit.model.p_nom_w)),
+    ]);
+    c.push(vec![
+        Cell::str("k"),
+        Cell::str("1.0"),
+        Cell::float(fit.model.k).shown(f2(fit.model.k)),
+    ]);
+    c.push(vec![
+        Cell::str("x0"),
+        Cell::str("4.2"),
+        Cell::float(fit.model.x0).shown(f2(fit.model.x0)),
+    ]);
+    c.push(vec![
+        Cell::str("max rel fit error"),
+        Cell::str("<3%"),
+        Cell::float(fit.max_rel_err * 100.0)
+            .shown(format!("{:.1}%", fit.max_rel_err * 100.0)),
+    ]);
+    vec![rs, c]
+}
+
+pub fn generate() -> String {
+    rowsets().iter().map(|r| r.to_text()).collect()
 }
 
 #[cfg(test)]

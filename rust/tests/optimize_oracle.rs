@@ -1,0 +1,148 @@
+//! Regression oracle for the scenario-native optimizer: restricted to
+//! the legacy `B_SHORT_GRID × GAMMA_GRID`, stage A must rank the same
+//! best (B_short, γ) cell as the old closed-form `sweep_fleetopt` — and
+//! stage B must never crown an SLO-violating winner.
+
+use std::sync::Arc;
+
+use wattlaw::fleet::optimizer::{optimize_fleetopt, sweep_fleetopt};
+use wattlaw::fleet::pool::LBarPolicy;
+use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use wattlaw::power::Gpu;
+use wattlaw::scenario::optimize::{optimize, screen, OptimizeConfig};
+use wattlaw::scenario::SloTargets;
+use wattlaw::workload::cdf::azure_conversations;
+use wattlaw::workload::synth::GenConfig;
+
+fn h100() -> Arc<dyn GpuProfile> {
+    Arc::new(ManualProfile::h100_70b())
+}
+
+/// The new stage-A screen, restricted to the legacy grid (the
+/// `OptimizeConfig` default axes ARE the legacy grids), must agree with
+/// the legacy closed-form sweep cell for cell — same winner, same
+/// tok/W bits.
+#[test]
+fn stage_a_matches_legacy_sweep_on_the_legacy_grid() {
+    let t = azure_conversations();
+    let legacy = sweep_fleetopt(
+        &t,
+        1000.0,
+        h100(),
+        LBarPolicy::Window,
+        0.85,
+        0.5,
+        PowerAccounting::PerGpu,
+    );
+    let cfg = OptimizeConfig { gpus: vec![Gpu::H100], ..Default::default() };
+    let screened = screen(&t, &cfg);
+    assert_eq!(screened.len(), legacy.len());
+    // Same best cell, bit-identical analytical tok/W down the ranking.
+    for (s, l) in screened.iter().zip(&legacy) {
+        assert_eq!(s.b_short, l.b_short);
+        assert_eq!(s.gamma, l.gamma);
+        assert_eq!(
+            s.analytic.tok_per_watt.0.to_bits(),
+            l.report.tok_per_watt.0.to_bits()
+        );
+    }
+}
+
+#[test]
+fn legacy_wrapper_still_finds_the_same_optimum() {
+    // `optimize_fleetopt` (the old public API) now routes through the
+    // scenario optimizer's screen; its contract is unchanged.
+    let t = azure_conversations();
+    let best = optimize_fleetopt(
+        &t,
+        1000.0,
+        h100(),
+        LBarPolicy::Window,
+        0.85,
+        0.5,
+        PowerAccounting::PerGpu,
+    );
+    assert!(best.gamma > 1.0, "γ* = {}", best.gamma);
+    let all = sweep_fleetopt(
+        &t,
+        1000.0,
+        h100(),
+        LBarPolicy::Window,
+        0.85,
+        0.5,
+        PowerAccounting::PerGpu,
+    );
+    for r in &all {
+        assert!(best.report.tok_per_watt.0 >= r.report.tok_per_watt.0);
+    }
+}
+
+fn quick_cfg(slo_s: f64) -> OptimizeConfig {
+    OptimizeConfig {
+        gpus: vec![Gpu::H100],
+        b_shorts: vec![2048, 4096],
+        gammas: vec![1.0, 2.0],
+        dispatches: vec!["rr".into(), "jsq".into()],
+        gen: GenConfig {
+            lambda_rps: 150.0,
+            duration_s: 0.4,
+            max_prompt_tokens: 20_000,
+            max_output_tokens: 64,
+            seed: 11,
+        },
+        groups: 2,
+        slo: SloTargets { ttft_p99_s: slo_s },
+        top_k: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn stage_b_winner_is_measured_and_slo_clean() {
+    let t = azure_conversations();
+    let report = optimize(&t, &quick_cfg(1e3), 2);
+    // top_k cells × 2 dispatch policies, each carrying both engines.
+    assert_eq!(report.refined.len(), 4);
+    let w = report.winner().expect("generous SLO yields a winner");
+    assert!(w.outcome.slo_ok, "the winner's SLO verdict must be pass");
+    assert!(w.outcome.completed > 0);
+    assert!(w.analytic_tok_w > 0.0);
+    // The winner is the best *measured* SLO-passing cell.
+    for c in report.refined.iter().filter(|c| c.outcome.slo_ok) {
+        assert!(w.outcome.tok_per_watt >= c.outcome.tok_per_watt);
+    }
+}
+
+#[test]
+fn stage_b_never_returns_an_slo_violating_winner() {
+    let t = azure_conversations();
+    let report = optimize(&t, &quick_cfg(1e-12), 2);
+    assert!(!report.refined.is_empty());
+    assert!(
+        report.refined.iter().all(|c| !c.outcome.slo_ok),
+        "a 1 ps TTFT SLO is unmeetable"
+    );
+    assert!(report.winner().is_none());
+}
+
+#[test]
+fn optimize_json_pairs_stage_a_and_stage_b_per_refined_cell() {
+    let t = azure_conversations();
+    let report = optimize(&t, &quick_cfg(1e3), 2);
+    let doc = wattlaw::runtime::json::parse(&report.rowset().to_json())
+        .expect("optimizer emits valid JSON");
+    let rows = doc.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), report.refined.len());
+    for r in rows {
+        assert!(
+            r.get("analyze tok/W").unwrap().as_f64().is_some(),
+            "stage-A number missing"
+        );
+        assert!(
+            r.get("simulate tok/W").unwrap().as_f64().is_some(),
+            "stage-B number missing"
+        );
+    }
+    assert_eq!(rows[0].get("slo").unwrap().as_str(), Some("pass"));
+    assert_eq!(rows[0].get("winner").unwrap().as_str(), Some("*"));
+}

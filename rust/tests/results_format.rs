@@ -1,0 +1,173 @@
+//! Results-layer format tests: golden CSV/JSON emitter output (stable
+//! column order, units in headers, NaN/missing-cell policy) plus a
+//! property test that `RowSet::to_csv` round-trips through the parser
+//! for random tables.
+
+use wattlaw::results::csv::parse_csv;
+use wattlaw::results::{Cell, Column, RowSet, Value};
+use wattlaw::runtime::json::{parse as parse_json, Json};
+use wattlaw::xrand::Rng;
+
+fn golden_rowset() -> RowSet {
+    let mut rs = RowSet::new(
+        "Golden — scenario cell",
+        vec![
+            Column::str("Topology"),
+            Column::float("analyze tok/W").with_unit("tok/J"),
+            Column::float("simulate tok/W").with_unit("tok/J"),
+            Column::float("p99 TTFT").with_unit("s"),
+            Column::int("completed"),
+            Column::str("slo"),
+        ],
+    );
+    rs.push(vec![
+        Cell::str("FleetOpt (4K/γ=2)"),
+        Cell::float(3.5).shown("3.50"),
+        Cell::float(3.25),
+        Cell::float(0.125),
+        Cell::int(941),
+        Cell::str("pass"),
+    ]);
+    rs.push(vec![
+        Cell::str("Homo 64K, with \"quotes\", and, commas"),
+        Cell::float(1.5),
+        // Nothing completed: the measured side is NaN / missing.
+        Cell::float(f64::NAN),
+        Cell::missing(),
+        Cell::int(0),
+        Cell::str("MISS"),
+    ]);
+    rs.note("golden fixture");
+    rs
+}
+
+#[test]
+fn csv_golden_stable_columns_units_and_nan_policy() {
+    assert_eq!(
+        golden_rowset().to_csv(),
+        "Topology,analyze tok/W (tok/J),simulate tok/W (tok/J),\
+         p99 TTFT (s),completed,slo\n\
+         FleetOpt (4K/γ=2),3.5,3.25,0.125,941,pass\n\
+         \"Homo 64K, with \"\"quotes\"\", and, commas\",1.5,,,0,MISS\n"
+    );
+}
+
+#[test]
+fn json_golden_schema_rows_and_null_policy() {
+    let doc = parse_json(&golden_rowset().to_json()).expect("valid JSON");
+    assert_eq!(doc.get("title").unwrap().as_str(), Some("Golden — scenario cell"));
+    let cols = doc.get("columns").unwrap().as_arr().unwrap();
+    assert_eq!(cols.len(), 6);
+    assert_eq!(cols[1].get("name").unwrap().as_str(), Some("analyze tok/W"));
+    assert_eq!(cols[1].get("unit").unwrap().as_str(), Some("tok/J"));
+    assert_eq!(cols[0].get("unit"), Some(&Json::Null));
+    let rows = doc.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    // Display override never leaks: raw value in JSON.
+    assert_eq!(rows[0].get("analyze tok/W").unwrap().as_f64(), Some(3.5));
+    assert_eq!(rows[1].get("simulate tok/W"), Some(&Json::Null));
+    assert_eq!(rows[1].get("p99 TTFT"), Some(&Json::Null));
+    assert_eq!(
+        doc.get("notes").unwrap().as_arr().unwrap()[0].as_str(),
+        Some("golden fixture")
+    );
+}
+
+/// Random printable-ish strings, including CSV-hostile characters.
+fn random_string(rng: &mut Rng) -> String {
+    const ALPHABET: &[char] = &[
+        'a', 'B', '7', ' ', ',', '"', '\n', 'γ', 'λ', '/', '%', '-', '.',
+    ];
+    let len = rng.range_usize(0, 12);
+    (0..len)
+        .map(|_| ALPHABET[rng.range_usize(0, ALPHABET.len() - 1)])
+        .collect()
+}
+
+fn random_float(rng: &mut Rng) -> f64 {
+    // Mix of magnitudes and signs, all finite.
+    let base = rng.f64() * 10f64.powi(rng.range_usize(0, 8) as i32 - 4);
+    if rng.f64() < 0.5 {
+        -base
+    } else {
+        base
+    }
+}
+
+#[test]
+fn prop_csv_round_trips_for_random_tables() {
+    let mut rng = Rng::new(0xC5F);
+    for case in 0..60 {
+        let ncols = rng.range_usize(1, 5);
+        let nrows = rng.range_usize(0, 12);
+        let columns: Vec<Column> = (0..ncols)
+            .map(|i| {
+                let c = Column::str(format!("col{i}"));
+                if rng.f64() < 0.4 {
+                    c.with_unit(random_string(&mut rng))
+                } else {
+                    c
+                }
+            })
+            .collect();
+        let mut rs = RowSet::new(format!("random {case}"), columns);
+        let mut expected: Vec<Vec<Value>> = Vec::new();
+        for _ in 0..nrows {
+            let mut row = Vec::new();
+            let mut vals = Vec::new();
+            for _ in 0..ncols {
+                let cell = match rng.range_usize(0, 4) {
+                    0 => Cell::str(random_string(&mut rng)),
+                    1 => Cell::float(random_float(&mut rng)),
+                    2 => Cell::int(rng.next_u64() as i64),
+                    3 => Cell::bool(rng.f64() < 0.5),
+                    _ => Cell::missing(),
+                };
+                vals.push(cell.value.clone());
+                row.push(cell);
+            }
+            expected.push(vals);
+            rs.push(row);
+        }
+
+        let parsed = parse_csv(&rs.to_csv())
+            .unwrap_or_else(|e| panic!("case {case}: parse failed: {e}"));
+        assert_eq!(parsed.len(), 1 + nrows, "case {case}: row count");
+        assert_eq!(parsed[0].len(), ncols, "case {case}: header arity");
+        for (ri, vals) in expected.iter().enumerate() {
+            let got = &parsed[1 + ri];
+            assert_eq!(got.len(), ncols, "case {case} row {ri}: arity");
+            for (ci, v) in vals.iter().enumerate() {
+                match v {
+                    Value::Str(s) => assert_eq!(&got[ci], s, "case {case}"),
+                    Value::Int(i) => {
+                        assert_eq!(
+                            got[ci].parse::<i64>().unwrap(),
+                            *i,
+                            "case {case}"
+                        )
+                    }
+                    Value::Float(x) => {
+                        // Rust's shortest Display round-trips exactly.
+                        let back: f64 = got[ci].parse().unwrap();
+                        assert_eq!(back.to_bits(), x.to_bits(), "case {case}");
+                    }
+                    Value::Bool(b) => {
+                        assert_eq!(
+                            got[ci].parse::<bool>().unwrap(),
+                            *b,
+                            "case {case}"
+                        )
+                    }
+                    Value::Missing => {
+                        assert!(got[ci].is_empty(), "case {case}")
+                    }
+                }
+            }
+        }
+
+        // The JSON side of the same random table must parse too.
+        parse_json(&rs.to_json())
+            .unwrap_or_else(|e| panic!("case {case}: bad JSON: {e}"));
+    }
+}

@@ -166,6 +166,25 @@ fn main() {
         black_box(refine_spec.simulate_trace(&trace, true).output_tokens)
     });
 
+    // K-pool screen: the partition-native stage A over the full
+    // generated K ∈ {2,3,4} cutoff grids × the legacy γ grid — the cost
+    // of opening the K axis analytically.
+    let kpool_parts: Vec<Vec<u32>> =
+        (2u32..=4).flat_map(optimize::kpool_partitions).collect();
+    let mut kpool_cells = 0usize;
+    g.bench("optimize_stage_a_kpool_screen(K=2..4)", || {
+        let cfg = OptimizeConfig {
+            gpus: vec![Gpu::H100],
+            partitions: kpool_parts.clone(),
+            gen: gen.clone(),
+            groups: 16,
+            ..Default::default()
+        };
+        let cells = optimize::screen(&workload, &cfg);
+        kpool_cells = cells.len();
+        black_box(cells.len())
+    });
+
     let stats = g.finish();
     assert_eq!(steps_seq, steps_par, "parallel fast path must replay exactly");
     assert_eq!(
@@ -205,6 +224,13 @@ fn main() {
         screen_us_per_cell,
         stats[5].mean_ns / 1e6,
         refine_vs_screen_cell,
+    );
+    let kpool_us_per_cell = stats[6].mean_ns / 1e3 / kpool_cells.max(1) as f64;
+    println!(
+        "kpool screen: {} partition x gamma cells (K=2..4) in {:.1} ms \
+         ({kpool_us_per_cell:.1} µs/cell)",
+        kpool_cells,
+        stats[6].mean_ns / 1e6,
     );
 
     if record {
@@ -262,6 +288,17 @@ fn main() {
              screen-wide-refine-narrow\"\n  }},\n",
             stats[4].mean_ns / 1e6,
             stats[5].mean_ns / 1e6,
+        ));
+        j.push_str(&format!(
+            "  \"kpool_screen\": {{\n    \
+             \"cells\": {kpool_cells},\n    \
+             \"screen_ms\": {:.3},\n    \
+             \"us_per_cell\": {kpool_us_per_cell:.2},\n    \
+             \"note\": \"partition-native stage A over the generated \
+             K in 2..=4 cutoff grids (41 partition vectors x the legacy \
+             gamma grid, H100) — the analytical cost of the K-pool \
+             topology axis\"\n  }},\n",
+            stats[6].mean_ns / 1e6,
         ));
         j.push_str(
             "  \"recorded_by\": \"cargo bench --bench bench_sim_engine -- \

@@ -6,17 +6,21 @@
 //! wattlaw fleet --trace azure|lmsys|agent --gpu h100|h200|b200|gb200
 //!               --topo homo|pool|fleetopt [--b-short N] [--gamma G]
 //!               [--lambda R] [--lbar window|traffic] [--acct pergpu|pergroup]
-//! wattlaw sweep --trace azure --gpu h100           FleetOpt (B_short, γ*) sweep
+//! wattlaw sweep --trace azure --gpu h100 [--pools K | --cutoffs a,b,c]
+//!                  FleetOpt (B_short, γ*) sweep; K-pool partition sweep
 //! wattlaw optimize [--trace azure] [--gpu h100] [--lambda R] [--duration S]
 //!                  [--groups N] [--b-short N] [--gamma G] [--dispatch NAME]
+//!                  [--pools K] [--cutoffs a,b,c]
 //!                  [--top-k K] [--slo-ttft S] [--workers N]
 //!                  two-stage search: analytical screen, simulated refine
 //! wattlaw power [--gpu b200]                        P(b) curve
 //! wattlaw simulate [--trace azure] [--lambda R] [--duration S] [--groups N]
 //!                  [--dispatch rr|jsq|least-kv|power]
 //!                  [--router context|adaptive|fleetopt] [--spill F]
+//!                  [--pools K] [--cutoffs a,b,c]   K-pool routed fleet
 //! wattlaw simulate sweep [--lambda 1000] [--duration S] [--groups N]
 //!                  [--dispatch NAME] [--b-short N] [--spill F]
+//!                  [--pools K] [--cutoffs a,b,c]
 //!                  [--slo-ttft S] [--workers N]   scenario grid, threaded
 //! wattlaw serve [--requests N] [--b-short N] [--artifacts DIR]
 //! wattlaw validate [--artifacts DIR]                golden numerics check
@@ -55,10 +59,10 @@ pub struct Args {
 }
 
 /// Keys that are value-taking options; everything else with `--` is a flag.
-const VALUE_KEYS: [&str; 19] = [
+const VALUE_KEYS: [&str; 21] = [
     "lbar", "trace", "gpu", "topo", "b-short", "gamma", "lambda", "acct",
     "requests", "artifacts", "duration", "groups", "dispatch", "router",
-    "spill", "slo-ttft", "workers", "format", "top-k",
+    "spill", "slo-ttft", "workers", "format", "top-k", "pools", "cutoffs",
 ];
 
 pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Args {
@@ -139,6 +143,73 @@ impl Args {
             }),
         }
     }
+
+    /// Strictly-validated `--gamma` (errors on junk or γ < 1, unlike
+    /// the legacy `opt_f64` silent-default convention) — the K-pool
+    /// surfaces share this one parse.
+    pub fn gamma_strict(&self) -> crate::Result<Option<f64>> {
+        match self.opt("gamma") {
+            None => Ok(None),
+            Some(g) => {
+                let v: f64 = g
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --gamma '{g}'"))?;
+                anyhow::ensure!(v >= 1.0, "--gamma must be >= 1 (got {v})");
+                Ok(Some(v))
+            }
+        }
+    }
+
+    /// `--pools K` — the K-pool partition axis (K ∈ 2..=4).
+    pub fn pools_k(&self) -> crate::Result<Option<u32>> {
+        match self.opt("pools") {
+            None => Ok(None),
+            Some(s) => {
+                let k: u32 = s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --pools '{s}'"))?;
+                anyhow::ensure!(
+                    (2..=4).contains(&k),
+                    "--pools must be in 2..=4 (got {k})"
+                );
+                Ok(Some(k))
+            }
+        }
+    }
+
+    /// `--cutoffs a,b,c` — explicit interior partition cutoffs, tokens.
+    /// The long pool at `LONG_CTX` is appended automatically.
+    pub fn cutoffs(&self) -> crate::Result<Option<Vec<u32>>> {
+        match self.opt("cutoffs") {
+            None => Ok(None),
+            Some(s) => {
+                let mut cuts = Vec::new();
+                for part in s.split(',') {
+                    let c: u32 = part.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("bad --cutoffs entry '{part}'")
+                    })?;
+                    anyhow::ensure!(
+                        (1..=LONG_CTX).contains(&c),
+                        "cutoff {c} outside 1..={LONG_CTX}"
+                    );
+                    cuts.push(c);
+                }
+                anyhow::ensure!(!cuts.is_empty(), "--cutoffs needs values");
+                cuts.sort_unstable();
+                cuts.dedup();
+                if cuts.last() != Some(&LONG_CTX) {
+                    cuts.push(LONG_CTX);
+                }
+                anyhow::ensure!(
+                    cuts.len() >= 2,
+                    "--cutoffs needs at least one interior cutoff below \
+                     {LONG_CTX} (a bare {LONG_CTX} is the homogeneous \
+                     baseline, not a partition)"
+                );
+                Ok(Some(cuts))
+            }
+        }
+    }
 }
 
 /// Entry point for `main` — returns the process exit code.
@@ -173,24 +244,30 @@ wattlaw — The 1/W Law, reproduced (context-length routing & GPU generation \
 gains for LLM inference energy efficiency)
 
 commands:
-  tables     regenerate paper tables/figures (--all, --t1..--t7, --law,
+  tables     regenerate paper tables/figures (--all, --t1..--t8, --law,
              --power-fig, --dispatch-fig, --independence; --lbar window|traffic)
   fleet      analyze one fleet configuration (--trace --gpu --topo ...)
-  sweep      FleetOpt (B_short, γ*) closed-form sweep (legacy, stage A only)
+  sweep      FleetOpt (B_short, γ*) closed-form sweep (legacy, stage A only);
+             with --pools K or --cutoffs a,b,c: K-pool partition x γ sweep
   optimize   two-stage FleetOpt search over scenario space: stage A screens
-             the B_short x gamma x GPU-generation grid with the closed-form
+             the partition x gamma x GPU-generation grid with the closed-form
              planner, stage B replays the top-k cells (x dispatch policies)
              through the event-driven simulator and re-ranks by measured
              tok/W with the SLO verdict as a hard filter
-             (--gpu restricts the generation axis, --top-k, --slo-ttft)
+             (--gpu restricts the generation axis, --top-k, --slo-ttft;
+              --pools K screens the generated K-pool cutoff grids,
+              --cutoffs a,b,c one explicit partition vector)
   power      print a GPU's P(b) curve (--gpu)
   simulate   event-driven fleet simulation vs analytics
              (--dispatch rr|jsq|least-kv|power,
-              --router context|adaptive|fleetopt, --spill F)
+              --router context|adaptive|fleetopt, --spill F;
+              --pools K / --cutoffs a,b,c simulate a K-pool routed fleet,
+              zero-traffic pools warn and bill idle power)
   simulate sweep
              dispatch x topology x context-window scenario grid at fleet
              scale (default λ=1000), cells across worker threads; every
-             cell reports tok/W + p99 TTFT + SLO verdict
+             cell reports tok/W + p99 TTFT + SLO verdict; --pools K adds
+             one K'-pool partition cell per K' in 2..=K
   serve      serve a trace through the real AOT model (2-pool demo)
   validate   check runtime numerics against the JAX golden trace
   report     paper-vs-measured summary (EXPERIMENTS.md §input)
@@ -230,6 +307,9 @@ fn cmd_tables(args: &Args) -> crate::Result<i32> {
         }
         if all || args.flag("t7") {
             out.push_str(&tables::t7::generate());
+        }
+        if all || args.flag("t8") {
+            out.push_str(&tables::t8::generate());
         }
         if all || args.flag("law") {
             out.push_str(&tables::law_fig::generate());
@@ -316,11 +396,79 @@ fn cmd_fleet(args: &Args) -> crate::Result<i32> {
 
 fn cmd_sweep(args: &Args) -> crate::Result<i32> {
     use crate::results::{Cell, Column, RowSet};
+    use crate::scenario::optimize as scenario_optimize;
     // Validate the output format before doing any work.
     let format = args.format()?;
     let trace = args.trace();
     let profile: Arc<dyn GpuProfile> =
         Arc::new(ManualProfile::for_gpu(args.gpu()));
+
+    // K-pool mode: rank partition vectors × γ with the same closed-form
+    // screen (`--pools K` for the generated grids, `--cutoffs` for one
+    // explicit vector).
+    let partitions = match (args.cutoffs()?, args.pools_k()?) {
+        (Some(cuts), _) => Some(vec![cuts]),
+        (None, Some(k)) => {
+            Some((2..=k).flat_map(scenario_optimize::kpool_partitions).collect())
+        }
+        (None, None) => None,
+    };
+    if let Some(partitions) = partitions {
+        let gammas: Vec<f64> = match args.gamma_strict()? {
+            Some(gamma) => vec![gamma],
+            None => optimizer::GAMMA_GRID.to_vec(),
+        };
+        let ranked = scenario_optimize::screen_partitions(
+            &trace,
+            args.opt_f64("lambda", 1000.0),
+            profile,
+            &partitions,
+            &gammas,
+            args.lbar(),
+            0.85,
+            0.5,
+            args.acct(),
+        );
+        let mut rs = RowSet::new(
+            format!(
+                "K-pool partition closed-form sweep — {} on {}",
+                trace.name,
+                args.gpu().spec().name
+            ),
+            vec![
+                Column::int("pools"),
+                Column::str("cutoffs").with_unit("tok"),
+                Column::float("gamma"),
+                Column::float("tok/W").with_unit("tok/J"),
+                Column::int("groups"),
+            ],
+        );
+        for r in &ranked {
+            rs.push(vec![
+                Cell::int(r.cutoffs.len() as i64),
+                Cell::str(scenario_optimize::cutoffs_label(&r.cutoffs)),
+                Cell::float(r.gamma),
+                Cell::float(r.report.tok_per_watt.0)
+                    .shown(format!("{:.2}", r.report.tok_per_watt.0)),
+                Cell::int(r.report.total_groups as i64),
+            ]);
+        }
+        let best = &ranked[0];
+        rs.note(format!(
+            "best partition: K={} at cutoffs {:?}, γ={}",
+            best.cutoffs.len(),
+            best.cutoffs,
+            best.gamma
+        ));
+        rs.note(
+            "closed-form only (stage A); `wattlaw optimize --pools K` \
+             additionally validates survivors against the event-driven \
+             simulator and the SLO",
+        );
+        println!("{}", rs.emit(format));
+        return Ok(0);
+    }
+
     let ranked = optimizer::sweep_fleetopt(
         &trace,
         args.opt_f64("lambda", 1000.0),
@@ -384,18 +532,22 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
         None => defaults.gpus.clone(),
     };
     let b_shorts = match args.opt("b-short") {
-        Some(b) => vec![b
-            .parse::<u32>()
-            .map_err(|_| anyhow::anyhow!("bad --b-short '{b}'"))?],
+        Some(b) => {
+            let v = b
+                .parse::<u32>()
+                .map_err(|_| anyhow::anyhow!("bad --b-short '{b}'"))?;
+            // The boundary becomes the [b, LONG_CTX] partition vector;
+            // b = LONG_CTX would collapse it to a single pool.
+            anyhow::ensure!(
+                (1..LONG_CTX).contains(&v),
+                "--b-short must be in 1..{LONG_CTX} (got {v})"
+            );
+            vec![v]
+        }
         None => defaults.b_shorts.clone(),
     };
-    let gammas = match args.opt("gamma") {
-        Some(g) => {
-            let gamma: f64 =
-                g.parse().map_err(|_| anyhow::anyhow!("bad --gamma '{g}'"))?;
-            anyhow::ensure!(gamma >= 1.0, "--gamma must be >= 1 (got {gamma})");
-            vec![gamma]
-        }
+    let gammas = match args.gamma_strict()? {
+        Some(gamma) => vec![gamma],
         None => defaults.gammas.clone(),
     };
     let dispatches = match args.opt("dispatch") {
@@ -408,10 +560,25 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
         }
         None => defaults.dispatches.clone(),
     };
+    // The K-pool partition axis: an explicit --cutoffs vector, or the
+    // full generated grids for every K' in 2..=K with --pools K; left
+    // empty (the legacy [B_short, 64K] axis) otherwise.
+    let partitions = match (args.cutoffs()?, args.pools_k()?) {
+        (Some(cuts), _) => vec![cuts],
+        (None, Some(k)) => {
+            (2..=k).flat_map(optimize::kpool_partitions).collect()
+        }
+        (None, None) => Vec::new(),
+    };
 
+    // Stage B needs at least one simulated group per pool of the widest
+    // partition (sim_pools asserts it; erroring here beats a panic on a
+    // worker thread after stage A ran).
+    let max_k = partitions.iter().map(Vec::len).max().unwrap_or(2) as u32;
     let cfg = OptimizeConfig {
         gpus,
         b_shorts,
+        partitions,
         gammas,
         dispatches,
         gen: GenConfig {
@@ -420,7 +587,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
             seed: 42,
             ..defaults.gen.clone()
         },
-        groups: args.opt_u32("groups", 8).max(2),
+        groups: args.opt_u32("groups", 8).max(2).max(max_k),
         slo: SloTargets { ttft_p99_s: args.opt_f64("slo-ttft", 0.5) },
         lbar: args.lbar(),
         acct: args.acct(),
@@ -432,12 +599,14 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
         .map(|n| n.get() as u32)
         .unwrap_or(1);
     let workers = args.opt_u32("workers", default_workers).max(1) as usize;
+    let n_partitions = cfg.effective_partitions().len();
     eprintln!(
-        "optimize: screening {} analytical cells ({} GPUs x {} B_short x {} \
-         gamma), refining top {} x {} dispatch on {} worker threads…",
-        cfg.gpus.len() * cfg.b_shorts.len() * cfg.gammas.len(),
+        "optimize: screening {} analytical cells ({} GPUs x {} partition \
+         vectors x {} gamma), refining top {} x {} dispatch on {} worker \
+         threads…",
+        cfg.gpus.len() * n_partitions * cfg.gammas.len(),
         cfg.gpus.len(),
-        cfg.b_shorts.len(),
+        n_partitions,
         cfg.gammas.len(),
         cfg.top_k,
         cfg.dispatches.len(),
@@ -477,10 +646,29 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
     let trace = args.trace();
     let lambda = args.opt_f64("lambda", 60.0);
     let duration = args.opt_f64("duration", 5.0);
-    // The routed side of the comparison needs one group per pool.
-    let groups = args.opt_u32("groups", 4).max(2);
     let b_short = args.opt_u32("b-short", trace.paper_b_short);
     let gamma = args.opt_f64("gamma", 2.0);
+
+    // K-pool mode: `--cutoffs a,b,c` (explicit) or `--pools K` (default
+    // powers-of-four ladder) swap the two-pool routed side for a K-pool
+    // partition with its bucket router.
+    let partition = match (args.cutoffs()?, args.pools_k()?) {
+        (Some(cuts), _) => Some(cuts),
+        (None, Some(k)) => Some(crate::fleet::topology::default_partition(k)),
+        (None, None) => None,
+    };
+    let routed_topo = match &partition {
+        // γ applies to the partition's last pool only when given
+        // explicitly (plain bucket routing by default).
+        Some(cuts) => Topology::partition_with_gamma(
+            cuts,
+            args.gamma_strict()?.unwrap_or(1.0),
+        ),
+        None => Topology::PoolRouting { b_short, short_ctx: b_short.max(2048) },
+    };
+    // The routed side of the comparison needs one group per pool.
+    let groups =
+        args.opt_u32("groups", 4).max(routed_topo.num_pools() as u32).max(2);
 
     let dispatch_name = args.opt("dispatch").unwrap_or("rr");
     let mut policy = dispatch::parse(dispatch_name).ok_or_else(|| {
@@ -490,13 +678,20 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
     })?;
     let spill = args.opt_f64("spill", 2.0);
     anyhow::ensure!(spill > 0.0, "--spill must be positive (got {spill})");
-    let router: Box<dyn Router> = match args.opt("router") {
-        None | Some("context") => Box::new(ContextRouter::two_pool(b_short)),
-        Some("adaptive") => {
+    let router: Box<dyn Router> = match (&partition, args.opt("router")) {
+        (Some(_), None) => routed_topo.router(),
+        (Some(_), Some(_)) => anyhow::bail!(
+            "--pools/--cutoffs route through the topology's K-pool bucket \
+             router; drop --router"
+        ),
+        (None, None) | (None, Some("context")) => {
+            Box::new(ContextRouter::two_pool(b_short))
+        }
+        (None, Some("adaptive")) => {
             Box::new(AdaptiveRouter::new(b_short).with_spill_factor(spill))
         }
-        Some("fleetopt") => Box::new(FleetOptRouter::new(b_short, gamma)),
-        Some(other) => {
+        (None, Some("fleetopt")) => Box::new(FleetOptRouter::new(b_short, gamma)),
+        (None, Some(other)) => {
             anyhow::bail!("unknown router '{other}' (context|adaptive|fleetopt)")
         }
     };
@@ -525,9 +720,7 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
         true,
     );
 
-    let (routed_groups, routed_cfgs) =
-        Topology::PoolRouting { b_short, short_ctx: b_short.max(2048) }
-            .sim_pools(&p, groups, 1024);
+    let (routed_groups, routed_cfgs) = routed_topo.sim_pools(&p, groups, 1024);
     let routed = simulate_topology_with(
         &reqs,
         router.as_ref(),
@@ -546,12 +739,15 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
         router.name(),
         policy.name(),
     );
-    for (name, r) in [("homogeneous 64K", &homo), ("two-pool routed", &routed)] {
+    let routed_label = format!("routed {}", routed_topo.label());
+    for (name, r) in
+        [("homogeneous 64K", &homo), (routed_label.as_str(), &routed)]
+    {
         println!(
             "{name:<18} tok/W={:<7.3} tokens={:<8} J={:<10.0} pools={}",
-            r.tok_per_watt,
+            r.tok_per_watt_accounted(),
             r.output_tokens,
-            r.joules,
+            r.accounted_joules(),
             r.pools.len()
         );
         for pl in &r.pools {
@@ -568,10 +764,15 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
                 m.ttft_s.p99()
             );
         }
+        // A router whose cutoffs exclude a pool must say so out loud:
+        // its idle groups are billed in the accounted tok/W above.
+        for w in &r.warnings {
+            println!("    warning: {w}");
+        }
     }
     println!(
         "topology gain (simulated): {:.2}x",
-        routed.tok_per_watt / homo.tok_per_watt
+        routed.tok_per_watt_accounted() / homo.tok_per_watt_accounted()
     );
     Ok(0)
 }
@@ -609,6 +810,16 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
     };
     let spill = args.opt_f64("spill", 2.0);
     anyhow::ensure!(spill > 0.0, "--spill must be positive (got {spill})");
+    // K as a grid dimension: one default-ladder partition cell per K'
+    // in 2..=K (`--pools K`), or a single explicit `--cutoffs` vector.
+    let partitions = match (args.cutoffs()?, args.pools_k()?) {
+        (Some(cuts), _) => vec![cuts],
+        (None, Some(k)) => (2..=k)
+            .map(crate::fleet::topology::default_partition)
+            .collect(),
+        (None, None) => Vec::new(),
+    };
+    let max_k = partitions.iter().map(Vec::len).max().unwrap_or(2) as u32;
 
     let cfg = SweepConfig {
         gpu: args.gpu(),
@@ -618,9 +829,10 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
             seed: 42,
             ..defaults.gen
         },
-        groups: args.opt_u32("groups", 8).max(2),
+        groups: args.opt_u32("groups", 8).max(2).max(max_k),
         dispatches,
         b_shorts,
+        partitions,
         spill: Some(spill),
         slo: SloTargets { ttft_p99_s: args.opt_f64("slo-ttft", 0.5) },
         acct: args.acct(),
@@ -829,6 +1041,93 @@ mod tests {
         .is_err());
         assert!(run(
             "optimize --gamma 0.5 --gpu h100"
+                .split_whitespace()
+                .map(String::from)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pools_and_cutoffs_options_parse_and_validate() {
+        assert_eq!(args("simulate").pools_k().unwrap(), None);
+        assert_eq!(args("simulate --pools 3").pools_k().unwrap(), Some(3));
+        assert!(args("simulate --pools 1").pools_k().is_err());
+        assert!(args("simulate --pools 9").pools_k().is_err());
+        assert!(args("simulate --pools x").pools_k().is_err());
+        assert_eq!(args("simulate").cutoffs().unwrap(), None);
+        // LONG_CTX long pool appended (and kept when given explicitly).
+        assert_eq!(
+            args("simulate --cutoffs 2048,16384").cutoffs().unwrap(),
+            Some(vec![2048, 16384, LONG_CTX])
+        );
+        assert_eq!(
+            args("simulate --cutoffs 4096,65536").cutoffs().unwrap(),
+            Some(vec![4096, LONG_CTX])
+        );
+        // Unsorted/duplicated input normalizes.
+        assert_eq!(
+            args("simulate --cutoffs 16384,2048,16384").cutoffs().unwrap(),
+            Some(vec![2048, 16384, LONG_CTX])
+        );
+        assert!(args("simulate --cutoffs 4096,abc").cutoffs().is_err());
+        assert!(args("simulate --cutoffs 0").cutoffs().is_err());
+        // A bare 64K is the homogeneous baseline, not a partition.
+        assert!(args("simulate --cutoffs 65536").cutoffs().is_err());
+        assert!(args("simulate --cutoffs 65536,65536").cutoffs().is_err());
+    }
+
+    #[test]
+    fn simulate_runs_a_kpool_fleet() {
+        let quick = |extra: &str| {
+            run(format!("simulate --lambda 10 --duration 1 {extra}")
+                .split_whitespace()
+                .map(String::from))
+        };
+        assert_eq!(quick("--pools 3 --groups 3").unwrap(), 0);
+        assert_eq!(quick("--cutoffs 2048,8192 --groups 4").unwrap(), 0);
+        // The K-pool bucket router replaces --router.
+        assert!(quick("--pools 3 --router adaptive").is_err());
+        // γ on a partition is validated, not silently defaulted.
+        assert!(quick("--pools 2 --gamma 0.5").is_err());
+        assert!(quick("--pools 2 --gamma 2x").is_err());
+    }
+
+    #[test]
+    fn sweep_ranks_partitions_with_pools_flag() {
+        assert_eq!(
+            run("sweep --cutoffs 4096,16384 --format csv"
+                .split_whitespace()
+                .map(String::from))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn optimize_screens_kpool_partitions() {
+        let code = run(
+            "optimize --gpu h100 --lambda 60 --duration 0.5 --groups 4 \
+             --cutoffs 2048,8192 --gamma 1 --dispatch rr --top-k 1 \
+             --workers 2 --slo-ttft 1000 --format json"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
+        // --groups below the partition's pool count is floored, not a
+        // stage-B worker-thread panic.
+        let code = run(
+            "optimize --gpu h100 --lambda 60 --duration 0.5 --groups 2 \
+             --cutoffs 2048,8192 --gamma 1 --dispatch rr --top-k 1 \
+             --workers 2 --slo-ttft 1000 --format json"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
+        // A boundary at the full window has no two-pool reduction.
+        assert!(run(
+            "optimize --gpu h100 --b-short 65536"
                 .split_whitespace()
                 .map(String::from)
         )

@@ -9,18 +9,21 @@
 //! a thin wrapper kept for source compatibility: [`sweep_fleetopt`]
 //! delegates to the new search's stage-A screen
 //! ([`screen_closed_form`](crate::scenario::optimize::screen_closed_form))
-//! over the same grids, so both paths rank by identical arithmetic —
-//! but it never validates its winner dynamically. Prefer the two-stage
-//! search, which replays the analytical top-k through the event-driven
-//! simulator and refuses SLO-violating winners.
+//! over the same grids, and [`multi_pool`] delegates to the K-pool
+//! [`Topology::Partition`] pool plans — so every path ranks by
+//! identical arithmetic. Neither legacy entry point validates its
+//! winner dynamically. Prefer the two-stage search, which screens
+//! partition vectors for any K, replays the analytical top-k through
+//! the event-driven simulator, and refuses SLO-violating winners.
 
 use std::sync::Arc;
 
 use super::analysis::{fleet_tpw_analysis, FleetReport};
-use super::pool::{LBarPolicy, PoolPlan};
+use super::pool::LBarPolicy;
 use super::profile::{GpuProfile, PowerAccounting};
 #[cfg(test)]
 use super::topology::LONG_CTX;
+use super::topology::Topology;
 use crate::workload::WorkloadTrace;
 
 /// Result of a (B_short, γ) sweep.
@@ -79,6 +82,14 @@ pub fn optimize_fleetopt(
 
 /// §10.3 extension: K context-tiered pools at power-of-two boundaries,
 /// e.g. K=3 → windows {4K, 16K, 64K}. Returns the fleet report.
+///
+/// Since the K-pool [`Topology::Partition`] landed as a first-class
+/// scenario axis, this is a thin wrapper over its pool plans (the
+/// K-pool Eq. 4 path behind `ScenarioSpec::analyze` and the
+/// partition-native optimizer screen) — `tests/optimize_oracle.rs`
+/// pins the agreement. Windows are deduplicated and floored at 1024
+/// tokens (the FleetOpt `short_ctx` convention); every grid this
+/// function has ever been called with is unaffected.
 pub fn multi_pool(
     trace: &WorkloadTrace,
     lambda_rps: f64,
@@ -90,31 +101,9 @@ pub fn multi_pool(
     acct: PowerAccounting,
 ) -> FleetReport {
     assert!(!windows.is_empty());
-    let mut ws = windows.to_vec();
-    ws.sort_unstable();
-    let mut pools: Vec<PoolPlan> = Vec::new();
-    let mut lo = 0.0f64;
-    for (i, &w) in ws.iter().enumerate() {
-        let hi = if i + 1 == ws.len() {
-            trace.prompt_cdf.max_tokens()
-        } else {
-            w as f64
-        };
-        pools.push(PoolPlan::for_slice(
-            format!("tier-{}k", w / 1024),
-            profile.clone(),
-            trace,
-            lambda_rps,
-            lo,
-            hi,
-            w,
-            1.0,
-            lbar,
-            rho,
-            ttft_slo_s,
-        ));
-        lo = hi;
-    }
+    let pools = Topology::partition(windows).pools(
+        trace, lambda_rps, profile, None, lbar, rho, ttft_slo_s,
+    );
     fleet_tpw_analysis(&pools, acct)
 }
 

@@ -9,12 +9,44 @@
 use std::sync::Arc;
 
 use super::pool::{LBarPolicy, PoolPlan};
-use super::profile::GpuProfile;
+use super::profile::{GpuProfile, ManualProfile};
+use crate::power::Gpu;
 use crate::sim::GroupSimConfig;
 use crate::workload::WorkloadTrace;
 
 /// Default long-pool serving window (the paper's homogeneous baseline).
 pub const LONG_CTX: u32 = 65_536;
+
+/// One pool of a K-pool context partition ([`Topology::Partition`]):
+/// the inclusive upper prompt-length cutoff routed here, plus optional
+/// per-pool overrides of the fleet GPU generation and the simulated
+/// group count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionPool {
+    /// Inclusive upper prompt cutoff, tokens. The last pool's cutoff is
+    /// also its serving window; requests longer than the second-to-last
+    /// cutoff all land in the last pool.
+    pub cutoff: u32,
+    /// GPU generation serving this pool (`None` = the fleet profile the
+    /// caller passes in, i.e. the scenario's GPU).
+    pub gpu: Option<Gpu>,
+    /// Simulated TP groups for this pool (`None` = an even share of the
+    /// scenario's total, remainder to the shorter pools).
+    pub groups: Option<u32>,
+}
+
+impl PartitionPool {
+    pub fn at(cutoff: u32) -> Self {
+        PartitionPool { cutoff, gpu: None, groups: None }
+    }
+}
+
+/// The default K-pool cutoff vector: a powers-of-four ladder below the
+/// 64K long window — K=3 is the paper's §10.3 example {4K, 16K, 64K}.
+pub fn default_partition(k: u32) -> Vec<u32> {
+    assert!((1..=4).contains(&k), "default partitions cover K in 1..=4");
+    (1..=k).map(|i| LONG_CTX >> (2 * (k - i))).collect()
+}
 
 /// A fleet routing topology.
 #[derive(Debug, Clone)]
@@ -31,6 +63,76 @@ pub enum Topology {
     /// Semantic routing (§5.1): short/simple traffic to a *small model*
     /// pool at `short_ctx`; the rest to the large model at `LONG_CTX`.
     Semantic { b_short: u32, short_ctx: u32 },
+    /// K context-tiered pools (§10.3 generalized): requests bucket-route
+    /// by prompt length into the pool with the smallest sufficient
+    /// cutoff, and the last (longest) pool optionally runs FleetOpt
+    /// compress-and-route at γ. K=2 with γ reproduces [`Self::FleetOpt`]
+    /// bit-for-bit; γ=1 reproduces the legacy
+    /// [`multi_pool`](super::optimizer::multi_pool) closed form.
+    Partition { pools: Vec<PartitionPool>, gamma: f64 },
+}
+
+impl Topology {
+    /// A plain K-pool partition from its cutoff vector (sorted and
+    /// deduplicated; the last entry is the long pool's window).
+    pub fn partition(cutoffs: &[u32]) -> Self {
+        Self::partition_with_gamma(cutoffs, 1.0)
+    }
+
+    /// A K-pool partition with FleetOpt γ-compression on the last pool.
+    pub fn partition_with_gamma(cutoffs: &[u32], gamma: f64) -> Self {
+        assert!(!cutoffs.is_empty(), "a partition needs at least one pool");
+        assert!(gamma >= 1.0, "γ must be >= 1");
+        let mut cs = cutoffs.to_vec();
+        cs.sort_unstable();
+        cs.dedup();
+        assert!(cs[0] >= 1, "cutoffs must be positive");
+        // A single-pool "partition" has no routing boundary, so the
+        // router can never realize compress-and-route — reject γ > 1
+        // rather than let analyze() model a fleet simulate() won't run.
+        assert!(
+            cs.len() >= 2 || gamma == 1.0,
+            "γ-compression needs at least two pools (K=1 has no split \
+             boundary to compress behind)"
+        );
+        Topology::Partition {
+            pools: cs.into_iter().map(PartitionPool::at).collect(),
+            gamma,
+        }
+    }
+}
+
+/// Validate the [`Topology::Partition`] invariant the constructors
+/// establish (strictly increasing cutoffs) — re-checked by every
+/// consumer because the fields are public for per-pool overrides:
+/// unsorted or duplicate cutoffs would silently invert traffic slices
+/// and route long prompts into short windows.
+fn assert_partition_sorted(pools: &[PartitionPool]) {
+    assert!(!pools.is_empty(), "a partition needs at least one pool");
+    assert!(
+        pools.windows(2).all(|w| w[0].cutoff < w[1].cutoff),
+        "partition cutoffs must be strictly increasing (got {:?}; build \
+         via Topology::partition* or sort them)",
+        pools.iter().map(|p| p.cutoff).collect::<Vec<_>>()
+    );
+}
+
+/// Serving window of partition pool `i`: the cutoff floored at 1024
+/// (the FleetOpt `short_ctx` convention, so the K=2 reduction is
+/// bit-identical), with the last pool γ-compressed and floored at the
+/// previous pool's window (FleetOpt's effective-window rule).
+fn partition_window(pools: &[PartitionPool], i: usize, gamma: f64) -> u32 {
+    if i + 1 == pools.len() && gamma > 1.0 {
+        let eff = (pools[i].cutoff as f64 / gamma).round() as u32;
+        let floor = if i == 0 {
+            1024
+        } else {
+            partition_window(pools, i - 1, gamma)
+        };
+        eff.max(floor)
+    } else {
+        pools[i].cutoff.max(1024)
+    }
 }
 
 impl Topology {
@@ -45,6 +147,23 @@ impl Topology {
             Topology::PoolRouting { b_short, .. }
             | Topology::FleetOpt { b_short, .. }
             | Topology::Semantic { b_short, .. } => Some(b_short),
+            // Only a two-pool partition has *the* split boundary the
+            // adaptive router spills across.
+            Topology::Partition { ref pools, .. } if pools.len() == 2 => {
+                Some(pools[0].cutoff)
+            }
+            Topology::Partition { .. } => None,
+        }
+    }
+
+    /// Number of pools this topology routes across.
+    pub fn num_pools(&self) -> usize {
+        match self {
+            Topology::Homogeneous { .. } => 1,
+            Topology::PoolRouting { .. }
+            | Topology::FleetOpt { .. }
+            | Topology::Semantic { .. } => 2,
+            Topology::Partition { pools, .. } => pools.len(),
         }
     }
 
@@ -59,6 +178,17 @@ impl Topology {
             }
             Topology::Semantic { b_short, .. } => {
                 format!("Semantic ({}K split)", b_short / 1024)
+            }
+            Topology::Partition { pools, gamma } => {
+                let tiers: Vec<String> = pools
+                    .iter()
+                    .map(|p| format!("{}K", p.cutoff / 1024))
+                    .collect();
+                if *gamma > 1.0 {
+                    format!("{}-pool {{{}}}/γ={gamma}", pools.len(), tiers.join("|"))
+                } else {
+                    format!("{}-pool {{{}}}", pools.len(), tiers.join("|"))
+                }
             }
         }
     }
@@ -182,6 +312,43 @@ impl Topology {
                     ),
                 ]
             }
+            Topology::Partition { ref pools, gamma } => {
+                assert!(gamma >= 1.0, "γ must be >= 1");
+                assert_partition_sorted(pools);
+                let k = pools.len();
+                let mut out = Vec::with_capacity(k);
+                let mut lo = 0.0f64;
+                for (i, part) in pools.iter().enumerate() {
+                    let last = i + 1 == k;
+                    let hi = if last { max_len } else { part.cutoff as f64 };
+                    let window = partition_window(pools, i, gamma);
+                    let compression = if last { gamma } else { 1.0 };
+                    let pool_profile: Arc<dyn GpuProfile> = match part.gpu {
+                        Some(g) => Arc::new(ManualProfile::for_gpu(g)),
+                        None => profile.clone(),
+                    };
+                    let name = if last && gamma > 1.0 {
+                        format!("tier-{}k/γ{gamma}", part.cutoff / 1024)
+                    } else {
+                        format!("tier-{}k", part.cutoff / 1024)
+                    };
+                    out.push(PoolPlan::for_slice(
+                        name,
+                        pool_profile,
+                        trace,
+                        lambda_rps,
+                        lo,
+                        hi,
+                        window,
+                        compression,
+                        lbar,
+                        rho,
+                        ttft_slo_s,
+                    ));
+                    lo = hi;
+                }
+                out
+            }
         }
     }
 }
@@ -201,14 +368,15 @@ impl Topology {
         ingest_chunk: u32,
     ) -> (Vec<u32>, Vec<GroupSimConfig>) {
         assert!(total_groups > 0);
-        let mk = |window: u32| GroupSimConfig {
+        let mk_for = |p: &dyn GpuProfile, window: u32| GroupSimConfig {
             window_tokens: window,
-            n_max: profile.n_max(window),
-            roofline: profile.roofline(),
-            power: profile.gpu().power,
+            n_max: p.n_max(window),
+            roofline: p.roofline(),
+            power: p.gpu().power,
             gpus_charged: 1.0,
             ingest_chunk,
         };
+        let mk = |window: u32| mk_for(profile, window);
         let split = |short_ctx: u32, long_window: u32| {
             assert!(
                 total_groups >= 2,
@@ -230,6 +398,68 @@ impl Topology {
             // prompts), which the live-L̄ roofline then rewards — the
             // dynamic counterpart of the analytical `W/γ` pool.
             Topology::FleetOpt { short_ctx, .. } => split(short_ctx, LONG_CTX),
+            // K-pool partition: interior pools get the same
+            // boundary + output-headroom window as the two-pool split (so
+            // a prompt routed at its cutoff always fits prompt + output);
+            // the last pool serves its cutoff as the full window, with γ
+            // compression happening in the router exactly like FleetOpt.
+            // Explicit per-pool group counts are honored; the remaining
+            // groups split evenly with the surplus to the shorter pools
+            // (reducing to ceil/floor halves at K=2).
+            Topology::Partition { ref pools, .. } => {
+                assert_partition_sorted(pools);
+                let k = pools.len() as u32;
+                assert!(
+                    total_groups >= k,
+                    "a {k}-pool partition needs at least {k} groups \
+                     (got {total_groups})"
+                );
+                let explicit: u32 = pools.iter().filter_map(|p| p.groups).sum();
+                let implicit =
+                    pools.iter().filter(|p| p.groups.is_none()).count() as u32;
+                assert!(
+                    explicit + implicit <= total_groups,
+                    "per-pool group counts ({explicit} explicit + {implicit} \
+                     implicit pools) exceed the fleet's {total_groups} groups"
+                );
+                let rest = total_groups - explicit;
+                assert!(
+                    implicit > 0 || rest == 0,
+                    "explicit per-pool group counts ({explicit}) must use all \
+                     {total_groups} fleet groups when every pool is explicit"
+                );
+                let (mut counts, mut filled) = (Vec::with_capacity(pools.len()), 0);
+                for part in pools {
+                    counts.push(match part.groups {
+                        Some(g) => {
+                            assert!(g > 0, "explicit pool group count must be > 0");
+                            g
+                        }
+                        None => {
+                            let share = rest / implicit
+                                + u32::from(filled < rest % implicit);
+                            filled += 1;
+                            share
+                        }
+                    });
+                }
+                let cfgs = pools
+                    .iter()
+                    .enumerate()
+                    .map(|(i, part)| {
+                        let window = if i + 1 == pools.len() {
+                            part.cutoff
+                        } else {
+                            part.cutoff.max(2048) + 1024
+                        };
+                        match part.gpu {
+                            Some(g) => mk_for(&ManualProfile::for_gpu(g), window),
+                            None => mk(window),
+                        }
+                    })
+                    .collect();
+                (counts, cfgs)
+            }
         }
     }
 
@@ -259,6 +489,19 @@ impl Topology {
             Topology::Semantic { b_short, .. } => Box::new(
                 SemanticRouter::new(0.7 * b_short as f64 / 8192.0),
             ),
+            // Bucket-route by request length across the K cutoffs; the
+            // last pool compresses by γ (identical to the FleetOpt
+            // router at K=2).
+            Topology::Partition { ref pools, gamma } => {
+                assert_partition_sorted(pools);
+                let boundaries: Vec<u32> = pools[..pools.len() - 1]
+                    .iter()
+                    .map(|p| p.cutoff)
+                    .collect();
+                Box::new(crate::router::context::KPoolRouter::new(
+                    boundaries, gamma,
+                ))
+            }
         }
     }
 }
@@ -369,5 +612,170 @@ mod tests {
         assert!(Topology::FleetOpt { b_short: 4096, short_ctx: 4096, gamma: 2.0 }
             .label()
             .contains("γ=2"));
+        let p = Topology::partition(&[4096, 16384, LONG_CTX]);
+        assert!(p.label().contains("3-pool"), "{}", p.label());
+        assert!(p.label().contains("4K|16K|64K"), "{}", p.label());
+        assert!(Topology::partition_with_gamma(&[4096, LONG_CTX], 2.0)
+            .label()
+            .contains("γ=2"));
+    }
+
+    #[test]
+    fn partition_constructor_sorts_and_dedups() {
+        let t = Topology::partition(&[16384, 4096, 16384, LONG_CTX]);
+        match &t {
+            Topology::Partition { pools, gamma } => {
+                assert_eq!(
+                    pools.iter().map(|p| p.cutoff).collect::<Vec<_>>(),
+                    vec![4096, 16384, LONG_CTX]
+                );
+                assert_eq!(*gamma, 1.0);
+            }
+            _ => panic!("not a partition"),
+        }
+        assert_eq!(t.num_pools(), 3);
+        assert_eq!(t.b_short(), None, "only K=2 exposes a split boundary");
+        assert_eq!(
+            Topology::partition(&[4096, LONG_CTX]).b_short(),
+            Some(4096)
+        );
+    }
+
+    #[test]
+    fn partition_pools_tile_traffic_and_shrink_windows() {
+        let t = azure_conversations();
+        let pools = Topology::partition(&[4096, 16384, LONG_CTX]).pools(
+            &t, 1000.0, h100(), None, LBarPolicy::Window, 0.85, 0.5);
+        assert_eq!(pools.len(), 3);
+        let total: f64 = pools.iter().map(|p| p.inputs.lambda_rps).sum();
+        assert!((total - 1000.0).abs() < 1e-6, "λ conserved: {total}");
+        assert_eq!(pools[0].inputs.context_tokens, 4096);
+        assert_eq!(pools[1].inputs.context_tokens, 16384);
+        assert_eq!(pools[2].inputs.context_tokens, LONG_CTX);
+        // Azure is short-dominant: traffic decreases up the tiers.
+        assert!(pools[0].inputs.lambda_rps > pools[1].inputs.lambda_rps);
+        assert!(pools[1].inputs.lambda_rps > pools[2].inputs.lambda_rps);
+    }
+
+    #[test]
+    fn k2_partition_pools_match_fleetopt_bitwise() {
+        // The K=2 reduction the optimizer oracle rests on: a two-pool
+        // partition with γ must produce the exact FleetOpt pool plans.
+        let t = azure_conversations();
+        for gamma in [1.0, 2.0, 3.0] {
+            let part = Topology::partition_with_gamma(&[4096, LONG_CTX], gamma)
+                .pools(&t, 1000.0, h100(), None, LBarPolicy::Window, 0.85, 0.5);
+            let fleet =
+                Topology::FleetOpt { b_short: 4096, short_ctx: 4096, gamma }
+                    .pools(&t, 1000.0, h100(), None, LBarPolicy::Window, 0.85, 0.5);
+            assert_eq!(part.len(), fleet.len());
+            for (a, b) in part.iter().zip(&fleet) {
+                assert_eq!(
+                    a.inputs.lambda_rps.to_bits(),
+                    b.inputs.lambda_rps.to_bits(),
+                    "γ={gamma}"
+                );
+                assert_eq!(a.inputs.context_tokens, b.inputs.context_tokens);
+                assert_eq!(
+                    a.inputs.l_bar.to_bits(),
+                    b.inputs.l_bar.to_bits(),
+                    "γ={gamma}"
+                );
+                assert_eq!(
+                    a.inputs.mean_prompt_tokens.to_bits(),
+                    b.inputs.mean_prompt_tokens.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partition_sim_pools_split_groups_with_remainder_to_short() {
+        let p = ManualProfile::h100_70b();
+        let topo = Topology::partition(&[2048, 8192, LONG_CTX]);
+        let (groups, cfgs) = topo.sim_pools(&p, 8, 1024);
+        assert_eq!(groups, vec![3, 3, 2]);
+        assert_eq!(cfgs[0].window_tokens, 2048 + 1024);
+        assert_eq!(cfgs[1].window_tokens, 8192 + 1024);
+        assert_eq!(cfgs[2].window_tokens, LONG_CTX);
+        assert!(cfgs[0].n_max > cfgs[2].n_max, "1/W: shorter window, more slots");
+        // K=2 reduces to the two-pool ceil/floor split.
+        let (g2, c2) =
+            Topology::partition(&[4096, LONG_CTX]).sim_pools(&p, 5, 1024);
+        assert_eq!(g2, vec![3, 2]);
+        assert_eq!(c2[0].window_tokens, 4096 + 1024);
+    }
+
+    #[test]
+    fn partition_honors_per_pool_group_and_gpu_overrides() {
+        let p = ManualProfile::h100_70b();
+        let topo = Topology::Partition {
+            pools: vec![
+                PartitionPool { cutoff: 4096, gpu: None, groups: Some(5) },
+                PartitionPool {
+                    cutoff: LONG_CTX,
+                    gpu: Some(crate::power::Gpu::B200),
+                    groups: None,
+                },
+            ],
+            gamma: 1.0,
+        };
+        let (groups, cfgs) = topo.sim_pools(&p, 8, 1024);
+        assert_eq!(groups, vec![5, 3]);
+        // The B200 pool draws the B200 power curve, not the fleet H100's.
+        let h100_b200_idle_differ = (cfgs[1].power.power_w(0.0)
+            - cfgs[0].power.power_w(0.0))
+        .abs()
+            > 1.0;
+        assert!(h100_b200_idle_differ, "per-pool GPU override ignored");
+        // Analytical side picks the override profile too.
+        let pools = topo.pools(
+            &azure_conversations(), 1000.0, h100(), None,
+            LBarPolicy::Window, 0.85, 0.5);
+        assert!(pools[1].profile.label().contains("B200"), "{}", pools[1].profile.label());
+    }
+
+    #[test]
+    #[should_panic(expected = "needs at least 3 groups")]
+    fn partition_rejects_fewer_groups_than_pools() {
+        Topology::partition(&[2048, 8192, LONG_CTX])
+            .sim_pools(&ManualProfile::h100_70b(), 2, 1024);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn hand_built_unsorted_partition_is_rejected_by_consumers() {
+        // The fields are public (per-pool overrides), so consumers
+        // re-check the constructor's sorted invariant instead of
+        // silently inverting traffic slices.
+        Topology::Partition {
+            pools: vec![PartitionPool::at(16384), PartitionPool::at(4096)],
+            gamma: 1.0,
+        }
+        .router();
+    }
+
+    #[test]
+    fn partition_router_buckets_and_compresses() {
+        let r = Topology::partition_with_gamma(&[4096, 16384, LONG_CTX], 2.0)
+            .router();
+        assert_eq!(r.num_pools(), 3);
+        use crate::workload::Request;
+        let req = |p: u32| Request {
+            id: 0, arrival_s: 0.0, prompt_tokens: p, output_tokens: 1,
+        };
+        assert_eq!(r.route(&req(100)).pool, 0);
+        assert_eq!(r.route(&req(8000)).pool, 1);
+        let long = r.route(&req(40_000));
+        assert_eq!(long.pool, 2);
+        assert_eq!(long.effective_prompt_tokens, 20_000);
+    }
+
+    #[test]
+    fn default_partition_is_a_powers_of_four_ladder() {
+        assert_eq!(default_partition(1), vec![LONG_CTX]);
+        assert_eq!(default_partition(2), vec![16384, LONG_CTX]);
+        assert_eq!(default_partition(3), vec![4096, 16384, LONG_CTX]);
+        assert_eq!(default_partition(4), vec![1024, 4096, 16384, LONG_CTX]);
     }
 }

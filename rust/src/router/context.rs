@@ -48,6 +48,59 @@ impl Router for ContextRouter {
     }
 }
 
+/// K-pool bucket router with FleetOpt compress-and-route on the final
+/// (longest) pool — the serving-time realization of
+/// [`Topology::Partition`](crate::fleet::topology::Topology::Partition).
+///
+/// `boundaries` are the inclusive upper prompt cutoffs of pools
+/// `0..K-1`; anything longer lands in the last pool with its prompt KV
+/// compressed by γ, floored at the last boundary (the same arithmetic
+/// as [`FleetOptRouter`](super::fleetopt::FleetOptRouter), so a K=2
+/// partition with γ replays the two-pool FleetOpt path bit-for-bit).
+/// γ = 1 is plain tiered context routing; zero boundaries degenerate to
+/// the homogeneous single pool.
+#[derive(Debug, Clone)]
+pub struct KPoolRouter {
+    boundaries: Vec<u32>,
+    gamma: f64,
+}
+
+impl KPoolRouter {
+    pub fn new(mut boundaries: Vec<u32>, gamma: f64) -> Self {
+        assert!(gamma >= 1.0, "γ must be >= 1");
+        boundaries.sort_unstable();
+        boundaries.dedup();
+        KPoolRouter { boundaries, gamma }
+    }
+}
+
+impl Router for KPoolRouter {
+    #[inline]
+    fn route(&self, req: &Request) -> Route {
+        let pool = self
+            .boundaries
+            .partition_point(|&b| req.prompt_tokens > b);
+        if pool == self.boundaries.len() && !self.boundaries.is_empty() {
+            // Compress-and-route on the long tail; compression never
+            // undercuts the last split boundary (matching FleetOptRouter
+            // — at γ = 1 this is the identity).
+            let floor = *self.boundaries.last().unwrap();
+            let eff = ((req.prompt_tokens as f64 / self.gamma).ceil() as u32)
+                .max(floor);
+            return Route { pool, effective_prompt_tokens: eff };
+        }
+        Route { pool, effective_prompt_tokens: req.prompt_tokens }
+    }
+
+    fn num_pools(&self) -> usize {
+        self.boundaries.len() + 1
+    }
+
+    fn name(&self) -> String {
+        format!("kpool({:?}, γ={})", self.boundaries, self.gamma)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +134,54 @@ mod tests {
         assert_eq!(r.route(&req(11)).pool, 1);
         assert_eq!(r.route(&req(20)).pool, 1);
         assert_eq!(r.route(&req(21)).pool, 2);
+    }
+
+    #[test]
+    fn kpool_buckets_by_length_and_matches_context_router_at_gamma_one() {
+        let k = KPoolRouter::new(vec![16384, 4096], 1.0); // unsorted ok
+        let c = ContextRouter::tiered(vec![4096, 16384]);
+        assert_eq!(k.num_pools(), 3);
+        for p in [1u32, 4096, 4097, 16384, 16385, 100_000] {
+            assert_eq!(k.route(&req(p)), c.route(&req(p)), "prompt {p}");
+        }
+    }
+
+    #[test]
+    fn kpool_compresses_only_the_last_pool() {
+        let k = KPoolRouter::new(vec![2048, 8192], 2.0);
+        // Interior pools: untouched.
+        assert_eq!(k.route(&req(5000)).effective_prompt_tokens, 5000);
+        assert_eq!(k.route(&req(5000)).pool, 1);
+        // Last pool: γ-compressed, floored at the last boundary.
+        let long = k.route(&req(40_000));
+        assert_eq!(long.pool, 2);
+        assert_eq!(long.effective_prompt_tokens, 20_000);
+        assert_eq!(k.route(&req(9000)).effective_prompt_tokens, 8192);
+    }
+
+    #[test]
+    fn kpool_two_pool_matches_fleetopt_router_bitwise() {
+        use crate::router::fleetopt::FleetOptRouter;
+        for gamma in [1.0, 2.0, 4.0] {
+            let k = KPoolRouter::new(vec![4096], gamma);
+            let f = FleetOptRouter::new(4096, gamma);
+            for p in [1u32, 4095, 4096, 4097, 5000, 16_000, 100_000] {
+                assert_eq!(k.route(&req(p)), f.route(&req(p)), "γ={gamma} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn kpool_without_boundaries_is_homogeneous() {
+        let k = KPoolRouter::new(vec![], 1.0);
+        assert_eq!(k.num_pools(), 1);
+        assert_eq!(k.route(&req(100_000)).pool, 0);
+        assert_eq!(k.route(&req(100_000)).effective_prompt_tokens, 100_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "γ must be >= 1")]
+    fn kpool_rejects_gamma_below_one() {
+        KPoolRouter::new(vec![4096], 0.5);
     }
 }

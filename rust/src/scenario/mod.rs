@@ -268,14 +268,20 @@ impl ScenarioSpec {
             topology: self.topology.label(),
             router: self.router_label(),
             dispatch: self.dispatch.clone(),
-            tok_per_watt: report.tok_per_watt,
+            // The *accounted* figures: groups the router never touched
+            // are charged at idle power over the fleet horizon instead
+            // of being silently free (identical to the raw meters when
+            // every group saw traffic).
+            tok_per_watt: report.tok_per_watt_accounted(),
             output_tokens: report.output_tokens,
-            joules: report.joules,
+            joules: report.accounted_joules(),
+            idle_joules: report.idle_joules,
             steps: report.steps,
             completed: m.completed,
             rejected: m.rejected,
             p99_ttft_s,
             slo_ok: p99_ttft_s <= self.slo.ttft_p99_s,
+            warnings: report.warnings,
         }
     }
 }
@@ -288,10 +294,18 @@ pub struct ScenarioOutcome {
     pub topology: String,
     pub router: String,
     pub dispatch: String,
-    /// Fleet output tokens per joule (== per watt-second).
+    /// Fleet output tokens per joule (== per watt-second), with
+    /// never-touched groups charged at idle power
+    /// ([`TopoSimReport::tok_per_watt_accounted`](crate::sim::TopoSimReport::tok_per_watt_accounted)).
     pub tok_per_watt: f64,
     pub output_tokens: u64,
+    /// Accounted fleet energy (metered + idle draw of untouched groups).
     pub joules: f64,
+    /// The idle-draw share of `joules`: every group is billed at idle
+    /// watts from its own meter horizon to the fleet's, so a
+    /// router-starved pool (or a group idling after one stray request)
+    /// is never free capacity. ~Zero when all groups run to the end.
+    pub idle_joules: f64,
     /// Engine iterations executed fleet-wide.
     pub steps: u64,
     pub completed: u64,
@@ -301,6 +315,9 @@ pub struct ScenarioOutcome {
     pub p99_ttft_s: f64,
     /// `p99_ttft_s` within the spec's SLO (false on NaN).
     pub slo_ok: bool,
+    /// Zero-traffic pool warnings from the simulator (router cutoffs
+    /// excluding a pool, groups that never saw an arrival).
+    pub warnings: Vec<String>,
 }
 
 #[cfg(test)]
@@ -399,6 +416,54 @@ mod tests {
             traffic.tok_per_watt.0,
             base.tok_per_watt.0
         );
+    }
+
+    #[test]
+    fn kpool_partition_spec_feeds_both_engines() {
+        let spec = ScenarioSpec::new(
+            Topology::partition(&[2048, 8192, LONG_CTX]),
+            Gpu::H100,
+            azure_conversations(),
+            quick_gen(40.0),
+        )
+        .with_groups(4);
+        let analytic = spec.analyze(PowerAccounting::PerGpu);
+        assert_eq!(analytic.pools.len(), 3);
+        assert!(analytic.tok_per_watt.0 > 0.0);
+        let sim = spec.simulate(true);
+        assert!(sim.completed > 0);
+        let want: u64 =
+            spec.trace().iter().map(|r| r.output_tokens as u64).sum();
+        assert_eq!(sim.output_tokens, want, "K-pool token conservation");
+    }
+
+    #[test]
+    fn excluded_pools_surface_warnings_and_idle_charge() {
+        // Every generated prompt fits the first tier, so the 16K and
+        // 64K pools never see a request: the outcome must say so and
+        // bill their idle draw instead of reporting them as free.
+        let spec = ScenarioSpec::new(
+            Topology::partition(&[4096, 16384, LONG_CTX]),
+            Gpu::H100,
+            azure_conversations(),
+            GenConfig {
+                lambda_rps: 30.0,
+                duration_s: 1.0,
+                max_prompt_tokens: 2048,
+                max_output_tokens: 64,
+                seed: 3,
+            },
+        )
+        .with_groups(3);
+        let out = spec.simulate(true);
+        assert!(out.completed > 0);
+        assert!(
+            out.warnings.iter().any(|w| w.contains("zero traffic")),
+            "{:?}",
+            out.warnings
+        );
+        assert!(out.idle_joules > 0.0);
+        assert!(out.joules > out.idle_joules, "metered energy present too");
     }
 
     #[test]

@@ -8,10 +8,13 @@
 //! loop over the crate's own two engines:
 //!
 //! * **Stage A — analytical screen.** The full
-//!   B_short × γ × GPU-generation grid is evaluated with the closed-form
-//!   Eq. (4) planner ([`ScenarioSpec::analyze`]; dispatch does not enter
-//!   the closed form, so each analytical cell is screened once). Cheap:
-//!   hundreds of cells per millisecond, so the grid can be wide.
+//!   partition × γ × GPU-generation grid is evaluated with the
+//!   closed-form Eq. (4) planner ([`ScenarioSpec::analyze`]; dispatch
+//!   does not enter the closed form, so each analytical cell is
+//!   screened once). The partition axis is a vector of K-pool context
+//!   cutoffs ([`kpool_partitions`] generates the K ∈ {2, 3, 4} grids;
+//!   the default is the legacy `[B_short, LONG_CTX]` two-pool axis).
+//!   Cheap: hundreds of cells per millisecond, so the grid can be wide.
 //! * **Stage B — simulated refine.** The top-k surviving cells are
 //!   expanded across the dispatch axis and replayed through
 //!   [`ScenarioSpec::simulate`] on scoped worker threads
@@ -31,12 +34,57 @@ use crate::fleet::analysis::{fleet_tpw_analysis, FleetReport};
 use crate::fleet::optimizer::{OptResult, B_SHORT_GRID, GAMMA_GRID};
 use crate::fleet::pool::LBarPolicy;
 use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
-use crate::fleet::topology::Topology;
+use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
 use crate::results::{Cell, Column, RowSet};
 use crate::sim::dispatch;
 use crate::workload::cdf::WorkloadTrace;
 use crate::workload::synth::GenConfig;
+
+/// Interior-cutoff choices for the generated K-pool grids
+/// ([`kpool_partitions`]); the final pool always serves the full
+/// [`LONG_CTX`] window.
+pub const CUTOFF_LADDER: [u32; 6] = [1024, 2048, 4096, 8192, 16384, 32768];
+
+/// Every K-pool partition vector on the cutoff ladder: all strictly
+/// increasing (K−1)-combinations of [`CUTOFF_LADDER`], each closed with
+/// the `LONG_CTX` long pool. Deterministic lexicographic order (so the
+/// stage-A stable sort is reproducible). K=2 yields one `[b, 64K]`
+/// vector per ladder entry — the classic two-pool split axis.
+pub fn kpool_partitions(k: u32) -> Vec<Vec<u32>> {
+    assert!(
+        (2..=CUTOFF_LADDER.len() as u32 + 1).contains(&k),
+        "K must be in 2..={} (got {k})",
+        CUTOFF_LADDER.len() + 1
+    );
+    let interior = (k - 1) as usize;
+    let mut out = Vec::new();
+    let mut combo: Vec<usize> = (0..interior).collect();
+    loop {
+        let mut cuts: Vec<u32> =
+            combo.iter().map(|&i| CUTOFF_LADDER[i]).collect();
+        cuts.push(LONG_CTX);
+        out.push(cuts);
+        // Advance the combination (lexicographic).
+        let mut pos = interior;
+        while pos > 0 {
+            pos -= 1;
+            if combo[pos] + 1 <= CUTOFF_LADDER.len() - (interior - pos) {
+                combo[pos] += 1;
+                for j in pos + 1..interior {
+                    combo[j] = combo[j - 1] + 1;
+                }
+                break;
+            }
+            if pos == 0 {
+                return out;
+            }
+        }
+        if interior == 0 {
+            return out;
+        }
+    }
+}
 
 /// Closed-form evaluation of one (topology, profile) cell — the single
 /// Eq. (4) path behind [`ScenarioSpec::analyze`], the stage-A screen,
@@ -57,10 +105,67 @@ pub fn analyze_cell(
     fleet_tpw_analysis(&pools, acct)
 }
 
-/// Stage A over an explicit (B_short × γ) grid with an arbitrary
-/// profile, best-first. Kept profile-generic (not `Gpu`-keyed) so the
-/// legacy `sweep_fleetopt` API — which accepts any [`GpuProfile`] —
-/// can delegate here without loss of generality.
+/// One screened K-pool cell: the partition vector, its long-pool γ, and
+/// the closed-form Eq. 4 report.
+#[derive(Debug, Clone)]
+pub struct PartitionOptResult {
+    /// Sorted cutoff vector; the last entry is the long pool's window.
+    pub cutoffs: Vec<u32>,
+    pub gamma: f64,
+    pub report: FleetReport,
+}
+
+/// Stage A over an explicit (partition vector × γ) grid with an
+/// arbitrary profile, best-first (the stable sort keeps grid order on
+/// ties). Profile-generic (not `Gpu`-keyed) so the legacy
+/// `sweep_fleetopt` API — which accepts any [`GpuProfile`] — can
+/// delegate here without loss of generality. A `[b, LONG_CTX]` vector
+/// with γ evaluates bit-identically to the two-pool
+/// `Topology::FleetOpt { b_short: b, .. }` cell, which is what makes
+/// the K=2 reduction oracle exact.
+#[allow(clippy::too_many_arguments)]
+pub fn screen_partitions(
+    trace: &WorkloadTrace,
+    lambda_rps: f64,
+    profile: Arc<dyn GpuProfile>,
+    partitions: &[Vec<u32>],
+    gammas: &[f64],
+    lbar: LBarPolicy,
+    rho: f64,
+    ttft_slo_s: f64,
+    acct: PowerAccounting,
+) -> Vec<PartitionOptResult> {
+    let mut out = Vec::with_capacity(partitions.len() * gammas.len());
+    for cutoffs in partitions {
+        for &gamma in gammas {
+            let topo = Topology::partition_with_gamma(cutoffs, gamma);
+            let report = analyze_cell(
+                &topo,
+                trace,
+                lambda_rps,
+                profile.clone(),
+                lbar,
+                rho,
+                ttft_slo_s,
+                acct,
+            );
+            out.push(PartitionOptResult {
+                cutoffs: cutoffs.clone(),
+                gamma,
+                report,
+            });
+        }
+    }
+    out.sort_by(|a, b| {
+        b.report.tok_per_watt.0.total_cmp(&a.report.tok_per_watt.0)
+    });
+    out
+}
+
+/// Stage A over the legacy (B_short × γ) two-pool grid — a wrapper that
+/// lifts each boundary into the `[b, LONG_CTX]` partition vector and
+/// delegates to [`screen_partitions`], so the legacy ranking and the
+/// K-pool ranking are the same arithmetic by construction.
 #[allow(clippy::too_many_arguments)]
 pub fn screen_closed_form(
     trace: &WorkloadTrace,
@@ -73,31 +178,28 @@ pub fn screen_closed_form(
     ttft_slo_s: f64,
     acct: PowerAccounting,
 ) -> Vec<OptResult> {
-    let mut out = Vec::with_capacity(b_shorts.len() * gammas.len());
-    for &b_short in b_shorts {
-        for &gamma in gammas {
-            let topo = Topology::FleetOpt {
-                b_short,
-                short_ctx: b_short.max(1024),
-                gamma,
-            };
-            let report = analyze_cell(
-                &topo,
-                trace,
-                lambda_rps,
-                profile.clone(),
-                lbar,
-                rho,
-                ttft_slo_s,
-                acct,
+    let partitions: Vec<Vec<u32>> = b_shorts
+        .iter()
+        .map(|&b| {
+            // The boundary becomes the [b, LONG_CTX] partition vector;
+            // reject a degenerate b up front with the legacy axis's own
+            // vocabulary instead of a partition-invariant panic deep in
+            // the screen.
+            assert!(
+                (1..LONG_CTX).contains(&b),
+                "B_short {b} must be in 1..{LONG_CTX} (the two-pool split \
+                 needs a boundary below the long window)"
             );
-            out.push(OptResult { b_short, gamma, report });
-        }
-    }
-    out.sort_by(|a, b| {
-        b.report.tok_per_watt.0.total_cmp(&a.report.tok_per_watt.0)
-    });
-    out
+            vec![b, LONG_CTX]
+        })
+        .collect();
+    screen_partitions(
+        trace, lambda_rps, profile, &partitions, gammas, lbar, rho,
+        ttft_slo_s, acct,
+    )
+    .into_iter()
+    .map(|r| OptResult { b_short: r.cutoffs[0], gamma: r.gamma, report: r.report })
+    .collect()
 }
 
 /// Grid axes and per-cell settings for the two-stage search.
@@ -106,9 +208,17 @@ pub struct OptimizeConfig {
     /// GPU-generation axis (each served by its calibrated/projected 70B
     /// fleet profile, [`ManualProfile::for_gpu`]).
     pub gpus: Vec<Gpu>,
-    /// Split-boundary axis.
+    /// Split-boundary axis (legacy two-pool grid). Ignored when
+    /// `partitions` is non-empty.
     pub b_shorts: Vec<u32>,
-    /// FleetOpt compression-factor axis.
+    /// K-pool partition-vector axis: each entry is a sorted cutoff
+    /// vector whose last element is the long pool's window (e.g.
+    /// `[4096, 16384, 65536]` for K=3). Empty = derive the classic
+    /// `[b, LONG_CTX]` two-pool vectors from `b_shorts`
+    /// ([`Self::effective_partitions`]); [`kpool_partitions`] generates
+    /// full grids for K ∈ {2, 3, 4}, `--pools K` on the CLI.
+    pub partitions: Vec<Vec<u32>>,
+    /// FleetOpt compression-factor axis (applies to the last pool).
     pub gammas: Vec<f64>,
     /// Dispatch axis — resolved by measurement in stage B only (the
     /// closed form is dispatch-blind).
@@ -130,6 +240,7 @@ impl Default for OptimizeConfig {
         OptimizeConfig {
             gpus: Gpu::ALL.to_vec(),
             b_shorts: B_SHORT_GRID.to_vec(),
+            partitions: Vec::new(),
             gammas: GAMMA_GRID.to_vec(),
             dispatches: dispatch::ALL.iter().map(|s| s.to_string()).collect(),
             gen: GenConfig {
@@ -149,13 +260,46 @@ impl Default for OptimizeConfig {
     }
 }
 
-/// One stage-A cell: analytical Eq. (4) report at (GPU, B_short, γ).
+impl OptimizeConfig {
+    /// The partition-vector axis actually screened: the explicit
+    /// `partitions` when set, otherwise the legacy `[b, LONG_CTX]`
+    /// two-pool vector per `b_shorts` entry.
+    pub fn effective_partitions(&self) -> Vec<Vec<u32>> {
+        if self.partitions.is_empty() {
+            self.b_shorts
+                .iter()
+                .map(|&b| {
+                    assert!(
+                        (1..LONG_CTX).contains(&b),
+                        "B_short {b} must be in 1..{LONG_CTX} (the two-pool \
+                         split needs a boundary below the long window)"
+                    );
+                    vec![b, LONG_CTX]
+                })
+                .collect()
+        } else {
+            self.partitions.clone()
+        }
+    }
+}
+
+/// One stage-A cell: analytical Eq. (4) report at
+/// (GPU, partition vector, γ).
 #[derive(Debug, Clone)]
 pub struct ScreenedCell {
     pub gpu: Gpu,
-    pub b_short: u32,
+    /// Sorted cutoff vector of the cell's K-pool partition; for the
+    /// legacy two-pool grid this is `[B_short, LONG_CTX]`.
+    pub cutoffs: Vec<u32>,
     pub gamma: f64,
     pub analytic: FleetReport,
+}
+
+impl ScreenedCell {
+    /// The first cutoff — the legacy B_short boundary at K=2.
+    pub fn b_short(&self) -> u32 {
+        self.cutoffs[0]
+    }
 }
 
 /// One stage-B cell: the screened point expanded with a dispatch policy
@@ -163,7 +307,8 @@ pub struct ScreenedCell {
 #[derive(Debug, Clone)]
 pub struct RefinedCell {
     pub gpu: Gpu,
-    pub b_short: u32,
+    /// Sorted cutoff vector of the cell's K-pool partition.
+    pub cutoffs: Vec<u32>,
     pub gamma: f64,
     pub dispatch: String,
     /// Stage-A analytical tok/W (Eq. 4).
@@ -180,20 +325,36 @@ impl RefinedCell {
     pub fn rel_delta_pct(&self) -> f64 {
         super::rel_delta_pct(self.outcome.tok_per_watt, self.analytic_tok_w)
     }
+
+    /// The first cutoff — the legacy B_short boundary at K=2.
+    pub fn b_short(&self) -> u32 {
+        self.cutoffs[0]
+    }
 }
 
-/// Stage A: screen the full GPU × B_short × γ grid analytically,
+/// `"4096|65536"`-style display of a cutoff vector — the one rendering
+/// every CLI surface (optimize rowset, K-pool sweep) uses.
+pub fn cutoffs_label(cutoffs: &[u32]) -> String {
+    cutoffs
+        .iter()
+        .map(|c| c.to_string())
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+/// Stage A: screen the full GPU × partition × γ grid analytically,
 /// best-first (ties keep grid order).
 pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCell> {
+    let partitions = cfg.effective_partitions();
     let mut cells =
-        Vec::with_capacity(cfg.gpus.len() * cfg.b_shorts.len() * cfg.gammas.len());
+        Vec::with_capacity(cfg.gpus.len() * partitions.len() * cfg.gammas.len());
     for &gpu in &cfg.gpus {
         let profile: Arc<dyn GpuProfile> = Arc::new(ManualProfile::for_gpu(gpu));
-        for r in screen_closed_form(
+        for r in screen_partitions(
             workload,
             cfg.gen.lambda_rps,
             profile,
-            &cfg.b_shorts,
+            &partitions,
             &cfg.gammas,
             cfg.lbar,
             cfg.rho,
@@ -202,7 +363,7 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
         ) {
             cells.push(ScreenedCell {
                 gpu,
-                b_short: r.b_short,
+                cutoffs: r.cutoffs,
                 gamma: r.gamma,
                 analytic: r.report,
             });
@@ -215,6 +376,8 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
 }
 
 /// The [`ScenarioSpec`] realizing one screened cell at serving time.
+/// For a two-entry cutoff vector this builds the same routed fleet as
+/// the PR 3 `Topology::FleetOpt` spec, bit-for-bit (the K=2 reduction).
 fn spec_for(
     workload: &WorkloadTrace,
     cfg: &OptimizeConfig,
@@ -222,11 +385,7 @@ fn spec_for(
     dispatch: &str,
 ) -> ScenarioSpec {
     ScenarioSpec::new(
-        Topology::FleetOpt {
-            b_short: cell.b_short,
-            short_ctx: cell.b_short.max(1024),
-            gamma: cell.gamma,
-        },
+        Topology::partition_with_gamma(&cell.cutoffs, cell.gamma),
         cell.gpu,
         workload.clone(),
         cfg.gen.clone(),
@@ -261,7 +420,7 @@ pub fn refine(
         .zip(outcomes)
         .map(|((cell, dispatch), outcome)| RefinedCell {
             gpu: cell.gpu,
-            b_short: cell.b_short,
+            cutoffs: cell.cutoffs.clone(),
             gamma: cell.gamma,
             dispatch,
             analytic_tok_w: cell.analytic.tok_per_watt.0,
@@ -313,7 +472,8 @@ impl OptimizeReport {
              stage B simulated refine",
             vec![
                 Column::str("GPU"),
-                Column::int("B_short").with_unit("tok"),
+                Column::int("pools"),
+                Column::str("cutoffs").with_unit("tok"),
                 Column::float("gamma"),
                 Column::str("dispatch"),
                 Column::float("analyze tok/W").with_unit("tok/J"),
@@ -330,7 +490,8 @@ impl OptimizeReport {
             let delta = c.rel_delta_pct();
             rs.push(vec![
                 Cell::str(c.gpu.spec().name),
-                Cell::int(c.b_short as i64),
+                Cell::int(c.cutoffs.len() as i64),
+                Cell::str(cutoffs_label(&c.cutoffs)),
                 Cell::float(c.gamma),
                 Cell::str(&c.dispatch),
                 Cell::float(c.analytic_tok_w)
@@ -355,10 +516,10 @@ impl OptimizeReport {
         ));
         match self.winner() {
             Some(w) => rs.note(format!(
-                "winner (best measured tok/W within SLO): {} B_short={} γ={} \
+                "winner (best measured tok/W within SLO): {} cutoffs={} γ={} \
                  dispatch={} at {:.3} tok/W (analytical said {:.3})",
                 w.gpu.spec().name,
-                w.b_short,
+                cutoffs_label(&w.cutoffs),
                 w.gamma,
                 w.dispatch,
                 w.outcome.tok_per_watt,
@@ -452,12 +613,54 @@ mod tests {
     }
 
     #[test]
+    fn kpool_partitions_enumerate_the_ladder() {
+        let k2 = kpool_partitions(2);
+        assert_eq!(k2.len(), CUTOFF_LADDER.len());
+        assert_eq!(k2[0], vec![1024, crate::fleet::topology::LONG_CTX]);
+        let k3 = kpool_partitions(3);
+        assert_eq!(k3.len(), 15, "C(6,2) interior pairs");
+        let k4 = kpool_partitions(4);
+        assert_eq!(k4.len(), 20, "C(6,3) interior triples");
+        for cuts in k2.iter().chain(&k3).chain(&k4) {
+            assert!(cuts.windows(2).all(|w| w[0] < w[1]), "{cuts:?}");
+            assert_eq!(
+                *cuts.last().unwrap(),
+                crate::fleet::topology::LONG_CTX
+            );
+        }
+    }
+
+    #[test]
+    fn kpool_grid_screens_and_refines_end_to_end() {
+        let cfg = OptimizeConfig {
+            partitions: vec![
+                vec![4096, crate::fleet::topology::LONG_CTX],
+                vec![2048, 8192, crate::fleet::topology::LONG_CTX],
+            ],
+            gammas: vec![1.0],
+            groups: 4,
+            ..tiny_cfg()
+        };
+        let report = optimize(&azure_conversations(), &cfg, 2);
+        assert_eq!(report.screened.len(), 2);
+        assert_eq!(report.refined.len(), 2);
+        assert!(report
+            .screened
+            .iter()
+            .any(|c| c.cutoffs.len() == 3), "K=3 cell screened");
+        let w = report.winner().expect("generous SLO yields a winner");
+        assert!(w.outcome.completed > 0);
+        let rs = report.rowset();
+        assert!(rs.to_text().contains("2048|8192|65536"));
+    }
+
+    #[test]
     fn rowset_shows_both_engines_side_by_side() {
         let report = optimize(&azure_conversations(), &tiny_cfg(), 2);
         let rs = report.rowset();
         let csv = rs.to_csv();
         assert!(csv.starts_with(
-            "GPU,B_short (tok),gamma,dispatch,analyze tok/W (tok/J),\
+            "GPU,pools,cutoffs (tok),gamma,dispatch,analyze tok/W (tok/J),\
              simulate tok/W (tok/J),delta (%),p99 TTFT (s),slo,\
              analyze groups,winner\n"
         ));

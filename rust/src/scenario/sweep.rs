@@ -16,8 +16,8 @@
 //!
 //! CLI: `wattlaw simulate sweep [--lambda 1000] [--duration S]
 //! [--groups N] [--gpu ...] [--trace ...] [--dispatch NAME]
-//! [--b-short N] [--spill F] [--slo-ttft S] [--workers N]
-//! [--format table|csv|json]`.
+//! [--b-short N] [--pools K] [--cutoffs a,b,c] [--spill F]
+//! [--slo-ttft S] [--workers N] [--format table|csv|json]`.
 
 use super::{RouterSpec, ScenarioOutcome, ScenarioSpec, SloTargets};
 use crate::fleet::profile::PowerAccounting;
@@ -41,6 +41,12 @@ pub struct SweepConfig {
     /// Context-window axis: each split boundary yields a pool-routing
     /// and a FleetOpt (γ=2) topology at that boundary.
     pub b_shorts: Vec<u32>,
+    /// K-pool partition axis: each cutoff vector adds a
+    /// [`Topology::Partition`] cell (γ=1, static bucket router) — K as a
+    /// grid dimension next to the two-pool cells. Empty by default;
+    /// `--pools K` on the CLI fills it with the default ladder for each
+    /// K' in 2..=K.
+    pub partitions: Vec<Vec<u32>>,
     /// Also sweep the load-aware adaptive router (at this spill factor)
     /// over each pool-routing topology.
     pub spill: Option<f64>,
@@ -63,6 +69,7 @@ impl Default for SweepConfig {
             groups: 8,
             dispatches: dispatch::ALL.iter().map(|s| s.to_string()).collect(),
             b_shorts: vec![2048, 4096, 8192],
+            partitions: Vec::new(),
             spill: Some(2.0),
             slo: SloTargets::default(),
             acct: PowerAccounting::PerGpu,
@@ -92,6 +99,12 @@ pub fn grid(workload: &WorkloadTrace, cfg: &SweepConfig) -> Vec<ScenarioSpec> {
                 RouterSpec::Adaptive { spill },
             ));
         }
+    }
+    // K as a grid dimension: one K-pool partition cell per cutoff
+    // vector (plain bucket routing, γ=1 — compression cells live on the
+    // FleetOpt axis above).
+    for cuts in &cfg.partitions {
+        topos.push((Topology::partition(cuts), RouterSpec::Static));
     }
 
     let mut specs = Vec::with_capacity(topos.len() * cfg.dispatches.len());
@@ -315,6 +328,34 @@ mod tests {
         assert!(specs.iter().any(|s| s.label().contains("FleetOpt")));
         assert!(specs.iter().any(|s| s.label().contains("adaptive")));
         assert!(specs.iter().any(|s| s.dispatch == "jsq"));
+    }
+
+    #[test]
+    fn partition_axis_expands_k_as_a_grid_dimension() {
+        let cfg = SweepConfig {
+            partitions: vec![
+                vec![4096, 16384, crate::fleet::topology::LONG_CTX],
+                vec![2048, 8192, 32768, crate::fleet::topology::LONG_CTX],
+            ],
+            groups: 4,
+            ..tiny_cfg()
+        };
+        let specs = grid(&azure_conversations(), &cfg);
+        // The two partition topologies ride along the existing axes
+        // (homo + pool + fleetopt + adaptive-pool) × 2 dispatch.
+        assert_eq!(specs.len(), 12);
+        assert!(specs.iter().any(|s| s.label().contains("3-pool")));
+        assert!(specs.iter().any(|s| s.label().contains("4-pool")));
+        // And the cells run end-to-end with conserved outcomes.
+        let kpool: Vec<ScenarioSpec> = specs
+            .into_iter()
+            .filter(|s| s.label().contains("3-pool"))
+            .collect();
+        let out = run(&kpool, 2);
+        assert_eq!(out.len(), kpool.len());
+        for o in &out {
+            assert!(o.completed > 0, "{}", o.label);
+        }
     }
 
     #[test]

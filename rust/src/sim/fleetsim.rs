@@ -70,8 +70,18 @@ pub struct PoolSimReport {
     pub decode_tok_s: f64,
     /// Horizon: last completion time, s.
     pub horizon_s: f64,
+    /// Σ of the per-group horizons, s (a never-touched group contributes
+    /// zero). The accounted idle top-up bills each group from its own
+    /// horizon to the fleet's: `groups × fleet_horizon − this`.
+    pub horizon_sum_s: f64,
     /// Engine iterations executed across the pool's groups.
     pub steps: u64,
+    /// Groups of this pool that never received a single arrival. Their
+    /// meters never ran, so they contribute **zero** joules to `joules`
+    /// — real provisioned hardware would draw idle watts the whole run
+    /// (§5.1), which the topology report's accounted figures charge
+    /// ([`TopoSimReport::idle_joules`]).
+    pub untouched_groups: u32,
 }
 
 /// Simulate a routed topology: requests go through `router` to pools,
@@ -80,10 +90,23 @@ pub struct PoolSimReport {
 pub struct TopoSimReport {
     pub pools: Vec<PoolSimReport>,
     pub output_tokens: u64,
+    /// Raw metered energy: exactly what the per-group event meters
+    /// integrated (untouched groups contribute nothing — the legacy
+    /// replay contract). See [`Self::accounted_joules`].
     pub joules: f64,
+    /// `output_tokens / joules` over the raw metered energy.
     pub tok_per_watt: f64,
     /// Engine iterations executed fleet-wide.
     pub steps: u64,
+    /// Idle-power energy billed for each group's gap between its own
+    /// meter horizon and the fleet horizon: a pool excluded by the
+    /// router's cutoffs (or a group that served one stray request and
+    /// then sat) is provisioned hardware drawing idle watts, not free
+    /// capacity. Zero when every group runs to the fleet horizon.
+    pub idle_joules: f64,
+    /// Zero-traffic warnings: one line per pool with groups that never
+    /// received an arrival (e.g. router cutoffs that exclude the pool).
+    pub warnings: Vec<String>,
 }
 
 impl TopoSimReport {
@@ -92,6 +115,26 @@ impl TopoSimReport {
     /// scenario cell reports its p99 TTFT from.
     pub fn fleet_metrics(&self) -> ServeMetrics {
         ServeMetrics::merged(self.pools.iter().map(|p| &p.metrics))
+    }
+
+    /// Metered energy plus the idle draw of every group's gap to the
+    /// fleet horizon — the honest fleet bill.
+    pub fn accounted_joules(&self) -> f64 {
+        self.joules + self.idle_joules
+    }
+
+    /// Fleet tok/W with every provisioned group billed to the common
+    /// fleet horizon — idle watts for the span its meter never covered
+    /// (≈ `tok_per_watt` when every group stays busy to the end; far
+    /// below it when the router's cutoffs starve a pool). The scenario
+    /// layer reports this figure.
+    pub fn tok_per_watt_accounted(&self) -> f64 {
+        let joules = self.accounted_joules();
+        if joules > 0.0 {
+            self.output_tokens as f64 / joules
+        } else {
+            0.0
+        }
     }
 }
 
@@ -110,6 +153,7 @@ fn aggregate_pool(
     let mut batch_integral = 0.0;
     let mut time_integral = 0.0;
     let mut steps = 0u64;
+    let mut untouched_groups = 0u32;
 
     for g in &outcomes {
         joules += g.joules;
@@ -118,6 +162,11 @@ fn aggregate_pool(
         batch_integral += g.mean_batch * g.horizon_s;
         time_integral += g.horizon_s;
         steps += g.steps;
+        // A group that never received an arrival was never woken: its
+        // meter integrated nothing and its local clock never advanced.
+        if g.steps == 0 && g.joules == 0.0 && g.horizon_s == 0.0 {
+            untouched_groups += 1;
+        }
     }
     // One all-parts weighted merge (not a pairwise fold): linear in the
     // total samples, and a single proportional subsampling pass when any
@@ -147,7 +196,9 @@ fn aggregate_pool(
             0.0
         },
         horizon_s,
+        horizon_sum_s: time_integral,
         steps,
+        untouched_groups,
     }
 }
 
@@ -167,6 +218,46 @@ fn aggregate_topology(
     let output_tokens = pools.iter().map(|p| p.output_tokens).sum();
     let joules: f64 = pools.iter().map(|p| p.joules).sum();
     let steps = pools.iter().map(|p| p.steps).sum();
+
+    // A group's meter stops at its own last event, so the raw totals
+    // silently treat everything after — a router-excluded pool's whole
+    // run, or a mostly-idle group's long tail — as free hardware. Bill
+    // every group's gap to the common fleet horizon at idle watts into
+    // the accounted figures, and warn explicitly for zero-traffic
+    // groups (the router-cutoff smell this accounting exists to catch).
+    let fleet_horizon_s =
+        pools.iter().map(|p| p.horizon_s).fold(0.0f64, f64::max);
+    let mut idle_joules = 0.0;
+    let mut warnings = Vec::new();
+    for (i, p) in pools.iter().enumerate() {
+        let idle_w =
+            pool_cfgs[i].power.power_w(0.0) * pool_cfgs[i].gpus_charged;
+        let idle_gap_s =
+            (p.groups as f64 * fleet_horizon_s - p.horizon_sum_s).max(0.0);
+        idle_joules += idle_w * idle_gap_s;
+        if p.untouched_groups == 0 {
+            continue;
+        }
+        if p.untouched_groups == p.groups {
+            warnings.push(format!(
+                "pool-{i} ({} tok window): zero traffic — the router's \
+                 cutoffs exclude it; {} idle group{} charged at {:.0} W \
+                 over the {:.2}s fleet horizon in the accounted figures",
+                p.window_tokens,
+                p.untouched_groups,
+                if p.untouched_groups == 1 { "" } else { "s" },
+                idle_w,
+                fleet_horizon_s,
+            ));
+        } else {
+            warnings.push(format!(
+                "pool-{i}: {} of {} groups never received an arrival; \
+                 idle power charged in the accounted figures",
+                p.untouched_groups, p.groups,
+            ));
+        }
+    }
+
     TopoSimReport {
         output_tokens,
         tok_per_watt: if joules > 0.0 {
@@ -177,6 +268,8 @@ fn aggregate_topology(
         joules,
         steps,
         pools,
+        idle_joules,
+        warnings,
     }
 }
 
@@ -416,6 +509,127 @@ mod tests {
         let b = run();
         assert_eq!(a.output_tokens, b.output_tokens);
         assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+    }
+
+    #[test]
+    fn zero_traffic_pools_warn_and_charge_idle_power_in_accounted_figures() {
+        use crate::router::context::KPoolRouter;
+
+        // Every prompt fits the first tier; the router's cutoffs leave
+        // the 16K and 64K pools without a single arrival.
+        let trace: Vec<Request> = (0..40)
+            .map(|i| Request {
+                id: i,
+                arrival_s: i as f64 * 0.05,
+                prompt_tokens: 256,
+                output_tokens: 32,
+            })
+            .collect();
+        let router = KPoolRouter::new(vec![2048, 16384], 1.0);
+        let cfgs =
+            [h100_cfg(2048 + 1024), h100_cfg(16384 + 1024), h100_cfg(65_536)];
+        let mut rr = RoundRobin::new();
+        let r = simulate_topology_with(
+            &trace, &router, &[1, 2, 1], &cfgs, &mut rr, true,
+        );
+
+        assert_eq!(r.pools[0].untouched_groups, 0);
+        assert_eq!(r.pools[1].untouched_groups, 2);
+        assert_eq!(r.pools[2].untouched_groups, 1);
+        assert_eq!(r.pools[1].joules, 0.0, "raw meters never ran");
+        assert_eq!(r.warnings.len(), 2, "{:?}", r.warnings);
+        assert!(r.warnings[0].contains("zero traffic"), "{:?}", r.warnings);
+
+        // The accounted bill charges exactly idle watts × fleet horizon
+        // per untouched group (the served pool's lone group defines the
+        // fleet horizon, so its own gap is zero).
+        let fleet_h = r.pools.iter().map(|p| p.horizon_s).fold(0.0, f64::max);
+        assert!(fleet_h > 0.0);
+        let idle_w = cfgs[0].power.power_w(0.0); // same curve per pool here
+        let expected = 3.0 * idle_w * fleet_h;
+        assert!(
+            (r.idle_joules - expected).abs() < 1e-9,
+            "idle_joules {} vs expected {expected}",
+            r.idle_joules
+        );
+        assert_eq!(r.accounted_joules(), r.joules + r.idle_joules);
+        assert!(
+            r.tok_per_watt_accounted() < r.tok_per_watt,
+            "idle draw must lower the honest tok/W: {} vs {}",
+            r.tok_per_watt_accounted(),
+            r.tok_per_watt
+        );
+
+        // A fleet where every group sees traffic to the end reports no
+        // warnings, and its idle bill is only the tiny drain gap between
+        // the groups' final completions — not a zero-traffic charge.
+        let full = simulate_topology(
+            &trace,
+            &crate::router::HomogeneousRouter,
+            &[2],
+            &[h100_cfg(8192)],
+        );
+        assert!(full.warnings.is_empty());
+        let full_h =
+            full.pools.iter().map(|p| p.horizon_s).fold(0.0, f64::max);
+        let full_gap = 2.0 * full_h - full.pools[0].horizon_sum_s;
+        assert!(
+            (full.idle_joules - idle_w * full_gap).abs() < 1e-9,
+            "healthy fleet bills exactly the drain gap: {} vs {}",
+            full.idle_joules,
+            idle_w * full_gap
+        );
+        assert!(
+            full.idle_joules < 0.05 * full.joules,
+            "drain-gap bill must be noise next to the metered energy: \
+             {} vs {}",
+            full.idle_joules,
+            full.joules
+        );
+    }
+
+    #[test]
+    fn mostly_idle_group_is_billed_to_the_fleet_horizon() {
+        // One stray early request on the long pool must not exempt its
+        // group from the idle bill for the rest of the run: the short
+        // pool serves steadily for ~4 s while the long pool's only
+        // request completes almost immediately.
+        let mut trace: Vec<Request> = (0..80)
+            .map(|i| Request {
+                id: i,
+                arrival_s: i as f64 * 0.05,
+                prompt_tokens: 256,
+                output_tokens: 32,
+            })
+            .collect();
+        trace.push(Request {
+            id: 80,
+            arrival_s: 0.0,
+            prompt_tokens: 10_000,
+            output_tokens: 8,
+        });
+        let router = crate::router::context::ContextRouter::two_pool(4096);
+        let cfgs = [h100_cfg(4096 + 1024), h100_cfg(65_536)];
+        let mut rr = RoundRobin::new();
+        let r = simulate_topology_with(
+            &trace, &router, &[1, 1], &cfgs, &mut rr, true,
+        );
+        // The long pool served its request, so no zero-traffic warning —
+        // but its meter stopped early and the accounted bill covers the
+        // gap to the fleet horizon at idle watts.
+        assert_eq!(r.pools[1].untouched_groups, 0);
+        assert!(r.pools[1].metrics.completed == 1);
+        let fleet_h = r.pools.iter().map(|p| p.horizon_s).fold(0.0, f64::max);
+        let gap = fleet_h - r.pools[1].horizon_s;
+        assert!(gap > 1.0, "long pool must drain well before the fleet: {gap}");
+        let idle_w = cfgs[1].power.power_w(0.0);
+        assert!(
+            r.idle_joules >= idle_w * gap - 1e-9,
+            "stray-request group escaped its idle bill: {} < {}",
+            r.idle_joules,
+            idle_w * gap
+        );
+        assert!(r.tok_per_watt_accounted() < r.tok_per_watt);
     }
 
     #[test]

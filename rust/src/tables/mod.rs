@@ -13,13 +13,14 @@ pub mod t4;
 pub mod t5;
 pub mod t6;
 pub mod t7;
+pub mod t8;
 
 use crate::fleet::pool::LBarPolicy;
 use crate::results::RowSet;
 
 /// Every artifact's CLI flag, in `tables --all` emission order.
-pub const ALL_FLAGS: [&str; 11] = [
-    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "law", "power-fig",
+pub const ALL_FLAGS: [&str; 12] = [
+    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "law", "power-fig",
     "dispatch-fig", "independence",
 ];
 
@@ -36,6 +37,7 @@ pub fn rowsets_for(flag: &str, lbar: LBarPolicy) -> Option<Vec<RowSet>> {
         "t5" => vec![t5::rowset()],
         "t6" => vec![t6::rowset()],
         "t7" => t7::rowsets(),
+        "t8" => vec![t8::rowset()],
         "law" => law_fig::rowsets(),
         "power-fig" => vec![power_fig::rowset()],
         "dispatch-fig" => vec![dispatch_fig::rowset()],
@@ -54,6 +56,7 @@ pub fn generate_all(lbar: LBarPolicy) -> String {
     s.push_str(&t5::generate());
     s.push_str(&t6::generate());
     s.push_str(&t7::generate());
+    s.push_str(&t8::generate());
     s.push_str(&law_fig::generate());
     s.push_str(&power_fig::generate());
     s.push_str(&dispatch_fig::generate());
@@ -70,7 +73,7 @@ mod tests {
         let s = generate_all(LBarPolicy::Window);
         for needle in [
             "Table 1", "Table 2", "Table 3", "Table 4", "Table 5",
-            "Table 6", "Table 7", "1/W law", "Figure (power)",
+            "Table 6", "Table 7", "Table 8", "1/W law", "Figure (power)",
             "Figure (dispatch)", "independence",
         ] {
             assert!(s.contains(needle), "missing {needle}");
@@ -80,9 +83,10 @@ mod tests {
     #[test]
     fn every_flag_resolves_to_rowsets() {
         // The fast artifacts: every flag except the simulation-backed
-        // dispatch figure (covered by its own module tests).
+        // dispatch figure and K-pool table (covered by their own module
+        // tests).
         for flag in ALL_FLAGS {
-            if flag == "dispatch-fig" {
+            if flag == "dispatch-fig" || flag == "t8" {
                 continue;
             }
             let sets = rowsets_for(flag, LBarPolicy::Window)

@@ -453,6 +453,117 @@ fn random_sim_scenario(
 }
 
 #[test]
+fn prop_kpool_partition_covers_range_and_conserves_tokens() {
+    use std::sync::Arc;
+    use wattlaw::fleet::pool::LBarPolicy;
+    use wattlaw::fleet::topology::Topology;
+    use wattlaw::sim::dispatch::RoundRobin;
+    use wattlaw::sim::simulate_topology_with;
+    use wattlaw::workload::synth::{generate, GenConfig};
+
+    forall("K-pool partition: full cover, no overlap, conservation", 6, |g| {
+        // Random K ∈ {2,3,4} with random strictly increasing interior
+        // cutoffs off the ladder; the long pool always serves to 64K.
+        let ladder = [2048u32, 4096, 8192, 16384, 32768];
+        let k = g.usize_in(2, 4);
+        let mut cuts = Vec::new();
+        let mut lo = 0usize;
+        for j in 0..(k - 1) {
+            let remaining = (k - 1) - j - 1;
+            let hi = ladder.len() - 1 - remaining;
+            let pick = g.usize_in(lo, hi);
+            cuts.push(ladder[pick]);
+            lo = pick + 1;
+        }
+        cuts.push(65_536);
+        let topo = Topology::partition(&cuts);
+
+        // (a) Analytical cover: the pool λ slices tile the workload —
+        // nothing dropped, nothing double-counted.
+        let profile: Arc<dyn GpuProfile> = Arc::new(ManualProfile::h100_70b());
+        let pools = topo.pools(
+            &azure_conversations(),
+            1000.0,
+            profile,
+            None,
+            LBarPolicy::Window,
+            0.85,
+            0.5,
+        );
+        xcheck_assert!(pools.len() == k);
+        let sum: f64 = pools.iter().map(|p| p.inputs.lambda_rps).sum();
+        xcheck_assert!((sum - 1000.0).abs() < 1e-6, "λ tiles: {sum}");
+
+        // (b) Router totality and no overlap: every prompt length maps
+        // to exactly the bucket its cutoffs select.
+        let router = topo.router();
+        for _ in 0..64 {
+            let p = g.u64_in(1, 100_000) as u32;
+            let req = Request {
+                id: 0,
+                arrival_s: 0.0,
+                prompt_tokens: p,
+                output_tokens: 1,
+            };
+            let route = router.route(&req);
+            xcheck_assert!(route.pool < k, "pool {} of {k}", route.pool);
+            if route.pool > 0 {
+                xcheck_assert!(
+                    p > cuts[route.pool - 1],
+                    "p={p} below its pool's lower cutoff"
+                );
+            }
+            if route.pool + 1 < k {
+                xcheck_assert!(
+                    p <= cuts[route.pool],
+                    "p={p} above cutoff {}",
+                    cuts[route.pool]
+                );
+            }
+        }
+
+        // (c) Simulated conservation: per-pool output tokens sum to the
+        // trace total (every request fits its pool's window, so nothing
+        // is rejected either).
+        let trace = generate(
+            &azure_conversations(),
+            &GenConfig {
+                lambda_rps: g.f64_in(10.0, 40.0),
+                duration_s: g.f64_in(0.5, 1.5),
+                max_prompt_tokens: 60_000,
+                max_output_tokens: 256,
+                seed: g.u64_in(0, 1 << 40),
+            },
+        );
+        let p2 = ManualProfile::h100_70b();
+        let total_groups = k as u32 + g.u64_in(0, 3) as u32;
+        let (pool_groups, cfgs) = topo.sim_pools(&p2, total_groups, 1024);
+        let mut rr = RoundRobin::new();
+        let r = simulate_topology_with(
+            &trace,
+            router.as_ref(),
+            &pool_groups,
+            &cfgs,
+            &mut rr,
+            g.bool(),
+        );
+        let want: u64 = trace.iter().map(|r| r.output_tokens as u64).sum();
+        xcheck_assert!(
+            r.output_tokens == want,
+            "fleet tokens {} of {want}",
+            r.output_tokens
+        );
+        let per_pool: u64 = r.pools.iter().map(|p| p.output_tokens).sum();
+        xcheck_assert!(per_pool == want, "per-pool sum {per_pool} of {want}");
+        let done: u64 = r.pools.iter().map(|p| p.metrics.completed).sum();
+        xcheck_assert!(done == trace.len() as u64);
+        let rejected: u64 = r.pools.iter().map(|p| p.metrics.rejected).sum();
+        xcheck_assert!(rejected == 0, "{rejected} rejected");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_event_sim_conserves_tokens_and_replays_across_policies() {
     use wattlaw::router::context::ContextRouter;
     use wattlaw::sim::{dispatch, simulate_topology_with};

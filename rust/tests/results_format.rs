@@ -73,6 +73,87 @@ fn json_golden_schema_rows_and_null_policy() {
     );
 }
 
+/// Golden schema for the new t8 K-pool rowset: stable column order and
+/// units in both machine formats (values are simulation-derived, so the
+/// schema — not the numbers — is the golden surface).
+#[test]
+fn t8_kpool_rowset_schema_and_units_are_stable() {
+    let rs = wattlaw::tables::t8::rowset();
+    let csv = rs.to_csv();
+    assert!(
+        csv.starts_with(
+            "K,topology,analyze tok/W (tok/J),simulate tok/W (tok/J),\
+             delta (%),p99 TTFT (s),completed\n"
+        ),
+        "t8 CSV header drifted:\n{}",
+        csv.lines().next().unwrap_or("")
+    );
+    assert_eq!(csv.lines().count(), 1 + 4, "one row per K in 1..=4");
+
+    let doc = parse_json(&rs.to_json()).expect("t8 emits valid JSON");
+    let cols = doc.get("columns").unwrap().as_arr().unwrap();
+    assert_eq!(cols.len(), 7);
+    assert_eq!(cols[2].get("name").unwrap().as_str(), Some("analyze tok/W"));
+    assert_eq!(cols[2].get("unit").unwrap().as_str(), Some("tok/J"));
+    assert_eq!(cols[5].get("unit").unwrap().as_str(), Some("s"));
+    let rows = doc.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 4);
+    for (i, r) in rows.iter().enumerate() {
+        assert_eq!(r.get("K").unwrap().as_f64(), Some((i + 1) as f64));
+        assert!(r.get("analyze tok/W").unwrap().as_f64().is_some());
+        assert!(r.get("simulate tok/W").unwrap().as_f64().is_some());
+    }
+}
+
+/// A `simulate sweep` grid with a K=3 partition cell must round-trip
+/// through the crate's own CSV parser (the CI artifact path).
+#[test]
+fn kpool_sweep_csv_round_trips_through_the_parser() {
+    use wattlaw::fleet::topology::default_partition;
+    use wattlaw::scenario::sweep::{grid, records, rowset, run, SweepConfig};
+    use wattlaw::workload::cdf::azure_conversations;
+    use wattlaw::workload::synth::GenConfig;
+
+    let cfg = SweepConfig {
+        gen: GenConfig {
+            lambda_rps: 150.0,
+            duration_s: 0.3,
+            max_prompt_tokens: 20_000,
+            max_output_tokens: 64,
+            seed: 8,
+        },
+        groups: 4,
+        dispatches: vec!["rr".into()],
+        b_shorts: Vec::new(),
+        partitions: vec![default_partition(3)],
+        spill: None,
+        ..Default::default()
+    };
+    let specs = grid(&azure_conversations(), &cfg);
+    // Homogeneous baseline + the K=3 partition cell, one dispatch each.
+    assert_eq!(specs.len(), 2);
+    let out = run(&specs, 2);
+    let recs = records(&specs, &out, cfg.acct);
+    let rs = rowset(&recs, &cfg);
+    let csv = rs.to_csv();
+    assert!(csv.contains("3-pool"), "K-pool cell missing:\n{csv}");
+
+    let parsed = parse_csv(&csv).unwrap_or_else(|e| panic!("parse: {e}"));
+    assert_eq!(parsed.len(), 1 + recs.len());
+    for row in &parsed {
+        assert_eq!(row.len(), 10, "sweep schema arity");
+    }
+    // The measured tok/W column survives the round trip at full value.
+    let col = parsed[0]
+        .iter()
+        .position(|h| h.starts_with("simulate tok/W"))
+        .expect("simulate column");
+    for (i, r) in recs.iter().enumerate() {
+        let back: f64 = parsed[1 + i][col].parse().unwrap();
+        assert_eq!(back.to_bits(), r.outcome.tok_per_watt.to_bits());
+    }
+}
+
 /// Random printable-ish strings, including CSV-hostile characters.
 fn random_string(rng: &mut Rng) -> String {
     const ALPHABET: &[char] = &[

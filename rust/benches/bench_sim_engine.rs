@@ -185,6 +185,26 @@ fn main() {
         black_box(cells.len())
     });
 
+    // Heterogeneous screen: the mixed H100/B200 cross-product over the
+    // K ∈ {2, 3} cutoff grids — the analytical cost of opening the
+    // GPU-assignment-per-pool axis.
+    let hetero_parts: Vec<Vec<u32>> =
+        (2u32..=3).flat_map(optimize::kpool_partitions).collect();
+    let mut hetero_cells = 0usize;
+    g.bench("optimize_stage_a_hetero_screen(K=2..3, H100xB200)", || {
+        let cfg = OptimizeConfig {
+            gpus: vec![Gpu::H100, Gpu::B200],
+            partitions: hetero_parts.clone(),
+            gpu_axis: optimize::GpuAxis::Mixed,
+            gen: gen.clone(),
+            groups: 16,
+            ..Default::default()
+        };
+        let cells = optimize::screen(&workload, &cfg);
+        hetero_cells = cells.len();
+        black_box(cells.len())
+    });
+
     let stats = g.finish();
     assert_eq!(steps_seq, steps_par, "parallel fast path must replay exactly");
     assert_eq!(
@@ -231,6 +251,15 @@ fn main() {
          ({kpool_us_per_cell:.1} µs/cell)",
         kpool_cells,
         stats[6].mean_ns / 1e6,
+    );
+    let hetero_us_per_cell =
+        stats[7].mean_ns / 1e3 / hetero_cells.max(1) as f64;
+    println!(
+        "hetero screen: {} assignment x partition x gamma cells (K=2..3, \
+         H100 x B200 mixed cross-product) in {:.1} ms \
+         ({hetero_us_per_cell:.1} µs/cell)",
+        hetero_cells,
+        stats[7].mean_ns / 1e6,
     );
 
     if record {
@@ -299,6 +328,18 @@ fn main() {
              gamma grid, H100) — the analytical cost of the K-pool \
              topology axis\"\n  }},\n",
             stats[6].mean_ns / 1e6,
+        ));
+        j.push_str(&format!(
+            "  \"hetero_screen\": {{\n    \
+             \"cells\": {hetero_cells},\n    \
+             \"screen_ms\": {:.3},\n    \
+             \"us_per_cell\": {hetero_us_per_cell:.2},\n    \
+             \"note\": \"GpuAxis::Mixed stage A: homogeneous H100/B200 \
+             cells plus the full mixed H100xB200 assignment \
+             cross-product over the K in 2..=3 cutoff grids x the \
+             legacy gamma grid — the analytical cost of the \
+             generation-per-pool axis\"\n  }},\n",
+            stats[7].mean_ns / 1e6,
         ));
         j.push_str(
             "  \"recorded_by\": \"cargo bench --bench bench_sim_engine -- \

@@ -99,7 +99,7 @@ fn main() {
         )
     });
     g.bench("dispatch_power_pick_1k_over_64_groups", || {
-        let mut pa = PowerAware;
+        let mut pa = PowerAware::new();
         black_box(
             (0..1024).map(|_| pa.pick_group(0, 64, &sreq, &wide)).sum::<usize>(),
         )

@@ -1,21 +1,23 @@
 //! Command-line interface (hand-rolled: `clap` is not fetchable offline).
 //!
 //! ```text
-//! wattlaw tables [--all|--t1..--t7|--law|--power-fig|--dispatch-fig|--independence]
+//! wattlaw tables [--all|--t1..--t9|--law|--power-fig|--dispatch-fig|--independence]
 //!                [--lbar window|traffic]
 //! wattlaw fleet --trace azure|lmsys|agent --gpu h100|h200|b200|gb200
 //!               --topo homo|pool|fleetopt [--b-short N] [--gamma G]
 //!               [--lambda R] [--lbar window|traffic] [--acct pergpu|pergroup]
 //! wattlaw sweep --trace azure --gpu h100 [--pools K | --cutoffs a,b,c]
 //!                  FleetOpt (B_short, γ*) sweep; K-pool partition sweep
-//! wattlaw optimize [--trace azure] [--gpu h100] [--lambda R] [--duration S]
+//! wattlaw optimize [--trace azure] [--gpu h100 | --gpu h100,h100,b200]
+//!                  [--lambda R] [--duration S]
 //!                  [--groups N] [--b-short N] [--gamma G] [--dispatch NAME]
-//!                  [--pools K] [--cutoffs a,b,c]
+//!                  [--pools K] [--cutoffs a,b,c] [--hetero]
+//!                  [--upgrade-budget N --upgrade-to b200]
 //!                  [--top-k K] [--slo-ttft S] [--workers N]
 //!                  two-stage search: analytical screen, simulated refine
 //! wattlaw power [--gpu b200]                        P(b) curve
 //! wattlaw simulate [--trace azure] [--lambda R] [--duration S] [--groups N]
-//!                  [--dispatch rr|jsq|least-kv|power]
+//!                  [--dispatch rr|jsq|least-kv|power|power-slo]
 //!                  [--router context|adaptive|fleetopt] [--spill F]
 //!                  [--pools K] [--cutoffs a,b,c]   K-pool routed fleet
 //! wattlaw simulate sweep [--lambda 1000] [--duration S] [--groups N]
@@ -59,10 +61,11 @@ pub struct Args {
 }
 
 /// Keys that are value-taking options; everything else with `--` is a flag.
-const VALUE_KEYS: [&str; 21] = [
+const VALUE_KEYS: [&str; 23] = [
     "lbar", "trace", "gpu", "topo", "b-short", "gamma", "lambda", "acct",
     "requests", "artifacts", "duration", "groups", "dispatch", "router",
     "spill", "slo-ttft", "workers", "format", "top-k", "pools", "cutoffs",
+    "upgrade-budget", "upgrade-to",
 ];
 
 pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Args {
@@ -128,6 +131,45 @@ impl Args {
         self.opt("gpu").and_then(Gpu::parse).unwrap_or(Gpu::H100)
     }
 
+    /// `--gpu` as a comma-separated generation list (`h100,h100,b200`):
+    /// a single value keeps the legacy fleet-wide meaning, several
+    /// values are a per-pool assignment (one generation per partition
+    /// pool). Unlike [`Self::gpu`], unknown names are an error, not a
+    /// silent H100 default. `None` when the flag is absent.
+    pub fn gpus(&self) -> crate::Result<Option<Vec<Gpu>>> {
+        match self.opt("gpu") {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|part| {
+                    let part = part.trim();
+                    Gpu::parse(part).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown GPU '{part}' (h100|h200|b200|gb200)"
+                        )
+                    })
+                })
+                .collect::<crate::Result<Vec<Gpu>>>()
+                .map(Some),
+        }
+    }
+
+    /// Single fleet-wide `--gpu` for commands without a per-pool axis
+    /// (`fleet`, `power`): unknown names and comma lists are errors —
+    /// unlike [`Self::gpu`]'s silent H100 default, a user who types the
+    /// list syntax the partition commands teach must not get H100
+    /// numbers labeled as their requested fleet.
+    pub fn gpu_single(&self) -> crate::Result<Gpu> {
+        match self.gpus()? {
+            None => Ok(Gpu::H100),
+            Some(v) if v.len() == 1 => Ok(v[0]),
+            Some(_) => anyhow::bail!(
+                "this command takes one fleet-wide --gpu (per-pool \
+                 lists live on simulate/sweep/optimize)"
+            ),
+        }
+    }
+
     pub fn artifacts(&self) -> PathBuf {
         self.opt("artifacts")
             .map(PathBuf::from)
@@ -179,11 +221,19 @@ impl Args {
 
     /// `--cutoffs a,b,c` — explicit interior partition cutoffs, tokens.
     /// The long pool at `LONG_CTX` is appended automatically.
+    ///
+    /// Strictly validated: unsorted or duplicate values are rejected
+    /// with a clear error instead of silently re-sorted — a typo like
+    /// `16384,2048` almost certainly meant something else, and silent
+    /// normalization would also misalign a per-pool `--gpu a,b,c`
+    /// assignment. Interior cutoffs must stay below the 64K long
+    /// window (a value of `LONG_CTX` is only legal as the final entry,
+    /// which strict ordering enforces by construction).
     pub fn cutoffs(&self) -> crate::Result<Option<Vec<u32>>> {
         match self.opt("cutoffs") {
             None => Ok(None),
             Some(s) => {
-                let mut cuts = Vec::new();
+                let mut cuts: Vec<u32> = Vec::new();
                 for part in s.split(',') {
                     let c: u32 = part.trim().parse().map_err(|_| {
                         anyhow::anyhow!("bad --cutoffs entry '{part}'")
@@ -192,11 +242,21 @@ impl Args {
                         (1..=LONG_CTX).contains(&c),
                         "cutoff {c} outside 1..={LONG_CTX}"
                     );
+                    if let Some(&prev) = cuts.last() {
+                        anyhow::ensure!(
+                            c != prev,
+                            "duplicate cutoff {c} in --cutoffs '{s}'"
+                        );
+                        anyhow::ensure!(
+                            c > prev,
+                            "--cutoffs must be strictly increasing (got {prev} \
+                             then {c} in '{s}'); unsorted cutoffs would \
+                             silently invert traffic slices"
+                        );
+                    }
                     cuts.push(c);
                 }
                 anyhow::ensure!(!cuts.is_empty(), "--cutoffs needs values");
-                cuts.sort_unstable();
-                cuts.dedup();
                 if cuts.last() != Some(&LONG_CTX) {
                     cuts.push(LONG_CTX);
                 }
@@ -244,30 +304,37 @@ wattlaw — The 1/W Law, reproduced (context-length routing & GPU generation \
 gains for LLM inference energy efficiency)
 
 commands:
-  tables     regenerate paper tables/figures (--all, --t1..--t8, --law,
+  tables     regenerate paper tables/figures (--all, --t1..--t9, --law,
              --power-fig, --dispatch-fig, --independence; --lbar window|traffic)
   fleet      analyze one fleet configuration (--trace --gpu --topo ...)
   sweep      FleetOpt (B_short, γ*) closed-form sweep (legacy, stage A only);
              with --pools K or --cutoffs a,b,c: K-pool partition x γ sweep
+             (--gpu a,b,c pins a per-pool GPU assignment)
   optimize   two-stage FleetOpt search over scenario space: stage A screens
-             the partition x gamma x GPU-generation grid with the closed-form
+             the partition x gamma x GPU-assignment grid with the closed-form
              planner, stage B replays the top-k cells (x dispatch policies)
              through the event-driven simulator and re-ranks by measured
              tok/W with the SLO verdict as a hard filter
              (--gpu restricts the generation axis, --top-k, --slo-ttft;
               --pools K screens the generated K-pool cutoff grids,
-              --cutoffs a,b,c one explicit partition vector)
+              --cutoffs a,b,c one explicit partition vector;
+              --gpu h100,h100,b200 screens that per-pool assignment,
+              --hetero the full mixed cross-product over the --gpu set,
+              --upgrade-budget N --upgrade-to b200 the greedy budgeted
+              placement of at most N upgraded groups)
   power      print a GPU's P(b) curve (--gpu)
   simulate   event-driven fleet simulation vs analytics
-             (--dispatch rr|jsq|least-kv|power,
+             (--dispatch rr|jsq|least-kv|power|power-slo,
               --router context|adaptive|fleetopt, --spill F;
               --pools K / --cutoffs a,b,c simulate a K-pool routed fleet,
-              zero-traffic pools warn and bill idle power)
+              --gpu a,b,c one generation per pool; zero-traffic pools
+              warn and bill idle power)
   simulate sweep
              dispatch x topology x context-window scenario grid at fleet
              scale (default λ=1000), cells across worker threads; every
              cell reports tok/W + p99 TTFT + SLO verdict; --pools K adds
-             one K'-pool partition cell per K' in 2..=K
+             one K'-pool partition cell per K' in 2..=K, --gpu a,b,c a
+             heterogeneous cell per matching partition
   serve      serve a trace through the real AOT model (2-pool demo)
   validate   check runtime numerics against the JAX golden trace
   report     paper-vs-measured summary (EXPERIMENTS.md §input)
@@ -311,6 +378,9 @@ fn cmd_tables(args: &Args) -> crate::Result<i32> {
         if all || args.flag("t8") {
             out.push_str(&tables::t8::generate());
         }
+        if all || args.flag("t9") {
+            out.push_str(&tables::t9::generate());
+        }
         if all || args.flag("law") {
             out.push_str(&tables::law_fig::generate());
         }
@@ -342,7 +412,7 @@ fn cmd_tables(args: &Args) -> crate::Result<i32> {
 
 fn cmd_fleet(args: &Args) -> crate::Result<i32> {
     let trace = args.trace();
-    let gpu = args.gpu();
+    let gpu = args.gpu_single()?;
     let lambda = args.opt_f64("lambda", 1000.0);
     let b_short = args.opt_u32("b-short", trace.paper_b_short);
     let gamma = args.opt_f64("gamma", 2.0);
@@ -400,12 +470,14 @@ fn cmd_sweep(args: &Args) -> crate::Result<i32> {
     // Validate the output format before doing any work.
     let format = args.format()?;
     let trace = args.trace();
+    let gpus = args.gpus()?.unwrap_or_else(|| vec![Gpu::H100]);
     let profile: Arc<dyn GpuProfile> =
-        Arc::new(ManualProfile::for_gpu(args.gpu()));
+        Arc::new(ManualProfile::for_gpu(gpus[0]));
 
     // K-pool mode: rank partition vectors × γ with the same closed-form
     // screen (`--pools K` for the generated grids, `--cutoffs` for one
-    // explicit vector).
+    // explicit vector). `--gpu a,b,c` pins a per-pool GPU assignment,
+    // ranked against the matching partitions only.
     let partitions = match (args.cutoffs()?, args.pools_k()?) {
         (Some(cuts), _) => Some(vec![cuts]),
         (None, Some(k)) => {
@@ -414,39 +486,60 @@ fn cmd_sweep(args: &Args) -> crate::Result<i32> {
         (None, None) => None,
     };
     if let Some(partitions) = partitions {
+        let partitions: Vec<Vec<u32>> = partitions;
         let gammas: Vec<f64> = match args.gamma_strict()? {
             Some(gamma) => vec![gamma],
             None => optimizer::GAMMA_GRID.to_vec(),
         };
-        let ranked = scenario_optimize::screen_partitions(
-            &trace,
-            args.opt_f64("lambda", 1000.0),
-            profile,
-            &partitions,
-            &gammas,
-            args.lbar(),
-            0.85,
-            0.5,
-            args.acct(),
-        );
+        let lambda = args.opt_f64("lambda", 1000.0);
+        let ranked = if gpus.len() > 1 {
+            let cells: Vec<(Vec<u32>, Vec<Gpu>)> = partitions
+                .iter()
+                .filter(|c| c.len() == gpus.len())
+                .map(|c| (c.clone(), gpus.clone()))
+                .collect();
+            anyhow::ensure!(
+                !cells.is_empty(),
+                "--gpu lists {} generations but no screened partition has \
+                 {} pools (match --cutoffs/--pools to the assignment)",
+                gpus.len(),
+                gpus.len()
+            );
+            scenario_optimize::screen_assignments(
+                &trace, lambda, &cells, &gammas, args.lbar(), 0.85, 0.5,
+                args.acct(),
+            )
+        } else {
+            scenario_optimize::screen_partitions(
+                &trace, lambda, profile, &partitions, &gammas, args.lbar(),
+                0.85, 0.5, args.acct(),
+            )
+        };
+        let fleet_label = scenario_optimize::assignment_label(&gpus);
         let mut rs = RowSet::new(
             format!(
                 "K-pool partition closed-form sweep — {} on {}",
-                trace.name,
-                args.gpu().spec().name
+                trace.name, fleet_label
             ),
             vec![
                 Column::int("pools"),
                 Column::str("cutoffs").with_unit("tok"),
+                Column::str("GPUs"),
                 Column::float("gamma"),
                 Column::float("tok/W").with_unit("tok/J"),
                 Column::int("groups"),
             ],
         );
         for r in &ranked {
+            let row_gpus = if r.gpus.is_empty() {
+                fleet_label.clone()
+            } else {
+                scenario_optimize::assignment_label(&r.gpus)
+            };
             rs.push(vec![
                 Cell::int(r.cutoffs.len() as i64),
                 Cell::str(scenario_optimize::cutoffs_label(&r.cutoffs)),
+                Cell::str(row_gpus),
                 Cell::float(r.gamma),
                 Cell::float(r.report.tok_per_watt.0)
                     .shown(format!("{:.2}", r.report.tok_per_watt.0)),
@@ -468,6 +561,11 @@ fn cmd_sweep(args: &Args) -> crate::Result<i32> {
         println!("{}", rs.emit(format));
         return Ok(0);
     }
+    anyhow::ensure!(
+        gpus.len() == 1,
+        "per-pool --gpu a,b,c needs --pools or --cutoffs (the legacy \
+         FleetOpt sweep takes one fleet-wide GPU)"
+    );
 
     let ranked = optimizer::sweep_fleetopt(
         &trace,
@@ -482,7 +580,7 @@ fn cmd_sweep(args: &Args) -> crate::Result<i32> {
         format!(
             "FleetOpt (B_short, γ*) closed-form sweep — {} on {}",
             trace.name,
-            args.gpu().spec().name
+            gpus[0].spec().name
         ),
         vec![
             Column::int("B_short").with_unit("tok"),
@@ -516,7 +614,9 @@ fn cmd_sweep(args: &Args) -> crate::Result<i32> {
 /// dispatch axis) through the event-driven simulator on worker threads
 /// and re-ranks by measured tok/W under the SLO hard filter.
 fn cmd_optimize(args: &Args) -> crate::Result<i32> {
-    use crate::scenario::optimize::{self, OptimizeConfig};
+    use crate::scenario::optimize::{
+        self, GpuAxis, OptimizeConfig, UpgradeBudget,
+    };
     use crate::scenario::SloTargets;
     use crate::sim::dispatch;
     use crate::workload::synth::GenConfig;
@@ -526,10 +626,97 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
     let trace = args.trace();
     let defaults = OptimizeConfig::default();
 
-    let gpus = match args.opt("gpu") {
-        Some(g) => vec![Gpu::parse(g)
-            .ok_or_else(|| anyhow::anyhow!("unknown GPU '{g}'"))?],
-        None => defaults.gpus.clone(),
+    // The GPU axis: a single `--gpu` restricts the homogeneous
+    // generation sweep (legacy); a per-pool list (`--gpu h100,h100,b200`)
+    // screens that explicit assignment next to each listed generation's
+    // homogeneous cells; `--hetero` screens the full mixed cross-product
+    // over the `--gpu` set (default h100,b200); `--upgrade-budget N
+    // --upgrade-to b200` runs the greedy budgeted placement instead.
+    let gpu_list = args.gpus()?;
+    let upgrade_budget = match args.opt("upgrade-budget") {
+        None => None,
+        Some(s) => {
+            let n: u32 = s.parse().map_err(|_| {
+                anyhow::anyhow!("bad --upgrade-budget '{s}'")
+            })?;
+            anyhow::ensure!(n > 0, "--upgrade-budget must be > 0 groups");
+            Some(n)
+        }
+    };
+    let upgrade_to = match args.opt("upgrade-to") {
+        None => Gpu::B200,
+        Some(g) => Gpu::parse(g).ok_or_else(|| {
+            anyhow::anyhow!("unknown --upgrade-to '{g}' (h100|h200|b200|gb200)")
+        })?,
+    };
+    anyhow::ensure!(
+        args.opt("upgrade-to").is_none() || upgrade_budget.is_some(),
+        "--upgrade-to needs --upgrade-budget N (the group budget)"
+    );
+    let distinct = |v: &[Gpu]| {
+        let mut d: Vec<Gpu> = Vec::new();
+        for g in v {
+            if !d.contains(g) {
+                d.push(*g);
+            }
+        }
+        d
+    };
+    anyhow::ensure!(
+        !(args.flag("hetero") && upgrade_budget.is_some()),
+        "--hetero and --upgrade-budget are different searches over the \
+         same axis (full cross-product vs greedy placement) — pick one"
+    );
+    let (gpus, gpu_axis) = if let Some(max_groups) = upgrade_budget {
+        let base = match &gpu_list {
+            None => Gpu::H100,
+            Some(v) if v.len() == 1 => v[0],
+            Some(_) => anyhow::bail!(
+                "--upgrade-budget takes one base --gpu (the fleet floor), \
+                 not a per-pool list — the search decides the placement"
+            ),
+        };
+        anyhow::ensure!(
+            base != upgrade_to,
+            "--upgrade-to {} equals the base fleet GPU — nothing to upgrade",
+            upgrade_to.short_name()
+        );
+        (
+            vec![base],
+            GpuAxis::Budget(UpgradeBudget { to: upgrade_to, max_groups }),
+        )
+    } else if args.flag("hetero") {
+        let set = distinct(
+            &gpu_list.clone().unwrap_or_else(|| vec![Gpu::H100, Gpu::B200]),
+        );
+        anyhow::ensure!(
+            set.len() >= 2,
+            "--hetero needs at least two distinct generations in --gpu"
+        );
+        // The mixed cross-product is |gpus|^K per partition and is only
+        // generated for K ≤ 3 — reject a wider request instead of
+        // silently screening those partitions homogeneous-only.
+        anyhow::ensure!(
+            args.pools_k()?.unwrap_or(2) <= 3
+                && args.cutoffs()?.map_or(true, |c| c.len() <= 3),
+            "--hetero screens the full assignment cross-product for \
+             partitions of up to 3 pools; use --upgrade-budget for \
+             wider fleets (greedy placement scales to any K)"
+        );
+        (set, GpuAxis::Mixed)
+    } else {
+        match gpu_list {
+            None => (defaults.gpus.clone(), GpuAxis::Homogeneous),
+            Some(v) if distinct(&v).len() == 1 => {
+                // A single generation (or an all-same list): the legacy
+                // homogeneous restriction.
+                (vec![v[0]], GpuAxis::Homogeneous)
+            }
+            Some(v) => {
+                let set = distinct(&v);
+                (set, GpuAxis::Explicit(vec![v]))
+            }
+        }
     };
     let b_shorts = match args.opt("b-short") {
         Some(b) => {
@@ -554,7 +741,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
         Some(d) => {
             anyhow::ensure!(
                 dispatch::parse(d).is_some(),
-                "unknown dispatch policy '{d}' (rr|jsq|least-kv|power)"
+                "unknown dispatch policy '{d}' (rr|jsq|least-kv|power|power-slo)"
             );
             vec![d.to_string()]
         }
@@ -571,6 +758,26 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
         (None, None) => Vec::new(),
     };
 
+    // An explicit per-pool assignment must fit at least one screened
+    // partition, or stage A would silently screen homogeneous cells
+    // only.
+    if let GpuAxis::Explicit(vectors) = &gpu_axis {
+        let lens: Vec<usize> = if partitions.is_empty() {
+            vec![2] // legacy [B_short, LONG_CTX] two-pool axis
+        } else {
+            partitions.iter().map(Vec::len).collect()
+        };
+        for v in vectors {
+            anyhow::ensure!(
+                lens.contains(&v.len()),
+                "--gpu lists {} generations but no screened partition has \
+                 {} pools (use --pools/--cutoffs to match the assignment)",
+                v.len(),
+                v.len()
+            );
+        }
+    }
+
     // Stage B needs at least one simulated group per pool of the widest
     // partition (sim_pools asserts it; erroring here beats a panic on a
     // worker thread after stage A ran).
@@ -579,6 +786,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
         gpus,
         b_shorts,
         partitions,
+        gpu_axis,
         gammas,
         dispatches,
         gen: GenConfig {
@@ -600,10 +808,27 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
         .unwrap_or(1);
     let workers = args.opt_u32("workers", default_workers).max(1) as usize;
     let n_partitions = cfg.effective_partitions().len();
+    // The homogeneous axis is an exact count; the heterogeneous modes
+    // add assignment cells on top (the budget path's length depends on
+    // the marginal gains it finds, so it cannot be pre-counted).
+    let hetero_note = match &cfg.gpu_axis {
+        optimize::GpuAxis::Homogeneous => String::new(),
+        optimize::GpuAxis::Mixed => {
+            " + the mixed GPU-assignment cross-product".into()
+        }
+        optimize::GpuAxis::Explicit(v) => format!(
+            " + {} explicit GPU assignment{}",
+            v.len(),
+            if v.len() == 1 { "" } else { "s" }
+        ),
+        optimize::GpuAxis::Budget(_) => {
+            " + the budgeted-upgrade path".into()
+        }
+    };
     eprintln!(
         "optimize: screening {} analytical cells ({} GPUs x {} partition \
-         vectors x {} gamma), refining top {} x {} dispatch on {} worker \
-         threads…",
+         vectors x {} gamma){hetero_note}, refining top {} x {} dispatch \
+         on {} worker threads…",
         cfg.gpus.len() * n_partitions * cfg.gammas.len(),
         cfg.gpus.len(),
         n_partitions,
@@ -618,7 +843,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
 }
 
 fn cmd_power(args: &Args) -> crate::Result<i32> {
-    let spec = args.gpu().spec();
+    let spec = args.gpu_single()?.spec();
     println!("\n== {} P(b) | {} quality ==", spec.name, spec.quality.label());
     for e in 0..=10 {
         let b = (1u64 << e) as f64;
@@ -657,14 +882,36 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
         (None, Some(k)) => Some(crate::fleet::topology::default_partition(k)),
         (None, None) => None,
     };
+    // `--gpu a,b,c` (several values) assigns one generation per
+    // partition pool; a single value keeps the fleet-wide meaning. The
+    // homogeneous comparison baseline always runs the first generation.
+    let gpus = args.gpus()?.unwrap_or_else(|| vec![Gpu::H100]);
     let routed_topo = match &partition {
         // γ applies to the partition's last pool only when given
         // explicitly (plain bucket routing by default).
-        Some(cuts) => Topology::partition_with_gamma(
-            cuts,
-            args.gamma_strict()?.unwrap_or(1.0),
-        ),
-        None => Topology::PoolRouting { b_short, short_ctx: b_short.max(2048) },
+        Some(cuts) => {
+            let gamma = args.gamma_strict()?.unwrap_or(1.0);
+            if gpus.len() > 1 {
+                anyhow::ensure!(
+                    gpus.len() == cuts.len(),
+                    "--gpu lists {} generations for {} pools (cutoffs \
+                     {cuts:?}) — give one per pool",
+                    gpus.len(),
+                    cuts.len()
+                );
+                Topology::partition_with_gpus(cuts, &gpus, gamma)
+            } else {
+                Topology::partition_with_gamma(cuts, gamma)
+            }
+        }
+        None => {
+            anyhow::ensure!(
+                gpus.len() == 1,
+                "per-pool --gpu a,b,c needs --pools or --cutoffs (the \
+                 two-pool default takes one fleet-wide GPU)"
+            );
+            Topology::PoolRouting { b_short, short_ctx: b_short.max(2048) }
+        }
     };
     // The routed side of the comparison needs one group per pool.
     let groups =
@@ -673,7 +920,7 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
     let dispatch_name = args.opt("dispatch").unwrap_or("rr");
     let mut policy = dispatch::parse(dispatch_name).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown dispatch policy '{dispatch_name}' (rr|jsq|least-kv|power)"
+            "unknown dispatch policy '{dispatch_name}' (rr|jsq|least-kv|power|power-slo)"
         )
     })?;
     let spill = args.opt_f64("spill", 2.0);
@@ -707,7 +954,7 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
         },
     );
 
-    let p = ManualProfile::for_gpu(args.gpu());
+    let p = ManualProfile::for_gpu(gpus[0]);
     let (homo_groups, homo_cfgs) =
         Topology::Homogeneous { ctx: LONG_CTX }.sim_pools(&p, groups, 1024);
     let mut rr = RoundRobin::new();
@@ -796,7 +1043,7 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
         Some(d) => {
             anyhow::ensure!(
                 dispatch::parse(d).is_some(),
-                "unknown dispatch policy '{d}' (rr|jsq|least-kv|power)"
+                "unknown dispatch policy '{d}' (rr|jsq|least-kv|power|power-slo)"
             );
             vec![d.to_string()]
         }
@@ -821,8 +1068,28 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
     };
     let max_k = partitions.iter().map(Vec::len).max().unwrap_or(2) as u32;
 
+    // `--gpu a,b,c` adds one heterogeneous cell per matching K-pool
+    // partition (the single-value form keeps the legacy fleet-wide
+    // meaning for every cell of the grid).
+    let gpus = match args.gpus()? {
+        Some(v) => v,
+        None => vec![Gpu::H100],
+    };
+    let gpu_assignments = if gpus.len() > 1 {
+        anyhow::ensure!(
+            partitions.iter().any(|c| c.len() == gpus.len()),
+            "--gpu lists {} generations but no grid partition has {} pools \
+             (add --pools/--cutoffs to match the assignment)",
+            gpus.len(),
+            gpus.len()
+        );
+        vec![gpus.clone()]
+    } else {
+        Vec::new()
+    };
+
     let cfg = SweepConfig {
-        gpu: args.gpu(),
+        gpu: gpus[0],
         gen: GenConfig {
             lambda_rps: args.opt_f64("lambda", 1000.0),
             duration_s: args.opt_f64("duration", 1.0),
@@ -833,6 +1100,7 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
         dispatches,
         b_shorts,
         partitions,
+        gpu_assignments,
         spill: Some(spill),
         slo: SloTargets { ttft_p99_s: args.opt_f64("slo-ttft", 0.5) },
         acct: args.acct(),
@@ -1064,16 +1332,118 @@ mod tests {
             args("simulate --cutoffs 4096,65536").cutoffs().unwrap(),
             Some(vec![4096, LONG_CTX])
         );
-        // Unsorted/duplicated input normalizes.
-        assert_eq!(
-            args("simulate --cutoffs 16384,2048,16384").cutoffs().unwrap(),
-            Some(vec![2048, 16384, LONG_CTX])
-        );
+        // Unsorted or duplicate input is an error, not silently
+        // normalized: a re-sort would also misalign a per-pool --gpu
+        // assignment, and a typo deserves a message, not a guess.
+        assert!(args("simulate --cutoffs 16384,2048").cutoffs().is_err());
+        assert!(args("simulate --cutoffs 16384,2048,16384")
+            .cutoffs()
+            .is_err());
+        assert!(args("simulate --cutoffs 2048,2048").cutoffs().is_err());
         assert!(args("simulate --cutoffs 4096,abc").cutoffs().is_err());
         assert!(args("simulate --cutoffs 0").cutoffs().is_err());
+        // Values beyond the long window are rejected, so an interior
+        // cutoff can never reach 64K: a 65536 entry is only legal last.
+        assert!(args("simulate --cutoffs 70000,65536").cutoffs().is_err());
+        assert!(args("simulate --cutoffs 65536,4096").cutoffs().is_err());
         // A bare 64K is the homogeneous baseline, not a partition.
         assert!(args("simulate --cutoffs 65536").cutoffs().is_err());
         assert!(args("simulate --cutoffs 65536,65536").cutoffs().is_err());
+    }
+
+    #[test]
+    fn gpu_list_option_parses_and_validates() {
+        assert_eq!(args("simulate").gpus().unwrap(), None);
+        assert_eq!(
+            args("simulate --gpu b200").gpus().unwrap(),
+            Some(vec![Gpu::B200])
+        );
+        assert_eq!(
+            args("simulate --gpu h100,h100,b200").gpus().unwrap(),
+            Some(vec![Gpu::H100, Gpu::H100, Gpu::B200])
+        );
+        assert!(args("simulate --gpu h100,bogus").gpus().is_err());
+        assert!(args("simulate --gpu h100,,b200").gpus().is_err());
+        // Commands without a per-pool axis reject junk and lists
+        // instead of silently defaulting to H100.
+        assert!(run("power --gpu bogus".split_whitespace().map(String::from))
+            .is_err());
+        assert!(run(
+            "fleet --gpu h100,b200 --topo fleetopt"
+                .split_whitespace()
+                .map(String::from)
+        )
+        .is_err());
+        assert_eq!(
+            run("power --gpu b200".split_whitespace().map(String::from))
+                .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn simulate_runs_a_heterogeneous_kpool_fleet() {
+        let quick = |extra: &str| {
+            run(format!("simulate --lambda 10 --duration 1 {extra}")
+                .split_whitespace()
+                .map(String::from))
+        };
+        assert_eq!(
+            quick("--cutoffs 2048,8192 --gpu h100,h100,b200 --groups 3")
+                .unwrap(),
+            0
+        );
+        // The assignment must match the pool count.
+        assert!(quick("--cutoffs 2048,8192 --gpu h100,b200").is_err());
+        // And needs a partition to assign across.
+        assert!(quick("--gpu h100,b200").is_err());
+    }
+
+    #[test]
+    fn optimize_accepts_the_heterogeneous_axes() {
+        // Explicit per-pool assignment (the CI smoke cell's shape).
+        let code = run(
+            "optimize --trace agent --gpu h100,h100,b200 --pools 3 \
+             --lambda 60 --duration 0.4 --groups 3 --gamma 1 \
+             --dispatch rr --top-k 2 --workers 2 --slo-ttft 1000 \
+             --format json"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
+        // Budgeted upgrade search.
+        let code = run(
+            "optimize --gpu h100 --upgrade-budget 64 --upgrade-to b200 \
+             --cutoffs 4096 --lambda 60 --duration 0.4 --groups 2 \
+             --gamma 1 --dispatch rr --top-k 2 --workers 2 \
+             --slo-ttft 1000 --format json"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
+        // Axis validation errors.
+        let fails = [
+            // assignment length matches no screened partition
+            "optimize --gpu h100,b200 --pools 3 --cutoffs 2048,8192",
+            // --upgrade-to without a budget
+            "optimize --upgrade-to b200",
+            // upgrading to the base generation is a no-op
+            "optimize --gpu b200 --upgrade-budget 8 --upgrade-to b200",
+            // --hetero needs two distinct generations
+            "optimize --hetero --gpu h100",
+            // the two heterogeneous searches are mutually exclusive
+            "optimize --hetero --upgrade-budget 8",
+            // the mixed cross-product stops at K = 3
+            "optimize --hetero --pools 4",
+        ];
+        for cmd in fails {
+            assert!(
+                run(cmd.split_whitespace().map(String::from)).is_err(),
+                "{cmd} should fail"
+            );
+        }
     }
 
     #[test]

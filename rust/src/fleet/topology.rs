@@ -39,6 +39,33 @@ impl PartitionPool {
     pub fn at(cutoff: u32) -> Self {
         PartitionPool { cutoff, gpu: None, groups: None }
     }
+
+    /// This pool served by an explicit GPU generation (heterogeneous
+    /// fleets: the scenario's `gpu` stays the default for pools without
+    /// an override).
+    pub fn with_gpu(mut self, gpu: Gpu) -> Self {
+        self.gpu = Some(gpu);
+        self
+    }
+
+    /// The override profile for this pool, if any — the single source
+    /// of the generation→profile mapping that [`Self::profile_or`]
+    /// (closed-form planner via [`Topology::pools`]) and the
+    /// simulator's [`Topology::sim_pools`] both consume, so an
+    /// analyze-vs-simulate cross-check can never diverge on a mixed
+    /// fleet.
+    pub fn override_profile(&self) -> Option<ManualProfile> {
+        self.gpu.map(ManualProfile::for_gpu)
+    }
+
+    /// The profile serving this pool: the per-pool override when set,
+    /// the caller's fleet default otherwise.
+    pub fn profile_or(&self, default: &Arc<dyn GpuProfile>) -> Arc<dyn GpuProfile> {
+        match self.override_profile() {
+            Some(p) => Arc::new(p),
+            None => default.clone(),
+        }
+    }
 }
 
 /// The default K-pool cutoff vector: a powers-of-four ladder below the
@@ -98,6 +125,53 @@ impl Topology {
         Topology::Partition {
             pools: cs.into_iter().map(PartitionPool::at).collect(),
             gamma,
+        }
+    }
+
+    /// A K-pool partition with an explicit per-pool GPU assignment
+    /// vector (`gpus[i]` serves the pool at `cutoffs[i]`) — the
+    /// heterogeneous-fleet constructor. Unlike [`Self::partition`],
+    /// `cutoffs` must already be strictly increasing: silently sorting
+    /// or deduplicating would misalign the assignment vector.
+    pub fn partition_with_gpus(cutoffs: &[u32], gpus: &[Gpu], gamma: f64) -> Self {
+        assert_eq!(
+            cutoffs.len(),
+            gpus.len(),
+            "one GPU per pool: {} cutoffs vs {} GPUs",
+            cutoffs.len(),
+            gpus.len()
+        );
+        assert!(
+            cutoffs.windows(2).all(|w| w[0] < w[1]),
+            "partition_with_gpus needs strictly increasing cutoffs \
+             (got {cutoffs:?}; sorting here would misalign the GPU \
+             assignment vector)"
+        );
+        let Topology::Partition { pools, gamma } =
+            Self::partition_with_gamma(cutoffs, gamma)
+        else {
+            unreachable!("partition_with_gamma builds a Partition")
+        };
+        Topology::Partition {
+            pools: pools
+                .into_iter()
+                .zip(gpus)
+                .map(|(p, &g)| p.with_gpu(g))
+                .collect(),
+            gamma,
+        }
+    }
+
+    /// The per-pool GPU assignment this topology serves, with `default`
+    /// filling every pool that carries no override — one generation per
+    /// pool, the heterogeneity axis as data. Non-partition topologies
+    /// are homogeneous in `default` by construction.
+    pub fn pool_gpus(&self, default: Gpu) -> Vec<Gpu> {
+        match self {
+            Topology::Partition { pools, .. } => {
+                pools.iter().map(|p| p.gpu.unwrap_or(default)).collect()
+            }
+            _ => vec![default; self.num_pools()],
         }
     }
 }
@@ -184,10 +258,32 @@ impl Topology {
                     .iter()
                     .map(|p| format!("{}K", p.cutoff / 1024))
                     .collect();
-                if *gamma > 1.0 {
-                    format!("{}-pool {{{}}}/γ={gamma}", pools.len(), tiers.join("|"))
+                // A mixed fleet names its per-pool generations — two
+                // cells differing only in GPU placement must not render
+                // identically. Uniform overrides stay suffix-free: the
+                // scenario label already names the (single) generation,
+                // and homogeneous-override cells must render like their
+                // no-override twins (the reduction oracle's surface).
+                let overrides: Vec<Option<Gpu>> =
+                    pools.iter().map(|p| p.gpu).collect();
+                let uniform = overrides.windows(2).all(|w| w[0] == w[1]);
+                let gpus = if uniform {
+                    String::new()
                 } else {
-                    format!("{}-pool {{{}}}", pools.len(), tiers.join("|"))
+                    let names: Vec<&str> = overrides
+                        .iter()
+                        .map(|g| g.map_or("-", |g| g.short_name()))
+                        .collect();
+                    format!(" [{}]", names.join("|"))
+                };
+                if *gamma > 1.0 {
+                    format!(
+                        "{}-pool {{{}}}/γ={gamma}{gpus}",
+                        pools.len(),
+                        tiers.join("|")
+                    )
+                } else {
+                    format!("{}-pool {{{}}}{gpus}", pools.len(), tiers.join("|"))
                 }
             }
         }
@@ -323,10 +419,7 @@ impl Topology {
                     let hi = if last { max_len } else { part.cutoff as f64 };
                     let window = partition_window(pools, i, gamma);
                     let compression = if last { gamma } else { 1.0 };
-                    let pool_profile: Arc<dyn GpuProfile> = match part.gpu {
-                        Some(g) => Arc::new(ManualProfile::for_gpu(g)),
-                        None => profile.clone(),
-                    };
+                    let pool_profile = part.profile_or(&profile);
                     let name = if last && gamma > 1.0 {
                         format!("tier-{}k/γ{gamma}", part.cutoff / 1024)
                     } else {
@@ -452,8 +545,8 @@ impl Topology {
                         } else {
                             part.cutoff.max(2048) + 1024
                         };
-                        match part.gpu {
-                            Some(g) => mk_for(&ManualProfile::for_gpu(g), window),
+                        match part.override_profile() {
+                            Some(p) => mk_for(&p, window),
                             None => mk(window),
                         }
                     })
@@ -769,6 +862,63 @@ mod tests {
         let long = r.route(&req(40_000));
         assert_eq!(long.pool, 2);
         assert_eq!(long.effective_prompt_tokens, 20_000);
+    }
+
+    #[test]
+    fn partition_with_gpus_assigns_one_generation_per_pool() {
+        use crate::power::Gpu;
+        let t = Topology::partition_with_gpus(
+            &[4096, 16384, LONG_CTX],
+            &[Gpu::H100, Gpu::H100, Gpu::B200],
+            1.0,
+        );
+        assert_eq!(
+            t.pool_gpus(Gpu::H100),
+            vec![Gpu::H100, Gpu::H100, Gpu::B200]
+        );
+        // Mixed assignments surface in the label; uniform overrides
+        // render exactly like their no-override twins.
+        assert!(t.label().contains("[H100|H100|B200]"), "{}", t.label());
+        let uniform = Topology::partition_with_gpus(
+            &[4096, LONG_CTX],
+            &[Gpu::H100, Gpu::H100],
+            1.0,
+        );
+        assert_eq!(
+            uniform.label(),
+            Topology::partition(&[4096, LONG_CTX]).label()
+        );
+        // No-override topologies resolve every pool to the default.
+        assert_eq!(
+            Topology::partition(&[4096, LONG_CTX]).pool_gpus(Gpu::B200),
+            vec![Gpu::B200, Gpu::B200]
+        );
+        assert_eq!(
+            Topology::Homogeneous { ctx: LONG_CTX }.pool_gpus(Gpu::H200),
+            vec![Gpu::H200]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "one GPU per pool")]
+    fn partition_with_gpus_rejects_length_mismatch() {
+        Topology::partition_with_gpus(
+            &[4096, LONG_CTX],
+            &[crate::power::Gpu::H100],
+            1.0,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn partition_with_gpus_rejects_unsorted_cutoffs() {
+        // Sorting here would silently misalign the assignment vector.
+        use crate::power::Gpu;
+        Topology::partition_with_gpus(
+            &[16384, 4096],
+            &[Gpu::H100, Gpu::B200],
+            1.0,
+        );
     }
 
     #[test]

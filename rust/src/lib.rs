@@ -14,10 +14,15 @@
 //!   policies (round-robin / join-shortest-queue / least-KV-load /
 //!   power-aware) and a parallel per-group fast path ([`sim`]) — a
 //!   unified scenario layer feeding both the analytical planner and the
-//!   simulator from one spec, with multi-threaded
+//!   simulator from one spec — three orthogonal fleet axes: routing
+//!   topology (two-pool / FleetOpt-γ / K-pool context partitions), GPU
+//!   generation *per pool* (heterogeneous fleets: an assignment vector
+//!   like H100|H100|B200, resolved identically by both engines), and
+//!   workload — with multi-threaded
 //!   dispatch × topology × context-window sweeps and a two-stage
-//!   (analytical screen → simulated refine) FleetOpt optimizer
-//!   ([`scenario`]) — a typed results subsystem every output surface
+//!   (analytical screen → simulated refine) FleetOpt optimizer that
+//!   also searches assignment vectors (full cross-product or greedy
+//!   budgeted upgrades) ([`scenario`]) — a typed results subsystem every output surface
 //!   emits through, with CSV/JSON alongside the text tables
 //!   ([`results`]) — and per-GPU energy metering driven by the
 //!   calibrated logistic power model ([`power`]).

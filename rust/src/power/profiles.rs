@@ -50,6 +50,18 @@ impl Gpu {
         }
     }
 
+    /// Compact generation name ("H100") for per-pool assignment labels
+    /// like `H100|H100|B200`, where the full SKU name
+    /// ([`GpuSpec::name`], "H100-SXM5") would drown the vector.
+    pub fn short_name(self) -> &'static str {
+        match self {
+            Gpu::H100 => "H100",
+            Gpu::H200 => "H200",
+            Gpu::B200 => "B200",
+            Gpu::GB200 => "GB200",
+        }
+    }
+
     pub fn parse(name: &str) -> Option<Gpu> {
         match name.to_ascii_lowercase().as_str() {
             "h100" | "h100-sxm5" => Some(Gpu::H100),

@@ -103,6 +103,10 @@ pub struct ScenarioSpec {
     pub lbar: LBarPolicy,
     /// Target utilization for the analytical pool sizing.
     pub rho: f64,
+    /// Fraction of `slo.ttft_p99_s` the `power-slo` dispatch guard may
+    /// spend as projected consolidation delay before refusing to pack
+    /// (ignored by every other policy).
+    pub power_guard_frac: f64,
 }
 
 impl ScenarioSpec {
@@ -127,6 +131,7 @@ impl ScenarioSpec {
             ingest_chunk: 1024,
             lbar: LBarPolicy::Window,
             rho: 0.85,
+            power_guard_frac: 0.5,
         }
     }
 
@@ -166,13 +171,76 @@ impl ScenarioSpec {
         self
     }
 
+    pub fn with_power_guard_frac(mut self, frac: f64) -> Self {
+        assert!(
+            frac > 0.0 && frac.is_finite(),
+            "guard fraction must be positive and finite"
+        );
+        self.power_guard_frac = frac;
+        self
+    }
+
+    /// Override the per-pool GPU assignment of a partition topology —
+    /// the heterogeneous-fleet builder: `spec.gpu` stays the default
+    /// every non-overridden pool falls back to.
+    ///
+    /// # Panics
+    /// On a non-partition topology, or an assignment whose length
+    /// differs from the pool count.
+    pub fn with_pool_gpus(mut self, gpus: &[Gpu]) -> Self {
+        match &mut self.topology {
+            Topology::Partition { pools, .. } => {
+                assert_eq!(
+                    pools.len(),
+                    gpus.len(),
+                    "one GPU per pool: {} pools vs {} GPUs",
+                    pools.len(),
+                    gpus.len()
+                );
+                for (p, &g) in pools.iter_mut().zip(gpus) {
+                    p.gpu = Some(g);
+                }
+            }
+            other => panic!(
+                "per-pool GPU assignment needs a Partition topology \
+                 (got {})",
+                other.label()
+            ),
+        }
+        self
+    }
+
+    /// The per-pool GPU generations this scenario serves, rendered the
+    /// way every results surface shows them: the plain SKU name for a
+    /// homogeneous fleet, `H100|H100|B200` when mixed
+    /// ([`Topology::pool_gpus`] resolved against the spec default).
+    pub fn gpus_label(&self) -> String {
+        optimize::assignment_label(&self.topology.pool_gpus(self.gpu))
+    }
+
+    /// The dispatch policy realizing `self.dispatch`, with scenario
+    /// context applied: `power-slo` gets its consolidation-guard bound
+    /// from this spec's own SLO (`power_guard_frac × slo.ttft_p99_s`)
+    /// rather than [`dispatch::parse`]'s crate-default bound.
+    pub fn dispatch_policy(&self) -> Box<dyn dispatch::DispatchPolicy> {
+        if dispatch::is_power_slo(&self.dispatch) {
+            return Box::new(crate::sim::PowerAware::with_slo_guard(
+                self.power_guard_frac * self.slo.ttft_p99_s,
+            ));
+        }
+        dispatch::parse(&self.dispatch).unwrap_or_else(|| {
+            panic!("unknown dispatch policy '{}'", self.dispatch)
+        })
+    }
+
     /// Human-readable cell identity for reports.
     pub fn label(&self) -> String {
         format!(
             "{} | {} | {} | {} | {} | λ={}",
             self.workload.name,
             self.topology.label(),
-            self.gpu.spec().name,
+            // Per-pool assignment when mixed; the plain SKU otherwise.
+            self.gpus_label(),
             self.router_label(),
             self.dispatch,
             self.gen.lambda_rps,
@@ -250,9 +318,7 @@ impl ScenarioSpec {
         let (pool_groups, pool_cfgs) =
             self.topology.sim_pools(&profile, self.groups, self.ingest_chunk);
         let router = self.router();
-        let mut policy = dispatch::parse(&self.dispatch).unwrap_or_else(|| {
-            panic!("unknown dispatch policy '{}'", self.dispatch)
-        });
+        let mut policy = self.dispatch_policy();
         let report = simulate_topology_opts(
             trace,
             router.as_ref(),
@@ -266,6 +332,7 @@ impl ScenarioSpec {
         ScenarioOutcome {
             label: self.label(),
             topology: self.topology.label(),
+            gpus: self.gpus_label(),
             router: self.router_label(),
             dispatch: self.dispatch.clone(),
             // The *accounted* figures: groups the router never touched
@@ -292,6 +359,10 @@ impl ScenarioSpec {
 pub struct ScenarioOutcome {
     pub label: String,
     pub topology: String,
+    /// Per-pool GPU assignment label ([`ScenarioSpec::gpus_label`]):
+    /// the plain SKU name for homogeneous fleets, `H100|H100|B200`
+    /// when generations are mixed.
+    pub gpus: String,
     pub router: String,
     pub dispatch: String,
     /// Fleet output tokens per joule (== per watt-second), with
@@ -464,6 +535,189 @@ mod tests {
         );
         assert!(out.idle_joules > 0.0);
         assert!(out.joules > out.idle_joules, "metered energy present too");
+    }
+
+    #[test]
+    fn pool_gpus_flow_through_both_engines_and_the_labels() {
+        use crate::power::Gpu;
+        let mixed = ScenarioSpec::new(
+            Topology::partition(&[4096, LONG_CTX]),
+            Gpu::H100,
+            azure_conversations(),
+            quick_gen(40.0),
+        )
+        .with_groups(4)
+        .with_pool_gpus(&[Gpu::H100, Gpu::B200]);
+        assert_eq!(mixed.gpus_label(), "H100|B200");
+        assert!(mixed.label().contains("H100|B200"), "{}", mixed.label());
+
+        // Analytical side: the long pool runs the B200 profile.
+        let analytic = mixed.analyze(PowerAccounting::PerGpu);
+        assert!(analytic.pools[0].profile_label.contains("H100"));
+        assert!(analytic.pools[1].profile_label.contains("B200"));
+
+        // Dynamic side: runs end-to-end, conserves tokens, and reports
+        // the assignment on the outcome.
+        let sim = mixed.simulate(true);
+        assert!(sim.completed > 0);
+        assert_eq!(sim.gpus, "H100|B200");
+        let want: u64 =
+            mixed.trace().iter().map(|r| r.output_tokens as u64).sum();
+        assert_eq!(sim.output_tokens, want);
+    }
+
+    #[test]
+    fn homogeneous_pool_gpu_overrides_reduce_bit_identically() {
+        use crate::power::Gpu;
+        // A partition whose pools all override to the fleet default must
+        // be indistinguishable from the same partition with no overrides
+        // — through BOTH engines, to the bit. This is the oracle the
+        // heterogeneity refactor leans on: every optimizer stage-B cell
+        // now goes through the override path.
+        let plain = ScenarioSpec::new(
+            Topology::partition(&[4096, LONG_CTX]),
+            Gpu::H100,
+            azure_conversations(),
+            quick_gen(40.0),
+        )
+        .with_groups(4)
+        .with_dispatch("jsq");
+        let overridden = plain.clone().with_pool_gpus(&[Gpu::H100, Gpu::H100]);
+        assert_eq!(overridden.gpus_label(), "H100-SXM5", "homogeneous label");
+
+        let a = plain.analyze(PowerAccounting::PerGpu);
+        let b = overridden.analyze(PowerAccounting::PerGpu);
+        assert_eq!(a.tok_per_watt.0.to_bits(), b.tok_per_watt.0.to_bits());
+        assert_eq!(a.total_groups, b.total_groups);
+        for (x, y) in a.pools.iter().zip(&b.pools) {
+            assert_eq!(x.power.0.to_bits(), y.power.0.to_bits());
+            assert_eq!(x.demand_tok_s.to_bits(), y.demand_tok_s.to_bits());
+        }
+
+        let s1 = plain.simulate(true);
+        let s2 = overridden.simulate(true);
+        assert_eq!(s1.tok_per_watt.to_bits(), s2.tok_per_watt.to_bits());
+        assert_eq!(s1.joules.to_bits(), s2.joules.to_bits());
+        assert_eq!(s1.output_tokens, s2.output_tokens);
+        assert_eq!(s1.p99_ttft_s.to_bits(), s2.p99_ttft_s.to_bits());
+    }
+
+    #[test]
+    fn mixed_fleet_beats_all_h100_on_both_engines() {
+        use crate::power::Gpu;
+        use crate::workload::cdf::agent_heavy;
+        // Long-prompt-heavy traffic, so the long pool dominates the
+        // fleet's energy: upgrading exactly that pool to B200 is where
+        // the generation lever pays most (the Table 9 placement story).
+        let base = ScenarioSpec::new(
+            Topology::partition(&[4096, LONG_CTX]),
+            Gpu::H100,
+            agent_heavy(),
+            GenConfig {
+                lambda_rps: 80.0,
+                duration_s: 1.5,
+                max_prompt_tokens: 60_000,
+                max_output_tokens: 128,
+                seed: 6,
+            },
+        )
+        .with_groups(4);
+        let mixed = base.clone().with_pool_gpus(&[Gpu::H100, Gpu::B200]);
+        // Analytically a strict win: same token demand, lower power.
+        assert!(
+            mixed.analyze(PowerAccounting::PerGpu).tok_per_watt.0
+                > base.analyze(PowerAccounting::PerGpu).tok_per_watt.0
+        );
+        // And a measured win: B200's 2.3× faster weight stream and
+        // 2.62× KV budget on the energy-dominant pool outweigh its
+        // higher wattage.
+        let (m, b) = (mixed.simulate(true), base.simulate(true));
+        assert_eq!(m.output_tokens, b.output_tokens, "same served tokens");
+        assert!(
+            m.tok_per_watt > b.tok_per_watt,
+            "mixed {} vs all-H100 {}",
+            m.tok_per_watt,
+            b.tok_per_watt
+        );
+    }
+
+    /// A deterministic consolidation-pathology trace: one long-decode
+    /// request keeps group 0 hot for the whole run, then a tight burst
+    /// of near-window prompts arrives. Pure `power` packs every burst
+    /// arrival onto the hot group (it always has queue-empty batch
+    /// headroom), so the packed prompts ride an ever-bigger batch's
+    /// step time; JSQ splits them across both groups.
+    fn consolidation_burst() -> Vec<Request> {
+        let mut reqs = vec![Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 512,
+            output_tokens: 1200,
+        }];
+        for i in 0..20u64 {
+            reqs.push(Request {
+                id: 1 + i,
+                arrival_s: 0.5 + 0.1 * i as f64,
+                prompt_tokens: 61_000,
+                output_tokens: 8,
+            });
+        }
+        reqs
+    }
+
+    fn burst_spec(dispatch: &str) -> ScenarioSpec {
+        ScenarioSpec::new(
+            Topology::Homogeneous { ctx: LONG_CTX },
+            Gpu::H100,
+            azure_conversations(),
+            GenConfig {
+                lambda_rps: 4.0,
+                duration_s: 3.0,
+                max_prompt_tokens: 61_000,
+                max_output_tokens: 1200,
+                seed: 1,
+            },
+        )
+        .with_groups(2)
+        .with_dispatch(dispatch)
+        .with_slo(SloTargets { ttft_p99_s: 0.5 })
+    }
+
+    #[test]
+    fn power_slo_guard_removes_the_consolidation_ttft_regression() {
+        let trace = consolidation_burst();
+        let run = |d: &str| burst_spec(d).simulate_trace(&trace, false);
+        let pure = run("power");
+        let jsq = run("jsq");
+        let guarded = run("power-slo");
+
+        // Pure consolidation piles the burst onto the hot group — the
+        // p99-TTFT regression the ROADMAP flagged.
+        assert!(
+            pure.p99_ttft_s > jsq.p99_ttft_s,
+            "no regression to remove: power p99 {} vs jsq {}",
+            pure.p99_ttft_s,
+            jsq.p99_ttft_s
+        );
+        // The guard projects ≥ 0.5 s of packed-ingest delay per burst
+        // prompt against its 0.25 s bound (0.5 × the 0.5 s SLO), so it
+        // refuses every pack: on this trace the guarded policy IS
+        // join-shortest-queue, to the bit.
+        assert_eq!(guarded.joules.to_bits(), jsq.joules.to_bits());
+        assert_eq!(guarded.p99_ttft_s.to_bits(), jsq.p99_ttft_s.to_bits());
+        assert_eq!(guarded.output_tokens, jsq.output_tokens);
+        // And therefore the regression is gone.
+        assert!(
+            guarded.p99_ttft_s < pure.p99_ttft_s,
+            "guard failed to remove the regression: guarded {} vs pure {}",
+            guarded.p99_ttft_s,
+            pure.p99_ttft_s
+        );
+        // Token conservation across all three policies.
+        let want: u64 = trace.iter().map(|r| r.output_tokens as u64).sum();
+        for o in [&pure, &jsq, &guarded] {
+            assert_eq!(o.output_tokens, want, "{}", o.dispatch);
+        }
     }
 
     #[test]

@@ -111,8 +111,28 @@ pub fn analyze_cell(
 pub struct PartitionOptResult {
     /// Sorted cutoff vector; the last entry is the long pool's window.
     pub cutoffs: Vec<u32>,
+    /// Per-pool GPU assignment; empty = every pool on the caller's
+    /// fleet-default profile (the homogeneous legacy axis).
+    pub gpus: Vec<Gpu>,
     pub gamma: f64,
     pub report: FleetReport,
+}
+
+/// Render a per-pool GPU assignment: the plain SKU name when the fleet
+/// is homogeneous (matching every legacy single-GPU surface), the
+/// compact `H100|H100|B200` vector when generations are mixed.
+pub fn assignment_label(gpus: &[Gpu]) -> String {
+    match gpus {
+        [] => String::new(),
+        [first, rest @ ..] if rest.iter().all(|g| g == first) => {
+            first.spec().name.to_string()
+        }
+        _ => gpus
+            .iter()
+            .map(|g| g.short_name())
+            .collect::<Vec<_>>()
+            .join("|"),
+    }
 }
 
 /// Stage A over an explicit (partition vector × γ) grid with an
@@ -151,6 +171,55 @@ pub fn screen_partitions(
             );
             out.push(PartitionOptResult {
                 cutoffs: cutoffs.clone(),
+                gpus: Vec::new(),
+                gamma,
+                report,
+            });
+        }
+    }
+    out.sort_by(|a, b| {
+        b.report.tok_per_watt.0.total_cmp(&a.report.tok_per_watt.0)
+    });
+    out
+}
+
+/// Stage A over explicit (partition, per-pool GPU assignment) pairs —
+/// the heterogeneous counterpart of [`screen_partitions`]: each cell's
+/// pools carry their own generation's profile through the *same*
+/// [`analyze_cell`] Eq. 4 path (an all-same assignment evaluates
+/// bit-identically to the homogeneous cell, which is what makes the
+/// homogeneous-reduction oracle exact). Best-first; the stable sort
+/// keeps grid order on ties.
+#[allow(clippy::too_many_arguments)]
+pub fn screen_assignments(
+    trace: &WorkloadTrace,
+    lambda_rps: f64,
+    cells: &[(Vec<u32>, Vec<Gpu>)],
+    gammas: &[f64],
+    lbar: LBarPolicy,
+    rho: f64,
+    ttft_slo_s: f64,
+    acct: PowerAccounting,
+) -> Vec<PartitionOptResult> {
+    let mut out = Vec::with_capacity(cells.len() * gammas.len());
+    for (cutoffs, gpus) in cells {
+        for &gamma in gammas {
+            let topo = Topology::partition_with_gpus(cutoffs, gpus, gamma);
+            // Every pool overrides, so the default profile below is
+            // never consulted for a pool plan.
+            let report = analyze_cell(
+                &topo,
+                trace,
+                lambda_rps,
+                Arc::new(ManualProfile::for_gpu(gpus[0])),
+                lbar,
+                rho,
+                ttft_slo_s,
+                acct,
+            );
+            out.push(PartitionOptResult {
+                cutoffs: cutoffs.clone(),
+                gpus: gpus.clone(),
                 gamma,
                 report,
             });
@@ -202,6 +271,42 @@ pub fn screen_closed_form(
     .collect()
 }
 
+/// Constraint for the budgeted-upgrade search ([`GpuAxis::Budget`]):
+/// "I can afford `max_groups` groups of `to` — which pools should get
+/// them?"
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UpgradeBudget {
+    /// Generation the upgraded pools move to (`--upgrade-to`).
+    pub to: Gpu,
+    /// Ceiling on total upgraded groups, counted by the analytical
+    /// plan's per-pool sizing (`--upgrade-budget`).
+    pub max_groups: u32,
+}
+
+/// How stage A explores the GPU-generation axis.
+#[derive(Debug, Clone, Default)]
+pub enum GpuAxis {
+    /// One fleet-wide GPU per cell, swept over `gpus` — the legacy
+    /// axis, and the only one before heterogeneous fleets landed.
+    #[default]
+    Homogeneous,
+    /// The homogeneous cells **plus** every mixed per-pool assignment
+    /// over `gpus`, for partitions of K ≤ 3 pools (the full
+    /// cross-product; |gpus|^K cells per partition beyond that is grid
+    /// explosion, and the budgeted mode covers large K greedily).
+    Mixed,
+    /// The homogeneous cells plus these explicit per-pool vectors, each
+    /// applied to every screened partition with a matching pool count
+    /// (`--gpu h100,h100,b200` on the CLI).
+    Explicit(Vec<Vec<Gpu>>),
+    /// The homogeneous cells plus a greedily grown budgeted-upgrade
+    /// path per (partition, γ): starting from an all-`gpus[0]` fleet,
+    /// repeatedly upgrade the pool with the best marginal Eq. 4 tok/W
+    /// per upgraded group while the budget holds, screening every step
+    /// of the path (`--upgrade-budget N --upgrade-to b200`).
+    Budget(UpgradeBudget),
+}
+
 /// Grid axes and per-cell settings for the two-stage search.
 #[derive(Debug, Clone)]
 pub struct OptimizeConfig {
@@ -218,6 +323,10 @@ pub struct OptimizeConfig {
     /// ([`Self::effective_partitions`]); [`kpool_partitions`] generates
     /// full grids for K ∈ {2, 3, 4}, `--pools K` on the CLI.
     pub partitions: Vec<Vec<u32>>,
+    /// How the GPU-generation axis is explored: homogeneous fleets
+    /// only (legacy), the full mixed cross-product, explicit per-pool
+    /// assignment vectors, or the greedy budgeted-upgrade search.
+    pub gpu_axis: GpuAxis,
     /// FleetOpt compression-factor axis (applies to the last pool).
     pub gammas: Vec<f64>,
     /// Dispatch axis — resolved by measurement in stage B only (the
@@ -241,6 +350,7 @@ impl Default for OptimizeConfig {
             gpus: Gpu::ALL.to_vec(),
             b_shorts: B_SHORT_GRID.to_vec(),
             partitions: Vec::new(),
+            gpu_axis: GpuAxis::Homogeneous,
             gammas: GAMMA_GRID.to_vec(),
             dispatches: dispatch::ALL.iter().map(|s| s.to_string()).collect(),
             gen: GenConfig {
@@ -284,13 +394,18 @@ impl OptimizeConfig {
 }
 
 /// One stage-A cell: analytical Eq. (4) report at
-/// (GPU, partition vector, γ).
+/// (GPU assignment, partition vector, γ).
 #[derive(Debug, Clone)]
 pub struct ScreenedCell {
+    /// The fleet-default generation (the scenario's `gpu`; for a mixed
+    /// cell, the base the assignment was grown from).
     pub gpu: Gpu,
     /// Sorted cutoff vector of the cell's K-pool partition; for the
     /// legacy two-pool grid this is `[B_short, LONG_CTX]`.
     pub cutoffs: Vec<u32>,
+    /// Per-pool GPU assignment, one generation per cutoff (all equal to
+    /// `gpu` for homogeneous cells).
+    pub gpus: Vec<Gpu>,
     pub gamma: f64,
     pub analytic: FleetReport,
 }
@@ -300,15 +415,23 @@ impl ScreenedCell {
     pub fn b_short(&self) -> u32 {
         self.cutoffs[0]
     }
+
+    /// True when the cell serves more than one GPU generation.
+    pub fn is_mixed(&self) -> bool {
+        self.gpus.windows(2).any(|w| w[0] != w[1])
+    }
 }
 
 /// One stage-B cell: the screened point expanded with a dispatch policy
 /// and replayed through the event-driven simulator.
 #[derive(Debug, Clone)]
 pub struct RefinedCell {
+    /// The fleet-default generation (see [`ScreenedCell::gpu`]).
     pub gpu: Gpu,
     /// Sorted cutoff vector of the cell's K-pool partition.
     pub cutoffs: Vec<u32>,
+    /// Per-pool GPU assignment, one generation per cutoff.
+    pub gpus: Vec<Gpu>,
     pub gamma: f64,
     pub dispatch: String,
     /// Stage-A analytical tok/W (Eq. 4).
@@ -342,8 +465,144 @@ pub fn cutoffs_label(cutoffs: &[u32]) -> String {
         .join("|")
 }
 
-/// Stage A: screen the full GPU × partition × γ grid analytically,
-/// best-first (ties keep grid order).
+/// Every mixed per-pool assignment over `gpus` for partitions of K ≤ 3
+/// pools, in deterministic lexicographic order (homogeneous vectors are
+/// skipped — the legacy per-fleet axis already screens them).
+fn mixed_assignments(
+    partitions: &[Vec<u32>],
+    gpus: &[Gpu],
+) -> Vec<(Vec<u32>, Vec<Gpu>)> {
+    let n = gpus.len();
+    let mut out = Vec::new();
+    if n < 2 {
+        return out;
+    }
+    for cuts in partitions {
+        let k = cuts.len() as u32;
+        if k > 3 {
+            continue;
+        }
+        for code in 0..n.pow(k) {
+            let mut v = Vec::with_capacity(k as usize);
+            let mut c = code;
+            for _ in 0..k {
+                v.push(gpus[c % n]);
+                c /= n;
+            }
+            v.reverse();
+            if v.windows(2).all(|w| w[0] == w[1]) {
+                continue;
+            }
+            out.push((cuts.clone(), v));
+        }
+    }
+    out
+}
+
+/// Each explicit assignment vector paired with every partition whose
+/// pool count matches its length.
+fn explicit_assignments(
+    partitions: &[Vec<u32>],
+    vectors: &[Vec<Gpu>],
+) -> Vec<(Vec<u32>, Vec<Gpu>)> {
+    let mut out = Vec::new();
+    for cuts in partitions {
+        for v in vectors {
+            if v.len() == cuts.len() {
+                out.push((cuts.clone(), v.clone()));
+            }
+        }
+    }
+    out
+}
+
+/// The greedy budgeted-upgrade path for one config: per (partition, γ),
+/// start from the all-`base` fleet (already screened by the homogeneous
+/// axis) and repeatedly upgrade the pool with the best marginal Eq. 4
+/// tok/W per upgraded group, while total upgraded groups — by the
+/// analytical plan's sizing — stay within the budget. Every step of the
+/// path becomes a screened cell, so the report shows the whole
+/// placement curve, not just its endpoint.
+fn budget_cells(
+    workload: &WorkloadTrace,
+    cfg: &OptimizeConfig,
+    partitions: &[Vec<u32>],
+    budget: UpgradeBudget,
+) -> Vec<ScreenedCell> {
+    let base = cfg.gpus.first().copied().unwrap_or(Gpu::H100);
+    let eval = |cuts: &[u32], gpus: &[Gpu], gamma: f64| {
+        analyze_cell(
+            &Topology::partition_with_gpus(cuts, gpus, gamma),
+            workload,
+            cfg.gen.lambda_rps,
+            Arc::new(ManualProfile::for_gpu(base)),
+            cfg.lbar,
+            cfg.rho,
+            cfg.slo.ttft_p99_s,
+            cfg.acct,
+        )
+    };
+    let mut cells = Vec::new();
+    for cuts in partitions {
+        for &gamma in &cfg.gammas {
+            let k = cuts.len();
+            let mut current = vec![base; k];
+            let mut cur_tok_w =
+                eval(cuts, &current, gamma).tok_per_watt.0;
+            loop {
+                // (pool, report, marginal tok/W per upgraded group)
+                let mut best: Option<(usize, FleetReport, f64)> = None;
+                for i in 0..k {
+                    if current[i] == budget.to {
+                        continue;
+                    }
+                    let mut cand = current.clone();
+                    cand[i] = budget.to;
+                    let rep = eval(cuts, &cand, gamma);
+                    let upgraded: u64 = rep
+                        .pools
+                        .iter()
+                        .zip(&cand)
+                        .filter(|(_, g)| **g == budget.to)
+                        .map(|(p, _)| p.sizing.groups)
+                        .sum();
+                    if upgraded > budget.max_groups as u64 {
+                        continue;
+                    }
+                    let gain = rep.tok_per_watt.0 - cur_tok_w;
+                    if gain <= 0.0 {
+                        continue;
+                    }
+                    let marginal =
+                        gain / rep.pools[i].sizing.groups.max(1) as f64;
+                    let better = match &best {
+                        None => true,
+                        Some((_, _, m)) => marginal > *m,
+                    };
+                    if better {
+                        best = Some((i, rep, marginal));
+                    }
+                }
+                let Some((i, rep, _)) = best else { break };
+                current[i] = budget.to;
+                cur_tok_w = rep.tok_per_watt.0;
+                cells.push(ScreenedCell {
+                    gpu: base,
+                    cutoffs: cuts.clone(),
+                    gpus: current.clone(),
+                    gamma,
+                    analytic: rep,
+                });
+            }
+        }
+    }
+    cells
+}
+
+/// Stage A: screen the full GPU-assignment × partition × γ grid
+/// analytically, best-first (ties keep grid order). The homogeneous
+/// per-fleet axis is always screened; [`GpuAxis`] adds mixed, explicit
+/// or budgeted-upgrade assignment cells on top.
 pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCell> {
     let partitions = cfg.effective_partitions();
     let mut cells =
@@ -363,11 +622,42 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
         ) {
             cells.push(ScreenedCell {
                 gpu,
+                gpus: vec![gpu; r.cutoffs.len()],
                 cutoffs: r.cutoffs,
                 gamma: r.gamma,
                 analytic: r.report,
             });
         }
+    }
+    let hetero = match &cfg.gpu_axis {
+        GpuAxis::Homogeneous | GpuAxis::Budget(_) => Vec::new(),
+        GpuAxis::Mixed => mixed_assignments(&partitions, &cfg.gpus),
+        GpuAxis::Explicit(vectors) => {
+            explicit_assignments(&partitions, vectors)
+        }
+    };
+    if !hetero.is_empty() {
+        for r in screen_assignments(
+            workload,
+            cfg.gen.lambda_rps,
+            &hetero,
+            &cfg.gammas,
+            cfg.lbar,
+            cfg.rho,
+            cfg.slo.ttft_p99_s,
+            cfg.acct,
+        ) {
+            cells.push(ScreenedCell {
+                gpu: r.gpus[0],
+                cutoffs: r.cutoffs,
+                gpus: r.gpus,
+                gamma: r.gamma,
+                analytic: r.report,
+            });
+        }
+    }
+    if let GpuAxis::Budget(b) = &cfg.gpu_axis {
+        cells.extend(budget_cells(workload, cfg, &partitions, *b));
     }
     cells.sort_by(|a, b| {
         b.analytic.tok_per_watt.0.total_cmp(&a.analytic.tok_per_watt.0)
@@ -378,6 +668,10 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
 /// The [`ScenarioSpec`] realizing one screened cell at serving time.
 /// For a two-entry cutoff vector this builds the same routed fleet as
 /// the PR 3 `Topology::FleetOpt` spec, bit-for-bit (the K=2 reduction).
+/// Every cell — mixed or homogeneous — goes through the per-pool
+/// override path, so a pool overridden to the fleet default is
+/// bit-identical to no override at all (the homogeneous-reduction
+/// oracle in `tests/optimize_oracle.rs` pins this).
 fn spec_for(
     workload: &WorkloadTrace,
     cfg: &OptimizeConfig,
@@ -385,7 +679,7 @@ fn spec_for(
     dispatch: &str,
 ) -> ScenarioSpec {
     ScenarioSpec::new(
-        Topology::partition_with_gamma(&cell.cutoffs, cell.gamma),
+        Topology::partition_with_gpus(&cell.cutoffs, &cell.gpus, cell.gamma),
         cell.gpu,
         workload.clone(),
         cfg.gen.clone(),
@@ -421,6 +715,7 @@ pub fn refine(
         .map(|((cell, dispatch), outcome)| RefinedCell {
             gpu: cell.gpu,
             cutoffs: cell.cutoffs.clone(),
+            gpus: cell.gpus.clone(),
             gamma: cell.gamma,
             dispatch,
             analytic_tok_w: cell.analytic.tok_per_watt.0,
@@ -489,7 +784,7 @@ impl OptimizeReport {
         for (i, c) in self.refined.iter().enumerate() {
             let delta = c.rel_delta_pct();
             rs.push(vec![
-                Cell::str(c.gpu.spec().name),
+                Cell::str(assignment_label(&c.gpus)),
                 Cell::int(c.cutoffs.len() as i64),
                 Cell::str(cutoffs_label(&c.cutoffs)),
                 Cell::float(c.gamma),
@@ -518,7 +813,7 @@ impl OptimizeReport {
             Some(w) => rs.note(format!(
                 "winner (best measured tok/W within SLO): {} cutoffs={} γ={} \
                  dispatch={} at {:.3} tok/W (analytical said {:.3})",
-                w.gpu.spec().name,
+                assignment_label(&w.gpus),
                 cutoffs_label(&w.cutoffs),
                 w.gamma,
                 w.dispatch,

@@ -47,6 +47,11 @@ pub struct SweepConfig {
     /// `--pools K` on the CLI fills it with the default ladder for each
     /// K' in 2..=K.
     pub partitions: Vec<Vec<u32>>,
+    /// Per-pool GPU assignment axis: each vector adds one heterogeneous
+    /// cell per `partitions` entry with a matching pool count (the
+    /// homogeneous `gpu` cell stays in the grid as the baseline).
+    /// `--gpu a,b,c` on the CLI. Empty by default.
+    pub gpu_assignments: Vec<Vec<Gpu>>,
     /// Also sweep the load-aware adaptive router (at this spill factor)
     /// over each pool-routing topology.
     pub spill: Option<f64>,
@@ -70,6 +75,7 @@ impl Default for SweepConfig {
             dispatches: dispatch::ALL.iter().map(|s| s.to_string()).collect(),
             b_shorts: vec![2048, 4096, 8192],
             partitions: Vec::new(),
+            gpu_assignments: Vec::new(),
             spill: Some(2.0),
             slo: SloTargets::default(),
             acct: PowerAccounting::PerGpu,
@@ -102,9 +108,19 @@ pub fn grid(workload: &WorkloadTrace, cfg: &SweepConfig) -> Vec<ScenarioSpec> {
     }
     // K as a grid dimension: one K-pool partition cell per cutoff
     // vector (plain bucket routing, γ=1 — compression cells live on the
-    // FleetOpt axis above).
+    // FleetOpt axis above), plus one heterogeneous cell per matching
+    // per-pool GPU assignment — generation-per-pool as a third grid
+    // axis next to topology and workload.
     for cuts in &cfg.partitions {
         topos.push((Topology::partition(cuts), RouterSpec::Static));
+        for gpus in &cfg.gpu_assignments {
+            if gpus.len() == cuts.len() {
+                topos.push((
+                    Topology::partition_with_gpus(cuts, gpus, 1.0),
+                    RouterSpec::Static,
+                ));
+            }
+        }
     }
 
     let mut specs = Vec::with_capacity(topos.len() * cfg.dispatches.len());
@@ -236,6 +252,7 @@ pub fn rowset(records: &[CellRecord], cfg: &SweepConfig) -> RowSet {
         ),
         vec![
             Column::str("Topology"),
+            Column::str("GPUs"),
             Column::str("Router"),
             Column::str("Dispatch"),
             Column::float("analyze tok/W").with_unit("tok/J"),
@@ -252,6 +269,7 @@ pub fn rowset(records: &[CellRecord], cfg: &SweepConfig) -> RowSet {
         let delta = r.rel_delta_pct();
         rs.push(vec![
             Cell::str(o.topology.clone()),
+            Cell::str(o.gpus.clone()),
             Cell::str(o.router.clone()),
             Cell::str(o.dispatch.clone()),
             Cell::float(r.analytic_tok_w)
@@ -359,6 +377,40 @@ mod tests {
     }
 
     #[test]
+    fn gpu_assignment_axis_adds_hetero_cells_next_to_the_baseline() {
+        use crate::power::Gpu;
+        let cuts = vec![4096, crate::fleet::topology::LONG_CTX];
+        let cfg = SweepConfig {
+            partitions: vec![cuts],
+            gpu_assignments: vec![
+                vec![Gpu::H100, Gpu::B200],
+                // Length-mismatched vectors are skipped, not misapplied.
+                vec![Gpu::H100, Gpu::H100, Gpu::B200],
+            ],
+            groups: 4,
+            ..tiny_cfg()
+        };
+        let specs = grid(&azure_conversations(), &cfg);
+        // (homo + pool + fleetopt + adaptive-pool + K=2 partition +
+        //  1 matching assignment cell) × 2 dispatch policies.
+        assert_eq!(specs.len(), 12);
+        let hetero: Vec<&ScenarioSpec> = specs
+            .iter()
+            .filter(|s| s.gpus_label() == "H100|B200")
+            .collect();
+        assert_eq!(hetero.len(), 2, "one per dispatch policy");
+        // The cells run, and their records carry the assignment.
+        let out = run(&specs, 4);
+        let recs = records(&specs, &out, cfg.acct);
+        let rs = rowset(&recs, &cfg);
+        assert!(rs.to_csv().contains("H100|B200"), "{}", rs.to_csv());
+        for r in recs.iter().filter(|r| r.outcome.gpus == "H100|B200") {
+            assert!(r.outcome.completed > 0);
+            assert!(r.analytic_tok_w > 0.0);
+        }
+    }
+
+    #[test]
     fn parallel_sweep_matches_sequential_cell_order_and_bits() {
         let specs = grid(&azure_conversations(), &tiny_cfg());
         let seq = run(&specs, 1);
@@ -402,7 +454,7 @@ mod tests {
         let rs = rowset(&recs, &cfg);
         let csv = rs.to_csv();
         assert!(csv.starts_with(
-            "Topology,Router,Dispatch,analyze tok/W (tok/J),\
+            "Topology,GPUs,Router,Dispatch,analyze tok/W (tok/J),\
              simulate tok/W (tok/J),delta (%),p99 TTFT (s),SLO,\
              completed,rejected\n"
         ));

@@ -15,7 +15,9 @@
 //! arrival and is never jockeyed to another group afterwards (matching
 //! how production routers pin a request to an engine replica).
 
-use super::events::FleetState;
+use super::events::{FleetState, GroupLoad};
+use super::fleetsim::{GroupSimConfig, KV_BLOCK_TOKENS};
+use crate::roofline::Roofline;
 use crate::serve::request::ServeRequest;
 
 /// The dispatch protocol. Implementations are stateful (`&mut self`):
@@ -49,6 +51,12 @@ pub trait DispatchPolicy {
         req: &ServeRequest,
         state: &FleetState,
     ) -> usize;
+
+    /// Called once by the engine before a run with the per-pool
+    /// simulation configs, letting delay-projecting policies (the SLO
+    /// guard on power-aware consolidation) learn each pool's roofline
+    /// and prefill chunking. Most policies ignore it. Default: no-op.
+    fn configure_pools(&mut self, _cfgs: &[GroupSimConfig]) {}
 }
 
 /// Round-robin at arrival — the legacy simulator's hard-coded policy and
@@ -150,19 +158,89 @@ impl DispatchPolicy for LeastKvLoad {
 /// the marginal energy of one more sequence on an already-hot group is
 /// small, while landing work on a cold group pays the idle→active power
 /// jump for little throughput (the paper's §5.1 long-pool observation).
+///
+/// **SLO guard** ([`Self::with_slo_guard`], `power-slo` on the CLI):
+/// pure consolidation keeps growing the packed group's batch, and with
+/// it the step time `τ(n, L̄)` every co-batched request — including an
+/// arrival still ingesting its prompt — must sit through. That is the
+/// p99-TTFT regression consolidation trades for energy. The guard
+/// projects the delay-to-first-decode an arrival would face on each
+/// hot candidate (prompt-ingest steps × τ at the grown batch, L̄ read
+/// from the group's held KV blocks) and refuses to pack once the
+/// projection exceeds the configured bound — typically a fraction of
+/// the serving TTFT SLO — falling back to join-shortest-queue.
+/// Unguarded [`PowerAware::new`] is bit-for-bit the legacy policy.
 #[derive(Debug, Clone, Default)]
-pub struct PowerAware;
+pub struct PowerAware {
+    /// Max projected queue delay, seconds, a packed arrival may face;
+    /// `None` = unguarded legacy consolidation.
+    max_delay_s: Option<f64>,
+    /// Per-pool (roofline, ingest chunk), learned from the engine via
+    /// [`DispatchPolicy::configure_pools`].
+    pools: Vec<(Roofline, u32)>,
+}
+
+impl PowerAware {
+    /// Unguarded consolidation (the legacy policy).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Consolidation with the TTFT guard: never pack a group whose
+    /// projected queue delay for this arrival exceeds `max_delay_s`
+    /// (callers typically pass `fraction × slo_ttft`; the scenario
+    /// layer wires `power-slo` to its own SLO).
+    pub fn with_slo_guard(max_delay_s: f64) -> Self {
+        assert!(
+            max_delay_s.is_finite() && max_delay_s >= 0.0,
+            "guard bound must be a finite non-negative delay, got \
+             {max_delay_s}"
+        );
+        PowerAware { max_delay_s: Some(max_delay_s), pools: Vec::new() }
+    }
+
+    /// Projected delay until this arrival's first decode if it joins
+    /// `gl`: every prompt-ingest chunk rides one engine step of the
+    /// grown batch, each `τ(active + 1, L̄)` long, with L̄ estimated
+    /// from the KV blocks the group's admitted sequences hold.
+    fn projected_delay_s(
+        &self,
+        pool: usize,
+        gl: &GroupLoad,
+        req: &ServeRequest,
+    ) -> f64 {
+        let (roofline, chunk) = self.pools[pool];
+        let l_bar = if gl.active > 0 {
+            (gl.used_blocks as f64 * KV_BLOCK_TOKENS as f64
+                / gl.active as f64)
+                .max(1.0)
+        } else {
+            req.prompt_tokens as f64
+        };
+        let steps = req.prompt_tokens.div_ceil(chunk.max(1)).max(1) as f64;
+        steps * roofline.tau_ms(gl.active as f64 + 1.0, l_bar) / 1e3
+    }
+}
 
 impl DispatchPolicy for PowerAware {
     fn name(&self) -> &'static str {
-        "power-aware"
+        if self.max_delay_s.is_some() {
+            "power-aware(slo-guard)"
+        } else {
+            "power-aware"
+        }
+    }
+
+    fn configure_pools(&mut self, cfgs: &[GroupSimConfig]) {
+        self.pools =
+            cfgs.iter().map(|c| (c.roofline, c.ingest_chunk)).collect();
     }
 
     fn pick_group(
         &mut self,
         pool: usize,
         groups: u32,
-        _req: &ServeRequest,
+        req: &ServeRequest,
         state: &FleetState,
     ) -> usize {
         let p = &state.pools[pool];
@@ -172,6 +250,20 @@ impl DispatchPolicy for PowerAware {
         for g in 0..groups as usize {
             let gl = &p.groups[g];
             if gl.queued == 0 && (gl.active as u32) < p.n_max && gl.active > 0 {
+                if let Some(bound) = self.max_delay_s {
+                    assert!(
+                        !self.pools.is_empty(),
+                        "SLO-guarded power dispatch needs configure_pools() \
+                         before its first decision (the engine does this; \
+                         direct pick_group callers must too)"
+                    );
+                    // Packing this group would already breach the TTFT
+                    // guard — skip it, even though it is the most
+                    // energy-efficient landing spot.
+                    if self.projected_delay_s(pool, gl, req) > bound {
+                        continue;
+                    }
+                }
                 // First-seen wins ties, i.e. lowest index.
                 let better = match best {
                     None => true,
@@ -185,8 +277,9 @@ impl DispatchPolicy for PowerAware {
         if let Some((_, g)) = best {
             return g;
         }
-        // Everyone is cold or saturated: fall back to shortest queue so
-        // saturation never turns into unbounded skew.
+        // Everyone is cold, saturated or guard-rejected: fall back to
+        // shortest queue so neither saturation nor the TTFT guard turns
+        // into unbounded skew.
         argmin_by_key(groups, |g| p.groups[g].in_flight())
     }
 }
@@ -205,18 +298,33 @@ fn argmin_by_key<K: Ord>(groups: u32, key: impl Fn(usize) -> K) -> usize {
 }
 
 /// Parse a `--dispatch` CLI name.
+///
+/// `power-slo` here carries the crate-default guard bound (half the
+/// default 0.5 s TTFT SLO); the scenario layer rebuilds it from each
+/// spec's *own* SLO
+/// ([`ScenarioSpec::dispatch_policy`](crate::scenario::ScenarioSpec::dispatch_policy)).
 pub fn parse(name: &str) -> Option<Box<dyn DispatchPolicy>> {
     match name {
         "rr" | "round-robin" => Some(Box::new(RoundRobin::new())),
         "jsq" | "join-shortest-queue" => Some(Box::new(JoinShortestQueue)),
         "least-kv" | "least-kv-load" => Some(Box::new(LeastKvLoad)),
-        "power" | "power-aware" => Some(Box::new(PowerAware)),
+        "power" | "power-aware" => Some(Box::new(PowerAware::new())),
+        n if is_power_slo(n) => {
+            Some(Box::new(PowerAware::with_slo_guard(0.25)))
+        }
         _ => None,
     }
 }
 
+/// Whether `name` names the SLO-guarded power policy. The one alias
+/// set shared with the scenario layer, which rebuilds the guard from
+/// its spec's own SLO instead of [`parse`]'s crate-default bound.
+pub fn is_power_slo(name: &str) -> bool {
+    matches!(name, "power-slo" | "power-aware-slo")
+}
+
 /// All policy names, for sweeps and tables.
-pub const ALL: [&str; 4] = ["rr", "jsq", "least-kv", "power"];
+pub const ALL: [&str; 5] = ["rr", "jsq", "least-kv", "power", "power-slo"];
 
 #[cfg(test)]
 mod tests {
@@ -283,11 +391,51 @@ mod tests {
     fn power_aware_consolidates_then_balances() {
         // Group 1 is hot with headroom -> consolidate onto it.
         let s = state(&[(0, 1, 100), (0, 9, 100), (0, 0, 100)]);
-        let mut pa = PowerAware;
+        let mut pa = PowerAware::new();
         assert_eq!(pa.pick_group(0, 3, &req(), &s), 1);
         // All saturated (n_max = 16) or queued -> shortest queue wins.
         let s2 = state(&[(5, 16, 0), (2, 16, 0), (9, 16, 0)]);
         assert_eq!(pa.pick_group(0, 3, &req(), &s2), 1);
+    }
+
+    fn h100_cfg(window: u32) -> GroupSimConfig {
+        GroupSimConfig {
+            window_tokens: window,
+            n_max: 16,
+            roofline: Roofline::manual(6.72, 0.1387),
+            power: crate::power::LogisticPower::h100(),
+            gpus_charged: 1.0,
+            ingest_chunk: 1024,
+        }
+    }
+
+    #[test]
+    fn slo_guard_refuses_hot_pack_and_falls_back_to_jsq() {
+        // Same fleet as the consolidation test: group 1 is the pure
+        // policy's pick. The guarded policy projects the delay of
+        // riding group 1's grown batch and, under a zero bound, must
+        // refuse every pack and land on the JSQ choice instead.
+        let s = state(&[(0, 1, 100), (0, 9, 100), (0, 0, 100)]);
+        let mut strict = PowerAware::with_slo_guard(0.0);
+        strict.configure_pools(&[h100_cfg(8192)]);
+        assert_eq!(
+            strict.pick_group(0, 3, &req(), &s),
+            2,
+            "zero bound: every projection is positive, fall back to JSQ"
+        );
+        // A generous bound admits the consolidation pick unchanged.
+        let mut loose = PowerAware::with_slo_guard(1e3);
+        loose.configure_pools(&[h100_cfg(8192)]);
+        assert_eq!(loose.pick_group(0, 3, &req(), &s), 1);
+        // The names distinguish the two on every report surface.
+        assert_ne!(strict.name(), PowerAware::new().name());
+    }
+
+    #[test]
+    #[should_panic(expected = "configure_pools")]
+    fn unconfigured_guard_panics_instead_of_guessing() {
+        let s = state(&[(0, 9, 100), (0, 0, 100)]);
+        PowerAware::with_slo_guard(0.1).pick_group(0, 2, &req(), &s);
     }
 
     #[test]

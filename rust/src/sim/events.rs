@@ -312,7 +312,10 @@ impl GroupSim {
         GroupSim {
             batcher: Batcher::new(
                 cfg.n_max as usize,
-                BlockAllocator::new(64, cfg.blocks_total()),
+                BlockAllocator::new(
+                    super::fleetsim::KV_BLOCK_TOKENS,
+                    cfg.blocks_total(),
+                ),
                 cfg.ingest_chunk,
                 cfg.window_tokens,
             ),
@@ -462,6 +465,10 @@ pub(crate) fn run_fleet(
 ) -> Vec<Vec<GroupOutcome>> {
     validate_fleet_inputs(trace, router, pool_groups, pool_cfgs);
     assert_validate_applicable(router, &*dispatch, opts);
+    // Hand delay-projecting policies (the power-slo TTFT guard) the
+    // per-pool rooflines before the first decision; a no-op for the
+    // classic policies.
+    dispatch.configure_pools(pool_cfgs);
     debug_assert!(
         trace.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
         "run_fleet requires an arrival-sorted trace"
@@ -661,6 +668,7 @@ pub(crate) fn run_fleet_auto(
     // Same input contract as the sequential engine — a malformed
     // topology must fail identically on both paths.
     validate_fleet_inputs(trace, router, pool_groups, pool_cfgs);
+    dispatch.configure_pools(pool_cfgs);
 
     // Pre-assign: for arrival-static dispatch the (pool, group) of every
     // request is a pure function of the arrival sequence — an empty

@@ -26,6 +26,13 @@ use crate::serve::metrics::ServeMetrics;
 use crate::serve::request::ServeRequest;
 use crate::workload::Request;
 
+/// Paged-KV block granularity, tokens per block — the one constant
+/// shared by the engine's allocators ([`super::events`]), the Eq. 3
+/// block budget ([`GroupSimConfig::blocks_total`]), and the `power-slo`
+/// guard's L̄-from-held-blocks estimate
+/// ([`super::dispatch::PowerAware`]).
+pub const KV_BLOCK_TOKENS: u32 = 64;
+
 /// Configuration of one pool's groups.
 #[derive(Debug, Clone)]
 pub struct GroupSimConfig {
@@ -50,7 +57,9 @@ impl GroupSimConfig {
     /// [`FleetState::initial`](super::events::FleetState::initial) so the
     /// all-idle state matches a fresh snapshot exactly.
     pub fn blocks_total(&self) -> u32 {
-        (self.n_max as u64 * self.window_tokens as u64 / 64).max(1) as u32
+        (self.n_max as u64 * self.window_tokens as u64
+            / KV_BLOCK_TOKENS as u64)
+            .max(1) as u32
     }
 }
 
@@ -630,6 +639,26 @@ mod tests {
             idle_w * gap
         );
         assert!(r.tok_per_watt_accounted() < r.tok_per_watt);
+    }
+
+    #[test]
+    fn engine_configures_the_slo_guard_automatically() {
+        // `power-slo` through the public entry point: the engine hands
+        // the policy the per-pool rooflines before the first arrival
+        // (an unconfigured guard would panic on its first decision),
+        // and the guarded run still conserves tokens.
+        let trace = azure_trace(40.0, 2.0, 4000);
+        let mut policy = dispatch::parse("power-slo").unwrap();
+        let r = simulate_topology_with(
+            &trace,
+            &ContextRouter::two_pool(4096),
+            &[2, 2],
+            &[h100_cfg(4096 + 1024), h100_cfg(65_536)],
+            policy.as_mut(),
+            true,
+        );
+        let want: u64 = trace.iter().map(|r| r.output_tokens as u64).sum();
+        assert_eq!(r.output_tokens, want);
     }
 
     #[test]

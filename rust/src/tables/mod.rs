@@ -14,13 +14,14 @@ pub mod t5;
 pub mod t6;
 pub mod t7;
 pub mod t8;
+pub mod t9;
 
 use crate::fleet::pool::LBarPolicy;
 use crate::results::RowSet;
 
 /// Every artifact's CLI flag, in `tables --all` emission order.
-pub const ALL_FLAGS: [&str; 12] = [
-    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "law", "power-fig",
+pub const ALL_FLAGS: [&str; 13] = [
+    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "law", "power-fig",
     "dispatch-fig", "independence",
 ];
 
@@ -38,6 +39,7 @@ pub fn rowsets_for(flag: &str, lbar: LBarPolicy) -> Option<Vec<RowSet>> {
         "t6" => vec![t6::rowset()],
         "t7" => t7::rowsets(),
         "t8" => vec![t8::rowset()],
+        "t9" => vec![t9::rowset()],
         "law" => law_fig::rowsets(),
         "power-fig" => vec![power_fig::rowset()],
         "dispatch-fig" => vec![dispatch_fig::rowset()],
@@ -57,6 +59,7 @@ pub fn generate_all(lbar: LBarPolicy) -> String {
     s.push_str(&t6::generate());
     s.push_str(&t7::generate());
     s.push_str(&t8::generate());
+    s.push_str(&t9::generate());
     s.push_str(&law_fig::generate());
     s.push_str(&power_fig::generate());
     s.push_str(&dispatch_fig::generate());
@@ -73,8 +76,8 @@ mod tests {
         let s = generate_all(LBarPolicy::Window);
         for needle in [
             "Table 1", "Table 2", "Table 3", "Table 4", "Table 5",
-            "Table 6", "Table 7", "Table 8", "1/W law", "Figure (power)",
-            "Figure (dispatch)", "independence",
+            "Table 6", "Table 7", "Table 8", "Table 9", "1/W law",
+            "Figure (power)", "Figure (dispatch)", "independence",
         ] {
             assert!(s.contains(needle), "missing {needle}");
         }
@@ -83,10 +86,10 @@ mod tests {
     #[test]
     fn every_flag_resolves_to_rowsets() {
         // The fast artifacts: every flag except the simulation-backed
-        // dispatch figure and K-pool table (covered by their own module
-        // tests).
+        // dispatch figure and the K-pool/heterogeneity tables (covered
+        // by their own module tests).
         for flag in ALL_FLAGS {
-            if flag == "dispatch-fig" || flag == "t8" {
+            if flag == "dispatch-fig" || flag == "t8" || flag == "t9" {
                 continue;
             }
             let sets = rowsets_for(flag, LBarPolicy::Window)

@@ -1,0 +1,209 @@
+//! Table 9 — heterogeneous fleets: where does a newer GPU generation
+//! buy the most?
+//!
+//! The paper's independence result (§4.2) says the routing lever and
+//! the generation lever multiply when the *whole* fleet upgrades. A
+//! heterogeneity-native stack can ask the finer question operators
+//! actually face: with a K-pool context partition and a limited number
+//! of B200 groups, which pool should get them? This table walks
+//! K ∈ {2, 3} on the default powers-of-four ladder over the agent-heavy
+//! workload and reports, per K, the homogeneous-H100 floor, the best
+//! mixed H100/B200 assignment (chosen by the closed-form Eq. 4 screen
+//! over the full {H100, B200}^K cross-product), and the homogeneous-B200
+//! ceiling — analytical and simulated tok/W side by side with p99 TTFT,
+//! plus the marginal tok/W per upgraded group that turns the
+//! independence claim into a placement curve.
+
+use crate::fleet::profile::PowerAccounting;
+use crate::fleet::topology::{default_partition, Topology};
+use crate::power::Gpu;
+use crate::results::{Cell, Column, RowSet};
+use crate::scenario::optimize::assignment_label;
+use crate::scenario::{rel_delta_pct, ScenarioSpec};
+use crate::workload::cdf::agent_heavy;
+use crate::workload::synth::GenConfig;
+
+/// One shared traffic model for every cell (deterministic seed; the
+/// long-prompt-heavy archetype, where generation placement matters
+/// most).
+fn t9_gen() -> GenConfig {
+    GenConfig {
+        lambda_rps: 120.0,
+        duration_s: 1.5,
+        max_prompt_tokens: 60_000,
+        max_output_tokens: 256,
+        seed: 42,
+    }
+}
+
+/// The scenario cell behind one row: the default K-pool ladder with an
+/// explicit per-pool GPU assignment.
+pub fn spec_for(k: u32, gpus: &[Gpu]) -> ScenarioSpec {
+    let cuts = default_partition(k);
+    assert_eq!(cuts.len(), gpus.len());
+    ScenarioSpec::new(
+        Topology::partition_with_gpus(&cuts, gpus, 1.0),
+        gpus[0],
+        agent_heavy(),
+        t9_gen(),
+    )
+    .with_groups(8)
+}
+
+/// Every {H100, B200}^K assignment vector, homogeneous endpoints
+/// included, in deterministic binary-counter order.
+fn assignments(k: u32) -> Vec<Vec<Gpu>> {
+    (0..1u32 << k)
+        .map(|code| {
+            (0..k)
+                .map(|i| {
+                    if (code >> (k - 1 - i)) & 1 == 1 {
+                        Gpu::B200
+                    } else {
+                        Gpu::H100
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The analytically best *mixed* assignment for the K-pool ladder —
+/// the cross-product screened with the same Eq. 4 path as the
+/// optimizer's stage A.
+pub fn best_mixed(k: u32) -> Vec<Gpu> {
+    assignments(k)
+        .into_iter()
+        .filter(|v| v.windows(2).any(|w| w[0] != w[1]))
+        .map(|v| {
+            // Evaluate each candidate once, not per comparison.
+            let tok_w = spec_for(k, &v)
+                .analyze(PowerAccounting::PerGpu)
+                .tok_per_watt
+                .0;
+            (tok_w, v)
+        })
+        .max_by(|(a, _), (b, _)| a.total_cmp(b))
+        .map(|(_, v)| v)
+        .expect("K >= 2 has mixed assignments")
+}
+
+/// The typed rowset behind the table: per K, the H100 floor, the best
+/// mixed placement, and the B200 ceiling.
+pub fn rowset() -> RowSet {
+    let mut rs = RowSet::new(
+        "Table 9 — heterogeneous fleets: GPU-generation placement across \
+         K-pool partitions (agent-heavy, λ=120 req/s, 8 groups)",
+        vec![
+            Column::int("K"),
+            Column::str("fleet"),
+            Column::float("analyze tok/W").with_unit("tok/J"),
+            Column::float("simulate tok/W").with_unit("tok/J"),
+            Column::float("delta").with_unit("%"),
+            Column::float("p99 TTFT").with_unit("s"),
+            Column::int("upgraded groups"),
+            Column::float("marginal tok/W").with_unit("tok/J per group"),
+        ],
+    );
+    for k in [2u32, 3] {
+        let floor = vec![Gpu::H100; k as usize];
+        let ceiling = vec![Gpu::B200; k as usize];
+        let mixed = best_mixed(k);
+        let floor_tok_w = spec_for(k, &floor)
+            .analyze(PowerAccounting::PerGpu)
+            .tok_per_watt
+            .0;
+        for gpus in [floor, mixed, ceiling] {
+            let spec = spec_for(k, &gpus);
+            let analytic = spec.analyze(PowerAccounting::PerGpu);
+            let sim = spec.simulate(true);
+            let delta =
+                rel_delta_pct(sim.tok_per_watt, analytic.tok_per_watt.0);
+            // Upgraded groups by the analytical plan's own sizing — the
+            // denominator of the placement curve.
+            let upgraded: u64 = analytic
+                .pools
+                .iter()
+                .zip(&gpus)
+                .filter(|(_, g)| **g == Gpu::B200)
+                .map(|(p, _)| p.sizing.groups)
+                .sum();
+            let marginal_cell = if upgraded > 0 {
+                let m = (analytic.tok_per_watt.0 - floor_tok_w)
+                    / upgraded as f64;
+                Cell::float(m).shown(format!("{m:.4}"))
+            } else {
+                Cell::missing()
+            };
+            rs.push(vec![
+                Cell::int(k as i64),
+                Cell::str(assignment_label(&gpus)),
+                Cell::float(analytic.tok_per_watt.0)
+                    .shown(format!("{:.3}", analytic.tok_per_watt.0)),
+                Cell::float(sim.tok_per_watt)
+                    .shown(format!("{:.3}", sim.tok_per_watt)),
+                Cell::float(delta).shown(format!("{delta:+.1}%")),
+                Cell::float(sim.p99_ttft_s)
+                    .shown(format!("{:.3}", sim.p99_ttft_s)),
+                Cell::int(upgraded as i64),
+                marginal_cell,
+            ]);
+        }
+    }
+    rs.note(
+        "same traffic, same total simulated groups; only the per-pool \
+         GPU assignment changes — the mixed row is the closed-form \
+         winner of the {H100,B200}^K cross-product, and 'marginal \
+         tok/W' is its analytical gain over the all-H100 floor per \
+         upgraded group (the generation lever as a placement curve)",
+    );
+    rs.note(
+        "cutoffs are the default powers-of-four ladder; `wattlaw \
+         optimize --pools K --hetero` searches assignments across the \
+         full cutoff grids, `--upgrade-budget N` places a limited B200 \
+         budget greedily",
+    );
+    rs
+}
+
+pub fn generate() -> String {
+    rowset().to_text()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_floor_mixed_and_ceiling_for_each_k() {
+        let rs = rowset();
+        assert_eq!(rs.rows().len(), 6, "3 fleets × K in {{2, 3}}");
+        let s = rs.to_text();
+        assert!(s.contains("Table 9"));
+        assert!(s.contains("H100-SXM5"), "homogeneous floor row");
+        assert!(s.contains("B200-SXM"), "homogeneous ceiling row");
+        assert!(s.contains('|'), "a mixed assignment row");
+    }
+
+    #[test]
+    fn generation_ordering_holds_analytically() {
+        // Floor < best mixed ≤ ceiling, for both K — the placement
+        // curve is monotone in upgraded pools.
+        for k in [2u32, 3] {
+            let tw = |gpus: &[Gpu]| {
+                spec_for(k, gpus)
+                    .analyze(PowerAccounting::PerGpu)
+                    .tok_per_watt
+                    .0
+            };
+            let floor = tw(&vec![Gpu::H100; k as usize]);
+            let mixed = tw(&best_mixed(k));
+            let ceiling = tw(&vec![Gpu::B200; k as usize]);
+            assert!(mixed > floor, "K={k}: mixed {mixed} vs floor {floor}");
+            assert!(
+                ceiling >= mixed,
+                "K={k}: ceiling {ceiling} vs mixed {mixed}"
+            );
+        }
+    }
+}

@@ -21,7 +21,8 @@ use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
 use wattlaw::fleet::topology::{Topology, LONG_CTX};
 use wattlaw::power::Gpu;
 use wattlaw::scenario::optimize::{
-    analyze_cell, kpool_partitions, optimize, screen, OptimizeConfig,
+    analyze_cell, kpool_partitions, optimize, screen, GpuAxis, OptimizeConfig,
+    UpgradeBudget,
 };
 use wattlaw::scenario::{ScenarioSpec, SloTargets};
 use wattlaw::workload::cdf::{
@@ -216,6 +217,186 @@ fn k2_partition_reduction_replays_the_fleetopt_two_pool_path_bitwise() {
             out.p99_ttft_s.to_bits()
         );
     }
+}
+
+/// The homogeneous-reduction oracle, through BOTH optimizer stages: a
+/// search whose only GPU cells are explicit all-H100 per-pool overrides
+/// must reproduce the legacy homogeneous H100 search bit-for-bit — the
+/// same Eq. 4 floats in stage A (override-resolved profiles vs the
+/// fleet-default profile) and the same simulated outcomes in stage B.
+/// This is the drift pin the heterogeneity refactor hangs on.
+#[test]
+fn homogeneous_override_search_replays_the_legacy_search_bitwise() {
+    let t = azure_conversations();
+    let partitions = vec![vec![4096, LONG_CTX], vec![2048, 8192, LONG_CTX]];
+    let base = OptimizeConfig {
+        partitions: partitions.clone(),
+        gammas: vec![1.0, 2.0],
+        dispatches: vec!["rr".into(), "jsq".into()],
+        gen: GenConfig {
+            lambda_rps: 120.0,
+            duration_s: 0.4,
+            max_prompt_tokens: 20_000,
+            max_output_tokens: 64,
+            seed: 23,
+        },
+        groups: 3,
+        slo: SloTargets { ttft_p99_s: 1e3 },
+        top_k: 3,
+        ..Default::default()
+    };
+    let legacy = OptimizeConfig { gpus: vec![Gpu::H100], ..base.clone() };
+    let overridden = OptimizeConfig {
+        gpus: Vec::new(),
+        gpu_axis: GpuAxis::Explicit(vec![
+            vec![Gpu::H100, Gpu::H100],
+            vec![Gpu::H100, Gpu::H100, Gpu::H100],
+        ]),
+        ..base
+    };
+
+    let a = optimize(&t, &legacy, 2);
+    let b = optimize(&t, &overridden, 2);
+    assert_eq!(a.screened.len(), b.screened.len());
+    for (x, y) in a.screened.iter().zip(&b.screened) {
+        assert_eq!(x.cutoffs, y.cutoffs);
+        assert_eq!(x.gamma, y.gamma);
+        assert_eq!(x.gpus, y.gpus, "both resolve to all-H100 vectors");
+        assert_eq!(
+            x.analytic.tok_per_watt.0.to_bits(),
+            y.analytic.tok_per_watt.0.to_bits(),
+            "stage A drifted at cutoffs {:?} γ {}",
+            x.cutoffs,
+            x.gamma
+        );
+        assert_eq!(x.analytic.total_groups, y.analytic.total_groups);
+    }
+    assert_eq!(a.refined.len(), b.refined.len());
+    for (x, y) in a.refined.iter().zip(&b.refined) {
+        assert_eq!(x.cutoffs, y.cutoffs);
+        assert_eq!(x.dispatch, y.dispatch);
+        assert_eq!(
+            x.outcome.tok_per_watt.to_bits(),
+            y.outcome.tok_per_watt.to_bits(),
+            "stage B drifted at cutoffs {:?} dispatch {}",
+            x.cutoffs,
+            x.dispatch
+        );
+        assert_eq!(x.outcome.joules.to_bits(), y.outcome.joules.to_bits());
+        assert_eq!(
+            x.outcome.p99_ttft_s.to_bits(),
+            y.outcome.p99_ttft_s.to_bits()
+        );
+    }
+}
+
+/// The acceptance claim: with heterogeneous assignments enabled, the
+/// optimizer finds a mixed H100/B200 fleet whose *measured* tok/W
+/// strictly beats the homogeneous-H100 winner (on long-prompt-heavy
+/// traffic, where the upgraded long pools dominate the energy bill).
+#[test]
+fn mixed_fleet_measured_tok_w_beats_the_homogeneous_h100_winner() {
+    let t = agent_heavy();
+    let cfg = OptimizeConfig {
+        gpus: vec![Gpu::H100, Gpu::B200],
+        partitions: vec![vec![4096, 16384, LONG_CTX]],
+        gpu_axis: GpuAxis::Mixed,
+        gammas: vec![1.0],
+        dispatches: vec!["rr".into()],
+        gen: GenConfig {
+            lambda_rps: 150.0,
+            duration_s: 1.0,
+            max_prompt_tokens: 60_000,
+            max_output_tokens: 128,
+            seed: 17,
+        },
+        groups: 6,
+        slo: SloTargets { ttft_p99_s: 1e3 },
+        // 2 homogeneous + 6 mixed cells: refine the whole screen.
+        top_k: 8,
+        ..Default::default()
+    };
+    let report = optimize(&t, &cfg, 2);
+    assert_eq!(report.screened.len(), 8, "2 homogeneous + 2^3 - 2 mixed");
+    assert_eq!(report.refined.len(), 8);
+    let measured = |mixed: bool| {
+        report
+            .refined
+            .iter()
+            .filter(|c| {
+                let is_mixed = c.gpus.windows(2).any(|w| w[0] != w[1]);
+                is_mixed == mixed
+                    && (mixed || c.gpus.iter().all(|g| *g == Gpu::H100))
+            })
+            .map(|c| c.outcome.tok_per_watt)
+            .fold(f64::NEG_INFINITY, f64::max)
+    };
+    let best_mixed = measured(true);
+    let homo_h100 = measured(false);
+    assert!(best_mixed.is_finite() && homo_h100.is_finite());
+    assert!(
+        best_mixed > homo_h100,
+        "best mixed fleet {best_mixed} must strictly beat the \
+         homogeneous-H100 winner {homo_h100} (measured tok/W)"
+    );
+    // The generous SLO yields a winner, and the report labels mixed
+    // cells by their per-pool assignment.
+    assert!(report.winner().is_some());
+    assert!(report.rowset().to_csv().contains('|'));
+}
+
+/// The greedy budgeted-upgrade axis: with an effectively unlimited
+/// budget the path walks to the all-B200 fleet, strictly improving at
+/// every step and never exceeding the budget; with a zero-ish budget
+/// no upgrade fits and only the homogeneous floor is screened.
+#[test]
+fn budget_axis_walks_a_monotone_upgrade_path_within_budget() {
+    let t = agent_heavy();
+    let mk = |max_groups: u32| OptimizeConfig {
+        gpus: vec![Gpu::H100],
+        partitions: vec![vec![4096, 16384, LONG_CTX]],
+        gpu_axis: GpuAxis::Budget(UpgradeBudget {
+            to: Gpu::B200,
+            max_groups,
+        }),
+        gammas: vec![1.0],
+        dispatches: vec!["rr".into()],
+        top_k: 1,
+        ..Default::default()
+    };
+    let wide = screen(&t, &mk(u32::MAX));
+    // 1 homogeneous floor + one cell per greedy step (at most K = 3
+    // steps; each screened step contains B200 pools).
+    assert!(
+        (2..=4).contains(&wide.len()),
+        "floor plus 1..=3 greedy steps, got {}",
+        wide.len()
+    );
+    let mut steps: Vec<&wattlaw::scenario::optimize::ScreenedCell> = wide
+        .iter()
+        .filter(|c| c.gpus.iter().any(|g| *g == Gpu::B200))
+        .collect();
+    assert!(!steps.is_empty(), "an unlimited budget upgrades something");
+    steps.sort_by_key(|c| {
+        c.gpus.iter().filter(|g| **g == Gpu::B200).count()
+    });
+    let floor = wide
+        .iter()
+        .find(|c| c.gpus.iter().all(|g| *g == Gpu::H100))
+        .expect("homogeneous floor screened");
+    let mut prev = floor.analytic.tok_per_watt.0;
+    for c in steps {
+        assert!(
+            c.analytic.tok_per_watt.0 > prev,
+            "greedy step must strictly improve: {:?}",
+            c.gpus
+        );
+        prev = c.analytic.tok_per_watt.0;
+    }
+    // A zero budget admits no upgrade: only the floor remains.
+    let tight = screen(&t, &mk(0));
+    assert_eq!(tight.len(), 1);
+    assert!(tight[0].gpus.iter().all(|g| *g == Gpu::H100));
 }
 
 /// The legacy §10.3 closed form and the K-pool `analyze()` path must

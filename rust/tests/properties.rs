@@ -564,6 +564,86 @@ fn prop_kpool_partition_covers_range_and_conserves_tokens() {
 }
 
 #[test]
+fn prop_mixed_fleet_analyze_is_the_poolwise_eq4_sum() {
+    use std::sync::Arc;
+    use wattlaw::fleet::pool::LBarPolicy;
+    use wattlaw::fleet::topology::Topology;
+    use wattlaw::scenario::optimize::analyze_cell;
+
+    // Under a random per-pool GPU assignment, each pool's Eq. 4 line
+    // depends only on its own generation: pool i of the mixed fleet
+    // must be bit-identical to pool i of the homogeneous fleet that
+    // serves every pool on gpus[i], and the fleet figure must be the
+    // pool-wise sum — heterogeneity composes, it does not couple.
+    forall("mixed-fleet analyze == pool-wise Eq. 4 sum", 12, |g| {
+        let ladder = [2048u32, 4096, 8192, 16384, 32768];
+        let k = g.usize_in(2, 4);
+        let mut cuts = Vec::new();
+        let mut lo = 0usize;
+        for j in 0..(k - 1) {
+            let remaining = (k - 1) - j - 1;
+            let hi = ladder.len() - 1 - remaining;
+            let pick = g.usize_in(lo, hi);
+            cuts.push(ladder[pick]);
+            lo = pick + 1;
+        }
+        cuts.push(65_536);
+        let gpus: Vec<Gpu> = (0..k).map(|_| *g.choose(&Gpu::ALL)).collect();
+        let analyze = |topo: &Topology| {
+            analyze_cell(
+                topo,
+                &azure_conversations(),
+                1000.0,
+                Arc::new(ManualProfile::h100_70b()),
+                LBarPolicy::Window,
+                0.85,
+                0.5,
+                PowerAccounting::PerGpu,
+            )
+        };
+        let mixed =
+            analyze(&Topology::partition_with_gpus(&cuts, &gpus, 1.0));
+        xcheck_assert!(mixed.pools.len() == k);
+        let (mut power_sum, mut demand_sum) = (0.0f64, 0.0f64);
+        for (i, &gpu) in gpus.iter().enumerate() {
+            let homo = analyze(&Topology::partition_with_gpus(
+                &cuts,
+                &vec![gpu; k],
+                1.0,
+            ));
+            let (a, b) = (&mixed.pools[i], &homo.pools[i]);
+            xcheck_assert!(
+                a.power.0.to_bits() == b.power.0.to_bits(),
+                "pool {i} power depends on more than its own GPU: \
+                 {} vs {}",
+                a.power.0,
+                b.power.0
+            );
+            xcheck_assert!(
+                a.demand_tok_s.to_bits() == b.demand_tok_s.to_bits()
+            );
+            xcheck_assert!(a.sizing.groups == b.sizing.groups);
+            xcheck_assert!(
+                a.tok_per_watt.0.to_bits() == b.tok_per_watt.0.to_bits()
+            );
+            power_sum += a.power.0;
+            demand_sum += a.demand_tok_s;
+        }
+        // Fleet figure = Σ demand / Σ power over the same pool lines.
+        xcheck_assert!(
+            (mixed.tok_per_watt.0 - demand_sum / power_sum).abs() <= 1e-12,
+            "fleet tok/W {} vs pool-wise {}",
+            mixed.tok_per_watt.0,
+            demand_sum / power_sum
+        );
+        xcheck_assert!(
+            (mixed.total_power.0 - power_sum).abs() <= 1e-9 * power_sum
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_event_sim_conserves_tokens_and_replays_across_policies() {
     use wattlaw::router::context::ContextRouter;
     use wattlaw::sim::{dispatch, simulate_topology_with};

@@ -105,6 +105,68 @@ fn t8_kpool_rowset_schema_and_units_are_stable() {
     }
 }
 
+/// Golden schema for the t9 heterogeneous-fleet rowset: stable column
+/// order and units through every emitter, the floor row's missing
+/// marginal cell rendered per the NaN/missing policy, and the CSV
+/// round-tripping through the crate's own parser (values are
+/// simulation-derived, so the schema — not the numbers — is the golden
+/// surface).
+#[test]
+fn t9_hetero_rowset_schema_golden_and_csv_round_trip() {
+    let rs = wattlaw::tables::t9::rowset();
+    let csv = rs.to_csv();
+    assert!(
+        csv.starts_with(
+            "K,fleet,analyze tok/W (tok/J),simulate tok/W (tok/J),\
+             delta (%),p99 TTFT (s),upgraded groups,\
+             marginal tok/W (tok/J per group)\n"
+        ),
+        "t9 CSV header drifted:\n{}",
+        csv.lines().next().unwrap_or("")
+    );
+    assert_eq!(csv.lines().count(), 1 + 6, "3 fleets × K in {{2, 3}}");
+
+    let doc = parse_json(&rs.to_json()).expect("t9 emits valid JSON");
+    let cols = doc.get("columns").unwrap().as_arr().unwrap();
+    assert_eq!(cols.len(), 8);
+    assert_eq!(cols[1].get("name").unwrap().as_str(), Some("fleet"));
+    assert_eq!(
+        cols[7].get("unit").unwrap().as_str(),
+        Some("tok/J per group")
+    );
+    let rows = doc.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 6);
+    // Rows come in (floor, mixed, ceiling) triples per K: the all-H100
+    // floor has no upgraded groups and a missing marginal; the others
+    // carry both.
+    for (i, r) in rows.iter().enumerate() {
+        assert!(r.get("analyze tok/W").unwrap().as_f64().is_some());
+        assert!(r.get("simulate tok/W").unwrap().as_f64().is_some());
+        let upgraded = r.get("upgraded groups").unwrap().as_f64().unwrap();
+        if i % 3 == 0 {
+            assert_eq!(upgraded, 0.0, "row {i} is an all-H100 floor");
+            assert_eq!(r.get("marginal tok/W"), Some(&Json::Null));
+        } else {
+            assert!(upgraded > 0.0, "row {i} upgrades groups");
+            assert!(r.get("marginal tok/W").unwrap().as_f64().is_some());
+        }
+    }
+
+    // The machine CSV survives the crate's own parser with the measured
+    // column intact at full precision.
+    let parsed = parse_csv(&csv).unwrap_or_else(|e| panic!("parse: {e}"));
+    assert_eq!(parsed.len(), 1 + 6);
+    let col = parsed[0]
+        .iter()
+        .position(|h| h.starts_with("simulate tok/W"))
+        .expect("simulate column");
+    for row in &parsed[1..] {
+        assert_eq!(row.len(), 8, "t9 schema arity");
+        let v: f64 = row[col].parse().expect("full-precision float");
+        assert!(v > 0.0);
+    }
+}
+
 /// A `simulate sweep` grid with a K=3 partition cell must round-trip
 /// through the crate's own CSV parser (the CI artifact path).
 #[test]
@@ -141,7 +203,7 @@ fn kpool_sweep_csv_round_trips_through_the_parser() {
     let parsed = parse_csv(&csv).unwrap_or_else(|e| panic!("parse: {e}"));
     assert_eq!(parsed.len(), 1 + recs.len());
     for row in &parsed {
-        assert_eq!(row.len(), 10, "sweep schema arity");
+        assert_eq!(row.len(), 11, "sweep schema arity");
     }
     // The measured tok/W column survives the round trip at full value.
     let col = parsed[0]

@@ -15,19 +15,35 @@
 //! same 10k-request trace) — the ratio is why the search screens wide
 //! and refines narrow.
 //!
+//! Two raw-speed sections cover the PR 6 refactors head-to-head:
+//!
+//! * `event_queue` — the calendar/bucket event queue vs the legacy
+//!   binary heap (`QueueMode::BinaryHeap`, the replay oracle) at
+//!   λ ∈ {1000, 4000} on the sequential shared-queue path; both modes
+//!   must replay bit-for-bit, so the delta is pure queue cost.
+//! * `bnb_screen` — the branch-and-bound heterogeneous screen vs the
+//!   brute-force assignment cross-product at K ∈ {3, 4, 5} over a
+//!   3-generation set: Eq. 4 evaluations visited and wall time.
+//!
 //! Run `cargo bench --bench bench_sim_engine -- --record` to write the
 //! headline numbers to `BENCH_sim_engine.json` at the repo root
-//! (`--quick` shrinks the sample count for smoke runs).
+//! (`--quick` shrinks the sample count for smoke runs; `--gate` fails
+//! the run if calendar-queue events/sec regresses more than 20% against
+//! the committed baseline, once that baseline is non-null).
 use wattlaw::benchkit::{black_box, BenchConfig, BenchGroup, BenchStats};
-use wattlaw::fleet::profile::{GpuProfile, ManualProfile};
+use wattlaw::fleet::pool::LBarPolicy;
+use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
 use wattlaw::fleet::topology::Topology;
 use wattlaw::power::Gpu;
 use wattlaw::router::context::ContextRouter;
-use wattlaw::scenario::optimize::{self, OptimizeConfig};
+use wattlaw::scenario::optimize::{
+    self, MixedScreen, MixedScreenStats, OptimizeConfig,
+};
 use wattlaw::scenario::ScenarioSpec;
 use wattlaw::sim::dispatch::{JoinShortestQueue, RoundRobin};
 use wattlaw::sim::{
-    simulate_topology_opts, EngineOptions, GroupSimConfig, StateMode,
+    simulate_topology_opts, EngineOptions, GroupSimConfig, QueueMode,
+    StateMode,
 };
 use wattlaw::workload::synth::{generate, GenConfig};
 
@@ -64,6 +80,13 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick")
         || std::env::var("WATTLAW_BENCH_QUICK").is_ok();
     let record = std::env::args().any(|a| a == "--record");
+    let gate = std::env::args().any(|a| a == "--gate");
+    // Read the committed baseline *before* --record overwrites it.
+    let baseline = if gate {
+        std::fs::read_to_string(JSON_PATH).ok()
+    } else {
+        None
+    };
     let cfg = if quick {
         BenchConfig { warmup_iters: 1, samples: 3, batch: 1 }
     } else {
@@ -77,6 +100,7 @@ fn main() {
     let opts = |allow_parallel: bool, mode: StateMode| EngineOptions {
         allow_parallel,
         state_mode: mode,
+        queue_mode: QueueMode::Calendar,
         validate_state: false,
     };
     let mut steps_seq = 0u64;
@@ -205,6 +229,98 @@ fn main() {
         black_box(cells.len())
     });
 
+    // Event-queue head-to-head: the calendar/bucket queue vs the legacy
+    // binary heap on the sequential shared-queue path (one queue carries
+    // every group's events — the path the queue swap targets). JSQ keeps
+    // the live-state maintenance in the loop, like production runs.
+    let eq_gen = |lambda_rps: f64, duration_s: f64| GenConfig {
+        lambda_rps,
+        duration_s,
+        max_prompt_tokens: 30_000,
+        max_output_tokens: 256,
+        seed: 5,
+    };
+    let eq_trace_l1k =
+        generate(&wattlaw::workload::cdf::azure_conversations(), &eq_gen(1000.0, 5.0));
+    let eq_trace_l4k =
+        generate(&wattlaw::workload::cdf::azure_conversations(), &eq_gen(4000.0, 2.5));
+    let eq_opts = |qm: QueueMode| EngineOptions {
+        allow_parallel: false,
+        state_mode: StateMode::Incremental,
+        queue_mode: qm,
+        validate_state: false,
+    };
+    // (steps, output tokens) per (queue, λ) cell, stats[8..12].
+    let mut eq_steps = [0u64; 4];
+    let mut eq_toks = [0u64; 4];
+    {
+        let cells: [(&str, &Vec<wattlaw::workload::Request>, QueueMode); 4] = [
+            ("event_queue_calendar_l1000", &eq_trace_l1k, QueueMode::Calendar),
+            ("event_queue_heap_l1000", &eq_trace_l1k, QueueMode::BinaryHeap),
+            ("event_queue_calendar_l4000", &eq_trace_l4k, QueueMode::Calendar),
+            ("event_queue_heap_l4000", &eq_trace_l4k, QueueMode::BinaryHeap),
+        ];
+        for (i, (name, tr, qm)) in cells.into_iter().enumerate() {
+            g.bench(name, || {
+                let mut jsq = JoinShortestQueue;
+                let r = simulate_topology_opts(
+                    tr,
+                    &router,
+                    &pool_groups,
+                    &cfgs,
+                    &mut jsq,
+                    eq_opts(qm),
+                );
+                eq_steps[i] = r.steps;
+                eq_toks[i] = r.output_tokens;
+                black_box(r.output_tokens)
+            });
+        }
+    }
+
+    // Branch-and-bound heterogeneous screen vs the brute-force
+    // cross-product at K ∈ {3, 4, 5} over a 3-generation set:
+    // Eq. 4 evaluations visited and wall time, stats[12..18].
+    let bnb_gpus = [Gpu::H100, Gpu::H200, Gpu::B200];
+    let bnb_gammas = [1.0, 2.0];
+    let bnb_keep = OptimizeConfig::default().mixed_keep;
+    // (K, brute stats, bnb stats) in bench order.
+    let mut bnb_work: Vec<(u32, MixedScreenStats, MixedScreenStats)> =
+        Vec::new();
+    for k in [3u32, 4, 5] {
+        let parts = optimize::kpool_partitions(k);
+        let mut run = |mode: MixedScreen| {
+            let mut stats = MixedScreenStats::default();
+            g.bench(
+                format!(
+                    "bnb_screen_k{k}_{}",
+                    if mode == MixedScreen::BruteForce { "brute" } else { "bnb" }
+                ),
+                || {
+                    let (cells, s) = optimize::screen_mixed(
+                        &workload,
+                        gen.lambda_rps,
+                        &parts,
+                        &bnb_gpus,
+                        &bnb_gammas,
+                        LBarPolicy::Window,
+                        0.85,
+                        0.5,
+                        PowerAccounting::PerGpu,
+                        mode,
+                        bnb_keep,
+                    );
+                    stats = s;
+                    black_box(cells.len())
+                },
+            );
+            stats
+        };
+        let brute = run(MixedScreen::BruteForce);
+        let bnb = run(MixedScreen::BranchAndBound);
+        bnb_work.push((k, brute, bnb));
+    }
+
     let stats = g.finish();
     assert_eq!(steps_seq, steps_par, "parallel fast path must replay exactly");
     assert_eq!(
@@ -256,11 +372,90 @@ fn main() {
         stats[7].mean_ns / 1e3 / hetero_cells.max(1) as f64;
     println!(
         "hetero screen: {} assignment x partition x gamma cells (K=2..3, \
-         H100 x B200 mixed cross-product) in {:.1} ms \
+         H100 x B200, branch-and-bound) in {:.1} ms \
          ({hetero_us_per_cell:.1} µs/cell)",
         hetero_cells,
         stats[7].mean_ns / 1e6,
     );
+
+    // Queue-swap correctness + headline: both queues must replay the
+    // same trace bit-for-bit, so the events/sec delta is pure queue cost.
+    for pair in [(0usize, 1usize), (2, 3)] {
+        assert_eq!(
+            eq_steps[pair.0], eq_steps[pair.1],
+            "calendar queue must replay the binary-heap oracle exactly"
+        );
+        assert_eq!(eq_toks[pair.0], eq_toks[pair.1]);
+    }
+    let eq_names = [
+        "event_queue_calendar_l1000",
+        "event_queue_heap_l1000",
+        "event_queue_calendar_l4000",
+        "event_queue_heap_l4000",
+    ];
+    for (i, name) in eq_names.iter().enumerate() {
+        println!(
+            "{name:<28} {} step events, {:.0} events/sec (mean)",
+            eq_steps[i],
+            ev_per_s(eq_steps[i], &stats[8 + i])
+        );
+    }
+    println!(
+        "calendar speedup over heap: {:.2}x (λ=1000), {:.2}x (λ=4000)",
+        stats[9].mean_ns / stats[8].mean_ns,
+        stats[11].mean_ns / stats[10].mean_ns,
+    );
+    for (i, (k, brute, bnb)) in bnb_work.iter().enumerate() {
+        let (bs, ns) = (&stats[12 + 2 * i], &stats[13 + 2 * i]);
+        let visited = bnb.nodes_visited + bnb.table_evals + bnb.full_evals;
+        println!(
+            "bnb screen K={k}: brute {} cells in {:.1} ms vs B&B {} \
+             visited ({} pruned subtrees, {} exact re-evals) in {:.1} ms \
+             — {:.2}x",
+            brute.brute_cells,
+            bs.mean_ns / 1e6,
+            visited,
+            bnb.pruned,
+            bnb.full_evals,
+            ns.mean_ns / 1e6,
+            bs.mean_ns / ns.mean_ns,
+        );
+    }
+
+    // --gate: fail (after optionally recording) if calendar events/sec
+    // regressed more than 20% against the committed non-null baseline.
+    let mut gate_failures: Vec<String> = Vec::new();
+    if let Some(text) = &baseline {
+        if let Ok(doc) = wattlaw::runtime::json::parse(text) {
+            let entries = doc
+                .get("event_queue")
+                .and_then(|q| q.get("entries"))
+                .and_then(|e| e.as_arr())
+                .unwrap_or(&[]);
+            for entry in entries {
+                let Some(name) = entry.get("name").and_then(|n| n.as_str())
+                else {
+                    continue;
+                };
+                let Some(base) =
+                    entry.get("events_per_sec").and_then(|v| v.as_f64())
+                else {
+                    continue; // still null: nothing to gate against
+                };
+                let Some(i) = eq_names.iter().position(|n| *n == name) else {
+                    continue;
+                };
+                let now = ev_per_s(eq_steps[i], &stats[8 + i]);
+                if now < 0.8 * base {
+                    gate_failures.push(format!(
+                        "{name}: {now:.0} events/sec is {:.1}% below the \
+                         committed baseline {base:.0}",
+                        (1.0 - now / base) * 100.0
+                    ));
+                }
+            }
+        }
+    }
 
     if record {
         let mut j = String::new();
@@ -335,12 +530,61 @@ fn main() {
              \"screen_ms\": {:.3},\n    \
              \"us_per_cell\": {hetero_us_per_cell:.2},\n    \
              \"note\": \"GpuAxis::Mixed stage A: homogeneous H100/B200 \
-             cells plus the full mixed H100xB200 assignment \
-             cross-product over the K in 2..=3 cutoff grids x the \
+             cells plus the branch-and-bound mixed H100xB200 assignment \
+             screen over the K in 2..=3 cutoff grids x the \
              legacy gamma grid — the analytical cost of the \
              generation-per-pool axis\"\n  }},\n",
             stats[7].mean_ns / 1e6,
         ));
+        j.push_str("  \"event_queue\": {\n    \"entries\": [\n");
+        for (i, name) in eq_names.iter().enumerate() {
+            j.push_str(&format!(
+                "      {{ \"name\": \"{name}\", \"steps\": {}, \
+                 \"events_per_sec\": {:.0}, \"mean_ms\": {:.2} }}{}\n",
+                eq_steps[i],
+                ev_per_s(eq_steps[i], &stats[8 + i]),
+                stats[8 + i].mean_ns / 1e6,
+                if i + 1 < eq_names.len() { "," } else { "" }
+            ));
+        }
+        j.push_str(&format!(
+            "    ],\n    \
+             \"calendar_speedup_l1000\": {:.3},\n    \
+             \"calendar_speedup_l4000\": {:.3},\n    \
+             \"note\": \"calendar/bucket event queue vs the legacy \
+             binary heap (QueueMode::BinaryHeap, the bit-for-bit replay \
+             oracle) on the sequential shared-queue JSQ path — the \
+             events/sec gate (--gate) trips when a calendar cell drops \
+             more than 20% below this baseline\"\n  }},\n",
+            stats[9].mean_ns / stats[8].mean_ns,
+            stats[11].mean_ns / stats[10].mean_ns,
+        ));
+        j.push_str("  \"bnb_screen\": {\n    \"k\": [\n");
+        for (i, (k, brute, bnb)) in bnb_work.iter().enumerate() {
+            let visited =
+                bnb.nodes_visited + bnb.table_evals + bnb.full_evals;
+            j.push_str(&format!(
+                "      {{ \"k\": {k}, \"brute_cells\": {}, \
+                 \"brute_ms\": {:.3}, \"bnb_visited\": {visited}, \
+                 \"bnb_pruned_subtrees\": {}, \"bnb_full_evals\": {}, \
+                 \"bnb_ms\": {:.3}, \"speedup\": {:.3} }}{}\n",
+                brute.brute_cells,
+                stats[12 + 2 * i].mean_ns / 1e6,
+                bnb.pruned,
+                bnb.full_evals,
+                stats[13 + 2 * i].mean_ns / 1e6,
+                stats[12 + 2 * i].mean_ns / stats[13 + 2 * i].mean_ns,
+                if i + 1 < bnb_work.len() { "," } else { "" }
+            ));
+        }
+        j.push_str(
+            "    ],\n    \
+             \"note\": \"branch-and-bound heterogeneous stage-A screen \
+             vs the brute-force assignment cross-product over the \
+             generated K-pool cutoff grids, H100/H200/B200, gamma in \
+             {1,2}, keep=64 — bnb_visited counts DFS nodes + table \
+             builds + exact survivor re-evals\"\n  },\n",
+        );
         j.push_str(
             "  \"recorded_by\": \"cargo bench --bench bench_sim_engine -- \
              --record\"\n}\n",
@@ -349,5 +593,16 @@ fn main() {
         println!("recorded to {JSON_PATH}");
     } else {
         println!("(pass --record to update BENCH_sim_engine.json)");
+    }
+
+    if gate {
+        if gate_failures.is_empty() {
+            println!("--gate: events/sec within 20% of the committed baseline");
+        } else {
+            for f in &gate_failures {
+                eprintln!("--gate FAIL: {f}");
+            }
+            std::process::exit(1);
+        }
     }
 }

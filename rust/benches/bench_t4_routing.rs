@@ -62,9 +62,8 @@ fn main() {
             groups
         ],
     };
-    let state = FleetState {
-        pools: vec![pool(12, 5120, 128, 8), pool(1, 65_536, 16, 8)],
-    };
+    let state =
+        FleetState::from_pools(vec![pool(12, 5120, 128, 8), pool(1, 65_536, 16, 8)]);
     g.bench("route_live_1k_reqs_adaptive", || {
         black_box(
             reqs.iter()
@@ -76,20 +75,18 @@ fn main() {
     // Dispatch hot path: one pick_group is an O(groups) scan of the live
     // state (the engine pays it once per arrival; since the
     // incremental-state refactor it pays *only* this — no snapshot).
-    let wide = FleetState {
-        pools: vec![PoolLoad {
-            window_tokens: 5120,
-            n_max: 128,
-            groups: (0..64)
-                .map(|g| GroupLoad {
-                    queued: (g * 7) % 13,
-                    active: (g * 11) % 97,
-                    free_blocks: 4096 - (g as u32 * 53) % 4096,
-                    used_blocks: (g as u32 * 53) % 4096,
-                })
-                .collect(),
-        }],
-    };
+    let wide = FleetState::from_pools(vec![PoolLoad {
+        window_tokens: 5120,
+        n_max: 128,
+        groups: (0..64)
+            .map(|g| GroupLoad {
+                queued: (g * 7) % 13,
+                active: (g * 11) % 97,
+                free_blocks: 4096 - (g as u32 * 53) % 4096,
+                used_blocks: (g as u32 * 53) % 4096,
+            })
+            .collect(),
+    }]);
     let sreq =
         ServeRequest { id: 0, prompt_tokens: 512, output_tokens: 64, arrival_s: 0.0 };
     g.bench("dispatch_jsq_pick_1k_over_64_groups", || {

@@ -202,7 +202,8 @@ impl Args {
         }
     }
 
-    /// `--pools K` — the K-pool partition axis (K ∈ 2..=4).
+    /// `--pools K` — the K-pool partition axis (K ∈ 2..=6; the wide end
+    /// is served by the branch-and-bound heterogeneous screen).
     pub fn pools_k(&self) -> crate::Result<Option<u32>> {
         match self.opt("pools") {
             None => Ok(None),
@@ -211,8 +212,8 @@ impl Args {
                     .parse()
                     .map_err(|_| anyhow::anyhow!("bad --pools '{s}'"))?;
                 anyhow::ensure!(
-                    (2..=4).contains(&k),
-                    "--pools must be in 2..=4 (got {k})"
+                    (2..=6).contains(&k),
+                    "--pools must be in 2..=6 (got {k})"
                 );
                 Ok(Some(k))
             }
@@ -316,10 +317,12 @@ commands:
              through the event-driven simulator and re-ranks by measured
              tok/W with the SLO verdict as a hard filter
              (--gpu restricts the generation axis, --top-k, --slo-ttft;
-              --pools K screens the generated K-pool cutoff grids,
+              --pools K (2..=6) screens the generated K-pool cutoff grids,
               --cutoffs a,b,c one explicit partition vector;
               --gpu h100,h100,b200 screens that per-pool assignment,
-              --hetero the full mixed cross-product over the --gpu set,
+              --hetero the mixed per-pool assignments over the --gpu set
+              (2+ generations, e.g. --gpu h100,h200,b200), searched by
+              Eq. 4 branch-and-bound so K up to 6 stays tractable,
               --upgrade-budget N --upgrade-to b200 the greedy budgeted
               placement of at most N upgraded groups)
   power      print a GPU's P(b) curve (--gpu)
@@ -629,9 +632,10 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
     // The GPU axis: a single `--gpu` restricts the homogeneous
     // generation sweep (legacy); a per-pool list (`--gpu h100,h100,b200`)
     // screens that explicit assignment next to each listed generation's
-    // homogeneous cells; `--hetero` screens the full mixed cross-product
-    // over the `--gpu` set (default h100,b200); `--upgrade-budget N
-    // --upgrade-to b200` runs the greedy budgeted placement instead.
+    // homogeneous cells; `--hetero` searches the mixed assignments over
+    // the `--gpu` set (default h100,b200) by Eq. 4 branch-and-bound;
+    // `--upgrade-budget N --upgrade-to b200` runs the greedy budgeted
+    // placement instead.
     let gpu_list = args.gpus()?;
     let upgrade_budget = match args.opt("upgrade-budget") {
         None => None,
@@ -693,16 +697,10 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
             set.len() >= 2,
             "--hetero needs at least two distinct generations in --gpu"
         );
-        // The mixed cross-product is |gpus|^K per partition and is only
-        // generated for K ≤ 3 — reject a wider request instead of
-        // silently screening those partitions homogeneous-only.
-        anyhow::ensure!(
-            args.pools_k()?.unwrap_or(2) <= 3
-                && args.cutoffs()?.map_or(true, |c| c.len() <= 3),
-            "--hetero screens the full assignment cross-product for \
-             partitions of up to 3 pools; use --upgrade-budget for \
-             wider fleets (greedy placement scales to any K)"
-        );
+        // The assignment space is |gpus|^K per partition; stage A
+        // searches it by branch-and-bound with the admissible Eq. 4
+        // bound, so K up to the --pools ceiling (6) and 3+ generation
+        // sets all screen without enumerating the cross-product.
         (set, GpuAxis::Mixed)
     } else {
         match gpu_list {
@@ -814,7 +812,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
     let hetero_note = match &cfg.gpu_axis {
         optimize::GpuAxis::Homogeneous => String::new(),
         optimize::GpuAxis::Mixed => {
-            " + the mixed GPU-assignment cross-product".into()
+            " + the branch-and-bound mixed GPU-assignment screen".into()
         }
         optimize::GpuAxis::Explicit(v) => format!(
             " + {} explicit GPU assignment{}",
@@ -1319,6 +1317,7 @@ mod tests {
     fn pools_and_cutoffs_options_parse_and_validate() {
         assert_eq!(args("simulate").pools_k().unwrap(), None);
         assert_eq!(args("simulate --pools 3").pools_k().unwrap(), Some(3));
+        assert_eq!(args("simulate --pools 6").pools_k().unwrap(), Some(6));
         assert!(args("simulate --pools 1").pools_k().is_err());
         assert!(args("simulate --pools 9").pools_k().is_err());
         assert!(args("simulate --pools x").pools_k().is_err());
@@ -1423,6 +1422,18 @@ mod tests {
         )
         .unwrap();
         assert_eq!(code, 0);
+        // The branch-and-bound mixed screen: a K ≤ 5 three-generation
+        // search the old cross-product refused (|gpus|^K explosion).
+        let code = run(
+            "optimize --trace agent --hetero --pools 5 \
+             --gpu h100,h200,b200 --lambda 60 --duration 0.4 --groups 5 \
+             --gamma 1 --dispatch rr --top-k 1 --workers 2 \
+             --slo-ttft 1000 --format json"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
         // Axis validation errors.
         let fails = [
             // assignment length matches no screened partition
@@ -1435,8 +1446,8 @@ mod tests {
             "optimize --hetero --gpu h100",
             // the two heterogeneous searches are mutually exclusive
             "optimize --hetero --upgrade-budget 8",
-            // the mixed cross-product stops at K = 3
-            "optimize --hetero --pools 4",
+            // --pools stops at the ladder's K = 6 ceiling
+            "optimize --hetero --pools 7",
         ];
         for cmd in fails {
             assert!(

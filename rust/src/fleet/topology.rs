@@ -70,8 +70,10 @@ impl PartitionPool {
 
 /// The default K-pool cutoff vector: a powers-of-four ladder below the
 /// 64K long window — K=3 is the paper's §10.3 example {4K, 16K, 64K}.
+/// K runs to 6 (the `--pools` ceiling; at K=6 the shortest tier is a
+/// 64-token micro-pool).
 pub fn default_partition(k: u32) -> Vec<u32> {
-    assert!((1..=4).contains(&k), "default partitions cover K in 1..=4");
+    assert!((1..=6).contains(&k), "default partitions cover K in 1..=6");
     (1..=k).map(|i| LONG_CTX >> (2 * (k - i))).collect()
 }
 
@@ -927,5 +929,9 @@ mod tests {
         assert_eq!(default_partition(2), vec![16384, LONG_CTX]);
         assert_eq!(default_partition(3), vec![4096, 16384, LONG_CTX]);
         assert_eq!(default_partition(4), vec![1024, 4096, 16384, LONG_CTX]);
+        assert_eq!(
+            default_partition(6),
+            vec![64, 256, 1024, 4096, 16384, LONG_CTX]
+        );
     }
 }

@@ -9,9 +9,13 @@
 //!   ([`router`]), continuous batching and paged KV management
 //!   ([`serve`]), the analytical fleet planner ([`fleet`], mirroring the
 //!   paper's `inference-fleet-sim` API), an event-driven fleet simulator
-//!   — one binary-heap event queue and one virtual clock driving all
-//!   groups of all pools concurrently, with pluggable group-dispatch
-//!   policies (round-robin / join-shortest-queue / least-KV-load /
+//!   — one calendar/bucket event queue (amortized O(1) per event; the
+//!   pre-refactor binary heap retained behind
+//!   [`sim::QueueMode::BinaryHeap`] as a bit-for-bit replay oracle) and
+//!   one virtual clock driving all groups of all pools concurrently,
+//!   hot per-group state stored struct-of-arrays for cache-linear
+//!   dispatch scans, with pluggable group-dispatch policies
+//!   (round-robin / join-shortest-queue / least-KV-load /
 //!   power-aware) and a parallel per-group fast path ([`sim`]) — a
 //!   unified scenario layer feeding both the analytical planner and the
 //!   simulator from one spec — three orthogonal fleet axes: routing
@@ -21,8 +25,10 @@
 //!   workload — with multi-threaded
 //!   dispatch × topology × context-window sweeps and a two-stage
 //!   (analytical screen → simulated refine) FleetOpt optimizer that
-//!   also searches assignment vectors (full cross-product or greedy
-//!   budgeted upgrades) ([`scenario`]) — a typed results subsystem every output surface
+//!   searches assignment vectors by Eq. 4 branch-and-bound (admissible
+//!   closed-form bound over partial assignments; brute-force
+//!   cross-product retained as the oracle), greedy budgeted upgrades,
+//!   or explicit lists ([`scenario`]) — a typed results subsystem every output surface
 //!   emits through, with CSV/JSON alongside the text tables
 //!   ([`results`]) — and per-GPU energy metering driven by the
 //!   calibrated logistic power model ([`power`]).

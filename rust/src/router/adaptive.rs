@@ -80,9 +80,9 @@ impl Router for AdaptiveRouter {
             // Long context never fits the short window.
             return Route { pool: 1, effective_prompt_tokens: req.prompt_tokens };
         }
-        debug_assert!(state.pools.len() >= 2, "adaptive router needs 2 pools");
-        let short = state.pools[0].queued_per_group();
-        let long = state.pools[1].queued_per_group();
+        debug_assert!(state.num_pools() >= 2, "adaptive router needs 2 pools");
+        let short = state.pool(0).queued_per_group();
+        let long = state.pool(1).queued_per_group();
         let pool = usize::from(short > self.spill_factor * (long + 1.0));
         Route { pool, effective_prompt_tokens: req.prompt_tokens }
     }
@@ -108,9 +108,10 @@ mod tests {
                 used_blocks: 0,
             }],
         };
-        FleetState {
-            pools: vec![pool(short_backlog, 5120, 128), pool(long_backlog, 65_536, 16)],
-        }
+        FleetState::from_pools(vec![
+            pool(short_backlog, 5120, 128),
+            pool(long_backlog, 65_536, 16),
+        ])
     }
 
     #[test]
@@ -141,7 +142,9 @@ mod tests {
         // congested: spilling would wake an idle long pool for nothing.
         let r = AdaptiveRouter::new(4096);
         let mut s = state(0, 0);
-        s.pools[0].groups[0].active = 100; // hot but queue-free
+        let mut hot = s.pool(0).group(0);
+        hot.active = 100; // hot but queue-free
+        s.set_group(0, 0, hot);
         assert_eq!(r.route_live(&req(100), &s).pool, 0);
     }
 

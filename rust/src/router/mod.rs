@@ -103,7 +103,7 @@ mod tests {
         let r = HomogeneousRouter;
         assert!(!r.is_load_aware());
         let req = Request { id: 0, arrival_s: 0.0, prompt_tokens: 7, output_tokens: 1 };
-        let state = FleetState { pools: vec![] };
+        let state = FleetState::empty();
         assert_eq!(r.route_live(&req, &state), r.route(&req));
     }
 }

@@ -12,9 +12,17 @@
 //!   closed-form Eq. (4) planner ([`ScenarioSpec::analyze`]; dispatch
 //!   does not enter the closed form, so each analytical cell is
 //!   screened once). The partition axis is a vector of K-pool context
-//!   cutoffs ([`kpool_partitions`] generates the K ∈ {2, 3, 4} grids;
+//!   cutoffs ([`kpool_partitions`] generates the K ∈ {2, …, 7} grids;
 //!   the default is the legacy `[B_short, LONG_CTX]` two-pool axis).
-//!   Cheap: hundreds of cells per millisecond, so the grid can be wide.
+//!   The heterogeneous assignment axis ([`GpuAxis::Mixed`]) is searched
+//!   by branch-and-bound over partial per-pool GPU vectors
+//!   ([`screen_mixed`]): Eq. 4 separates into a per-(pool, generation)
+//!   power table plus a GPU-independent demand, so an admissible
+//!   optimistic bound ([`Eq4PowerTable::bound`]) prunes whole assignment
+//!   subtrees while staying bit-identical to the brute-force
+//!   cross-product (retained behind [`MixedScreen::BruteForce`] as the
+//!   oracle). Cheap: hundreds of cells per millisecond, so the grid can
+//!   be wide.
 //! * **Stage B — simulated refine.** The top-k surviving cells are
 //!   expanded across the dispatch axis and replayed through
 //!   [`ScenarioSpec::simulate`] on scoped worker threads
@@ -290,10 +298,14 @@ pub enum GpuAxis {
     /// axis, and the only one before heterogeneous fleets landed.
     #[default]
     Homogeneous,
-    /// The homogeneous cells **plus** every mixed per-pool assignment
-    /// over `gpus`, for partitions of K ≤ 3 pools (the full
-    /// cross-product; |gpus|^K cells per partition beyond that is grid
-    /// explosion, and the budgeted mode covers large K greedily).
+    /// The homogeneous cells **plus** the mixed per-pool assignments
+    /// over `gpus`, searched by Eq. 4 branch-and-bound
+    /// ([`screen_mixed`]) so K = 4–6 partitions and 3+ generation sets
+    /// stay tractable: the |gpus|^K cross-product is pruned by an
+    /// admissible closed-form bound, keeping the best
+    /// [`OptimizeConfig::mixed_keep`] assignments with rankings
+    /// bit-identical to the brute-force enumeration
+    /// ([`MixedScreen::BruteForce`], the replay oracle).
     Mixed,
     /// The homogeneous cells plus these explicit per-pool vectors, each
     /// applied to every screened partition with a matching pool count
@@ -321,12 +333,22 @@ pub struct OptimizeConfig {
     /// `[4096, 16384, 65536]` for K=3). Empty = derive the classic
     /// `[b, LONG_CTX]` two-pool vectors from `b_shorts`
     /// ([`Self::effective_partitions`]); [`kpool_partitions`] generates
-    /// full grids for K ∈ {2, 3, 4}, `--pools K` on the CLI.
+    /// full grids for K up to the ladder width, `--pools K` (2..=6) on
+    /// the CLI.
     pub partitions: Vec<Vec<u32>>,
     /// How the GPU-generation axis is explored: homogeneous fleets
-    /// only (legacy), the full mixed cross-product, explicit per-pool
-    /// assignment vectors, or the greedy budgeted-upgrade search.
+    /// only (legacy), the mixed per-pool assignment space, explicit
+    /// per-pool assignment vectors, or the greedy budgeted-upgrade
+    /// search.
     pub gpu_axis: GpuAxis,
+    /// How [`GpuAxis::Mixed`] enumerates assignments: branch-and-bound
+    /// (default) or the brute-force cross-product oracle.
+    pub mixed_screen: MixedScreen,
+    /// Mixed cells the branch-and-bound screen keeps (its beam of exact
+    /// survivors). The default 64 covers every K ≤ 3 grid per
+    /// (partition, γ) — and far more than stage B's `top_k` ever reads —
+    /// so truncation never touches the winner.
+    pub mixed_keep: usize,
     /// FleetOpt compression-factor axis (applies to the last pool).
     pub gammas: Vec<f64>,
     /// Dispatch axis — resolved by measurement in stage B only (the
@@ -351,6 +373,8 @@ impl Default for OptimizeConfig {
             b_shorts: B_SHORT_GRID.to_vec(),
             partitions: Vec::new(),
             gpu_axis: GpuAxis::Homogeneous,
+            mixed_screen: MixedScreen::BranchAndBound,
+            mixed_keep: 64,
             gammas: GAMMA_GRID.to_vec(),
             dispatches: dispatch::ALL.iter().map(|s| s.to_string()).collect(),
             gen: GenConfig {
@@ -465,10 +489,14 @@ pub fn cutoffs_label(cutoffs: &[u32]) -> String {
         .join("|")
 }
 
-/// Every mixed per-pool assignment over `gpus` for partitions of K ≤ 3
-/// pools, in deterministic lexicographic order (homogeneous vectors are
-/// skipped — the legacy per-fleet axis already screens them).
-fn mixed_assignments(
+/// Every mixed per-pool assignment over `gpus`, in deterministic
+/// lexicographic order: per partition, assignment codes count up in base
+/// |gpus| with pool 0 the most-significant digit (homogeneous vectors
+/// are skipped — the legacy per-fleet axis already screens them). This
+/// is the brute-force enumeration the branch-and-bound screen
+/// ([`screen_mixed`]) must reproduce cell-for-cell; |gpus|^K growth is
+/// why B&B is the default beyond toy grids.
+pub fn mixed_assignments(
     partitions: &[Vec<u32>],
     gpus: &[Gpu],
 ) -> Vec<(Vec<u32>, Vec<Gpu>)> {
@@ -479,9 +507,6 @@ fn mixed_assignments(
     }
     for cuts in partitions {
         let k = cuts.len() as u32;
-        if k > 3 {
-            continue;
-        }
         for code in 0..n.pow(k) {
             let mut v = Vec::with_capacity(k as usize);
             let mut c = code;
@@ -497,6 +522,365 @@ fn mixed_assignments(
         }
     }
     out
+}
+
+/// How [`GpuAxis::Mixed`] enumerates the per-pool assignment space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MixedScreen {
+    /// Branch-and-bound over partial assignment vectors with the
+    /// admissible Eq. 4 bound ([`Eq4PowerTable::bound`]) — the default;
+    /// opens K = 4–6 partitions and 3+ generation sets.
+    #[default]
+    BranchAndBound,
+    /// The full |gpus|^K cross-product through [`screen_assignments`] —
+    /// the replay oracle the B&B rankings are held bit-identical to.
+    BruteForce,
+}
+
+/// Work counters for one [`screen_mixed`] call — what the bench layer
+/// records to show the pruning win (`bnb_screen` in
+/// `BENCH_sim_engine.json`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MixedScreenStats {
+    /// Mixed cells the full cross-product enumerates
+    /// (Σ over partitions of (|gpus|^K − |gpus|) × |γ grid|).
+    pub brute_cells: u64,
+    /// Partial/full assignment vectors the B&B tree expanded.
+    pub nodes_visited: u64,
+    /// Subtrees cut by the Eq. 4 bound.
+    pub pruned: u64,
+    /// Non-homogeneous leaves scored against the kept set.
+    pub leaves_scored: u64,
+    /// Homogeneous table-building Eq. 4 evaluations
+    /// (|gpus| per (partition, γ) point).
+    pub table_evals: u64,
+    /// Surviving cells re-evaluated through the exact Eq. 4 path.
+    pub full_evals: u64,
+}
+
+/// The Eq. 4 decomposition for one (partition, γ) point, the engine of
+/// the branch-and-bound screen. Pool `i`'s closed-form power depends
+/// only on its own (cutoff, γ, generation) — not on the other pools'
+/// assignments — and total demand is GPU-independent, so any assignment
+/// vector `v` scores `demand / Σ_i power[i][v_i]`, **bit-identical** to
+/// [`analyze_cell`] when the sum runs left-to-right in pool order
+/// (`fleet_tpw_analysis` accumulates exactly that way; pinned by
+/// `prop_mixed_fleet_analyze_is_the_poolwise_eq4_sum`).
+pub struct Eq4PowerTable {
+    /// `power[i][j]`: pool `i`'s Eq. 4 power (W) under generation
+    /// `gpus[j]`, read off the homogeneous-`gpus[j]` fleet report.
+    power: Vec<Vec<f64>>,
+    /// Per-pool minimum over generations — the bound's optimistic tail.
+    min_power: Vec<f64>,
+    /// Fleet demand (tok/s); identical across assignments.
+    demand: f64,
+}
+
+impl Eq4PowerTable {
+    /// Build the table from |gpus| homogeneous [`analyze_cell`] runs —
+    /// one per generation, each yielding every pool's power at once.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        trace: &WorkloadTrace,
+        lambda_rps: f64,
+        cutoffs: &[u32],
+        gpus: &[Gpu],
+        gamma: f64,
+        lbar: LBarPolicy,
+        rho: f64,
+        ttft_slo_s: f64,
+        acct: PowerAccounting,
+    ) -> Self {
+        let k = cutoffs.len();
+        let mut power = vec![vec![0.0; gpus.len()]; k];
+        let mut demand = 0.0;
+        for (j, &g) in gpus.iter().enumerate() {
+            let topo =
+                Topology::partition_with_gpus(cutoffs, &vec![g; k], gamma);
+            // Every pool overrides to `g`, so the default profile is
+            // never consulted for a pool plan (same as the brute path).
+            let report = analyze_cell(
+                &topo,
+                trace,
+                lambda_rps,
+                Arc::new(ManualProfile::for_gpu(g)),
+                lbar,
+                rho,
+                ttft_slo_s,
+                acct,
+            );
+            demand = report.total_demand_tok_s;
+            for (i, pool) in report.pools.iter().enumerate() {
+                power[i][j] = pool.power.0;
+            }
+        }
+        let min_power = power
+            .iter()
+            .map(|row| row.iter().copied().fold(f64::INFINITY, f64::min))
+            .collect();
+        Eq4PowerTable { power, min_power, demand }
+    }
+
+    /// Number of pools (assignment-vector length).
+    pub fn num_pools(&self) -> usize {
+        self.min_power.len()
+    }
+
+    /// Upper bound on Eq. 4 tok/W over **every** completion of the
+    /// partial assignment `digits` (generation indices for pools
+    /// `0..digits.len()`). The bound denominator is the left-to-right
+    /// sum of the chosen powers followed by the per-pool minima — term
+    /// by term, in pool order, exactly like the real evaluation. That
+    /// ordering is what makes the bound admissible *in floating point*:
+    /// each tail term is ≤ the completion's term and `fl(x + y)` is
+    /// monotone in both arguments, so by induction the bound denominator
+    /// is ≤ every completion's denominator bitwise (a precomputed suffix
+    /// sum would not be — re-associating the tail can round the other
+    /// way and over-shoot the true denominator, under-estimating the
+    /// bound and wrongly pruning an optimal subtree).
+    pub fn bound(&self, digits: &[usize]) -> f64 {
+        let mut denom = 0.0;
+        for (i, &j) in digits.iter().enumerate() {
+            denom += self.power[i][j];
+        }
+        for m in &self.min_power[digits.len()..] {
+            denom += m;
+        }
+        self.demand / denom
+    }
+
+    /// Exact Eq. 4 tok/W of a full assignment — bit-identical to the
+    /// [`analyze_cell`] report's `tok_per_watt` for the same vector.
+    pub fn value(&self, digits: &[usize]) -> f64 {
+        debug_assert_eq!(digits.len(), self.num_pools());
+        let mut denom = 0.0;
+        for (i, &j) in digits.iter().enumerate() {
+            denom += self.power[i][j];
+        }
+        self.demand / denom
+    }
+}
+
+/// Decode a base-|gpus| assignment code (pool 0 the most-significant
+/// digit) into the per-pool vector — the same encoding
+/// [`mixed_assignments`] counts through.
+fn decode_assignment(code: u64, k: usize, gpus: &[Gpu]) -> Vec<Gpu> {
+    let n = gpus.len() as u64;
+    let mut v = vec![gpus[0]; k];
+    let mut c = code;
+    for i in (0..k).rev() {
+        v[i] = gpus[(c % n) as usize];
+        c /= n;
+    }
+    v
+}
+
+/// Bounded best-set under the brute-force ranking order: value
+/// descending, ties broken by enumeration order (partition, code, γ) —
+/// the order the stable sort in [`screen_assignments`] would leave them
+/// in. Offering every candidate in any order yields exactly the top
+/// `cap` of that total order, which is what keeps the truncated B&B
+/// ranking a bitwise prefix-selection of the brute ranking.
+struct KeptSet {
+    cap: usize,
+    /// `(exact value, (partition idx, assignment code, γ idx))`.
+    entries: Vec<(f64, (usize, u64, usize))>,
+}
+
+impl KeptSet {
+    /// Prune threshold: a subtree whose bound is strictly below this can
+    /// contain no candidate that enters the set. `None` while the set
+    /// still has room (then nothing may be pruned — even a worst-ranked
+    /// leaf must be admitted).
+    fn threshold(&self) -> Option<f64> {
+        if self.entries.len() < self.cap {
+            None
+        } else {
+            self.entries.get(self.worst_idx()).map(|e| e.0)
+        }
+    }
+
+    /// Index of the entry that ranks last: smallest value; among equal
+    /// values, the latest in enumeration order.
+    fn worst_idx(&self) -> usize {
+        let mut w = 0;
+        for i in 1..self.entries.len() {
+            let (vi, ti) = &self.entries[i];
+            let (vw, tw) = &self.entries[w];
+            match vi.total_cmp(vw) {
+                std::cmp::Ordering::Less => w = i,
+                std::cmp::Ordering::Equal if ti > tw => w = i,
+                _ => {}
+            }
+        }
+        w
+    }
+
+    fn offer(&mut self, value: f64, tag: (usize, u64, usize)) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.entries.len() < self.cap {
+            self.entries.push((value, tag));
+            return;
+        }
+        let w = self.worst_idx();
+        let (vw, tw) = self.entries[w];
+        let enters = match value.total_cmp(&vw) {
+            std::cmp::Ordering::Greater => true,
+            // An equal-value candidate earlier in enumeration order
+            // out-ranks the worst under the stable sort — ties *lose*
+            // only against earlier entries.
+            std::cmp::Ordering::Equal => tag < tw,
+            std::cmp::Ordering::Less => false,
+        };
+        if enters {
+            self.entries[w] = (value, tag);
+        }
+    }
+}
+
+/// Depth-first branch-and-bound over assignment vectors for one
+/// (partition, γ) table: pools assigned most-significant-first so leaves
+/// appear in [`mixed_assignments`] code order, homogeneous leaves
+/// skipped (the per-fleet axis already screens them), subtrees cut when
+/// the admissible bound cannot beat the kept set's worst value.
+#[allow(clippy::too_many_arguments)]
+fn bnb_descend(
+    table: &Eq4PowerTable,
+    n: usize,
+    depth: usize,
+    code: u64,
+    prefix: f64,
+    first_digit: usize,
+    homogeneous: bool,
+    tag: (usize, usize),
+    kept: &mut KeptSet,
+    stats: &mut MixedScreenStats,
+) {
+    let k = table.num_pools();
+    for j in 0..n {
+        let code2 = code * n as u64 + j as u64;
+        // Left-to-right prefix sum — bitwise the same partial denominator
+        // the full evaluation computes.
+        let prefix2 = prefix + table.power[depth][j];
+        let first2 = if depth == 0 { j } else { first_digit };
+        let homog2 = depth == 0 || (homogeneous && j == first2);
+        stats.nodes_visited += 1;
+        if depth + 1 == k {
+            if !homog2 {
+                stats.leaves_scored += 1;
+                kept.offer(table.demand / prefix2, (tag.0, code2, tag.1));
+            }
+            continue;
+        }
+        if let Some(worst) = kept.threshold() {
+            let mut denom = prefix2;
+            for m in &table.min_power[depth + 1..] {
+                denom += m;
+            }
+            // Strict: a bound *equal* to the worst value may still admit
+            // an equal-value leaf earlier in enumeration order.
+            if table.demand / denom < worst {
+                stats.pruned += 1;
+                continue;
+            }
+        }
+        bnb_descend(
+            table, n, depth + 1, code2, prefix2, first2, homog2, tag, kept,
+            stats,
+        );
+    }
+}
+
+/// Stage A over the mixed per-pool assignment space — the heterogeneous
+/// screen behind [`GpuAxis::Mixed`]. [`MixedScreen::BruteForce`]
+/// enumerates the full cross-product through [`screen_assignments`];
+/// [`MixedScreen::BranchAndBound`] (the default) searches partial
+/// assignment vectors with the admissible Eq. 4 bound, keeps the best
+/// `keep` cells, and re-evaluates the survivors through the exact
+/// [`analyze_cell`] path — so its output is bitwise the brute-force
+/// ranking restricted to the top `keep` mixed cells (bit-for-bit equal
+/// whenever `keep` covers the grid, e.g. every K ≤ 3 instance under the
+/// default budget). Returns the best-first results plus work counters.
+#[allow(clippy::too_many_arguments)]
+pub fn screen_mixed(
+    trace: &WorkloadTrace,
+    lambda_rps: f64,
+    partitions: &[Vec<u32>],
+    gpus: &[Gpu],
+    gammas: &[f64],
+    lbar: LBarPolicy,
+    rho: f64,
+    ttft_slo_s: f64,
+    acct: PowerAccounting,
+    mode: MixedScreen,
+    keep: usize,
+) -> (Vec<PartitionOptResult>, MixedScreenStats) {
+    let n = gpus.len();
+    let mut stats = MixedScreenStats::default();
+    for cuts in partitions {
+        let cells = (n as u64).pow(cuts.len() as u32) - n as u64;
+        stats.brute_cells += cells * gammas.len() as u64;
+    }
+    if n < 2 || partitions.is_empty() || gammas.is_empty() {
+        return (Vec::new(), stats);
+    }
+    if mode == MixedScreen::BruteForce {
+        let cells = mixed_assignments(partitions, gpus);
+        stats.leaves_scored = stats.brute_cells;
+        stats.full_evals = stats.brute_cells;
+        let out = screen_assignments(
+            trace, lambda_rps, &cells, gammas, lbar, rho, ttft_slo_s, acct,
+        );
+        return (out, stats);
+    }
+    let mut kept = KeptSet { cap: keep, entries: Vec::new() };
+    for (pi, cuts) in partitions.iter().enumerate() {
+        for (gi, &gamma) in gammas.iter().enumerate() {
+            let table = Eq4PowerTable::new(
+                trace, lambda_rps, cuts, gpus, gamma, lbar, rho, ttft_slo_s,
+                acct,
+            );
+            stats.table_evals += n as u64;
+            bnb_descend(
+                &table, n, 0, 0, 0.0, 0, true, (pi, gi), &mut kept,
+                &mut stats,
+            );
+        }
+    }
+    // Survivors re-enter the exact Eq. 4 path in brute enumeration order
+    // (partition, code, γ) so the final stable sort reproduces the
+    // brute-force ranking bit for bit.
+    let mut tags = kept.entries;
+    tags.sort_by(|a, b| a.1.cmp(&b.1));
+    let mut out = Vec::with_capacity(tags.len());
+    for (_, (pi, code, gi)) in tags {
+        let cuts = &partitions[pi];
+        let gamma = gammas[gi];
+        let v = decode_assignment(code, cuts.len(), gpus);
+        let report = analyze_cell(
+            &Topology::partition_with_gpus(cuts, &v, gamma),
+            trace,
+            lambda_rps,
+            Arc::new(ManualProfile::for_gpu(v[0])),
+            lbar,
+            rho,
+            ttft_slo_s,
+            acct,
+        );
+        stats.full_evals += 1;
+        out.push(PartitionOptResult {
+            cutoffs: cuts.clone(),
+            gpus: v,
+            gamma,
+            report,
+        });
+    }
+    out.sort_by(|a, b| {
+        b.report.tok_per_watt.0.total_cmp(&a.report.tok_per_watt.0)
+    });
+    (out, stats)
 }
 
 /// Each explicit assignment vector paired with every partition whose
@@ -629,32 +1013,50 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
             });
         }
     }
-    let hetero = match &cfg.gpu_axis {
+    let hetero: Vec<PartitionOptResult> = match &cfg.gpu_axis {
         GpuAxis::Homogeneous | GpuAxis::Budget(_) => Vec::new(),
-        GpuAxis::Mixed => mixed_assignments(&partitions, &cfg.gpus),
+        GpuAxis::Mixed => {
+            screen_mixed(
+                workload,
+                cfg.gen.lambda_rps,
+                &partitions,
+                &cfg.gpus,
+                &cfg.gammas,
+                cfg.lbar,
+                cfg.rho,
+                cfg.slo.ttft_p99_s,
+                cfg.acct,
+                cfg.mixed_screen,
+                cfg.mixed_keep,
+            )
+            .0
+        }
         GpuAxis::Explicit(vectors) => {
-            explicit_assignments(&partitions, vectors)
+            let pairs = explicit_assignments(&partitions, vectors);
+            if pairs.is_empty() {
+                Vec::new()
+            } else {
+                screen_assignments(
+                    workload,
+                    cfg.gen.lambda_rps,
+                    &pairs,
+                    &cfg.gammas,
+                    cfg.lbar,
+                    cfg.rho,
+                    cfg.slo.ttft_p99_s,
+                    cfg.acct,
+                )
+            }
         }
     };
-    if !hetero.is_empty() {
-        for r in screen_assignments(
-            workload,
-            cfg.gen.lambda_rps,
-            &hetero,
-            &cfg.gammas,
-            cfg.lbar,
-            cfg.rho,
-            cfg.slo.ttft_p99_s,
-            cfg.acct,
-        ) {
-            cells.push(ScreenedCell {
-                gpu: r.gpus[0],
-                cutoffs: r.cutoffs,
-                gpus: r.gpus,
-                gamma: r.gamma,
-                analytic: r.report,
-            });
-        }
+    for r in hetero {
+        cells.push(ScreenedCell {
+            gpu: r.gpus[0],
+            cutoffs: r.cutoffs,
+            gpus: r.gpus,
+            gamma: r.gamma,
+            analytic: r.report,
+        });
     }
     if let GpuAxis::Budget(b) = &cfg.gpu_axis {
         cells.extend(budget_cells(workload, cfg, &partitions, *b));
@@ -947,6 +1349,181 @@ mod tests {
         assert!(w.outcome.completed > 0);
         let rs = report.rowset();
         assert!(rs.to_text().contains("2048|8192|65536"));
+    }
+
+    /// Small deterministic generator for the admissibility sampling —
+    /// the bound proof is order-theoretic, the test just probes it.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self, modulo: usize) -> usize {
+            self.0 = self
+                .0
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            ((self.0 >> 11) % modulo as u64) as usize
+        }
+    }
+
+    #[test]
+    fn eq4_table_value_matches_analyze_cell_bitwise() {
+        let trace = azure_conversations();
+        let cuts = vec![4096, 16384, LONG_CTX];
+        let gpus = [Gpu::H100, Gpu::H200, Gpu::B200];
+        let table = Eq4PowerTable::new(
+            &trace,
+            120.0,
+            &cuts,
+            &gpus,
+            2.0,
+            LBarPolicy::Window,
+            0.85,
+            1e3,
+            PowerAccounting::PerGpu,
+        );
+        let mut rng = Lcg(17);
+        for _ in 0..10 {
+            let digits: Vec<usize> =
+                (0..cuts.len()).map(|_| rng.next(gpus.len())).collect();
+            let v: Vec<Gpu> = digits.iter().map(|&j| gpus[j]).collect();
+            let report = analyze_cell(
+                &Topology::partition_with_gpus(&cuts, &v, 2.0),
+                &trace,
+                120.0,
+                Arc::new(ManualProfile::for_gpu(v[0])),
+                LBarPolicy::Window,
+                0.85,
+                1e3,
+                PowerAccounting::PerGpu,
+            );
+            assert_eq!(
+                table.value(&digits).to_bits(),
+                report.tok_per_watt.0.to_bits(),
+                "{v:?}: the Eq. 4 table must reproduce analyze_cell \
+                 bit for bit"
+            );
+        }
+    }
+
+    #[test]
+    fn eq4_bound_is_admissible_on_random_partial_assignments() {
+        let trace = azure_conversations();
+        let cuts = vec![2048, 8192, LONG_CTX];
+        let gpus = [Gpu::H100, Gpu::H200, Gpu::B200];
+        let table = Eq4PowerTable::new(
+            &trace,
+            120.0,
+            &cuts,
+            &gpus,
+            1.0,
+            LBarPolicy::Window,
+            0.85,
+            1e3,
+            PowerAccounting::PerGpu,
+        );
+        let k = cuts.len();
+        let n = gpus.len();
+        let mut rng = Lcg(99);
+        for _ in 0..40 {
+            let depth = rng.next(k + 1);
+            let mut digits: Vec<usize> =
+                (0..depth).map(|_| rng.next(n)).collect();
+            let bound = table.bound(&digits);
+            // Enumerate every completion of the partial assignment and
+            // check the bound dominates each exact value (bitwise ≥,
+            // not within-epsilon — pruning correctness is exact).
+            let tail = k - depth;
+            for code in 0..(n as u64).pow(tail as u32) {
+                let mut c = code;
+                digits.truncate(depth);
+                let mut suffix = vec![0usize; tail];
+                for slot in suffix.iter_mut().rev() {
+                    *slot = (c % n as u64) as usize;
+                    c /= n as u64;
+                }
+                digits.extend_from_slice(&suffix);
+                let value = table.value(&digits);
+                assert!(
+                    bound >= value,
+                    "bound {bound} < completion value {value} at \
+                     depth {depth}, digits {digits:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bnb_matches_brute_force_bitwise_on_a_small_grid() {
+        let trace = azure_conversations();
+        let partitions = vec![
+            vec![4096, LONG_CTX],
+            vec![2048, 8192, LONG_CTX],
+        ];
+        let gpus = [Gpu::H100, Gpu::B200];
+        let gammas = [1.0, 2.0];
+        let run = |mode| {
+            screen_mixed(
+                &trace,
+                120.0,
+                &partitions,
+                &gpus,
+                &gammas,
+                LBarPolicy::Window,
+                0.85,
+                1e3,
+                PowerAccounting::PerGpu,
+                mode,
+                64,
+            )
+        };
+        let (brute, bstats) = run(MixedScreen::BruteForce);
+        let (bnb, nstats) = run(MixedScreen::BranchAndBound);
+        assert_eq!(bstats.brute_cells, 2 * 2 + 6 * 2); // (2²−2)·2 + (2³−2)·2
+        assert_eq!(nstats.brute_cells, bstats.brute_cells);
+        assert_eq!(brute.len(), bnb.len());
+        for (a, b) in brute.iter().zip(&bnb) {
+            assert_eq!(a.cutoffs, b.cutoffs);
+            assert_eq!(a.gpus, b.gpus);
+            assert_eq!(a.gamma.to_bits(), b.gamma.to_bits());
+            assert_eq!(
+                a.report.tok_per_watt.0.to_bits(),
+                b.report.tok_per_watt.0.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn bnb_keep_truncation_is_a_prefix_of_the_brute_ranking() {
+        let trace = azure_conversations();
+        let partitions = vec![vec![2048, 8192, LONG_CTX]];
+        let gpus = [Gpu::H100, Gpu::H200, Gpu::B200];
+        let gammas = [1.0];
+        let run = |mode, keep| {
+            screen_mixed(
+                &trace,
+                120.0,
+                &partitions,
+                &gpus,
+                &gammas,
+                LBarPolicy::Window,
+                0.85,
+                1e3,
+                PowerAccounting::PerGpu,
+                mode,
+                keep,
+            )
+            .0
+        };
+        let brute = run(MixedScreen::BruteForce, usize::MAX);
+        assert_eq!(brute.len(), 27 - 3);
+        let kept = run(MixedScreen::BranchAndBound, 5);
+        assert_eq!(kept.len(), 5);
+        for (a, b) in brute.iter().zip(&kept) {
+            assert_eq!(a.gpus, b.gpus);
+            assert_eq!(
+                a.report.tok_per_watt.0.to_bits(),
+                b.report.tok_per_watt.0.to_bits()
+            );
+        }
     }
 
     #[test]

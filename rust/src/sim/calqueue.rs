@@ -1,0 +1,380 @@
+//! Calendar (bucket) priority queue — the event core's fast scheduler.
+//!
+//! A classic calendar queue (Brown 1988) hashes each pending item into a
+//! "day" bucket by `floor(t / width) mod n_buckets` and serves days in
+//! increasing order, giving amortized O(1) push/pop when the bucket
+//! width tracks the mean inter-event gap — versus O(log n) per
+//! operation for a binary heap. The simulation engine derives the
+//! initial width from the trace's mean inter-arrival gap and the queue
+//! re-derives it from the live population on every lazy resize.
+//!
+//! **Total-order contract**: [`CalendarItem::order`] must be a strict
+//! total order whose *primary* key is [`CalendarItem::time`] (items with
+//! smaller time must order `Less`). Under that contract [`CalendarQueue`]
+//! pops items in exactly the same sequence as a binary heap over the
+//! same order — the engine's `QueueMode::BinaryHeap` oracle asserts this
+//! bit-for-bit on random traces.
+//!
+//! Why pops are exact and not merely approximate: `cur_tick` is
+//! maintained as a lower bound on the year (`floor(t / width)`) of every
+//! queued item — a push whose year precedes `cur_tick` rewinds it. All
+//! items of one year share one bucket, and any item of a later year has
+//! strictly greater time (division by a positive width is monotone), so
+//! scanning years upward from `cur_tick` and taking the min-by-`order`
+//! of the first non-empty year yields the global minimum.
+
+use std::cmp::Ordering;
+
+/// An item schedulable on a [`CalendarQueue`].
+pub trait CalendarItem {
+    /// The priority timestamp. Must be finite.
+    fn time(&self) -> f64;
+
+    /// Strict total order used to rank items, ascending (the queue pops
+    /// the least item first). Must refine `time`: if
+    /// `self.time() < other.time()` under `f64::total_cmp` this must
+    /// return [`Ordering::Less`].
+    fn order(&self, other: &Self) -> Ordering;
+}
+
+const MIN_BUCKETS: usize = 16;
+const MAX_BUCKETS: usize = 1 << 20;
+
+/// Bucketed event queue with lazy load-driven resize.
+#[derive(Debug)]
+pub struct CalendarQueue<T> {
+    buckets: Vec<Vec<T>>,
+    /// Year width in time units; finite and positive by construction.
+    width: f64,
+    len: usize,
+    /// Lower bound on the year index of every queued item.
+    cur_tick: f64,
+}
+
+impl<T: CalendarItem> CalendarQueue<T> {
+    /// Queue with an explicit bucket width (time units per year) and a
+    /// capacity hint sizing the initial bucket array. Non-finite or
+    /// non-positive widths fall back to 1.0.
+    pub fn with_width(width: f64, capacity_hint: usize) -> Self {
+        let width = if width.is_finite() && width > 0.0 { width } else { 1.0 };
+        let n = capacity_hint
+            .max(1)
+            .next_power_of_two()
+            .clamp(MIN_BUCKETS, MAX_BUCKETS);
+        CalendarQueue {
+            buckets: (0..n).map(|_| Vec::new()).collect(),
+            width,
+            len: 0,
+            cur_tick: 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Year index of a timestamp under the current width.
+    fn tick_of(&self, t: f64) -> f64 {
+        (t / self.width).floor()
+    }
+
+    /// Bucket holding a year (years wrap around the bucket array).
+    fn bucket_index(&self, tick: f64) -> usize {
+        let n = self.buckets.len();
+        (tick.rem_euclid(n as f64) as usize).min(n - 1)
+    }
+
+    pub fn push(&mut self, item: T) {
+        let t = item.time();
+        debug_assert!(t.is_finite(), "calendar queue requires finite times");
+        let tick = self.tick_of(t);
+        // Maintain the invariant: cur_tick never exceeds any queued
+        // item's year (a push into the past rewinds the calendar).
+        if tick < self.cur_tick {
+            self.cur_tick = tick;
+        }
+        let idx = self.bucket_index(tick);
+        self.buckets[idx].push(item);
+        self.len += 1;
+        if self.len > 2 * self.buckets.len()
+            && self.buckets.len() < MAX_BUCKETS
+        {
+            let grown = (self.buckets.len() * 2).min(MAX_BUCKETS);
+            self.rebuild(grown);
+        }
+    }
+
+    /// Pop the least item under [`CalendarItem::order`].
+    pub fn pop(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        // Serve years in increasing order from the lower bound. After a
+        // full wrap of empty days (possible when the population spread
+        // far exceeds buckets × width), fall back to a direct scan.
+        let n = self.buckets.len();
+        for _ in 0..n {
+            let idx = self.bucket_index(self.cur_tick);
+            if let Some(i) = self.min_of_year(idx) {
+                return Some(self.take(idx, i));
+            }
+            self.cur_tick += 1.0;
+        }
+        let (idx, i) = self
+            .global_min()
+            .expect("non-empty queue has a global minimum");
+        self.cur_tick = self.tick_of(self.buckets[idx][i].time());
+        Some(self.take(idx, i))
+    }
+
+    /// Index of the min-by-`order` item of year `cur_tick` inside its
+    /// bucket, or `None` when the year is empty. Items of other years
+    /// sharing the bucket (wrap-around collisions) are skipped.
+    fn min_of_year(&self, idx: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, it) in self.buckets[idx].iter().enumerate() {
+            if self.tick_of(it.time()) <= self.cur_tick {
+                best = match best {
+                    Some(b)
+                        if self.buckets[idx][b].order(it)
+                            != Ordering::Greater =>
+                    {
+                        Some(b)
+                    }
+                    _ => Some(i),
+                };
+            }
+        }
+        best
+    }
+
+    /// (bucket, index) of the global min-by-`order` item.
+    fn global_min(&self) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize)> = None;
+        for (idx, bucket) in self.buckets.iter().enumerate() {
+            for (i, it) in bucket.iter().enumerate() {
+                best = match best {
+                    Some((bidx, bi))
+                        if self.buckets[bidx][bi].order(it)
+                            != Ordering::Greater =>
+                    {
+                        Some((bidx, bi))
+                    }
+                    _ => Some((idx, i)),
+                };
+            }
+        }
+        best
+    }
+
+    fn take(&mut self, idx: usize, i: usize) -> T {
+        let item = self.buckets[idx].swap_remove(i);
+        self.len -= 1;
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 4
+        {
+            let shrunk = (self.buckets.len() / 2).max(MIN_BUCKETS);
+            self.rebuild(shrunk);
+        }
+        item
+    }
+
+    /// Drain into `new_n` buckets, re-deriving the width from the live
+    /// population's mean gap and restarting the calendar at its
+    /// earliest queued year.
+    fn rebuild(&mut self, new_n: usize) {
+        let items: Vec<T> = self
+            .buckets
+            .iter_mut()
+            .flat_map(|b| b.drain(..))
+            .collect();
+        if items.len() >= 2 {
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for it in &items {
+                let t = it.time();
+                lo = lo.min(t);
+                hi = hi.max(t);
+            }
+            let w = (hi - lo) / (items.len() - 1) as f64;
+            if w.is_finite() && w > 0.0 {
+                self.width = w;
+            }
+        }
+        self.buckets = (0..new_n).map(|_| Vec::new()).collect();
+        self.cur_tick = items
+            .iter()
+            .map(|it| self.tick_of(it.time()))
+            .fold(f64::INFINITY, f64::min);
+        if !self.cur_tick.is_finite() {
+            self.cur_tick = 0.0;
+        }
+        for it in items {
+            let idx = self.bucket_index(self.tick_of(it.time()));
+            self.buckets[idx].push(it);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BinaryHeap;
+
+    #[derive(Debug, Clone, Copy, PartialEq)]
+    struct Item {
+        t: f64,
+        seq: u64,
+    }
+
+    impl CalendarItem for Item {
+        fn time(&self) -> f64 {
+            self.t
+        }
+        fn order(&self, other: &Self) -> Ordering {
+            self.t
+                .total_cmp(&other.t)
+                .then_with(|| self.seq.cmp(&other.seq))
+        }
+    }
+
+    /// Max-heap wrapper popping the least (t, seq) — the oracle.
+    #[derive(Debug, PartialEq)]
+    struct Rev(Item);
+    impl Eq for Rev {}
+    impl PartialOrd for Rev {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Rev {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other.0.order(&self.0)
+        }
+    }
+
+    /// Tiny deterministic LCG so tests need no external rand crate.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self
+                .0
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            self.0 >> 11
+        }
+        fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+            lo + (self.next() as f64 / (1u64 << 53) as f64) * (hi - lo)
+        }
+    }
+
+    #[test]
+    fn drains_in_sorted_order() {
+        let mut q = CalendarQueue::with_width(0.5, 8);
+        let mut rng = Lcg(42);
+        for seq in 0..500u64 {
+            q.push(Item { t: rng.f64_in(0.0, 100.0), seq });
+        }
+        let mut prev: Option<Item> = None;
+        let mut count = 0;
+        while let Some(it) = q.pop() {
+            if let Some(p) = prev {
+                assert!(p.order(&it) == Ordering::Less, "{p:?} !< {it:?}");
+            }
+            prev = Some(it);
+            count += 1;
+        }
+        assert_eq!(count, 500);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop_matches_binary_heap_bitwise() {
+        for seed in [1u64, 7, 1234, 99999] {
+            let mut rng = Lcg(seed);
+            let mut q = CalendarQueue::with_width(
+                rng.f64_in(1e-3, 2.0),
+                rng.next() as usize % 64 + 1,
+            );
+            let mut h: BinaryHeap<Rev> = BinaryHeap::new();
+            let mut clock = 0.0f64;
+            let mut seq = 0u64;
+            for _ in 0..3000 {
+                if rng.next() % 3 != 0 || q.is_empty() {
+                    // Mostly forward-dated pushes, occasionally at or
+                    // just after the last popped time (ties on t).
+                    let t = if rng.next() % 10 == 0 {
+                        clock
+                    } else {
+                        clock + rng.f64_in(0.0, 5.0)
+                    };
+                    q.push(Item { t, seq });
+                    h.push(Rev(Item { t, seq }));
+                    seq += 1;
+                } else {
+                    let a = q.pop().unwrap();
+                    let b = h.pop().unwrap().0;
+                    assert_eq!(
+                        (a.t.to_bits(), a.seq),
+                        (b.t.to_bits(), b.seq),
+                        "seed {seed}"
+                    );
+                    clock = a.t;
+                }
+            }
+            while let Some(a) = q.pop() {
+                let b = h.pop().unwrap().0;
+                assert_eq!((a.t.to_bits(), a.seq), (b.t.to_bits(), b.seq));
+            }
+            assert!(h.pop().is_none());
+        }
+    }
+
+    #[test]
+    fn resize_churn_preserves_contents() {
+        // Push far more items than buckets (forcing grows), then drain
+        // (forcing shrinks), across a huge time spread that defeats the
+        // initial width and exercises the direct-scan fallback.
+        let mut q = CalendarQueue::with_width(1.0, 4);
+        let mut rng = Lcg(3);
+        let mut want: Vec<(u64, u64)> = Vec::new();
+        for seq in 0..2000u64 {
+            let t = rng.f64_in(0.0, 1e6);
+            want.push((t.to_bits(), seq));
+            q.push(Item { t, seq });
+        }
+        want.sort_by(|a, b| {
+            f64::from_bits(a.0)
+                .total_cmp(&f64::from_bits(b.0))
+                .then_with(|| a.1.cmp(&b.1))
+        });
+        let got: Vec<(u64, u64)> =
+            std::iter::from_fn(|| q.pop().map(|i| (i.t.to_bits(), i.seq)))
+                .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn degenerate_widths_fall_back_sanely() {
+        for w in [f64::NAN, 0.0, -3.0, f64::INFINITY] {
+            let mut q = CalendarQueue::with_width(w, 4);
+            q.push(Item { t: 2.0, seq: 0 });
+            q.push(Item { t: 1.0, seq: 1 });
+            assert_eq!(q.pop().unwrap().seq, 1);
+            assert_eq!(q.pop().unwrap().seq, 0);
+        }
+    }
+
+    #[test]
+    fn identical_times_pop_in_seq_order() {
+        let mut q = CalendarQueue::with_width(0.25, 8);
+        for seq in [5u64, 1, 9, 0, 3] {
+            q.push(Item { t: 7.5, seq });
+        }
+        let got: Vec<u64> =
+            std::iter::from_fn(|| q.pop().map(|i| i.seq)).collect();
+        assert_eq!(got, vec![0, 1, 3, 5, 9]);
+    }
+}

@@ -121,7 +121,8 @@ impl DispatchPolicy for JoinShortestQueue {
         _req: &ServeRequest,
         state: &FleetState,
     ) -> usize {
-        argmin_by_key(groups, |g| state.pools[pool].groups[g].in_flight())
+        let p = state.pool(pool);
+        argmin_by_key(groups, |g| p.in_flight(g))
     }
 }
 
@@ -145,10 +146,8 @@ impl DispatchPolicy for LeastKvLoad {
         state: &FleetState,
     ) -> usize {
         // min over used blocks == max over free blocks.
-        argmin_by_key(groups, |g| {
-            let gl = &state.pools[pool].groups[g];
-            u32::MAX - gl.free_blocks
-        })
+        let p = state.pool(pool);
+        argmin_by_key(groups, |g| u32::MAX - p.group(g).free_blocks)
     }
 }
 
@@ -243,13 +242,14 @@ impl DispatchPolicy for PowerAware {
         req: &ServeRequest,
         state: &FleetState,
     ) -> usize {
-        let p = &state.pools[pool];
+        let p = state.pool(pool);
         // Hottest group whose batch still has headroom and whose queue is
         // empty (joining it batches immediately instead of waiting).
         let mut best: Option<(usize, usize)> = None; // (active, group)
         for g in 0..groups as usize {
-            let gl = &p.groups[g];
-            if gl.queued == 0 && (gl.active as u32) < p.n_max && gl.active > 0 {
+            let gl = p.group(g);
+            if gl.queued == 0 && (gl.active as u32) < p.n_max() && gl.active > 0
+            {
                 if let Some(bound) = self.max_delay_s {
                     assert!(
                         !self.pools.is_empty(),
@@ -260,7 +260,7 @@ impl DispatchPolicy for PowerAware {
                     // Packing this group would already breach the TTFT
                     // guard — skip it, even though it is the most
                     // energy-efficient landing spot.
-                    if self.projected_delay_s(pool, gl, req) > bound {
+                    if self.projected_delay_s(pool, &gl, req) > bound {
                         continue;
                     }
                 }
@@ -280,7 +280,7 @@ impl DispatchPolicy for PowerAware {
         // Everyone is cold, saturated or guard-rejected: fall back to
         // shortest queue so neither saturation nor the TTFT guard turns
         // into unbounded skew.
-        argmin_by_key(groups, |g| p.groups[g].in_flight())
+        argmin_by_key(groups, |g| p.in_flight(g))
     }
 }
 
@@ -336,27 +336,25 @@ mod tests {
     }
 
     fn state(loads: &[(usize, usize, u32)]) -> FleetState {
-        FleetState {
-            pools: vec![PoolLoad {
-                window_tokens: 8192,
-                n_max: 16,
-                groups: loads
-                    .iter()
-                    .map(|&(queued, active, free_blocks)| GroupLoad {
-                        queued,
-                        active,
-                        free_blocks,
-                        used_blocks: 2048 - free_blocks,
-                    })
-                    .collect(),
-            }],
-        }
+        FleetState::from_pools(vec![PoolLoad {
+            window_tokens: 8192,
+            n_max: 16,
+            groups: loads
+                .iter()
+                .map(|&(queued, active, free_blocks)| GroupLoad {
+                    queued,
+                    active,
+                    free_blocks,
+                    used_blocks: 2048 - free_blocks,
+                })
+                .collect(),
+        }])
     }
 
     /// Static policies must ignore the state entirely; hand them the
     /// emptiest one possible to prove it.
     fn no_state() -> FleetState {
-        FleetState { pools: Vec::new() }
+        FleetState::empty()
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The event-driven simulation core: one binary-heap event queue, one
+//! The event-driven simulation core: one calendar event queue, one
 //! virtual clock, all groups of all pools advancing concurrently.
 //!
 //! Three event kinds drive the engine:
@@ -24,15 +24,30 @@
 //! bit-for-bit under round-robin dispatch (asserted by
 //! `tests/sim_replay.rs`).
 //!
-//! **Live state, maintained incrementally**: the engine owns one
-//! [`FleetState`] for the whole run, initialized to the all-idle fleet
-//! and mutated in place — after every event only the *touched* group's
-//! [`GroupLoad`] is refreshed from its batcher, so a routing/dispatch
-//! decision costs zero allocations regardless of fleet size. (The
-//! pre-refactor engine re-snapshotted every group of every pool on each
-//! arrival — O(total groups) allocations per arrival, the blocker for
-//! million-arrival λ=1000 sweeps.) That legacy behavior is preserved as
-//! [`StateMode::RebuildPerArrival`] — it is the verification oracle
+//! **Event queue**: pending events live in a calendar/bucket queue
+//! ([`super::calqueue`]) whose bucket width is seeded from the trace's
+//! mean inter-arrival gap and re-derived on lazy resizes — amortized
+//! O(1) push/pop versus the O(log n) binary heap it replaced, the
+//! difference that dominates at λ ≥ 1000. The heap survives behind
+//! [`QueueMode::BinaryHeap`] as the bit-for-bit replay oracle (both
+//! orders are the same strict total order, so the pop sequences are
+//! identical — property-tested across dispatch policies on random
+//! traces), exactly as [`StateMode::RebuildPerArrival`] was kept when
+//! the incremental live state replaced per-arrival snapshots.
+//!
+//! **Struct-of-arrays fleet state**: the hot per-group fields — local
+//! clock, busy flag, queue depth, batch occupancy, free/used KV blocks —
+//! live in contiguous lanes of a [`GroupSimState`], indexed by the
+//! flattened (pool, group) lane id. Dispatch scans (`argmin` over a
+//! pool's groups) and per-event refreshes walk a few cache lines instead
+//! of pointer-chasing per-group structs; the cold machinery (batcher,
+//! energy meter, metrics) stays in per-group [`GroupSim`] structs that
+//! only the owning event touches. Routers and policies read the lanes
+//! through [`FleetState::pool`]'s borrowed [`PoolView`], still at zero
+//! allocation cost. The live state is **maintained incrementally**: after
+//! every event only the touched group's lanes are refreshed. The
+//! pre-refactor rebuild-a-snapshot-per-arrival behavior is preserved as
+//! [`StateMode::RebuildPerArrival`] — the verification oracle
 //! (`tests/properties.rs` asserts both modes replay bit-for-bit on
 //! random traces) and the "before" baseline of `bench_sim_engine` —
 //! and [`EngineOptions::validate_state`] additionally cross-checks the
@@ -49,6 +64,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use super::calqueue::{CalendarItem, CalendarQueue};
 use super::dispatch::{DispatchPolicy, RoundRobin};
 use super::fleetsim::GroupSimConfig;
 use crate::router::{HomogeneousRouter, Router};
@@ -60,6 +76,10 @@ use crate::serve::request::ServeRequest;
 use crate::workload::Request;
 
 /// Live load of one group, as routers and dispatch policies see it.
+/// Inside the engine the four fields live in the struct-of-arrays lanes
+/// of [`GroupSimState`]; this is the assembled per-group value that
+/// [`PoolView::group`] returns and that test/bench constructors build
+/// fleet states from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GroupLoad {
     /// Requests waiting in the group's FIFO queue.
@@ -79,7 +99,9 @@ impl GroupLoad {
     }
 }
 
-/// Live load of one pool.
+/// Load of one pool in assembled (array-of-structs) form — the builder
+/// type for [`FleetState::from_pools`] and the shape snapshots are
+/// described in. Policies read live load through [`PoolView`] instead.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PoolLoad {
     pub window_tokens: u32,
@@ -88,18 +110,117 @@ pub struct PoolLoad {
     pub groups: Vec<GroupLoad>,
 }
 
-impl PoolLoad {
+/// Static per-pool metadata of the struct-of-arrays fleet state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolMeta {
+    pub window_tokens: u32,
+    /// Per-group concurrency limit (Eq. 3's n_max for this window).
+    pub n_max: u32,
+}
+
+/// The hot per-group simulation state, struct-of-arrays: one contiguous
+/// lane per field, indexed by the flattened (pool, group) lane id
+/// (pool-major, group-minor — pool p's groups occupy
+/// `base[p]..base[p+1]`). `clock`/`busy` are the engine's own scheduling
+/// state; the four load lanes are what routing and dispatch read.
+#[derive(Debug, Clone, Default)]
+pub struct GroupSimState {
+    /// Local group clock: last boundary or fast-forward time.
+    pub(crate) clock: Vec<f64>,
+    /// A step or wake event is scheduled for this group.
+    pub(crate) busy: Vec<bool>,
+    pub(crate) queued: Vec<usize>,
+    pub(crate) active: Vec<usize>,
+    pub(crate) free_blocks: Vec<u32>,
+    pub(crate) used_blocks: Vec<u32>,
+}
+
+/// The live load of the whole fleet, handed to
+/// [`Router::route_live`](crate::router::Router::route_live) and
+/// [`DispatchPolicy::pick_group`] at every arrival.
+///
+/// The engine maintains exactly one of these per run, *incrementally*:
+/// after each event only the touched group's lanes are refreshed, so
+/// reading it is a borrow, never an allocation. Storage is
+/// struct-of-arrays ([`GroupSimState`]) so a dispatch scan over one
+/// pool's groups is a walk over contiguous lanes; [`Self::pool`] exposes
+/// a pool's slice of each lane as a [`PoolView`]. It is plain data —
+/// clone it if a policy needs to hold load across decisions.
+///
+/// Equality compares the load lanes (and pool metadata) only: the
+/// `clock`/`busy` scheduling lanes are engine-internal and a snapshot
+/// rebuilt from batcher state cannot know them.
+#[derive(Debug, Clone)]
+pub struct FleetState {
+    pub(crate) meta: Vec<PoolMeta>,
+    /// Lane offsets: pool p's groups are lanes `base[p]..base[p+1]`.
+    pub(crate) base: Vec<usize>,
+    pub(crate) s: GroupSimState,
+}
+
+impl PartialEq for FleetState {
+    fn eq(&self, other: &Self) -> bool {
+        self.meta == other.meta
+            && self.base == other.base
+            && self.s.queued == other.s.queued
+            && self.s.active == other.s.active
+            && self.s.free_blocks == other.s.free_blocks
+            && self.s.used_blocks == other.s.used_blocks
+    }
+}
+impl Eq for FleetState {}
+
+/// One pool's slice of the fleet's struct-of-arrays load lanes —
+/// what [`FleetState::pool`] hands a router or dispatch policy.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolView<'a> {
+    meta: PoolMeta,
+    queued: &'a [usize],
+    active: &'a [usize],
+    free_blocks: &'a [u32],
+    used_blocks: &'a [u32],
+}
+
+impl PoolView<'_> {
+    pub fn window_tokens(&self) -> u32 {
+        self.meta.window_tokens
+    }
+
+    /// Per-group concurrency limit (Eq. 3's n_max for this window).
+    pub fn n_max(&self) -> u32 {
+        self.meta.n_max
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.queued.len()
+    }
+
+    /// Assemble one group's load from the lanes.
+    pub fn group(&self, g: usize) -> GroupLoad {
+        GroupLoad {
+            queued: self.queued[g],
+            active: self.active[g],
+            free_blocks: self.free_blocks[g],
+            used_blocks: self.used_blocks[g],
+        }
+    }
+
+    /// Queued + admitted of one group — the JSQ load signal.
+    pub fn in_flight(&self, g: usize) -> usize {
+        self.queued[g] + self.active[g]
+    }
+
     /// Total queued + admitted across the pool's groups.
     pub fn in_flight_total(&self) -> usize {
-        self.groups.iter().map(GroupLoad::in_flight).sum()
+        self.queued.iter().sum::<usize>() + self.active.iter().sum::<usize>()
     }
 
     /// Mean queued + admitted per group.
     pub fn backlog_per_group(&self) -> f64 {
-        if self.groups.is_empty() {
+        if self.queued.is_empty() {
             0.0
         } else {
-            self.in_flight_total() as f64 / self.groups.len() as f64
+            self.in_flight_total() as f64 / self.queued.len() as f64
         }
     }
 
@@ -109,69 +230,131 @@ impl PoolLoad {
     /// congested, and comparing raw in-flight counts across pools is
     /// biased because n_max differs per window (Eq. 3).
     pub fn queued_per_group(&self) -> f64 {
-        if self.groups.is_empty() {
+        if self.queued.is_empty() {
             0.0
         } else {
-            self.groups.iter().map(|g| g.queued).sum::<usize>() as f64
-                / self.groups.len() as f64
+            self.queued.iter().sum::<usize>() as f64 / self.queued.len() as f64
         }
     }
-}
-
-/// The live load of the whole fleet, handed to
-/// [`Router::route_live`](crate::router::Router::route_live) and
-/// [`DispatchPolicy::pick_group`] at every arrival.
-///
-/// The engine maintains exactly one of these per run, *incrementally*:
-/// after each event only the touched group's [`GroupLoad`] is refreshed,
-/// so reading it is a borrow, never an allocation. It is plain data —
-/// clone it if a policy needs to hold load across decisions.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct FleetState {
-    pub pools: Vec<PoolLoad>,
 }
 
 impl FleetState {
     /// The all-idle state of a freshly configured fleet: empty queues,
     /// empty batches, every paged-KV block on the free list. This is
-    /// what the engine's live state starts from when a load-aware
-    /// consumer will read it. (Paths where nobody may read the state —
-    /// arrival-static pre-assignment, static-only sequential runs —
-    /// instead get an *empty* canary state, so a policy that falsely
-    /// declares itself static and reads anyway panics on the first
-    /// index instead of silently acting on stale load.)
+    /// what the engine's live state starts from. (Paths where nobody may
+    /// read the state — arrival-static pre-assignment, static-only
+    /// sequential runs — instead hand consumers an [`Self::empty`]
+    /// canary, so a policy that falsely declares itself static and reads
+    /// anyway panics on the first index instead of silently acting on
+    /// stale load.)
     pub fn initial(pool_groups: &[u32], cfgs: &[GroupSimConfig]) -> Self {
+        let meta = cfgs
+            .iter()
+            .map(|c| PoolMeta { window_tokens: c.window_tokens, n_max: c.n_max })
+            .collect();
+        let mut base = Vec::with_capacity(pool_groups.len() + 1);
+        let mut total = 0usize;
+        base.push(0);
+        for &g in pool_groups {
+            total += g as usize;
+            base.push(total);
+        }
+        let mut s = GroupSimState {
+            clock: vec![0.0; total],
+            busy: vec![false; total],
+            queued: vec![0; total],
+            active: vec![0; total],
+            free_blocks: vec![0; total],
+            used_blocks: vec![0; total],
+        };
+        for (p, cfg) in cfgs.iter().enumerate() {
+            for lane in base[p]..base[p + 1] {
+                s.free_blocks[lane] = cfg.blocks_total();
+            }
+        }
+        FleetState { meta, base, s }
+    }
+
+    /// The zero-pool canary state: any indexed read panics. Handed to
+    /// routing/dispatch on paths where no consumer may legitimately
+    /// read live load.
+    pub fn empty() -> Self {
         FleetState {
-            pools: pool_groups
-                .iter()
-                .zip(cfgs)
-                .map(|(&g, cfg)| PoolLoad {
-                    window_tokens: cfg.window_tokens,
-                    n_max: cfg.n_max,
-                    groups: vec![
-                        GroupLoad {
-                            queued: 0,
-                            active: 0,
-                            free_blocks: cfg.blocks_total(),
-                            used_blocks: 0,
-                        };
-                        g as usize
-                    ],
-                })
-                .collect(),
+            meta: Vec::new(),
+            base: vec![0],
+            s: GroupSimState::default(),
         }
     }
 
-    /// Refresh one group's load from its live batcher — the O(1)-in-
-    /// fleet-size update the engine applies after every event that
-    /// touches the group.
+    /// Build a state from assembled per-pool loads — the constructor for
+    /// tests, benches and [`snapshot`]s. Scheduling lanes default to
+    /// idle (t = 0, not busy).
+    pub fn from_pools(pools: Vec<PoolLoad>) -> Self {
+        let meta = pools
+            .iter()
+            .map(|p| PoolMeta { window_tokens: p.window_tokens, n_max: p.n_max })
+            .collect();
+        let mut base = vec![0usize];
+        let mut s = GroupSimState::default();
+        for p in &pools {
+            for g in &p.groups {
+                s.clock.push(0.0);
+                s.busy.push(false);
+                s.queued.push(g.queued);
+                s.active.push(g.active);
+                s.free_blocks.push(g.free_blocks);
+                s.used_blocks.push(g.used_blocks);
+            }
+            base.push(s.queued.len());
+        }
+        FleetState { meta, base, s }
+    }
+
+    pub fn num_pools(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// Borrow one pool's slice of every load lane.
+    pub fn pool(&self, p: usize) -> PoolView<'_> {
+        let (lo, hi) = (self.base[p], self.base[p + 1]);
+        PoolView {
+            meta: self.meta[p],
+            queued: &self.s.queued[lo..hi],
+            active: &self.s.active[lo..hi],
+            free_blocks: &self.s.free_blocks[lo..hi],
+            used_blocks: &self.s.used_blocks[lo..hi],
+        }
+    }
+
+    /// Overwrite one group's load lanes — test/bench plumbing for
+    /// constructing specific load shapes.
+    pub fn set_group(&mut self, pool: usize, group: usize, load: GroupLoad) {
+        let lane = self.lane(pool, group);
+        self.s.queued[lane] = load.queued;
+        self.s.active[lane] = load.active;
+        self.s.free_blocks[lane] = load.free_blocks;
+        self.s.used_blocks[lane] = load.used_blocks;
+    }
+
+    /// Flattened lane id of (pool, group).
+    fn lane(&self, pool: usize, group: usize) -> usize {
+        let lane = self.base[pool] + group;
+        assert!(
+            lane < self.base[pool + 1],
+            "group {group} out of range for pool {pool}"
+        );
+        lane
+    }
+
+    /// Refresh one group's load lanes from its live batcher — the
+    /// O(1)-in-fleet-size update the engine applies after every event
+    /// that touches the group.
     fn refresh_group(&mut self, pool: usize, group: usize, gs: &GroupSim) {
-        self.pools[pool].groups[group] = GroupLoad {
-            queued: gs.batcher.queued_len(),
-            active: gs.batcher.active(),
-            free_blocks: gs.batcher.blocks.free_blocks(),
-            used_blocks: gs.batcher.blocks.used(),
-        };
+        let lane = self.lane(pool, group);
+        self.s.queued[lane] = gs.batcher.queued_len();
+        self.s.active[lane] = gs.batcher.active();
+        self.s.free_blocks[lane] = gs.batcher.blocks.free_blocks();
+        self.s.used_blocks[lane] = gs.batcher.blocks.used();
     }
 }
 
@@ -190,6 +373,23 @@ pub enum StateMode {
     RebuildPerArrival,
 }
 
+/// Which scheduler orders the engine's pending events. Both implement
+/// the same strict `(time, kind, sequence)` total order, so the pop
+/// sequences — and therefore entire simulations — are bit-identical;
+/// only the cost differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueMode {
+    /// Calendar/bucket queue ([`super::calqueue`]), bucket width seeded
+    /// from the trace's mean inter-arrival gap — amortized O(1) per
+    /// event. The production mode.
+    #[default]
+    Calendar,
+    /// The pre-refactor `BinaryHeap` scheduler, O(log n) per event.
+    /// Kept as the bit-for-bit replay oracle and the "before" baseline
+    /// in `bench_sim_engine`.
+    BinaryHeap,
+}
+
 /// Engine knobs beyond the (trace, router, policy) triple.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineOptions {
@@ -198,6 +398,8 @@ pub struct EngineOptions {
     pub allow_parallel: bool,
     /// Live-state maintenance strategy.
     pub state_mode: StateMode,
+    /// Event-queue implementation ([`QueueMode`]).
+    pub queue_mode: QueueMode,
     /// Cross-check the incrementally maintained state against a freshly
     /// built snapshot after **every** event (O(fleet) per event — tests
     /// only). Panics on the first divergence. Requires
@@ -231,6 +433,7 @@ impl Default for EngineOptions {
         EngineOptions {
             allow_parallel: true,
             state_mode: StateMode::Incremental,
+            queue_mode: QueueMode::Calendar,
             validate_state: false,
         }
     }
@@ -268,9 +471,22 @@ struct Ev {
     kind: EvKind,
 }
 
+impl Ev {
+    /// The engine's strict total event order, ascending: earliest time
+    /// first, arrivals before step-completions before wakes at equal
+    /// times, FIFO within a kind. Every event carries a unique `seq`,
+    /// so no two distinct events compare `Equal`.
+    fn key_cmp(&self, other: &Self) -> Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then_with(|| self.class.cmp(&other.class))
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
 impl PartialEq for Ev {
     fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
+        self.key_cmp(other) == Ordering::Equal
     }
 }
 impl Eq for Ev {}
@@ -281,29 +497,80 @@ impl PartialOrd for Ev {
 }
 impl Ord for Ev {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed so the max-heap pops the smallest (t, class, seq):
-        // earliest time first, arrivals before step-completions before
-        // wakes at equal times, FIFO within a kind.
-        other
-            .t
-            .total_cmp(&self.t)
-            .then_with(|| other.class.cmp(&self.class))
-            .then_with(|| other.seq.cmp(&self.seq))
+        // Reversed so the max-heap pops the smallest key first.
+        other.key_cmp(self)
+    }
+}
+
+impl CalendarItem for Ev {
+    fn time(&self) -> f64 {
+        self.t
+    }
+    fn order(&self, other: &Self) -> Ordering {
+        self.key_cmp(other)
+    }
+}
+
+/// The engine's scheduler, behind [`QueueMode`]: both variants pop the
+/// identical `(time, kind, sequence)` order.
+enum EventQueue {
+    Calendar(CalendarQueue<Ev>),
+    Heap(BinaryHeap<Ev>),
+}
+
+impl EventQueue {
+    fn new(mode: QueueMode, width: f64, capacity: usize) -> Self {
+        match mode {
+            QueueMode::Calendar => {
+                EventQueue::Calendar(CalendarQueue::with_width(width, capacity))
+            }
+            QueueMode::BinaryHeap => {
+                EventQueue::Heap(BinaryHeap::with_capacity(capacity))
+            }
+        }
+    }
+
+    fn push(&mut self, ev: Ev) {
+        match self {
+            EventQueue::Calendar(q) => q.push(ev),
+            EventQueue::Heap(h) => h.push(ev),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Ev> {
+        match self {
+            EventQueue::Calendar(q) => q.pop(),
+            EventQueue::Heap(h) => h.pop(),
+        }
+    }
+}
+
+/// Calendar bucket width for a trace: its mean inter-arrival gap
+/// (step/wake events densify the schedule from there; lazy resizes
+/// re-derive the width from the live population as that happens).
+fn trace_bucket_width(trace: &[Request]) -> f64 {
+    if trace.len() < 2 {
+        return 1.0;
+    }
+    let span = trace[trace.len() - 1].arrival_s - trace[0].arrival_s;
+    let w = span / (trace.len() - 1) as f64;
+    if w.is_finite() && w > 0.0 {
+        w
+    } else {
+        1.0
     }
 }
 
 /// One virtual GPU group: the same `Batcher` state machine the real
-/// engine runs, plus its energy meter and local boundary clock.
+/// engine runs, plus its energy meter. The group's scheduling state
+/// (local clock, busy flag) lives in the fleet's [`GroupSimState`]
+/// lanes, not here.
 struct GroupSim {
     batcher: Batcher,
     meter: EnergyMeter,
     metrics: ServeMetrics,
     /// Work plan of the in-flight step, applied at its StepComplete.
     pending_plan: Option<Vec<SlotWork>>,
-    /// A step or wake event is scheduled for this group.
-    busy: bool,
-    /// Local clock: last boundary or fast-forward time.
-    t: f64,
     steps: u64,
 }
 
@@ -322,17 +589,16 @@ impl GroupSim {
             meter: EnergyMeter::new(cfg.power, cfg.gpus_charged, 0.0),
             metrics: ServeMetrics::default(),
             pending_plan: None,
-            busy: false,
-            t: 0.0,
             steps: 0,
         }
     }
 
-    fn finish(self) -> GroupOutcome {
+    /// `horizon_s` is the group's final clock-lane value.
+    fn finish(self, horizon_s: f64) -> GroupOutcome {
         GroupOutcome {
             joules: self.meter.joules().0,
             output_tokens: self.meter.output_tokens(),
-            horizon_s: self.t,
+            horizon_s,
             mean_batch: self.meter.mean_batch(),
             metrics: self.metrics,
             steps: self.steps,
@@ -345,8 +611,8 @@ impl GroupSim {
 /// the [`StateMode::RebuildPerArrival`] oracle and the
 /// `validate_state` cross-check.
 fn snapshot(pools: &[Vec<GroupSim>], cfgs: &[GroupSimConfig]) -> FleetState {
-    FleetState {
-        pools: pools
+    FleetState::from_pools(
+        pools
             .iter()
             .zip(cfgs)
             .map(|(groups, cfg)| PoolLoad {
@@ -363,7 +629,7 @@ fn snapshot(pools: &[Vec<GroupSim>], cfgs: &[GroupSimConfig]) -> FleetState {
                     .collect(),
             })
             .collect(),
-    }
+    )
 }
 
 /// Route + dispatch one arrival: pool from the router, group from the
@@ -391,22 +657,26 @@ fn assign(
 }
 
 /// Plan the group's next step from its live `(n_active, L̄)` operating
-/// point, or quiesce if nothing is admitted.
+/// point, or quiesce if nothing is admitted. `clock`/`busy` are the
+/// group's scheduling lanes.
+#[allow(clippy::too_many_arguments)]
 fn start_step(
     gs: &mut GroupSim,
     cfg: &GroupSimConfig,
     now: f64,
-    heap: &mut BinaryHeap<Ev>,
+    q: &mut EventQueue,
     seq: &mut u64,
     pool: usize,
     group: usize,
+    clock: &mut f64,
+    busy: &mut bool,
 ) {
     gs.batcher.admit(now);
     if gs.batcher.active() == 0 {
         // Nothing in flight: quiesce; the next arrival wakes the group
         // (and accounts the idle-power gap).
-        gs.busy = false;
-        gs.t = now;
+        *busy = false;
+        *clock = now;
         return;
     }
     let plan = gs.batcher.plan();
@@ -421,7 +691,7 @@ fn start_step(
     gs.pending_plan = Some(plan);
     gs.steps += 1;
     *seq += 1;
-    heap.push(Ev {
+    q.push(Ev {
         t: t_end,
         class: CLASS_STEP,
         seq: *seq,
@@ -480,9 +750,13 @@ pub(crate) fn run_fleet(
         .map(|(&g, cfg)| (0..g).map(|_| GroupSim::new(cfg)).collect())
         .collect();
 
-    let mut heap: BinaryHeap<Ev> = BinaryHeap::with_capacity(trace.len() + 16);
+    let mut q = EventQueue::new(
+        opts.queue_mode,
+        trace_bucket_width(trace),
+        trace.len() + 16,
+    );
     for (i, r) in trace.iter().enumerate() {
-        heap.push(Ev {
+        q.push(Ev {
             t: r.arrival_s,
             class: CLASS_ARRIVAL,
             seq: i as u64,
@@ -491,23 +765,21 @@ pub(crate) fn run_fleet(
     }
     let mut seq = trace.len() as u64;
     let need_state = router.is_load_aware() || !dispatch.is_arrival_static();
-    // Track the live state in place only when someone will read it AND
-    // we are not in the legacy rebuild-per-arrival oracle mode; the
-    // one-off initial build is O(total groups) once per run, not per
-    // arrival.
+    // Refresh the live load lanes in place only when someone will read
+    // them AND we are not in the legacy rebuild-per-arrival oracle mode.
     let track = need_state && opts.state_mode == StateMode::Incremental;
+    // The SoA state itself is always allocated: its clock/busy lanes are
+    // the engine's own per-group scheduling state, maintained on every
+    // path. The one-off initial build is O(total groups) once per run.
+    let mut live = FleetState::initial(pool_groups, pool_cfgs);
     // When nobody may legitimately read the state (static-only run, or
     // the rebuild oracle supplying its own snapshots), hand out an
     // empty canary instead: a policy that lies about being static and
     // indexes into it panics immediately rather than silently deciding
     // from stale load.
-    let mut live = if track {
-        FleetState::initial(pool_groups, pool_cfgs)
-    } else {
-        FleetState { pools: Vec::new() }
-    };
+    let canary = FleetState::empty();
 
-    while let Some(ev) = heap.pop() {
+    while let Some(ev) = q.pop() {
         match ev.kind {
             EvKind::Arrival { idx } => {
                 let req = &trace[idx];
@@ -516,32 +788,33 @@ pub(crate) fn run_fleet(
                 let rebuilt = (need_state
                     && opts.state_mode == StateMode::RebuildPerArrival)
                     .then(|| snapshot(&pools, pool_cfgs));
-                let (pool, group, sreq) = assign(
-                    router,
-                    dispatch,
-                    pool_groups,
-                    req,
-                    rebuilt.as_ref().unwrap_or(&live),
-                );
+                let state_ref: &FleetState = match &rebuilt {
+                    Some(s) => s,
+                    None if track => &live,
+                    None => &canary,
+                };
+                let (pool, group, sreq) =
+                    assign(router, dispatch, pool_groups, req, state_ref);
                 assert!(
                     pool < pools.len() && group < pools[pool].len(),
                     "dispatch out of range: pool {pool} group {group}"
                 );
+                let lane = live.lane(pool, group);
                 let gs = &mut pools[pool][group];
                 if !gs.batcher.submit(sreq) {
                     gs.metrics.rejected += 1;
                 }
-                if !gs.busy {
+                if !live.s.busy[lane] {
                     // Fast-forward the quiescent group to now: the gap
                     // integrates at the meter's standing batch — idle
                     // power for a never-run group, the final step's
                     // P(n_active) after a drain (the legacy loop's
                     // left-constant convention, kept for replay).
-                    gs.busy = true;
+                    live.s.busy[lane] = true;
                     gs.meter.observe(ev.t, 0.0);
-                    gs.t = ev.t;
+                    live.s.clock[lane] = ev.t;
                     seq += 1;
-                    heap.push(Ev {
+                    q.push(Ev {
                         t: ev.t,
                         class: CLASS_WAKE,
                         seq,
@@ -553,8 +826,9 @@ pub(crate) fn run_fleet(
                 }
             }
             EvKind::StepComplete { pool, group } => {
+                let lane = live.lane(pool, group);
+                live.s.clock[lane] = ev.t;
                 let gs = &mut pools[pool][group];
-                gs.t = ev.t;
                 let plan = gs
                     .pending_plan
                     .take()
@@ -579,25 +853,30 @@ pub(crate) fn run_fleet(
                     gs,
                     &pool_cfgs[pool],
                     ev.t,
-                    &mut heap,
+                    &mut q,
                     &mut seq,
                     pool,
                     group,
+                    &mut live.s.clock[lane],
+                    &mut live.s.busy[lane],
                 );
                 if track {
                     live.refresh_group(pool, group, &pools[pool][group]);
                 }
             }
             EvKind::Wake { pool, group } => {
+                let lane = live.lane(pool, group);
                 let gs = &mut pools[pool][group];
                 start_step(
                     gs,
                     &pool_cfgs[pool],
                     ev.t,
-                    &mut heap,
+                    &mut q,
                     &mut seq,
                     pool,
                     group,
+                    &mut live.s.clock[lane],
+                    &mut live.s.busy[lane],
                 );
                 if track {
                     live.refresh_group(pool, group, &pools[pool][group]);
@@ -614,16 +893,27 @@ pub(crate) fn run_fleet(
         }
     }
 
-    pools
-        .into_iter()
-        .map(|groups| groups.into_iter().map(GroupSim::finish).collect())
-        .collect()
+    let mut out: Vec<Vec<GroupOutcome>> = Vec::with_capacity(pools.len());
+    let mut lane = 0usize;
+    for groups in pools {
+        let mut pool_out = Vec::with_capacity(groups.len());
+        for g in groups {
+            pool_out.push(g.finish(live.s.clock[lane]));
+            lane += 1;
+        }
+        out.push(pool_out);
+    }
+    out
 }
 
 /// Simulate one group in isolation — the unit of work of the parallel
 /// fast path. Runs the exact same event engine (one pool, one group), so
-/// per-group results are bit-identical to the shared-heap run.
-fn run_one_group(reqs: &[Request], cfg: &GroupSimConfig) -> GroupOutcome {
+/// per-group results are bit-identical to the shared-queue run.
+fn run_one_group(
+    reqs: &[Request],
+    cfg: &GroupSimConfig,
+    queue_mode: QueueMode,
+) -> GroupOutcome {
     let mut rr = RoundRobin::new();
     let mut out = run_fleet(
         reqs,
@@ -631,7 +921,7 @@ fn run_one_group(reqs: &[Request], cfg: &GroupSimConfig) -> GroupOutcome {
         &[1],
         std::slice::from_ref(cfg),
         &mut rr,
-        EngineOptions::default(),
+        EngineOptions { queue_mode, ..Default::default() },
     );
     out.pop().expect("one pool").pop().expect("one group")
 }
@@ -650,7 +940,7 @@ pub(crate) fn parallel_eligible(
 /// Run the fleet, stepping independent groups on worker threads when the
 /// routing/dispatch combination is arrival-static (group assignment
 /// precomputed on this thread, results merged in group-index order).
-/// Falls back to the sequential shared-heap engine otherwise.
+/// Falls back to the sequential shared-queue engine otherwise.
 pub(crate) fn run_fleet_auto(
     trace: &[Request],
     router: &dyn Router,
@@ -677,7 +967,7 @@ pub(crate) fn run_fleet_auto(
     // about being arrival-static). Bake the router's effective-prompt
     // transform into the stored request so the per-group engine can run
     // it through an identity router.
-    let idle = FleetState { pools: Vec::new() };
+    let idle = FleetState::empty();
     let mut per_group: Vec<Vec<Vec<Request>>> = pool_groups
         .iter()
         .map(|&g| vec![Vec::new(); g as usize])
@@ -717,7 +1007,11 @@ pub(crate) fn run_fleet_auto(
                 for ((pool, _g, reqs), slot) in
                     job_chunk.iter().zip(out_chunk.iter_mut())
                 {
-                    *slot = Some(run_one_group(reqs, &pool_cfgs[*pool]));
+                    *slot = Some(run_one_group(
+                        reqs,
+                        &pool_cfgs[*pool],
+                        opts.queue_mode,
+                    ));
                 }
             });
         }
@@ -770,23 +1064,23 @@ mod tests {
             seq,
             kind: EvKind::Arrival { idx: 0 },
         };
-        let mut h = BinaryHeap::new();
-        h.push(mk(1.0, CLASS_STEP, 5));
-        h.push(mk(1.0, CLASS_ARRIVAL, 9));
-        h.push(mk(0.5, CLASS_WAKE, 1));
-        h.push(mk(1.0, CLASS_ARRIVAL, 2));
-        let order: Vec<(f64, u8, u64)> = std::iter::from_fn(|| h.pop())
-            .map(|e| (e.t, e.class, e.seq))
-            .collect();
-        assert_eq!(
-            order,
-            vec![
-                (0.5, CLASS_WAKE, 1),
-                (1.0, CLASS_ARRIVAL, 2),
-                (1.0, CLASS_ARRIVAL, 9),
-                (1.0, CLASS_STEP, 5),
-            ]
-        );
+        let want = vec![
+            (0.5, CLASS_WAKE, 1),
+            (1.0, CLASS_ARRIVAL, 2),
+            (1.0, CLASS_ARRIVAL, 9),
+            (1.0, CLASS_STEP, 5),
+        ];
+        for mode in [QueueMode::Calendar, QueueMode::BinaryHeap] {
+            let mut q = EventQueue::new(mode, 0.25, 4);
+            q.push(mk(1.0, CLASS_STEP, 5));
+            q.push(mk(1.0, CLASS_ARRIVAL, 9));
+            q.push(mk(0.5, CLASS_WAKE, 1));
+            q.push(mk(1.0, CLASS_ARRIVAL, 2));
+            let order: Vec<(f64, u8, u64)> = std::iter::from_fn(|| q.pop())
+                .map(|e| (e.t, e.class, e.seq))
+                .collect();
+            assert_eq!(order, want, "{mode:?}");
+        }
     }
 
     #[test]
@@ -911,6 +1205,61 @@ mod tests {
     }
 
     #[test]
+    fn pool_view_reads_the_soa_lanes() {
+        let state = FleetState::from_pools(vec![
+            PoolLoad {
+                window_tokens: 5120,
+                n_max: 64,
+                groups: vec![
+                    GroupLoad {
+                        queued: 3,
+                        active: 2,
+                        free_blocks: 10,
+                        used_blocks: 6,
+                    },
+                    GroupLoad {
+                        queued: 1,
+                        active: 0,
+                        free_blocks: 16,
+                        used_blocks: 0,
+                    },
+                ],
+            },
+            PoolLoad {
+                window_tokens: 65_536,
+                n_max: 16,
+                groups: vec![GroupLoad {
+                    queued: 0,
+                    active: 4,
+                    free_blocks: 8,
+                    used_blocks: 8,
+                }],
+            },
+        ]);
+        assert_eq!(state.num_pools(), 2);
+        let p0 = state.pool(0);
+        assert_eq!(p0.window_tokens(), 5120);
+        assert_eq!(p0.n_max(), 64);
+        assert_eq!(p0.num_groups(), 2);
+        assert_eq!(p0.in_flight(0), 5);
+        assert_eq!(p0.in_flight_total(), 6);
+        assert_eq!(p0.backlog_per_group(), 3.0);
+        assert_eq!(p0.queued_per_group(), 2.0);
+        assert_eq!(
+            p0.group(1),
+            GroupLoad { queued: 1, active: 0, free_blocks: 16, used_blocks: 0 }
+        );
+        assert_eq!(state.pool(1).group(0).active, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_canary_panics_on_read() {
+        let state = FleetState::empty();
+        let _ = state.pool(0);
+    }
+
+    #[test]
     fn incremental_state_survives_per_event_validation() {
         // JSQ forces need_state; validate_state cross-checks the live
         // state against a fresh snapshot after every single event.
@@ -949,6 +1298,31 @@ mod tests {
             assert_eq!(a.output_tokens, b.output_tokens);
             assert_eq!(a.steps, b.steps);
             assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn binary_heap_oracle_matches_calendar_bitwise() {
+        let trace = small_trace(9);
+        let run = |queue_mode: QueueMode| {
+            let mut jsq = super::super::dispatch::JoinShortestQueue;
+            run_fleet(
+                &trace,
+                &HomogeneousRouter,
+                &[4],
+                &[cfg(8192)],
+                &mut jsq,
+                EngineOptions { queue_mode, ..Default::default() },
+            )
+        };
+        let cal = run(QueueMode::Calendar);
+        let heap = run(QueueMode::BinaryHeap);
+        for (a, b) in cal[0].iter().zip(&heap[0]) {
+            assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert_eq!(a.steps, b.steps);
+            assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+            assert_eq!(a.metrics.completed, b.metrics.completed);
         }
     }
 }

@@ -357,7 +357,9 @@ pub fn simulate_topology_with(
 /// Everything-exposed entry point: on top of
 /// [`simulate_topology_with`], selects the live-state maintenance mode
 /// ([`StateMode`](super::events::StateMode) — incremental vs the legacy
-/// rebuild-per-arrival oracle) and the per-event state cross-check used
+/// rebuild-per-arrival oracle), the event-queue implementation
+/// ([`QueueMode`](super::events::QueueMode) — calendar queue vs the
+/// legacy binary-heap oracle) and the per-event state cross-check used
 /// by the property suites.
 pub fn simulate_topology_opts(
     trace: &[Request],

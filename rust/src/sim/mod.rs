@@ -9,30 +9,41 @@
 //!
 //! # Architecture
 //!
-//! The core ([`events`]) is a single binary-heap event queue over one
-//! virtual clock: arrival, step-complete and wake events drive **all
-//! groups of all pools concurrently in virtual time**. That shared clock
-//! is what makes *stateful* policies expressible: the engine owns one
-//! live [`FleetState`] (per-pool queue depth, in-flight batch, free KV
-//! blocks), **maintained incrementally** — only the event's touched
-//! group is refreshed — so at every arrival the router and the
-//! [`DispatchPolicy`] borrow current fleet load at zero allocation cost,
-//! no matter how many groups the fleet has. The pre-refactor
-//! rebuild-a-snapshot-per-arrival behavior survives as
-//! [`StateMode::RebuildPerArrival`], the bit-for-bit verification oracle.
+//! The core ([`events`]) is a single event queue over one virtual clock:
+//! arrival, step-complete and wake events drive **all groups of all
+//! pools concurrently in virtual time**. The queue is a calendar/bucket
+//! queue ([`calqueue`]) — amortized O(1) per event, bucket width seeded
+//! from the trace's mean inter-arrival gap — with the pre-refactor
+//! binary heap retained behind [`QueueMode::BinaryHeap`] as the
+//! bit-for-bit replay oracle. That shared clock is what makes *stateful*
+//! policies expressible: the engine owns one live [`FleetState`]
+//! (per-pool queue depth, in-flight batch, free KV blocks), stored
+//! **struct-of-arrays** — each hot per-group field is one contiguous
+//! lane indexed by the flattened (pool, group) id, so dispatch scans and
+//! per-event refreshes are cache-linear — and **maintained
+//! incrementally**: only the event's touched group is refreshed, so at
+//! every arrival the router and the [`DispatchPolicy`] borrow current
+//! fleet load (via [`FleetState::pool`]'s [`PoolView`]) at zero
+//! allocation cost, no matter how many groups the fleet has. The
+//! pre-refactor rebuild-a-snapshot-per-arrival behavior survives as
+//! [`StateMode::RebuildPerArrival`], the bit-for-bit verification
+//! oracle.
 //!
+//! * [`calqueue`] — the calendar/bucket priority queue and its
+//!   [`CalendarItem`](calqueue::CalendarItem) total-order contract.
 //! * [`dispatch`] — round-robin, join-shortest-queue, least-KV-load and
 //!   power-aware group selection behind the [`DispatchPolicy`] trait.
-//! * [`events`] — the engine ([`EngineOptions`], [`StateMode`]), plus the
-//!   parallel fast path: when routing and dispatch are arrival-static,
-//!   independent groups are stepped on worker threads and merged in
-//!   group-index order, bit-identically to the sequential run.
+//! * [`events`] — the engine ([`EngineOptions`], [`StateMode`],
+//!   [`QueueMode`]), plus the parallel fast path: when routing and
+//!   dispatch are arrival-static, independent groups are stepped on
+//!   worker threads and merged in group-index order, bit-identically to
+//!   the sequential run.
 //! * [`fleetsim`] — reports and entry points. [`simulate_pool`] /
 //!   [`simulate_topology`] reproduce the pre-refactor round-robin
 //!   simulator bit-for-bit (deterministic-replay guarantee);
 //!   [`simulate_topology_with`] exposes policy and parallelism control;
-//!   [`simulate_topology_opts`] additionally exposes the state mode and
-//!   the per-event live-state cross-check.
+//!   [`simulate_topology_opts`] additionally exposes the state mode, the
+//!   queue mode and the per-event live-state cross-check.
 //!
 //! For running *grids* of (topology × workload × routing/dispatch)
 //! configurations through this engine — the paper-style scenario
@@ -42,10 +53,12 @@
 //! worker threads (`wattlaw simulate sweep` on the CLI).
 //!
 //! Determinism: every event is ordered by `(time, kind, sequence)` under
-//! `f64::total_cmp`, policies are forbidden ambient randomness, and all
-//! aggregation runs in index order — so a (trace, router, policy, seed)
-//! tuple replays to the bit.
+//! `f64::total_cmp` — the same strict total order in both queue modes —
+//! policies are forbidden ambient randomness, and all aggregation runs
+//! in index order — so a (trace, router, policy, seed) tuple replays to
+//! the bit.
 
+pub mod calqueue;
 pub mod dispatch;
 pub mod events;
 pub mod fleetsim;
@@ -53,7 +66,10 @@ pub mod fleetsim;
 pub use dispatch::{
     DispatchPolicy, JoinShortestQueue, LeastKvLoad, PowerAware, RoundRobin,
 };
-pub use events::{EngineOptions, FleetState, GroupLoad, PoolLoad, StateMode};
+pub use events::{
+    EngineOptions, FleetState, GroupLoad, GroupSimState, PoolLoad, PoolMeta,
+    PoolView, QueueMode, StateMode,
+};
 pub use fleetsim::{
     simulate_pool, simulate_topology, simulate_topology_opts,
     simulate_topology_with, GroupSimConfig, PoolSimReport, TopoSimReport,

@@ -21,8 +21,8 @@ use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
 use wattlaw::fleet::topology::{Topology, LONG_CTX};
 use wattlaw::power::Gpu;
 use wattlaw::scenario::optimize::{
-    analyze_cell, kpool_partitions, optimize, screen, GpuAxis, OptimizeConfig,
-    UpgradeBudget,
+    analyze_cell, kpool_partitions, optimize, screen, screen_mixed, GpuAxis,
+    MixedScreen, OptimizeConfig, UpgradeBudget,
 };
 use wattlaw::scenario::{ScenarioSpec, SloTargets};
 use wattlaw::workload::cdf::{
@@ -343,6 +343,151 @@ fn mixed_fleet_measured_tok_w_beats_the_homogeneous_h100_winner() {
     // cells by their per-pool assignment.
     assert!(report.winner().is_some());
     assert!(report.rowset().to_csv().contains('|'));
+}
+
+/// The branch-and-bound oracle: on every K ∈ 2..=3 ladder grid the B&B
+/// mixed screen must reproduce the brute-force cross-product ranking
+/// **bit for bit** — same cells, same order, same Eq. 4 floats — for a
+/// 2-generation and a 3-generation set. With an uncapped keep budget no
+/// subtree may be pruned at all (the bound only ever cuts against a
+/// full kept set), so the two enumerations are exactly the same work
+/// re-ordered.
+#[test]
+fn bnb_screen_replays_the_brute_force_cross_product_bitwise_on_k_le_3() {
+    let t = azure_conversations();
+    let mut partitions = kpool_partitions(2);
+    partitions.extend(kpool_partitions(3));
+    let cases: [(&[Gpu], &[f64]); 2] = [
+        (&[Gpu::H100, Gpu::B200], &[1.0, 2.0]),
+        (&[Gpu::H100, Gpu::H200, Gpu::B200], &[1.0]),
+    ];
+    for (gpus, gammas) in cases {
+        let run = |mode, keep| {
+            screen_mixed(
+                &t,
+                400.0,
+                &partitions,
+                gpus,
+                gammas,
+                LBarPolicy::Window,
+                0.85,
+                1e3,
+                PowerAccounting::PerGpu,
+                mode,
+                keep,
+            )
+        };
+        let (brute, bstats) = run(MixedScreen::BruteForce, usize::MAX);
+        let (bnb, nstats) = run(MixedScreen::BranchAndBound, usize::MAX);
+        assert_eq!(bstats.brute_cells as usize, brute.len());
+        assert_eq!(nstats.pruned, 0, "uncapped keep ⇒ nothing may prune");
+        assert_eq!(nstats.full_evals, bstats.brute_cells);
+        assert_eq!(brute.len(), bnb.len());
+        for (a, b) in brute.iter().zip(&bnb) {
+            assert_eq!(a.cutoffs, b.cutoffs);
+            assert_eq!(a.gpus, b.gpus, "ranking order must match bitwise");
+            assert_eq!(a.gamma.to_bits(), b.gamma.to_bits());
+            assert_eq!(
+                a.report.tok_per_watt.0.to_bits(),
+                b.report.tok_per_watt.0.to_bits(),
+                "B&B drifted from brute force at cutoffs {:?} γ {} {:?}",
+                a.cutoffs,
+                a.gamma,
+                a.gpus
+            );
+            assert_eq!(a.report.total_groups, b.report.total_groups);
+        }
+    }
+}
+
+/// Under the default keep budget the truncated B&B ranking is a bitwise
+/// prefix of the brute-force ranking — in particular the stage-A mixed
+/// winner is identical — even when the K ≤ 3 grid is far wider than the
+/// beam.
+#[test]
+fn bnb_default_keep_preserves_the_brute_force_winner_and_prefix() {
+    let t = agent_heavy();
+    let mut partitions = kpool_partitions(2);
+    partitions.extend(kpool_partitions(3));
+    let gpus = [Gpu::H100, Gpu::B200];
+    let gammas = [1.0, 2.0];
+    let run = |mode, keep| {
+        screen_mixed(
+            &t,
+            400.0,
+            &partitions,
+            &gpus,
+            &gammas,
+            LBarPolicy::Window,
+            0.85,
+            1e3,
+            PowerAccounting::PerGpu,
+            mode,
+            keep,
+        )
+    };
+    let (brute, bstats) = run(MixedScreen::BruteForce, usize::MAX);
+    let keep = OptimizeConfig::default().mixed_keep;
+    let (bnb, nstats) = run(MixedScreen::BranchAndBound, keep);
+    assert!(
+        bstats.brute_cells as usize > keep,
+        "the grid must overflow the beam for this oracle to bite"
+    );
+    assert_eq!(bnb.len(), keep);
+    assert!(nstats.full_evals == keep as u64);
+    for (a, b) in brute.iter().zip(&bnb) {
+        assert_eq!(a.cutoffs, b.cutoffs);
+        assert_eq!(a.gpus, b.gpus);
+        assert_eq!(a.gamma.to_bits(), b.gamma.to_bits());
+        assert_eq!(
+            a.report.tok_per_watt.0.to_bits(),
+            b.report.tok_per_watt.0.to_bits()
+        );
+    }
+}
+
+/// The scale the cross-product could not reach: a K=5 partition with a
+/// 3-generation set (3⁵ − 3 = 240 mixed cells) screens through B&B with
+/// a tight beam, returns exactly the brute ranking's head, best-first.
+#[test]
+fn bnb_opens_k5_three_generation_screens_and_matches_brute_head() {
+    let t = agent_heavy();
+    let partitions = vec![vec![2048, 8192, 16384, 32768, LONG_CTX]];
+    let gpus = [Gpu::H100, Gpu::H200, Gpu::B200];
+    let gammas = [1.0];
+    let run = |mode, keep| {
+        screen_mixed(
+            &t,
+            400.0,
+            &partitions,
+            &gpus,
+            &gammas,
+            LBarPolicy::Window,
+            0.85,
+            1e3,
+            PowerAccounting::PerGpu,
+            mode,
+            keep,
+        )
+    };
+    let (brute, bstats) = run(MixedScreen::BruteForce, usize::MAX);
+    assert_eq!(bstats.brute_cells, 3u64.pow(5) - 3);
+    let (bnb, nstats) = run(MixedScreen::BranchAndBound, 8);
+    assert_eq!(bnb.len(), 8);
+    assert_eq!(nstats.full_evals, 8, "only the beam re-enters Eq. 4");
+    for w in bnb.windows(2) {
+        assert!(
+            w[0].report.tok_per_watt.0 >= w[1].report.tok_per_watt.0,
+            "B&B survivors must come back best-first"
+        );
+    }
+    for (a, b) in brute.iter().zip(&bnb) {
+        assert_eq!(a.gpus, b.gpus);
+        assert_eq!(
+            a.report.tok_per_watt.0.to_bits(),
+            b.report.tok_per_watt.0.to_bits()
+        );
+    }
 }
 
 /// The greedy budgeted-upgrade axis: with an effectively unlimited

@@ -793,6 +793,7 @@ fn prop_incremental_fleet_state_equals_fresh_snapshot_on_random_traces() {
                     allow_parallel: false,
                     state_mode: mode,
                     validate_state: validate,
+                    ..Default::default()
                 },
             )
         };
@@ -809,6 +810,84 @@ fn prop_incremental_fleet_state_equals_fresh_snapshot_on_random_traces() {
         for (a, b) in live.pools.iter().zip(&oracle.pools) {
             xcheck_assert!(a.horizon_s.to_bits() == b.horizon_s.to_bits());
             xcheck_assert!(a.metrics.completed == b.metrics.completed);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_calendar_queue_replays_binary_heap_bitwise_across_policies() {
+    use wattlaw::router::adaptive::AdaptiveRouter;
+    use wattlaw::router::context::ContextRouter;
+    use wattlaw::sim::{
+        dispatch, simulate_topology_opts, EngineOptions, QueueMode, StateMode,
+    };
+
+    // The calendar/bucket queue and the retained binary heap implement
+    // the same strict (time, kind, sequence) total order, so entire
+    // simulations — decisions, floats, energy — must replay bit-for-bit
+    // between [`QueueMode::Calendar`] and the [`QueueMode::BinaryHeap`]
+    // oracle, across every dispatch policy, router flavor and StateMode.
+    forall("calendar queue == binary-heap oracle, bit for bit", 10, |g| {
+        let (trace, groups, cfgs) = random_sim_scenario(g);
+        let (router, policy_name): (Box<dyn Router>, &str) =
+            if groups.len() == 2 {
+                if g.bool() {
+                    (
+                        Box::new(
+                            AdaptiveRouter::new(4096)
+                                .with_spill_factor(g.f64_in(0.5, 4.0)),
+                        ),
+                        *g.choose(&dispatch::ALL),
+                    )
+                } else {
+                    (
+                        Box::new(ContextRouter::two_pool(4096)),
+                        *g.choose(&dispatch::ALL),
+                    )
+                }
+            } else {
+                (
+                    Box::new(wattlaw::router::HomogeneousRouter),
+                    *g.choose(&dispatch::ALL),
+                )
+            };
+        let state_mode = if g.bool() {
+            StateMode::Incremental
+        } else {
+            StateMode::RebuildPerArrival
+        };
+        let run = |queue_mode: QueueMode| {
+            let mut policy = dispatch::parse(policy_name).unwrap();
+            simulate_topology_opts(
+                &trace,
+                router.as_ref(),
+                &groups,
+                &cfgs,
+                policy.as_mut(),
+                EngineOptions {
+                    allow_parallel: false,
+                    state_mode,
+                    queue_mode,
+                    validate_state: false,
+                },
+            )
+        };
+        let cal = run(QueueMode::Calendar);
+        let heap = run(QueueMode::BinaryHeap);
+        xcheck_assert!(cal.output_tokens == heap.output_tokens);
+        xcheck_assert!(
+            cal.joules.to_bits() == heap.joules.to_bits(),
+            "{policy_name}/{state_mode:?}: joules diverged, {} vs {}",
+            cal.joules,
+            heap.joules
+        );
+        xcheck_assert!(cal.steps == heap.steps);
+        for (a, b) in cal.pools.iter().zip(&heap.pools) {
+            xcheck_assert!(a.horizon_s.to_bits() == b.horizon_s.to_bits());
+            xcheck_assert!(a.mean_batch.to_bits() == b.mean_batch.to_bits());
+            xcheck_assert!(a.metrics.completed == b.metrics.completed);
+            xcheck_assert!(a.metrics.rejected == b.metrics.rejected);
         }
         Ok(())
     });
@@ -838,12 +917,10 @@ fn prop_adaptive_router_live_is_total_and_window_safe() {
                     .collect(),
             }
         };
-        let state = FleetState {
-            pools: vec![
-                mk_pool(g, b_short + 1024, 64),
-                mk_pool(g, 65_536, 16),
-            ],
-        };
+        let state = FleetState::from_pools(vec![
+            mk_pool(g, b_short + 1024, 64),
+            mk_pool(g, 65_536, 16),
+        ]);
         let req = Request {
             id: 0,
             arrival_s: 0.0,

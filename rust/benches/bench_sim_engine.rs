@@ -25,6 +25,13 @@
 //!   brute-force assignment cross-product at K ∈ {3, 4, 5} over a
 //!   3-generation set: Eq. 4 evaluations visited and wall time.
 //!
+//! The PR 7 `streaming_arrivals` section pits the materialized
+//! `Vec<Request>` engine against the fused generate-as-you-go
+//! `SynthSource` stream at λ ∈ {1000, 4000}: events/sec (the streamed
+//! run pays arrival generation inside the loop — that is the point, no
+//! trace is ever held) plus the trace-memory footprint each path holds,
+//! with both paths replay-asserted to the same bits.
+//!
 //! Run `cargo bench --bench bench_sim_engine -- --record` to write the
 //! headline numbers to `BENCH_sim_engine.json` at the repo root
 //! (`--quick` shrinks the sample count for smoke runs; `--gate` fails
@@ -42,10 +49,11 @@ use wattlaw::scenario::optimize::{
 use wattlaw::scenario::ScenarioSpec;
 use wattlaw::sim::dispatch::{JoinShortestQueue, RoundRobin};
 use wattlaw::sim::{
-    simulate_topology_opts, EngineOptions, GroupSimConfig, QueueMode,
-    StateMode,
+    simulate_topology_opts, simulate_topology_source, EngineOptions,
+    GroupSimConfig, QueueMode, StateMode,
 };
 use wattlaw::workload::synth::{generate, GenConfig};
+use wattlaw::workload::{Request, SynthSource};
 
 const JSON_PATH: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_engine.json");
@@ -321,6 +329,52 @@ fn main() {
         bnb_work.push((k, brute, bnb));
     }
 
+    // Streaming arrivals head-to-head: the materialized Vec<Request>
+    // engine vs the fused generate-as-you-go SynthSource on the same
+    // seeded workload. The streamed run re-derives every arrival inside
+    // the loop (no trace is ever held, so its events/sec includes
+    // generation); the replay asserts below pin both paths to the same
+    // bits. JSQ keeps live-state maintenance in the loop. stats[18..22].
+    let stream_gens = [eq_gen(1000.0, 5.0), eq_gen(4000.0, 2.5)];
+    let stream_traces = [&eq_trace_l1k, &eq_trace_l4k];
+    let mut sa_steps = [0u64; 4];
+    let mut sa_toks = [0u64; 4];
+    let mut sa_joules = [0f64; 4];
+    for (li, label) in ["l1000", "l4000"].into_iter().enumerate() {
+        let tr = stream_traces[li];
+        g.bench(format!("streaming_materialized_{label}"), || {
+            let mut jsq = JoinShortestQueue;
+            let r = simulate_topology_opts(
+                tr,
+                &router,
+                &pool_groups,
+                &cfgs,
+                &mut jsq,
+                eq_opts(QueueMode::Calendar),
+            );
+            sa_steps[2 * li] = r.steps;
+            sa_toks[2 * li] = r.output_tokens;
+            sa_joules[2 * li] = r.joules;
+            black_box(r.output_tokens)
+        });
+        g.bench(format!("streaming_streamed_{label}"), || {
+            let mut jsq = JoinShortestQueue;
+            let mut src = SynthSource::new(&workload, &stream_gens[li]);
+            let r = simulate_topology_source(
+                &mut src,
+                &router,
+                &pool_groups,
+                &cfgs,
+                &mut jsq,
+                eq_opts(QueueMode::Calendar),
+            );
+            sa_steps[2 * li + 1] = r.steps;
+            sa_toks[2 * li + 1] = r.output_tokens;
+            sa_joules[2 * li + 1] = r.joules;
+            black_box(r.output_tokens)
+        });
+    }
+
     let stats = g.finish();
     assert_eq!(steps_seq, steps_par, "parallel fast path must replay exactly");
     assert_eq!(
@@ -421,6 +475,51 @@ fn main() {
             bs.mean_ns / ns.mean_ns,
         );
     }
+
+    // Streamed runs must replay the materialized engine exactly —
+    // otherwise the events/sec comparison is comparing different
+    // simulations.
+    for li in 0..2 {
+        assert_eq!(
+            sa_steps[2 * li],
+            sa_steps[2 * li + 1],
+            "streamed engine must replay the materialized oracle exactly"
+        );
+        assert_eq!(sa_toks[2 * li], sa_toks[2 * li + 1]);
+        assert_eq!(
+            sa_joules[2 * li].to_bits(),
+            sa_joules[2 * li + 1].to_bits(),
+            "streamed joules must match bit-for-bit"
+        );
+    }
+    let sa_names = [
+        "streaming_materialized_l1000",
+        "streaming_streamed_l1000",
+        "streaming_materialized_l4000",
+        "streaming_streamed_l4000",
+    ];
+    for (i, name) in sa_names.iter().enumerate() {
+        println!(
+            "{name:<30} {} step events, {:.0} events/sec (mean)",
+            sa_steps[i],
+            ev_per_s(sa_steps[i], &stats[18 + i])
+        );
+    }
+    // Peak trace-memory proxy: what each path must hold of the arrival
+    // stream. The materialized engine owns the whole sorted Vec; the
+    // streamed engine owns exactly one pending Request at any moment.
+    let req_bytes = std::mem::size_of::<Request>();
+    let sa_trace_bytes =
+        [stream_traces[0].len() * req_bytes, stream_traces[1].len() * req_bytes];
+    println!(
+        "streamed/materialized time ratio: {:.2}x (λ=1000), {:.2}x (λ=4000); \
+         trace memory held: {:.1} KB / {:.1} KB materialized vs \
+         {req_bytes} B streamed",
+        stats[19].mean_ns / stats[18].mean_ns,
+        stats[21].mean_ns / stats[20].mean_ns,
+        sa_trace_bytes[0] as f64 / 1e3,
+        sa_trace_bytes[1] as f64 / 1e3,
+    );
 
     // --gate: fail (after optionally recording) if calendar events/sec
     // regressed more than 20% against the committed non-null baseline.
@@ -585,6 +684,35 @@ fn main() {
              {1,2}, keep=64 — bnb_visited counts DFS nodes + table \
              builds + exact survivor re-evals\"\n  },\n",
         );
+        j.push_str("  \"streaming_arrivals\": {\n    \"entries\": [\n");
+        for (i, name) in sa_names.iter().enumerate() {
+            j.push_str(&format!(
+                "      {{ \"name\": \"{name}\", \"steps\": {}, \
+                 \"events_per_sec\": {:.0}, \"mean_ms\": {:.2} }}{}\n",
+                sa_steps[i],
+                ev_per_s(sa_steps[i], &stats[18 + i]),
+                stats[18 + i].mean_ns / 1e6,
+                if i + 1 < sa_names.len() { "," } else { "" }
+            ));
+        }
+        j.push_str(&format!(
+            "    ],\n    \
+             \"streamed_over_materialized_time_l1000\": {:.3},\n    \
+             \"streamed_over_materialized_time_l4000\": {:.3},\n    \
+             \"materialized_trace_bytes_l1000\": {},\n    \
+             \"materialized_trace_bytes_l4000\": {},\n    \
+             \"streamed_pending_bytes\": {req_bytes},\n    \
+             \"note\": \"materialized Vec<Request> engine vs the fused \
+             generate-as-you-go SynthSource stream (JSQ, calendar \
+             queue); the streamed run pays arrival generation inside \
+             the loop and holds exactly one pending Request instead of \
+             the whole trace — both paths replay-asserted to the same \
+             bits before recording\"\n  }},\n",
+            stats[19].mean_ns / stats[18].mean_ns,
+            stats[21].mean_ns / stats[20].mean_ns,
+            sa_trace_bytes[0],
+            sa_trace_bytes[1],
+        ));
         j.push_str(
             "  \"recorded_by\": \"cargo bench --bench bench_sim_engine -- \
              --record\"\n}\n",

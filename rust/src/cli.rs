@@ -9,18 +9,20 @@
 //! wattlaw sweep --trace azure --gpu h100 [--pools K | --cutoffs a,b,c]
 //!                  FleetOpt (B_short, γ*) sweep; K-pool partition sweep
 //! wattlaw optimize [--trace azure] [--gpu h100 | --gpu h100,h100,b200]
-//!                  [--lambda R] [--duration S]
+//!                  [--lambda R] [--duration S] [--workload ARCHETYPE]
 //!                  [--groups N] [--b-short N] [--gamma G] [--dispatch NAME]
 //!                  [--pools K] [--cutoffs a,b,c] [--hetero]
 //!                  [--upgrade-budget N --upgrade-to b200]
 //!                  [--top-k K] [--slo-ttft S] [--workers N]
 //!                  two-stage search: analytical screen, simulated refine
 //! wattlaw power [--gpu b200]                        P(b) curve
-//! wattlaw simulate [--trace azure] [--lambda R] [--duration S] [--groups N]
+//! wattlaw simulate [--trace azure|file.csv] [--lambda R] [--duration S]
+//!                  [--groups N] [--workload ARCHETYPE]
 //!                  [--dispatch rr|jsq|least-kv|power|power-slo]
 //!                  [--router context|adaptive|fleetopt] [--spill F]
 //!                  [--pools K] [--cutoffs a,b,c]   K-pool routed fleet
 //! wattlaw simulate sweep [--lambda 1000] [--duration S] [--groups N]
+//!                  [--workload ARCHETYPE] [--trace file.csv]
 //!                  [--dispatch NAME] [--b-short N] [--spill F]
 //!                  [--pools K] [--cutoffs a,b,c]
 //!                  [--slo-ttft S] [--workers N]   scenario grid, threaded
@@ -44,6 +46,7 @@ use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
 use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
 use crate::results::{self, OutputFormat};
+use crate::workload::arrival::{ArrivalSpec, CsvSource};
 use crate::workload::cdf::{
     agent_heavy, azure_conversations, lmsys_chat, WorkloadTrace,
 };
@@ -61,11 +64,11 @@ pub struct Args {
 }
 
 /// Keys that are value-taking options; everything else with `--` is a flag.
-const VALUE_KEYS: [&str; 23] = [
+const VALUE_KEYS: [&str; 24] = [
     "lbar", "trace", "gpu", "topo", "b-short", "gamma", "lambda", "acct",
     "requests", "artifacts", "duration", "groups", "dispatch", "router",
     "spill", "slo-ttft", "workers", "format", "top-k", "pools", "cutoffs",
-    "upgrade-budget", "upgrade-to",
+    "upgrade-budget", "upgrade-to", "workload",
 ];
 
 pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Args {
@@ -124,6 +127,38 @@ impl Args {
             Some("lmsys") => lmsys_chat(),
             Some("agent") => agent_heavy(),
             _ => azure_conversations(),
+        }
+    }
+
+    /// The arrival process for the simulated surfaces: `--workload
+    /// <archetype>` picks a generated process
+    /// (stationary|diurnal|flash-crowd|multi-tenant|heavy-tail);
+    /// `--trace <file.csv>` (recognized as a path — contains `/` or
+    /// ends in `.csv`; bare names keep the legacy built-in-trace
+    /// meaning) replays a recorded CSV trace. Replay files are fully
+    /// validated here so a malformed file is a line-numbered CLI error
+    /// up front, not a panic on a sweep worker thread.
+    pub fn arrivals(&self) -> crate::Result<ArrivalSpec> {
+        let replay = self
+            .opt("trace")
+            .filter(|v| v.ends_with(".csv") || v.contains('/'));
+        if let Some(path) = replay {
+            anyhow::ensure!(
+                self.opt("workload").is_none(),
+                "--workload and a --trace replay file are both arrival \
+                 processes — pick one"
+            );
+            CsvSource::open(std::path::Path::new(path))?;
+            return Ok(ArrivalSpec::Replay { path: path.to_string() });
+        }
+        match self.opt("workload") {
+            None => Ok(ArrivalSpec::Stationary),
+            Some(name) => ArrivalSpec::parse(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown --workload '{name}' ({})",
+                    ArrivalSpec::NAMES.join("|")
+                )
+            }),
         }
     }
 
@@ -317,6 +352,8 @@ commands:
              through the event-driven simulator and re-ranks by measured
              tok/W with the SLO verdict as a hard filter
              (--gpu restricts the generation axis, --top-k, --slo-ttft;
+              --workload / --trace file.csv picks stage B's arrival
+              process (stage A screens on the mean rate);
               --pools K (2..=6) screens the generated K-pool cutoff grids,
               --cutoffs a,b,c one explicit partition vector;
               --gpu h100,h100,b200 screens that per-pool assignment,
@@ -326,18 +363,24 @@ commands:
               --upgrade-budget N --upgrade-to b200 the greedy budgeted
               placement of at most N upgraded groups)
   power      print a GPU's P(b) curve (--gpu)
-  simulate   event-driven fleet simulation vs analytics
+  simulate   event-driven fleet simulation vs analytics, arrivals
+             streamed in O(1) trace memory
              (--dispatch rr|jsq|least-kv|power|power-slo,
               --router context|adaptive|fleetopt, --spill F;
               --pools K / --cutoffs a,b,c simulate a K-pool routed fleet,
               --gpu a,b,c one generation per pool; zero-traffic pools
-              warn and bill idle power)
+              warn and bill idle power;
+              --workload stationary|diurnal|flash-crowd|multi-tenant|
+              heavy-tail picks the arrival process, --trace file.csv
+              replays a recorded arrival trace)
   simulate sweep
              dispatch x topology x context-window scenario grid at fleet
-             scale (default λ=1000), cells across worker threads; every
-             cell reports tok/W + p99 TTFT + SLO verdict; --pools K adds
-             one K'-pool partition cell per K' in 2..=K, --gpu a,b,c a
-             heterogeneous cell per matching partition
+             scale (default λ=1000), cells across worker threads, each
+             cell streaming its own arrivals; every cell reports tok/W +
+             p99 TTFT + SLO verdict with its workload column; --pools K
+             adds one K'-pool partition cell per K' in 2..=K, --gpu
+             a,b,c a heterogeneous cell per matching partition;
+             --workload / --trace file.csv as in simulate
   serve      serve a trace through the real AOT model (2-pool demo)
   validate   check runtime numerics against the JAX golden trace
   report     paper-vs-measured summary (EXPERIMENTS.md §input)
@@ -793,6 +836,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
             seed: 42,
             ..defaults.gen.clone()
         },
+        arrivals: args.arrivals()?,
         groups: args.opt_u32("groups", 8).max(2).max(max_k),
         slo: SloTargets { ttft_p99_s: args.opt_f64("slo-ttft", 0.5) },
         lbar: args.lbar(),
@@ -855,8 +899,10 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
     use crate::router::context::ContextRouter;
     use crate::router::fleetopt::FleetOptRouter;
     use crate::router::{HomogeneousRouter, Router};
-    use crate::sim::{dispatch, simulate_topology_with, RoundRobin};
-    use crate::workload::synth::{generate, GenConfig};
+    use crate::sim::{
+        dispatch, simulate_topology_source, EngineOptions, RoundRobin,
+    };
+    use crate::workload::synth::GenConfig;
 
     match args.subcommand.as_deref() {
         Some("sweep") => return cmd_simulate_sweep(args),
@@ -941,44 +987,66 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
         }
     };
 
-    let reqs = generate(
-        &trace,
-        &GenConfig {
-            lambda_rps: lambda,
-            duration_s: duration,
-            max_prompt_tokens: 60_000,
-            max_output_tokens: 1024,
-            seed: 42,
-        },
-    );
+    let gen_cfg = GenConfig {
+        lambda_rps: lambda,
+        duration_s: duration,
+        max_prompt_tokens: 60_000,
+        max_output_tokens: 1024,
+        seed: 42,
+    };
+    // Arrival process: stationary Poisson unless --workload picks an
+    // archetype or --trace names a CSV replay file. One fresh source
+    // per engine run — both fleets see the identical arrival stream
+    // (same seed / same file), pulled one request at a time, so even a
+    // million-arrival run holds no trace buffer.
+    let arrivals = args.arrivals()?;
+    let workload_label = match &arrivals {
+        ArrivalSpec::Stationary => trace.name.to_string(),
+        spec @ (ArrivalSpec::MultiTenant | ArrivalSpec::Replay { .. }) => {
+            spec.label()
+        }
+        spec => format!("{}+{}", trace.name, spec.label()),
+    };
+    let traffic = match &arrivals {
+        ArrivalSpec::Replay { path } => {
+            let src = CsvSource::open(std::path::Path::new(path))?;
+            format!(
+                "{} recorded arrivals over {:.1}s (mean λ={:.1} req/s)",
+                src.rows(),
+                src.span_s(),
+                src.mean_rate_rps()
+            )
+        }
+        _ => format!("λ={lambda} req/s × {duration}s"),
+    };
 
     let p = ManualProfile::for_gpu(gpus[0]);
+    let opts = EngineOptions { allow_parallel: false, ..Default::default() };
     let (homo_groups, homo_cfgs) =
         Topology::Homogeneous { ctx: LONG_CTX }.sim_pools(&p, groups, 1024);
     let mut rr = RoundRobin::new();
-    let homo = simulate_topology_with(
-        &reqs,
+    let homo = simulate_topology_source(
+        arrivals.source(&trace, &gen_cfg)?.as_mut(),
         &HomogeneousRouter,
         &homo_groups,
         &homo_cfgs,
         &mut rr,
-        true,
+        opts,
     );
 
     let (routed_groups, routed_cfgs) = routed_topo.sim_pools(&p, groups, 1024);
-    let routed = simulate_topology_with(
-        &reqs,
+    let routed = simulate_topology_source(
+        arrivals.source(&trace, &gen_cfg)?.as_mut(),
         router.as_ref(),
         &routed_groups,
         &routed_cfgs,
         policy.as_mut(),
-        true,
+        opts,
     );
 
     println!(
-        "\n== simulate: {} | λ={lambda} req/s × {duration}s | {} groups of {} \
+        "\n== simulate: {workload_label} | {traffic} | {} groups of {} \
          | router {} | dispatch {} ==",
-        trace.name,
         groups,
         p.gpu.name,
         router.name(),
@@ -1094,6 +1162,7 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
             seed: 42,
             ..defaults.gen
         },
+        arrivals: args.arrivals()?,
         groups: args.opt_u32("groups", 8).max(2).max(max_k),
         dispatches,
         b_shorts,
@@ -1513,6 +1582,117 @@ mod tests {
                 .map(String::from)
         )
         .is_err());
+    }
+
+    #[test]
+    fn arrivals_option_parses_and_validates() {
+        // Built-in trace names stay stationary; the legacy silent
+        // default is untouched.
+        assert_eq!(
+            args("simulate --trace azure").arrivals().unwrap(),
+            ArrivalSpec::Stationary
+        );
+        assert_eq!(
+            args("simulate").arrivals().unwrap(),
+            ArrivalSpec::Stationary
+        );
+        // Every archetype name parses; junk is a named error.
+        for name in ArrivalSpec::NAMES {
+            assert!(
+                args(&format!("simulate --workload {name}"))
+                    .arrivals()
+                    .is_ok(),
+                "{name}"
+            );
+        }
+        assert!(args("simulate --workload bogus").arrivals().is_err());
+        // A missing replay file fails at parse time, not on a worker.
+        assert!(args("simulate --trace /no/such/file.csv")
+            .arrivals()
+            .is_err());
+    }
+
+    #[test]
+    fn simulate_accepts_workload_archetypes() {
+        let quick = |extra: &str| {
+            run(format!("simulate --lambda 10 --duration 1 --groups 2 {extra}")
+                .split_whitespace()
+                .map(String::from))
+        };
+        assert_eq!(quick("--workload diurnal").unwrap(), 0);
+        assert_eq!(quick("--workload flash-crowd --dispatch jsq").unwrap(), 0);
+        assert_eq!(quick("--workload multi-tenant").unwrap(), 0);
+        assert!(quick("--workload bogus").is_err());
+    }
+
+    #[test]
+    fn simulate_replays_a_csv_trace_end_to_end() {
+        // Record a generated trace, then replay it through simulate and
+        // through a sweep cell — the full --trace file path.
+        let gen = crate::workload::synth::GenConfig {
+            lambda_rps: 20.0,
+            duration_s: 1.0,
+            max_prompt_tokens: 8000,
+            max_output_tokens: 64,
+            seed: 11,
+        };
+        let reqs =
+            crate::workload::synth::generate(&azure_conversations(), &gen);
+        let path = std::env::temp_dir().join("wattlaw_cli_replay.csv");
+        crate::workload::trace::save_csv(&path, &reqs).unwrap();
+        let p = path.display();
+
+        assert_eq!(
+            run(format!("simulate --trace {p} --groups 2")
+                .split_whitespace()
+                .map(String::from))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run(format!(
+                "simulate sweep --trace {p} --groups 2 --dispatch rr \
+                 --b-short 4096 --workers 2 --format csv"
+            )
+            .split_whitespace()
+            .map(String::from))
+            .unwrap(),
+            0
+        );
+        // Replay and an archetype are two answers to the same question.
+        assert!(run(format!(
+            "simulate --trace {p} --workload diurnal --groups 2"
+        )
+        .split_whitespace()
+        .map(String::from))
+        .is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn simulate_sweep_accepts_a_workload_archetype() {
+        let code = run(
+            "simulate sweep --lambda 200 --duration 0.3 --groups 2 \
+             --dispatch jsq --b-short 4096 --workload flash-crowd \
+             --workers 2 --format csv"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn optimize_accepts_a_workload_archetype() {
+        let code = run(
+            "optimize --gpu h100 --lambda 60 --duration 0.5 --groups 2 \
+             --b-short 4096 --dispatch rr --top-k 1 --workers 2 \
+             --workload heavy-tail --slo-ttft 1000 --format json"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(code, 0);
     }
 
     #[test]

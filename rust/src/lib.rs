@@ -22,7 +22,14 @@
 //!   topology (two-pool / FleetOpt-γ / K-pool context partitions), GPU
 //!   generation *per pool* (heterogeneous fleets: an assignment vector
 //!   like H100|H100|B200, resolved identically by both engines), and
-//!   workload — with multi-threaded
+//!   workload — arrival processes as a first-class axis
+//!   ([`workload::arrival`]): stationary Poisson, diurnal, flash-crowd,
+//!   multi-tenant and heavy-tailed archetypes plus CSV trace replay
+//!   (`--workload` / `--trace file.csv`), each a lazy
+//!   [`workload::ArrivalSource`] the engine pulls one request at a time
+//!   so trace memory stays O(1) at any λ × duration (the materialized
+//!   path is retained as the bit-for-bit replay oracle) — with
+//!   multi-threaded
 //!   dispatch × topology × context-window sweeps and a two-stage
 //!   (analytical screen → simulated refine) FleetOpt optimizer that
 //!   searches assignment vectors by Eq. 4 branch-and-bound (admissible

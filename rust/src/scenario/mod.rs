@@ -37,9 +37,13 @@ use crate::fleet::topology::Topology;
 use crate::power::Gpu;
 use crate::router::adaptive::AdaptiveRouter;
 use crate::router::Router;
-use crate::sim::{dispatch, simulate_topology_opts, EngineOptions};
+use crate::sim::{
+    dispatch, simulate_topology_opts, simulate_topology_source,
+    EngineOptions, TopoSimReport,
+};
+use crate::workload::arrival::{ArrivalSource, ArrivalSpec};
 use crate::workload::cdf::WorkloadTrace;
-use crate::workload::synth::{generate, GenConfig};
+use crate::workload::synth::GenConfig;
 use crate::workload::Request;
 
 /// Measured-vs-analytical relative delta, percent — the one convention
@@ -87,9 +91,15 @@ pub struct ScenarioSpec {
     pub topology: Topology,
     pub gpu: Gpu,
     pub workload: WorkloadTrace,
-    /// Traffic: λ, duration, caps, seed ([`generate`] turns this into
-    /// the simulated trace; the analytical path reads `lambda_rps`).
+    /// Traffic: λ, duration, caps, seed (the base parameters every
+    /// arrival process modulates; the analytical path reads
+    /// `lambda_rps` as the mean rate).
     pub gen: GenConfig,
+    /// The arrival process: stationary Poisson (default), a generated
+    /// archetype (diurnal, flash-crowd, multi-tenant, heavy-tail), or
+    /// CSV trace replay. [`Self::simulate`] streams it lazily into the
+    /// engine in O(1) trace memory.
+    pub arrivals: ArrivalSpec,
     /// Total simulated TP groups, split across pools by
     /// [`Topology::sim_pools`].
     pub groups: u32,
@@ -124,6 +134,7 @@ impl ScenarioSpec {
             gpu,
             workload,
             gen,
+            arrivals: ArrivalSpec::Stationary,
             groups: 8,
             dispatch: "rr".into(),
             router: RouterSpec::Static,
@@ -152,6 +163,11 @@ impl ScenarioSpec {
 
     pub fn with_router(mut self, router: RouterSpec) -> Self {
         self.router = router;
+        self
+    }
+
+    pub fn with_arrivals(mut self, arrivals: ArrivalSpec) -> Self {
+        self.arrivals = arrivals;
         self
     }
 
@@ -237,7 +253,7 @@ impl ScenarioSpec {
     pub fn label(&self) -> String {
         format!(
             "{} | {} | {} | {} | {} | λ={}",
-            self.workload.name,
+            self.workload_label(),
             self.topology.label(),
             // Per-pool assignment when mixed; the plain SKU otherwise.
             self.gpus_label(),
@@ -276,10 +292,44 @@ impl ScenarioSpec {
         }
     }
 
-    /// The synthetic trace this scenario plays (deterministic in
-    /// `gen.seed`).
+    /// The lazy arrival source this scenario plays (deterministic in
+    /// `gen.seed` for every generated archetype).
+    ///
+    /// # Errors
+    /// [`ArrivalSpec::Replay`] when the trace file is missing or fails
+    /// validation (line-numbered CSV errors); generated archetypes are
+    /// infallible.
+    pub fn source(&self) -> crate::Result<Box<dyn ArrivalSource>> {
+        self.arrivals.source(&self.workload, &self.gen)
+    }
+
+    /// The workload axis as every results surface shows it: the trace
+    /// name alone for stationary arrivals (`Azure`), trace+process when
+    /// an archetype modulates it (`Azure+diurnal(a=0.6)`), the process
+    /// alone when it replaces the trace outright (multi-tenant mixes,
+    /// CSV replay).
+    pub fn workload_label(&self) -> String {
+        match &self.arrivals {
+            ArrivalSpec::Stationary => self.workload.name.to_string(),
+            spec @ (ArrivalSpec::MultiTenant | ArrivalSpec::Replay { .. }) => {
+                spec.label()
+            }
+            spec => format!("{}+{}", self.workload.name, spec.label()),
+        }
+    }
+
+    /// The scenario's trace, materialized as a `Vec` by draining
+    /// [`Self::source`] — the replay oracle for the streaming path and
+    /// the input to engines that genuinely need the whole trace in
+    /// memory (the parallel fast path, hand-crafted-trace comparisons).
+    ///
+    /// # Panics
+    /// When the source fails to build (replay file missing/invalid);
+    /// [`Self::simulate`] and the CLI validate replay specs up front.
     pub fn trace(&self) -> Vec<Request> {
-        generate(&self.workload, &self.gen)
+        self.source()
+            .expect("arrival source failed to build")
+            .collect()
     }
 
     /// The closed-form side: pools sized to `gen.lambda_rps` under the
@@ -300,10 +350,46 @@ impl ScenarioSpec {
         )
     }
 
-    /// The dynamic side: generate the trace and play it through the
-    /// event-driven engine.
+    /// The dynamic side: play this scenario's arrival source through
+    /// the event-driven engine.
+    ///
+    /// Arrivals are **streamed** — the engine pulls one request at a
+    /// time from [`Self::source`], so trace memory stays O(1) no matter
+    /// how long the run is. The one exception: when `allow_parallel` is
+    /// set *and* the (router, dispatch, fleet) tuple is arrival-static,
+    /// the parallel fast path pre-assigns the whole trace to groups, so
+    /// the trace is materialized first (bit-identical results either
+    /// way — the engine's replay guarantee).
+    ///
+    /// # Panics
+    /// When a [`ArrivalSpec::Replay`] source fails to build; the CLI
+    /// validates replay files before constructing specs.
     pub fn simulate(&self, allow_parallel: bool) -> ScenarioOutcome {
-        self.simulate_trace(&self.trace(), allow_parallel)
+        let profile = self.profile();
+        let (pool_groups, pool_cfgs) =
+            self.topology.sim_pools(&profile, self.groups, self.ingest_chunk);
+        let router = self.router();
+        let mut policy = self.dispatch_policy();
+        if allow_parallel
+            && crate::sim::events::parallel_eligible(
+                router.as_ref(),
+                policy.as_ref(),
+                &pool_groups,
+            )
+        {
+            return self.simulate_trace(&self.trace(), true);
+        }
+        let mut source =
+            self.source().expect("arrival source failed to build");
+        let report = simulate_topology_source(
+            source.as_mut(),
+            router.as_ref(),
+            &pool_groups,
+            &pool_cfgs,
+            policy.as_mut(),
+            EngineOptions { allow_parallel: false, ..Default::default() },
+        );
+        self.outcome_from_report(report)
     }
 
     /// Play an explicit trace through this scenario's fleet (for
@@ -327,11 +413,20 @@ impl ScenarioSpec {
             policy.as_mut(),
             EngineOptions { allow_parallel, ..Default::default() },
         );
+        self.outcome_from_report(report)
+    }
+
+    /// Fold an engine report into this spec's [`ScenarioOutcome`] — the
+    /// one place the accounted meters become a reportable cell, shared
+    /// by the streamed and materialized paths so the two can never
+    /// diverge in what they report.
+    fn outcome_from_report(&self, report: TopoSimReport) -> ScenarioOutcome {
         let mut m = report.fleet_metrics();
         let p99_ttft_s = m.ttft_s.p99();
         ScenarioOutcome {
             label: self.label(),
             topology: self.topology.label(),
+            workload: self.workload_label(),
             gpus: self.gpus_label(),
             router: self.router_label(),
             dispatch: self.dispatch.clone(),
@@ -359,6 +454,10 @@ impl ScenarioSpec {
 pub struct ScenarioOutcome {
     pub label: String,
     pub topology: String,
+    /// The workload axis ([`ScenarioSpec::workload_label`]): trace name
+    /// for stationary arrivals, trace+process when an archetype
+    /// modulates it (`Azure+diurnal(a=0.6)`).
+    pub workload: String,
     /// Per-pool GPU assignment label ([`ScenarioSpec::gpus_label`]):
     /// the plain SKU name for homogeneous fleets, `H100|H100|B200`
     /// when generations are mixed.
@@ -417,6 +516,18 @@ mod tests {
         .with_groups(4)
     }
 
+    /// The token-conservation oracle every engine path must satisfy:
+    /// drain the spec's own streaming source and sum the output tokens
+    /// it promises. One helper instead of three copy-pasted sums — and
+    /// because it consumes the *source*, it also pins `trace()` (a
+    /// collected source) and the streamed engine to the same ledger.
+    fn expected_output_tokens(spec: &ScenarioSpec) -> u64 {
+        spec.source()
+            .expect("arrival source failed to build")
+            .map(|r| r.output_tokens as u64)
+            .sum()
+    }
+
     #[test]
     fn one_spec_feeds_both_engines() {
         let spec = pool_spec();
@@ -428,10 +539,8 @@ mod tests {
         assert!(sim.tok_per_watt > 0.0);
         assert!(sim.completed > 0);
         assert!(sim.p99_ttft_s.is_finite());
-        // Token conservation against the spec's own trace.
-        let want: u64 =
-            spec.trace().iter().map(|r| r.output_tokens as u64).sum();
-        assert_eq!(sim.output_tokens, want);
+        // Token conservation against the spec's own arrival source.
+        assert_eq!(sim.output_tokens, expected_output_tokens(&spec));
     }
 
     #[test]
@@ -503,9 +612,11 @@ mod tests {
         assert!(analytic.tok_per_watt.0 > 0.0);
         let sim = spec.simulate(true);
         assert!(sim.completed > 0);
-        let want: u64 =
-            spec.trace().iter().map(|r| r.output_tokens as u64).sum();
-        assert_eq!(sim.output_tokens, want, "K-pool token conservation");
+        assert_eq!(
+            sim.output_tokens,
+            expected_output_tokens(&spec),
+            "K-pool token conservation"
+        );
     }
 
     #[test]
@@ -561,9 +672,7 @@ mod tests {
         let sim = mixed.simulate(true);
         assert!(sim.completed > 0);
         assert_eq!(sim.gpus, "H100|B200");
-        let want: u64 =
-            mixed.trace().iter().map(|r| r.output_tokens as u64).sum();
-        assert_eq!(sim.output_tokens, want);
+        assert_eq!(sim.output_tokens, expected_output_tokens(&mixed));
     }
 
     #[test]
@@ -718,6 +827,85 @@ mod tests {
         for o in [&pure, &jsq, &guarded] {
             assert_eq!(o.output_tokens, want, "{}", o.dispatch);
         }
+    }
+
+    #[test]
+    fn streamed_simulate_replays_the_materialized_trace_bitwise() {
+        // `simulate(false)` streams arrivals through the engine;
+        // `simulate_trace(&trace(), false)` materializes the identical
+        // trace first. The seq-offset argument in `sim::events` says the
+        // meters must agree to the bit — across a load-aware dispatch
+        // (jsq streams even under `allow_parallel`).
+        let spec = pool_spec().with_dispatch("jsq");
+        let streamed = spec.simulate(false);
+        let materialized = spec.simulate_trace(&spec.trace(), false);
+        assert_eq!(streamed.output_tokens, materialized.output_tokens);
+        assert_eq!(streamed.joules.to_bits(), materialized.joules.to_bits());
+        assert_eq!(
+            streamed.idle_joules.to_bits(),
+            materialized.idle_joules.to_bits()
+        );
+        assert_eq!(streamed.steps, materialized.steps);
+        assert_eq!(streamed.completed, materialized.completed);
+        assert_eq!(streamed.rejected, materialized.rejected);
+        assert_eq!(
+            streamed.p99_ttft_s.to_bits(),
+            materialized.p99_ttft_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn generated_archetypes_run_end_to_end_through_simulate() {
+        for name in ["diurnal", "flash-crowd", "multi-tenant", "heavy-tail"] {
+            let arrivals = ArrivalSpec::parse(name)
+                .unwrap_or_else(|| panic!("unknown archetype '{name}'"));
+            let spec = pool_spec().with_arrivals(arrivals);
+            let out = spec.simulate(true);
+            assert!(out.completed > 0, "{name}: nothing completed");
+            assert_eq!(
+                out.output_tokens,
+                expected_output_tokens(&spec),
+                "{name}: token conservation"
+            );
+            // The workload axis surfaces the process on the outcome and
+            // in the cell label.
+            assert!(
+                out.workload.contains(name.split('(').next().unwrap()),
+                "{name}: workload label was '{}'",
+                out.workload
+            );
+            assert!(
+                out.label.contains(&out.workload),
+                "{name}: label '{}' missing workload '{}'",
+                out.label,
+                out.workload
+            );
+        }
+    }
+
+    #[test]
+    fn archetype_simulate_is_deterministic_in_the_spec() {
+        let spec = pool_spec()
+            .with_dispatch("jsq")
+            .with_arrivals(ArrivalSpec::parse("flash-crowd").unwrap());
+        let a = spec.simulate(true);
+        let b = spec.simulate(true);
+        assert_eq!(a.output_tokens, b.output_tokens);
+        assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+        assert_eq!(a.p99_ttft_s.to_bits(), b.p99_ttft_s.to_bits());
+    }
+
+    #[test]
+    fn workload_label_shows_the_arrival_process() {
+        assert_eq!(pool_spec().workload_label(), "Azure");
+        let diurnal = pool_spec()
+            .with_arrivals(ArrivalSpec::parse("diurnal").unwrap());
+        assert_eq!(diurnal.workload_label(), "Azure+diurnal(a=0.6)");
+        // Multi-tenant replaces the base trace outright, so the label
+        // drops it rather than claiming traffic it doesn't carry.
+        let mt = pool_spec().with_arrivals(ArrivalSpec::MultiTenant);
+        assert_eq!(mt.workload_label(), "multi-tenant");
+        assert!(!mt.label().contains("Azure"), "{}", mt.label());
     }
 
     #[test]

@@ -46,6 +46,7 @@ use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
 use crate::results::{Cell, Column, RowSet};
 use crate::sim::dispatch;
+use crate::workload::arrival::ArrivalSpec;
 use crate::workload::cdf::WorkloadTrace;
 use crate::workload::synth::GenConfig;
 
@@ -356,6 +357,12 @@ pub struct OptimizeConfig {
     pub dispatches: Vec<String>,
     /// Traffic for stage B (`lambda_rps` also feeds stage A's sizing).
     pub gen: GenConfig,
+    /// Arrival process for stage B's simulated cells, streamed lazily
+    /// per cell. Stage A stays arrival-process-blind: the closed form
+    /// sizes to the *mean* rate `gen.lambda_rps`, so a bursty archetype
+    /// widens the analyze-vs-simulate delta rather than moving the
+    /// screen — exactly the fidelity question stage B exists to answer.
+    pub arrivals: ArrivalSpec,
     /// Simulated TP groups per stage-B cell.
     pub groups: u32,
     pub slo: SloTargets,
@@ -384,6 +391,7 @@ impl Default for OptimizeConfig {
                 max_output_tokens: 512,
                 seed: 42,
             },
+            arrivals: ArrivalSpec::Stationary,
             groups: 8,
             slo: SloTargets::default(),
             lbar: LBarPolicy::Window,
@@ -1088,6 +1096,7 @@ fn spec_for(
     )
     .with_groups(cfg.groups)
     .with_dispatch(dispatch)
+    .with_arrivals(cfg.arrivals.clone())
     .with_slo(cfg.slo)
     .with_lbar(cfg.lbar)
     .with_rho(cfg.rho)

@@ -7,17 +7,21 @@
 //! default grid is dozens of cells. Cells are embarrassingly parallel,
 //! so the sweep parallelizes *across* cells (`std::thread::scope`,
 //! results placed by index) and runs each cell's engine sequentially —
-//! no nested oversubscription. Every cell's record pairs the two
-//! engines' numbers — closed-form `analyze` tok/W next to measured
-//! `simulate` tok/W with their relative delta — plus p99 TTFT and an
-//! SLO verdict: the standing analyze-vs-simulate consistency table, so
-//! any two cells of the grid (and the two engines within a cell) are
-//! directly comparable.
+//! no nested oversubscription. Each cell **streams its own arrival
+//! source** ([`ScenarioSpec::simulate`]) — O(1) trace memory per cell
+//! regardless of λ × duration, so a million-arrival sweep cell costs no
+//! more memory than a thousand-arrival one and cells share no trace
+//! buffer. Every cell's record pairs the two engines' numbers —
+//! closed-form `analyze` tok/W next to measured `simulate` tok/W with
+//! their relative delta — plus p99 TTFT and an SLO verdict: the
+//! standing analyze-vs-simulate consistency table, so any two cells of
+//! the grid (and the two engines within a cell) are directly
+//! comparable.
 //!
 //! CLI: `wattlaw simulate sweep [--lambda 1000] [--duration S]
-//! [--groups N] [--gpu ...] [--trace ...] [--dispatch NAME]
-//! [--b-short N] [--pools K] [--cutoffs a,b,c] [--spill F]
-//! [--slo-ttft S] [--workers N] [--format table|csv|json]`.
+//! [--groups N] [--gpu ...] [--trace ...] [--workload ARCHETYPE]
+//! [--dispatch NAME] [--b-short N] [--pools K] [--cutoffs a,b,c]
+//! [--spill F] [--slo-ttft S] [--workers N] [--format table|csv|json]`.
 
 use super::{RouterSpec, ScenarioOutcome, ScenarioSpec, SloTargets};
 use crate::fleet::profile::PowerAccounting;
@@ -25,6 +29,7 @@ use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
 use crate::results::{Cell, Column, RowSet};
 use crate::sim::dispatch;
+use crate::workload::arrival::ArrivalSpec;
 use crate::workload::cdf::WorkloadTrace;
 use crate::workload::synth::GenConfig;
 
@@ -34,6 +39,10 @@ pub struct SweepConfig {
     pub gpu: Gpu,
     /// Traffic per cell (the paper's fleets use λ = 1000).
     pub gen: GenConfig,
+    /// Arrival process shared by every cell: stationary Poisson by
+    /// default, a generated archetype (`--workload`), or CSV trace
+    /// replay (`--trace file.csv`). Streamed lazily per cell.
+    pub arrivals: ArrivalSpec,
     /// Total simulated groups per cell.
     pub groups: u32,
     /// Dispatch axis (policy names; [`dispatch::ALL`] by default).
@@ -71,6 +80,7 @@ impl Default for SweepConfig {
                 max_output_tokens: 512,
                 seed: 42,
             },
+            arrivals: ArrivalSpec::Stationary,
             groups: 8,
             dispatches: dispatch::ALL.iter().map(|s| s.to_string()).collect(),
             b_shorts: vec![2048, 4096, 8192],
@@ -136,6 +146,7 @@ pub fn grid(workload: &WorkloadTrace, cfg: &SweepConfig) -> Vec<ScenarioSpec> {
                 .with_groups(cfg.groups)
                 .with_dispatch(d)
                 .with_router(*router)
+                .with_arrivals(cfg.arrivals.clone())
                 .with_slo(cfg.slo),
             );
         }
@@ -148,41 +159,29 @@ pub fn grid(workload: &WorkloadTrace, cfg: &SweepConfig) -> Vec<ScenarioSpec> {
 /// engine runs sequentially (no nested oversubscription); `workers == 1`
 /// is honored literally — everything on the calling thread — and a
 /// single cell is instead given the in-cell parallel fast path when more
-/// than one worker was requested. Grid cells all share one
-/// (workload, gen), so the synthetic trace is generated once and played
-/// through every cell.
+/// than one worker was requested. Each cell streams arrivals from its
+/// own source (the pre-streaming grid materialized one shared trace for
+/// every cell — now the whole sweep holds no trace buffer at all, so
+/// λ × duration no longer bounds the grid size memory can afford).
 pub fn run(specs: &[ScenarioSpec], workers: usize) -> Vec<ScenarioOutcome> {
     let requested = workers.max(1);
     let workers = requested.min(specs.len().max(1));
-    // One trace for the whole grid when every cell would generate the
-    // same one (always true for grid()-built sweeps).
-    let shared: Option<Vec<crate::workload::Request>> = (specs.len() > 1
-        && specs.iter().all(|s| {
-            s.workload.name == specs[0].workload.name && s.gen == specs[0].gen
-        }))
-    .then(|| specs[0].trace());
-    let cell = |s: &ScenarioSpec, in_cell_parallel: bool| match &shared {
-        Some(t) => s.simulate_trace(t, in_cell_parallel),
-        None => s.simulate(in_cell_parallel),
-    };
-
     if specs.len() <= 1 {
-        return specs.iter().map(|s| cell(s, requested > 1)).collect();
+        return specs.iter().map(|s| s.simulate(requested > 1)).collect();
     }
     if workers == 1 {
-        return specs.iter().map(|s| cell(s, false)).collect();
+        return specs.iter().map(|s| s.simulate(false)).collect();
     }
     let mut results: Vec<Option<ScenarioOutcome>> =
         (0..specs.len()).map(|_| None).collect();
     let chunk = specs.len().div_ceil(workers);
-    let cell = &cell;
     std::thread::scope(|scope| {
         for (spec_chunk, out_chunk) in
             specs.chunks(chunk).zip(results.chunks_mut(chunk))
         {
             scope.spawn(move || {
                 for (s, slot) in spec_chunk.iter().zip(out_chunk.iter_mut()) {
-                    *slot = Some(cell(s, false));
+                    *slot = Some(s.simulate(false));
                 }
             });
         }
@@ -251,6 +250,7 @@ pub fn rowset(records: &[CellRecord], cfg: &SweepConfig) -> RowSet {
             cfg.groups,
         ),
         vec![
+            Column::str("Workload"),
             Column::str("Topology"),
             Column::str("GPUs"),
             Column::str("Router"),
@@ -268,6 +268,7 @@ pub fn rowset(records: &[CellRecord], cfg: &SweepConfig) -> RowSet {
         let o = &r.outcome;
         let delta = r.rel_delta_pct();
         rs.push(vec![
+            Cell::str(o.workload.clone()),
             Cell::str(o.topology.clone()),
             Cell::str(o.gpus.clone()),
             Cell::str(o.router.clone()),
@@ -411,6 +412,29 @@ mod tests {
     }
 
     #[test]
+    fn workload_axis_rides_through_grid_run_and_rowset() {
+        let cfg = SweepConfig {
+            arrivals: ArrivalSpec::parse("flash-crowd").unwrap(),
+            dispatches: vec!["jsq".into()],
+            ..tiny_cfg()
+        };
+        let specs = grid(&azure_conversations(), &cfg);
+        assert!(specs
+            .iter()
+            .all(|s| matches!(s.arrivals, ArrivalSpec::FlashCrowd { .. })));
+        let out = run(&specs, 2);
+        let recs = records(&specs, &out, cfg.acct);
+        let csv = rowset(&recs, &cfg).to_csv();
+        assert!(
+            csv.contains("Azure+flash-crowd(x5)"),
+            "workload column missing the archetype: {csv}"
+        );
+        for o in &out {
+            assert!(o.completed > 0, "{}", o.label);
+        }
+    }
+
+    #[test]
     fn parallel_sweep_matches_sequential_cell_order_and_bits() {
         let specs = grid(&azure_conversations(), &tiny_cfg());
         let seq = run(&specs, 1);
@@ -454,10 +478,11 @@ mod tests {
         let rs = rowset(&recs, &cfg);
         let csv = rs.to_csv();
         assert!(csv.starts_with(
-            "Topology,GPUs,Router,Dispatch,analyze tok/W (tok/J),\
-             simulate tok/W (tok/J),delta (%),p99 TTFT (s),SLO,\
-             completed,rejected\n"
+            "Workload,Topology,GPUs,Router,Dispatch,\
+             analyze tok/W (tok/J),simulate tok/W (tok/J),delta (%),\
+             p99 TTFT (s),SLO,completed,rejected\n"
         ));
+        assert!(csv.contains("\nAzure,"), "workload column filled: {csv}");
         assert_eq!(csv.lines().count(), 1 + recs.len());
         let doc = crate::runtime::json::parse(&rs.to_json()).unwrap();
         assert_eq!(

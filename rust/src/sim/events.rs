@@ -60,6 +60,27 @@
 //! and merged in group-index order. Per-group event streams are identical
 //! either way, so sequential and parallel runs produce bit-identical
 //! results (property-tested).
+//!
+//! **Streaming arrivals**: [`run_fleet`] takes a materialized, sorted
+//! trace and enqueues every arrival up front; [`run_fleet_stream`]
+//! instead pulls one request at a time from an
+//! [`ArrivalSource`](crate::workload::arrival::ArrivalSource), keeping
+//! exactly one pending arrival in the event queue — O(1) trace memory
+//! at any λ·duration. The two replay bit-for-bit because `seq` only
+//! breaks ties between events with equal `(time, class)`: arrivals
+//! only tie with arrivals, and their relative push order is the same
+//! 0, 1, 2, … on both paths; steps and wakes share one counter
+//! incremented at identical processing points, so starting it at 0
+//! instead of `trace.len()` offsets every step/wake `seq` uniformly
+//! and flips no comparison. Identical pop order ⇒ identical meters
+//! (asserted bitwise across all dispatch policies and both queue modes
+//! by `tests/properties.rs` and the in-module tests) — the
+//! materialized path is the streaming path's replay oracle, the same
+//! pattern that kept the binary heap and the per-arrival snapshots.
+//! Sources must yield non-decreasing times (asserted), which also
+//! guarantees the calendar queue never sees a backward push. The
+//! streaming path is sequential-only: the parallel fast path
+//! pre-assigns the whole trace and therefore requires materialization.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -73,6 +94,7 @@ use crate::serve::energy::EnergyMeter;
 use crate::serve::kvblocks::BlockAllocator;
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::request::ServeRequest;
+use crate::workload::arrival::ArrivalSource;
 use crate::workload::Request;
 
 /// Live load of one group, as routers and dispatch policies see it.
@@ -699,10 +721,11 @@ fn start_step(
     });
 }
 
-/// Run the fleet over a trace that is **already sorted by arrival time**.
-/// Returns per-pool, per-group outcomes in index order.
-fn validate_fleet_inputs(
-    trace: &[Request],
+/// Topology sanity checks shared by every engine entry point (the
+/// streaming path has no trace to scan, so the per-request finiteness
+/// check lives in [`validate_fleet_inputs`] and inline at the pull
+/// site of `run_fleet_stream`).
+fn validate_topology_inputs(
     router: &dyn Router,
     pool_groups: &[u32],
     pool_cfgs: &[GroupSimConfig],
@@ -716,6 +739,15 @@ fn validate_fleet_inputs(
     );
     assert_eq!(pool_groups.len(), pool_cfgs.len());
     assert!(pool_groups.iter().all(|&g| g > 0), "empty pool");
+}
+
+fn validate_fleet_inputs(
+    trace: &[Request],
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+) {
+    validate_topology_inputs(router, pool_groups, pool_cfgs);
     for r in trace {
         assert!(
             r.arrival_s.is_finite(),
@@ -723,6 +755,169 @@ fn validate_fleet_inputs(
             r.id
         );
     }
+}
+
+/// Handle one arrival: route + dispatch it, submit to the chosen
+/// group's queue, and wake the group if it was quiescent. Shared
+/// verbatim by the materialized and streaming engines, so the two can
+/// only diverge in how events are *ordered* — which the seq-offset
+/// argument in the module docs rules out.
+#[allow(clippy::too_many_arguments)]
+fn handle_arrival(
+    req: &Request,
+    now: f64,
+    router: &dyn Router,
+    dispatch: &mut dyn DispatchPolicy,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+    pools: &mut [Vec<GroupSim>],
+    q: &mut EventQueue,
+    seq: &mut u64,
+    live: &mut FleetState,
+    canary: &FleetState,
+    need_state: bool,
+    track: bool,
+    state_mode: StateMode,
+) {
+    // Legacy oracle mode only: rebuild the full snapshot the
+    // pre-refactor engine allocated on every arrival.
+    let rebuilt = (need_state && state_mode == StateMode::RebuildPerArrival)
+        .then(|| snapshot(pools, pool_cfgs));
+    let state_ref: &FleetState = match &rebuilt {
+        Some(s) => s,
+        None if track => live,
+        None => canary,
+    };
+    let (pool, group, sreq) =
+        assign(router, dispatch, pool_groups, req, state_ref);
+    assert!(
+        pool < pools.len() && group < pools[pool].len(),
+        "dispatch out of range: pool {pool} group {group}"
+    );
+    let lane = live.lane(pool, group);
+    let gs = &mut pools[pool][group];
+    if !gs.batcher.submit(sreq) {
+        gs.metrics.rejected += 1;
+    }
+    if !live.s.busy[lane] {
+        // Fast-forward the quiescent group to now: the gap integrates
+        // at the meter's standing batch — idle power for a never-run
+        // group, the final step's P(n_active) after a drain (the
+        // legacy loop's left-constant convention, kept for replay).
+        live.s.busy[lane] = true;
+        gs.meter.observe(now, 0.0);
+        live.s.clock[lane] = now;
+        *seq += 1;
+        q.push(Ev {
+            t: now,
+            class: CLASS_WAKE,
+            seq: *seq,
+            kind: EvKind::Wake { pool, group },
+        });
+    }
+    if track {
+        live.refresh_group(pool, group, &pools[pool][group]);
+    }
+}
+
+/// Apply a finished step's work plan at its boundary, then immediately
+/// plan the group's next step. Shared by both engines.
+#[allow(clippy::too_many_arguments)]
+fn handle_step_complete(
+    pool: usize,
+    group: usize,
+    now: f64,
+    pool_cfgs: &[GroupSimConfig],
+    pools: &mut [Vec<GroupSim>],
+    q: &mut EventQueue,
+    seq: &mut u64,
+    live: &mut FleetState,
+    track: bool,
+) {
+    let lane = live.lane(pool, group);
+    live.s.clock[lane] = now;
+    let gs = &mut pools[pool][group];
+    let plan = gs
+        .pending_plan
+        .take()
+        .expect("StepComplete without an in-flight plan");
+    for (i, w) in plan.into_iter().enumerate() {
+        match w {
+            SlotWork::Idle => {}
+            SlotWork::Ingest { .. } => {
+                gs.batcher.on_step(i, w, now);
+            }
+            SlotWork::Decode => {
+                gs.meter.add_output_tokens(1);
+                if let Some(c) = gs.batcher.on_step(i, SlotWork::Decode, now) {
+                    gs.metrics.record(&c);
+                }
+            }
+        }
+    }
+    start_step(
+        gs,
+        &pool_cfgs[pool],
+        now,
+        q,
+        seq,
+        pool,
+        group,
+        &mut live.s.clock[lane],
+        &mut live.s.busy[lane],
+    );
+    if track {
+        live.refresh_group(pool, group, &pools[pool][group]);
+    }
+}
+
+/// Re-enter the stepping loop after an idle gap. Shared by both engines.
+#[allow(clippy::too_many_arguments)]
+fn handle_wake(
+    pool: usize,
+    group: usize,
+    now: f64,
+    pool_cfgs: &[GroupSimConfig],
+    pools: &mut [Vec<GroupSim>],
+    q: &mut EventQueue,
+    seq: &mut u64,
+    live: &mut FleetState,
+    track: bool,
+) {
+    let lane = live.lane(pool, group);
+    let gs = &mut pools[pool][group];
+    start_step(
+        gs,
+        &pool_cfgs[pool],
+        now,
+        q,
+        seq,
+        pool,
+        group,
+        &mut live.s.clock[lane],
+        &mut live.s.busy[lane],
+    );
+    if track {
+        live.refresh_group(pool, group, &pools[pool][group]);
+    }
+}
+
+/// Drain finished groups into per-pool outcomes, in index order.
+fn finish_outcomes(
+    pools: Vec<Vec<GroupSim>>,
+    live: &FleetState,
+) -> Vec<Vec<GroupOutcome>> {
+    let mut out: Vec<Vec<GroupOutcome>> = Vec::with_capacity(pools.len());
+    let mut lane = 0usize;
+    for groups in pools {
+        let mut pool_out = Vec::with_capacity(groups.len());
+        for g in groups {
+            pool_out.push(g.finish(live.s.clock[lane]));
+            lane += 1;
+        }
+        out.push(pool_out);
+    }
+    out
 }
 
 pub(crate) fn run_fleet(
@@ -781,107 +976,30 @@ pub(crate) fn run_fleet(
 
     while let Some(ev) = q.pop() {
         match ev.kind {
-            EvKind::Arrival { idx } => {
-                let req = &trace[idx];
-                // Legacy oracle mode only: rebuild the full snapshot the
-                // pre-refactor engine allocated on every arrival.
-                let rebuilt = (need_state
-                    && opts.state_mode == StateMode::RebuildPerArrival)
-                    .then(|| snapshot(&pools, pool_cfgs));
-                let state_ref: &FleetState = match &rebuilt {
-                    Some(s) => s,
-                    None if track => &live,
-                    None => &canary,
-                };
-                let (pool, group, sreq) =
-                    assign(router, dispatch, pool_groups, req, state_ref);
-                assert!(
-                    pool < pools.len() && group < pools[pool].len(),
-                    "dispatch out of range: pool {pool} group {group}"
-                );
-                let lane = live.lane(pool, group);
-                let gs = &mut pools[pool][group];
-                if !gs.batcher.submit(sreq) {
-                    gs.metrics.rejected += 1;
-                }
-                if !live.s.busy[lane] {
-                    // Fast-forward the quiescent group to now: the gap
-                    // integrates at the meter's standing batch — idle
-                    // power for a never-run group, the final step's
-                    // P(n_active) after a drain (the legacy loop's
-                    // left-constant convention, kept for replay).
-                    live.s.busy[lane] = true;
-                    gs.meter.observe(ev.t, 0.0);
-                    live.s.clock[lane] = ev.t;
-                    seq += 1;
-                    q.push(Ev {
-                        t: ev.t,
-                        class: CLASS_WAKE,
-                        seq,
-                        kind: EvKind::Wake { pool, group },
-                    });
-                }
-                if track {
-                    live.refresh_group(pool, group, &pools[pool][group]);
-                }
-            }
-            EvKind::StepComplete { pool, group } => {
-                let lane = live.lane(pool, group);
-                live.s.clock[lane] = ev.t;
-                let gs = &mut pools[pool][group];
-                let plan = gs
-                    .pending_plan
-                    .take()
-                    .expect("StepComplete without an in-flight plan");
-                for (i, w) in plan.into_iter().enumerate() {
-                    match w {
-                        SlotWork::Idle => {}
-                        SlotWork::Ingest { .. } => {
-                            gs.batcher.on_step(i, w, ev.t);
-                        }
-                        SlotWork::Decode => {
-                            gs.meter.add_output_tokens(1);
-                            if let Some(c) =
-                                gs.batcher.on_step(i, SlotWork::Decode, ev.t)
-                            {
-                                gs.metrics.record(&c);
-                            }
-                        }
-                    }
-                }
-                start_step(
-                    gs,
-                    &pool_cfgs[pool],
-                    ev.t,
-                    &mut q,
-                    &mut seq,
-                    pool,
-                    group,
-                    &mut live.s.clock[lane],
-                    &mut live.s.busy[lane],
-                );
-                if track {
-                    live.refresh_group(pool, group, &pools[pool][group]);
-                }
-            }
-            EvKind::Wake { pool, group } => {
-                let lane = live.lane(pool, group);
-                let gs = &mut pools[pool][group];
-                start_step(
-                    gs,
-                    &pool_cfgs[pool],
-                    ev.t,
-                    &mut q,
-                    &mut seq,
-                    pool,
-                    group,
-                    &mut live.s.clock[lane],
-                    &mut live.s.busy[lane],
-                );
-                if track {
-                    live.refresh_group(pool, group, &pools[pool][group]);
-                }
-            }
+            EvKind::Arrival { idx } => handle_arrival(
+                &trace[idx],
+                ev.t,
+                router,
+                dispatch,
+                pool_groups,
+                pool_cfgs,
+                &mut pools,
+                &mut q,
+                &mut seq,
+                &mut live,
+                &canary,
+                need_state,
+                track,
+                opts.state_mode,
+            ),
+            EvKind::StepComplete { pool, group } => handle_step_complete(
+                pool, group, ev.t, pool_cfgs, &mut pools, &mut q, &mut seq,
+                &mut live, track,
+            ),
+            EvKind::Wake { pool, group } => handle_wake(
+                pool, group, ev.t, pool_cfgs, &mut pools, &mut q, &mut seq,
+                &mut live, track,
+            ),
         }
         if opts.validate_state && track {
             assert!(
@@ -893,17 +1011,148 @@ pub(crate) fn run_fleet(
         }
     }
 
-    let mut out: Vec<Vec<GroupOutcome>> = Vec::with_capacity(pools.len());
-    let mut lane = 0usize;
-    for groups in pools {
-        let mut pool_out = Vec::with_capacity(groups.len());
-        for g in groups {
-            pool_out.push(g.finish(live.s.clock[lane]));
-            lane += 1;
-        }
-        out.push(pool_out);
+    finish_outcomes(pools, &live)
+}
+
+/// Run the fleet over a lazy [`ArrivalSource`], pulling one request at
+/// a time: exactly one pending arrival lives in the event queue, so
+/// trace memory is O(1) at any λ·duration. The source must yield
+/// non-decreasing arrival times (asserted per pull).
+///
+/// Bit-for-bit equivalent to [`run_fleet`] on the materialized
+/// collection of the same source — see the module docs for the
+/// seq-offset argument, and `tests/properties.rs` for the property
+/// pinning it across all dispatch policies and both queue modes.
+/// Always sequential: the parallel fast path pre-assigns the whole
+/// trace, which is inherently materializing.
+pub(crate) fn run_fleet_stream(
+    source: &mut dyn ArrivalSource,
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+    dispatch: &mut dyn DispatchPolicy,
+    opts: EngineOptions,
+) -> Vec<Vec<GroupOutcome>> {
+    validate_topology_inputs(router, pool_groups, pool_cfgs);
+    assert_validate_applicable(router, &*dispatch, opts);
+    dispatch.configure_pools(pool_cfgs);
+
+    let mut pools: Vec<Vec<GroupSim>> = pool_groups
+        .iter()
+        .zip(pool_cfgs)
+        .map(|(&g, cfg)| (0..g).map(|_| GroupSim::new(cfg)).collect())
+        .collect();
+
+    // The queue never holds more than one arrival plus at most one
+    // step/wake per group, so its capacity is fleet-sized, not
+    // trace-sized; the bucket width comes from the source's rate hint
+    // instead of a measured trace span.
+    let total_groups: usize =
+        pool_groups.iter().map(|&g| g as usize).sum();
+    let mut q = EventQueue::new(
+        opts.queue_mode,
+        source.gap_hint(),
+        total_groups * 2 + 16,
+    );
+
+    // Arrivals carry their own seq counter (0, 1, 2, … in pull order —
+    // the same relative order the materialized path assigns them);
+    // steps/wakes share `seq` as in `run_fleet`, offset by not knowing
+    // the trace length up front, which no comparison can observe.
+    let mut arrival_seq: u64 = 0;
+    let mut pending: Option<Request> = None;
+    if let Some(r) = source.next() {
+        assert!(
+            r.arrival_s.is_finite(),
+            "non-finite arrival time for request {}",
+            r.id
+        );
+        q.push(Ev {
+            t: r.arrival_s,
+            class: CLASS_ARRIVAL,
+            seq: arrival_seq,
+            kind: EvKind::Arrival { idx: arrival_seq as usize },
+        });
+        pending = Some(r);
     }
-    out
+    let mut seq = 0u64;
+    let need_state = router.is_load_aware() || !dispatch.is_arrival_static();
+    let track = need_state && opts.state_mode == StateMode::Incremental;
+    let mut live = FleetState::initial(pool_groups, pool_cfgs);
+    let canary = FleetState::empty();
+
+    while let Some(ev) = q.pop() {
+        match ev.kind {
+            EvKind::Arrival { .. } => {
+                let req = pending
+                    .take()
+                    .expect("arrival event without a pending request");
+                // Pull the successor before handling, so the queue
+                // already orders it against whatever steps/wakes the
+                // current arrival schedules. The pending arrival always
+                // precedes every future arrival (non-decreasing time,
+                // lower seq within the arrival class), so the pop
+                // candidates match the materialized run's exactly.
+                if let Some(next) = source.next() {
+                    assert!(
+                        next.arrival_s.is_finite(),
+                        "non-finite arrival time for request {}",
+                        next.id
+                    );
+                    assert!(
+                        next.arrival_s >= req.arrival_s,
+                        "arrival source must be non-decreasing in time: \
+                         request {} at t = {} after t = {}",
+                        next.id,
+                        next.arrival_s,
+                        req.arrival_s
+                    );
+                    arrival_seq += 1;
+                    q.push(Ev {
+                        t: next.arrival_s,
+                        class: CLASS_ARRIVAL,
+                        seq: arrival_seq,
+                        kind: EvKind::Arrival { idx: arrival_seq as usize },
+                    });
+                    pending = Some(next);
+                }
+                handle_arrival(
+                    &req,
+                    ev.t,
+                    router,
+                    dispatch,
+                    pool_groups,
+                    pool_cfgs,
+                    &mut pools,
+                    &mut q,
+                    &mut seq,
+                    &mut live,
+                    &canary,
+                    need_state,
+                    track,
+                    opts.state_mode,
+                );
+            }
+            EvKind::StepComplete { pool, group } => handle_step_complete(
+                pool, group, ev.t, pool_cfgs, &mut pools, &mut q, &mut seq,
+                &mut live, track,
+            ),
+            EvKind::Wake { pool, group } => handle_wake(
+                pool, group, ev.t, pool_cfgs, &mut pools, &mut q, &mut seq,
+                &mut live, track,
+            ),
+        }
+        if opts.validate_state && track {
+            assert!(
+                live == snapshot(&pools, pool_cfgs),
+                "incremental FleetState diverged from a fresh snapshot \
+                 after event at t = {}",
+                ev.t
+            );
+        }
+    }
+
+    finish_outcomes(pools, &live)
 }
 
 /// Simulate one group in isolation — the unit of work of the parallel
@@ -1324,5 +1573,95 @@ mod tests {
             assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
             assert_eq!(a.metrics.completed, b.metrics.completed);
         }
+    }
+
+    #[test]
+    fn streamed_arrivals_replay_the_materialized_trace_bitwise() {
+        // Same seed through SynthSource (streaming) and generate()
+        // (materialized): the engines must agree to the bit, with a
+        // stateful policy so the live FleetState path is exercised.
+        let workload = crate::workload::cdf::azure_conversations();
+        let gen_cfg = GenConfig {
+            lambda_rps: 40.0,
+            duration_s: 2.0,
+            max_prompt_tokens: 6000,
+            max_output_tokens: 128,
+            seed: 21,
+        };
+        let trace = generate(&workload, &gen_cfg);
+        let materialized = run_fleet(
+            &trace,
+            &HomogeneousRouter,
+            &[3],
+            &[cfg(8192)],
+            &mut super::super::dispatch::JoinShortestQueue,
+            EngineOptions::default(),
+        );
+        let mut source =
+            crate::workload::arrival::SynthSource::new(&workload, &gen_cfg);
+        let streamed = run_fleet_stream(
+            &mut source,
+            &HomogeneousRouter,
+            &[3],
+            &[cfg(8192)],
+            &mut super::super::dispatch::JoinShortestQueue,
+            EngineOptions::default(),
+        );
+        for (a, b) in materialized[0].iter().zip(&streamed[0]) {
+            assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert_eq!(a.steps, b.steps);
+            assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+            assert_eq!(a.metrics.completed, b.metrics.completed);
+            assert_eq!(a.metrics.rejected, b.metrics.rejected);
+        }
+    }
+
+    #[test]
+    fn streamed_empty_source_finishes_idle() {
+        let mut source =
+            crate::workload::arrival::VecSource::new(Vec::new());
+        let out = run_fleet_stream(
+            &mut source,
+            &HomogeneousRouter,
+            &[2],
+            &[cfg(8192)],
+            &mut RoundRobin::new(),
+            EngineOptions::default(),
+        );
+        assert_eq!(out[0].len(), 2);
+        for g in &out[0] {
+            assert_eq!(g.metrics.completed, 0);
+            assert_eq!(g.output_tokens, 0);
+            assert_eq!(g.horizon_s, 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing in time")]
+    fn streamed_backwards_source_panics() {
+        // A source whose clock runs backwards must be rejected at the
+        // pull site, not corrupt the calendar queue.
+        struct Backwards(std::vec::IntoIter<Request>);
+        impl Iterator for Backwards {
+            type Item = Request;
+            fn next(&mut self) -> Option<Request> {
+                self.0.next()
+            }
+        }
+        impl ArrivalSource for Backwards {}
+        let reqs = vec![
+            Request { id: 0, arrival_s: 1.0, prompt_tokens: 10, output_tokens: 1 },
+            Request { id: 1, arrival_s: 0.5, prompt_tokens: 10, output_tokens: 1 },
+        ];
+        let mut source = Backwards(reqs.into_iter());
+        run_fleet_stream(
+            &mut source,
+            &HomogeneousRouter,
+            &[1],
+            &[cfg(8192)],
+            &mut RoundRobin::new(),
+            EngineOptions::default(),
+        );
     }
 }

@@ -15,10 +15,16 @@
 //! (`tests/sim_replay.rs` keeps that loop as an inline oracle).
 //! [`simulate_topology_with`] exposes the full engine: any
 //! [`DispatchPolicy`], load-aware routers, and the parallel per-group
-//! fast path.
+//! fast path. [`simulate_topology_source`] is the streaming entry
+//! point: arrivals pulled lazily from an
+//! [`ArrivalSource`](crate::workload::arrival::ArrivalSource) in O(1)
+//! trace memory, bit-for-bit equivalent to the materialized run of the
+//! same source.
 
 use super::dispatch::{DispatchPolicy, RoundRobin};
-use super::events::{run_fleet_auto, EngineOptions, GroupOutcome};
+use super::events::{
+    run_fleet_auto, run_fleet_stream, EngineOptions, GroupOutcome,
+};
 use crate::power::LogisticPower;
 use crate::roofline::Roofline;
 use crate::router::Router;
@@ -375,6 +381,28 @@ pub fn simulate_topology_opts(
     aggregate_topology(pool_groups, pool_cfgs, outcomes)
 }
 
+/// Streaming entry point: arrivals pulled one at a time from an
+/// [`ArrivalSource`](crate::workload::arrival::ArrivalSource), so
+/// trace memory is O(1) at any λ·duration. The source contract is
+/// non-decreasing arrival times (asserted per pull — there is no trace
+/// to sort); `opts.allow_parallel` is ignored because the parallel
+/// fast path pre-assigns a materialized trace. Bit-for-bit equivalent
+/// to [`simulate_topology_opts`] on the collected source
+/// (`tests/properties.rs` pins this across dispatch policies and
+/// queue modes).
+pub fn simulate_topology_source(
+    source: &mut dyn crate::workload::arrival::ArrivalSource,
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+    dispatch: &mut dyn DispatchPolicy,
+    opts: EngineOptions,
+) -> TopoSimReport {
+    let outcomes =
+        run_fleet_stream(source, router, pool_groups, pool_cfgs, dispatch, opts);
+    aggregate_topology(pool_groups, pool_cfgs, outcomes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -661,6 +689,51 @@ mod tests {
         );
         let want: u64 = trace.iter().map(|r| r.output_tokens as u64).sum();
         assert_eq!(r.output_tokens, want);
+    }
+
+    #[test]
+    fn streamed_report_matches_materialized_report_bitwise() {
+        let workload = crate::workload::cdf::azure_conversations();
+        let gen_cfg = GenConfig {
+            lambda_rps: 40.0,
+            duration_s: 2.0,
+            max_prompt_tokens: 4000,
+            max_output_tokens: 512,
+            seed: 42,
+        };
+        let trace = generate(&workload, &gen_cfg);
+        let mut jsq = JoinShortestQueue;
+        let materialized = simulate_topology_opts(
+            &trace,
+            &ContextRouter::two_pool(4096),
+            &[2, 2],
+            &[h100_cfg(4096 + 1024), h100_cfg(65_536)],
+            &mut jsq,
+            EngineOptions { allow_parallel: false, ..Default::default() },
+        );
+        let mut source =
+            crate::workload::arrival::SynthSource::new(&workload, &gen_cfg);
+        let mut jsq = JoinShortestQueue;
+        let streamed = simulate_topology_source(
+            &mut source,
+            &ContextRouter::two_pool(4096),
+            &[2, 2],
+            &[h100_cfg(4096 + 1024), h100_cfg(65_536)],
+            &mut jsq,
+            EngineOptions::default(),
+        );
+        assert_eq!(materialized.output_tokens, streamed.output_tokens);
+        assert_eq!(materialized.joules.to_bits(), streamed.joules.to_bits());
+        assert_eq!(
+            materialized.idle_joules.to_bits(),
+            streamed.idle_joules.to_bits()
+        );
+        assert_eq!(materialized.steps, streamed.steps);
+        for (a, b) in materialized.pools.iter().zip(&streamed.pools) {
+            assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+            assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+            assert_eq!(a.metrics.completed, b.metrics.completed);
+        }
     }
 
     #[test]

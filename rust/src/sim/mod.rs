@@ -43,7 +43,10 @@
 //!   simulator bit-for-bit (deterministic-replay guarantee);
 //!   [`simulate_topology_with`] exposes policy and parallelism control;
 //!   [`simulate_topology_opts`] additionally exposes the state mode, the
-//!   queue mode and the per-event live-state cross-check.
+//!   queue mode and the per-event live-state cross-check;
+//!   [`simulate_topology_source`] streams arrivals lazily from an
+//!   [`ArrivalSource`](crate::workload::arrival::ArrivalSource) in O(1)
+//!   trace memory, replaying the materialized run bit-for-bit.
 //!
 //! For running *grids* of (topology × workload × routing/dispatch)
 //! configurations through this engine — the paper-style scenario
@@ -72,5 +75,6 @@ pub use events::{
 };
 pub use fleetsim::{
     simulate_pool, simulate_topology, simulate_topology_opts,
-    simulate_topology_with, GroupSimConfig, PoolSimReport, TopoSimReport,
+    simulate_topology_source, simulate_topology_with, GroupSimConfig,
+    PoolSimReport, TopoSimReport,
 };

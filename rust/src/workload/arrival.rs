@@ -1,0 +1,1069 @@
+//! Streaming arrival sources: lazy request generators fused into the
+//! event engine.
+//!
+//! Before this module, every simulation materialized its whole trace as
+//! a `Vec<Request>` up front (`workload::synth::generate`), so memory —
+//! not the zero-allocation event loop — capped λ·duration. An
+//! [`ArrivalSource`] is an iterator the engine pulls **one arrival at a
+//! time**: only the next pending request lives in the event queue, so
+//! trace memory is O(1) at any scale (a 10⁷-arrival run holds exactly
+//! one `Request`, where the materialized path would hold ~320 MB).
+//!
+//! Sources must yield arrivals **non-decreasing in `arrival_s`** — the
+//! engine asserts this and the calendar queue depends on it (no
+//! backward pushes). The concrete sources:
+//!
+//! - [`SynthSource`] — the stationary Poisson generator, a verbatim
+//!   port of `synth::generate`'s loop. Same seed → bit-identical
+//!   requests, so the materialized path stays a replay oracle.
+//! - [`DiurnalSource`] — nonhomogeneous Poisson with a sinusoidal
+//!   λ(t) (Lewis–Shedler thinning): the daily traffic curve a real
+//!   fleet sees, compressed into the run duration.
+//! - [`FlashCrowdSource`] — stationary base rate with a λ×magnitude
+//!   burst window: the incident-traffic / product-launch archetype.
+//! - [`MultiTenantSource`] — a weighted mix of chat (LMSYS), agent
+//!   and conversation (Azure) tenants sharing one arrival process,
+//!   each request drawing lengths from its tenant's distributions.
+//! - [`HeavyTailSource`] — the base prompt CDF with its upper tail
+//!   replaced by a Pareto graft: rare very-long-context requests that
+//!   stress the long pool far beyond the empirical CDF's support.
+//! - [`CsvSource`] — replay of a real trace from disk, streamed line
+//!   by line (two passes over the file: validate then iterate), so
+//!   replaying a million-row production trace is also O(1) memory.
+//! - [`VecSource`] — adapter over an in-memory `Vec<Request>`, for
+//!   tests and hand-built traces.
+//!
+//! [`ArrivalSpec`] is the CLI/scenario-facing selector that names an
+//! archetype (`--workload diurnal`, `--trace requests.csv`, …) and
+//! builds the matching source for a given workload + [`GenConfig`].
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Lines};
+use std::path::Path;
+
+use super::cdf::WorkloadTrace;
+use super::synth::GenConfig;
+use super::trace::Request;
+use crate::xrand::Rng;
+
+/// A lazy, non-decreasing stream of [`Request`]s.
+///
+/// The engine (`sim::events::run_fleet_stream`) pulls one arrival at a
+/// time and keeps only that single pending request in its event queue.
+/// Implementors must yield `arrival_s` values that never decrease; the
+/// engine panics on a backward step (the calendar queue forbids
+/// backward pushes).
+pub trait ArrivalSource: Iterator<Item = Request> {
+    /// Expected mean gap between arrivals in seconds, used to seed the
+    /// calendar queue's bucket width (the streaming analogue of
+    /// `trace_bucket_width`). Bucket width only affects queue
+    /// performance, never event order, so a rough hint is fine.
+    fn gap_hint(&self) -> f64 {
+        1.0
+    }
+}
+
+/// `ln`-space mean so that `E[lognormal(mu, sigma)] = mean_output_tokens`
+/// — identical to the prelude of `synth::generate`.
+fn output_mu(workload: &WorkloadTrace) -> f64 {
+    workload.mean_output_tokens.ln() - workload.output_sigma * workload.output_sigma / 2.0
+}
+
+/// Draw (prompt, output) token counts exactly the way `synth::generate`
+/// does: one CDF inverse-transform draw, then a two-draw Box–Muller
+/// lognormal. Every source that claims bitwise compatibility with the
+/// materialized generator must consume RNG draws in this order.
+fn draw_lengths(workload: &WorkloadTrace, cfg: &GenConfig, mu: f64, rng: &mut Rng) -> (u32, u32) {
+    let prompt = workload
+        .prompt_cdf
+        .sample(rng)
+        .round()
+        .max(1.0)
+        .min(cfg.max_prompt_tokens as f64) as u32;
+    let output = rng
+        .lognormal(mu, workload.output_sigma)
+        .round()
+        .max(1.0)
+        .min(cfg.max_output_tokens as f64) as u32;
+    (prompt, output)
+}
+
+fn rate_gap_hint(lambda_rps: f64) -> f64 {
+    if lambda_rps > 0.0 && lambda_rps.is_finite() {
+        1.0 / lambda_rps
+    } else {
+        1.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stationary synthetic source (the generate() port)
+// ---------------------------------------------------------------------------
+
+/// Stationary Poisson arrivals with workload-drawn lengths — the lazy
+/// form of [`synth::generate`](super::synth::generate). Same workload,
+/// config and seed produce the bit-identical request sequence; the
+/// materialized generator is now a `collect()` of this source.
+pub struct SynthSource {
+    workload: WorkloadTrace,
+    cfg: GenConfig,
+    rng: Rng,
+    t: f64,
+    id: u64,
+    mu: f64,
+}
+
+impl SynthSource {
+    pub fn new(workload: &WorkloadTrace, cfg: &GenConfig) -> Self {
+        SynthSource {
+            workload: workload.clone(),
+            cfg: cfg.clone(),
+            rng: Rng::new(cfg.seed),
+            t: 0.0,
+            id: 0,
+            mu: output_mu(workload),
+        }
+    }
+}
+
+impl Iterator for SynthSource {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        self.t += self.rng.exp(self.cfg.lambda_rps);
+        assert!(
+            self.t.is_finite(),
+            "non-finite arrival time generated (λ = {}, t = {})",
+            self.cfg.lambda_rps,
+            self.t
+        );
+        if self.t > self.cfg.duration_s {
+            return None;
+        }
+        let (prompt, output) = draw_lengths(&self.workload, &self.cfg, self.mu, &mut self.rng);
+        let req = Request {
+            id: self.id,
+            arrival_s: self.t,
+            prompt_tokens: prompt,
+            output_tokens: output,
+        };
+        self.id += 1;
+        Some(req)
+    }
+}
+
+impl ArrivalSource for SynthSource {
+    fn gap_hint(&self) -> f64 {
+        rate_gap_hint(self.cfg.lambda_rps)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Diurnal (sinusoidal λ) source — Lewis–Shedler thinning
+// ---------------------------------------------------------------------------
+
+/// Nonhomogeneous Poisson arrivals with
+/// `λ(t) = λ·(1 − amplitude·cos(2πt/period))`: the trough sits at
+/// t = 0, the peak at half a period, and the *mean* rate over a whole
+/// period is exactly `cfg.lambda_rps`. Sampled by Lewis–Shedler
+/// thinning against `λ_max = λ·(1 + amplitude)`.
+pub struct DiurnalSource {
+    workload: WorkloadTrace,
+    cfg: GenConfig,
+    rng: Rng,
+    t: f64,
+    id: u64,
+    mu: f64,
+    amplitude: f64,
+    period_s: f64,
+    lambda_max: f64,
+}
+
+impl DiurnalSource {
+    /// `amplitude` ∈ [0, 1): peak-to-mean swing. `period_s <= 0`
+    /// means one full cycle per run (`cfg.duration_s`).
+    pub fn new(workload: &WorkloadTrace, cfg: &GenConfig, amplitude: f64, period_s: f64) -> Self {
+        assert!(
+            (0.0..1.0).contains(&amplitude),
+            "diurnal amplitude must be in [0, 1), got {amplitude}"
+        );
+        let period = if period_s > 0.0 { period_s } else { cfg.duration_s };
+        DiurnalSource {
+            workload: workload.clone(),
+            cfg: cfg.clone(),
+            rng: Rng::new(cfg.seed),
+            t: 0.0,
+            id: 0,
+            mu: output_mu(workload),
+            amplitude,
+            period_s: period,
+            lambda_max: cfg.lambda_rps * (1.0 + amplitude),
+        }
+    }
+
+    fn rate_at(&self, t: f64) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * t / self.period_s;
+        self.cfg.lambda_rps * (1.0 - self.amplitude * phase.cos())
+    }
+}
+
+impl Iterator for DiurnalSource {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        loop {
+            self.t += self.rng.exp(self.lambda_max);
+            assert!(
+                self.t.is_finite(),
+                "non-finite arrival time generated (λ_max = {}, t = {})",
+                self.lambda_max,
+                self.t
+            );
+            if self.t > self.cfg.duration_s {
+                return None;
+            }
+            // Thinning: accept with probability λ(t)/λ_max.
+            if self.rng.f64() * self.lambda_max >= self.rate_at(self.t) {
+                continue;
+            }
+            let (prompt, output) = draw_lengths(&self.workload, &self.cfg, self.mu, &mut self.rng);
+            let req = Request {
+                id: self.id,
+                arrival_s: self.t,
+                prompt_tokens: prompt,
+                output_tokens: output,
+            };
+            self.id += 1;
+            return Some(req);
+        }
+    }
+}
+
+impl ArrivalSource for DiurnalSource {
+    fn gap_hint(&self) -> f64 {
+        rate_gap_hint(self.cfg.lambda_rps)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flash-crowd source
+// ---------------------------------------------------------------------------
+
+/// Stationary base rate λ with one burst window at `λ·magnitude` —
+/// an incident / launch-day traffic spike. Thinned against
+/// `λ·magnitude` so the burst window accepts every candidate.
+pub struct FlashCrowdSource {
+    workload: WorkloadTrace,
+    cfg: GenConfig,
+    rng: Rng,
+    t: f64,
+    id: u64,
+    mu: f64,
+    burst_start: f64,
+    burst_end: f64,
+    magnitude: f64,
+    lambda_max: f64,
+}
+
+impl FlashCrowdSource {
+    /// Burst of `magnitude`× the base rate starting at
+    /// `at_frac·duration` and lasting `width_frac·duration`.
+    pub fn new(
+        workload: &WorkloadTrace,
+        cfg: &GenConfig,
+        at_frac: f64,
+        width_frac: f64,
+        magnitude: f64,
+    ) -> Self {
+        assert!(
+            magnitude >= 1.0,
+            "flash-crowd magnitude must be >= 1, got {magnitude}"
+        );
+        assert!(
+            (0.0..=1.0).contains(&at_frac) && (0.0..=1.0).contains(&width_frac),
+            "flash-crowd window fractions must be in [0, 1], got at={at_frac} width={width_frac}"
+        );
+        let burst_start = at_frac * cfg.duration_s;
+        let burst_end = (at_frac + width_frac).min(1.0) * cfg.duration_s;
+        FlashCrowdSource {
+            workload: workload.clone(),
+            cfg: cfg.clone(),
+            rng: Rng::new(cfg.seed),
+            t: 0.0,
+            id: 0,
+            mu: output_mu(workload),
+            burst_start,
+            burst_end,
+            magnitude,
+            lambda_max: cfg.lambda_rps * magnitude,
+        }
+    }
+
+    fn rate_at(&self, t: f64) -> f64 {
+        if t >= self.burst_start && t < self.burst_end {
+            self.cfg.lambda_rps * self.magnitude
+        } else {
+            self.cfg.lambda_rps
+        }
+    }
+}
+
+impl Iterator for FlashCrowdSource {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        loop {
+            self.t += self.rng.exp(self.lambda_max);
+            assert!(
+                self.t.is_finite(),
+                "non-finite arrival time generated (λ_max = {}, t = {})",
+                self.lambda_max,
+                self.t
+            );
+            if self.t > self.cfg.duration_s {
+                return None;
+            }
+            if self.rng.f64() * self.lambda_max >= self.rate_at(self.t) {
+                continue;
+            }
+            let (prompt, output) = draw_lengths(&self.workload, &self.cfg, self.mu, &mut self.rng);
+            let req = Request {
+                id: self.id,
+                arrival_s: self.t,
+                prompt_tokens: prompt,
+                output_tokens: output,
+            };
+            self.id += 1;
+            return Some(req);
+        }
+    }
+}
+
+impl ArrivalSource for FlashCrowdSource {
+    fn gap_hint(&self) -> f64 {
+        rate_gap_hint(self.cfg.lambda_rps)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenant mix source
+// ---------------------------------------------------------------------------
+
+/// One stationary arrival process shared by several tenants; each
+/// request picks a tenant by weight and draws its lengths from that
+/// tenant's prompt CDF and output distribution. The fixed mix is
+/// 50% chat (LMSYS), 30% agent (Agent-heavy), 20% conversation
+/// (Azure) — the base workload passed to [`ArrivalSpec::source`] is
+/// ignored (the mix *is* the workload).
+pub struct MultiTenantSource {
+    /// (tenant workload, cumulative weight, precomputed output mu).
+    tenants: Vec<(WorkloadTrace, f64, f64)>,
+    cfg: GenConfig,
+    rng: Rng,
+    t: f64,
+    id: u64,
+}
+
+impl MultiTenantSource {
+    pub fn new(cfg: &GenConfig) -> Self {
+        let mix = [
+            (super::cdf::lmsys_chat(), 0.5),
+            (super::cdf::agent_heavy(), 0.3),
+            (super::cdf::azure_conversations(), 0.2),
+        ];
+        let mut cum = 0.0;
+        let tenants = mix
+            .into_iter()
+            .map(|(w, weight)| {
+                cum += weight;
+                let mu = output_mu(&w);
+                (w, cum, mu)
+            })
+            .collect();
+        MultiTenantSource {
+            tenants,
+            cfg: cfg.clone(),
+            rng: Rng::new(cfg.seed),
+            t: 0.0,
+            id: 0,
+        }
+    }
+}
+
+impl Iterator for MultiTenantSource {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        self.t += self.rng.exp(self.cfg.lambda_rps);
+        assert!(
+            self.t.is_finite(),
+            "non-finite arrival time generated (λ = {}, t = {})",
+            self.cfg.lambda_rps,
+            self.t
+        );
+        if self.t > self.cfg.duration_s {
+            return None;
+        }
+        let u = self.rng.f64();
+        let last = self.tenants.len() - 1;
+        let ti = self
+            .tenants
+            .iter()
+            .position(|(_, cum, _)| u < *cum)
+            .unwrap_or(last);
+        let (workload, _, mu) = &self.tenants[ti];
+        let (prompt, output) = draw_lengths(workload, &self.cfg, *mu, &mut self.rng);
+        let req = Request {
+            id: self.id,
+            arrival_s: self.t,
+            prompt_tokens: prompt,
+            output_tokens: output,
+        };
+        self.id += 1;
+        Some(req)
+    }
+}
+
+impl ArrivalSource for MultiTenantSource {
+    fn gap_hint(&self) -> f64 {
+        rate_gap_hint(self.cfg.lambda_rps)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Heavy-tail source
+// ---------------------------------------------------------------------------
+
+/// The base workload with the top `tail_frac` of its prompt CDF
+/// replaced by a Pareto(α) graft anchored at the (1 − tail_frac)
+/// quantile: rare requests far longer than the empirical CDF's
+/// support, which is what actually stresses the long-context pool.
+pub struct HeavyTailSource {
+    workload: WorkloadTrace,
+    cfg: GenConfig,
+    rng: Rng,
+    t: f64,
+    id: u64,
+    mu: f64,
+    tail_frac: f64,
+    alpha: f64,
+    x_min: f64,
+}
+
+impl HeavyTailSource {
+    pub fn new(workload: &WorkloadTrace, cfg: &GenConfig, tail_frac: f64, alpha: f64) -> Self {
+        assert!(
+            tail_frac > 0.0 && tail_frac < 1.0,
+            "heavy-tail fraction must be in (0, 1), got {tail_frac}"
+        );
+        assert!(alpha > 1.0, "Pareto alpha must be > 1, got {alpha}");
+        let x_min = workload.prompt_cdf.quantile(1.0 - tail_frac).max(1.0);
+        HeavyTailSource {
+            workload: workload.clone(),
+            cfg: cfg.clone(),
+            rng: Rng::new(cfg.seed),
+            t: 0.0,
+            id: 0,
+            mu: output_mu(workload),
+            tail_frac,
+            alpha,
+            x_min,
+        }
+    }
+}
+
+impl Iterator for HeavyTailSource {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        self.t += self.rng.exp(self.cfg.lambda_rps);
+        assert!(
+            self.t.is_finite(),
+            "non-finite arrival time generated (λ = {}, t = {})",
+            self.cfg.lambda_rps,
+            self.t
+        );
+        if self.t > self.cfg.duration_s {
+            return None;
+        }
+        let in_tail = self.rng.f64() < self.tail_frac;
+        let prompt = if in_tail {
+            // Pareto inverse transform: x_min · U^(−1/α), U ∈ (0, 1].
+            let u = 1.0 - self.rng.f64();
+            (self.x_min * u.powf(-1.0 / self.alpha))
+                .round()
+                .max(1.0)
+                .min(self.cfg.max_prompt_tokens as f64) as u32
+        } else {
+            self.workload
+                .prompt_cdf
+                .sample(&mut self.rng)
+                .round()
+                .max(1.0)
+                .min(self.cfg.max_prompt_tokens as f64) as u32
+        };
+        let output = self
+            .rng
+            .lognormal(self.mu, self.workload.output_sigma)
+            .round()
+            .max(1.0)
+            .min(self.cfg.max_output_tokens as f64) as u32;
+        let req = Request {
+            id: self.id,
+            arrival_s: self.t,
+            prompt_tokens: prompt,
+            output_tokens: output,
+        };
+        self.id += 1;
+        Some(req)
+    }
+}
+
+impl ArrivalSource for HeavyTailSource {
+    fn gap_hint(&self) -> f64 {
+        rate_gap_hint(self.cfg.lambda_rps)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSV replay source
+// ---------------------------------------------------------------------------
+
+/// Streams a CSV trace from disk one row at a time.
+///
+/// `open` makes a validation pass over the whole file first (every row
+/// parses, arrivals are non-decreasing, errors carry line numbers) and
+/// records the row count and time span, then reopens the file for the
+/// lazy iteration pass. Both passes are line-buffered, so replaying a
+/// million-row trace never holds more than one row in memory.
+pub struct CsvSource {
+    lines: Lines<BufReader<File>>,
+    path: String,
+    lineno: usize,
+    prev_arrival: f64,
+    rows: usize,
+    span_s: f64,
+    gap: f64,
+}
+
+impl CsvSource {
+    pub fn open(path: &Path) -> crate::Result<Self> {
+        let shown = path.display().to_string();
+        let file = File::open(path)
+            .map_err(|e| anyhow::anyhow!("cannot open trace {shown}: {e}"))?;
+        let mut rows = 0usize;
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        let mut prev = f64::NEG_INFINITY;
+        for (i, line) in BufReader::new(file).lines().enumerate() {
+            let line = line.map_err(|e| anyhow::anyhow!("read error in {shown}: {e}"))?;
+            if i == 0 || line.trim().is_empty() {
+                continue;
+            }
+            let req = super::trace::parse_row(&line, i + 1)
+                .map_err(|e| anyhow::anyhow!("{shown}: {e}"))?;
+            anyhow::ensure!(
+                req.arrival_s >= prev,
+                "{shown}: line {}: arrival_s {} goes backwards (previous row was {})",
+                i + 1,
+                req.arrival_s,
+                prev
+            );
+            prev = req.arrival_s;
+            if rows == 0 {
+                first = req.arrival_s;
+            }
+            last = req.arrival_s;
+            rows += 1;
+        }
+        let span = if rows >= 2 { last - first } else { 0.0 };
+        let gap = if rows >= 2 {
+            let g = span / (rows - 1) as f64;
+            if g.is_finite() && g > 0.0 {
+                g
+            } else {
+                1.0
+            }
+        } else {
+            1.0
+        };
+        let file = File::open(path)
+            .map_err(|e| anyhow::anyhow!("cannot reopen trace {shown}: {e}"))?;
+        Ok(CsvSource {
+            lines: BufReader::new(file).lines(),
+            path: shown,
+            lineno: 0,
+            prev_arrival: f64::NEG_INFINITY,
+            rows,
+            span_s: span,
+            gap,
+        })
+    }
+
+    /// Number of request rows found during validation.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Time span (last − first arrival) of the trace in seconds.
+    pub fn span_s(&self) -> f64 {
+        self.span_s
+    }
+
+    /// Mean arrival rate of the trace, for deriving a λ when the CLI
+    /// was not given one explicitly.
+    pub fn mean_rate_rps(&self) -> f64 {
+        if self.span_s > 0.0 {
+            self.rows as f64 / self.span_s
+        } else {
+            self.rows as f64
+        }
+    }
+}
+
+impl Iterator for CsvSource {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        loop {
+            let line = self.lines.next()?.unwrap_or_else(|e| {
+                panic!("read error in {}: {e} (file changed after validation?)", self.path)
+            });
+            self.lineno += 1;
+            if self.lineno == 1 || line.trim().is_empty() {
+                continue;
+            }
+            let req = super::trace::parse_row(&line, self.lineno).unwrap_or_else(|e| {
+                panic!("{}: {e} (file changed after validation?)", self.path)
+            });
+            assert!(
+                req.arrival_s >= self.prev_arrival,
+                "{}: line {}: arrival_s goes backwards (file changed after validation?)",
+                self.path,
+                self.lineno
+            );
+            self.prev_arrival = req.arrival_s;
+            return Some(req);
+        }
+    }
+}
+
+impl ArrivalSource for CsvSource {
+    fn gap_hint(&self) -> f64 {
+        self.gap
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-memory source (tests, hand-built traces)
+// ---------------------------------------------------------------------------
+
+/// Streams an already-materialized trace — the adapter that lets a
+/// hand-built `Vec<Request>` drive the streaming engine (tests, and
+/// the replay half of the bitwise oracle).
+pub struct VecSource {
+    gap: f64,
+    iter: std::vec::IntoIter<Request>,
+}
+
+impl VecSource {
+    /// `trace` must already be sorted by arrival time (the engine
+    /// asserts it).
+    pub fn new(trace: Vec<Request>) -> Self {
+        let gap = if trace.len() < 2 {
+            1.0
+        } else {
+            let span = trace[trace.len() - 1].arrival_s - trace[0].arrival_s;
+            let g = span / (trace.len() - 1) as f64;
+            if g.is_finite() && g > 0.0 {
+                g
+            } else {
+                1.0
+            }
+        };
+        VecSource {
+            gap,
+            iter: trace.into_iter(),
+        }
+    }
+}
+
+impl Iterator for VecSource {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        self.iter.next()
+    }
+}
+
+impl ArrivalSource for VecSource {
+    fn gap_hint(&self) -> f64 {
+        self.gap
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ArrivalSpec — the scenario/CLI-facing selector
+// ---------------------------------------------------------------------------
+
+/// Names an arrival process for a scenario: the stationary default,
+/// one of the generated archetypes, or replay of a CSV trace. Carried
+/// on `ScenarioSpec` and selected on the CLI via `--workload <name>`
+/// or `--trace <path.csv>`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    /// Stationary Poisson arrivals (the historical behavior).
+    Stationary,
+    /// Sinusoidal λ(t); `period_s <= 0` means one cycle per run.
+    Diurnal { amplitude: f64, period_s: f64 },
+    /// One burst window at `magnitude`× the base rate.
+    FlashCrowd {
+        at_frac: f64,
+        width_frac: f64,
+        magnitude: f64,
+    },
+    /// Fixed chat/agent/conversation tenant mix on one arrival stream.
+    MultiTenant,
+    /// Pareto graft on the top `tail_frac` of the prompt CDF.
+    HeavyTail { tail_frac: f64, alpha: f64 },
+    /// Replay a CSV trace from disk.
+    Replay { path: String },
+}
+
+impl Default for ArrivalSpec {
+    fn default() -> Self {
+        ArrivalSpec::Stationary
+    }
+}
+
+impl ArrivalSpec {
+    /// The generated archetype names accepted by `--workload`.
+    pub const NAMES: [&'static str; 5] = [
+        "stationary",
+        "diurnal",
+        "flash-crowd",
+        "multi-tenant",
+        "heavy-tail",
+    ];
+
+    /// Parse a `--workload` archetype name with its default
+    /// parameters. Returns `None` for unknown names (the CLI turns
+    /// that into an error listing [`Self::NAMES`]).
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "stationary" => Some(ArrivalSpec::Stationary),
+            "diurnal" => Some(ArrivalSpec::Diurnal {
+                amplitude: 0.6,
+                period_s: 0.0,
+            }),
+            "flash-crowd" => Some(ArrivalSpec::FlashCrowd {
+                at_frac: 0.5,
+                width_frac: 0.1,
+                magnitude: 5.0,
+            }),
+            "multi-tenant" => Some(ArrivalSpec::MultiTenant),
+            "heavy-tail" => Some(ArrivalSpec::HeavyTail {
+                tail_frac: 0.05,
+                alpha: 1.5,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Short human label used in scenario/sweep workload columns.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalSpec::Stationary => "stationary".to_string(),
+            ArrivalSpec::Diurnal { amplitude, .. } => format!("diurnal(a={amplitude})"),
+            ArrivalSpec::FlashCrowd { magnitude, .. } => format!("flash-crowd(x{magnitude})"),
+            ArrivalSpec::MultiTenant => "multi-tenant".to_string(),
+            ArrivalSpec::HeavyTail { tail_frac, alpha } => {
+                format!("heavy-tail({tail_frac},α={alpha})")
+            }
+            ArrivalSpec::Replay { path } => {
+                let name = Path::new(path)
+                    .file_name()
+                    .map(|n| n.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| path.clone());
+                format!("replay:{name}")
+            }
+        }
+    }
+
+    /// Build the arrival source this spec describes for a given base
+    /// workload and generator config. Only `Replay` can fail (I/O or
+    /// a malformed trace file).
+    pub fn source(
+        &self,
+        workload: &WorkloadTrace,
+        gen: &GenConfig,
+    ) -> crate::Result<Box<dyn ArrivalSource>> {
+        Ok(match self {
+            ArrivalSpec::Stationary => Box::new(SynthSource::new(workload, gen)),
+            ArrivalSpec::Diurnal {
+                amplitude,
+                period_s,
+            } => Box::new(DiurnalSource::new(workload, gen, *amplitude, *period_s)),
+            ArrivalSpec::FlashCrowd {
+                at_frac,
+                width_frac,
+                magnitude,
+            } => Box::new(FlashCrowdSource::new(
+                workload,
+                gen,
+                *at_frac,
+                *width_frac,
+                *magnitude,
+            )),
+            ArrivalSpec::MultiTenant => Box::new(MultiTenantSource::new(gen)),
+            ArrivalSpec::HeavyTail { tail_frac, alpha } => {
+                Box::new(HeavyTailSource::new(workload, gen, *tail_frac, *alpha))
+            }
+            ArrivalSpec::Replay { path } => Box::new(CsvSource::open(Path::new(path))?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::cdf::azure_conversations;
+
+    fn gen(lambda: f64, duration: f64, seed: u64) -> GenConfig {
+        GenConfig {
+            lambda_rps: lambda,
+            duration_s: duration,
+            max_prompt_tokens: 60_000,
+            max_output_tokens: 512,
+            seed,
+        }
+    }
+
+    fn collect(src: impl ArrivalSource) -> Vec<Request> {
+        src.collect()
+    }
+
+    #[test]
+    fn synth_source_matches_materialized_generate_bitwise() {
+        let w = azure_conversations();
+        let cfg = gen(200.0, 2.0, 7);
+        let materialized = super::super::synth::generate(&w, &cfg);
+        let streamed = collect(SynthSource::new(&w, &cfg));
+        assert_eq!(materialized.len(), streamed.len());
+        for (a, b) in materialized.iter().zip(streamed.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+        }
+    }
+
+    #[test]
+    fn synth_source_is_lazy() {
+        // λ·duration = 10^7 expected arrivals: taking 100 must be
+        // instant and never materialize the rest.
+        let w = azure_conversations();
+        let cfg = gen(1_000_000.0, 10.0, 1);
+        let first: Vec<Request> = SynthSource::new(&w, &cfg).take(100).collect();
+        assert_eq!(first.len(), 100);
+        for pair in first.windows(2) {
+            assert!(pair[1].arrival_s >= pair[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn every_archetype_yields_sorted_finite_arrivals() {
+        let w = azure_conversations();
+        let cfg = gen(500.0, 2.0, 3);
+        let sources: Vec<(&str, Vec<Request>)> = vec![
+            ("synth", collect(SynthSource::new(&w, &cfg))),
+            ("diurnal", collect(DiurnalSource::new(&w, &cfg, 0.6, 0.0))),
+            (
+                "flash",
+                collect(FlashCrowdSource::new(&w, &cfg, 0.5, 0.1, 5.0)),
+            ),
+            ("tenant", collect(MultiTenantSource::new(&cfg))),
+            ("tail", collect(HeavyTailSource::new(&w, &cfg, 0.05, 1.5))),
+        ];
+        for (name, reqs) in &sources {
+            assert!(!reqs.is_empty(), "{name}: empty trace");
+            for pair in reqs.windows(2) {
+                assert!(
+                    pair[1].arrival_s >= pair[0].arrival_s,
+                    "{name}: arrivals not sorted"
+                );
+            }
+            for r in reqs {
+                assert!(r.arrival_s.is_finite(), "{name}: non-finite arrival");
+                assert!(r.prompt_tokens >= 1 && r.output_tokens >= 1, "{name}: zero tokens");
+                assert!(r.arrival_s <= cfg.duration_s, "{name}: arrival past horizon");
+            }
+            // ids must be dense 0..n for the engine's Arrival events.
+            for (i, r) in reqs.iter().enumerate() {
+                assert_eq!(r.id, i as u64, "{name}: non-dense ids");
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_peak_quarter_beats_trough_quarter() {
+        let w = azure_conversations();
+        let cfg = gen(2000.0, 2.0, 11);
+        // One cycle per run: trough at t=0, peak at duration/2.
+        let reqs = collect(DiurnalSource::new(&w, &cfg, 0.6, 0.0));
+        let q = cfg.duration_s / 4.0;
+        let trough = reqs.iter().filter(|r| r.arrival_s < q).count();
+        let peak = reqs
+            .iter()
+            .filter(|r| r.arrival_s >= 1.5 * q && r.arrival_s < 2.5 * q)
+            .count();
+        assert!(
+            peak as f64 > 2.0 * trough as f64,
+            "peak quarter ({peak}) should far exceed trough quarter ({trough})"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_burst_window_is_denser() {
+        let w = azure_conversations();
+        let cfg = gen(1000.0, 2.0, 13);
+        let reqs = collect(FlashCrowdSource::new(&w, &cfg, 0.5, 0.1, 5.0));
+        let burst_start = 0.5 * cfg.duration_s;
+        let burst_end = 0.6 * cfg.duration_s;
+        let width = burst_end - burst_start;
+        let in_burst = reqs
+            .iter()
+            .filter(|r| r.arrival_s >= burst_start && r.arrival_s < burst_end)
+            .count();
+        let before = reqs.iter().filter(|r| r.arrival_s < width).count();
+        assert!(
+            in_burst as f64 > 2.0 * before as f64,
+            "burst window ({in_burst}) should be much denser than baseline ({before})"
+        );
+    }
+
+    #[test]
+    fn heavy_tail_p99_exceeds_base_p99() {
+        let w = azure_conversations();
+        let cfg = gen(2000.0, 2.0, 17);
+        let mut base: Vec<u32> = collect(SynthSource::new(&w, &cfg))
+            .iter()
+            .map(|r| r.prompt_tokens)
+            .collect();
+        let mut tail: Vec<u32> = collect(HeavyTailSource::new(&w, &cfg, 0.05, 1.2))
+            .iter()
+            .map(|r| r.prompt_tokens)
+            .collect();
+        base.sort_unstable();
+        tail.sort_unstable();
+        let p99 = |v: &[u32]| v[(v.len() as f64 * 0.99) as usize - 1];
+        assert!(
+            p99(&tail) > p99(&base),
+            "heavy-tail p99 {} should exceed base p99 {}",
+            p99(&tail),
+            p99(&base)
+        );
+    }
+
+    #[test]
+    fn archetypes_are_deterministic_in_seed() {
+        let w = azure_conversations();
+        let cfg = gen(500.0, 1.0, 23);
+        let a = collect(DiurnalSource::new(&w, &cfg, 0.6, 0.0));
+        let b = collect(DiurnalSource::new(&w, &cfg, 0.6, 0.0));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.output_tokens, y.output_tokens);
+        }
+    }
+
+    #[test]
+    fn csv_source_streams_a_saved_trace() {
+        let w = azure_conversations();
+        let cfg = gen(100.0, 1.0, 29);
+        let trace = super::super::synth::generate(&w, &cfg);
+        let path = std::env::temp_dir().join("wattlaw_arrival_csv_roundtrip.csv");
+        super::super::trace::save_csv(&path, &trace).unwrap();
+        let mut src = CsvSource::open(&path).unwrap();
+        assert_eq!(src.rows(), trace.len());
+        assert!(src.span_s() > 0.0);
+        assert!(src.mean_rate_rps() > 0.0);
+        let replayed: Vec<Request> = (&mut src).collect();
+        assert_eq!(replayed.len(), trace.len());
+        for (a, b) in trace.iter().zip(replayed.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            // CSV stores 6 decimal places — compare at that precision.
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-6);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_source_rejects_backwards_time_with_line_number() {
+        let path = std::env::temp_dir().join("wattlaw_arrival_csv_backwards.csv");
+        std::fs::write(
+            &path,
+            "id,arrival_s,prompt_tokens,output_tokens\n0,1.0,10,10\n1,0.5,10,10\n",
+        )
+        .unwrap();
+        let err = CsvSource::open(&path).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "error should name line 3: {err}");
+        assert!(err.contains("backwards"), "error should say backwards: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_source_rejects_malformed_rows_with_line_number() {
+        let path = std::env::temp_dir().join("wattlaw_arrival_csv_malformed.csv");
+        std::fs::write(
+            &path,
+            "id,arrival_s,prompt_tokens,output_tokens\n0,0.5,10\n",
+        )
+        .unwrap();
+        let err = CsvSource::open(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "error should name line 2: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_trace_file_is_a_clean_error() {
+        let err = CsvSource::open(Path::new("/nonexistent/wattlaw_nope.csv"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot open trace"), "got: {err}");
+    }
+
+    #[test]
+    fn spec_parse_round_trips_all_names() {
+        for name in ArrivalSpec::NAMES {
+            let spec = ArrivalSpec::parse(name).expect(name);
+            assert!(!spec.label().is_empty());
+        }
+        assert!(ArrivalSpec::parse("bogus").is_none());
+        assert_eq!(ArrivalSpec::default(), ArrivalSpec::Stationary);
+    }
+
+    #[test]
+    fn spec_builds_a_source_for_every_generated_archetype() {
+        let w = azure_conversations();
+        let cfg = gen(300.0, 0.5, 31);
+        for name in ArrivalSpec::NAMES {
+            let spec = ArrivalSpec::parse(name).unwrap();
+            let src = spec.source(&w, &cfg).expect(name);
+            let n = src.count();
+            assert!(n > 0, "{name}: no arrivals");
+        }
+    }
+
+    #[test]
+    fn replay_label_uses_the_file_name() {
+        let spec = ArrivalSpec::Replay {
+            path: "/tmp/some/dir/prod_trace.csv".to_string(),
+        };
+        assert_eq!(spec.label(), "replay:prod_trace.csv");
+    }
+}

@@ -1,10 +1,15 @@
 //! Workload modeling: context-length CDFs for the paper's traces
 //! ([`cdf`]), synthetic request generation with Poisson arrivals
-//! ([`synth`]), and trace records with CSV I/O ([`trace`]).
+//! ([`synth`]), trace records with CSV I/O ([`trace`]), and lazy
+//! streaming arrival sources — stationary, diurnal, flash-crowd,
+//! multi-tenant, heavy-tailed, and CSV replay — that the event engine
+//! pulls one request at a time ([`arrival`]).
 
+pub mod arrival;
 pub mod cdf;
 pub mod synth;
 pub mod trace;
 
+pub use arrival::{ArrivalSource, ArrivalSpec, CsvSource, SynthSource, VecSource};
 pub use cdf::{LengthCdf, WorkloadTrace, Archetype};
 pub use trace::Request;

@@ -8,8 +8,7 @@ use super::trace::Request;
 use crate::xrand::Rng;
 
 /// Generator configuration. `PartialEq` so consumers can detect when two
-/// scenarios would generate byte-identical traces (the sweep runner
-/// generates once for a whole grid).
+/// scenarios would generate byte-identical traces.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GenConfig {
     /// Arrival rate, requests/second (the paper's fleets use λ = 1000).
@@ -36,7 +35,15 @@ impl Default for GenConfig {
     }
 }
 
-/// Generate a deterministic request trace.
+/// Generate a deterministic request trace, materialized as a `Vec`.
+///
+/// This loop is deliberately kept as an independent implementation:
+/// [`arrival::SynthSource`](super::arrival::SynthSource) is its lazy
+/// streaming port, and the bitwise-equivalence test in `arrival` pins
+/// the two against each other (same seed → identical requests), so
+/// this function doubles as the materialized oracle for the streaming
+/// path. Scenario code streams by default and only calls this when it
+/// genuinely needs the whole trace in memory.
 pub fn generate(trace: &WorkloadTrace, cfg: &GenConfig) -> Vec<Request> {
     let mut rng = Rng::new(cfg.seed);
     let mut out = Vec::new();

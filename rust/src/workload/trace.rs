@@ -36,28 +36,72 @@ pub fn to_csv(reqs: &[Request]) -> String {
     s
 }
 
-/// Parse a CSV trace produced by [`to_csv`].
+/// Parse one data row of a CSV trace, with the 1-based source line
+/// number threaded into every error message. Rejects non-finite or
+/// negative arrival times and zero-token requests — a zero-output
+/// request would never complete and a non-finite arrival corrupts the
+/// event queue, so both are trace bugs worth naming at the line.
+pub(crate) fn parse_row(line: &str, lineno: usize) -> crate::Result<Request> {
+    let mut f = line.split(',');
+    let mut next = |what: &str| {
+        f.next()
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing {what}"))
+    };
+    let field = |what: &str, v: &str| {
+        anyhow::anyhow!("line {lineno}: bad {what} {v:?}")
+    };
+    let id_s = next("id")?;
+    let id: u64 = id_s.trim().parse().map_err(|_| field("id", id_s))?;
+    let arr_s = next("arrival_s")?;
+    let arrival_s: f64 = arr_s
+        .trim()
+        .parse()
+        .map_err(|_| field("arrival_s", arr_s))?;
+    anyhow::ensure!(
+        arrival_s.is_finite() && arrival_s >= 0.0,
+        "line {lineno}: arrival_s must be finite and >= 0, got {arrival_s}"
+    );
+    let p_s = next("prompt_tokens")?;
+    let prompt_tokens: u32 = p_s
+        .trim()
+        .parse()
+        .map_err(|_| field("prompt_tokens", p_s))?;
+    let o_s = next("output_tokens")?;
+    let output_tokens: u32 = o_s
+        .trim()
+        .parse()
+        .map_err(|_| field("output_tokens", o_s))?;
+    anyhow::ensure!(
+        prompt_tokens >= 1 && output_tokens >= 1,
+        "line {lineno}: zero-token request (prompt = {prompt_tokens}, output = {output_tokens})"
+    );
+    Ok(Request {
+        id,
+        arrival_s,
+        prompt_tokens,
+        output_tokens,
+    })
+}
+
+/// Parse a CSV trace produced by [`to_csv`]. Every row must parse,
+/// arrivals must be non-decreasing, and errors carry line numbers.
 pub fn from_csv(text: &str) -> crate::Result<Vec<Request>> {
-    let mut out = Vec::new();
+    let mut out: Vec<Request> = Vec::new();
+    let mut prev = f64::NEG_INFINITY;
     for (i, line) in text.lines().enumerate() {
         if i == 0 || line.trim().is_empty() {
             continue; // header / blank
         }
-        let mut f = line.split(',');
-        let mut next = |what: &str| {
-            f.next()
-                .ok_or_else(|| anyhow::anyhow!("line {}: missing {what}", i + 1))
-        };
-        let id = next("id")?.trim().parse()?;
-        let arrival_s = next("arrival_s")?.trim().parse()?;
-        let prompt_tokens = next("prompt_tokens")?.trim().parse()?;
-        let output_tokens = next("output_tokens")?.trim().parse()?;
-        out.push(Request {
-            id,
-            arrival_s,
-            prompt_tokens,
-            output_tokens,
-        });
+        let req = parse_row(line, i + 1)?;
+        anyhow::ensure!(
+            req.arrival_s >= prev,
+            "line {}: arrival_s {} goes backwards (previous row was {})",
+            i + 1,
+            req.arrival_s,
+            prev
+        );
+        prev = req.arrival_s;
+        out.push(req);
     }
     Ok(out)
 }
@@ -105,5 +149,52 @@ mod tests {
     fn blank_lines_skipped() {
         let txt = "id,arrival_s,prompt_tokens,output_tokens\n\n0,0.0,1,1\n\n";
         assert_eq!(from_csv(txt).unwrap().len(), 1);
+    }
+
+    const HDR: &str = "id,arrival_s,prompt_tokens,output_tokens\n";
+
+    #[test]
+    fn missing_field_error_names_the_line() {
+        let err = from_csv(&format!("{HDR}0,0.0,10,5\n1,2.0\n"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 3"), "got: {err}");
+    }
+
+    #[test]
+    fn unparseable_field_error_names_the_line_and_field() {
+        let err = from_csv(&format!("{HDR}0,0.0,ten,5\n"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "got: {err}");
+        assert!(err.contains("prompt_tokens"), "got: {err}");
+    }
+
+    #[test]
+    fn non_monotonic_arrival_error_names_the_line() {
+        let err = from_csv(&format!("{HDR}0,1.0,10,5\n1,0.5,10,5\n"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 3"), "got: {err}");
+        assert!(err.contains("backwards"), "got: {err}");
+    }
+
+    #[test]
+    fn zero_token_request_error_names_the_line() {
+        let err = from_csv(&format!("{HDR}0,0.0,10,0\n"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "got: {err}");
+        assert!(err.contains("zero-token"), "got: {err}");
+    }
+
+    #[test]
+    fn non_finite_or_negative_arrival_is_error() {
+        for bad in ["nan", "inf", "-1.0"] {
+            let err = from_csv(&format!("{HDR}0,{bad},10,5\n"))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("line 2"), "{bad}: {err}");
+        }
     }
 }

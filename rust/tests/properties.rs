@@ -894,6 +894,122 @@ fn prop_calendar_queue_replays_binary_heap_bitwise_across_policies() {
 }
 
 #[test]
+fn prop_streamed_arrivals_replay_materialized_bitwise_across_policies() {
+    use wattlaw::router::adaptive::AdaptiveRouter;
+    use wattlaw::sim::{
+        dispatch, simulate_topology_opts, simulate_topology_source,
+        EngineOptions, GroupSimConfig, QueueMode,
+    };
+    use wattlaw::workload::synth::{generate, GenConfig};
+    use wattlaw::workload::SynthSource;
+
+    // The streamed engine pulls arrivals one at a time and numbers
+    // step/wake events from 0 instead of trace.len(); the seq-offset
+    // argument in `sim::events` says no event comparison can flip, so
+    // entire simulations must replay the materialized oracle bit for
+    // bit — across every dispatch policy, both queue modes and both
+    // router flavors of the random scenario.
+    forall("streamed arrivals == materialized oracle, bit for bit", 6, |g| {
+        let p = ManualProfile::h100_70b();
+        let mk = |window: u32, n_max: u32| GroupSimConfig {
+            window_tokens: window,
+            n_max,
+            roofline: p.roofline(),
+            power: p.gpu().power,
+            gpus_charged: 1.0,
+            ingest_chunk: 1024,
+        };
+        let two_pools = g.bool();
+        let workload = azure_conversations();
+        let gen = GenConfig {
+            lambda_rps: g.f64_in(10.0, 60.0),
+            duration_s: g.f64_in(0.5, 2.0),
+            max_prompt_tokens: if two_pools { 20_000 } else { 7_000 },
+            max_output_tokens: 256,
+            seed: g.u64_in(0, 1 << 40),
+        };
+        let trace = generate(&workload, &gen);
+        let (groups, cfgs) = if two_pools {
+            (
+                vec![g.u64_in(1, 3) as u32, g.u64_in(1, 2) as u32],
+                vec![
+                    mk(4096 + 1024, g.u64_in(4, 32) as u32),
+                    mk(65_536, g.u64_in(4, 16) as u32),
+                ],
+            )
+        } else {
+            (
+                vec![g.u64_in(1, 4) as u32],
+                vec![mk(8192, g.u64_in(4, 64) as u32)],
+            )
+        };
+        let router: Box<dyn Router> = if two_pools {
+            if g.bool() {
+                Box::new(
+                    AdaptiveRouter::new(4096)
+                        .with_spill_factor(g.f64_in(0.5, 4.0)),
+                )
+            } else {
+                Box::new(ContextRouter::two_pool(4096))
+            }
+        } else {
+            Box::new(wattlaw::router::HomogeneousRouter)
+        };
+        for queue_mode in [QueueMode::Calendar, QueueMode::BinaryHeap] {
+            for policy_name in dispatch::ALL {
+                let opts = EngineOptions {
+                    allow_parallel: false,
+                    queue_mode,
+                    ..Default::default()
+                };
+                let mut pol = dispatch::parse(policy_name).unwrap();
+                let mat = simulate_topology_opts(
+                    &trace,
+                    router.as_ref(),
+                    &groups,
+                    &cfgs,
+                    pol.as_mut(),
+                    opts,
+                );
+                let mut pol = dispatch::parse(policy_name).unwrap();
+                let mut src = SynthSource::new(&workload, &gen);
+                let stream = simulate_topology_source(
+                    &mut src,
+                    router.as_ref(),
+                    &groups,
+                    &cfgs,
+                    pol.as_mut(),
+                    opts,
+                );
+                xcheck_assert!(stream.output_tokens == mat.output_tokens);
+                xcheck_assert!(
+                    stream.joules.to_bits() == mat.joules.to_bits(),
+                    "{policy_name}/{queue_mode:?}: joules diverged, \
+                     {} vs {}",
+                    stream.joules,
+                    mat.joules
+                );
+                xcheck_assert!(stream.steps == mat.steps);
+                xcheck_assert!(
+                    stream.idle_joules.to_bits() == mat.idle_joules.to_bits()
+                );
+                for (a, b) in stream.pools.iter().zip(&mat.pools) {
+                    xcheck_assert!(
+                        a.horizon_s.to_bits() == b.horizon_s.to_bits()
+                    );
+                    xcheck_assert!(
+                        a.mean_batch.to_bits() == b.mean_batch.to_bits()
+                    );
+                    xcheck_assert!(a.metrics.completed == b.metrics.completed);
+                    xcheck_assert!(a.metrics.rejected == b.metrics.rejected);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_adaptive_router_live_is_total_and_window_safe() {
     use wattlaw::router::adaptive::AdaptiveRouter;
     use wattlaw::sim::{FleetState, GroupLoad, PoolLoad};

@@ -203,7 +203,7 @@ fn kpool_sweep_csv_round_trips_through_the_parser() {
     let parsed = parse_csv(&csv).unwrap_or_else(|e| panic!("parse: {e}"));
     assert_eq!(parsed.len(), 1 + recs.len());
     for row in &parsed {
-        assert_eq!(row.len(), 11, "sweep schema arity");
+        assert_eq!(row.len(), 12, "sweep schema arity");
     }
     // The measured tok/W column survives the round trip at full value.
     let col = parsed[0]

@@ -32,6 +32,17 @@
 //! trace is ever held) plus the trace-memory footprint each path holds,
 //! with both paths replay-asserted to the same bits.
 //!
+//! The `macro_step` section measures what macro-step event fusion buys:
+//! `StepMode::Fused` (the production default — quiescent decode spans
+//! run in one in-line loop, one fused event at the horizon) against the
+//! `StepMode::PerStep` one-event-per-step oracle at λ ∈ {1000, 4000},
+//! replay-asserted to the same bits, with the events-popped ratio
+//! (per-step must pop ≥ 10× more at λ=4000 — asserted) and the fused
+//! events-per-arrival figure. The earlier sections deliberately pin
+//! `StepMode::PerStep` so their events/sec keep meaning "one engine
+//! iteration per event" and stay comparable with the numbers recorded
+//! before fusion existed.
+//!
 //! Run `cargo bench --bench bench_sim_engine -- --record` to write the
 //! headline numbers to `BENCH_sim_engine.json` at the repo root
 //! (`--quick` shrinks the sample count for smoke runs; `--gate` fails
@@ -50,7 +61,7 @@ use wattlaw::scenario::ScenarioSpec;
 use wattlaw::sim::dispatch::{JoinShortestQueue, RoundRobin};
 use wattlaw::sim::{
     simulate_topology_opts, simulate_topology_source, EngineOptions,
-    GroupSimConfig, QueueMode, StateMode,
+    GroupSimConfig, QueueMode, StateMode, StepMode,
 };
 use wattlaw::workload::synth::{generate, GenConfig};
 use wattlaw::workload::{Request, SynthSource};
@@ -105,10 +116,14 @@ fn main() {
     )
     .with_config(cfg);
 
+    // Per-step keeps "events/sec" meaning one engine iteration per
+    // event (and the numbers comparable with pre-fusion records); the
+    // fused default is measured head-to-head in `macro_step` below.
     let opts = |allow_parallel: bool, mode: StateMode| EngineOptions {
         allow_parallel,
         state_mode: mode,
         queue_mode: QueueMode::Calendar,
+        step_mode: StepMode::PerStep,
         validate_state: false,
     };
     let mut steps_seq = 0u64;
@@ -256,6 +271,10 @@ fn main() {
         allow_parallel: false,
         state_mode: StateMode::Incremental,
         queue_mode: qm,
+        // Per-step: the queue swap is only visible under full event
+        // pressure (fusion would collapse the very event counts this
+        // section exists to stress).
+        step_mode: StepMode::PerStep,
         validate_state: false,
     };
     // (steps, output tokens) per (queue, λ) cell, stats[8..12].
@@ -371,6 +390,56 @@ fn main() {
             sa_steps[2 * li + 1] = r.steps;
             sa_toks[2 * li + 1] = r.output_tokens;
             sa_joules[2 * li + 1] = r.joules;
+            black_box(r.output_tokens)
+        });
+    }
+
+    // Macro-step event fusion head-to-head: the fused production
+    // default vs the per-step oracle on the λ ∈ {1000, 4000} traces
+    // (JSQ, calendar queue). Same floats either way — the replay
+    // asserts below pin that — so the delta is pure event-schedule
+    // cost. stats[22..26].
+    let ms_opts = |step_mode: StepMode| EngineOptions {
+        allow_parallel: false,
+        state_mode: StateMode::Incremental,
+        queue_mode: QueueMode::Calendar,
+        step_mode,
+        validate_state: false,
+    };
+    let ms_names = [
+        "macro_step_per_step_l1000",
+        "macro_step_fused_l1000",
+        "macro_step_per_step_l4000",
+        "macro_step_fused_l4000",
+    ];
+    let ms_traces = [&eq_trace_l1k, &eq_trace_l1k, &eq_trace_l4k, &eq_trace_l4k];
+    let ms_modes = [
+        StepMode::PerStep,
+        StepMode::Fused,
+        StepMode::PerStep,
+        StepMode::Fused,
+    ];
+    let mut ms_events = [0u64; 4];
+    let mut ms_steps = [0u64; 4];
+    let mut ms_toks = [0u64; 4];
+    let mut ms_joules = [0f64; 4];
+    for i in 0..4 {
+        let tr = ms_traces[i];
+        let mode = ms_modes[i];
+        g.bench(ms_names[i], || {
+            let mut jsq = JoinShortestQueue;
+            let r = simulate_topology_opts(
+                tr,
+                &router,
+                &pool_groups,
+                &cfgs,
+                &mut jsq,
+                ms_opts(mode),
+            );
+            ms_events[i] = r.events_popped;
+            ms_steps[i] = r.steps;
+            ms_toks[i] = r.output_tokens;
+            ms_joules[i] = r.joules;
             black_box(r.output_tokens)
         });
     }
@@ -521,6 +590,60 @@ fn main() {
         sa_trace_bytes[1] as f64 / 1e3,
     );
 
+    // Fused runs must replay the per-step oracle exactly — the whole
+    // point of macro-stepping is fewer events, not different floats —
+    // and at λ=4000 per-step must pop at least 10× more events (the
+    // PR's acceptance bar).
+    for li in 0..2 {
+        let (ps, fu) = (2 * li, 2 * li + 1);
+        assert_eq!(
+            ms_steps[ps], ms_steps[fu],
+            "fused engine must execute exactly the per-step schedule"
+        );
+        assert_eq!(ms_toks[ps], ms_toks[fu]);
+        assert_eq!(
+            ms_joules[ps].to_bits(),
+            ms_joules[fu].to_bits(),
+            "fused joules must replay the per-step oracle bit-for-bit"
+        );
+        assert!(
+            ms_events[fu] < ms_events[ps],
+            "fusion must reduce events popped: {} vs {}",
+            ms_events[fu],
+            ms_events[ps]
+        );
+    }
+    assert!(
+        ms_events[2] >= 10 * ms_events[3],
+        "λ=4000: per-step must pop ≥10× the fused events — got {} vs {}",
+        ms_events[2],
+        ms_events[3]
+    );
+    let ms_arrivals = [eq_trace_l1k.len() as u64, eq_trace_l4k.len() as u64];
+    for (i, name) in ms_names.iter().enumerate() {
+        println!(
+            "{name:<28} {} events popped ({} sim steps), \
+             {:.0} sim steps/sec (mean)",
+            ms_events[i],
+            ms_steps[i],
+            ev_per_s(ms_steps[i], &stats[22 + i])
+        );
+    }
+    let ms_ratio = |li: usize| ms_events[2 * li] as f64 / ms_events[2 * li + 1] as f64;
+    let ms_fused_per_arrival =
+        |li: usize| ms_events[2 * li + 1] as f64 / ms_arrivals[li] as f64;
+    println!(
+        "macro-step fusion: {:.1}x fewer events, {:.2}x faster, \
+         {:.2} fused events/arrival (λ=1000); {:.1}x fewer events, \
+         {:.2}x faster, {:.2} fused events/arrival (λ=4000)",
+        ms_ratio(0),
+        stats[22].mean_ns / stats[23].mean_ns,
+        ms_fused_per_arrival(0),
+        ms_ratio(1),
+        stats[24].mean_ns / stats[25].mean_ns,
+        ms_fused_per_arrival(1),
+    );
+
     // --gate: fail (after optionally recording) if calendar events/sec
     // regressed more than 20% against the committed non-null baseline.
     let mut gate_failures: Vec<String> = Vec::new();
@@ -549,6 +672,35 @@ fn main() {
                     gate_failures.push(format!(
                         "{name}: {now:.0} events/sec is {:.1}% below the \
                          committed baseline {base:.0}",
+                        (1.0 - now / base) * 100.0
+                    ));
+                }
+            }
+            // The fused cells are what production actually runs — gate
+            // their sim-step throughput the same way.
+            let ms_entries = doc
+                .get("macro_step")
+                .and_then(|q| q.get("entries"))
+                .and_then(|e| e.as_arr())
+                .unwrap_or(&[]);
+            for entry in ms_entries {
+                let Some(name) = entry.get("name").and_then(|n| n.as_str())
+                else {
+                    continue;
+                };
+                let Some(base) =
+                    entry.get("sim_steps_per_sec").and_then(|v| v.as_f64())
+                else {
+                    continue; // still null: nothing to gate against
+                };
+                let Some(i) = ms_names.iter().position(|n| *n == name) else {
+                    continue;
+                };
+                let now = ev_per_s(ms_steps[i], &stats[22 + i]);
+                if now < 0.8 * base {
+                    gate_failures.push(format!(
+                        "{name}: {now:.0} sim steps/sec is {:.1}% below \
+                         the committed baseline {base:.0}",
                         (1.0 - now / base) * 100.0
                     ));
                 }
@@ -712,6 +864,43 @@ fn main() {
             stats[21].mean_ns / stats[20].mean_ns,
             sa_trace_bytes[0],
             sa_trace_bytes[1],
+        ));
+        j.push_str("  \"macro_step\": {\n    \"entries\": [\n");
+        for (i, name) in ms_names.iter().enumerate() {
+            j.push_str(&format!(
+                "      {{ \"name\": \"{name}\", \"steps\": {}, \
+                 \"events_popped\": {}, \"sim_steps_per_sec\": {:.0}, \
+                 \"mean_ms\": {:.2} }}{}\n",
+                ms_steps[i],
+                ms_events[i],
+                ev_per_s(ms_steps[i], &stats[22 + i]),
+                stats[22 + i].mean_ns / 1e6,
+                if i + 1 < ms_names.len() { "," } else { "" }
+            ));
+        }
+        j.push_str(&format!(
+            "    ],\n    \
+             \"event_reduction_l1000\": {:.2},\n    \
+             \"event_reduction_l4000\": {:.2},\n    \
+             \"fused_speedup_l1000\": {:.3},\n    \
+             \"fused_speedup_l4000\": {:.3},\n    \
+             \"fused_events_per_arrival_l1000\": {:.3},\n    \
+             \"fused_events_per_arrival_l4000\": {:.3},\n    \
+             \"note\": \"StepMode::Fused (production default: quiescent \
+             decode spans run in one in-line loop, one fused event at \
+             the next-arrival horizon) vs the StepMode::PerStep \
+             one-event-per-step oracle (JSQ, calendar queue, \
+             incremental state) — replay-asserted bit-for-bit before \
+             recording, and per-step must pop >= 10x the fused events \
+             at lambda=4000; the --gate check trips when a fused cell's \
+             sim-step throughput drops more than 20% below this \
+             baseline\"\n  }},\n",
+            ms_ratio(0),
+            ms_ratio(1),
+            stats[22].mean_ns / stats[23].mean_ns,
+            stats[24].mean_ns / stats[25].mean_ns,
+            ms_fused_per_arrival(0),
+            ms_fused_per_arrival(1),
         ));
         j.push_str(
             "  \"recorded_by\": \"cargo bench --bench bench_sim_engine -- \

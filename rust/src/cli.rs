@@ -14,6 +14,7 @@
 //!                  [--pools K] [--cutoffs a,b,c] [--hetero]
 //!                  [--upgrade-budget N --upgrade-to b200]
 //!                  [--top-k K] [--slo-ttft S] [--workers N]
+//!                  [--step-mode fused|per-step]
 //!                  two-stage search: analytical screen, simulated refine
 //! wattlaw power [--gpu b200]                        P(b) curve
 //! wattlaw simulate [--trace azure|file.csv] [--lambda R] [--duration S]
@@ -21,10 +22,11 @@
 //!                  [--dispatch rr|jsq|least-kv|power|power-slo]
 //!                  [--router context|adaptive|fleetopt] [--spill F]
 //!                  [--pools K] [--cutoffs a,b,c]   K-pool routed fleet
+//!                  [--step-mode fused|per-step]    macro-step escape hatch
 //! wattlaw simulate sweep [--lambda 1000] [--duration S] [--groups N]
 //!                  [--workload ARCHETYPE] [--trace file.csv]
 //!                  [--dispatch NAME] [--b-short N] [--spill F]
-//!                  [--pools K] [--cutoffs a,b,c]
+//!                  [--pools K] [--cutoffs a,b,c] [--step-mode MODE]
 //!                  [--slo-ttft S] [--workers N]   scenario grid, threaded
 //! wattlaw serve [--requests N] [--b-short N] [--artifacts DIR]
 //! wattlaw validate [--artifacts DIR]                golden numerics check
@@ -64,11 +66,11 @@ pub struct Args {
 }
 
 /// Keys that are value-taking options; everything else with `--` is a flag.
-const VALUE_KEYS: [&str; 24] = [
+const VALUE_KEYS: [&str; 25] = [
     "lbar", "trace", "gpu", "topo", "b-short", "gamma", "lambda", "acct",
     "requests", "artifacts", "duration", "groups", "dispatch", "router",
     "spill", "slo-ttft", "workers", "format", "top-k", "pools", "cutoffs",
-    "upgrade-budget", "upgrade-to", "workload",
+    "upgrade-budget", "upgrade-to", "workload", "step-mode",
 ];
 
 pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Args {
@@ -164,6 +166,20 @@ impl Args {
 
     pub fn gpu(&self) -> Gpu {
         self.opt("gpu").and_then(Gpu::parse).unwrap_or(Gpu::H100)
+    }
+
+    /// `--step-mode fused|per-step` (default fused): the engine's
+    /// macro-stepping escape hatch — `per-step` replays the
+    /// one-event-per-decode-step oracle schedule, bit-identical and
+    /// slower. Errors on unknown names.
+    pub fn step_mode(&self) -> crate::Result<crate::sim::StepMode> {
+        match self.opt("step-mode") {
+            None | Some("fused") => Ok(crate::sim::StepMode::Fused),
+            Some("per-step") => Ok(crate::sim::StepMode::PerStep),
+            Some(s) => anyhow::bail!(
+                "unknown --step-mode '{s}' (fused|per-step)"
+            ),
+        }
     }
 
     /// `--gpu` as a comma-separated generation list (`h100,h100,b200`):
@@ -842,6 +858,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
         lbar: args.lbar(),
         acct: args.acct(),
         top_k: args.opt_u32("top-k", 4).max(1) as usize,
+        step_mode: args.step_mode()?,
         ..defaults
     };
 
@@ -1021,7 +1038,11 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
     };
 
     let p = ManualProfile::for_gpu(gpus[0]);
-    let opts = EngineOptions { allow_parallel: false, ..Default::default() };
+    let opts = EngineOptions {
+        allow_parallel: false,
+        step_mode: args.step_mode()?,
+        ..Default::default()
+    };
     let (homo_groups, homo_cfgs) =
         Topology::Homogeneous { ctx: LONG_CTX }.sim_pools(&p, groups, 1024);
     let mut rr = RoundRobin::new();
@@ -1171,6 +1192,7 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
         spill: Some(spill),
         slo: SloTargets { ttft_p99_s: args.opt_f64("slo-ttft", 0.5) },
         acct: args.acct(),
+        step_mode: args.step_mode()?,
     };
 
     let specs = sweep::grid(&trace, &cfg);

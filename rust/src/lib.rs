@@ -13,6 +13,10 @@
 //!   pre-refactor binary heap retained behind
 //!   [`sim::QueueMode::BinaryHeap`] as a bit-for-bit replay oracle) and
 //!   one virtual clock driving all groups of all pools concurrently,
+//!   macro-stepped by default ([`sim::StepMode::Fused`]: quiescent
+//!   decode spans between arrivals run in one in-line loop, so events
+//!   scale with arrivals, not decode steps; the per-step schedule is
+//!   the replay oracle),
 //!   hot per-group state stored struct-of-arrays for cache-linear
 //!   dispatch scans, with pluggable group-dispatch policies
 //!   (round-robin / join-shortest-queue / least-KV-load /

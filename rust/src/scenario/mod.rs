@@ -39,7 +39,7 @@ use crate::router::adaptive::AdaptiveRouter;
 use crate::router::Router;
 use crate::sim::{
     dispatch, simulate_topology_opts, simulate_topology_source,
-    EngineOptions, TopoSimReport,
+    EngineOptions, StepMode, TopoSimReport,
 };
 use crate::workload::arrival::{ArrivalSource, ArrivalSpec};
 use crate::workload::cdf::WorkloadTrace;
@@ -117,6 +117,9 @@ pub struct ScenarioSpec {
     /// spend as projected consolidation delay before refusing to pack
     /// (ignored by every other policy).
     pub power_guard_frac: f64,
+    /// Engine step scheduling ([`StepMode`]): the macro-stepping
+    /// default, or the one-event-per-step replay oracle.
+    pub step_mode: StepMode,
 }
 
 impl ScenarioSpec {
@@ -143,6 +146,7 @@ impl ScenarioSpec {
             lbar: LBarPolicy::Window,
             rho: 0.85,
             power_guard_frac: 0.5,
+            step_mode: StepMode::default(),
         }
     }
 
@@ -184,6 +188,11 @@ impl ScenarioSpec {
     pub fn with_rho(mut self, rho: f64) -> Self {
         assert!(rho > 0.0 && rho <= 1.0, "ρ must be in (0, 1]");
         self.rho = rho;
+        self
+    }
+
+    pub fn with_step_mode(mut self, step_mode: StepMode) -> Self {
+        self.step_mode = step_mode;
         self
     }
 
@@ -387,7 +396,11 @@ impl ScenarioSpec {
             &pool_groups,
             &pool_cfgs,
             policy.as_mut(),
-            EngineOptions { allow_parallel: false, ..Default::default() },
+            EngineOptions {
+                allow_parallel: false,
+                step_mode: self.step_mode,
+                ..Default::default()
+            },
         );
         self.outcome_from_report(report)
     }
@@ -411,7 +424,11 @@ impl ScenarioSpec {
             &pool_groups,
             &pool_cfgs,
             policy.as_mut(),
-            EngineOptions { allow_parallel, ..Default::default() },
+            EngineOptions {
+                allow_parallel,
+                step_mode: self.step_mode,
+                ..Default::default()
+            },
         );
         self.outcome_from_report(report)
     }

@@ -45,7 +45,7 @@ use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
 use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
 use crate::results::{Cell, Column, RowSet};
-use crate::sim::dispatch;
+use crate::sim::{dispatch, StepMode};
 use crate::workload::arrival::ArrivalSpec;
 use crate::workload::cdf::WorkloadTrace;
 use crate::workload::synth::GenConfig;
@@ -371,6 +371,9 @@ pub struct OptimizeConfig {
     pub acct: PowerAccounting,
     /// Analytical cells surviving into stage B.
     pub top_k: usize,
+    /// Engine step scheduling for stage B's simulated cells (fused
+    /// default; per-step is the replay oracle).
+    pub step_mode: StepMode,
 }
 
 impl Default for OptimizeConfig {
@@ -398,6 +401,7 @@ impl Default for OptimizeConfig {
             rho: 0.85,
             acct: PowerAccounting::PerGpu,
             top_k: 4,
+            step_mode: StepMode::default(),
         }
     }
 }
@@ -1100,6 +1104,7 @@ fn spec_for(
     .with_slo(cfg.slo)
     .with_lbar(cfg.lbar)
     .with_rho(cfg.rho)
+    .with_step_mode(cfg.step_mode)
 }
 
 /// Stage B: expand the surviving cells across the dispatch axis, replay

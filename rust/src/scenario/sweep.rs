@@ -28,7 +28,7 @@ use crate::fleet::profile::PowerAccounting;
 use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
 use crate::results::{Cell, Column, RowSet};
-use crate::sim::dispatch;
+use crate::sim::{dispatch, StepMode};
 use crate::workload::arrival::ArrivalSpec;
 use crate::workload::cdf::WorkloadTrace;
 use crate::workload::synth::GenConfig;
@@ -67,6 +67,9 @@ pub struct SweepConfig {
     pub slo: SloTargets,
     /// Power accounting for the per-cell analytical cross-check.
     pub acct: PowerAccounting,
+    /// Engine step scheduling shared by every cell (fused default;
+    /// `--step-mode per-step` replays the one-event-per-step oracle).
+    pub step_mode: StepMode,
 }
 
 impl Default for SweepConfig {
@@ -89,6 +92,7 @@ impl Default for SweepConfig {
             spill: Some(2.0),
             slo: SloTargets::default(),
             acct: PowerAccounting::PerGpu,
+            step_mode: StepMode::default(),
         }
     }
 }
@@ -147,7 +151,8 @@ pub fn grid(workload: &WorkloadTrace, cfg: &SweepConfig) -> Vec<ScenarioSpec> {
                 .with_dispatch(d)
                 .with_router(*router)
                 .with_arrivals(cfg.arrivals.clone())
-                .with_slo(cfg.slo),
+                .with_slo(cfg.slo)
+                .with_step_mode(cfg.step_mode),
             );
         }
     }

@@ -40,6 +40,15 @@ pub trait CalendarItem {
 const MIN_BUCKETS: usize = 16;
 const MAX_BUCKETS: usize = 1 << 20;
 
+/// Floor on the bucket width. Burst-heavy arrival sources (flash-crowd
+/// spikes) can report a near-zero mean inter-event gap, and a near-zero
+/// width makes every queued item's year index astronomically large —
+/// each pop then wraps the whole bucket ring before hitting the
+/// direct-scan fallback. The floor only bounds the *seed*; pop order is
+/// width-independent (the total-order contract), so clamping never
+/// changes what replays.
+const MIN_WIDTH: f64 = 1e-9;
+
 /// Bucketed event queue with lazy load-driven resize.
 #[derive(Debug)]
 pub struct CalendarQueue<T> {
@@ -54,9 +63,14 @@ pub struct CalendarQueue<T> {
 impl<T: CalendarItem> CalendarQueue<T> {
     /// Queue with an explicit bucket width (time units per year) and a
     /// capacity hint sizing the initial bucket array. Non-finite or
-    /// non-positive widths fall back to 1.0.
+    /// non-positive widths fall back to 1.0; tiny positive widths are
+    /// clamped up to [`MIN_WIDTH`].
     pub fn with_width(width: f64, capacity_hint: usize) -> Self {
-        let width = if width.is_finite() && width > 0.0 { width } else { 1.0 };
+        let width = if width.is_finite() && width > 0.0 {
+            width.max(MIN_WIDTH)
+        } else {
+            1.0
+        };
         let n = capacity_hint
             .max(1)
             .next_power_of_two()
@@ -200,7 +214,7 @@ impl<T: CalendarItem> CalendarQueue<T> {
             }
             let w = (hi - lo) / (items.len() - 1) as f64;
             if w.is_finite() && w > 0.0 {
-                self.width = w;
+                self.width = w.max(MIN_WIDTH);
             }
         }
         self.buckets = (0..new_n).map(|_| Vec::new()).collect();
@@ -364,6 +378,37 @@ mod tests {
             q.push(Item { t: 1.0, seq: 1 });
             assert_eq!(q.pop().unwrap().seq, 1);
             assert_eq!(q.pop().unwrap().seq, 0);
+        }
+    }
+
+    #[test]
+    fn near_zero_width_seed_is_clamped_and_pops_exactly() {
+        // A flash-crowd gap_hint can be arbitrarily close to zero. The
+        // seed must be floored so year indices stay sane, and pop order
+        // must still match the heap oracle bit-for-bit over a
+        // second-scale spread.
+        for w in [1e-300, f64::MIN_POSITIVE, 1e-15] {
+            let mut q = CalendarQueue::with_width(w, 32);
+            assert_eq!(
+                q.width, MIN_WIDTH,
+                "seed width {w:e} not clamped to the floor"
+            );
+            let mut h: BinaryHeap<Rev> = BinaryHeap::new();
+            let mut rng = Lcg(17);
+            for seq in 0..400u64 {
+                let t = rng.f64_in(0.0, 120.0);
+                q.push(Item { t, seq });
+                h.push(Rev(Item { t, seq }));
+            }
+            // Rebuild re-derives the width from the live population;
+            // the clamp must hold there too.
+            assert!(q.width >= MIN_WIDTH);
+            while let Some(a) = q.pop() {
+                let b = h.pop().unwrap().0;
+                assert_eq!((a.t.to_bits(), a.seq), (b.t.to_bits(), b.seq));
+                assert!(q.width >= MIN_WIDTH);
+            }
+            assert!(h.pop().is_none());
         }
     }
 

@@ -74,13 +74,61 @@
 //! instead of `trace.len()` offsets every step/wake `seq` uniformly
 //! and flips no comparison. Identical pop order ⇒ identical meters
 //! (asserted bitwise across all dispatch policies and both queue modes
-//! by `tests/properties.rs` and the in-module tests) — the
-//! materialized path is the streaming path's replay oracle, the same
-//! pattern that kept the binary heap and the per-arrival snapshots.
+//! by `tests/properties.rs` and the in-module tests).
 //! Sources must yield non-decreasing times (asserted), which also
 //! guarantees the calendar queue never sees a backward push. The
 //! streaming path is sequential-only: the parallel fast path
 //! pre-assigns the whole trace and therefore requires materialization.
+//! Both entry points feed one shared [`drive`] loop parameterized over
+//! the arrival [`Feed`], so they cannot drift apart in event handling.
+//!
+//! **Macro-stepping**: between consecutive arrivals a group's batch
+//! composition evolves by a deterministic recurrence — admit finds an
+//! empty queue, plan/τ(n, L̄)/apply depend only on the group's own
+//! state — so scheduling one `StepComplete` event per decode iteration
+//! buys ordering flexibility nothing needs. Under the default
+//! [`StepMode::Fused`], [`start_step`] runs that recurrence in a tight
+//! in-line loop: each iteration makes the *same* calls in the *same*
+//! order as the event-driven path (admit, plan, `tau_ms`, meter
+//! `observe`, apply plan), and only falls back to scheduling a real
+//! event for the first step whose end time `t_end` does not satisfy
+//! `t_end < next_arrival` — i.e. the step's completion is no longer
+//! provably the group's next observable moment. The comparison is a
+//! plain `<` on purpose: when it is true, `(t_end, STEP)` strictly
+//! precedes `(next_arrival, ARRIVAL)` in the pop order, so fusing the
+//! step is exactly what the event queue would have done; when it is
+//! false (including the `-0.0 < 0.0` and NaN edges where `<` and
+//! `total_cmp` disagree), the engine conservatively schedules the
+//! event and lets the queue arbitrate — slower, never wrong. No other
+//! horizon needs tracking: slot completions, ingest-phase changes and
+//! the meter all live inside the per-iteration calls, which the loop
+//! re-runs every step. Because every arrival at time t pops before any
+//! step or wake at t (class order), `next_arrival` is always strictly
+//! ahead of the handler's `now`, and because all steps that precede an
+//! arrival are applied before it in both modes, live-state reads at
+//! arrivals — and therefore routing, dispatch, and every float — are
+//! bit-identical. The event count, not the results, is what changes:
+//! events popped scale with arrivals + quiesce boundaries instead of
+//! decode steps ([`FleetRun::events_popped`] surfaces the count, the
+//! `macro_step` bench section asserts the ≥10× reduction at λ=4000).
+//!
+//! **Four replay oracles, one pattern**: every performance-motivated
+//! rewrite of this engine kept its predecessor alive behind an options
+//! switch as a bit-for-bit replay oracle, so correctness is always one
+//! equality assertion away from the slow-but-obvious implementation:
+//!
+//! * [`QueueMode::BinaryHeap`] — the heap scheduler the calendar/bucket
+//!   queue replaced;
+//! * [`StateMode::RebuildPerArrival`] — the per-arrival fleet snapshot
+//!   the incremental live state replaced;
+//! * the materialized trace ([`run_fleet`]) — the all-upfront arrival
+//!   path the streaming feed replaced;
+//! * [`StepMode::PerStep`] — the one-event-per-decode-step schedule
+//!   that macro-stepping replaced.
+//!
+//! All four axes compose, and `tests/properties.rs` pins the fused
+//! default against the per-step oracle across every dispatch policy ×
+//! both queue modes × streamed/materialized feeds on random traces.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -412,6 +460,24 @@ pub enum QueueMode {
     BinaryHeap,
 }
 
+/// How the engine schedules a group's decode/ingest iterations.
+/// Both modes make the identical per-step calls in the identical
+/// order, so entire simulations are bit-identical; only the number of
+/// events that transit the queue differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StepMode {
+    /// Macro-stepping: run every step whose end time provably precedes
+    /// the next arrival in one in-line loop, scheduling a single fused
+    /// `StepComplete` at the horizon — events scale with arrivals, not
+    /// decode steps. The production mode.
+    #[default]
+    Fused,
+    /// One `StepComplete` event per engine iteration — the pre-fusion
+    /// schedule. Kept as the bit-for-bit replay oracle and the
+    /// "before" baseline of the `macro_step` bench section.
+    PerStep,
+}
+
 /// Engine knobs beyond the (trace, router, policy) triple.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineOptions {
@@ -422,6 +488,8 @@ pub struct EngineOptions {
     pub state_mode: StateMode,
     /// Event-queue implementation ([`QueueMode`]).
     pub queue_mode: QueueMode,
+    /// Step scheduling strategy ([`StepMode`]).
+    pub step_mode: StepMode,
     /// Cross-check the incrementally maintained state against a freshly
     /// built snapshot after **every** event (O(fleet) per event — tests
     /// only). Panics on the first divergence. Requires
@@ -456,6 +524,7 @@ impl Default for EngineOptions {
             allow_parallel: true,
             state_mode: StateMode::Incremental,
             queue_mode: QueueMode::Calendar,
+            step_mode: StepMode::Fused,
             validate_state: false,
         }
     }
@@ -678,9 +747,43 @@ fn assign(
     (route.pool, group, sreq)
 }
 
+/// Apply a finished step's work plan at its boundary timestamp: chunked
+/// prompt ingestion advances, decode slots emit one token each and may
+/// complete. The single definition is shared by the event-driven path
+/// ([`handle_step_complete`]) and the fused in-line loop
+/// ([`start_step`]), so the two cannot diverge in what a step does.
+fn apply_plan(gs: &mut GroupSim, plan: Vec<SlotWork>, now: f64) {
+    for (i, w) in plan.into_iter().enumerate() {
+        match w {
+            SlotWork::Idle => {}
+            SlotWork::Ingest { .. } => {
+                gs.batcher.on_step(i, w, now);
+            }
+            SlotWork::Decode => {
+                gs.meter.add_output_tokens(1);
+                if let Some(c) = gs.batcher.on_step(i, SlotWork::Decode, now) {
+                    gs.metrics.record(&c);
+                }
+            }
+        }
+    }
+}
+
 /// Plan the group's next step from its live `(n_active, L̄)` operating
 /// point, or quiesce if nothing is admitted. `clock`/`busy` are the
 /// group's scheduling lanes.
+///
+/// Under [`StepMode::Fused`] this is a loop, not a single plan: every
+/// step whose end time `t_end` satisfies the strict `t_end <
+/// next_arrival` is applied in line (the queue would have popped its
+/// `StepComplete` before anything else the group can observe — see the
+/// module docs for why plain `<` is exactly the safe test), and only
+/// the first step that reaches the horizon is scheduled as a real
+/// event. `next_arrival` is the timestamp of the next unconsumed
+/// arrival ([`Feed::next_arrival_t`]), `f64::INFINITY` once the feed
+/// is drained; it is strictly greater than `now` on every call because
+/// arrivals pop before same-time steps and wakes. Per-step mode never
+/// enters the fused branch, preserving the one-event-per-step oracle.
 #[allow(clippy::too_many_arguments)]
 fn start_step(
     gs: &mut GroupSim,
@@ -692,33 +795,48 @@ fn start_step(
     group: usize,
     clock: &mut f64,
     busy: &mut bool,
+    step_mode: StepMode,
+    next_arrival: f64,
 ) {
-    gs.batcher.admit(now);
-    if gs.batcher.active() == 0 {
-        // Nothing in flight: quiesce; the next arrival wakes the group
-        // (and accounts the idle-power gap).
-        *busy = false;
-        *clock = now;
+    let mut now = now;
+    loop {
+        gs.batcher.admit(now);
+        if gs.batcher.active() == 0 {
+            // Nothing in flight: quiesce; the next arrival wakes the
+            // group (and accounts the idle-power gap).
+            *busy = false;
+            *clock = now;
+            return;
+        }
+        let plan = gs.batcher.plan();
+        let n_active = plan
+            .iter()
+            .filter(|w| !matches!(w, SlotWork::Idle))
+            .count() as f64;
+        let l_bar = gs.batcher.mean_kv_len().max(1.0);
+        let dt = cfg.roofline.tau_ms(n_active, l_bar) / 1e3;
+        let t_end = now + dt;
+        gs.meter.observe(t_end, n_active);
+        gs.steps += 1;
+        if step_mode == StepMode::Fused && t_end < next_arrival {
+            // Fuse: the step's completion strictly precedes every event
+            // the queue could pop, so apply it here — same calls, same
+            // order, same floats as the event-driven path.
+            *clock = t_end;
+            apply_plan(gs, plan, t_end);
+            now = t_end;
+            continue;
+        }
+        gs.pending_plan = Some(plan);
+        *seq += 1;
+        q.push(Ev {
+            t: t_end,
+            class: CLASS_STEP,
+            seq: *seq,
+            kind: EvKind::StepComplete { pool, group },
+        });
         return;
     }
-    let plan = gs.batcher.plan();
-    let n_active = plan
-        .iter()
-        .filter(|w| !matches!(w, SlotWork::Idle))
-        .count() as f64;
-    let l_bar = gs.batcher.mean_kv_len().max(1.0);
-    let dt = cfg.roofline.tau_ms(n_active, l_bar) / 1e3;
-    let t_end = now + dt;
-    gs.meter.observe(t_end, n_active);
-    gs.pending_plan = Some(plan);
-    gs.steps += 1;
-    *seq += 1;
-    q.push(Ev {
-        t: t_end,
-        class: CLASS_STEP,
-        seq: *seq,
-        kind: EvKind::StepComplete { pool, group },
-    });
 }
 
 /// Topology sanity checks shared by every engine entry point (the
@@ -821,7 +939,7 @@ fn handle_arrival(
 }
 
 /// Apply a finished step's work plan at its boundary, then immediately
-/// plan the group's next step. Shared by both engines.
+/// plan the group's next step(s). Shared by both feeds.
 #[allow(clippy::too_many_arguments)]
 fn handle_step_complete(
     pool: usize,
@@ -833,6 +951,8 @@ fn handle_step_complete(
     seq: &mut u64,
     live: &mut FleetState,
     track: bool,
+    step_mode: StepMode,
+    next_arrival: f64,
 ) {
     let lane = live.lane(pool, group);
     live.s.clock[lane] = now;
@@ -841,20 +961,7 @@ fn handle_step_complete(
         .pending_plan
         .take()
         .expect("StepComplete without an in-flight plan");
-    for (i, w) in plan.into_iter().enumerate() {
-        match w {
-            SlotWork::Idle => {}
-            SlotWork::Ingest { .. } => {
-                gs.batcher.on_step(i, w, now);
-            }
-            SlotWork::Decode => {
-                gs.meter.add_output_tokens(1);
-                if let Some(c) = gs.batcher.on_step(i, SlotWork::Decode, now) {
-                    gs.metrics.record(&c);
-                }
-            }
-        }
-    }
+    apply_plan(gs, plan, now);
     start_step(
         gs,
         &pool_cfgs[pool],
@@ -865,13 +972,15 @@ fn handle_step_complete(
         group,
         &mut live.s.clock[lane],
         &mut live.s.busy[lane],
+        step_mode,
+        next_arrival,
     );
     if track {
         live.refresh_group(pool, group, &pools[pool][group]);
     }
 }
 
-/// Re-enter the stepping loop after an idle gap. Shared by both engines.
+/// Re-enter the stepping loop after an idle gap. Shared by both feeds.
 #[allow(clippy::too_many_arguments)]
 fn handle_wake(
     pool: usize,
@@ -883,6 +992,8 @@ fn handle_wake(
     seq: &mut u64,
     live: &mut FleetState,
     track: bool,
+    step_mode: StepMode,
+    next_arrival: f64,
 ) {
     let lane = live.lane(pool, group);
     let gs = &mut pools[pool][group];
@@ -896,6 +1007,8 @@ fn handle_wake(
         group,
         &mut live.s.clock[lane],
         &mut live.s.busy[lane],
+        step_mode,
+        next_arrival,
     );
     if track {
         live.refresh_group(pool, group, &pools[pool][group]);
@@ -920,6 +1033,206 @@ fn finish_outcomes(
     out
 }
 
+/// One engine run's results: per-group outcomes in (pool, group) index
+/// order plus the number of events that transited the queue — the cost
+/// metric macro-stepping exists to shrink. `events_popped` is invariant
+/// across queue modes, state modes and materialized/streamed feeds, but
+/// *not* across step modes (that asymmetry is the point) nor across the
+/// sequential/parallel paths in fused mode: a group simulated in
+/// isolation fuses past other groups' arrivals, so the per-group sum
+/// undercounts the shared-queue run. Outcome floats are bit-identical
+/// on every path regardless.
+#[derive(Debug)]
+pub(crate) struct FleetRun {
+    pub(crate) pools: Vec<Vec<GroupOutcome>>,
+    pub(crate) events_popped: u64,
+}
+
+/// Where [`drive`] gets its arrivals — the one axis on which the
+/// materialized and streaming engines differ. Everything downstream of
+/// the pop loop is shared, so the two paths cannot drift apart.
+enum Feed<'a> {
+    /// Every arrival pre-pushed into the queue; `cursor` tracks the
+    /// next not-yet-popped index (arrivals pop in push order because
+    /// the trace is sorted and seq breaks ties FIFO).
+    Materialized { trace: &'a [Request], cursor: usize },
+    /// Exactly one pending arrival in the queue at a time, pulled
+    /// lazily from the source.
+    Stream {
+        source: &'a mut dyn ArrivalSource,
+        pending: Option<Request>,
+        arrival_seq: u64,
+    },
+}
+
+impl Feed<'_> {
+    /// Timestamp of the next arrival the queue will pop — the fusion
+    /// horizon of [`start_step`] — or `f64::INFINITY` once the feed is
+    /// drained. Strictly greater than the current event's time whenever
+    /// a step or wake handler runs, because every arrival at that time
+    /// has already popped (class order).
+    fn next_arrival_t(&self) -> f64 {
+        match self {
+            Feed::Materialized { trace, cursor } => trace
+                .get(*cursor)
+                .map_or(f64::INFINITY, |r| r.arrival_s),
+            Feed::Stream { pending, .. } => {
+                pending.as_ref().map_or(f64::INFINITY, |r| r.arrival_s)
+            }
+        }
+    }
+}
+
+/// The shared event loop both entry points delegate to: pop, dispatch
+/// on kind, maintain/validate live state, count events, finish. The
+/// feed is the only behavioral parameter — see [`Feed`].
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    mut feed: Feed<'_>,
+    mut q: EventQueue,
+    mut seq: u64,
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+    dispatch: &mut dyn DispatchPolicy,
+    opts: EngineOptions,
+    mut pools: Vec<Vec<GroupSim>>,
+) -> FleetRun {
+    let need_state = router.is_load_aware() || !dispatch.is_arrival_static();
+    // Refresh the live load lanes in place only when someone will read
+    // them AND we are not in the legacy rebuild-per-arrival oracle mode.
+    let track = need_state && opts.state_mode == StateMode::Incremental;
+    // The SoA state itself is always allocated: its clock/busy lanes are
+    // the engine's own per-group scheduling state, maintained on every
+    // path. The one-off initial build is O(total groups) once per run.
+    let mut live = FleetState::initial(pool_groups, pool_cfgs);
+    // When nobody may legitimately read the state (static-only run, or
+    // the rebuild oracle supplying its own snapshots), hand out an
+    // empty canary instead: a policy that lies about being static and
+    // indexes into it panics immediately rather than silently deciding
+    // from stale load.
+    let canary = FleetState::empty();
+    let mut events_popped: u64 = 0;
+
+    while let Some(ev) = q.pop() {
+        events_popped += 1;
+        match ev.kind {
+            EvKind::Arrival { idx } => match &mut feed {
+                Feed::Materialized { trace, cursor } => {
+                    *cursor = idx + 1;
+                    handle_arrival(
+                        &trace[idx],
+                        ev.t,
+                        router,
+                        dispatch,
+                        pool_groups,
+                        pool_cfgs,
+                        &mut pools,
+                        &mut q,
+                        &mut seq,
+                        &mut live,
+                        &canary,
+                        need_state,
+                        track,
+                        opts.state_mode,
+                    );
+                }
+                Feed::Stream { source, pending, arrival_seq } => {
+                    let req = pending
+                        .take()
+                        .expect("arrival event without a pending request");
+                    // Pull the successor before handling, so the queue
+                    // already orders it against whatever steps/wakes
+                    // the current arrival schedules — and so the
+                    // fusion horizon those handlers read is the true
+                    // next arrival. The pending arrival always
+                    // precedes every future arrival (non-decreasing
+                    // time, lower seq within the arrival class), so
+                    // the pop candidates match the materialized run's
+                    // exactly.
+                    if let Some(next) = source.next() {
+                        assert!(
+                            next.arrival_s.is_finite(),
+                            "non-finite arrival time for request {}",
+                            next.id
+                        );
+                        assert!(
+                            next.arrival_s >= req.arrival_s,
+                            "arrival source must be non-decreasing in time: \
+                             request {} at t = {} after t = {}",
+                            next.id,
+                            next.arrival_s,
+                            req.arrival_s
+                        );
+                        *arrival_seq += 1;
+                        q.push(Ev {
+                            t: next.arrival_s,
+                            class: CLASS_ARRIVAL,
+                            seq: *arrival_seq,
+                            kind: EvKind::Arrival {
+                                idx: *arrival_seq as usize,
+                            },
+                        });
+                        *pending = Some(next);
+                    }
+                    handle_arrival(
+                        &req,
+                        ev.t,
+                        router,
+                        dispatch,
+                        pool_groups,
+                        pool_cfgs,
+                        &mut pools,
+                        &mut q,
+                        &mut seq,
+                        &mut live,
+                        &canary,
+                        need_state,
+                        track,
+                        opts.state_mode,
+                    );
+                }
+            },
+            EvKind::StepComplete { pool, group } => handle_step_complete(
+                pool,
+                group,
+                ev.t,
+                pool_cfgs,
+                &mut pools,
+                &mut q,
+                &mut seq,
+                &mut live,
+                track,
+                opts.step_mode,
+                feed.next_arrival_t(),
+            ),
+            EvKind::Wake { pool, group } => handle_wake(
+                pool,
+                group,
+                ev.t,
+                pool_cfgs,
+                &mut pools,
+                &mut q,
+                &mut seq,
+                &mut live,
+                track,
+                opts.step_mode,
+                feed.next_arrival_t(),
+            ),
+        }
+        if opts.validate_state && track {
+            assert!(
+                live == snapshot(&pools, pool_cfgs),
+                "incremental FleetState diverged from a fresh snapshot \
+                 after event at t = {}",
+                ev.t
+            );
+        }
+    }
+
+    FleetRun { pools: finish_outcomes(pools, &live), events_popped }
+}
+
 pub(crate) fn run_fleet(
     trace: &[Request],
     router: &dyn Router,
@@ -927,7 +1240,7 @@ pub(crate) fn run_fleet(
     pool_cfgs: &[GroupSimConfig],
     dispatch: &mut dyn DispatchPolicy,
     opts: EngineOptions,
-) -> Vec<Vec<GroupOutcome>> {
+) -> FleetRun {
     validate_fleet_inputs(trace, router, pool_groups, pool_cfgs);
     assert_validate_applicable(router, &*dispatch, opts);
     // Hand delay-projecting policies (the power-slo TTFT guard) the
@@ -939,7 +1252,7 @@ pub(crate) fn run_fleet(
         "run_fleet requires an arrival-sorted trace"
     );
 
-    let mut pools: Vec<Vec<GroupSim>> = pool_groups
+    let pools: Vec<Vec<GroupSim>> = pool_groups
         .iter()
         .zip(pool_cfgs)
         .map(|(&g, cfg)| (0..g).map(|_| GroupSim::new(cfg)).collect())
@@ -958,60 +1271,18 @@ pub(crate) fn run_fleet(
             kind: EvKind::Arrival { idx: i },
         });
     }
-    let mut seq = trace.len() as u64;
-    let need_state = router.is_load_aware() || !dispatch.is_arrival_static();
-    // Refresh the live load lanes in place only when someone will read
-    // them AND we are not in the legacy rebuild-per-arrival oracle mode.
-    let track = need_state && opts.state_mode == StateMode::Incremental;
-    // The SoA state itself is always allocated: its clock/busy lanes are
-    // the engine's own per-group scheduling state, maintained on every
-    // path. The one-off initial build is O(total groups) once per run.
-    let mut live = FleetState::initial(pool_groups, pool_cfgs);
-    // When nobody may legitimately read the state (static-only run, or
-    // the rebuild oracle supplying its own snapshots), hand out an
-    // empty canary instead: a policy that lies about being static and
-    // indexes into it panics immediately rather than silently deciding
-    // from stale load.
-    let canary = FleetState::empty();
-
-    while let Some(ev) = q.pop() {
-        match ev.kind {
-            EvKind::Arrival { idx } => handle_arrival(
-                &trace[idx],
-                ev.t,
-                router,
-                dispatch,
-                pool_groups,
-                pool_cfgs,
-                &mut pools,
-                &mut q,
-                &mut seq,
-                &mut live,
-                &canary,
-                need_state,
-                track,
-                opts.state_mode,
-            ),
-            EvKind::StepComplete { pool, group } => handle_step_complete(
-                pool, group, ev.t, pool_cfgs, &mut pools, &mut q, &mut seq,
-                &mut live, track,
-            ),
-            EvKind::Wake { pool, group } => handle_wake(
-                pool, group, ev.t, pool_cfgs, &mut pools, &mut q, &mut seq,
-                &mut live, track,
-            ),
-        }
-        if opts.validate_state && track {
-            assert!(
-                live == snapshot(&pools, pool_cfgs),
-                "incremental FleetState diverged from a fresh snapshot \
-                 after event at t = {}",
-                ev.t
-            );
-        }
-    }
-
-    finish_outcomes(pools, &live)
+    let seq = trace.len() as u64;
+    drive(
+        Feed::Materialized { trace, cursor: 0 },
+        q,
+        seq,
+        router,
+        pool_groups,
+        pool_cfgs,
+        dispatch,
+        opts,
+        pools,
+    )
 }
 
 /// Run the fleet over a lazy [`ArrivalSource`], pulling one request at
@@ -1032,12 +1303,12 @@ pub(crate) fn run_fleet_stream(
     pool_cfgs: &[GroupSimConfig],
     dispatch: &mut dyn DispatchPolicy,
     opts: EngineOptions,
-) -> Vec<Vec<GroupOutcome>> {
+) -> FleetRun {
     validate_topology_inputs(router, pool_groups, pool_cfgs);
     assert_validate_applicable(router, &*dispatch, opts);
     dispatch.configure_pools(pool_cfgs);
 
-    let mut pools: Vec<Vec<GroupSim>> = pool_groups
+    let pools: Vec<Vec<GroupSim>> = pool_groups
         .iter()
         .zip(pool_cfgs)
         .map(|(&g, cfg)| (0..g).map(|_| GroupSim::new(cfg)).collect())
@@ -1059,7 +1330,7 @@ pub(crate) fn run_fleet_stream(
     // the same relative order the materialized path assigns them);
     // steps/wakes share `seq` as in `run_fleet`, offset by not knowing
     // the trace length up front, which no comparison can observe.
-    let mut arrival_seq: u64 = 0;
+    let arrival_seq: u64 = 0;
     let mut pending: Option<Request> = None;
     if let Some(r) = source.next() {
         assert!(
@@ -1075,104 +1346,43 @@ pub(crate) fn run_fleet_stream(
         });
         pending = Some(r);
     }
-    let mut seq = 0u64;
-    let need_state = router.is_load_aware() || !dispatch.is_arrival_static();
-    let track = need_state && opts.state_mode == StateMode::Incremental;
-    let mut live = FleetState::initial(pool_groups, pool_cfgs);
-    let canary = FleetState::empty();
-
-    while let Some(ev) = q.pop() {
-        match ev.kind {
-            EvKind::Arrival { .. } => {
-                let req = pending
-                    .take()
-                    .expect("arrival event without a pending request");
-                // Pull the successor before handling, so the queue
-                // already orders it against whatever steps/wakes the
-                // current arrival schedules. The pending arrival always
-                // precedes every future arrival (non-decreasing time,
-                // lower seq within the arrival class), so the pop
-                // candidates match the materialized run's exactly.
-                if let Some(next) = source.next() {
-                    assert!(
-                        next.arrival_s.is_finite(),
-                        "non-finite arrival time for request {}",
-                        next.id
-                    );
-                    assert!(
-                        next.arrival_s >= req.arrival_s,
-                        "arrival source must be non-decreasing in time: \
-                         request {} at t = {} after t = {}",
-                        next.id,
-                        next.arrival_s,
-                        req.arrival_s
-                    );
-                    arrival_seq += 1;
-                    q.push(Ev {
-                        t: next.arrival_s,
-                        class: CLASS_ARRIVAL,
-                        seq: arrival_seq,
-                        kind: EvKind::Arrival { idx: arrival_seq as usize },
-                    });
-                    pending = Some(next);
-                }
-                handle_arrival(
-                    &req,
-                    ev.t,
-                    router,
-                    dispatch,
-                    pool_groups,
-                    pool_cfgs,
-                    &mut pools,
-                    &mut q,
-                    &mut seq,
-                    &mut live,
-                    &canary,
-                    need_state,
-                    track,
-                    opts.state_mode,
-                );
-            }
-            EvKind::StepComplete { pool, group } => handle_step_complete(
-                pool, group, ev.t, pool_cfgs, &mut pools, &mut q, &mut seq,
-                &mut live, track,
-            ),
-            EvKind::Wake { pool, group } => handle_wake(
-                pool, group, ev.t, pool_cfgs, &mut pools, &mut q, &mut seq,
-                &mut live, track,
-            ),
-        }
-        if opts.validate_state && track {
-            assert!(
-                live == snapshot(&pools, pool_cfgs),
-                "incremental FleetState diverged from a fresh snapshot \
-                 after event at t = {}",
-                ev.t
-            );
-        }
-    }
-
-    finish_outcomes(pools, &live)
+    drive(
+        Feed::Stream { source, pending, arrival_seq },
+        q,
+        0,
+        router,
+        pool_groups,
+        pool_cfgs,
+        dispatch,
+        opts,
+        pools,
+    )
 }
 
 /// Simulate one group in isolation — the unit of work of the parallel
 /// fast path. Runs the exact same event engine (one pool, one group), so
-/// per-group results are bit-identical to the shared-queue run.
+/// per-group results are bit-identical to the shared-queue run. The
+/// returned event count covers this group's private queue only; in
+/// fused mode the group fuses past the *fleet's* other arrivals, so
+/// the per-group sum is a lower bound on the shared-queue count.
 fn run_one_group(
     reqs: &[Request],
     cfg: &GroupSimConfig,
     queue_mode: QueueMode,
-) -> GroupOutcome {
+    step_mode: StepMode,
+) -> (GroupOutcome, u64) {
     let mut rr = RoundRobin::new();
-    let mut out = run_fleet(
+    let run = run_fleet(
         reqs,
         &HomogeneousRouter,
         &[1],
         std::slice::from_ref(cfg),
         &mut rr,
-        EngineOptions { queue_mode, ..Default::default() },
+        EngineOptions { queue_mode, step_mode, ..Default::default() },
     );
-    out.pop().expect("one pool").pop().expect("one group")
+    let FleetRun { mut pools, events_popped } = run;
+    let outcome = pools.pop().expect("one pool").pop().expect("one group");
+    (outcome, events_popped)
 }
 
 /// Whether `run_fleet_auto` may take the parallel per-group path.
@@ -1197,7 +1407,7 @@ pub(crate) fn run_fleet_auto(
     pool_cfgs: &[GroupSimConfig],
     dispatch: &mut dyn DispatchPolicy,
     opts: EngineOptions,
-) -> Vec<Vec<GroupOutcome>> {
+) -> FleetRun {
     assert_validate_applicable(router, &*dispatch, opts);
     if !(opts.allow_parallel
         && parallel_eligible(router, &*dispatch, pool_groups))
@@ -1240,7 +1450,7 @@ pub(crate) fn run_fleet_auto(
             groups.into_iter().enumerate().map(move |(g, reqs)| (p, g, reqs))
         })
         .collect();
-    let mut results: Vec<Option<GroupOutcome>> =
+    let mut results: Vec<Option<(GroupOutcome, u64)>> =
         (0..jobs.len()).map(|_| None).collect();
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -1260,6 +1470,7 @@ pub(crate) fn run_fleet_auto(
                         reqs,
                         &pool_cfgs[*pool],
                         opts.queue_mode,
+                        opts.step_mode,
                     ));
                 }
             });
@@ -1268,10 +1479,13 @@ pub(crate) fn run_fleet_auto(
 
     let mut out: Vec<Vec<GroupOutcome>> =
         pool_groups.iter().map(|_| Vec::new()).collect();
+    let mut events_popped = 0u64;
     for ((pool, _group, _), res) in jobs.iter().zip(results) {
-        out[*pool].push(res.expect("worker filled every slot"));
+        let (outcome, events) = res.expect("worker filled every slot");
+        events_popped += events;
+        out[*pool].push(outcome);
     }
-    out
+    FleetRun { pools: out, events_popped }
 }
 
 #[cfg(test)]
@@ -1344,7 +1558,8 @@ mod tests {
             &[cfg(8192)],
             &mut rr,
             EngineOptions::default(),
-        );
+        )
+        .pools;
         let completed: u64 = out[0].iter().map(|g| g.metrics.completed).sum();
         let tokens: u64 = out[0].iter().map(|g| g.output_tokens).sum();
         let want: u64 = trace.iter().map(|r| r.output_tokens as u64).sum();
@@ -1363,7 +1578,8 @@ mod tests {
             &[cfg(8192)],
             &mut RoundRobin::new(),
             EngineOptions::default(),
-        );
+        )
+        .pools;
         let par_out = run_fleet_auto(
             &trace,
             &HomogeneousRouter,
@@ -1371,7 +1587,8 @@ mod tests {
             &[cfg(8192)],
             &mut RoundRobin::new(),
             EngineOptions::default(),
-        );
+        )
+        .pools;
         for (s, p) in seq_out[0].iter().zip(&par_out[0]) {
             assert_eq!(s.joules.to_bits(), p.joules.to_bits());
             assert_eq!(s.output_tokens, p.output_tokens);
@@ -1398,7 +1615,8 @@ mod tests {
             &[cfg(8192)],
             &mut RoundRobin::new(),
             EngineOptions::default(),
-        );
+        )
+        .pools;
         assert!(out[0][0].joules > 5.0 * 299.0, "idle joules missing");
         assert_eq!(out[0][0].metrics.completed, 1);
     }
@@ -1521,7 +1739,8 @@ mod tests {
             &[cfg(8192)],
             &mut jsq,
             EngineOptions { validate_state: true, ..Default::default() },
-        );
+        )
+        .pools;
         let completed: u64 = out[0].iter().map(|g| g.metrics.completed).sum();
         assert_eq!(completed, trace.len() as u64);
     }
@@ -1539,6 +1758,7 @@ mod tests {
                 &mut jsq,
                 EngineOptions { state_mode: mode, ..Default::default() },
             )
+            .pools
         };
         let incr = run(StateMode::Incremental);
         let oracle = run(StateMode::RebuildPerArrival);
@@ -1563,6 +1783,7 @@ mod tests {
                 &mut jsq,
                 EngineOptions { queue_mode, ..Default::default() },
             )
+            .pools
         };
         let cal = run(QueueMode::Calendar);
         let heap = run(QueueMode::BinaryHeap);
@@ -1596,7 +1817,8 @@ mod tests {
             &[cfg(8192)],
             &mut super::super::dispatch::JoinShortestQueue,
             EngineOptions::default(),
-        );
+        )
+        .pools;
         let mut source =
             crate::workload::arrival::SynthSource::new(&workload, &gen_cfg);
         let streamed = run_fleet_stream(
@@ -1606,7 +1828,8 @@ mod tests {
             &[cfg(8192)],
             &mut super::super::dispatch::JoinShortestQueue,
             EngineOptions::default(),
-        );
+        )
+        .pools;
         for (a, b) in materialized[0].iter().zip(&streamed[0]) {
             assert_eq!(a.joules.to_bits(), b.joules.to_bits());
             assert_eq!(a.output_tokens, b.output_tokens);
@@ -1628,7 +1851,8 @@ mod tests {
             &[cfg(8192)],
             &mut RoundRobin::new(),
             EngineOptions::default(),
-        );
+        )
+        .pools;
         assert_eq!(out[0].len(), 2);
         for g in &out[0] {
             assert_eq!(g.metrics.completed, 0);
@@ -1663,5 +1887,122 @@ mod tests {
             &mut RoundRobin::new(),
             EngineOptions::default(),
         );
+    }
+
+    #[test]
+    fn fused_replays_per_step_oracle_bitwise() {
+        // The macro-stepping default against the one-event-per-step
+        // oracle, across both queue modes, with a stateful policy so
+        // live-state reads at arrivals are exercised.
+        let trace = small_trace(13);
+        let run = |step_mode: StepMode, queue_mode: QueueMode| {
+            let mut jsq = super::super::dispatch::JoinShortestQueue;
+            run_fleet(
+                &trace,
+                &HomogeneousRouter,
+                &[4],
+                &[cfg(8192)],
+                &mut jsq,
+                EngineOptions { step_mode, queue_mode, ..Default::default() },
+            )
+        };
+        for qm in [QueueMode::Calendar, QueueMode::BinaryHeap] {
+            let fused = run(StepMode::Fused, qm);
+            let oracle = run(StepMode::PerStep, qm);
+            assert!(
+                fused.events_popped < oracle.events_popped,
+                "fusion popped {} events, oracle {} — no reduction ({qm:?})",
+                fused.events_popped,
+                oracle.events_popped
+            );
+            for (a, b) in fused.pools[0].iter().zip(&oracle.pools[0]) {
+                assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+                assert_eq!(a.output_tokens, b.output_tokens);
+                assert_eq!(a.steps, b.steps);
+                assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+                assert_eq!(a.mean_batch.to_bits(), b.mean_batch.to_bits());
+                assert_eq!(a.metrics.completed, b.metrics.completed);
+                assert_eq!(a.metrics.rejected, b.metrics.rejected);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_streamed_matches_fused_materialized_event_count() {
+        // events_popped is feed-invariant: the streamed run sees the
+        // same fusion horizons as the materialized one because the
+        // pending arrival is pulled before its predecessor is handled.
+        let workload = crate::workload::cdf::azure_conversations();
+        let gen_cfg = GenConfig {
+            lambda_rps: 40.0,
+            duration_s: 2.0,
+            max_prompt_tokens: 6000,
+            max_output_tokens: 128,
+            seed: 23,
+        };
+        let trace = generate(&workload, &gen_cfg);
+        let materialized = run_fleet(
+            &trace,
+            &HomogeneousRouter,
+            &[3],
+            &[cfg(8192)],
+            &mut super::super::dispatch::JoinShortestQueue,
+            EngineOptions::default(),
+        );
+        let mut source =
+            crate::workload::arrival::SynthSource::new(&workload, &gen_cfg);
+        let streamed = run_fleet_stream(
+            &mut source,
+            &HomogeneousRouter,
+            &[3],
+            &[cfg(8192)],
+            &mut super::super::dispatch::JoinShortestQueue,
+            EngineOptions::default(),
+        );
+        assert_eq!(materialized.events_popped, streamed.events_popped);
+        for (a, b) in materialized.pools[0].iter().zip(&streamed.pools[0]) {
+            assert_eq!(a.joules.to_bits(), b.joules.to_bits());
+            assert_eq!(a.steps, b.steps);
+        }
+    }
+
+    #[test]
+    fn fused_event_count_scales_with_arrivals_not_steps() {
+        // One request with a long output: per-step pops one event per
+        // decode iteration; fused pops a handful (arrival, wake, and
+        // the terminal fused StepComplete chain).
+        let trace = vec![Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 64,
+            output_tokens: 512,
+        }];
+        let run = |step_mode: StepMode| {
+            run_fleet(
+                &trace,
+                &HomogeneousRouter,
+                &[1],
+                &[cfg(8192)],
+                &mut RoundRobin::new(),
+                EngineOptions { step_mode, ..Default::default() },
+            )
+        };
+        let fused = run(StepMode::Fused);
+        let oracle = run(StepMode::PerStep);
+        assert!(
+            oracle.events_popped > 500,
+            "oracle should pop one event per decode step, got {}",
+            oracle.events_popped
+        );
+        assert!(
+            fused.events_popped <= 4,
+            "fused should pop O(arrivals) events, got {}",
+            fused.events_popped
+        );
+        assert_eq!(
+            fused.pools[0][0].joules.to_bits(),
+            oracle.pools[0][0].joules.to_bits()
+        );
+        assert_eq!(fused.pools[0][0].steps, oracle.pools[0][0].steps);
     }
 }

@@ -19,11 +19,14 @@
 //! point: arrivals pulled lazily from an
 //! [`ArrivalSource`](crate::workload::arrival::ArrivalSource) in O(1)
 //! trace memory, bit-for-bit equivalent to the materialized run of the
-//! same source.
+//! same source. Reports carry [`TopoSimReport::events_popped`] so the
+//! macro-stepping win (events scaling with arrivals instead of decode
+//! steps under the default
+//! [`StepMode::Fused`](super::events::StepMode)) is observable.
 
 use super::dispatch::{DispatchPolicy, RoundRobin};
 use super::events::{
-    run_fleet_auto, run_fleet_stream, EngineOptions, GroupOutcome,
+    run_fleet_auto, run_fleet_stream, EngineOptions, FleetRun, GroupOutcome,
 };
 use crate::power::LogisticPower;
 use crate::roofline::Roofline;
@@ -113,6 +116,15 @@ pub struct TopoSimReport {
     pub tok_per_watt: f64,
     /// Engine iterations executed fleet-wide.
     pub steps: u64,
+    /// Events popped from the engine's queue — the wall-clock cost
+    /// metric macro-stepping shrinks. Under the fused default this
+    /// scales with arrivals + quiesce boundaries; under
+    /// [`StepMode::PerStep`](super::events::StepMode) it is ≈ `steps`
+    /// plus arrivals and wakes. Invariant across queue modes, state
+    /// modes and streamed/materialized feeds, but not across step
+    /// modes or the sequential/parallel engine paths (an isolated
+    /// group fuses past other groups' arrivals).
+    pub events_popped: u64,
     /// Idle-power energy billed for each group's gap between its own
     /// meter horizon and the fleet horizon: a pool excluded by the
     /// router's cutoffs (or a group that served one stray request and
@@ -221,6 +233,7 @@ fn aggregate_topology(
     pool_groups: &[u32],
     pool_cfgs: &[GroupSimConfig],
     outcomes: Vec<Vec<GroupOutcome>>,
+    events_popped: u64,
 ) -> TopoSimReport {
     let pools: Vec<PoolSimReport> = outcomes
         .into_iter()
@@ -282,6 +295,7 @@ fn aggregate_topology(
         },
         joules,
         steps,
+        events_popped,
         pools,
         idle_joules,
         warnings,
@@ -316,7 +330,7 @@ pub fn simulate_pool(
         .collect();
     let trace = sorted_by_arrival(&trace);
     let mut rr = RoundRobin::new();
-    let mut outcomes = run_fleet_auto(
+    let mut run = run_fleet_auto(
         &trace,
         &crate::router::HomogeneousRouter,
         &[groups],
@@ -324,7 +338,7 @@ pub fn simulate_pool(
         &mut rr,
         EngineOptions::default(),
     );
-    aggregate_pool(name, groups, cfg, outcomes.pop().expect("one pool"))
+    aggregate_pool(name, groups, cfg, run.pools.pop().expect("one pool"))
 }
 
 /// Simulate a routed topology with round-robin dispatch — the legacy
@@ -376,9 +390,9 @@ pub fn simulate_topology_opts(
     opts: EngineOptions,
 ) -> TopoSimReport {
     let trace = sorted_by_arrival(trace);
-    let outcomes =
+    let FleetRun { pools, events_popped } =
         run_fleet_auto(&trace, router, pool_groups, pool_cfgs, dispatch, opts);
-    aggregate_topology(pool_groups, pool_cfgs, outcomes)
+    aggregate_topology(pool_groups, pool_cfgs, pools, events_popped)
 }
 
 /// Streaming entry point: arrivals pulled one at a time from an
@@ -398,9 +412,9 @@ pub fn simulate_topology_source(
     dispatch: &mut dyn DispatchPolicy,
     opts: EngineOptions,
 ) -> TopoSimReport {
-    let outcomes =
+    let FleetRun { pools, events_popped } =
         run_fleet_stream(source, router, pool_groups, pool_cfgs, dispatch, opts);
-    aggregate_topology(pool_groups, pool_cfgs, outcomes)
+    aggregate_topology(pool_groups, pool_cfgs, pools, events_popped)
 }
 
 #[cfg(test)]
@@ -729,6 +743,7 @@ mod tests {
             streamed.idle_joules.to_bits()
         );
         assert_eq!(materialized.steps, streamed.steps);
+        assert_eq!(materialized.events_popped, streamed.events_popped);
         for (a, b) in materialized.pools.iter().zip(&streamed.pools) {
             assert_eq!(a.joules.to_bits(), b.joules.to_bits());
             assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());

@@ -34,10 +34,15 @@
 //! * [`dispatch`] — round-robin, join-shortest-queue, least-KV-load and
 //!   power-aware group selection behind the [`DispatchPolicy`] trait.
 //! * [`events`] — the engine ([`EngineOptions`], [`StateMode`],
-//!   [`QueueMode`]), plus the parallel fast path: when routing and
-//!   dispatch are arrival-static, independent groups are stepped on
-//!   worker threads and merged in group-index order, bit-identically to
-//!   the sequential run.
+//!   [`QueueMode`], [`StepMode`]), plus the parallel fast path: when
+//!   routing and dispatch are arrival-static, independent groups are
+//!   stepped on worker threads and merged in group-index order,
+//!   bit-identically to the sequential run. Under the default
+//!   [`StepMode::Fused`] the engine macro-steps: every decode/ingest
+//!   iteration that provably completes before the next arrival runs in
+//!   one in-line loop, so events popped scale with arrivals instead of
+//!   decode steps ([`StepMode::PerStep`] keeps the one-event-per-step
+//!   schedule as the bit-for-bit replay oracle).
 //! * [`fleetsim`] — reports and entry points. [`simulate_pool`] /
 //!   [`simulate_topology`] reproduce the pre-refactor round-robin
 //!   simulator bit-for-bit (deterministic-replay guarantee);
@@ -71,7 +76,7 @@ pub use dispatch::{
 };
 pub use events::{
     EngineOptions, FleetState, GroupLoad, GroupSimState, PoolLoad, PoolMeta,
-    PoolView, QueueMode, StateMode,
+    PoolView, QueueMode, StateMode, StepMode,
 };
 pub use fleetsim::{
     simulate_pool, simulate_topology, simulate_topology_opts,

@@ -869,7 +869,7 @@ fn prop_calendar_queue_replays_binary_heap_bitwise_across_policies() {
                     allow_parallel: false,
                     state_mode,
                     queue_mode,
-                    validate_state: false,
+                    ..Default::default()
                 },
             )
         };
@@ -1002,6 +1002,152 @@ fn prop_streamed_arrivals_replay_materialized_bitwise_across_policies() {
                     );
                     xcheck_assert!(a.metrics.completed == b.metrics.completed);
                     xcheck_assert!(a.metrics.rejected == b.metrics.rejected);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_macro_steps_replay_per_step_bitwise_across_policies() {
+    use wattlaw::router::adaptive::AdaptiveRouter;
+    use wattlaw::sim::{
+        dispatch, simulate_topology_opts, simulate_topology_source,
+        EngineOptions, GroupSimConfig, QueueMode, StepMode,
+    };
+    use wattlaw::workload::synth::{generate, GenConfig};
+    use wattlaw::workload::SynthSource;
+
+    // Macro-stepping fuses every decode/ingest step that provably ends
+    // before the next arrival into one in-line loop. The loop makes the
+    // same τ(n, L̄)/meter/batcher calls in the same order as the
+    // one-event-per-step schedule, so every float must replay the
+    // [`StepMode::PerStep`] oracle bit for bit — across all five
+    // dispatch policies × both queue modes × streamed and materialized
+    // arrivals — while popping strictly fewer events.
+    forall("fused macro-steps == per-step oracle, bit for bit", 4, |g| {
+        let p = ManualProfile::h100_70b();
+        let mk = |window: u32, n_max: u32| GroupSimConfig {
+            window_tokens: window,
+            n_max,
+            roofline: p.roofline(),
+            power: p.gpu().power,
+            gpus_charged: 1.0,
+            ingest_chunk: 1024,
+        };
+        let two_pools = g.bool();
+        let workload = azure_conversations();
+        let gen = GenConfig {
+            lambda_rps: g.f64_in(10.0, 60.0),
+            duration_s: g.f64_in(0.5, 2.0),
+            max_prompt_tokens: if two_pools { 20_000 } else { 7_000 },
+            max_output_tokens: 256,
+            seed: g.u64_in(0, 1 << 40),
+        };
+        let trace = generate(&workload, &gen);
+        let (groups, cfgs) = if two_pools {
+            (
+                vec![g.u64_in(1, 3) as u32, g.u64_in(1, 2) as u32],
+                vec![
+                    mk(4096 + 1024, g.u64_in(4, 32) as u32),
+                    mk(65_536, g.u64_in(4, 16) as u32),
+                ],
+            )
+        } else {
+            (
+                vec![g.u64_in(1, 4) as u32],
+                vec![mk(8192, g.u64_in(4, 64) as u32)],
+            )
+        };
+        let router: Box<dyn Router> = if two_pools {
+            if g.bool() {
+                Box::new(
+                    AdaptiveRouter::new(4096)
+                        .with_spill_factor(g.f64_in(0.5, 4.0)),
+                )
+            } else {
+                Box::new(ContextRouter::two_pool(4096))
+            }
+        } else {
+            Box::new(wattlaw::router::HomogeneousRouter)
+        };
+        for queue_mode in [QueueMode::Calendar, QueueMode::BinaryHeap] {
+            for policy_name in dispatch::ALL {
+                let opts = |step_mode: StepMode| EngineOptions {
+                    allow_parallel: false,
+                    queue_mode,
+                    step_mode,
+                    ..Default::default()
+                };
+                let run_mat = |step_mode: StepMode| {
+                    let mut pol = dispatch::parse(policy_name).unwrap();
+                    simulate_topology_opts(
+                        &trace,
+                        router.as_ref(),
+                        &groups,
+                        &cfgs,
+                        pol.as_mut(),
+                        opts(step_mode),
+                    )
+                };
+                let oracle = run_mat(StepMode::PerStep);
+                let fused = run_mat(StepMode::Fused);
+                let mut pol = dispatch::parse(policy_name).unwrap();
+                let mut src = SynthSource::new(&workload, &gen);
+                let fused_stream = simulate_topology_source(
+                    &mut src,
+                    router.as_ref(),
+                    &groups,
+                    &cfgs,
+                    pol.as_mut(),
+                    opts(StepMode::Fused),
+                );
+                // The point of the whole exercise: fewer events, same
+                // floats. (Equality only when nothing fused at all,
+                // which these multi-step traces never hit.)
+                xcheck_assert!(
+                    fused.events_popped < oracle.events_popped,
+                    "{policy_name}/{queue_mode:?}: fused popped {} vs \
+                     per-step {}",
+                    fused.events_popped,
+                    oracle.events_popped
+                );
+                xcheck_assert!(
+                    fused_stream.events_popped == fused.events_popped
+                );
+                for (name, run) in
+                    [("fused", &fused), ("fused+stream", &fused_stream)]
+                {
+                    xcheck_assert!(
+                        run.output_tokens == oracle.output_tokens
+                    );
+                    xcheck_assert!(
+                        run.joules.to_bits() == oracle.joules.to_bits(),
+                        "{policy_name}/{queue_mode:?}/{name}: joules \
+                         diverged, {} vs {}",
+                        run.joules,
+                        oracle.joules
+                    );
+                    xcheck_assert!(run.steps == oracle.steps);
+                    xcheck_assert!(
+                        run.idle_joules.to_bits()
+                            == oracle.idle_joules.to_bits()
+                    );
+                    for (a, b) in run.pools.iter().zip(&oracle.pools) {
+                        xcheck_assert!(
+                            a.horizon_s.to_bits() == b.horizon_s.to_bits()
+                        );
+                        xcheck_assert!(
+                            a.mean_batch.to_bits() == b.mean_batch.to_bits()
+                        );
+                        xcheck_assert!(
+                            a.metrics.completed == b.metrics.completed
+                        );
+                        xcheck_assert!(
+                            a.metrics.rejected == b.metrics.rejected
+                        );
+                    }
                 }
             }
         }

@@ -17,7 +17,10 @@
 //! replay the materialized run bit-for-bit, and a constant-rate
 //! generator source must push the engine through 2×10⁵ (and, ignored
 //! by default, 10⁷) arrivals while only ever holding one pending
-//! arrival in memory.
+//! arrival in memory — and, under the default fused macro-stepping,
+//! while popping O(arrivals) events rather than O(decode steps). A
+//! hand-built trace whose second arrival lands *exactly* on the fused
+//! horizon pins the boundary tie-break against the per-step oracle.
 
 use wattlaw::router::context::ContextRouter;
 use wattlaw::router::HomogeneousRouter;
@@ -485,6 +488,17 @@ fn run_const_source(n: u64) {
     assert_eq!(rejected, 0);
     // One decode token per request: exact token conservation.
     assert_eq!(report.output_tokens, n);
+    // Under the default fused macro-stepping the widely spaced requests
+    // run ingest + decode in-line (every step ends long before the next
+    // arrival), so the only real events are the arrival itself and at
+    // most one wake/step per request — a hard O(arrivals) ceiling,
+    // independent of how many decode steps each request takes.
+    assert!(
+        report.events_popped <= 3 * n + 16,
+        "fused engine must pop O(arrivals) events: popped {} for {n} \
+         arrivals",
+        report.events_popped
+    );
 }
 
 #[test]
@@ -495,9 +509,97 @@ fn streamed_engine_completes_two_hundred_thousand_generated_arrivals() {
 /// The acceptance-scale smoke: materialized, this trace would be
 /// 10⁷ × `size_of::<Request>()` ≈ 240 MB before the engine ran a
 /// single event; streamed, exactly one pending arrival exists at any
-/// moment regardless of `n`.
+/// moment regardless of `n` — and fused macro-stepping (the default
+/// inside [`run_const_source`]) keeps total events popped under a hard
+/// 3n + 16 ceiling, so the event count provably scales with arrivals.
 #[test]
 #[ignore = "10^7 arrivals — minutes of runtime; run explicitly"]
 fn streamed_engine_holds_ten_million_arrivals_in_constant_memory() {
     run_const_source(10_000_000);
+}
+
+/// Boundary tie-break: an arrival landing *exactly* on the fused
+/// horizon (bit-equal `f64` timestamps) must not be skipped past. The
+/// fusion test is a strict `t_end < next_arrival`, so the step whose
+/// end coincides with the arrival falls back to a real `StepComplete`
+/// event — and the event order (arrival class before step class at
+/// equal time) is then identical to per-step mode, floats and all.
+#[test]
+fn arrival_exactly_on_fused_horizon_replays_per_step_bitwise() {
+    use wattlaw::sim::StepMode;
+
+    let groups = [1u32];
+    let cfgs = [h100_cfg(8192)];
+    let first = Request {
+        id: 1,
+        arrival_s: 0.0,
+        prompt_tokens: 512,
+        output_tokens: 40,
+    };
+    // Probe run: with a single request, the pool horizon is the exact
+    // t_end of its final decode step. Arriving a second request at that
+    // bit-identical timestamp lands it on the fused horizon boundary.
+    let mut rr = RoundRobin::new();
+    let probe = simulate_topology_opts(
+        &[first.clone()],
+        &HomogeneousRouter,
+        &groups,
+        &cfgs,
+        &mut rr,
+        EngineOptions { allow_parallel: false, ..Default::default() },
+    );
+    let boundary = probe.pools[0].horizon_s;
+    assert!(boundary > 0.0 && boundary.is_finite());
+
+    let trace = vec![
+        first,
+        Request {
+            id: 2,
+            arrival_s: boundary,
+            prompt_tokens: 512,
+            output_tokens: 40,
+        },
+    ];
+    let run = |step_mode: StepMode| {
+        let mut rr = RoundRobin::new();
+        simulate_topology_opts(
+            &trace,
+            &HomogeneousRouter,
+            &groups,
+            &cfgs,
+            &mut rr,
+            EngineOptions {
+                allow_parallel: false,
+                step_mode,
+                ..Default::default()
+            },
+        )
+    };
+    let fused = run(StepMode::Fused);
+    let oracle = run(StepMode::PerStep);
+
+    assert!(
+        fused.events_popped < oracle.events_popped,
+        "fused must still pop fewer events overall: {} vs {}",
+        fused.events_popped,
+        oracle.events_popped
+    );
+    let completed: u64 =
+        fused.pools.iter().map(|p| p.metrics.completed).sum();
+    assert_eq!(completed, 2, "the boundary arrival must be served");
+    assert_eq!(fused.output_tokens, oracle.output_tokens);
+    assert_eq!(
+        fused.joules.to_bits(),
+        oracle.joules.to_bits(),
+        "boundary-tie joules must replay bit-for-bit: {} vs {}",
+        fused.joules,
+        oracle.joules
+    );
+    assert_eq!(fused.steps, oracle.steps);
+    assert_eq!(fused.idle_joules.to_bits(), oracle.idle_joules.to_bits());
+    for (f, o) in fused.pools.iter().zip(&oracle.pools) {
+        assert_eq!(f.horizon_s.to_bits(), o.horizon_s.to_bits(), "{}", f.name);
+        assert_eq!(f.joules.to_bits(), o.joules.to_bits(), "{}", f.name);
+        assert_eq!(f.metrics.completed, o.metrics.completed, "{}", f.name);
+    }
 }

@@ -50,7 +50,9 @@
 //! the committed baseline, once that baseline is non-null).
 use wattlaw::benchkit::{black_box, BenchConfig, BenchGroup, BenchStats};
 use wattlaw::fleet::pool::LBarPolicy;
-use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use wattlaw::fleet::profile::{
+    GpuProfile, ManualProfile, ModelAxis, PowerAccounting,
+};
 use wattlaw::fleet::topology::Topology;
 use wattlaw::power::Gpu;
 use wattlaw::router::context::ContextRouter;
@@ -336,6 +338,7 @@ fn main() {
                         PowerAccounting::PerGpu,
                         mode,
                         bnb_keep,
+                        ModelAxis::Dense,
                     );
                     stats = s;
                     black_box(cells.len())
@@ -440,6 +443,54 @@ fn main() {
             ms_steps[i] = r.steps;
             ms_toks[i] = r.output_tokens;
             ms_joules[i] = r.joules;
+            black_box(r.output_tokens)
+        });
+    }
+
+    // The model-architecture axis through the event engine: the same
+    // λ=1000 trace and two-pool fleet, re-profiled per ModelAxis the
+    // way `sim_pools_with_model` does. The axis is pure roofline/power
+    // re-parameterization — dense must replay the calendar baseline
+    // bit-for-bit (asserted below), so any per-event cost of the axis
+    // would show up as a dense slowdown. stats[26..29].
+    let ma_models = [
+        ("dense", ModelAxis::Dense),
+        ("qwen3_moe", ModelAxis::MoeStreaming { dispatch_ms: 0.0 }),
+        (
+            "dense_spec",
+            ModelAxis::Speculative {
+                k: ModelAxis::SPEC_K,
+                alpha: ModelAxis::SPEC_ALPHA,
+            },
+        ),
+    ];
+    let mut ma_steps = [0u64; 3];
+    let mut ma_toks = [0u64; 3];
+    let mut ma_joules = [0f64; 3];
+    for (i, (label, model)) in ma_models.iter().enumerate() {
+        let mp = model.profile_for(Gpu::H100);
+        let ma_mk = |window: u32| GroupSimConfig {
+            window_tokens: window,
+            n_max: mp.n_max(window),
+            roofline: mp.roofline(),
+            power: mp.gpu().power,
+            gpus_charged: 1.0,
+            ingest_chunk: 1024,
+        };
+        let ma_cfgs = [ma_mk(4096 + 1024), ma_mk(65_536)];
+        g.bench(format!("model_axis_{label}_l1000"), || {
+            let mut jsq = JoinShortestQueue;
+            let r = simulate_topology_opts(
+                &eq_trace_l1k,
+                &router,
+                &pool_groups,
+                &ma_cfgs,
+                &mut jsq,
+                eq_opts(QueueMode::Calendar),
+            );
+            ma_steps[i] = r.steps;
+            ma_toks[i] = r.output_tokens;
+            ma_joules[i] = r.joules;
             black_box(r.output_tokens)
         });
     }
@@ -643,6 +694,31 @@ fn main() {
         stats[24].mean_ns / stats[25].mean_ns,
         ms_fused_per_arrival(1),
     );
+
+    // The dense model-axis cell is the calendar λ=1000 cell under a new
+    // name: the axis must cost nothing when it is not exercised.
+    assert_eq!(
+        ma_steps[0], eq_steps[0],
+        "dense ModelAxis must replay the calendar baseline exactly"
+    );
+    assert_eq!(ma_toks[0], eq_toks[0]);
+    let ma_tok_per_j = |i: usize| ma_toks[i] as f64 / ma_joules[i];
+    assert!(
+        ma_tok_per_j(1) > ma_tok_per_j(0),
+        "weight streaming must beat dense through the simulator: \
+         {} vs {} tok/J",
+        ma_tok_per_j(1),
+        ma_tok_per_j(0)
+    );
+    for (i, (label, _)) in ma_models.iter().enumerate() {
+        println!(
+            "model_axis_{label:<12} {} step events, {:.0} events/sec \
+             (mean), {:.2} tok/J",
+            ma_steps[i],
+            ev_per_s(ma_steps[i], &stats[26 + i]),
+            ma_tok_per_j(i)
+        );
+    }
 
     // --gate: fail (after optionally recording) if calendar events/sec
     // regressed more than 20% against the committed non-null baseline.
@@ -901,6 +977,31 @@ fn main() {
             stats[24].mean_ns / stats[25].mean_ns,
             ms_fused_per_arrival(0),
             ms_fused_per_arrival(1),
+        ));
+        j.push_str("  \"model_axis\": {\n    \"entries\": [\n");
+        for (i, (label, _)) in ma_models.iter().enumerate() {
+            j.push_str(&format!(
+                "      {{ \"name\": \"model_axis_{label}_l1000\", \
+                 \"steps\": {}, \"events_per_sec\": {:.0}, \
+                 \"tok_per_joule\": {:.3}, \"mean_ms\": {:.2} }}{}\n",
+                ma_steps[i],
+                ev_per_s(ma_steps[i], &stats[26 + i]),
+                ma_tok_per_j(i),
+                stats[26 + i].mean_ns / 1e6,
+                if i + 1 < ma_models.len() { "," } else { "" }
+            ));
+        }
+        j.push_str(&format!(
+            "    ],\n    \
+             \"moe_over_dense_tok_per_joule\": {:.3},\n    \
+             \"note\": \"the model-architecture axis through the event \
+             engine (JSQ, calendar, per-step, lambda=1000): each cell \
+             re-profiles the same two-pool H100 fleet via \
+             ModelAxis::profile_for, exactly as sim_pools_with_model \
+             does — the dense cell is replay-asserted against the \
+             calendar baseline, so the axis itself adds no per-event \
+             cost\"\n  }},\n",
+            ma_tok_per_j(1) / ma_tok_per_j(0),
         ));
         j.push_str(
             "  \"recorded_by\": \"cargo bench --bench bench_sim_engine -- \

@@ -1,17 +1,19 @@
 //! Command-line interface (hand-rolled: `clap` is not fetchable offline).
 //!
 //! ```text
-//! wattlaw tables [--all|--t1..--t9|--law|--power-fig|--dispatch-fig|--independence]
+//! wattlaw tables [--all|--t1..--t10|--law|--power-fig|--dispatch-fig|--independence]
 //!                [--lbar window|traffic]
 //! wattlaw fleet --trace azure|lmsys|agent --gpu h100|h200|b200|gb200
 //!               --topo homo|pool|fleetopt [--b-short N] [--gamma G]
 //!               [--lambda R] [--lbar window|traffic] [--acct pergpu|pergroup]
 //! wattlaw sweep --trace azure --gpu h100 [--pools K | --cutoffs a,b,c]
+//!               [--model llama70b|qwen3-moe|llama70b+spec] [--dispatch-ms D]
 //!                  FleetOpt (B_short, γ*) sweep; K-pool partition sweep
 //! wattlaw optimize [--trace azure] [--gpu h100 | --gpu h100,h100,b200]
 //!                  [--lambda R] [--duration S] [--workload ARCHETYPE]
 //!                  [--groups N] [--b-short N] [--gamma G] [--dispatch NAME]
 //!                  [--pools K] [--cutoffs a,b,c] [--hetero]
+//!                  [--model llama70b,qwen3-moe,...] [--dispatch-ms D]
 //!                  [--upgrade-budget N --upgrade-to b200]
 //!                  [--top-k K] [--slo-ttft S] [--workers N]
 //!                  [--step-mode fused|per-step]
@@ -22,11 +24,13 @@
 //!                  [--dispatch rr|jsq|least-kv|power|power-slo]
 //!                  [--router context|adaptive|fleetopt] [--spill F]
 //!                  [--pools K] [--cutoffs a,b,c]   K-pool routed fleet
+//!                  [--model NAME] [--dispatch-ms D] model-architecture lever
 //!                  [--step-mode fused|per-step]    macro-step escape hatch
 //! wattlaw simulate sweep [--lambda 1000] [--duration S] [--groups N]
 //!                  [--workload ARCHETYPE] [--trace file.csv]
 //!                  [--dispatch NAME] [--b-short N] [--spill F]
 //!                  [--pools K] [--cutoffs a,b,c] [--step-mode MODE]
+//!                  [--model a,b,c] [--dispatch-ms D] model grid axis
 //!                  [--slo-ttft S] [--workers N]   scenario grid, threaded
 //! wattlaw serve [--requests N] [--b-short N] [--artifacts DIR]
 //! wattlaw validate [--artifacts DIR]                golden numerics check
@@ -44,7 +48,9 @@ use std::sync::Arc;
 use crate::fleet::analysis::fleet_tpw_analysis;
 use crate::fleet::optimizer;
 use crate::fleet::pool::LBarPolicy;
-use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use crate::fleet::profile::{
+    GpuProfile, ManualProfile, ModelAxis, PowerAccounting,
+};
 use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
 use crate::results::{self, OutputFormat};
@@ -66,11 +72,12 @@ pub struct Args {
 }
 
 /// Keys that are value-taking options; everything else with `--` is a flag.
-const VALUE_KEYS: [&str; 25] = [
+const VALUE_KEYS: [&str; 27] = [
     "lbar", "trace", "gpu", "topo", "b-short", "gamma", "lambda", "acct",
     "requests", "artifacts", "duration", "groups", "dispatch", "router",
     "spill", "slo-ttft", "workers", "format", "top-k", "pools", "cutoffs",
-    "upgrade-budget", "upgrade-to", "workload", "step-mode",
+    "upgrade-budget", "upgrade-to", "workload", "step-mode", "model",
+    "dispatch-ms",
 ];
 
 pub fn parse_args<I: Iterator<Item = String>>(mut argv: I) -> Args {
@@ -221,6 +228,63 @@ impl Args {
         }
     }
 
+    /// `--model` as a comma-separated architecture list
+    /// (`llama70b,qwen3-moe`): the model axis for the grid surfaces.
+    /// `--dispatch-ms D` sets the MoE all-to-all overhead on every
+    /// weight-streaming entry and is an error without one — the knob
+    /// means nothing on a dense or speculative fleet. Defaults to the
+    /// dense baseline.
+    pub fn models(&self) -> crate::Result<Vec<ModelAxis>> {
+        let dispatch_ms = match self.opt("dispatch-ms") {
+            None => None,
+            Some(s) => {
+                let v: f64 = s.parse().map_err(|_| {
+                    anyhow::anyhow!("bad --dispatch-ms '{s}'")
+                })?;
+                anyhow::ensure!(
+                    v.is_finite() && v >= 0.0,
+                    "--dispatch-ms must be finite and >= 0 (got {v})"
+                );
+                Some(v)
+            }
+        };
+        let mut models = match self.opt("model") {
+            None => vec![ModelAxis::Dense],
+            Some(s) => s
+                .split(',')
+                .map(|part| {
+                    ModelAxis::parse(part.trim())
+                        .map_err(|e| anyhow::anyhow!(e))
+                })
+                .collect::<crate::Result<Vec<ModelAxis>>>()?,
+        };
+        if let Some(d) = dispatch_ms {
+            anyhow::ensure!(
+                models
+                    .iter()
+                    .any(|m| matches!(m, ModelAxis::MoeStreaming { .. })),
+                "--dispatch-ms is the MoE all-to-all overhead — it needs \
+                 --model qwen3-moe"
+            );
+            for m in &mut models {
+                *m = m.with_dispatch_ms(d);
+            }
+        }
+        Ok(models)
+    }
+
+    /// Single `--model` for surfaces without a model grid (`simulate`,
+    /// `sweep`): a comma list is an error, not a silent first-entry.
+    pub fn model_single(&self) -> crate::Result<ModelAxis> {
+        let v = self.models()?;
+        anyhow::ensure!(
+            v.len() == 1,
+            "this command takes one --model (the model grid lives on \
+             optimize / simulate sweep)"
+        );
+        Ok(v[0])
+    }
+
     pub fn artifacts(&self) -> PathBuf {
         self.opt("artifacts")
             .map(PathBuf::from)
@@ -356,12 +420,14 @@ wattlaw — The 1/W Law, reproduced (context-length routing & GPU generation \
 gains for LLM inference energy efficiency)
 
 commands:
-  tables     regenerate paper tables/figures (--all, --t1..--t9, --law,
+  tables     regenerate paper tables/figures (--all, --t1..--t10, --law,
              --power-fig, --dispatch-fig, --independence; --lbar window|traffic)
   fleet      analyze one fleet configuration (--trace --gpu --topo ...)
   sweep      FleetOpt (B_short, γ*) closed-form sweep (legacy, stage A only);
              with --pools K or --cutoffs a,b,c: K-pool partition x γ sweep
-             (--gpu a,b,c pins a per-pool GPU assignment)
+             (--gpu a,b,c pins a per-pool GPU assignment; --model picks
+              the architecture: llama70b|qwen3-moe|llama70b+spec, with
+              --dispatch-ms D the MoE all-to-all overhead)
   optimize   two-stage FleetOpt search over scenario space: stage A screens
              the partition x gamma x GPU-assignment grid with the closed-form
              planner, stage B replays the top-k cells (x dispatch policies)
@@ -377,7 +443,10 @@ commands:
               (2+ generations, e.g. --gpu h100,h200,b200), searched by
               Eq. 4 branch-and-bound so K up to 6 stays tractable,
               --upgrade-budget N --upgrade-to b200 the greedy budgeted
-              placement of at most N upgraded groups)
+              placement of at most N upgraded groups;
+              --model llama70b,qwen3-moe,llama70b+spec adds the model
+              architecture as a fourth stage-A axis — topology x GPU x
+              partition x model — with --dispatch-ms D on the MoE entries)
   power      print a GPU's P(b) curve (--gpu)
   simulate   event-driven fleet simulation vs analytics, arrivals
              streamed in O(1) trace memory
@@ -388,7 +457,11 @@ commands:
               warn and bill idle power;
               --workload stationary|diurnal|flash-crowd|multi-tenant|
               heavy-tail picks the arrival process, --trace file.csv
-              replays a recorded arrival trace)
+              replays a recorded arrival trace;
+              --model llama70b|qwen3-moe|llama70b+spec swaps the model
+              architecture (both fleets), --dispatch-ms D the MoE
+              all-to-all overhead; the analytical 8K tok/W headline is
+              printed for cross-model comparison)
   simulate sweep
              dispatch x topology x context-window scenario grid at fleet
              scale (default λ=1000), cells across worker threads, each
@@ -396,7 +469,8 @@ commands:
              p99 TTFT + SLO verdict with its workload column; --pools K
              adds one K'-pool partition cell per K' in 2..=K, --gpu
              a,b,c a heterogeneous cell per matching partition;
-             --workload / --trace file.csv as in simulate
+             --model a,b,c replicates the grid per architecture (Model
+             column); --workload / --trace file.csv as in simulate
   serve      serve a trace through the real AOT model (2-pool demo)
   validate   check runtime numerics against the JAX golden trace
   report     paper-vs-measured summary (EXPERIMENTS.md §input)
@@ -442,6 +516,9 @@ fn cmd_tables(args: &Args) -> crate::Result<i32> {
         }
         if all || args.flag("t9") {
             out.push_str(&tables::t9::generate());
+        }
+        if all || args.flag("t10") {
+            out.push_str(&tables::t10::generate());
         }
         if all || args.flag("law") {
             out.push_str(&tables::law_fig::generate());
@@ -533,8 +610,8 @@ fn cmd_sweep(args: &Args) -> crate::Result<i32> {
     let format = args.format()?;
     let trace = args.trace();
     let gpus = args.gpus()?.unwrap_or_else(|| vec![Gpu::H100]);
-    let profile: Arc<dyn GpuProfile> =
-        Arc::new(ManualProfile::for_gpu(gpus[0]));
+    let model = args.model_single()?;
+    let profile: Arc<dyn GpuProfile> = Arc::new(model.profile_for(gpus[0]));
 
     // K-pool mode: rank partition vectors × γ with the same closed-form
     // screen (`--pools K` for the generated grids, `--cutoffs` for one
@@ -569,19 +646,21 @@ fn cmd_sweep(args: &Args) -> crate::Result<i32> {
             );
             scenario_optimize::screen_assignments(
                 &trace, lambda, &cells, &gammas, args.lbar(), 0.85, 0.5,
-                args.acct(),
+                args.acct(), model,
             )
         } else {
             scenario_optimize::screen_partitions(
                 &trace, lambda, profile, &partitions, &gammas, args.lbar(),
-                0.85, 0.5, args.acct(),
+                0.85, 0.5, args.acct(), model,
             )
         };
         let fleet_label = scenario_optimize::assignment_label(&gpus);
         let mut rs = RowSet::new(
             format!(
-                "K-pool partition closed-form sweep — {} on {}",
-                trace.name, fleet_label
+                "K-pool partition closed-form sweep — {} on {} ({})",
+                trace.name,
+                fleet_label,
+                model.label()
             ),
             vec![
                 Column::int("pools"),
@@ -640,9 +719,10 @@ fn cmd_sweep(args: &Args) -> crate::Result<i32> {
     );
     let mut rs = RowSet::new(
         format!(
-            "FleetOpt (B_short, γ*) closed-form sweep — {} on {}",
+            "FleetOpt (B_short, γ*) closed-form sweep — {} on {} ({})",
             trace.name,
-            gpus[0].spec().name
+            gpus[0].spec().name,
+            model.label()
         ),
         vec![
             Column::int("B_short").with_unit("tok"),
@@ -841,6 +921,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
     let max_k = partitions.iter().map(Vec::len).max().unwrap_or(2) as u32;
     let cfg = OptimizeConfig {
         gpus,
+        models: args.models()?,
         b_shorts,
         partitions,
         gpu_axis,
@@ -886,12 +967,17 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
     };
     eprintln!(
         "optimize: screening {} analytical cells ({} GPUs x {} partition \
-         vectors x {} gamma){hetero_note}, refining top {} x {} dispatch \
-         on {} worker threads…",
-        cfg.gpus.len() * n_partitions * cfg.gammas.len(),
+         vectors x {} gamma x {} model{}){hetero_note}, refining top {} x \
+         {} dispatch on {} worker threads…",
+        cfg.gpus.len()
+            * n_partitions
+            * cfg.gammas.len()
+            * cfg.models.len(),
         cfg.gpus.len(),
         n_partitions,
         cfg.gammas.len(),
+        cfg.models.len(),
+        if cfg.models.len() == 1 { "" } else { "s" },
         cfg.top_k,
         cfg.dispatches.len(),
         workers,
@@ -947,6 +1033,7 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
     // partition pool; a single value keeps the fleet-wide meaning. The
     // homogeneous comparison baseline always runs the first generation.
     let gpus = args.gpus()?.unwrap_or_else(|| vec![Gpu::H100]);
+    let model = args.model_single()?;
     let routed_topo = match &partition {
         // γ applies to the partition's last pool only when given
         // explicitly (plain bucket routing by default).
@@ -1037,14 +1124,14 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
         _ => format!("λ={lambda} req/s × {duration}s"),
     };
 
-    let p = ManualProfile::for_gpu(gpus[0]);
+    let p = model.profile_for(gpus[0]);
     let opts = EngineOptions {
         allow_parallel: false,
         step_mode: args.step_mode()?,
         ..Default::default()
     };
-    let (homo_groups, homo_cfgs) =
-        Topology::Homogeneous { ctx: LONG_CTX }.sim_pools(&p, groups, 1024);
+    let (homo_groups, homo_cfgs) = Topology::Homogeneous { ctx: LONG_CTX }
+        .sim_pools_with_model(&p, groups, 1024, model);
     let mut rr = RoundRobin::new();
     let homo = simulate_topology_source(
         arrivals.source(&trace, &gen_cfg)?.as_mut(),
@@ -1055,7 +1142,8 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
         opts,
     );
 
-    let (routed_groups, routed_cfgs) = routed_topo.sim_pools(&p, groups, 1024);
+    let (routed_groups, routed_cfgs) =
+        routed_topo.sim_pools_with_model(&p, groups, 1024, model);
     let routed = simulate_topology_source(
         arrivals.source(&trace, &gen_cfg)?.as_mut(),
         router.as_ref(),
@@ -1067,9 +1155,10 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
 
     println!(
         "\n== simulate: {workload_label} | {traffic} | {} groups of {} \
-         | router {} | dispatch {} ==",
+         | model {} | router {} | dispatch {} ==",
         groups,
         p.gpu.name,
+        model.label(),
         router.name(),
         policy.name(),
     );
@@ -1107,6 +1196,15 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
     println!(
         "topology gain (simulated): {:.2}x",
         routed.tok_per_watt_accounted() / homo.tok_per_watt_accounted()
+    );
+    // The model lever's analytical headline, comparable across `--model`
+    // runs at the paper's 8K anchor (Eq. 2 operating point, ρ=0.85).
+    let op = crate::tokeconomy::operating_point(&p, 8192, 0.85, args.acct());
+    println!(
+        "analytical {} @ 8K: {:.2} tok/W ({})",
+        model.label(),
+        op.tok_per_watt.0,
+        p.name,
     );
     Ok(0)
 }
@@ -1189,6 +1287,7 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
         b_shorts,
         partitions,
         gpu_assignments,
+        models: args.models()?,
         spill: Some(spill),
         slo: SloTargets { ttft_p99_s: args.opt_f64("slo-ttft", 0.5) },
         acct: args.acct(),
@@ -1196,6 +1295,11 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
     };
 
     let specs = sweep::grid(&trace, &cfg);
+    // Reject impossible cells (e.g. an adaptive router with no split
+    // boundary) with a CLI error before any worker thread runs.
+    for s in &specs {
+        s.validate().map_err(|e| anyhow::anyhow!(e))?;
+    }
     let default_workers = std::thread::available_parallelism()
         .map(|n| n.get() as u32)
         .unwrap_or(1);
@@ -1337,6 +1441,70 @@ mod tests {
         assert!(quick("--dispatch bogus").is_err());
         assert!(quick("--router bogus").is_err());
         assert!(quick("--router adaptive --spill -1").is_err());
+    }
+
+    #[test]
+    fn model_axis_options_parse_and_validate() {
+        // Default is the dense baseline — the pre-axis behavior.
+        assert_eq!(args("simulate").models().unwrap(), vec![ModelAxis::Dense]);
+        assert_eq!(args("simulate").model_single().unwrap(), ModelAxis::Dense);
+        // Names and aliases.
+        assert_eq!(
+            args("simulate --model qwen3-moe").model_single().unwrap(),
+            ModelAxis::MoeStreaming { dispatch_ms: 0.0 }
+        );
+        assert_eq!(
+            args("simulate --model llama70b+spec").model_single().unwrap(),
+            ModelAxis::Speculative {
+                k: ModelAxis::SPEC_K,
+                alpha: ModelAxis::SPEC_ALPHA,
+            }
+        );
+        // Comma list is a grid axis; single-model surfaces reject it.
+        assert_eq!(
+            args("optimize --model llama70b,qwen3-moe").models().unwrap(),
+            vec![
+                ModelAxis::Dense,
+                ModelAxis::MoeStreaming { dispatch_ms: 0.0 },
+            ]
+        );
+        assert!(args("simulate --model llama70b,qwen3-moe")
+            .model_single()
+            .is_err());
+        // --dispatch-ms binds to the MoE entries and needs one.
+        assert_eq!(
+            args("simulate --model qwen3-moe --dispatch-ms 10")
+                .model_single()
+                .unwrap(),
+            ModelAxis::MoeStreaming { dispatch_ms: 10.0 }
+        );
+        let err = args("simulate --dispatch-ms 10")
+            .models()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--model qwen3-moe"), "{err}");
+        assert!(args("simulate --model qwen3-moe --dispatch-ms -1")
+            .models()
+            .is_err());
+        assert!(args("simulate --model qwen3-moe --dispatch-ms nan")
+            .models()
+            .is_err());
+        let unknown =
+            args("simulate --model bogus").models().unwrap_err().to_string();
+        assert!(unknown.contains("qwen3-moe"), "{unknown}");
+    }
+
+    #[test]
+    fn simulate_runs_the_model_axis_end_to_end() {
+        let quick = |extra: &str| {
+            run(format!("simulate --lambda 10 --duration 1 --groups 2 {extra}")
+                .split_whitespace()
+                .map(String::from))
+        };
+        assert_eq!(quick("--model qwen3-moe").unwrap(), 0);
+        assert_eq!(quick("--model llama70b+spec").unwrap(), 0);
+        assert_eq!(quick("--model qwen3-moe --dispatch-ms 5").unwrap(), 0);
+        assert!(quick("--model bogus").is_err());
     }
 
     #[test]

@@ -64,10 +64,20 @@ pub fn disaggregate(
     let chunk = 8192.0;
     let iter_ms = r.tau_ms(1.0, chunk / 2.0) + r.w_ms * (chunk / 1024.0 - 1.0);
     let group_prefill_tok_s = chunk / iter_ms * 1e3;
-    let prefill_groups = (demand_tok_s / (rho * group_prefill_tok_s)).ceil() as u64;
-    // Prefill runs hot (large effective batch): charge near-saturation.
-    let prefill_power_w = prefill_groups as f64
-        * profile.group_power_w(128.0, acct);
+    let groups_used = demand_tok_s / (rho * group_prefill_tok_s);
+    let prefill_groups = groups_used.ceil() as u64;
+    // Prefill runs hot (large effective batch) — but only while fed.
+    // Fully-loaded groups bill near-saturation; the ceil-rounded last
+    // group is busy only a `frac` duty fraction of the time and idles the
+    // rest, exactly the idle-energy accounting the decode pools already
+    // carry. Billing it at full hot watts overstated the prefill tier by
+    // up to (P_hot − P_idle) per fleet.
+    let hot_w = profile.group_power_w(128.0, acct);
+    let idle_w = profile.group_power_w(0.0, acct);
+    let full_groups = groups_used.floor();
+    let frac = groups_used - full_groups;
+    let prefill_power_w = full_groups * hot_w
+        + if frac > 0.0 { frac * hot_w + (1.0 - frac) * idle_w } else { 0.0 };
 
     let out_tok_s = decode.total_demand_tok_s;
     let total_w = decode.total_power.0 + prefill_power_w;
@@ -144,5 +154,48 @@ mod tests {
         );
         let gap = |r: &DisaggReport| r.tok_per_watt_decode_only / r.tok_per_watt_total;
         assert!(gap(&azure) > 1.05 && gap(&agent) > 1.05);
+    }
+
+    #[test]
+    fn fractional_prefill_group_bills_idle_residual() {
+        // Demand sized to exactly 1.5 prefill groups: two groups are
+        // provisioned, but the second is busy only half the time — its
+        // idle half must bill idle watts, not near-saturation watts.
+        let trace = azure_conversations();
+        let profile = Arc::new(ManualProfile::h100_70b());
+        let acct = PowerAccounting::PerGpu;
+        let rho = 0.85;
+        // Reproduce the sizing formula to pick λ for 1.5 groups exactly.
+        let r = profile.roofline();
+        let chunk = 8192.0;
+        let iter_ms = r.tau_ms(1.0, chunk / 2.0) + r.w_ms * (chunk / 1024.0 - 1.0);
+        let group_prefill_tok_s = chunk / iter_ms * 1e3;
+        let lambda =
+            1.5 * rho * group_prefill_tok_s / trace.prompt_cdf.mean();
+        let rep = disaggregate(
+            &trace,
+            lambda,
+            profile.clone(),
+            &Topology::FleetOpt { b_short: trace.paper_b_short,
+                                  short_ctx: trace.paper_b_short.max(2048),
+                                  gamma: 2.0 },
+            LBarPolicy::Window,
+            rho,
+            0.5,
+            acct,
+        );
+        assert_eq!(rep.prefill_groups, 2, "1.5 groups of demand → ceil = 2");
+        let hot = profile.group_power_w(128.0, acct);
+        let idle = profile.group_power_w(0.0, acct);
+        let expected = 1.5 * hot + 0.5 * idle;
+        assert!(
+            (rep.prefill_power_w - expected).abs() < 1e-6 * expected,
+            "got {} W, want {expected} W",
+            rep.prefill_power_w
+        );
+        // Strictly cheaper than the old both-groups-hot billing, dearer
+        // than pretending the half-idle group doesn't exist.
+        assert!(rep.prefill_power_w < 2.0 * hot);
+        assert!(rep.prefill_power_w > 1.5 * hot);
     }
 }

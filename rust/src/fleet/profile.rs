@@ -14,7 +14,8 @@
 use crate::model::spec::{ModelSpec, Precision};
 use crate::model::{kappa_bytes_per_token, kv_budget_bytes, KvPlacement};
 use crate::power::profiles::{B200, H100};
-use crate::power::{GpuSpec, Quality};
+use crate::power::{Gpu, GpuSpec, Quality};
+use crate::roofline::speculative::SpecConfig;
 use crate::roofline::Roofline;
 
 /// Power-accounting convention for tok/W denominators.
@@ -144,6 +145,158 @@ impl ManualProfile {
             Gpu::H200 => Self::h200_70b(),
             Gpu::B200 => Self::b200_70b(),
             Gpu::GB200 => Self::gb200_70b(),
+        }
+    }
+
+    /// Qwen3-235B-A22B weight-streaming fleet profile (paper §3.2, Table
+    /// 2 row 4): decode time scales with the 22B *active* experts, not
+    /// the 235B total. Calibrated on H100 as W = 1.056 ms (fp8 active
+    /// expert read, 2.75 GB, at the dense calibration's effective
+    /// bandwidth), H0 = 0.0380 ms (GQA-4 over 94 layers with fp8 KV —
+    /// the pure byte-ratio projection is 0.0408; measured ≈7% under it,
+    /// the same measured-beats-derived convention as `h100_70b`) and
+    /// n_max = 384 @8K (fp8 KV ≈ one third the dense κ on the
+    /// post-weights HBM budget). Other generations scale by the same
+    /// ratios off their dense calibrations, exactly as `b200_70b`
+    /// scales off `h100_70b`. `dispatch_ms` is the §3.2 expert-dispatch
+    /// overhead the paper's headline numbers exclude (its upper bound,
+    /// 0 ms, is the default).
+    pub fn qwen3_moe(gpu: Gpu, dispatch_ms: f64) -> Self {
+        const W_RATIO: f64 = 1.056 / 6.72;
+        const H0_RATIO: f64 = 0.0380 / 0.1387;
+        const NMAX_RATIO: f64 = 3.0;
+        let d = Self::for_gpu(gpu);
+        ManualProfile {
+            name: d.name.replace("Llama-3.1-70B", "Qwen3-235B-A22B"),
+            roofline: Roofline::manual(
+                d.roofline.w_ms * W_RATIO,
+                d.roofline.h0_ms * H0_RATIO,
+            )
+            .with_dispatch_ms(dispatch_ms),
+            n_max_calib: d.n_max_calib * NMAX_RATIO,
+            ..d
+        }
+    }
+
+    /// Dense Llama-70B with speculative decode folded into the
+    /// roofline: the draft+verify iteration cost divided by the
+    /// expected tokens accepted per iteration
+    /// ([`SpecConfig::effective_roofline`]), so both engines consume
+    /// the speedup through the same τ(n, L̄) path as every other
+    /// profile. The draft weight read is W/70 (a ~1B-class drafter,
+    /// the convention in `roofline::speculative`'s tests); KV capacity
+    /// (n_max) is the target model's — draft KV is negligible at that
+    /// scale. Power is billed on the target curve P(n), a documented
+    /// approximation of `spec_point`'s time-weighted draft/verify
+    /// split.
+    pub fn speculative(gpu: Gpu, k: u32, alpha: f64) -> Self {
+        let d = Self::for_gpu(gpu);
+        let spec = SpecConfig {
+            k,
+            alpha,
+            draft_w_ms: d.roofline.w_ms / 70.0,
+            draft_power_scale: 0.8,
+        };
+        ManualProfile {
+            name: format!("{} +spec(k={k}, a={alpha})", d.name),
+            roofline: spec.effective_roofline(&d.roofline),
+            ..d
+        }
+    }
+}
+
+/// The model-architecture axis of a scenario — the third lever next to
+/// routing topology and GPU generation (ROADMAP item 3). Resolved to a
+/// [`ManualProfile`] at the same single point as the per-pool GPU
+/// override, so both engines (the Eq. 4 planner and the event
+/// simulator) consume identical rooflines.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ModelAxis {
+    /// Dense Llama-3.1-70B — the pre-axis behavior, bit-for-bit.
+    #[default]
+    Dense,
+    /// Qwen3-235B-A22B MoE weight streaming; `dispatch_ms` is the §3.2
+    /// expert-dispatch overhead (0 = the paper's excluded-overhead
+    /// upper bound).
+    MoeStreaming { dispatch_ms: f64 },
+    /// Dense + speculative decode (k draft tokens, per-token acceptance
+    /// rate α).
+    Speculative { k: u32, alpha: f64 },
+}
+
+impl ModelAxis {
+    /// Accepted `--model` names, for error messages.
+    pub const NAMES: &'static str = "llama70b|qwen3-moe|llama70b+spec";
+
+    /// Default speculative-decode configuration (`--model llama70b+spec`).
+    pub const SPEC_K: u32 = 4;
+    pub const SPEC_ALPHA: f64 = 0.8;
+
+    /// Parse a CLI `--model` name. `llama70b` (alias `dense`) is the
+    /// dense baseline; `qwen3-moe` (aliases `qwen3`, `moe`) streams
+    /// expert weights with zero dispatch overhead until `--dispatch-ms`
+    /// says otherwise; `llama70b+spec` (aliases `dense+spec`, `spec`)
+    /// is dense + speculative decode at (k=4, α=0.8).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "llama70b" | "dense" => Ok(ModelAxis::Dense),
+            "qwen3-moe" | "qwen3" | "moe" => {
+                Ok(ModelAxis::MoeStreaming { dispatch_ms: 0.0 })
+            }
+            "llama70b+spec" | "dense+spec" | "spec" => {
+                Ok(ModelAxis::Speculative {
+                    k: Self::SPEC_K,
+                    alpha: Self::SPEC_ALPHA,
+                })
+            }
+            other => {
+                Err(format!("unknown model '{other}' ({})", Self::NAMES))
+            }
+        }
+    }
+
+    /// Short label for rowset columns and scenario headers.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ModelAxis::Dense => "dense",
+            ModelAxis::MoeStreaming { .. } => "qwen3-moe",
+            ModelAxis::Speculative { .. } => "dense+spec",
+        }
+    }
+
+    /// Override the MoE dispatch overhead; no-op on the other variants
+    /// (the CLI rejects `--dispatch-ms` without `--model qwen3-moe`
+    /// before this runs).
+    pub fn with_dispatch_ms(self, d: f64) -> Self {
+        match self {
+            ModelAxis::MoeStreaming { .. } => {
+                ModelAxis::MoeStreaming { dispatch_ms: d }
+            }
+            other => other,
+        }
+    }
+
+    /// The MoE dispatch overhead, if this axis carries one.
+    pub fn dispatch_ms(&self) -> Option<f64> {
+        match self {
+            ModelAxis::MoeStreaming { dispatch_ms } => Some(*dispatch_ms),
+            _ => None,
+        }
+    }
+
+    /// Resolve (model, generation) to the fleet profile both engines
+    /// consume. `Dense` delegates to [`ManualProfile::for_gpu`]
+    /// unchanged — the dense default is the pre-axis code path,
+    /// bit-for-bit.
+    pub fn profile_for(&self, gpu: Gpu) -> ManualProfile {
+        match self {
+            ModelAxis::Dense => ManualProfile::for_gpu(gpu),
+            ModelAxis::MoeStreaming { dispatch_ms } => {
+                ManualProfile::qwen3_moe(gpu, *dispatch_ms)
+            }
+            ModelAxis::Speculative { k, alpha } => {
+                ManualProfile::speculative(gpu, *k, *alpha)
+            }
         }
     }
 }
@@ -318,5 +471,109 @@ mod tests {
         let p = ComputedProfile::new(&H100, &LLAMA31_8B, 1, KvPlacement::Replicated);
         let n = p.n_max(8192);
         assert!((57..=58).contains(&n), "n_max = {n}");
+    }
+
+    #[test]
+    fn dense_axis_resolves_to_for_gpu_bit_for_bit() {
+        for gpu in Gpu::ALL {
+            let dense = ModelAxis::Dense.profile_for(gpu);
+            let legacy = ManualProfile::for_gpu(gpu);
+            assert_eq!(dense.name, legacy.name);
+            assert_eq!(
+                dense.roofline.w_ms.to_bits(),
+                legacy.roofline.w_ms.to_bits()
+            );
+            assert_eq!(
+                dense.roofline.h0_ms.to_bits(),
+                legacy.roofline.h0_ms.to_bits()
+            );
+            assert_eq!(
+                dense.roofline.dispatch_ms.to_bits(),
+                legacy.roofline.dispatch_ms.to_bits()
+            );
+            assert_eq!(
+                dense.n_max_calib.to_bits(),
+                legacy.n_max_calib.to_bits()
+            );
+            assert_eq!(dense.ctx_calib, legacy.ctx_calib);
+        }
+    }
+
+    #[test]
+    fn moe_h100_reproduces_the_paper_headline_at_8k() {
+        // The acceptance row behind Table 10: Qwen3-235B-A22B on H100
+        // at 8K context lands ≳35 tok/W and ≥4.5× the dense baseline
+        // (paper: 37.8 tok/W, 5.1×; ours closes within ~10% — see the
+        // t2 note on the paper's MoE rows not closing under its own
+        // roofline either).
+        let op = |m: ModelAxis| {
+            crate::tokeconomy::operating_point(
+                &m.profile_for(Gpu::H100),
+                8192,
+                1.0,
+                PowerAccounting::PerGpu,
+            )
+        };
+        let moe = op(ModelAxis::MoeStreaming { dispatch_ms: 0.0 });
+        let dense = op(ModelAxis::Dense);
+        assert!(
+            moe.tok_per_watt.0 > 35.0,
+            "MoE tok/W = {:.2}",
+            moe.tok_per_watt.0
+        );
+        assert!(
+            moe.tok_per_watt.0 / dense.tok_per_watt.0 >= 4.5,
+            "MoE/dense ratio = {:.2}",
+            moe.tok_per_watt.0 / dense.tok_per_watt.0
+        );
+        // The calibration anchors themselves.
+        assert_eq!(ModelAxis::default().profile_for(Gpu::H100).n_max(8192), 128);
+        let moe_p = ManualProfile::qwen3_moe(Gpu::H100, 0.0);
+        assert_eq!(moe_p.n_max(8192), 384);
+        assert!(moe_p.name.contains("Qwen3-235B-A22B"));
+    }
+
+    #[test]
+    fn moe_dispatch_ms_erodes_throughput_monotonically() {
+        let tok_s = |d: f64| {
+            let p = ManualProfile::qwen3_moe(Gpu::H100, d);
+            p.roofline().throughput_tok_s(p.n_max(8192) as f64, 8192.0)
+        };
+        assert!(tok_s(0.0) > tok_s(1.0));
+        assert!(tok_s(1.0) > tok_s(10.0));
+    }
+
+    #[test]
+    fn speculative_profile_beats_dense_and_keeps_capacity() {
+        let dense = ManualProfile::h100_70b();
+        let spec = ManualProfile::speculative(Gpu::H100, 4, 0.8);
+        // Same KV capacity, strictly faster effective roofline.
+        assert_eq!(spec.n_max(8192), dense.n_max(8192));
+        assert!(
+            spec.roofline().tau_ms(128.0, 8192.0)
+                < dense.roofline().tau_ms(128.0, 8192.0)
+        );
+    }
+
+    #[test]
+    fn model_axis_parses_names_and_aliases() {
+        assert_eq!(ModelAxis::parse("llama70b"), Ok(ModelAxis::Dense));
+        assert_eq!(ModelAxis::parse("dense"), Ok(ModelAxis::Dense));
+        assert_eq!(
+            ModelAxis::parse("qwen3-moe"),
+            Ok(ModelAxis::MoeStreaming { dispatch_ms: 0.0 })
+        );
+        assert_eq!(
+            ModelAxis::parse("llama70b+spec"),
+            Ok(ModelAxis::Speculative { k: 4, alpha: 0.8 })
+        );
+        assert!(ModelAxis::parse("bogus").is_err());
+        assert_eq!(
+            ModelAxis::MoeStreaming { dispatch_ms: 0.0 }
+                .with_dispatch_ms(2.5)
+                .dispatch_ms(),
+            Some(2.5)
+        );
+        assert_eq!(ModelAxis::Dense.with_dispatch_ms(2.5), ModelAxis::Dense);
     }
 }

@@ -9,7 +9,7 @@
 use std::sync::Arc;
 
 use super::pool::{LBarPolicy, PoolPlan};
-use super::profile::{GpuProfile, ManualProfile};
+use super::profile::{GpuProfile, ManualProfile, ModelAxis};
 use crate::power::Gpu;
 use crate::sim::GroupSimConfig;
 use crate::workload::WorkloadTrace;
@@ -49,19 +49,26 @@ impl PartitionPool {
     }
 
     /// The override profile for this pool, if any — the single source
-    /// of the generation→profile mapping that [`Self::profile_or`]
-    /// (closed-form planner via [`Topology::pools`]) and the
-    /// simulator's [`Topology::sim_pools`] both consume, so an
+    /// of the (generation, model architecture)→profile mapping that
+    /// [`Self::profile_or`] (closed-form planner via
+    /// [`Topology::pools_with_model`]) and the simulator's
+    /// [`Topology::sim_pools_with_model`] both consume, so an
     /// analyze-vs-simulate cross-check can never diverge on a mixed
-    /// fleet.
-    pub fn override_profile(&self) -> Option<ManualProfile> {
-        self.gpu.map(ManualProfile::for_gpu)
+    /// fleet. The scenario's model axis rides along: a MoE fleet with a
+    /// B200 long-pool override serves the *MoE-on-B200* calibration
+    /// there, not the dense one.
+    pub fn override_profile(&self, model: ModelAxis) -> Option<ManualProfile> {
+        self.gpu.map(|g| model.profile_for(g))
     }
 
     /// The profile serving this pool: the per-pool override when set,
     /// the caller's fleet default otherwise.
-    pub fn profile_or(&self, default: &Arc<dyn GpuProfile>) -> Arc<dyn GpuProfile> {
-        match self.override_profile() {
+    pub fn profile_or(
+        &self,
+        default: &Arc<dyn GpuProfile>,
+        model: ModelAxis,
+    ) -> Arc<dyn GpuProfile> {
+        match self.override_profile(model) {
             Some(p) => Arc::new(p),
             None => default.clone(),
         }
@@ -291,8 +298,12 @@ impl Topology {
         }
     }
 
-    /// Build pool plans. `profile` serves every pool except the semantic
-    /// short pool, which uses `small_profile` (ignored otherwise).
+    /// Build pool plans for the dense baseline model
+    /// ([`ModelAxis::Dense`]) — the pre-model-axis behavior, bit-for-bit.
+    /// Scenario-level callers that carry a model axis use
+    /// [`Self::pools_with_model`]; everything else (tables, benches,
+    /// disaggregation sizing) keeps this shorter signature.
+    #[allow(clippy::too_many_arguments)]
     pub fn pools(
         &self,
         trace: &WorkloadTrace,
@@ -302,6 +313,37 @@ impl Topology {
         lbar: LBarPolicy,
         rho: f64,
         ttft_slo_s: f64,
+    ) -> Vec<PoolPlan> {
+        self.pools_with_model(
+            trace,
+            lambda_rps,
+            profile,
+            small_profile,
+            lbar,
+            rho,
+            ttft_slo_s,
+            ModelAxis::Dense,
+        )
+    }
+
+    /// Build pool plans. `profile` serves every pool except the semantic
+    /// short pool, which uses `small_profile` (ignored otherwise).
+    /// `model` re-resolves per-pool GPU *overrides* under the scenario's
+    /// model architecture (the caller already folded it into `profile`
+    /// for the default pools) — the analytical half of the same
+    /// unification [`PartitionPool::override_profile`] gives the
+    /// simulator.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pools_with_model(
+        &self,
+        trace: &WorkloadTrace,
+        lambda_rps: f64,
+        profile: Arc<dyn GpuProfile>,
+        small_profile: Option<Arc<dyn GpuProfile>>,
+        lbar: LBarPolicy,
+        rho: f64,
+        ttft_slo_s: f64,
+        model: ModelAxis,
     ) -> Vec<PoolPlan> {
         let max_len = trace.prompt_cdf.max_tokens();
         match *self {
@@ -421,7 +463,7 @@ impl Topology {
                     let hi = if last { max_len } else { part.cutoff as f64 };
                     let window = partition_window(pools, i, gamma);
                     let compression = if last { gamma } else { 1.0 };
-                    let pool_profile = part.profile_or(&profile);
+                    let pool_profile = part.profile_or(&profile, model);
                     let name = if last && gamma > 1.0 {
                         format!("tier-{}k/γ{gamma}", part.cutoff / 1024)
                     } else {
@@ -461,6 +503,20 @@ impl Topology {
         profile: &dyn GpuProfile,
         total_groups: u32,
         ingest_chunk: u32,
+    ) -> (Vec<u32>, Vec<GroupSimConfig>) {
+        self.sim_pools_with_model(profile, total_groups, ingest_chunk, ModelAxis::Dense)
+    }
+
+    /// [`Self::sim_pools`] with the scenario's model axis: per-pool GPU
+    /// overrides resolve to that model's calibration on the override
+    /// generation (via [`PartitionPool::override_profile`]), mirroring
+    /// [`Self::pools_with_model`] on the analytical side.
+    pub fn sim_pools_with_model(
+        &self,
+        profile: &dyn GpuProfile,
+        total_groups: u32,
+        ingest_chunk: u32,
+        model: ModelAxis,
     ) -> (Vec<u32>, Vec<GroupSimConfig>) {
         assert!(total_groups > 0);
         let mk_for = |p: &dyn GpuProfile, window: u32| GroupSimConfig {
@@ -547,7 +603,7 @@ impl Topology {
                         } else {
                             part.cutoff.max(2048) + 1024
                         };
-                        match part.override_profile() {
+                        match part.override_profile(model) {
                             Some(p) => mk_for(&p, window),
                             None => mk(window),
                         }
@@ -920,6 +976,42 @@ mod tests {
             &[16384, 4096],
             &[Gpu::H100, Gpu::B200],
             1.0,
+        );
+    }
+
+    #[test]
+    fn model_axis_reaches_per_pool_gpu_overrides_on_both_paths() {
+        // A MoE fleet with a B200 long-pool override must serve the
+        // MoE-on-B200 calibration there on BOTH engines — the model-axis
+        // extension of the generation unification above.
+        let moe = ModelAxis::MoeStreaming { dispatch_ms: 0.0 };
+        let fleet_default = moe.profile_for(Gpu::H100);
+        let topo = Topology::Partition {
+            pools: vec![
+                PartitionPool::at(4096),
+                PartitionPool::at(LONG_CTX).with_gpu(Gpu::B200),
+            ],
+            gamma: 1.0,
+        };
+        let pools = topo.pools_with_model(
+            &azure_conversations(), 1000.0, Arc::new(fleet_default.clone()),
+            None, LBarPolicy::Window, 0.85, 0.5, moe);
+        let label = pools[1].profile.label();
+        assert!(
+            label.contains("Qwen3-235B-A22B") && label.contains("B200"),
+            "override pool must be MoE-on-B200, got {label}"
+        );
+        let (_, cfgs) = topo.sim_pools_with_model(&fleet_default, 4, 1024, moe);
+        let want = moe.profile_for(Gpu::B200).roofline();
+        assert_eq!(cfgs[1].roofline.w_ms.to_bits(), want.w_ms.to_bits());
+        assert_eq!(cfgs[1].roofline.h0_ms.to_bits(), want.h0_ms.to_bits());
+        // The dense wrappers stay the pre-axis behavior bit-for-bit.
+        let p = ManualProfile::h100_70b();
+        let (_, dense_cfgs) = topo.sim_pools(&p, 4, 1024);
+        let dense_want = ManualProfile::for_gpu(Gpu::B200).roofline();
+        assert_eq!(
+            dense_cfgs[1].roofline.w_ms.to_bits(),
+            dense_want.w_ms.to_bits()
         );
     }
 

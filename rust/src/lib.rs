@@ -22,10 +22,14 @@
 //!   (round-robin / join-shortest-queue / least-KV-load /
 //!   power-aware) and a parallel per-group fast path ([`sim`]) — a
 //!   unified scenario layer feeding both the analytical planner and the
-//!   simulator from one spec — three orthogonal fleet axes: routing
+//!   simulator from one spec — four orthogonal fleet axes: routing
 //!   topology (two-pool / FleetOpt-γ / K-pool context partitions), GPU
 //!   generation *per pool* (heterogeneous fleets: an assignment vector
-//!   like H100|H100|B200, resolved identically by both engines), and
+//!   like H100|H100|B200, resolved identically by both engines), model
+//!   architecture ([`fleet::profile::ModelAxis`]: dense / MoE
+//!   weight-streaming with an all-to-all `--dispatch-ms` knob /
+//!   dense+speculative decode, resolved through one calibrated profile
+//!   per model so both engines agree by construction), and
 //!   workload — arrival processes as a first-class axis
 //!   ([`workload::arrival`]): stationary Poisson, diurnal, flash-crowd,
 //!   multi-tenant and heavy-tailed archetypes plus CSV trace replay
@@ -57,7 +61,10 @@
 //!    and an H100→B200 upgrade are orthogonal, multiplicative levers
 //!    ([`tables::independence`]).
 //! 3. **MoE architecture lever** — active-parameter weight streaming
-//!    ([`roofline::moe`]).
+//!    ([`roofline::moe`]), promoted to a scenario axis: `--model
+//!    qwen3-moe` reproduces the ~38 tok/W headline and Table 10 shows
+//!    the 1/W slope surviving weight streaming
+//!    ([`tables::t10`]).
 
 pub mod benchkit;
 pub mod cli;

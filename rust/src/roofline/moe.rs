@@ -70,8 +70,19 @@ pub fn breakeven_dispatch_ms(
     if probe(lo) <= 0.0 {
         return 0.0; // no advantage even without dispatch
     }
-    if probe(hi) > 0.0 {
-        return f64::INFINITY; // advantage survives any plausible dispatch
+    // Grow the bracket geometrically until it straddles the root: a
+    // slow-eroding pair (KV-scan-dominated dense baseline at long
+    // context) can break even well past the old 200 ms guess, which
+    // silently returned INFINITY. Mathematically the root always exists
+    // when probe(0) > 0 — throughput decays to zero with dispatch — so
+    // the cap only guards degenerate float inputs.
+    const BRACKET_CAP_MS: f64 = 1e7;
+    while probe(hi) > 0.0 {
+        lo = hi;
+        hi *= 2.0;
+        if hi > BRACKET_CAP_MS {
+            return f64::INFINITY;
+        }
     }
     for _ in 0..60 {
         let mid = 0.5 * (lo + hi);
@@ -87,7 +98,9 @@ pub fn breakeven_dispatch_ms(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::spec::{LLAMA31_70B, QWEN3_235B_A22B};
+    use crate::model::spec::{
+        DEEPSEEK_V3, LLAMA31_405B, LLAMA31_70B, QWEN3_235B_A22B,
+    };
     use crate::power::profiles::H100;
 
     #[test]
@@ -136,5 +149,22 @@ mod tests {
         let d_low_n = breakeven_dispatch_ms(
             &H100, &QWEN3_235B_A22B, &LLAMA31_70B, 8, 2.0, 8192.0);
         assert!(d_low_n > d, "low-n breakeven {d_low_n} > high-n {d}");
+    }
+
+    #[test]
+    fn breakeven_past_the_old_bracket_is_finite() {
+        // DeepSeek-V3 (fp8 actives + MLA-compressed KV) vs Llama-3.1-405B
+        // fp16 at 128K context: the dense baseline's τ is dominated by a
+        // ~39 ms weight stream plus a huge KV scan, so the MoE edge only
+        // dies around ~350 ms of dispatch. The old fixed hi = 200.0
+        // bracket silently reported INFINITY here.
+        let d = breakeven_dispatch_ms(
+            &H100, &DEEPSEEK_V3, &LLAMA31_405B, 8, 128.0, 131_072.0);
+        assert!(d.is_finite(), "bracket growth must find the root");
+        assert!(d > 200.0, "breakeven {d} should exceed the old bracket");
+        let r = dispatch_erosion(
+            &H100, &DEEPSEEK_V3, &LLAMA31_405B, 8, 128.0, 131_072.0, &[d])[0]
+            .ratio;
+        assert!((r - 1.0).abs() < 1e-3, "ratio at breakeven = {r}");
     }
 }

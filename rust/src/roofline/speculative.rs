@@ -38,6 +38,28 @@ impl SpecConfig {
         }
         (1.0 - self.alpha.powi(self.k as i32 + 1)) / (1.0 - self.alpha)
     }
+
+    /// Fold the draft+verify iteration into an *effective* roofline for
+    /// the scenario layer: with `E = expected_tokens()`, one verify
+    /// iteration costs `k·draft_w + τ(n, L̄)` ms and yields `E` tokens
+    /// per slot, so the per-accepted-token roofline is
+    /// `W' = (W + dispatch + k·draft_w) / E`, `H0' = H0 / E`. Then
+    /// `n / τ'(n, L̄)` equals [`spec_point`]'s throughput exactly (the
+    /// identity test below pins it), and both fleet engines consume
+    /// speculation through the same τ(n, L̄) path as every other
+    /// profile. Power is *not* folded here — profiles bill the target
+    /// curve P(n), a documented approximation of `spec_point`'s
+    /// time-weighted draft/verify split.
+    pub fn effective_roofline(&self, target: &Roofline) -> Roofline {
+        let e = self.expected_tokens();
+        Roofline::manual(
+            (target.w_ms
+                + target.dispatch_ms
+                + self.k as f64 * self.draft_w_ms)
+                / e,
+            target.h0_ms / e,
+        )
+    }
 }
 
 /// tok/W at a speculative operating point.
@@ -195,5 +217,29 @@ mod tests {
         let s_small = spec_point(&r, &p, &cfg(0.8), 2.0, 8192.0);
         let s_big = spec_point(&r, &p, &cfg(0.8), 64.0, 8192.0);
         assert!(s_big.power_w > s_small.power_w);
+    }
+
+    #[test]
+    fn effective_roofline_reproduces_spec_point_throughput() {
+        // The folding identity: n / τ'(n, L̄) on the effective roofline
+        // must equal spec_point's n·E/iter_ms, at every operating point.
+        let (r, p) = h100_70b();
+        let c = cfg(0.8);
+        let eff = c.effective_roofline(&r);
+        for (n, l_bar) in
+            [(1.0, 2048.0), (4.0, 8192.0), (64.0, 8192.0), (16.0, 65_536.0)]
+        {
+            let via_roofline = eff.throughput_tok_s(n, l_bar);
+            let via_point = spec_point(&r, &p, &c, n, l_bar).throughput_tok_s;
+            assert!(
+                (via_roofline - via_point).abs() / via_point < 1e-9,
+                "n={n} l_bar={l_bar}: {via_roofline} vs {via_point}"
+            );
+        }
+        // α = 0 (every draft rejected, only the bonus token lands):
+        // E = 1, so the effective roofline is pure draft overhead on top.
+        let none = SpecConfig { alpha: 0.0, ..c };
+        let eff0 = none.effective_roofline(&r);
+        assert!(eff0.tau_ms(8.0, 8192.0) > r.tau_ms(8.0, 8192.0));
     }
 }

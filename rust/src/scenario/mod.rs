@@ -32,7 +32,9 @@ use std::sync::Arc;
 
 use crate::fleet::analysis::FleetReport;
 use crate::fleet::pool::LBarPolicy;
-use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use crate::fleet::profile::{
+    GpuProfile, ManualProfile, ModelAxis, PowerAccounting,
+};
 use crate::fleet::topology::Topology;
 use crate::power::Gpu;
 use crate::router::adaptive::AdaptiveRouter;
@@ -45,6 +47,19 @@ use crate::workload::arrival::{ArrivalSource, ArrivalSpec};
 use crate::workload::cdf::WorkloadTrace;
 use crate::workload::synth::GenConfig;
 use crate::workload::Request;
+
+/// The one user-facing message for adaptive routing on a topology with
+/// no split boundary, shared by [`ScenarioSpec::validate`] (CLI-level
+/// rejection) and the [`ScenarioSpec::router`] backstop panic so the
+/// two can never drift apart.
+fn adaptive_router_error(topology: &Topology) -> String {
+    format!(
+        "adaptive routing needs a two-pool topology with a split \
+         boundary, but '{}' has none; use --router static, or a \
+         two-pool topology (--topo pool, --topo fleetopt, or --pools 2)",
+        topology.label()
+    )
+}
 
 /// Measured-vs-analytical relative delta, percent — the one convention
 /// shared by the sweep's consistency records and the optimizer's
@@ -90,6 +105,13 @@ impl Default for SloTargets {
 pub struct ScenarioSpec {
     pub topology: Topology,
     pub gpu: Gpu,
+    /// Model architecture served fleet-wide ([`ModelAxis`]): the dense
+    /// Llama-70B baseline (default — the pre-axis behavior, bit-for-bit),
+    /// MoE weight-streaming, or dense + speculative decode. Resolved
+    /// with `gpu` into one [`ManualProfile`] by [`Self::profile`], so
+    /// both engines consume the same roofline — the model-axis twin of
+    /// the per-pool GPU unification.
+    pub model: ModelAxis,
     pub workload: WorkloadTrace,
     /// Traffic: λ, duration, caps, seed (the base parameters every
     /// arrival process modulates; the analytical path reads
@@ -135,6 +157,7 @@ impl ScenarioSpec {
         ScenarioSpec {
             topology,
             gpu,
+            model: ModelAxis::Dense,
             workload,
             gen,
             arrivals: ArrivalSpec::Stationary,
@@ -167,6 +190,14 @@ impl ScenarioSpec {
 
     pub fn with_router(mut self, router: RouterSpec) -> Self {
         self.router = router;
+        self
+    }
+
+    /// Serve this scenario with a model architecture other than the
+    /// dense default — the third fleet lever after topology and GPU
+    /// generation.
+    pub fn with_model(mut self, model: ModelAxis) -> Self {
+        self.model = model;
         self
     }
 
@@ -261,11 +292,12 @@ impl ScenarioSpec {
     /// Human-readable cell identity for reports.
     pub fn label(&self) -> String {
         format!(
-            "{} | {} | {} | {} | {} | λ={}",
+            "{} | {} | {} | {} | {} | {} | λ={}",
             self.workload_label(),
             self.topology.label(),
             // Per-pool assignment when mixed; the plain SKU otherwise.
             self.gpus_label(),
+            self.model.label(),
             self.router_label(),
             self.dispatch,
             self.gen.lambda_rps,
@@ -279,23 +311,51 @@ impl ScenarioSpec {
         }
     }
 
-    /// The GPU profile serving every pool of this scenario.
+    /// The GPU profile serving every pool of this scenario: the model
+    /// axis resolved on the scenario GPU ([`ModelAxis::profile_for`];
+    /// `Dense` is `ManualProfile::for_gpu`, unchanged to the bit).
     pub fn profile(&self) -> ManualProfile {
-        ManualProfile::for_gpu(self.gpu)
+        self.model.profile_for(self.gpu)
+    }
+
+    /// Check the spec for axis combinations no engine can serve —
+    /// everything a CLI invocation can get wrong without touching a
+    /// panic path. Today that is adaptive routing on a topology with no
+    /// split boundary (the `--router adaptive --topo homo` footgun) and
+    /// a degenerate MoE dispatch overhead.
+    ///
+    /// # Errors
+    /// A user-facing message naming the offending axis values.
+    pub fn validate(&self) -> Result<(), String> {
+        if matches!(self.router, RouterSpec::Adaptive { .. })
+            && self.topology.b_short().is_none()
+        {
+            return Err(adaptive_router_error(&self.topology));
+        }
+        if let Some(d) = self.model.dispatch_ms() {
+            if !d.is_finite() || d < 0.0 {
+                return Err(format!(
+                    "MoE dispatch overhead must be finite and >= 0 ms \
+                     (got {d})"
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// The request router realizing this scenario.
     ///
     /// # Panics
-    /// `RouterSpec::Adaptive` on a topology without a split boundary.
+    /// `RouterSpec::Adaptive` on a topology without a split boundary —
+    /// a programming error at this layer; user-facing paths reject the
+    /// combination earlier with the same message via [`Self::validate`].
     pub fn router(&self) -> Box<dyn Router> {
         match self.router {
             RouterSpec::Static => self.topology.router(),
             RouterSpec::Adaptive { spill } => {
-                let b = self.topology.b_short().expect(
-                    "adaptive routing needs a two-pool topology \
-                     (no split boundary on this one)",
-                );
+                let b = self.topology.b_short().unwrap_or_else(|| {
+                    panic!("{}", adaptive_router_error(&self.topology))
+                });
                 Box::new(AdaptiveRouter::new(b).with_spill_factor(spill))
             }
         }
@@ -356,6 +416,7 @@ impl ScenarioSpec {
             self.rho,
             self.slo.ttft_p99_s,
             acct,
+            self.model,
         )
     }
 
@@ -375,8 +436,12 @@ impl ScenarioSpec {
     /// validates replay files before constructing specs.
     pub fn simulate(&self, allow_parallel: bool) -> ScenarioOutcome {
         let profile = self.profile();
-        let (pool_groups, pool_cfgs) =
-            self.topology.sim_pools(&profile, self.groups, self.ingest_chunk);
+        let (pool_groups, pool_cfgs) = self.topology.sim_pools_with_model(
+            &profile,
+            self.groups,
+            self.ingest_chunk,
+            self.model,
+        );
         let router = self.router();
         let mut policy = self.dispatch_policy();
         if allow_parallel
@@ -414,8 +479,12 @@ impl ScenarioSpec {
         allow_parallel: bool,
     ) -> ScenarioOutcome {
         let profile = self.profile();
-        let (pool_groups, pool_cfgs) =
-            self.topology.sim_pools(&profile, self.groups, self.ingest_chunk);
+        let (pool_groups, pool_cfgs) = self.topology.sim_pools_with_model(
+            &profile,
+            self.groups,
+            self.ingest_chunk,
+            self.model,
+        );
         let router = self.router();
         let mut policy = self.dispatch_policy();
         let report = simulate_topology_opts(
@@ -445,6 +514,7 @@ impl ScenarioSpec {
             topology: self.topology.label(),
             workload: self.workload_label(),
             gpus: self.gpus_label(),
+            model: self.model.label().to_string(),
             router: self.router_label(),
             dispatch: self.dispatch.clone(),
             // The *accounted* figures: groups the router never touched
@@ -479,6 +549,9 @@ pub struct ScenarioOutcome {
     /// the plain SKU name for homogeneous fleets, `H100|H100|B200`
     /// when generations are mixed.
     pub gpus: String,
+    /// The model-architecture axis ([`ModelAxis::label`]): `dense`,
+    /// `qwen3-moe`, or `dense+spec`.
+    pub model: String,
     pub router: String,
     pub dispatch: String,
     /// Fleet output tokens per joule (== per watt-second), with
@@ -581,16 +654,40 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "two-pool topology")]
-    fn adaptive_on_homogeneous_panics() {
-        ScenarioSpec::new(
+    fn adaptive_on_homogeneous_is_a_clear_error_not_a_panic() {
+        // The `--router adaptive --topo homo` footgun: the spec layer
+        // reports a user-facing error naming the topology and the fix,
+        // instead of the old reachable `expect` panic.
+        let spec = ScenarioSpec::new(
             Topology::Homogeneous { ctx: LONG_CTX },
             Gpu::H100,
             azure_conversations(),
             quick_gen(10.0),
         )
-        .with_router(RouterSpec::Adaptive { spill: 2.0 })
-        .router();
+        .with_router(RouterSpec::Adaptive { spill: 2.0 });
+        let err = spec.validate().expect_err("must be rejected");
+        assert!(err.contains("adaptive routing"), "{err}");
+        assert!(err.contains("Homo 64K"), "names the topology: {err}");
+        assert!(err.contains("--router static"), "suggests the fix: {err}");
+        // A 3-pool partition has no *single* split boundary either.
+        let three = ScenarioSpec::new(
+            Topology::partition(&[2048, 8192, LONG_CTX]),
+            Gpu::H100,
+            azure_conversations(),
+            quick_gen(10.0),
+        )
+        .with_router(RouterSpec::Adaptive { spill: 2.0 });
+        assert!(three.validate().is_err());
+        // Valid combinations pass.
+        assert!(pool_spec()
+            .with_router(RouterSpec::Adaptive { spill: 2.0 })
+            .validate()
+            .is_ok());
+        assert!(pool_spec().validate().is_ok());
+        // Degenerate MoE dispatch is caught at the same gate.
+        let bad_moe = pool_spec()
+            .with_model(ModelAxis::MoeStreaming { dispatch_ms: f64::NAN });
+        assert!(bad_moe.validate().is_err());
     }
 
     #[test]
@@ -726,6 +823,121 @@ mod tests {
         assert_eq!(s1.joules.to_bits(), s2.joules.to_bits());
         assert_eq!(s1.output_tokens, s2.output_tokens);
         assert_eq!(s1.p99_ttft_s.to_bits(), s2.p99_ttft_s.to_bits());
+    }
+
+    #[test]
+    fn dense_model_axis_reduces_to_the_pre_axis_engines_bitwise() {
+        // The reduction oracle the model-axis refactor rests on: a spec
+        // that never mentions the axis (Dense is the default) must
+        // reproduce the pre-axis engine constructions — profile built by
+        // `ManualProfile::for_gpu`, pools by the dense `pools`/`sim_pools`
+        // wrappers — on all four reported meters, to the bit.
+        let spec = pool_spec().with_dispatch("jsq");
+        assert_eq!(spec.model, ModelAxis::Dense, "Dense is the default");
+
+        // Analytical engine.
+        let now = spec.analyze(PowerAccounting::PerGpu);
+        let pre: Arc<dyn GpuProfile> =
+            Arc::new(ManualProfile::for_gpu(spec.gpu));
+        let was = optimize::analyze_cell(
+            &spec.topology,
+            &spec.workload,
+            spec.gen.lambda_rps,
+            pre,
+            spec.lbar,
+            spec.rho,
+            spec.slo.ttft_p99_s,
+            PowerAccounting::PerGpu,
+            ModelAxis::Dense,
+        );
+        assert_eq!(now.tok_per_watt.0.to_bits(), was.tok_per_watt.0.to_bits());
+        assert_eq!(now.total_groups, was.total_groups);
+        assert_eq!(now.total_power.0.to_bits(), was.total_power.0.to_bits());
+
+        // Event engine: the spec path vs the engine fed by the pre-axis
+        // dense sim_pools construction, four-oracle comparison.
+        let p = ManualProfile::for_gpu(spec.gpu);
+        let (groups, cfgs) =
+            spec.topology.sim_pools(&p, spec.groups, spec.ingest_chunk);
+        let router = spec.router();
+        let mut policy = spec.dispatch_policy();
+        let report = simulate_topology_opts(
+            &spec.trace(),
+            router.as_ref(),
+            &groups,
+            &cfgs,
+            policy.as_mut(),
+            EngineOptions {
+                allow_parallel: false,
+                step_mode: spec.step_mode,
+                ..Default::default()
+            },
+        );
+        let now_sim = spec.simulate(false);
+        assert_eq!(
+            now_sim.tok_per_watt.to_bits(),
+            report.tok_per_watt_accounted().to_bits()
+        );
+        assert_eq!(
+            now_sim.joules.to_bits(),
+            report.accounted_joules().to_bits()
+        );
+        assert_eq!(now_sim.output_tokens, report.output_tokens);
+        assert_eq!(
+            now_sim.p99_ttft_s.to_bits(),
+            report.fleet_metrics().ttft_s.p99().to_bits()
+        );
+        assert_eq!(now_sim.model, "dense");
+    }
+
+    #[test]
+    fn moe_scenario_feeds_both_engines_and_beats_dense() {
+        // The tentpole end-to-end: the same spec with the MoE axis runs
+        // both engines and shows the weight-streaming advantage the
+        // paper's Table 2 claims, with the axis on every label surface.
+        let dense = pool_spec();
+        let moe = pool_spec()
+            .with_model(ModelAxis::MoeStreaming { dispatch_ms: 0.0 });
+        let a_dense = dense.analyze(PowerAccounting::PerGpu);
+        let a_moe = moe.analyze(PowerAccounting::PerGpu);
+        assert!(
+            a_moe.tok_per_watt.0 > 2.0 * a_dense.tok_per_watt.0,
+            "analytical MoE {} vs dense {}",
+            a_moe.tok_per_watt.0,
+            a_dense.tok_per_watt.0
+        );
+        let s = moe.simulate(true);
+        assert!(s.completed > 0);
+        assert_eq!(s.model, "qwen3-moe");
+        assert!(moe.label().contains("qwen3-moe"), "{}", moe.label());
+        let s_dense = dense.simulate(true);
+        assert!(
+            s.tok_per_watt > s_dense.tok_per_watt,
+            "measured MoE {} vs dense {}",
+            s.tok_per_watt,
+            s_dense.tok_per_watt
+        );
+        // Dispatch overhead erodes the measured number too.
+        let eroded = pool_spec()
+            .with_model(ModelAxis::MoeStreaming { dispatch_ms: 10.0 })
+            .simulate(true);
+        assert!(eroded.tok_per_watt < s.tok_per_watt);
+
+        // Speculative decode: same capacity (n_max unchanged), faster
+        // effective iterations → at least the dense throughput per watt.
+        let spec_ax = pool_spec().with_model(ModelAxis::Speculative {
+            k: ModelAxis::SPEC_K,
+            alpha: ModelAxis::SPEC_ALPHA,
+        });
+        let s_spec = spec_ax.simulate(true);
+        assert!(s_spec.completed > 0);
+        assert_eq!(s_spec.model, "dense+spec");
+        assert!(
+            s_spec.tok_per_watt > s_dense.tok_per_watt,
+            "spec-decode {} vs dense {}",
+            s_spec.tok_per_watt,
+            s_dense.tok_per_watt
+        );
     }
 
     #[test]

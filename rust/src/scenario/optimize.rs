@@ -41,7 +41,9 @@ use super::{sweep, ScenarioOutcome, ScenarioSpec, SloTargets};
 use crate::fleet::analysis::{fleet_tpw_analysis, FleetReport};
 use crate::fleet::optimizer::{OptResult, B_SHORT_GRID, GAMMA_GRID};
 use crate::fleet::pool::LBarPolicy;
-use crate::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use crate::fleet::profile::{
+    GpuProfile, ManualProfile, ModelAxis, PowerAccounting,
+};
 use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
 use crate::results::{Cell, Column, RowSet};
@@ -108,9 +110,11 @@ pub fn analyze_cell(
     rho: f64,
     ttft_slo_s: f64,
     acct: PowerAccounting,
+    model: ModelAxis,
 ) -> FleetReport {
-    let pools =
-        topology.pools(workload, lambda_rps, profile, None, lbar, rho, ttft_slo_s);
+    let pools = topology.pools_with_model(
+        workload, lambda_rps, profile, None, lbar, rho, ttft_slo_s, model,
+    );
     fleet_tpw_analysis(&pools, acct)
 }
 
@@ -163,6 +167,7 @@ pub fn screen_partitions(
     rho: f64,
     ttft_slo_s: f64,
     acct: PowerAccounting,
+    model: ModelAxis,
 ) -> Vec<PartitionOptResult> {
     let mut out = Vec::with_capacity(partitions.len() * gammas.len());
     for cutoffs in partitions {
@@ -177,6 +182,7 @@ pub fn screen_partitions(
                 rho,
                 ttft_slo_s,
                 acct,
+                model,
             );
             out.push(PartitionOptResult {
                 cutoffs: cutoffs.clone(),
@@ -209,6 +215,7 @@ pub fn screen_assignments(
     rho: f64,
     ttft_slo_s: f64,
     acct: PowerAccounting,
+    model: ModelAxis,
 ) -> Vec<PartitionOptResult> {
     let mut out = Vec::with_capacity(cells.len() * gammas.len());
     for (cutoffs, gpus) in cells {
@@ -220,11 +227,12 @@ pub fn screen_assignments(
                 &topo,
                 trace,
                 lambda_rps,
-                Arc::new(ManualProfile::for_gpu(gpus[0])),
+                Arc::new(model.profile_for(gpus[0])),
                 lbar,
                 rho,
                 ttft_slo_s,
                 acct,
+                model,
             );
             out.push(PartitionOptResult {
                 cutoffs: cutoffs.clone(),
@@ -273,7 +281,7 @@ pub fn screen_closed_form(
         .collect();
     screen_partitions(
         trace, lambda_rps, profile, &partitions, gammas, lbar, rho,
-        ttft_slo_s, acct,
+        ttft_slo_s, acct, ModelAxis::Dense,
     )
     .into_iter()
     .map(|r| OptResult { b_short: r.cutoffs[0], gamma: r.gamma, report: r.report })
@@ -326,6 +334,11 @@ pub struct OptimizeConfig {
     /// GPU-generation axis (each served by its calibrated/projected 70B
     /// fleet profile, [`ManualProfile::for_gpu`]).
     pub gpus: Vec<Gpu>,
+    /// Model-architecture axis ([`ModelAxis`]): every screened
+    /// (topology × GPU × partition) cell is evaluated once per model —
+    /// the 4-axis stage-A screen. Default: dense only (the pre-axis
+    /// grid, bit-for-bit).
+    pub models: Vec<ModelAxis>,
     /// Split-boundary axis (legacy two-pool grid). Ignored when
     /// `partitions` is non-empty.
     pub b_shorts: Vec<u32>,
@@ -380,6 +393,7 @@ impl Default for OptimizeConfig {
     fn default() -> Self {
         OptimizeConfig {
             gpus: Gpu::ALL.to_vec(),
+            models: vec![ModelAxis::Dense],
             b_shorts: B_SHORT_GRID.to_vec(),
             partitions: Vec::new(),
             gpu_axis: GpuAxis::Homogeneous,
@@ -436,6 +450,8 @@ pub struct ScreenedCell {
     /// The fleet-default generation (the scenario's `gpu`; for a mixed
     /// cell, the base the assignment was grown from).
     pub gpu: Gpu,
+    /// Model architecture the cell serves ([`OptimizeConfig::models`]).
+    pub model: ModelAxis,
     /// Sorted cutoff vector of the cell's K-pool partition; for the
     /// legacy two-pool grid this is `[B_short, LONG_CTX]`.
     pub cutoffs: Vec<u32>,
@@ -464,6 +480,8 @@ impl ScreenedCell {
 pub struct RefinedCell {
     /// The fleet-default generation (see [`ScreenedCell::gpu`]).
     pub gpu: Gpu,
+    /// Model architecture the cell serves ([`ScreenedCell::model`]).
+    pub model: ModelAxis,
     /// Sorted cutoff vector of the cell's K-pool partition.
     pub cutoffs: Vec<u32>,
     /// Per-pool GPU assignment, one generation per cutoff.
@@ -602,6 +620,7 @@ impl Eq4PowerTable {
         rho: f64,
         ttft_slo_s: f64,
         acct: PowerAccounting,
+        model: ModelAxis,
     ) -> Self {
         let k = cutoffs.len();
         let mut power = vec![vec![0.0; gpus.len()]; k];
@@ -615,11 +634,12 @@ impl Eq4PowerTable {
                 &topo,
                 trace,
                 lambda_rps,
-                Arc::new(ManualProfile::for_gpu(g)),
+                Arc::new(model.profile_for(g)),
                 lbar,
                 rho,
                 ttft_slo_s,
                 acct,
+                model,
             );
             demand = report.total_demand_tok_s;
             for (i, pool) in report.pools.iter().enumerate() {
@@ -828,6 +848,7 @@ pub fn screen_mixed(
     acct: PowerAccounting,
     mode: MixedScreen,
     keep: usize,
+    model: ModelAxis,
 ) -> (Vec<PartitionOptResult>, MixedScreenStats) {
     let n = gpus.len();
     let mut stats = MixedScreenStats::default();
@@ -844,6 +865,7 @@ pub fn screen_mixed(
         stats.full_evals = stats.brute_cells;
         let out = screen_assignments(
             trace, lambda_rps, &cells, gammas, lbar, rho, ttft_slo_s, acct,
+            model,
         );
         return (out, stats);
     }
@@ -852,7 +874,7 @@ pub fn screen_mixed(
         for (gi, &gamma) in gammas.iter().enumerate() {
             let table = Eq4PowerTable::new(
                 trace, lambda_rps, cuts, gpus, gamma, lbar, rho, ttft_slo_s,
-                acct,
+                acct, model,
             );
             stats.table_evals += n as u64;
             bnb_descend(
@@ -875,11 +897,12 @@ pub fn screen_mixed(
             &Topology::partition_with_gpus(cuts, &v, gamma),
             trace,
             lambda_rps,
-            Arc::new(ManualProfile::for_gpu(v[0])),
+            Arc::new(model.profile_for(v[0])),
             lbar,
             rho,
             ttft_slo_s,
             acct,
+            model,
         );
         stats.full_evals += 1;
         out.push(PartitionOptResult {
@@ -924,6 +947,7 @@ fn budget_cells(
     cfg: &OptimizeConfig,
     partitions: &[Vec<u32>],
     budget: UpgradeBudget,
+    model: ModelAxis,
 ) -> Vec<ScreenedCell> {
     let base = cfg.gpus.first().copied().unwrap_or(Gpu::H100);
     let eval = |cuts: &[u32], gpus: &[Gpu], gamma: f64| {
@@ -931,11 +955,12 @@ fn budget_cells(
             &Topology::partition_with_gpus(cuts, gpus, gamma),
             workload,
             cfg.gen.lambda_rps,
-            Arc::new(ManualProfile::for_gpu(base)),
+            Arc::new(model.profile_for(base)),
             cfg.lbar,
             cfg.rho,
             cfg.slo.ttft_p99_s,
             cfg.acct,
+            model,
         )
     };
     let mut cells = Vec::new();
@@ -984,6 +1009,7 @@ fn budget_cells(
                 cur_tok_w = rep.tok_per_watt.0;
                 cells.push(ScreenedCell {
                     gpu: base,
+                    model,
                     cutoffs: cuts.clone(),
                     gpus: current.clone(),
                     gamma,
@@ -1001,77 +1027,89 @@ fn budget_cells(
 /// or budgeted-upgrade assignment cells on top.
 pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCell> {
     let partitions = cfg.effective_partitions();
-    let mut cells =
-        Vec::with_capacity(cfg.gpus.len() * partitions.len() * cfg.gammas.len());
-    for &gpu in &cfg.gpus {
-        let profile: Arc<dyn GpuProfile> = Arc::new(ManualProfile::for_gpu(gpu));
-        for r in screen_partitions(
-            workload,
-            cfg.gen.lambda_rps,
-            profile,
-            &partitions,
-            &cfg.gammas,
-            cfg.lbar,
-            cfg.rho,
-            cfg.slo.ttft_p99_s,
-            cfg.acct,
-        ) {
-            cells.push(ScreenedCell {
-                gpu,
-                gpus: vec![gpu; r.cutoffs.len()],
-                cutoffs: r.cutoffs,
-                gamma: r.gamma,
-                analytic: r.report,
-            });
-        }
-    }
-    let hetero: Vec<PartitionOptResult> = match &cfg.gpu_axis {
-        GpuAxis::Homogeneous | GpuAxis::Budget(_) => Vec::new(),
-        GpuAxis::Mixed => {
-            screen_mixed(
+    let mut cells = Vec::with_capacity(
+        cfg.models.len()
+            * cfg.gpus.len()
+            * partitions.len()
+            * cfg.gammas.len(),
+    );
+    for &model in &cfg.models {
+        for &gpu in &cfg.gpus {
+            let profile: Arc<dyn GpuProfile> =
+                Arc::new(model.profile_for(gpu));
+            for r in screen_partitions(
                 workload,
                 cfg.gen.lambda_rps,
+                profile,
                 &partitions,
-                &cfg.gpus,
                 &cfg.gammas,
                 cfg.lbar,
                 cfg.rho,
                 cfg.slo.ttft_p99_s,
                 cfg.acct,
-                cfg.mixed_screen,
-                cfg.mixed_keep,
-            )
-            .0
+                model,
+            ) {
+                cells.push(ScreenedCell {
+                    gpu,
+                    model,
+                    gpus: vec![gpu; r.cutoffs.len()],
+                    cutoffs: r.cutoffs,
+                    gamma: r.gamma,
+                    analytic: r.report,
+                });
+            }
         }
-        GpuAxis::Explicit(vectors) => {
-            let pairs = explicit_assignments(&partitions, vectors);
-            if pairs.is_empty() {
-                Vec::new()
-            } else {
-                screen_assignments(
+        let hetero: Vec<PartitionOptResult> = match &cfg.gpu_axis {
+            GpuAxis::Homogeneous | GpuAxis::Budget(_) => Vec::new(),
+            GpuAxis::Mixed => {
+                screen_mixed(
                     workload,
                     cfg.gen.lambda_rps,
-                    &pairs,
+                    &partitions,
+                    &cfg.gpus,
                     &cfg.gammas,
                     cfg.lbar,
                     cfg.rho,
                     cfg.slo.ttft_p99_s,
                     cfg.acct,
+                    cfg.mixed_screen,
+                    cfg.mixed_keep,
+                    model,
                 )
+                .0
             }
+            GpuAxis::Explicit(vectors) => {
+                let pairs = explicit_assignments(&partitions, vectors);
+                if pairs.is_empty() {
+                    Vec::new()
+                } else {
+                    screen_assignments(
+                        workload,
+                        cfg.gen.lambda_rps,
+                        &pairs,
+                        &cfg.gammas,
+                        cfg.lbar,
+                        cfg.rho,
+                        cfg.slo.ttft_p99_s,
+                        cfg.acct,
+                        model,
+                    )
+                }
+            }
+        };
+        for r in hetero {
+            cells.push(ScreenedCell {
+                gpu: r.gpus[0],
+                model,
+                cutoffs: r.cutoffs,
+                gpus: r.gpus,
+                gamma: r.gamma,
+                analytic: r.report,
+            });
         }
-    };
-    for r in hetero {
-        cells.push(ScreenedCell {
-            gpu: r.gpus[0],
-            cutoffs: r.cutoffs,
-            gpus: r.gpus,
-            gamma: r.gamma,
-            analytic: r.report,
-        });
-    }
-    if let GpuAxis::Budget(b) = &cfg.gpu_axis {
-        cells.extend(budget_cells(workload, cfg, &partitions, *b));
+        if let GpuAxis::Budget(b) = &cfg.gpu_axis {
+            cells.extend(budget_cells(workload, cfg, &partitions, *b, model));
+        }
     }
     cells.sort_by(|a, b| {
         b.analytic.tok_per_watt.0.total_cmp(&a.analytic.tok_per_watt.0)
@@ -1098,6 +1136,7 @@ fn spec_for(
         workload.clone(),
         cfg.gen.clone(),
     )
+    .with_model(cell.model)
     .with_groups(cfg.groups)
     .with_dispatch(dispatch)
     .with_arrivals(cfg.arrivals.clone())
@@ -1130,6 +1169,7 @@ pub fn refine(
         .zip(outcomes)
         .map(|((cell, dispatch), outcome)| RefinedCell {
             gpu: cell.gpu,
+            model: cell.model,
             cutoffs: cell.cutoffs.clone(),
             gpus: cell.gpus.clone(),
             gamma: cell.gamma,
@@ -1183,6 +1223,7 @@ impl OptimizeReport {
              stage B simulated refine",
             vec![
                 Column::str("GPU"),
+                Column::str("model"),
                 Column::int("pools"),
                 Column::str("cutoffs").with_unit("tok"),
                 Column::float("gamma"),
@@ -1201,6 +1242,7 @@ impl OptimizeReport {
             let delta = c.rel_delta_pct();
             rs.push(vec![
                 Cell::str(assignment_label(&c.gpus)),
+                Cell::str(c.model.label()),
                 Cell::int(c.cutoffs.len() as i64),
                 Cell::str(cutoffs_label(&c.cutoffs)),
                 Cell::float(c.gamma),
@@ -1393,6 +1435,7 @@ mod tests {
             0.85,
             1e3,
             PowerAccounting::PerGpu,
+            ModelAxis::Dense,
         );
         let mut rng = Lcg(17);
         for _ in 0..10 {
@@ -1408,6 +1451,7 @@ mod tests {
                 0.85,
                 1e3,
                 PowerAccounting::PerGpu,
+                ModelAxis::Dense,
             );
             assert_eq!(
                 table.value(&digits).to_bits(),
@@ -1433,6 +1477,7 @@ mod tests {
             0.85,
             1e3,
             PowerAccounting::PerGpu,
+            ModelAxis::Dense,
         );
         let k = cuts.len();
         let n = gpus.len();
@@ -1487,6 +1532,7 @@ mod tests {
                 PowerAccounting::PerGpu,
                 mode,
                 64,
+                ModelAxis::Dense,
             )
         };
         let (brute, bstats) = run(MixedScreen::BruteForce);
@@ -1524,6 +1570,7 @@ mod tests {
                 PowerAccounting::PerGpu,
                 mode,
                 keep,
+                ModelAxis::Dense,
             )
             .0
         };
@@ -1546,10 +1593,11 @@ mod tests {
         let rs = report.rowset();
         let csv = rs.to_csv();
         assert!(csv.starts_with(
-            "GPU,pools,cutoffs (tok),gamma,dispatch,analyze tok/W (tok/J),\
-             simulate tok/W (tok/J),delta (%),p99 TTFT (s),slo,\
-             analyze groups,winner\n"
+            "GPU,model,pools,cutoffs (tok),gamma,dispatch,\
+             analyze tok/W (tok/J),simulate tok/W (tok/J),delta (%),\
+             p99 TTFT (s),slo,analyze groups,winner\n"
         ));
+        assert!(csv.contains(",dense,"));
         let doc = crate::runtime::json::parse(&rs.to_json()).unwrap();
         let rows = doc.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), report.refined.len());
@@ -1560,5 +1608,35 @@ mod tests {
         // Winner marked on the first (SLO-passing) row.
         assert_eq!(rows[0].get("winner").unwrap().as_str(), Some("*"));
         assert_eq!(rows[0].get("slo").unwrap().as_str(), Some("pass"));
+    }
+
+    #[test]
+    fn model_axis_multiplies_the_screen_and_moe_wins_it() {
+        let trace = azure_conversations();
+        let dense_only = screen(&trace, &tiny_cfg());
+        let moe = ModelAxis::MoeStreaming { dispatch_ms: 0.0 };
+        let cfg = OptimizeConfig {
+            models: vec![ModelAxis::Dense, moe],
+            ..tiny_cfg()
+        };
+        let cells = screen(&trace, &cfg);
+        assert_eq!(cells.len(), 2 * dense_only.len(), "4th axis multiplies");
+        // Weight streaming collapses W ⇒ every MoE cell out-ranks every
+        // dense cell in the joint best-first ordering.
+        assert!(cells[..dense_only.len()].iter().all(|c| c.model == moe));
+        assert!(cells[dense_only.len()..]
+            .iter()
+            .all(|c| c.model == ModelAxis::Dense));
+        // The dense slice of the joint screen is the dense-only screen,
+        // bit for bit — the new axis is orthogonal, not perturbative.
+        for (joint, solo) in cells[dense_only.len()..].iter().zip(&dense_only)
+        {
+            assert_eq!(joint.cutoffs, solo.cutoffs);
+            assert_eq!(joint.gamma.to_bits(), solo.gamma.to_bits());
+            assert_eq!(
+                joint.analytic.tok_per_watt.0.to_bits(),
+                solo.analytic.tok_per_watt.0.to_bits()
+            );
+        }
     }
 }

@@ -24,7 +24,7 @@
 //! [--spill F] [--slo-ttft S] [--workers N] [--format table|csv|json]`.
 
 use super::{RouterSpec, ScenarioOutcome, ScenarioSpec, SloTargets};
-use crate::fleet::profile::PowerAccounting;
+use crate::fleet::profile::{ModelAxis, PowerAccounting};
 use crate::fleet::topology::{Topology, LONG_CTX};
 use crate::power::Gpu;
 use crate::results::{Cell, Column, RowSet};
@@ -61,6 +61,10 @@ pub struct SweepConfig {
     /// homogeneous `gpu` cell stays in the grid as the baseline).
     /// `--gpu a,b,c` on the CLI. Empty by default.
     pub gpu_assignments: Vec<Vec<Gpu>>,
+    /// Model-architecture axis: the whole topology × dispatch grid is
+    /// replicated per model (`--model`, comma-separated). Defaults to
+    /// dense only — the pre-axis grid, bit-for-bit.
+    pub models: Vec<ModelAxis>,
     /// Also sweep the load-aware adaptive router (at this spill factor)
     /// over each pool-routing topology.
     pub spill: Option<f64>,
@@ -89,6 +93,7 @@ impl Default for SweepConfig {
             b_shorts: vec![2048, 4096, 8192],
             partitions: Vec::new(),
             gpu_assignments: Vec::new(),
+            models: vec![ModelAxis::Dense],
             spill: Some(2.0),
             slo: SloTargets::default(),
             acct: PowerAccounting::PerGpu,
@@ -137,23 +142,28 @@ pub fn grid(workload: &WorkloadTrace, cfg: &SweepConfig) -> Vec<ScenarioSpec> {
         }
     }
 
-    let mut specs = Vec::with_capacity(topos.len() * cfg.dispatches.len());
-    for (topo, router) in &topos {
-        for d in &cfg.dispatches {
-            specs.push(
-                ScenarioSpec::new(
-                    topo.clone(),
-                    cfg.gpu,
-                    workload.clone(),
-                    cfg.gen.clone(),
-                )
-                .with_groups(cfg.groups)
-                .with_dispatch(d)
-                .with_router(*router)
-                .with_arrivals(cfg.arrivals.clone())
-                .with_slo(cfg.slo)
-                .with_step_mode(cfg.step_mode),
-            );
+    let mut specs = Vec::with_capacity(
+        cfg.models.len() * topos.len() * cfg.dispatches.len(),
+    );
+    for &model in &cfg.models {
+        for (topo, router) in &topos {
+            for d in &cfg.dispatches {
+                specs.push(
+                    ScenarioSpec::new(
+                        topo.clone(),
+                        cfg.gpu,
+                        workload.clone(),
+                        cfg.gen.clone(),
+                    )
+                    .with_model(model)
+                    .with_groups(cfg.groups)
+                    .with_dispatch(d)
+                    .with_router(*router)
+                    .with_arrivals(cfg.arrivals.clone())
+                    .with_slo(cfg.slo)
+                    .with_step_mode(cfg.step_mode),
+                );
+            }
         }
     }
     specs
@@ -258,6 +268,7 @@ pub fn rowset(records: &[CellRecord], cfg: &SweepConfig) -> RowSet {
             Column::str("Workload"),
             Column::str("Topology"),
             Column::str("GPUs"),
+            Column::str("Model"),
             Column::str("Router"),
             Column::str("Dispatch"),
             Column::float("analyze tok/W").with_unit("tok/J"),
@@ -276,6 +287,7 @@ pub fn rowset(records: &[CellRecord], cfg: &SweepConfig) -> RowSet {
             Cell::str(o.workload.clone()),
             Cell::str(o.topology.clone()),
             Cell::str(o.gpus.clone()),
+            Cell::str(o.model.clone()),
             Cell::str(o.router.clone()),
             Cell::str(o.dispatch.clone()),
             Cell::float(r.analytic_tok_w)
@@ -483,16 +495,58 @@ mod tests {
         let rs = rowset(&recs, &cfg);
         let csv = rs.to_csv();
         assert!(csv.starts_with(
-            "Workload,Topology,GPUs,Router,Dispatch,\
+            "Workload,Topology,GPUs,Model,Router,Dispatch,\
              analyze tok/W (tok/J),simulate tok/W (tok/J),delta (%),\
              p99 TTFT (s),SLO,completed,rejected\n"
         ));
+        assert!(csv.contains(",dense,"), "model column filled: {csv}");
         assert!(csv.contains("\nAzure,"), "workload column filled: {csv}");
         assert_eq!(csv.lines().count(), 1 + recs.len());
         let doc = crate::runtime::json::parse(&rs.to_json()).unwrap();
         assert_eq!(
             doc.get("rows").unwrap().as_arr().unwrap().len(),
             recs.len()
+        );
+    }
+
+    #[test]
+    fn model_axis_replicates_the_grid_and_rides_to_the_rowset() {
+        let cfg = SweepConfig {
+            models: vec![
+                ModelAxis::Dense,
+                ModelAxis::MoeStreaming { dispatch_ms: 0.0 },
+            ],
+            dispatches: vec!["jsq".into()],
+            ..tiny_cfg()
+        };
+        let specs = grid(&azure_conversations(), &cfg);
+        // (homo + pool + fleetopt + adaptive-pool) × 1 dispatch,
+        // replicated per model.
+        assert_eq!(specs.len(), 8);
+        assert_eq!(
+            specs.iter().filter(|s| s.model == ModelAxis::Dense).count(),
+            4
+        );
+        // Run just the homogeneous pair — model-major order puts dense
+        // first — and pin the column end-to-end.
+        let homo: Vec<ScenarioSpec> = specs
+            .into_iter()
+            .filter(|s| s.label().contains("Homo"))
+            .collect();
+        assert_eq!(homo.len(), 2);
+        let out = run(&homo, 2);
+        let recs = records(&homo, &out, cfg.acct);
+        let csv = rowset(&recs, &cfg).to_csv();
+        assert!(
+            csv.contains(",dense,") && csv.contains(",qwen3-moe,"),
+            "model column missing an axis value: {csv}"
+        );
+        // Weight streaming must lift measured tok/W on the same cell.
+        assert!(
+            recs[1].outcome.tok_per_watt > recs[0].outcome.tok_per_watt,
+            "moe {} !> dense {}",
+            recs[1].outcome.tok_per_watt,
+            recs[0].outcome.tok_per_watt
         );
     }
 }

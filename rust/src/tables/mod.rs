@@ -14,15 +14,16 @@ pub mod t5;
 pub mod t6;
 pub mod t7;
 pub mod t8;
+pub mod t10;
 pub mod t9;
 
 use crate::fleet::pool::LBarPolicy;
 use crate::results::RowSet;
 
 /// Every artifact's CLI flag, in `tables --all` emission order.
-pub const ALL_FLAGS: [&str; 13] = [
-    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "law", "power-fig",
-    "dispatch-fig", "independence",
+pub const ALL_FLAGS: [&str; 14] = [
+    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "law",
+    "power-fig", "dispatch-fig", "independence",
 ];
 
 /// The typed rowsets behind one artifact, keyed by its CLI flag — the
@@ -40,6 +41,7 @@ pub fn rowsets_for(flag: &str, lbar: LBarPolicy) -> Option<Vec<RowSet>> {
         "t7" => t7::rowsets(),
         "t8" => vec![t8::rowset()],
         "t9" => vec![t9::rowset()],
+        "t10" => vec![t10::rowset()],
         "law" => law_fig::rowsets(),
         "power-fig" => vec![power_fig::rowset()],
         "dispatch-fig" => vec![dispatch_fig::rowset()],
@@ -60,6 +62,7 @@ pub fn generate_all(lbar: LBarPolicy) -> String {
     s.push_str(&t7::generate());
     s.push_str(&t8::generate());
     s.push_str(&t9::generate());
+    s.push_str(&t10::generate());
     s.push_str(&law_fig::generate());
     s.push_str(&power_fig::generate());
     s.push_str(&dispatch_fig::generate());
@@ -76,7 +79,8 @@ mod tests {
         let s = generate_all(LBarPolicy::Window);
         for needle in [
             "Table 1", "Table 2", "Table 3", "Table 4", "Table 5",
-            "Table 6", "Table 7", "Table 8", "Table 9", "1/W law",
+            "Table 6", "Table 7", "Table 8", "Table 9", "Table 10",
+            "1/W law",
             "Figure (power)", "Figure (dispatch)", "independence",
         ] {
             assert!(s.contains(needle), "missing {needle}");

@@ -1,0 +1,189 @@
+//! Table 10 — the third lever: model architecture as a scenario axis.
+//!
+//! The paper's Table 2 row pair (Llama-3.1-70B dense at 7.41 tok/W vs
+//! Qwen3-235B-A22B weight-streaming at 37.82 tok/W on H100, a 5.1×
+//! edge) treats architecture as a fixed property of the workload. With
+//! the model axis ([`crate::fleet::profile::ModelAxis`]) it is a lever
+//! next to routing and generation: this table sweeps context 4K→64K per
+//! architecture on the calibrated H100 fleet profile and answers two
+//! questions the paper leaves open — does the 1/W slope survive weight
+//! streaming (the `halving` column: tok/W(2L)/tok/W(L) per step of the
+//! context ladder), and how much of the MoE edge does a realistic
+//! 10 ms all-to-all dispatch erode (§3.2's caveat, quantified via
+//! [`crate::roofline::moe::dispatch_erosion`])?
+
+use crate::fleet::profile::{GpuProfile, ModelAxis, PowerAccounting};
+use crate::model::spec::{LLAMA31_70B, QWEN3_235B_A22B};
+use crate::power::{profiles, Gpu};
+use crate::results::{Cell, Column, RowSet};
+use crate::roofline::moe::dispatch_erosion;
+use crate::tokeconomy::operating_point;
+
+/// Context ladder, the paper's Table 1 sweep range.
+pub const CONTEXTS: [u32; 5] = [4096, 8192, 16384, 32768, 65536];
+
+/// The three architectures on the axis, dense first (the baseline the
+/// `×dense` column divides by).
+pub fn models() -> [ModelAxis; 3] {
+    [
+        ModelAxis::Dense,
+        ModelAxis::MoeStreaming { dispatch_ms: 0.0 },
+        ModelAxis::Speculative {
+            k: ModelAxis::SPEC_K,
+            alpha: ModelAxis::SPEC_ALPHA,
+        },
+    ]
+}
+
+const RHO: f64 = 0.85;
+
+/// Analytical tok/W for (model, context) on the calibrated H100 profile
+/// — the same Eq. 2 operating point both engines plan with.
+pub fn tok_per_watt(model: ModelAxis, context: u32) -> f64 {
+    let p = model.profile_for(Gpu::H100);
+    operating_point(&p, context, RHO, PowerAccounting::PerGpu)
+        .tok_per_watt
+        .0
+}
+
+/// Fraction of the zero-dispatch MoE edge over the dense baseline that
+/// survives 10 ms of all-to-all dispatch at this context's
+/// concurrency (n scaled ∝ 1/L from the 8K calibration anchor).
+fn erosion_at_10ms(context: u32) -> f64 {
+    let n = (128.0 * 8192.0 / context as f64).max(1.0);
+    let rows = dispatch_erosion(
+        &profiles::H100,
+        &QWEN3_235B_A22B,
+        &LLAMA31_70B,
+        8,
+        n,
+        context as f64,
+        &[0.0, 10.0],
+    );
+    rows[1].ratio / rows[0].ratio
+}
+
+/// The typed rowset behind the table.
+pub fn rowset() -> RowSet {
+    let mut rs = RowSet::new(
+        "Table 10 — model architecture as a scenario axis: context sweep \
+         per model (H100, ρ=0.85, Eq. 2 operating points)",
+        vec![
+            Column::str("Model"),
+            Column::int("context").with_unit("tok"),
+            Column::int("n_max"),
+            Column::float("tok/W").with_unit("tok/J"),
+            Column::float("x dense"),
+            Column::float("halving"),
+            Column::float("edge kept @10ms dispatch"),
+        ],
+    );
+    for model in models() {
+        let mut prev: Option<f64> = None;
+        for ctx in CONTEXTS {
+            let p = model.profile_for(Gpu::H100);
+            let tpw = tok_per_watt(model, ctx);
+            let vs_dense = tpw / tok_per_watt(ModelAxis::Dense, ctx);
+            let halving = match prev {
+                Some(prev_tpw) => Cell::float(tpw / prev_tpw)
+                    .shown(format!("{:.3}", tpw / prev_tpw)),
+                None => Cell::missing(),
+            };
+            let erosion = match model {
+                ModelAxis::MoeStreaming { .. } => {
+                    let e = erosion_at_10ms(ctx);
+                    Cell::float(e).shown(format!("{:.0}%", e * 100.0))
+                }
+                _ => Cell::missing(),
+            };
+            rs.push(vec![
+                Cell::str(model.label()),
+                Cell::int(ctx as i64),
+                Cell::int(p.n_max(ctx) as i64),
+                Cell::float(tpw).shown(format!("{tpw:.2}")),
+                Cell::float(vs_dense).shown(format!("{vs_dense:.2}x")),
+                halving,
+                erosion,
+            ]);
+            prev = Some(tpw);
+        }
+    }
+    let dense_8k = tok_per_watt(ModelAxis::Dense, 8192);
+    let moe_8k =
+        tok_per_watt(ModelAxis::MoeStreaming { dispatch_ms: 0.0 }, 8192);
+    let (_, dense_paper, _) = super::t2::PAPER[1];
+    let (_, moe_paper, _) = super::t2::PAPER[3];
+    rs.note(format!(
+        "headline at 8K: dense {dense_8k:.2} tok/W vs qwen3-moe \
+         {moe_8k:.2} tok/W = {:.2}x (paper Table 2: {dense_paper} vs \
+         {moe_paper} = {:.1}x; the gap is the paper's own Table 2 \
+         non-closure, documented in Table 2's notes)",
+        moe_8k / dense_8k,
+        moe_paper / dense_paper,
+    ));
+    rs.note(
+        "the 1/W law survives the architecture lever: every halving \
+         entry sits near 0.5 — weight streaming rescales W and H0 but \
+         keeps tok/W ∝ 1/L, so routing gains multiply across models",
+    );
+    rs.note(
+        "'edge kept' is the fraction of the zero-dispatch MoE advantage \
+         over dense surviving 10 ms of all-to-all dispatch (§3.2's \
+         upper-bound caveat); `wattlaw simulate --model qwen3-moe \
+         --dispatch-ms 10` runs the eroded fleet end to end",
+    );
+    rs
+}
+
+pub fn generate() -> String {
+    rowset().to_text()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_the_moe_headline_within_the_acceptance_band() {
+        // ISSUE 9 acceptance: qwen3-moe on H100 at 8K reports ≳35 tok/W
+        // analytical and ≥4.5× the dense baseline.
+        let dense = tok_per_watt(ModelAxis::Dense, 8192);
+        let moe =
+            tok_per_watt(ModelAxis::MoeStreaming { dispatch_ms: 0.0 }, 8192);
+        assert!(moe >= 35.0, "moe @8K = {moe}");
+        assert!(moe / dense >= 4.5, "edge = {}", moe / dense);
+    }
+
+    #[test]
+    fn the_context_slope_survives_every_architecture() {
+        for model in models() {
+            for w in CONTEXTS.windows(2) {
+                let ratio =
+                    tok_per_watt(model, w[1]) / tok_per_watt(model, w[0]);
+                assert!(
+                    (0.45..=0.65).contains(&ratio),
+                    "{}: tok/W({})/tok/W({}) = {ratio}",
+                    model.label(),
+                    w[1],
+                    w[0]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn renders_all_models_with_erosion_on_the_moe_rows() {
+        let rs = rowset();
+        assert_eq!(rs.rows().len(), 3 * CONTEXTS.len());
+        let s = rs.to_text();
+        assert!(s.contains("Table 10"));
+        for m in models() {
+            assert!(s.contains(m.label()), "missing {}", m.label());
+        }
+        // Dispatch strictly erodes (but does not erase) the edge.
+        for ctx in CONTEXTS {
+            let e = erosion_at_10ms(ctx);
+            assert!(e > 0.0 && e < 1.0, "erosion@{ctx} = {e}");
+        }
+    }
+}

@@ -17,7 +17,9 @@ use std::sync::Arc;
 
 use wattlaw::fleet::optimizer::{multi_pool, optimize_fleetopt, sweep_fleetopt};
 use wattlaw::fleet::pool::LBarPolicy;
-use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use wattlaw::fleet::profile::{
+    GpuProfile, ManualProfile, ModelAxis, PowerAccounting,
+};
 use wattlaw::fleet::topology::{Topology, LONG_CTX};
 use wattlaw::power::Gpu;
 use wattlaw::scenario::optimize::{
@@ -170,6 +172,7 @@ fn k2_partition_reduction_replays_the_fleetopt_two_pool_path_bitwise() {
             cfg.rho,
             cfg.slo.ttft_p99_s,
             cfg.acct,
+            ModelAxis::Dense,
         );
         assert_eq!(
             c.analytic.tok_per_watt.0.to_bits(),
@@ -375,6 +378,7 @@ fn bnb_screen_replays_the_brute_force_cross_product_bitwise_on_k_le_3() {
                 PowerAccounting::PerGpu,
                 mode,
                 keep,
+                ModelAxis::Dense,
             )
         };
         let (brute, bstats) = run(MixedScreen::BruteForce, usize::MAX);
@@ -424,6 +428,7 @@ fn bnb_default_keep_preserves_the_brute_force_winner_and_prefix() {
             PowerAccounting::PerGpu,
             mode,
             keep,
+            ModelAxis::Dense,
         )
     };
     let (brute, bstats) = run(MixedScreen::BruteForce, usize::MAX);
@@ -468,6 +473,7 @@ fn bnb_opens_k5_three_generation_screens_and_matches_brute_head() {
             PowerAccounting::PerGpu,
             mode,
             keep,
+            ModelAxis::Dense,
         )
     };
     let (brute, bstats) = run(MixedScreen::BruteForce, usize::MAX);
@@ -575,6 +581,7 @@ fn legacy_multi_pool_agrees_with_kpool_analyze_to_1e12() {
                 0.85,
                 0.5,
                 PowerAccounting::PerGpu,
+                ModelAxis::Dense,
             );
             assert!(
                 (legacy.tok_per_watt.0 - partition.tok_per_watt.0).abs()

@@ -3,7 +3,9 @@
 //! workload CDFs, routing, paged allocation and continuous batching under
 //! randomized inputs.
 
-use wattlaw::fleet::profile::{GpuProfile, ManualProfile, PowerAccounting};
+use wattlaw::fleet::profile::{
+    GpuProfile, ManualProfile, ModelAxis, PowerAccounting,
+};
 use wattlaw::model::spec::{CATALOG, LLAMA31_70B};
 use wattlaw::model::{kappa_bytes_per_token, n_max, KvPlacement};
 use wattlaw::power::{Gpu, LogisticPower};
@@ -88,6 +90,42 @@ fn prop_tok_per_watt_decreasing_in_context() {
             .tok_per_watt
             .0;
         xcheck_assert!(t2 < t1, "tok/W({c2})={t2} !< tok/W({c1})={t1}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_context_halving_law_holds_on_every_model_axis() {
+    // The paper's 1/W slope, per architecture: with n_max ∝ 1/L and
+    // L̄ = L, the product n·L̄ — hence τ — is context-invariant, so
+    // doubling the window must halve analytical tok/W up to the n_max
+    // floor and the (mild) power-curve slope. Weight streaming and
+    // speculative decode rescale W and H0 but keep the same functional
+    // form, so the slope must survive on all three model axes.
+    forall("tok/W(2L)/tok/W(L) ≈ 1/2 per model axis", 120, |g| {
+        let gpu = *g.choose(&Gpu::ALL);
+        let model = *g.choose(&[
+            ModelAxis::Dense,
+            ModelAxis::MoeStreaming { dispatch_ms: 0.0 },
+            ModelAxis::Speculative {
+                k: ModelAxis::SPEC_K,
+                alpha: ModelAxis::SPEC_ALPHA,
+            },
+        ]);
+        let p = model.profile_for(gpu);
+        let ctx = g.pow2(12, 15); // 4K..32K so the doubled window ≤ 64K
+        let tpw = |c: u32| {
+            operating_point(&p, c, 1.0, PowerAccounting::PerGpu)
+                .tok_per_watt
+                .0
+        };
+        let ratio = tpw(ctx * 2) / tpw(ctx);
+        xcheck_assert!(
+            (0.45..=0.65).contains(&ratio),
+            "{} {}: tok/W(2·{ctx})/tok/W({ctx}) = {ratio}",
+            model.label(),
+            p.label()
+        );
         Ok(())
     });
 }
@@ -599,6 +637,7 @@ fn prop_mixed_fleet_analyze_is_the_poolwise_eq4_sum() {
                 0.85,
                 0.5,
                 PowerAccounting::PerGpu,
+                ModelAxis::Dense,
             )
         };
         let mixed =

@@ -43,6 +43,16 @@
 //! iteration per event" and stay comparable with the numbers recorded
 //! before fusion existed.
 //!
+//! The PR 10 `parallel_stream` section pits the sequential streamed
+//! engine against the sharded per-group demux (round-robin dispatch —
+//! the arrival-static, parallel-eligible path) at λ ∈ {1000, 4000} on
+//! the same generated streams, replay-asserted to the same bits and
+//! the same per-step event count; full (non-`--quick`) runs assert the
+//! sharded λ=4000 cell is strictly faster. The `screen_memo` section
+//! measures the memoized stage-A screen against the disabled-memo
+//! oracle on the mixed H100×B200 grid — same ranking, bit for bit,
+//! with the Eq. 4 cache hit rate reported.
+//!
 //! Run `cargo bench --bench bench_sim_engine -- --record` to write the
 //! headline numbers to `BENCH_sim_engine.json` at the repo root
 //! (`--quick` shrinks the sample count for smoke runs; `--gate` fails
@@ -57,7 +67,8 @@ use wattlaw::fleet::topology::Topology;
 use wattlaw::power::Gpu;
 use wattlaw::router::context::ContextRouter;
 use wattlaw::scenario::optimize::{
-    self, MixedScreen, MixedScreenStats, OptimizeConfig,
+    self, MixedScreen, MixedScreenStats, OptimizeConfig, ScreenMemoStats,
+    ScreenedCell,
 };
 use wattlaw::scenario::ScenarioSpec;
 use wattlaw::sim::dispatch::{JoinShortestQueue, RoundRobin};
@@ -495,6 +506,81 @@ fn main() {
         });
     }
 
+    // Sharded streaming head-to-head: the sequential streamed engine vs
+    // the per-group demux on the same generated λ ∈ {1000, 4000}
+    // streams. Round-robin dispatch is arrival-static, so the parallel
+    // path engages the demux: the main thread routes each arrival into
+    // a bounded per-group channel and one worker per group drains its
+    // own calendar. Per-step keeps events/sec meaning one engine
+    // iteration per event, and under per-step the sharded run must pop
+    // exactly the sequential event count (asserted below along with the
+    // float replay). stats[29..33].
+    let ps_opts = |allow_parallel: bool| EngineOptions {
+        allow_parallel,
+        state_mode: StateMode::Incremental,
+        queue_mode: QueueMode::Calendar,
+        step_mode: StepMode::PerStep,
+        validate_state: false,
+    };
+    let ps_names = [
+        "parallel_stream_sequential_l1000",
+        "parallel_stream_sharded_l1000",
+        "parallel_stream_sequential_l4000",
+        "parallel_stream_sharded_l4000",
+    ];
+    let mut ps_steps = [0u64; 4];
+    let mut ps_toks = [0u64; 4];
+    let mut ps_joules = [0f64; 4];
+    let mut ps_events = [0u64; 4];
+    for (i, name) in ps_names.iter().enumerate() {
+        let li = i / 2;
+        let sharded = i % 2 == 1;
+        g.bench(*name, || {
+            let mut rr = RoundRobin::new();
+            let mut src = SynthSource::new(&workload, &stream_gens[li]);
+            let r = simulate_topology_source(
+                &mut src,
+                &router,
+                &pool_groups,
+                &cfgs,
+                &mut rr,
+                ps_opts(sharded),
+            );
+            ps_steps[i] = r.steps;
+            ps_toks[i] = r.output_tokens;
+            ps_joules[i] = r.joules;
+            ps_events[i] = r.events_popped;
+            black_box(r.output_tokens)
+        });
+    }
+
+    // Memoized stage-A screen vs the disabled-memo oracle on the mixed
+    // H100×B200 grid: every homogeneous Eq. 4 table row the
+    // branch-and-bound axis re-derives is a cache replay under the
+    // shared memo. Both screens must rank identically, bit for bit
+    // (asserted below). stats[33..35].
+    let sm_cfg = OptimizeConfig {
+        gpus: vec![Gpu::H100, Gpu::B200],
+        partitions: hetero_parts.clone(),
+        gpu_axis: optimize::GpuAxis::Mixed,
+        gen: gen.clone(),
+        groups: 16,
+        ..Default::default()
+    };
+    let mut sm_uncached_cells: Vec<ScreenedCell> = Vec::new();
+    g.bench("screen_memo_uncached", || {
+        sm_uncached_cells = optimize::screen_uncached(&workload, &sm_cfg);
+        black_box(sm_uncached_cells.len())
+    });
+    let mut sm_cached_cells: Vec<ScreenedCell> = Vec::new();
+    let mut sm_stats = ScreenMemoStats::default();
+    g.bench("screen_memo_cached", || {
+        let (cells, st) = optimize::screen_with_stats(&workload, &sm_cfg);
+        sm_cached_cells = cells;
+        sm_stats = st;
+        black_box(sm_cached_cells.len())
+    });
+
     let stats = g.finish();
     assert_eq!(steps_seq, steps_par, "parallel fast path must replay exactly");
     assert_eq!(
@@ -720,6 +806,81 @@ fn main() {
         );
     }
 
+    // The sharded demux must replay the sequential stream exactly —
+    // same floats and, under per-step, the same event count — otherwise
+    // the events/sec comparison is comparing different simulations.
+    for li in 0..2 {
+        let (sq, sh) = (2 * li, 2 * li + 1);
+        assert_eq!(
+            ps_steps[sq], ps_steps[sh],
+            "sharded stream must replay the sequential stream exactly"
+        );
+        assert_eq!(ps_toks[sq], ps_toks[sh]);
+        assert_eq!(
+            ps_joules[sq].to_bits(),
+            ps_joules[sh].to_bits(),
+            "sharded joules must match bit-for-bit"
+        );
+        assert_eq!(
+            ps_events[sq], ps_events[sh],
+            "per-step sharded run must pop exactly the sequential events"
+        );
+    }
+    for (i, name) in ps_names.iter().enumerate() {
+        println!(
+            "{name:<34} {} step events, {:.0} events/sec (mean)",
+            ps_steps[i],
+            ev_per_s(ps_steps[i], &stats[29 + i])
+        );
+    }
+    println!(
+        "sharded speedup over sequential stream: {:.2}x (λ=1000), \
+         {:.2}x (λ=4000)",
+        stats[29].mean_ns / stats[30].mean_ns,
+        stats[31].mean_ns / stats[32].mean_ns,
+    );
+    // 16 groups of decode work at λ=4000 dwarf the channel overhead —
+    // the demux must actually win there. --quick smoke runs (3 samples,
+    // cramped CI cores) are too noisy to hold a wall-clock bar, so the
+    // bar applies to full runs only.
+    if !quick {
+        assert!(
+            stats[32].mean_ns < stats[31].mean_ns,
+            "sharded stream must beat the sequential stream at λ=4000: \
+             {:.1} ms vs {:.1} ms",
+            stats[32].mean_ns / 1e6,
+            stats[31].mean_ns / 1e6
+        );
+    }
+
+    // The memo must not change the ranking: same cells, same bits.
+    assert_eq!(
+        sm_uncached_cells.len(),
+        sm_cached_cells.len(),
+        "memoized screen must produce the uncached cell count"
+    );
+    for (a, b) in sm_uncached_cells.iter().zip(&sm_cached_cells) {
+        assert_eq!(a.gpus, b.gpus, "memoized screen must rank identically");
+        assert_eq!(
+            a.analytic.tok_per_watt.0.to_bits(),
+            b.analytic.tok_per_watt.0.to_bits(),
+            "memoized screen must replay the uncached floats bit-for-bit"
+        );
+    }
+    assert!(sm_stats.hits > 0, "the mixed screen must hit the memo");
+    let sm_cells = sm_cached_cells.len().max(1) as f64;
+    println!(
+        "screen memo: {} cells — uncached {:.1} ms, cached {:.1} ms \
+         ({:.2}x), {} of {} Eq. 4 evals from cache ({:.0}% hit rate)",
+        sm_cached_cells.len(),
+        stats[33].mean_ns / 1e6,
+        stats[34].mean_ns / 1e6,
+        stats[33].mean_ns / stats[34].mean_ns,
+        sm_stats.hits,
+        sm_stats.evals,
+        100.0 * sm_stats.hit_rate(),
+    );
+
     // --gate: fail (after optionally recording) if calendar events/sec
     // regressed more than 20% against the committed non-null baseline.
     let mut gate_failures: Vec<String> = Vec::new();
@@ -777,6 +938,52 @@ fn main() {
                     gate_failures.push(format!(
                         "{name}: {now:.0} sim steps/sec is {:.1}% below \
                          the committed baseline {base:.0}",
+                        (1.0 - now / base) * 100.0
+                    ));
+                }
+            }
+            // Sharded-streaming cells gate the same way: a demux
+            // regression shows up as events/sec lost against the
+            // recorded baseline.
+            let ps_entries = doc
+                .get("parallel_stream")
+                .and_then(|q| q.get("entries"))
+                .and_then(|e| e.as_arr())
+                .unwrap_or(&[]);
+            for entry in ps_entries {
+                let Some(name) = entry.get("name").and_then(|n| n.as_str())
+                else {
+                    continue;
+                };
+                let Some(base) =
+                    entry.get("events_per_sec").and_then(|v| v.as_f64())
+                else {
+                    continue; // still null: nothing to gate against
+                };
+                let Some(i) = ps_names.iter().position(|n| *n == name) else {
+                    continue;
+                };
+                let now = ev_per_s(ps_steps[i], &stats[29 + i]);
+                if now < 0.8 * base {
+                    gate_failures.push(format!(
+                        "{name}: {now:.0} events/sec is {:.1}% below the \
+                         committed baseline {base:.0}",
+                        (1.0 - now / base) * 100.0
+                    ));
+                }
+            }
+            // The cached screen is what `optimize` now runs — gate its
+            // cell throughput too.
+            if let Some(base) = doc
+                .get("screen_memo")
+                .and_then(|q| q.get("cached_cells_per_ms"))
+                .and_then(|v| v.as_f64())
+            {
+                let now = sm_cells / (stats[34].mean_ns / 1e6);
+                if now < 0.8 * base {
+                    gate_failures.push(format!(
+                        "screen_memo_cached: {now:.1} cells/ms is {:.1}% \
+                         below the committed baseline {base:.1}",
                         (1.0 - now / base) * 100.0
                     ));
                 }
@@ -1002,6 +1209,58 @@ fn main() {
              calendar baseline, so the axis itself adds no per-event \
              cost\"\n  }},\n",
             ma_tok_per_j(1) / ma_tok_per_j(0),
+        ));
+        j.push_str("  \"parallel_stream\": {\n    \"entries\": [\n");
+        for (i, name) in ps_names.iter().enumerate() {
+            j.push_str(&format!(
+                "      {{ \"name\": \"{name}\", \"steps\": {}, \
+                 \"events_per_sec\": {:.0}, \"mean_ms\": {:.2} }}{}\n",
+                ps_steps[i],
+                ev_per_s(ps_steps[i], &stats[29 + i]),
+                stats[29 + i].mean_ns / 1e6,
+                if i + 1 < ps_names.len() { "," } else { "" }
+            ));
+        }
+        j.push_str(&format!(
+            "    ],\n    \
+             \"sharded_speedup_l1000\": {:.3},\n    \
+             \"sharded_speedup_l4000\": {:.3},\n    \
+             \"note\": \"sequential streamed engine vs the sharded \
+             per-group demux (round-robin, per-step, calendar queue, 16 \
+             groups): the main thread routes each generated arrival \
+             into a bounded per-group channel and one worker per group \
+             drains its own calendar — replay-asserted to the same bits \
+             and the same per-step event count before recording; the \
+             --gate check trips when a cell drops more than 20% below \
+             this baseline\"\n  }},\n",
+            stats[29].mean_ns / stats[30].mean_ns,
+            stats[31].mean_ns / stats[32].mean_ns,
+        ));
+        j.push_str(&format!(
+            "  \"screen_memo\": {{\n    \
+             \"cells\": {},\n    \
+             \"uncached_ms\": {:.3},\n    \
+             \"cached_ms\": {:.3},\n    \
+             \"cached_cells_per_ms\": {:.2},\n    \
+             \"speedup\": {:.3},\n    \
+             \"memo_evals\": {},\n    \
+             \"memo_hits\": {},\n    \
+             \"hit_rate\": {:.3},\n    \
+             \"note\": \"GpuAxis::Mixed stage A (H100xB200, K in 2..=3) \
+             with the shared ScreenMemo vs the disabled-memo oracle — \
+             every homogeneous Eq. 4 table row the branch-and-bound \
+             axis re-derives is a cache replay; both screens are \
+             asserted to rank identically, bit for bit, before \
+             recording; the --gate check trips when cached cells/ms \
+             drops more than 20% below this baseline\"\n  }},\n",
+            sm_cached_cells.len(),
+            stats[33].mean_ns / 1e6,
+            stats[34].mean_ns / 1e6,
+            sm_cells / (stats[34].mean_ns / 1e6),
+            stats[33].mean_ns / stats[34].mean_ns,
+            sm_stats.evals,
+            sm_stats.hits,
+            sm_stats.hit_rate(),
         ));
         j.push_str(
             "  \"recorded_by\": \"cargo bench --bench bench_sim_engine -- \

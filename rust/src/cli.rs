@@ -26,6 +26,7 @@
 //!                  [--pools K] [--cutoffs a,b,c]   K-pool routed fleet
 //!                  [--model NAME] [--dispatch-ms D] model-architecture lever
 //!                  [--step-mode fused|per-step]    macro-step escape hatch
+//!                  [--workers N]   sharded streaming when N > 1
 //! wattlaw simulate sweep [--lambda 1000] [--duration S] [--groups N]
 //!                  [--workload ARCHETYPE] [--trace file.csv]
 //!                  [--dispatch NAME] [--b-short N] [--spill F]
@@ -115,6 +116,17 @@ impl Args {
 
     pub fn opt_u32(&self, name: &str, default: u32) -> u32 {
         self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Worker-thread count shared by every parallel surface
+    /// (`simulate`, `simulate sweep`, `optimize`): explicit `--workers`
+    /// wins, then the `WATTLAW_WORKERS` environment variable, then the
+    /// machine's available parallelism
+    /// ([`resolve_workers`](crate::sim::par::resolve_workers)).
+    pub fn workers(&self) -> usize {
+        crate::sim::par::resolve_workers(
+            self.opt("workers").and_then(|v| v.parse().ok()),
+        )
     }
 
     pub fn lbar(&self) -> LBarPolicy {
@@ -461,10 +473,15 @@ commands:
               --model llama70b|qwen3-moe|llama70b+spec swaps the model
               architecture (both fleets), --dispatch-ms D the MoE
               all-to-all overhead; the analytical 8K tok/W headline is
-              printed for cross-model comparison)
+              printed for cross-model comparison;
+              --workers N > 1 (default: WATTLAW_WORKERS env, then all
+              cores) shards arrival-static runs across per-group worker
+              threads — bitwise the sequential result, --workers 1
+              forces sequential)
   simulate sweep
              dispatch x topology x context-window scenario grid at fleet
-             scale (default λ=1000), cells across worker threads, each
+             scale (default λ=1000), cells pulled off a shared work
+             queue by --workers N threads (same default ladder), each
              cell streaming its own arrivals; every cell reports tok/W +
              p99 TTFT + SLO verdict with its workload column; --pools K
              adds one K'-pool partition cell per K' in 2..=K, --gpu
@@ -943,10 +960,7 @@ fn cmd_optimize(args: &Args) -> crate::Result<i32> {
         ..defaults
     };
 
-    let default_workers = std::thread::available_parallelism()
-        .map(|n| n.get() as u32)
-        .unwrap_or(1);
-    let workers = args.opt_u32("workers", default_workers).max(1) as usize;
+    let workers = args.workers();
     let n_partitions = cfg.effective_partitions().len();
     // The homogeneous axis is an exact count; the heterogeneous modes
     // add assignment cells on top (the budget path's length depends on
@@ -1125,8 +1139,14 @@ fn cmd_simulate(args: &Args) -> crate::Result<i32> {
     };
 
     let p = model.profile_for(gpus[0]);
+    // `--workers 1` forces the sequential engine; more than one worker
+    // lets arrival-static scenarios take the sharded streaming fast
+    // path (one demux thread routing to per-group workers — bitwise the
+    // sequential result, see `sim::events`). Load-aware routing or
+    // dispatch stays sequential either way.
+    let workers = args.workers();
     let opts = EngineOptions {
-        allow_parallel: false,
+        allow_parallel: workers > 1,
         step_mode: args.step_mode()?,
         ..Default::default()
     };
@@ -1300,10 +1320,7 @@ fn cmd_simulate_sweep(args: &Args) -> crate::Result<i32> {
     for s in &specs {
         s.validate().map_err(|e| anyhow::anyhow!(e))?;
     }
-    let default_workers = std::thread::available_parallelism()
-        .map(|n| n.get() as u32)
-        .unwrap_or(1);
-    let workers = args.opt_u32("workers", default_workers).max(1) as usize;
+    let workers = args.workers();
     eprintln!(
         "sweep: {} cells ({} topologies x {} dispatch) on {} worker threads…",
         specs.len(),
@@ -1813,6 +1830,21 @@ mod tests {
         assert_eq!(quick("--workload flash-crowd --dispatch jsq").unwrap(), 0);
         assert_eq!(quick("--workload multi-tenant").unwrap(), 0);
         assert!(quick("--workload bogus").is_err());
+    }
+
+    #[test]
+    fn simulate_accepts_workers() {
+        let quick = |extra: &str| {
+            run(format!("simulate --lambda 10 --duration 1 --groups 2 {extra}")
+                .split_whitespace()
+                .map(String::from))
+        };
+        // --workers 1 forces the sequential engine; > 1 opts
+        // arrival-static runs into the sharded streaming path (the
+        // load-aware-dispatch run stays sequential either way).
+        assert_eq!(quick("--workers 1").unwrap(), 0);
+        assert_eq!(quick("--workers 2").unwrap(), 0);
+        assert_eq!(quick("--workers 2 --dispatch jsq").unwrap(), 0);
     }
 
     #[test]

@@ -20,7 +20,13 @@
 //!   hot per-group state stored struct-of-arrays for cache-linear
 //!   dispatch scans, with pluggable group-dispatch policies
 //!   (round-robin / join-shortest-queue / least-KV-load /
-//!   power-aware) and a parallel per-group fast path ([`sim`]) — a
+//!   power-aware) and two parallel fast paths — the per-group split for
+//!   materialized traces and, for arrival-static streams, a sharded
+//!   demux that routes each arrival into a bounded per-group channel
+//!   drained by one worker thread per group, bitwise the sequential
+//!   result at O(groups) memory ([`sim`], worker counts resolved once
+//!   by [`sim::par`]: `--workers` flag, then `WATTLAW_WORKERS`, then
+//!   all cores) — a
 //!   unified scenario layer feeding both the analytical planner and the
 //!   simulator from one spec — four orthogonal fleet axes: routing
 //!   topology (two-pool / FleetOpt-γ / K-pool context partitions), GPU
@@ -37,13 +43,16 @@
 //!   [`workload::ArrivalSource`] the engine pulls one request at a time
 //!   so trace memory stays O(1) at any λ × duration (the materialized
 //!   path is retained as the bit-for-bit replay oracle) — with
-//!   multi-threaded
-//!   dispatch × topology × context-window sweeps and a two-stage
+//!   dispatch × topology × context-window sweeps whose cells are
+//!   pulled off a shared work queue by worker threads (index-ordered
+//!   merge, so any worker count emits identical bytes) and a two-stage
 //!   (analytical screen → simulated refine) FleetOpt optimizer that
 //!   searches assignment vectors by Eq. 4 branch-and-bound (admissible
 //!   closed-form bound over partial assignments; brute-force
 //!   cross-product retained as the oracle), greedy budgeted upgrades,
-//!   or explicit lists ([`scenario`]) — a typed results subsystem every output surface
+//!   or explicit lists, with one stage-A memo shared across the search
+//!   axes so repeated Eq. 4 cells replay from cache — bitwise the
+//!   uncached ranking, hit rate surfaced in the report ([`scenario`]) — a typed results subsystem every output surface
 //!   emits through, with CSV/JSON alongside the text tables
 //!   ([`results`]) — and per-GPU energy metering driven by the
 //!   calibrated logistic power model ([`power`]).

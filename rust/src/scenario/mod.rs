@@ -425,11 +425,13 @@ impl ScenarioSpec {
     ///
     /// Arrivals are **streamed** — the engine pulls one request at a
     /// time from [`Self::source`], so trace memory stays O(1) no matter
-    /// how long the run is. The one exception: when `allow_parallel` is
-    /// set *and* the (router, dispatch, fleet) tuple is arrival-static,
-    /// the parallel fast path pre-assigns the whole trace to groups, so
-    /// the trace is materialized first (bit-identical results either
-    /// way — the engine's replay guarantee).
+    /// how long the run is. When `allow_parallel` is set *and* the
+    /// (router, dispatch, fleet) tuple is arrival-static, the engine
+    /// takes the sharded streaming fast path: arrivals are demuxed into
+    /// bounded per-group channels and every group steps on its own
+    /// worker thread, still without materializing the trace
+    /// (bit-identical results either way — the engine's replay
+    /// guarantee).
     ///
     /// # Panics
     /// When a [`ArrivalSpec::Replay`] source fails to build; the CLI
@@ -444,15 +446,6 @@ impl ScenarioSpec {
         );
         let router = self.router();
         let mut policy = self.dispatch_policy();
-        if allow_parallel
-            && crate::sim::events::parallel_eligible(
-                router.as_ref(),
-                policy.as_ref(),
-                &pool_groups,
-            )
-        {
-            return self.simulate_trace(&self.trace(), true);
-        }
         let mut source =
             self.source().expect("arrival source failed to build");
         let report = simulate_topology_source(
@@ -462,7 +455,7 @@ impl ScenarioSpec {
             &pool_cfgs,
             policy.as_mut(),
             EngineOptions {
-                allow_parallel: false,
+                allow_parallel,
                 step_mode: self.step_mode,
                 ..Default::default()
             },

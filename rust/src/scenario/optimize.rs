@@ -118,6 +118,162 @@ pub fn analyze_cell(
     fleet_tpw_analysis(&pools, acct)
 }
 
+/// Counters for one [`ScreenMemo`]: how many Eq. 4 cell evaluations the
+/// screen requested and how many were served from cache. Follows the
+/// [`MixedScreenStats`] convention — plain counters the report and bench
+/// layers surface verbatim.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScreenMemoStats {
+    /// Cell evaluations requested through the memo (hits + misses).
+    pub evals: u64,
+    /// Evaluations answered from the cache instead of re-running the
+    /// Eq. 4 closed form.
+    pub hits: u64,
+}
+
+impl ScreenMemoStats {
+    /// Fraction of requested evaluations served from cache, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.evals == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.evals as f64
+        }
+    }
+}
+
+/// Cache key for one stage-A cell. The workload, traffic, and policy
+/// context (trace, λ, L̄ policy, ρ, SLO, accounting) are deliberately
+/// absent: a [`ScreenMemo`] is scoped to a single screen invocation
+/// where those are invariant, so the key only needs the axes that vary
+/// within one grid. `f64` axes key on their bit patterns — two cells
+/// collide only when every input is bitwise identical, which is exactly
+/// when [`analyze_cell`] is a pure replay.
+#[derive(PartialEq, Eq, Hash)]
+struct MemoKey {
+    /// [`ModelAxis`] encoded as (discriminant, payload bits).
+    model: (u8, u64, u64),
+    cutoffs: Vec<u32>,
+    gpus: Vec<Gpu>,
+    gamma_bits: u64,
+}
+
+impl MemoKey {
+    fn new(model: ModelAxis, cutoffs: &[u32], gpus: &[Gpu], gamma: f64) -> Self {
+        let model = match model {
+            ModelAxis::Dense => (0, 0, 0),
+            ModelAxis::MoeStreaming { dispatch_ms } => {
+                (1, dispatch_ms.to_bits(), 0)
+            }
+            ModelAxis::Speculative { k, alpha } => {
+                (2, k as u64, alpha.to_bits())
+            }
+        };
+        MemoKey {
+            model,
+            cutoffs: cutoffs.to_vec(),
+            gpus: gpus.to_vec(),
+            gamma_bits: gamma.to_bits(),
+        }
+    }
+}
+
+/// Memo for stage-A Eq. 4 cell evaluations, keyed on
+/// (model, cutoffs, per-pool GPUs, γ) — every axis that varies inside
+/// one [`screen`] call. The stage-A grid evaluates the same homogeneous
+/// cells repeatedly: the per-fleet axis and [`Eq4PowerTable::new`]'s
+/// table builds request identical (gpu, partition, γ) tuples, and the
+/// budgeted-upgrade greedy re-evaluates candidate assignments across
+/// rounds. Because [`analyze_cell`] is a pure function of the key (for
+/// a fixed workload/traffic/policy context — see [`MemoKey`]), replaying
+/// a cached [`FleetReport`] is *bitwise* the same as re-running the
+/// closed form, so the memoized screen ranks identically to the
+/// uncached one (`memoized_screen_ranks_identical_to_uncached` pins
+/// this against [`screen_uncached`]).
+///
+/// [`ScreenMemo::disabled`] is the same object with no cache — every
+/// call misses — so the cached and uncached paths share one code path
+/// and cannot drift.
+pub struct ScreenMemo {
+    /// `None` = disabled: evaluate every cell (the uncached oracle).
+    cache: Option<std::collections::HashMap<MemoKey, FleetReport>>,
+    stats: ScreenMemoStats,
+}
+
+impl ScreenMemo {
+    /// A caching memo — the default for [`screen`].
+    pub fn new() -> Self {
+        ScreenMemo {
+            cache: Some(std::collections::HashMap::new()),
+            stats: ScreenMemoStats::default(),
+        }
+    }
+
+    /// A pass-through memo that never caches: every evaluation runs the
+    /// Eq. 4 closed form. This is the bitwise oracle the cached screen
+    /// is held identical to.
+    pub fn disabled() -> Self {
+        ScreenMemo { cache: None, stats: ScreenMemoStats::default() }
+    }
+
+    /// Work counters so far.
+    pub fn stats(&self) -> ScreenMemoStats {
+        self.stats
+    }
+
+    /// Evaluate one fully-assigned stage-A cell, from cache when
+    /// possible. Every pool carries a GPU override, so the default
+    /// profile passed to [`analyze_cell`] is never consulted for a pool
+    /// plan — which is why the memo key can ignore it and why the
+    /// homogeneous axis can route through here bit-identically (the
+    /// homogeneous-reduction oracle in `tests/optimize_oracle.rs` pins
+    /// the equivalence).
+    #[allow(clippy::too_many_arguments)]
+    fn eval(
+        &mut self,
+        trace: &WorkloadTrace,
+        lambda_rps: f64,
+        cutoffs: &[u32],
+        gpus: &[Gpu],
+        gamma: f64,
+        lbar: LBarPolicy,
+        rho: f64,
+        ttft_slo_s: f64,
+        acct: PowerAccounting,
+        model: ModelAxis,
+    ) -> FleetReport {
+        self.stats.evals += 1;
+        let key = MemoKey::new(model, cutoffs, gpus, gamma);
+        if let Some(cache) = &self.cache {
+            if let Some(hit) = cache.get(&key) {
+                self.stats.hits += 1;
+                return hit.clone();
+            }
+        }
+        let report = analyze_cell(
+            &Topology::partition_with_gpus(cutoffs, gpus, gamma),
+            trace,
+            lambda_rps,
+            Arc::new(model.profile_for(gpus[0])),
+            lbar,
+            rho,
+            ttft_slo_s,
+            acct,
+            model,
+        );
+        if let Some(cache) = &mut self.cache {
+            cache.insert(key, report.clone());
+        }
+        report
+    }
+}
+
+impl Default for ScreenMemo {
+    fn default() -> Self {
+        ScreenMemo::new()
+    }
+}
+
 /// One screened K-pool cell: the partition vector, its long-pool γ, and
 /// the closed-form Eq. 4 report.
 #[derive(Debug, Clone)]
@@ -217,22 +373,42 @@ pub fn screen_assignments(
     acct: PowerAccounting,
     model: ModelAxis,
 ) -> Vec<PartitionOptResult> {
+    screen_assignments_with(
+        trace,
+        lambda_rps,
+        cells,
+        gammas,
+        lbar,
+        rho,
+        ttft_slo_s,
+        acct,
+        model,
+        &mut ScreenMemo::disabled(),
+    )
+}
+
+/// [`screen_assignments`] with an explicit [`ScreenMemo`] — the shared
+/// evaluation core. The public wrapper passes a disabled memo, so the
+/// cached and uncached screens are the same code path.
+#[allow(clippy::too_many_arguments)]
+fn screen_assignments_with(
+    trace: &WorkloadTrace,
+    lambda_rps: f64,
+    cells: &[(Vec<u32>, Vec<Gpu>)],
+    gammas: &[f64],
+    lbar: LBarPolicy,
+    rho: f64,
+    ttft_slo_s: f64,
+    acct: PowerAccounting,
+    model: ModelAxis,
+    memo: &mut ScreenMemo,
+) -> Vec<PartitionOptResult> {
     let mut out = Vec::with_capacity(cells.len() * gammas.len());
     for (cutoffs, gpus) in cells {
         for &gamma in gammas {
-            let topo = Topology::partition_with_gpus(cutoffs, gpus, gamma);
-            // Every pool overrides, so the default profile below is
-            // never consulted for a pool plan.
-            let report = analyze_cell(
-                &topo,
-                trace,
-                lambda_rps,
-                Arc::new(model.profile_for(gpus[0])),
-                lbar,
-                rho,
-                ttft_slo_s,
-                acct,
-                model,
+            let report = memo.eval(
+                trace, lambda_rps, cutoffs, gpus, gamma, lbar, rho,
+                ttft_slo_s, acct, model,
             );
             out.push(PartitionOptResult {
                 cutoffs: cutoffs.clone(),
@@ -622,19 +798,52 @@ impl Eq4PowerTable {
         acct: PowerAccounting,
         model: ModelAxis,
     ) -> Self {
+        Self::new_with(
+            trace,
+            lambda_rps,
+            cutoffs,
+            gpus,
+            gamma,
+            lbar,
+            rho,
+            ttft_slo_s,
+            acct,
+            model,
+            &mut ScreenMemo::disabled(),
+        )
+    }
+
+    /// [`Eq4PowerTable::new`] with an explicit [`ScreenMemo`]: the
+    /// table's homogeneous runs are exactly the cells the per-fleet
+    /// axis already screened (same (gpu, partition, γ) tuples through
+    /// the same evaluator), so under a shared memo the table build is
+    /// pure cache replay.
+    #[allow(clippy::too_many_arguments)]
+    fn new_with(
+        trace: &WorkloadTrace,
+        lambda_rps: f64,
+        cutoffs: &[u32],
+        gpus: &[Gpu],
+        gamma: f64,
+        lbar: LBarPolicy,
+        rho: f64,
+        ttft_slo_s: f64,
+        acct: PowerAccounting,
+        model: ModelAxis,
+        memo: &mut ScreenMemo,
+    ) -> Self {
         let k = cutoffs.len();
         let mut power = vec![vec![0.0; gpus.len()]; k];
         let mut demand = 0.0;
         for (j, &g) in gpus.iter().enumerate() {
-            let topo =
-                Topology::partition_with_gpus(cutoffs, &vec![g; k], gamma);
             // Every pool overrides to `g`, so the default profile is
             // never consulted for a pool plan (same as the brute path).
-            let report = analyze_cell(
-                &topo,
+            let report = memo.eval(
                 trace,
                 lambda_rps,
-                Arc::new(model.profile_for(g)),
+                cutoffs,
+                &vec![g; k],
+                gamma,
                 lbar,
                 rho,
                 ttft_slo_s,
@@ -850,6 +1059,43 @@ pub fn screen_mixed(
     keep: usize,
     model: ModelAxis,
 ) -> (Vec<PartitionOptResult>, MixedScreenStats) {
+    screen_mixed_with(
+        trace,
+        lambda_rps,
+        partitions,
+        gpus,
+        gammas,
+        lbar,
+        rho,
+        ttft_slo_s,
+        acct,
+        mode,
+        keep,
+        model,
+        &mut ScreenMemo::disabled(),
+    )
+}
+
+/// [`screen_mixed`] with an explicit [`ScreenMemo`]: the table builds
+/// ([`Eq4PowerTable::new_with`]) and the survivor re-evaluations route
+/// through the memo, so a screen that already evaluated the homogeneous
+/// axis replays those cells from cache instead of re-running Eq. 4.
+#[allow(clippy::too_many_arguments)]
+fn screen_mixed_with(
+    trace: &WorkloadTrace,
+    lambda_rps: f64,
+    partitions: &[Vec<u32>],
+    gpus: &[Gpu],
+    gammas: &[f64],
+    lbar: LBarPolicy,
+    rho: f64,
+    ttft_slo_s: f64,
+    acct: PowerAccounting,
+    mode: MixedScreen,
+    keep: usize,
+    model: ModelAxis,
+    memo: &mut ScreenMemo,
+) -> (Vec<PartitionOptResult>, MixedScreenStats) {
     let n = gpus.len();
     let mut stats = MixedScreenStats::default();
     for cuts in partitions {
@@ -863,18 +1109,18 @@ pub fn screen_mixed(
         let cells = mixed_assignments(partitions, gpus);
         stats.leaves_scored = stats.brute_cells;
         stats.full_evals = stats.brute_cells;
-        let out = screen_assignments(
+        let out = screen_assignments_with(
             trace, lambda_rps, &cells, gammas, lbar, rho, ttft_slo_s, acct,
-            model,
+            model, memo,
         );
         return (out, stats);
     }
     let mut kept = KeptSet { cap: keep, entries: Vec::new() };
     for (pi, cuts) in partitions.iter().enumerate() {
         for (gi, &gamma) in gammas.iter().enumerate() {
-            let table = Eq4PowerTable::new(
+            let table = Eq4PowerTable::new_with(
                 trace, lambda_rps, cuts, gpus, gamma, lbar, rho, ttft_slo_s,
-                acct, model,
+                acct, model, memo,
             );
             stats.table_evals += n as u64;
             bnb_descend(
@@ -893,15 +1139,8 @@ pub fn screen_mixed(
         let cuts = &partitions[pi];
         let gamma = gammas[gi];
         let v = decode_assignment(code, cuts.len(), gpus);
-        let report = analyze_cell(
-            &Topology::partition_with_gpus(cuts, &v, gamma),
-            trace,
-            lambda_rps,
-            Arc::new(model.profile_for(v[0])),
-            lbar,
-            rho,
-            ttft_slo_s,
-            acct,
+        let report = memo.eval(
+            trace, lambda_rps, cuts, &v, gamma, lbar, rho, ttft_slo_s, acct,
             model,
         );
         stats.full_evals += 1;
@@ -948,14 +1187,19 @@ fn budget_cells(
     partitions: &[Vec<u32>],
     budget: UpgradeBudget,
     model: ModelAxis,
+    memo: &mut ScreenMemo,
 ) -> Vec<ScreenedCell> {
     let base = cfg.gpus.first().copied().unwrap_or(Gpu::H100);
-    let eval = |cuts: &[u32], gpus: &[Gpu], gamma: f64| {
-        analyze_cell(
-            &Topology::partition_with_gpus(cuts, gpus, gamma),
+    // The all-`base` starting fleet of every (partition, γ) path is the
+    // homogeneous cell the per-fleet axis already screened — same key,
+    // so under a shared memo the path starts from cache replay.
+    let mut eval = |cuts: &[u32], gpus: &[Gpu], gamma: f64| {
+        memo.eval(
             workload,
             cfg.gen.lambda_rps,
-            Arc::new(model.profile_for(base)),
+            cuts,
+            gpus,
+            gamma,
             cfg.lbar,
             cfg.rho,
             cfg.slo.ttft_p99_s,
@@ -1024,8 +1268,41 @@ fn budget_cells(
 /// Stage A: screen the full GPU-assignment × partition × γ grid
 /// analytically, best-first (ties keep grid order). The homogeneous
 /// per-fleet axis is always screened; [`GpuAxis`] adds mixed, explicit
-/// or budgeted-upgrade assignment cells on top.
+/// or budgeted-upgrade assignment cells on top. Memoized: repeated
+/// Eq. 4 cells — the homogeneous tuples the mixed screen's power tables
+/// rebuild, the budgeted-upgrade starting fleets — are evaluated once
+/// and replayed from cache, bit-identically ([`ScreenMemo`]).
 pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCell> {
+    screen_with_stats(workload, cfg).0
+}
+
+/// [`screen`] plus the memo's work counters — what `wattlaw optimize`
+/// reports and the `screen_memo` bench section measures.
+pub fn screen_with_stats(
+    workload: &WorkloadTrace,
+    cfg: &OptimizeConfig,
+) -> (Vec<ScreenedCell>, ScreenMemoStats) {
+    let mut memo = ScreenMemo::new();
+    let cells = screen_impl(workload, cfg, &mut memo);
+    (cells, memo.stats())
+}
+
+/// [`screen`] with the cache disabled: every cell runs the Eq. 4 closed
+/// form. This is the bitwise oracle the memoized screen is held
+/// identical to (`memoized_screen_ranks_identical_to_uncached`) — same
+/// code path, pass-through memo.
+pub fn screen_uncached(
+    workload: &WorkloadTrace,
+    cfg: &OptimizeConfig,
+) -> Vec<ScreenedCell> {
+    screen_impl(workload, cfg, &mut ScreenMemo::disabled())
+}
+
+fn screen_impl(
+    workload: &WorkloadTrace,
+    cfg: &OptimizeConfig,
+    memo: &mut ScreenMemo,
+) -> Vec<ScreenedCell> {
     let partitions = cfg.effective_partitions();
     let mut cells = Vec::with_capacity(
         cfg.models.len()
@@ -1035,24 +1312,31 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
     );
     for &model in &cfg.models {
         for &gpu in &cfg.gpus {
-            let profile: Arc<dyn GpuProfile> =
-                Arc::new(model.profile_for(gpu));
-            for r in screen_partitions(
+            // The homogeneous axis routes through the same per-pool
+            // override evaluator as every other cell (all pools pinned
+            // to `gpu` — bit-identical to the legacy shared-profile
+            // path by the homogeneous-reduction oracle), so the mixed
+            // screen's table builds below hit these entries in cache.
+            let pairs: Vec<(Vec<u32>, Vec<Gpu>)> = partitions
+                .iter()
+                .map(|cuts| (cuts.clone(), vec![gpu; cuts.len()]))
+                .collect();
+            for r in screen_assignments_with(
                 workload,
                 cfg.gen.lambda_rps,
-                profile,
-                &partitions,
+                &pairs,
                 &cfg.gammas,
                 cfg.lbar,
                 cfg.rho,
                 cfg.slo.ttft_p99_s,
                 cfg.acct,
                 model,
+                memo,
             ) {
                 cells.push(ScreenedCell {
                     gpu,
                     model,
-                    gpus: vec![gpu; r.cutoffs.len()],
+                    gpus: r.gpus,
                     cutoffs: r.cutoffs,
                     gamma: r.gamma,
                     analytic: r.report,
@@ -1062,7 +1346,7 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
         let hetero: Vec<PartitionOptResult> = match &cfg.gpu_axis {
             GpuAxis::Homogeneous | GpuAxis::Budget(_) => Vec::new(),
             GpuAxis::Mixed => {
-                screen_mixed(
+                screen_mixed_with(
                     workload,
                     cfg.gen.lambda_rps,
                     &partitions,
@@ -1075,6 +1359,7 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
                     cfg.mixed_screen,
                     cfg.mixed_keep,
                     model,
+                    memo,
                 )
                 .0
             }
@@ -1083,7 +1368,7 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
                 if pairs.is_empty() {
                     Vec::new()
                 } else {
-                    screen_assignments(
+                    screen_assignments_with(
                         workload,
                         cfg.gen.lambda_rps,
                         &pairs,
@@ -1093,6 +1378,7 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
                         cfg.slo.ttft_p99_s,
                         cfg.acct,
                         model,
+                        memo,
                     )
                 }
             }
@@ -1108,7 +1394,9 @@ pub fn screen(workload: &WorkloadTrace, cfg: &OptimizeConfig) -> Vec<ScreenedCel
             });
         }
         if let GpuAxis::Budget(b) = &cfg.gpu_axis {
-            cells.extend(budget_cells(workload, cfg, &partitions, *b, model));
+            cells.extend(budget_cells(
+                workload, cfg, &partitions, *b, model, memo,
+            ));
         }
     }
     cells.sort_by(|a, b| {
@@ -1194,10 +1482,10 @@ pub fn optimize(
     cfg: &OptimizeConfig,
     workers: usize,
 ) -> OptimizeReport {
-    let screened = screen(workload, cfg);
+    let (screened, memo) = screen_with_stats(workload, cfg);
     let k = cfg.top_k.max(1).min(screened.len());
     let refined = refine(workload, cfg, &screened[..k], workers);
-    OptimizeReport { screened, refined }
+    OptimizeReport { screened, refined, memo }
 }
 
 /// Everything the search produced: the full stage-A ranking plus the
@@ -1206,6 +1494,9 @@ pub fn optimize(
 pub struct OptimizeReport {
     pub screened: Vec<ScreenedCell>,
     pub refined: Vec<RefinedCell>,
+    /// Stage-A memo counters: Eq. 4 evaluations requested vs served
+    /// from cache ([`ScreenMemo`]).
+    pub memo: ScreenMemoStats,
 }
 
 impl OptimizeReport {
@@ -1267,6 +1558,15 @@ impl OptimizeReport {
             self.dispatch_count(),
             if self.dispatch_count() == 1 { "y" } else { "ies" },
         ));
+        if self.memo.hits > 0 {
+            rs.note(format!(
+                "stage A memo: {} of {} Eq. 4 evaluations served from cache \
+                 ({:.0}% hit rate)",
+                self.memo.hits,
+                self.memo.evals,
+                100.0 * self.memo.hit_rate(),
+            ));
+        }
         match self.winner() {
             Some(w) => rs.note(format!(
                 "winner (best measured tok/W within SLO): {} cutoffs={} γ={} \
@@ -1638,5 +1938,78 @@ mod tests {
                 solo.analytic.tok_per_watt.0.to_bits()
             );
         }
+    }
+
+    /// Cell-for-cell bitwise comparison of two screen rankings — the
+    /// memo oracle's assertion body.
+    fn assert_screens_identical(a: &[ScreenedCell], b: &[ScreenedCell]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.gpu, y.gpu);
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.cutoffs, y.cutoffs);
+            assert_eq!(x.gpus, y.gpus);
+            assert_eq!(x.gamma.to_bits(), y.gamma.to_bits());
+            assert_eq!(
+                x.analytic.tok_per_watt.0.to_bits(),
+                y.analytic.tok_per_watt.0.to_bits()
+            );
+            assert_eq!(x.analytic.total_groups, y.analytic.total_groups);
+        }
+    }
+
+    #[test]
+    fn memoized_screen_ranks_identical_to_uncached() {
+        let trace = azure_conversations();
+        let cfg = OptimizeConfig {
+            gpus: vec![Gpu::H100, Gpu::H200],
+            models: vec![
+                ModelAxis::Dense,
+                ModelAxis::MoeStreaming { dispatch_ms: 0.5 },
+            ],
+            partitions: vec![
+                vec![4096, LONG_CTX],
+                vec![2048, 8192, LONG_CTX],
+            ],
+            gammas: vec![1.0, 2.0],
+            gpu_axis: GpuAxis::Mixed,
+            ..tiny_cfg()
+        };
+        let (cached, stats) = screen_with_stats(&trace, &cfg);
+        let uncached = screen_uncached(&trace, &cfg);
+        assert_screens_identical(&cached, &uncached);
+        // Every table-build run of the mixed screen replays a cell the
+        // homogeneous axis already evaluated: |models| × |gpus| ×
+        // |partitions| × |γ| hits, nothing else cached twice.
+        assert_eq!(stats.hits, 2 * 2 * 2 * 2, "one hit per table run");
+        assert!(stats.evals > stats.hits);
+        assert!(stats.hit_rate() > 0.0 && stats.hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn memoized_budget_screen_replays_its_starting_fleets() {
+        let trace = azure_conversations();
+        let cfg = OptimizeConfig {
+            gpus: vec![Gpu::H100],
+            partitions: vec![
+                vec![4096, LONG_CTX],
+                vec![2048, 8192, LONG_CTX],
+            ],
+            gammas: vec![1.0],
+            gpu_axis: GpuAxis::Budget(UpgradeBudget {
+                to: Gpu::B200,
+                max_groups: 10_000,
+            }),
+            ..tiny_cfg()
+        };
+        let (cached, stats) = screen_with_stats(&trace, &cfg);
+        let uncached = screen_uncached(&trace, &cfg);
+        assert_screens_identical(&cached, &uncached);
+        // Each greedy path's all-base starting fleet is a homogeneous
+        // cell the per-fleet axis screened — one hit per (partition, γ).
+        assert!(
+            stats.hits >= 2,
+            "expected one starting-fleet hit per greedy path, got {stats:?}"
+        );
     }
 }

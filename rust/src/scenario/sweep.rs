@@ -170,41 +170,27 @@ pub fn grid(workload: &WorkloadTrace, cfg: &SweepConfig) -> Vec<ScenarioSpec> {
 }
 
 /// Run every cell, `workers` at a time, preserving input order. With
-/// `workers > 1` the cell is the unit of parallelism and each cell's
-/// engine runs sequentially (no nested oversubscription); `workers == 1`
-/// is honored literally — everything on the calling thread — and a
-/// single cell is instead given the in-cell parallel fast path when more
-/// than one worker was requested. Each cell streams arrivals from its
-/// own source (the pre-streaming grid materialized one shared trace for
-/// every cell — now the whole sweep holds no trace buffer at all, so
-/// λ × duration no longer bounds the grid size memory can afford).
+/// `workers > 1` the cell is the unit of parallelism — cells are pulled
+/// off a shared atomic work queue ([`crate::sim::par::run_indexed`], so
+/// one slow cell never strands the rest of a statically chunked batch)
+/// and each cell's engine runs sequentially (no nested
+/// oversubscription); `workers == 1` is honored literally — everything
+/// on the calling thread — and a single cell is instead given the
+/// in-cell parallel fast path (sharded streaming) when more than one
+/// worker was requested. Results are merged in input order, so the CSV
+/// out of a `--workers 8` run is byte-identical to `--workers 1`. Each
+/// cell streams arrivals from its own source (the pre-streaming grid
+/// materialized one shared trace for every cell — now the whole sweep
+/// holds no trace buffer at all, so λ × duration no longer bounds the
+/// grid size memory can afford).
 pub fn run(specs: &[ScenarioSpec], workers: usize) -> Vec<ScenarioOutcome> {
     let requested = workers.max(1);
-    let workers = requested.min(specs.len().max(1));
     if specs.len() <= 1 {
         return specs.iter().map(|s| s.simulate(requested > 1)).collect();
     }
-    if workers == 1 {
-        return specs.iter().map(|s| s.simulate(false)).collect();
-    }
-    let mut results: Vec<Option<ScenarioOutcome>> =
-        (0..specs.len()).map(|_| None).collect();
-    let chunk = specs.len().div_ceil(workers);
-    std::thread::scope(|scope| {
-        for (spec_chunk, out_chunk) in
-            specs.chunks(chunk).zip(results.chunks_mut(chunk))
-        {
-            scope.spawn(move || {
-                for (s, slot) in spec_chunk.iter().zip(out_chunk.iter_mut()) {
-                    *slot = Some(s.simulate(false));
-                }
-            });
-        }
-    });
-    results
-        .into_iter()
-        .map(|r| r.expect("worker filled every slot"))
-        .collect()
+    crate::sim::par::run_indexed(specs.len(), requested, |i| {
+        specs[i].simulate(false)
+    })
 }
 
 /// One sweep cell with both engines' numbers — the standing

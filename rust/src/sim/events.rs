@@ -59,7 +59,28 @@
 //! worker threads (`std::thread::scope`; the offline image has no rayon)
 //! and merged in group-index order. Per-group event streams are identical
 //! either way, so sequential and parallel runs produce bit-identical
-//! results (property-tested).
+//! results (property-tested). The materialized form
+//! ([`run_fleet_auto`]) pre-assigns the whole trace on the calling
+//! thread, then fans the per-group request lists out over a shared
+//! atomic work queue ([`super::par::run_indexed`] — no static chunking,
+//! so one slow group never idles the other workers). The streaming form
+//! ([`run_fleet_stream_sharded`]) keeps O(1)-per-group memory instead:
+//! the calling thread becomes a **demux** that pulls one request at a
+//! time from the [`ArrivalSource`], routes it (same [`assign`] call as
+//! the pre-assign loop, effective prompt baked in), and sends it down
+//! the owning group's bounded `mpsc` channel; one scoped thread per
+//! group runs the ordinary [`run_fleet_stream`] engine over a
+//! [`ChannelSource`](crate::workload::arrival::ChannelSource). Bounded
+//! channels give backpressure both ways, so total memory is
+//! O(groups × buffer) regardless of trace length. Bitwise equivalence
+//! is the composition of two proved facts: the demux delivers each
+//! group exactly the request subsequence the pre-assign loop would
+//! bucket for it (same pure assignment function, same order), and a
+//! per-group streamed run replays a per-group materialized run
+//! bit-for-bit (the seq-offset argument below). Hence sharded-streamed
+//! ≡ materialized-parallel ≡ sequential, float for float — pinned by
+//! `prop_parallel_stream_replays_sequential_bitwise` across all five
+//! dispatch policies × both queue modes × both step modes.
 //!
 //! **Streaming arrivals**: [`run_fleet`] takes a materialized, sorted
 //! trace and enqueues every arrival up front; [`run_fleet_stream`]
@@ -76,11 +97,12 @@
 //! (asserted bitwise across all dispatch policies and both queue modes
 //! by `tests/properties.rs` and the in-module tests).
 //! Sources must yield non-decreasing times (asserted), which also
-//! guarantees the calendar queue never sees a backward push. The
-//! streaming path is sequential-only: the parallel fast path
-//! pre-assigns the whole trace and therefore requires materialization.
-//! Both entry points feed one shared [`drive`] loop parameterized over
-//! the arrival [`Feed`], so they cannot drift apart in event handling.
+//! guarantees the calendar queue never sees a backward push.
+//! [`run_fleet_stream_auto`] picks between the sequential engine and
+//! the sharded demux exactly the way [`run_fleet_auto`] picks its
+//! paths: `opts.allow_parallel` plus [`parallel_eligible`]. Both feed
+//! variants run one shared [`drive`] loop parameterized over the
+//! arrival [`Feed`], so they cannot drift apart in event handling.
 //!
 //! **Macro-stepping**: between consecutive arrivals a group's batch
 //! composition evolves by a deterministic recurrence — admit finds an
@@ -142,7 +164,7 @@ use crate::serve::energy::EnergyMeter;
 use crate::serve::kvblocks::BlockAllocator;
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::request::ServeRequest;
-use crate::workload::arrival::ArrivalSource;
+use crate::workload::arrival::{ArrivalSource, ChannelSource};
 use crate::workload::Request;
 
 /// Live load of one group, as routers and dispatch policies see it.
@@ -1294,8 +1316,9 @@ pub(crate) fn run_fleet(
 /// collection of the same source — see the module docs for the
 /// seq-offset argument, and `tests/properties.rs` for the property
 /// pinning it across all dispatch policies and both queue modes.
-/// Always sequential: the parallel fast path pre-assigns the whole
-/// trace, which is inherently materializing.
+/// Always sequential; for the arrival-static parallel form see
+/// [`run_fleet_stream_sharded`] (or [`run_fleet_stream_auto`], which
+/// picks automatically).
 pub(crate) fn run_fleet_stream(
     source: &mut dyn ArrivalSource,
     router: &dyn Router,
@@ -1357,6 +1380,174 @@ pub(crate) fn run_fleet_stream(
         opts,
         pools,
     )
+}
+
+/// Bounded per-group channel capacity of the sharded streaming demux.
+/// Small on purpose: total buffered memory is O(groups × this), and the
+/// buffer only needs to be deep enough to keep a group's engine fed
+/// while the demux round-robins over the others.
+const SHARD_BUFFER: usize = 64;
+
+/// The sharded parallel streaming path: pull one request at a time
+/// from the source on the calling thread, route it (arrival-static, so
+/// the assignment is a pure function of the arrival sequence), and
+/// send it down the owning group's bounded channel; one scoped thread
+/// per group runs the ordinary sequential [`run_fleet_stream`] engine
+/// over its [`ChannelSource`]. Results merge in flattened (pool,
+/// group) index order, and `events_popped` sums the per-group queues —
+/// exactly the materialized parallel path's count. Memory is
+/// O(groups × [`SHARD_BUFFER`]) regardless of trace length.
+///
+/// Callers must check [`parallel_eligible`] first (debug-asserted);
+/// use [`run_fleet_stream_auto`] to pick the path automatically.
+pub(crate) fn run_fleet_stream_sharded(
+    source: &mut dyn ArrivalSource,
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+    dispatch: &mut dyn DispatchPolicy,
+    opts: EngineOptions,
+) -> FleetRun {
+    validate_topology_inputs(router, pool_groups, pool_cfgs);
+    assert_validate_applicable(router, &*dispatch, opts);
+    debug_assert!(
+        parallel_eligible(router, &*dispatch, pool_groups),
+        "sharded streaming requires an arrival-static scenario"
+    );
+    dispatch.configure_pools(pool_cfgs);
+
+    let gap = source.gap_hint();
+    // Static consumers must never read live load; the canary panics on
+    // any read, exposing a policy that lied about being arrival-static
+    // (same guard as the materialized pre-assign loop).
+    let idle = FleetState::empty();
+
+    // One bounded channel per flattened (pool, group) lane; the
+    // receivers move into the group threads, the senders stay with the
+    // demux. Dropping the senders is the end-of-trace signal.
+    let mut senders: Vec<Vec<std::sync::mpsc::SyncSender<Request>>> =
+        pool_groups.iter().map(|&g| Vec::with_capacity(g as usize)).collect();
+    let mut jobs: Vec<(usize, std::sync::mpsc::Receiver<Request>)> =
+        Vec::new();
+    for (pool, &g) in pool_groups.iter().enumerate() {
+        for _ in 0..g {
+            let (tx, rx) = std::sync::mpsc::sync_channel(SHARD_BUFFER);
+            senders[pool].push(tx);
+            jobs.push((pool, rx));
+        }
+    }
+
+    let (outcomes, events_popped) = std::thread::scope(|scope| {
+        let handles: Vec<_> = jobs
+            .into_iter()
+            .map(|(pool, rx)| {
+                let cfg = &pool_cfgs[pool];
+                scope.spawn(move || {
+                    let mut src = ChannelSource::new(rx, gap);
+                    let mut rr = RoundRobin::new();
+                    let run = run_fleet_stream(
+                        &mut src,
+                        &HomogeneousRouter,
+                        &[1],
+                        std::slice::from_ref(cfg),
+                        &mut rr,
+                        EngineOptions {
+                            queue_mode: opts.queue_mode,
+                            step_mode: opts.step_mode,
+                            ..Default::default()
+                        },
+                    );
+                    let FleetRun { mut pools, events_popped } = run;
+                    let outcome = pools
+                        .pop()
+                        .expect("one pool")
+                        .pop()
+                        .expect("one group");
+                    (pool, outcome, events_popped)
+                })
+            })
+            .collect();
+
+        // The demux: the same validate + assign sequence the sequential
+        // stream feed and the materialized pre-assign loop run, so a
+        // malformed source fails identically on every path. If a group
+        // thread dies, its receiver hangs up and the send fails —
+        // propagate instead of silently dropping arrivals (the real
+        // panic resurfaces at join below).
+        let mut last_t = f64::NEG_INFINITY;
+        for r in &mut *source {
+            assert!(
+                r.arrival_s.is_finite(),
+                "non-finite arrival time for request {}",
+                r.id
+            );
+            assert!(
+                r.arrival_s >= last_t,
+                "arrival source must be non-decreasing in time: \
+                 request {} at t = {} after t = {}",
+                r.id,
+                r.arrival_s,
+                last_t
+            );
+            last_t = r.arrival_s;
+            let (pool, group, s) =
+                assign(router, dispatch, pool_groups, &r, &idle);
+            senders[pool][group]
+                .send(Request {
+                    id: r.id,
+                    arrival_s: r.arrival_s,
+                    prompt_tokens: s.prompt_tokens,
+                    output_tokens: r.output_tokens,
+                })
+                .expect("sharded group worker hung up mid-trace");
+        }
+        drop(senders);
+
+        // Joining in job order *is* the group-index-order merge.
+        let mut outcomes: Vec<(usize, GroupOutcome)> = Vec::new();
+        let mut events_popped = 0u64;
+        for h in handles {
+            let (pool, outcome, events) =
+                h.join().expect("sharded group worker panicked");
+            events_popped += events;
+            outcomes.push((pool, outcome));
+        }
+        (outcomes, events_popped)
+    });
+
+    let mut out: Vec<Vec<GroupOutcome>> =
+        pool_groups.iter().map(|_| Vec::new()).collect();
+    for (pool, outcome) in outcomes {
+        out[pool].push(outcome);
+    }
+    FleetRun { pools: out, events_popped }
+}
+
+/// Streaming analogue of [`run_fleet_auto`]: take the sharded parallel
+/// demux when `opts.allow_parallel` holds and the scenario is
+/// arrival-static, the sequential single-queue engine otherwise. Both
+/// paths are bit-identical, so the choice is pure performance.
+pub(crate) fn run_fleet_stream_auto(
+    source: &mut dyn ArrivalSource,
+    router: &dyn Router,
+    pool_groups: &[u32],
+    pool_cfgs: &[GroupSimConfig],
+    dispatch: &mut dyn DispatchPolicy,
+    opts: EngineOptions,
+) -> FleetRun {
+    if opts.allow_parallel && parallel_eligible(router, &*dispatch, pool_groups)
+    {
+        run_fleet_stream_sharded(
+            source,
+            router,
+            pool_groups,
+            pool_cfgs,
+            dispatch,
+            opts,
+        )
+    } else {
+        run_fleet_stream(source, router, pool_groups, pool_cfgs, dispatch, opts)
+    }
 }
 
 /// Simulate one group in isolation — the unit of work of the parallel
@@ -1441,47 +1632,25 @@ pub(crate) fn run_fleet_auto(
         });
     }
 
-    // Flatten to (pool, group, arrivals) jobs; fan out over a scoped
-    // thread pool; place results by index.
-    let jobs: Vec<(usize, usize, Vec<Request>)> = per_group
+    // Flatten to (pool, arrivals) jobs and fan them out over the shared
+    // atomic work queue — no static chunking, so one heavy group never
+    // idles the other workers. `run_indexed` returns results in job
+    // order, which is exactly the group-index merge order.
+    let jobs: Vec<(usize, Vec<Request>)> = per_group
         .into_iter()
         .enumerate()
-        .flat_map(|(p, groups)| {
-            groups.into_iter().enumerate().map(move |(g, reqs)| (p, g, reqs))
-        })
+        .flat_map(|(p, groups)| groups.into_iter().map(move |reqs| (p, reqs)))
         .collect();
-    let mut results: Vec<Option<(GroupOutcome, u64)>> =
-        (0..jobs.len()).map(|_| None).collect();
-    let workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(jobs.len())
-        .max(1);
-    let chunk = jobs.len().div_ceil(workers);
-    std::thread::scope(|scope| {
-        for (job_chunk, out_chunk) in
-            jobs.chunks(chunk).zip(results.chunks_mut(chunk))
-        {
-            scope.spawn(move || {
-                for ((pool, _g, reqs), slot) in
-                    job_chunk.iter().zip(out_chunk.iter_mut())
-                {
-                    *slot = Some(run_one_group(
-                        reqs,
-                        &pool_cfgs[*pool],
-                        opts.queue_mode,
-                        opts.step_mode,
-                    ));
-                }
-            });
-        }
+    let workers = super::par::resolve_workers(None);
+    let results = super::par::run_indexed(jobs.len(), workers, |i| {
+        let (pool, reqs) = &jobs[i];
+        run_one_group(reqs, &pool_cfgs[*pool], opts.queue_mode, opts.step_mode)
     });
 
     let mut out: Vec<Vec<GroupOutcome>> =
         pool_groups.iter().map(|_| Vec::new()).collect();
     let mut events_popped = 0u64;
-    for ((pool, _group, _), res) in jobs.iter().zip(results) {
-        let (outcome, events) = res.expect("worker filled every slot");
+    for ((pool, _), (outcome, events)) in jobs.iter().zip(results) {
         events_popped += events;
         out[*pool].push(outcome);
     }
@@ -1595,6 +1764,87 @@ mod tests {
             assert_eq!(s.horizon_s.to_bits(), p.horizon_s.to_bits());
             assert_eq!(s.steps, p.steps);
             assert_eq!(s.metrics.completed, p.metrics.completed);
+        }
+    }
+
+    #[test]
+    fn sharded_stream_is_bit_identical_to_sequential_stream() {
+        use crate::router::context::ContextRouter;
+        use crate::workload::VecSource;
+
+        // Two pools, five groups, arrival-static scenario: the sharded
+        // demux must replay both the sequential streamed run and the
+        // materialized parallel run bit for bit (and agree with the
+        // materialized parallel path on events_popped — per-group
+        // queues count identically on both parallel forms).
+        let mut trace = generate(
+            &crate::workload::cdf::azure_conversations(),
+            &GenConfig {
+                lambda_rps: 40.0,
+                duration_s: 2.0,
+                max_prompt_tokens: 20_000,
+                max_output_tokens: 128,
+                seed: 13,
+            },
+        );
+        trace.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        let router = ContextRouter::two_pool(4096);
+        let groups = [3u32, 2];
+        let cfgs = [cfg(4096 + 1024), cfg(65_536)];
+        let opts = EngineOptions::default();
+
+        let mut src = VecSource::new(trace.clone());
+        let seq = run_fleet_stream(
+            &mut src,
+            &router,
+            &groups,
+            &cfgs,
+            &mut RoundRobin::new(),
+            EngineOptions { allow_parallel: false, ..opts },
+        );
+        let mut src = VecSource::new(trace.clone());
+        let sharded = run_fleet_stream_sharded(
+            &mut src,
+            &router,
+            &groups,
+            &cfgs,
+            &mut RoundRobin::new(),
+            opts,
+        );
+        let mat = run_fleet_auto(
+            &trace,
+            &router,
+            &groups,
+            &cfgs,
+            &mut RoundRobin::new(),
+            opts,
+        );
+        assert_eq!(sharded.events_popped, mat.events_popped);
+        for (p, (s, m)) in sharded.pools.iter().zip(&mat.pools).enumerate() {
+            assert_eq!(s.len(), m.len(), "pool {p} group count");
+        }
+        for (oracle, label) in [(&seq, "sequential"), (&mat, "materialized")] {
+            for (sp, op) in sharded.pools.iter().zip(&oracle.pools) {
+                for (s, o) in sp.iter().zip(op) {
+                    assert_eq!(
+                        s.joules.to_bits(),
+                        o.joules.to_bits(),
+                        "{label} joules"
+                    );
+                    assert_eq!(s.output_tokens, o.output_tokens, "{label}");
+                    assert_eq!(
+                        s.horizon_s.to_bits(),
+                        o.horizon_s.to_bits(),
+                        "{label} horizon"
+                    );
+                    assert_eq!(s.steps, o.steps, "{label}");
+                    assert_eq!(
+                        s.metrics.completed,
+                        o.metrics.completed,
+                        "{label}"
+                    );
+                }
+            }
         }
     }
 

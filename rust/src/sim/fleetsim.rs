@@ -26,7 +26,8 @@
 
 use super::dispatch::{DispatchPolicy, RoundRobin};
 use super::events::{
-    run_fleet_auto, run_fleet_stream, EngineOptions, FleetRun, GroupOutcome,
+    run_fleet_auto, run_fleet_stream_auto, EngineOptions, FleetRun,
+    GroupOutcome,
 };
 use crate::power::LogisticPower;
 use crate::roofline::Roofline;
@@ -399,11 +400,14 @@ pub fn simulate_topology_opts(
 /// [`ArrivalSource`](crate::workload::arrival::ArrivalSource), so
 /// trace memory is O(1) at any λ·duration. The source contract is
 /// non-decreasing arrival times (asserted per pull — there is no trace
-/// to sort); `opts.allow_parallel` is ignored because the parallel
-/// fast path pre-assigns a materialized trace. Bit-for-bit equivalent
+/// to sort). When `opts.allow_parallel` holds and the scenario is
+/// arrival-static (non-load-aware router, static dispatch), the run
+/// takes the sharded demux fast path — one worker thread per group fed
+/// over bounded channels, O(groups × buffer) memory — and otherwise
+/// the sequential single-queue engine. Both are bit-for-bit equivalent
 /// to [`simulate_topology_opts`] on the collected source
-/// (`tests/properties.rs` pins this across dispatch policies and
-/// queue modes).
+/// (`tests/properties.rs` pins this across dispatch policies, queue
+/// modes and step modes).
 pub fn simulate_topology_source(
     source: &mut dyn crate::workload::arrival::ArrivalSource,
     router: &dyn Router,
@@ -412,8 +416,9 @@ pub fn simulate_topology_source(
     dispatch: &mut dyn DispatchPolicy,
     opts: EngineOptions,
 ) -> TopoSimReport {
-    let FleetRun { pools, events_popped } =
-        run_fleet_stream(source, router, pool_groups, pool_cfgs, dispatch, opts);
+    let FleetRun { pools, events_popped } = run_fleet_stream_auto(
+        source, router, pool_groups, pool_cfgs, dispatch, opts,
+    );
     aggregate_topology(pool_groups, pool_cfgs, pools, events_popped)
 }
 

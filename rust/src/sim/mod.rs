@@ -37,7 +37,10 @@
 //!   [`QueueMode`], [`StepMode`]), plus the parallel fast path: when
 //!   routing and dispatch are arrival-static, independent groups are
 //!   stepped on worker threads and merged in group-index order,
-//!   bit-identically to the sequential run. Under the default
+//!   bit-identically to the sequential run — on the materialized path
+//!   via a pre-assigned trace split, and on the streaming path via a
+//!   sharded demux that routes one arrival at a time into bounded
+//!   per-group channels, keeping memory at O(groups). Under the default
 //!   [`StepMode::Fused`] the engine macro-steps: every decode/ingest
 //!   iteration that provably completes before the next arrival runs in
 //!   one in-line loop, so events popped scale with arrivals instead of
@@ -51,7 +54,15 @@
 //!   queue mode and the per-event live-state cross-check;
 //!   [`simulate_topology_source`] streams arrivals lazily from an
 //!   [`ArrivalSource`](crate::workload::arrival::ArrivalSource) in O(1)
-//!   trace memory, replaying the materialized run bit-for-bit.
+//!   trace memory, replaying the materialized run bit-for-bit (and
+//!   taking the sharded parallel path itself when
+//!   `opts.allow_parallel` holds and the scenario is arrival-static).
+//! * [`par`] — the shared worker-pool plumbing: [`par::resolve_workers`]
+//!   (explicit > `WATTLAW_WORKERS` env > available parallelism) and
+//!   [`par::run_indexed`], the atomic-index work queue every parallel
+//!   site (per-group fan-out, sweep grids, optimizer stage B) pulls
+//!   from — results always merge in input order, so worker count never
+//!   changes a byte of output.
 //!
 //! For running *grids* of (topology × workload × routing/dispatch)
 //! configurations through this engine — the paper-style scenario
@@ -70,6 +81,7 @@ pub mod calqueue;
 pub mod dispatch;
 pub mod events;
 pub mod fleetsim;
+pub mod par;
 
 pub use dispatch::{
     DispatchPolicy, JoinShortestQueue, LeastKvLoad, PowerAware, RoundRobin,

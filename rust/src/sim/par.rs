@@ -1,0 +1,119 @@
+//! Shared worker-pool plumbing: one place that decides *how many*
+//! threads to use and one place that decides *which thread does what*.
+//!
+//! Before this module every parallel site rolled its own
+//! `available_parallelism().unwrap_or(1)` plus a static
+//! `chunks()/div_ceil` split. Static chunking loses up to
+//! (workers−1)/workers of the machine on skewed inputs: one slow cell
+//! (a λ=4000 streaming run next to closed-form-cheap neighbors) pins
+//! its whole chunk's thread while the others drain and idle.
+//! [`run_indexed`] replaces the split with a shared atomic work index —
+//! every worker pulls the next undone item the moment it finishes its
+//! last one, so the makespan is bounded by the slowest *single item*
+//! rather than the slowest *chunk* — while still returning results in
+//! input order, so callers stay deterministic byte-for-byte regardless
+//! of the worker count.
+//!
+//! [`resolve_workers`] centralizes the worker-count policy:
+//! explicit request (`--workers N`) > `WATTLAW_WORKERS` env override >
+//! [`std::thread::available_parallelism`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Environment variable consulted when no explicit worker count is
+/// given. Values that fail to parse as a positive integer are ignored.
+pub const WORKERS_ENV: &str = "WATTLAW_WORKERS";
+
+/// Resolve the number of worker threads to use: an explicit request
+/// wins, else the `WATTLAW_WORKERS` env override, else the machine's
+/// available parallelism. Always at least 1.
+pub fn resolve_workers(explicit: Option<usize>) -> usize {
+    if let Some(n) = explicit {
+        return n.max(1);
+    }
+    if let Ok(v) = std::env::var(WORKERS_ENV) {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Evaluate `f(0), f(1), …, f(n-1)` on up to `workers` scoped threads
+/// and return the results **in index order**. Work is distributed by a
+/// shared atomic index (work stealing in the degenerate
+/// everyone-steals-from-one-queue sense): no static split, no idle
+/// thread while undone items remain. With `workers <= 1` (or `n <= 1`)
+/// everything runs on the calling thread — no threads are spawned, so
+/// single-worker callers keep their exact sequential behavior.
+///
+/// `f` must be pure up to its index (no cross-item ordering
+/// assumptions); results are identical for every worker count.
+pub fn run_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut filled: Vec<Vec<(usize, T)>> = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            filled.push(h.join().expect("sim::par worker panicked"));
+        }
+    });
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, v) in filled.into_iter().flatten() {
+        out[i] = Some(v);
+    }
+    out.into_iter()
+        .map(|s| s.expect("atomic index covered every item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_worker_request_wins_and_is_clamped() {
+        assert_eq!(resolve_workers(Some(3)), 3);
+        assert_eq!(resolve_workers(Some(0)), 1);
+    }
+
+    #[test]
+    fn results_are_in_index_order_for_every_worker_count() {
+        let expect: Vec<usize> = (0..37).map(|i| i * i).collect();
+        for workers in [1, 2, 3, 8, 64] {
+            assert_eq!(run_indexed(37, workers, |i| i * i), expect);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_inputs() {
+        assert_eq!(run_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(1, 4, |i| i + 1), vec![1]);
+    }
+}

@@ -32,6 +32,11 @@
 //!   replaying a million-row production trace is also O(1) memory.
 //! - [`VecSource`] — adapter over an in-memory `Vec<Request>`, for
 //!   tests and hand-built traces.
+//! - [`ChannelSource`] — adapter over a bounded `mpsc` receiver: the
+//!   per-group feed of the sharded parallel streaming path
+//!   (`sim::events`), where a demux thread routes arrivals into small
+//!   per-group buffers and each group's engine pulls from its own
+//!   channel.
 //!
 //! [`ArrivalSpec`] is the CLI/scenario-facing selector that names an
 //! archetype (`--workload diurnal`, `--trace requests.csv`, …) and
@@ -697,6 +702,53 @@ impl Iterator for VecSource {
 }
 
 impl ArrivalSource for VecSource {
+    fn gap_hint(&self) -> f64 {
+        self.gap
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Channel-fed source (the sharded parallel streaming path)
+// ---------------------------------------------------------------------------
+
+/// Streams requests out of a bounded [`std::sync::mpsc`] channel — the
+/// per-group arrival feed of the sharded parallel streaming path. A
+/// demux thread routes each pulled arrival to its owning group and
+/// sends it over that group's `SyncSender`; the group's engine runs
+/// `run_fleet_stream` over this source exactly as it would over any
+/// other. The iterator ends when the sender side hangs up, so the
+/// demux dropping its senders is the end-of-trace signal.
+///
+/// Blocking `recv` gives backpressure for free: a group that runs
+/// ahead of the demux parks until its next arrival is routed, and the
+/// bounded send side parks the demux when a group falls behind —
+/// memory stays O(channel capacity) per group regardless of trace
+/// length.
+pub struct ChannelSource {
+    rx: std::sync::mpsc::Receiver<Request>,
+    gap: f64,
+}
+
+impl ChannelSource {
+    /// `gap` seeds the group's calendar-queue bucket width; pass the
+    /// demuxed source's [`gap_hint`](ArrivalSource::gap_hint) (the
+    /// per-group gap is wider, but bucket width only affects queue
+    /// performance, never event order).
+    pub fn new(rx: std::sync::mpsc::Receiver<Request>, gap: f64) -> Self {
+        let gap = if gap.is_finite() && gap > 0.0 { gap } else { 1.0 };
+        ChannelSource { rx, gap }
+    }
+}
+
+impl Iterator for ChannelSource {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        self.rx.recv().ok()
+    }
+}
+
+impl ArrivalSource for ChannelSource {
     fn gap_hint(&self) -> f64 {
         self.gap
     }

@@ -10,6 +10,8 @@ pub mod cdf;
 pub mod synth;
 pub mod trace;
 
-pub use arrival::{ArrivalSource, ArrivalSpec, CsvSource, SynthSource, VecSource};
+pub use arrival::{
+    ArrivalSource, ArrivalSpec, ChannelSource, CsvSource, SynthSource, VecSource,
+};
 pub use cdf::{LengthCdf, WorkloadTrace, Archetype};
 pub use trace::Request;

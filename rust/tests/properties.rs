@@ -1049,6 +1049,145 @@ fn prop_streamed_arrivals_replay_materialized_bitwise_across_policies() {
 }
 
 #[test]
+fn prop_parallel_stream_replays_sequential_bitwise() {
+    use wattlaw::sim::{
+        dispatch, simulate_topology_opts, simulate_topology_source,
+        DispatchPolicy, EngineOptions, GroupSimConfig, QueueMode, StepMode,
+    };
+    use wattlaw::workload::synth::GenConfig;
+    use wattlaw::workload::SynthSource;
+
+    // The sharded streaming fast path demuxes arrivals to one worker
+    // thread per group over bounded channels. Per `sim::events`: each
+    // group's sub-simulation is exactly the pre-assigned split the
+    // materialized parallel path runs, and the streamed feed replays
+    // the materialized feed bitwise — so all three engines (sequential
+    // streamed, sharded streamed, materialized parallel) must agree bit
+    // for bit, across every dispatch policy, both queue modes and both
+    // step modes. Load-aware policies are not arrival-static; for them
+    // `allow_parallel` falls back to the sequential engine, which makes
+    // the identity trivially strict there too.
+    forall("sharded stream == sequential stream, bit for bit", 4, |g| {
+        let p = ManualProfile::h100_70b();
+        let mk = |window: u32, n_max: u32| GroupSimConfig {
+            window_tokens: window,
+            n_max,
+            roofline: p.roofline(),
+            power: p.gpu().power,
+            gpus_charged: 1.0,
+            ingest_chunk: 1024,
+        };
+        let workload = azure_conversations();
+        let gen = GenConfig {
+            lambda_rps: g.f64_in(10.0, 60.0),
+            duration_s: g.f64_in(0.5, 2.0),
+            max_prompt_tokens: 20_000,
+            max_output_tokens: 256,
+            seed: g.u64_in(0, 1 << 40),
+        };
+        // Always more than one group in total, so eligibility turns on
+        // the dispatch policy alone.
+        let groups =
+            vec![g.u64_in(1, 3) as u32, g.u64_in(1, 2) as u32 + 1];
+        let cfgs = vec![
+            mk(4096 + 1024, g.u64_in(4, 32) as u32),
+            mk(65_536, g.u64_in(4, 16) as u32),
+        ];
+        let router = ContextRouter::two_pool(4096);
+        let trace =
+            wattlaw::workload::synth::generate(&workload, &gen);
+        for queue_mode in [QueueMode::Calendar, QueueMode::BinaryHeap] {
+            for step_mode in [StepMode::Fused, StepMode::PerStep] {
+                for policy_name in dispatch::ALL {
+                    let seq_opts = EngineOptions {
+                        allow_parallel: false,
+                        queue_mode,
+                        step_mode,
+                        ..Default::default()
+                    };
+                    let par_opts =
+                        EngineOptions { allow_parallel: true, ..seq_opts };
+                    let mut pol = dispatch::parse(policy_name).unwrap();
+                    let eligible = pol.is_arrival_static();
+                    let mut src = SynthSource::new(&workload, &gen);
+                    let seq = simulate_topology_source(
+                        &mut src, &router, &groups, &cfgs, pol.as_mut(),
+                        seq_opts,
+                    );
+                    let mut pol = dispatch::parse(policy_name).unwrap();
+                    let mut src = SynthSource::new(&workload, &gen);
+                    let sharded = simulate_topology_source(
+                        &mut src, &router, &groups, &cfgs, pol.as_mut(),
+                        par_opts,
+                    );
+                    let mut pol = dispatch::parse(policy_name).unwrap();
+                    let mat = simulate_topology_opts(
+                        &trace, &router, &groups, &cfgs, pol.as_mut(),
+                        par_opts,
+                    );
+                    for (name, run) in [("sharded", &sharded), ("mat", &mat)]
+                    {
+                        xcheck_assert!(
+                            run.output_tokens == seq.output_tokens
+                        );
+                        xcheck_assert!(
+                            run.joules.to_bits() == seq.joules.to_bits(),
+                            "{policy_name}/{queue_mode:?}/{step_mode:?} \
+                             {name}: joules diverged, {} vs {}",
+                            run.joules,
+                            seq.joules
+                        );
+                        xcheck_assert!(run.steps == seq.steps);
+                        xcheck_assert!(
+                            run.idle_joules.to_bits()
+                                == seq.idle_joules.to_bits()
+                        );
+                        for (a, b) in run.pools.iter().zip(&seq.pools) {
+                            xcheck_assert!(
+                                a.horizon_s.to_bits() == b.horizon_s.to_bits()
+                            );
+                            xcheck_assert!(
+                                a.mean_batch.to_bits()
+                                    == b.mean_batch.to_bits()
+                            );
+                            xcheck_assert!(
+                                a.metrics.completed == b.metrics.completed
+                            );
+                            xcheck_assert!(
+                                a.metrics.rejected == b.metrics.rejected
+                            );
+                        }
+                    }
+                    // Event counts: the sharded demux pops exactly the
+                    // per-group totals of the materialized parallel
+                    // split. The sequential shared queue fuses past
+                    // other groups' arrivals only under Fused mode, so
+                    // per-step counts match it exactly and fused counts
+                    // can only shrink.
+                    xcheck_assert!(
+                        sharded.events_popped == mat.events_popped,
+                        "{policy_name}/{queue_mode:?}/{step_mode:?}: \
+                         sharded popped {} vs materialized {}",
+                        sharded.events_popped,
+                        mat.events_popped
+                    );
+                    if !eligible || step_mode == StepMode::PerStep {
+                        xcheck_assert!(
+                            sharded.events_popped == seq.events_popped
+                        );
+                    } else {
+                        xcheck_assert!(
+                            sharded.events_popped <= seq.events_popped
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_fused_macro_steps_replay_per_step_bitwise_across_policies() {
     use wattlaw::router::adaptive::AdaptiveRouter;
     use wattlaw::sim::{

@@ -17,8 +17,9 @@
 //! replay the materialized run bit-for-bit, and a constant-rate
 //! generator source must push the engine through 2×10⁵ (and, ignored
 //! by default, 10⁷) arrivals while only ever holding one pending
-//! arrival in memory — and, under the default fused macro-stepping,
-//! while popping O(arrivals) events rather than O(decode steps). A
+//! arrival in memory — sequentially and through the sharded per-group
+//! demux — and, under the default fused macro-stepping, while popping
+//! O(arrivals) events rather than O(decode steps). A
 //! hand-built trace whose second arrival lands *exactly* on the fused
 //! horizon pins the boundary tie-break against the per-step oracle.
 
@@ -469,18 +470,22 @@ impl wattlaw::workload::ArrivalSource for ConstSource {
     }
 }
 
-fn run_const_source(n: u64) {
+fn run_const_source(n: u64, allow_parallel: bool) {
     use wattlaw::sim::simulate_topology_source;
 
     let mut src = ConstSource { n, i: 0, gap: 0.25 };
     let mut rr = RoundRobin::new();
+    // With `allow_parallel` this constant-rate scenario (static router
+    // and dispatch, two groups) takes the sharded streaming path: a
+    // demux thread routing each minted request to its group's worker
+    // over a bounded channel — still O(1) trace memory end to end.
     let report = simulate_topology_source(
         &mut src,
         &HomogeneousRouter,
         &[2],
         &[h100_cfg(8192)],
         &mut rr,
-        EngineOptions { allow_parallel: false, ..Default::default() },
+        EngineOptions { allow_parallel, ..Default::default() },
     );
     let completed: u64 = report.pools.iter().map(|p| p.metrics.completed).sum();
     let rejected: u64 = report.pools.iter().map(|p| p.metrics.rejected).sum();
@@ -503,7 +508,12 @@ fn run_const_source(n: u64) {
 
 #[test]
 fn streamed_engine_completes_two_hundred_thousand_generated_arrivals() {
-    run_const_source(200_000);
+    run_const_source(200_000, false);
+}
+
+#[test]
+fn sharded_stream_completes_two_hundred_thousand_generated_arrivals() {
+    run_const_source(200_000, true);
 }
 
 /// The acceptance-scale smoke: materialized, this trace would be
@@ -515,7 +525,18 @@ fn streamed_engine_completes_two_hundred_thousand_generated_arrivals() {
 #[test]
 #[ignore = "10^7 arrivals — minutes of runtime; run explicitly"]
 fn streamed_engine_holds_ten_million_arrivals_in_constant_memory() {
-    run_const_source(10_000_000);
+    run_const_source(10_000_000, false);
+}
+
+/// Same acceptance scale through the sharded demux: 10⁷ arrivals flow
+/// demux → bounded per-group channels → two group workers, with at most
+/// `groups × buffer` requests in flight at any moment — constant memory
+/// in `n` — and the per-group event totals stay under the same
+/// 3n + 16 fused ceiling.
+#[test]
+#[ignore = "10^7 arrivals — minutes of runtime; run explicitly"]
+fn sharded_stream_holds_ten_million_arrivals_in_constant_memory() {
+    run_const_source(10_000_000, true);
 }
 
 /// Boundary tie-break: an arrival landing *exactly* on the fused
